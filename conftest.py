@@ -1,0 +1,8 @@
+"""Repo-root pytest config: make `python/` importable so the final
+verification command (`pytest python/tests/ -q` from the repo root) works
+the same as `cd python && pytest tests/`."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "python"))

@@ -1,0 +1,66 @@
+//! Tour of the ElastiStore block store (the HDFS analog): replication,
+//! failure tolerance, the Algorithm-1 monitor, and the scalability
+//! argument (capacity bounded by storage, not node memory).
+//!
+//! Run: `cargo run --release --offline --example dfs_tour`
+
+use std::time::Duration;
+
+use elastiagg::client::fleet_upload_dfs;
+use elastiagg::dfs::{DfsClient, Monitor, NameNode};
+use elastiagg::util::fmt;
+
+fn main() {
+    let root = std::env::temp_dir().join(format!("elastiagg-dfstour-{}", std::process::id()));
+    let nn = NameNode::create(&root, 3, 2, 1 << 20).expect("dfs"); // 1 MiB blocks
+    let dfs = DfsClient::new(nn.clone());
+
+    // --- block splitting + replication --------------------------------
+    let payload = vec![0xABu8; (2.5 * (1 << 20) as f64) as usize]; // 2.5 MiB
+    dfs.write("/demo/file", &payload).unwrap();
+    let st = nn.stat("/demo/file").unwrap();
+    println!(
+        "wrote {} -> {} blocks x {} replicas each",
+        fmt::bytes(payload.len() as u64),
+        st.blocks.len(),
+        st.blocks[0].replicas.len()
+    );
+    assert_eq!(st.blocks.len(), 3);
+
+    // --- failure tolerance ---------------------------------------------
+    let victim = st.blocks[0].replicas[0];
+    nn.datanode(victim).set_alive(false);
+    let read_back = dfs.read("/demo/file").unwrap();
+    assert_eq!(read_back, payload);
+    println!("datanode {victim} killed — file still readable from replicas");
+    nn.datanode(victim).set_alive(true);
+
+    // --- the Algorithm-1 monitor ----------------------------------------
+    let monitor = Monitor::new(nn.clone());
+    let dfs_bg = dfs.clone();
+    let writer = std::thread::spawn(move || {
+        let avg = fleet_upload_dfs(&dfs_bg, 7, 20, 5_000, 4, 99);
+        println!("fleet uploaded 20 updates, avg write {}", fmt::secs(avg));
+    });
+    let outcome = monitor.watch(&DfsClient::round_prefix(7), 20, Duration::from_secs(10));
+    writer.join().unwrap();
+    println!("monitor: ready={} count={}", outcome.is_ready(), outcome.count());
+    assert!(outcome.is_ready());
+
+    // --- the webHDFS REST facade (paper Fig 4 step ①) --------------------
+    let rest = elastiagg::dfs::WebHdfsServer::serve("127.0.0.1:0", dfs.clone()).unwrap();
+    let http = elastiagg::dfs::WebHdfsClient::new(rest.addr());
+    http.create("/rest/party9", b"uploaded over HTTP").unwrap();
+    assert_eq!(dfs.read("/rest/party9").unwrap(), b"uploaded over HTTP");
+    println!("webHDFS REST facade on http://{} — PUT ?op=CREATE verified", rest.addr());
+
+    // --- storage accounting ----------------------------------------------
+    println!(
+        "store now holds {} across {} datanodes (replication included)",
+        fmt::bytes(nn.stored_bytes()),
+        nn.datanodes().len()
+    );
+
+    let _ = std::fs::remove_dir_all(&root);
+    println!("dfs_tour OK");
+}

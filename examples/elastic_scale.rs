@@ -1,0 +1,90 @@
+//! Elastic scaling demo: parties keep joining mid-training (§III-C) and
+//! the service transitions seamlessly from the in-memory path to the
+//! distributed path the moment the predicted load crosses the node's
+//! memory — including the preemptive redirect the paper describes in
+//! §III-D3 (parties are told to send their NEXT update to the store).
+//!
+//! Run: `cargo run --release --offline --example elastic_scale`
+
+use elastiagg::client::SyntheticParty;
+use elastiagg::config::ServiceConfig;
+use elastiagg::coordinator::{AdaptiveService, WorkloadClass};
+use elastiagg::dfs::{DfsClient, NameNode};
+use elastiagg::engine::XlaEngine;
+use elastiagg::fusion::FedAvg;
+use elastiagg::mapreduce::ExecutorConfig;
+use elastiagg::metrics::Breakdown;
+use elastiagg::runtime::Runtime;
+use elastiagg::util::fmt;
+
+fn main() {
+    let root = std::env::temp_dir().join(format!("elastiagg-elastic-{}", std::process::id()));
+    let nn = NameNode::create(&root, 3, 2, 8 << 20).expect("dfs");
+    let dfs = DfsClient::new(nn);
+
+    let update_len = 50_000usize; // 200 KB updates
+    let update_bytes = (update_len * 4) as u64;
+
+    let mut cfg = ServiceConfig::default();
+    cfg.node.memory_bytes = 8 << 20; // 8 MiB node memory
+    cfg.node.cores = 4;
+    cfg.monitor_timeout_s = 10.0;
+    let xla = Runtime::load_default().ok().and_then(|r| XlaEngine::auto(r, 16).ok());
+    let service = AdaptiveService::new(
+        cfg,
+        dfs.clone(),
+        xla,
+        ExecutorConfig { executors: 2, cores_per_executor: 2, ..Default::default() },
+    );
+
+    println!("node memory: 8 MiB, update size: {}", fmt::bytes(update_bytes));
+    println!("party ceiling (FedAvg): {}", service.classifier.party_ceiling(update_bytes, &FedAvg));
+    println!();
+
+    // Party population grows each round: 4 -> 8 -> 16 -> 32 -> 64.
+    let mut transitioned = false;
+    for (round, parties) in [4usize, 8, 16, 32, 64].into_iter().enumerate() {
+        let round = round as u32;
+        let class = service.classify(update_bytes, parties, &FedAvg);
+        let redirect_next = service.should_redirect(update_bytes, parties * 2, &FedAvg);
+
+        let report = match class {
+            WorkloadClass::Small => {
+                let updates: Vec<_> = (0..parties as u64)
+                    .map(|p| SyntheticParty::new(p, round as u64).make_update(round, update_len))
+                    .collect();
+                let (_, report) = service.aggregate_small(&FedAvg, &updates, round).unwrap();
+                report
+            }
+            WorkloadClass::Large => {
+                if !transitioned {
+                    println!(">>> TRANSITION: load exceeds node memory — spinning up the");
+                    println!(">>> executor pool (one-time cost) and aggregating via the store");
+                    transitioned = true;
+                }
+                let mut bd = Breakdown::new();
+                for p in 0..parties as u64 {
+                    let mut party = SyntheticParty::new(p, round as u64);
+                    let u = party.make_update(round, update_len);
+                    dfs.put_update(&u, &mut bd).unwrap();
+                }
+                let (_, report) = service
+                    .aggregate_large(&FedAvg, round, parties, update_bytes)
+                    .unwrap();
+                report
+            }
+        };
+        println!(
+            "round {round}: {parties:>3} parties -> {:?} ({})  redirect-next={}  [{}]",
+            report.class,
+            report.engine,
+            redirect_next,
+            report.breakdown.summary()
+        );
+    }
+
+    assert!(transitioned, "the demo must cross the memory boundary");
+    assert!(service.spark_started());
+    let _ = std::fs::remove_dir_all(&root);
+    println!("\nelastic_scale OK — small rounds in memory, large rounds via MapReduce");
+}

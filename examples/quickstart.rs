@@ -1,0 +1,102 @@
+//! Quickstart: stand up the adaptive aggregation service, feed it one
+//! small round and one large round, and watch it pick the right path.
+//!
+//! Run: `cargo run --release --offline --example quickstart`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use elastiagg::client::{SyntheticParty, Transport};
+use elastiagg::config::ServiceConfig;
+use elastiagg::coordinator::{AdaptiveService, WorkloadClass};
+use elastiagg::dfs::{DfsClient, NameNode};
+use elastiagg::engine::XlaEngine;
+use elastiagg::fusion::FedAvg;
+use elastiagg::mapreduce::ExecutorConfig;
+use elastiagg::metrics::Breakdown;
+use elastiagg::net::{Message, NetClient};
+use elastiagg::runtime::Runtime;
+use elastiagg::server::FlServer;
+
+fn main() {
+    // --- 1. bring up the store + service + TCP front -----------------
+    let root = std::env::temp_dir().join(format!("elastiagg-quickstart-{}", std::process::id()));
+    let nn = NameNode::create(&root, 3, 2, 8 << 20).expect("dfs");
+    let dfs = DfsClient::new(nn);
+
+    let update_len = 10_000usize; // 40 KB updates
+    let update_bytes = (update_len * 4) as u64;
+
+    let mut cfg = ServiceConfig::default();
+    cfg.node.memory_bytes = 1 << 20; // 1 MiB node: >12 updates spill
+    cfg.node.cores = 4;
+    cfg.monitor_timeout_s = 10.0;
+
+    let xla = Runtime::load_default().ok().and_then(|r| XlaEngine::auto(r, 16).ok());
+    println!("XLA hot path available: {}", xla.is_some());
+    let service = AdaptiveService::new(
+        cfg,
+        dfs.clone(),
+        xla,
+        ExecutorConfig { executors: 2, cores_per_executor: 2, ..Default::default() },
+    );
+    let server = FlServer::new(service, Arc::new(FedAvg), update_bytes);
+    let handle = server.start("127.0.0.1:0").expect("bind");
+    println!("server on {}", handle.addr());
+
+    // --- 2. small round: 8 parties over TCP ---------------------------
+    let addr = handle.addr().to_string();
+    std::thread::scope(|s| {
+        for p in 0..8u64 {
+            let addr = addr.clone();
+            s.spawn(move || {
+                let mut c = NetClient::connect(&addr).unwrap();
+                c.call(&Message::Register { party: p }).unwrap();
+                let mut party = SyntheticParty::new(p, 0xA11CE);
+                let u = party.make_update(0, update_len);
+                c.call(&Message::Upload(u)).unwrap();
+            });
+        }
+    });
+    let (fused, report) = server.run_round(8, Duration::from_secs(5)).unwrap();
+    assert_eq!(report.class, WorkloadClass::Small);
+    println!(
+        "round 0: class={:?} engine={} parties={} fused[0..4]={:?}  [{}]",
+        report.class,
+        report.engine,
+        report.parties,
+        &fused[..4],
+        report.breakdown.summary()
+    );
+
+    // --- 3. the fleet grows to 64 parties -------------------------------
+    // Register them BEFORE the next round opens: the coordinator predicts
+    // the incoming load from the live registry (§III-D3) and classifies
+    // round 1 as Large — 64 × 40 KB × dup 2.0 exceeds the 1 MiB node.
+    {
+        let mut c = NetClient::connect(&addr).unwrap();
+        for p in 8..64u64 {
+            c.call(&Message::Register { party: p }).unwrap();
+        }
+    }
+    let mut bd = Breakdown::new();
+    for p in 0..64u64 {
+        let mut party = SyntheticParty::new(p, 0xB0B);
+        let u = party.make_update(1, update_len);
+        party.ship(&u, &Transport::Dfs, Some(&dfs), &mut bd).unwrap();
+    }
+    let (fused, report) = server.run_round(64, Duration::from_secs(10)).unwrap();
+    assert_eq!(report.class, WorkloadClass::Large);
+    println!(
+        "round 1: class={:?} engine={} parties={} partitions={} fused[0..4]={:?}  [{}]",
+        report.class,
+        report.engine,
+        report.parties,
+        report.partitions,
+        &fused[..4],
+        report.breakdown.summary()
+    );
+
+    let _ = std::fs::remove_dir_all(&root);
+    println!("quickstart OK");
+}

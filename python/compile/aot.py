@@ -1,0 +1,168 @@
+"""AOT compiler: lower every L2 graph to HLO *text* + a manifest.
+
+Interchange format is HLO text, NOT ``HloModuleProto.serialize()`` —
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs ``<out-dir>/<name>.hlo.txt`` per graph plus ``manifest.json``
+describing each artifact's inputs/outputs, which the rust runtime
+(`rust/src/runtime/`) consumes.  All graphs are lowered with
+``return_tuple=True`` so the rust side always unwraps a tuple.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Fixed AOT geometry.  C is the flat-chunk length every model update is
+# sliced into (zero-padded tail); K is the stack height (padded rows get
+# weight zero).  BLOCK_C is the Pallas tile - it must divide C.
+CHUNK_C = 65536
+STACK_KS = (16, 64)
+MEDIAN_KS = (8, 16, 32)
+TRAIN_BATCH = 32
+EVAL_BATCH = 256
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_entry(shape, dtype) -> Dict[str, Any]:
+    return {"shape": list(shape), "dtype": str(dtype)}
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries: List[Dict[str, Any]] = []
+
+    def emit(self, name: str, fn, in_specs, meta: Dict[str, Any],
+             outputs: List[Dict[str, Any]]) -> None:
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        self.entries.append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "inputs": [_shape_entry(s.shape, s.dtype) for s in in_specs],
+            "outputs": outputs,
+            "meta": meta,
+        })
+        print(f"  {name}: {len(text)} chars")
+
+    def manifest(self, extra: Dict[str, Any]) -> None:
+        man = {"version": 1, "chunk_c": CHUNK_C, "artifacts": self.entries}
+        man.update(extra)
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(man, f, indent=1)
+
+
+def emit_fusion(em: Emitter) -> None:
+    f32 = jnp.float32
+    for k in STACK_KS:
+        stack = _spec((k, CHUNK_C), f32)
+        w = _spec((k,), f32)
+        em.emit(
+            f"wsum_k{k}", model.fused_weighted_sum, (stack, w),
+            meta={"kind": "wsum", "k": k, "c": CHUNK_C},
+            outputs=[_shape_entry((CHUNK_C,), f32), _shape_entry((), f32)],
+        )
+        em.emit(
+            f"clipsum_k{k}", model.fused_clipped_sum,
+            (stack, w, _spec((), f32)),
+            meta={"kind": "clipsum", "k": k, "c": CHUNK_C},
+            outputs=[_shape_entry((CHUNK_C,), f32), _shape_entry((), f32)],
+        )
+    for k in MEDIAN_KS:
+        stack = _spec((k, CHUNK_C), f32)
+        em.emit(
+            f"median_k{k}", model.coordinate_median, (stack,),
+            meta={"kind": "median", "k": k, "c": CHUNK_C},
+            outputs=[_shape_entry((CHUNK_C,), f32)],
+        )
+    k = STACK_KS[0]
+    em.emit(
+        f"krum_k{k}", model.krum_scores,
+        (_spec((k, CHUNK_C), jnp.float32), _spec((k,), jnp.float32)),
+        meta={"kind": "krum", "k": k, "c": CHUNK_C},
+        outputs=[_shape_entry((k,), f32)],
+    )
+
+
+def emit_model(em: Emitter) -> None:
+    f32, i32 = jnp.float32, jnp.int32
+    layers = model.DEFAULT_LAYERS
+    p = model.param_count(layers)
+    flat = _spec((p,), f32)
+
+    em.emit(
+        "init_params", lambda seed: (model.init_params(seed, layers),),
+        (_spec((), i32),),
+        meta={"kind": "init", "param_count": p, "layers": list(layers)},
+        outputs=[_shape_entry((p,), f32)],
+    )
+    em.emit(
+        "train_step",
+        lambda fl, x, y, lr: model.train_step(fl, x, y, lr, layers),
+        (flat, _spec((TRAIN_BATCH, layers[0]), f32),
+         _spec((TRAIN_BATCH,), i32), _spec((), f32)),
+        meta={"kind": "train_step", "param_count": p, "layers": list(layers),
+              "batch": TRAIN_BATCH},
+        outputs=[_shape_entry((p,), f32), _shape_entry((), f32)],
+    )
+    em.emit(
+        "eval_model",
+        lambda fl, x, y: model.eval_model(fl, x, y, layers),
+        (flat, _spec((EVAL_BATCH, layers[0]), f32), _spec((EVAL_BATCH,), i32)),
+        meta={"kind": "eval", "param_count": p, "layers": list(layers),
+              "batch": EVAL_BATCH},
+        outputs=[_shape_entry((), f32), _shape_entry((), f32)],
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    em = Emitter(args.out_dir)
+    print("emitting fusion artifacts (L1 pallas, interpret=True)...")
+    emit_fusion(em)
+    print("emitting model artifacts (L2 train/eval)...")
+    emit_model(em)
+    em.manifest({
+        "stack_ks": list(STACK_KS),
+        "median_ks": list(MEDIAN_KS),
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "layers": list(model.DEFAULT_LAYERS),
+        "param_count": model.param_count(),
+    })
+    print(f"wrote manifest with {len(em.entries)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

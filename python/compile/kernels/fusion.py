@@ -1,0 +1,155 @@
+"""L1 — Pallas fusion kernels: the aggregation hot-spot.
+
+The paper's fusion algorithms (FedAvg, IterAvg, ClippedAvg, ...) all reduce a
+stack of client model updates ``[K, C]`` with per-client weights ``[K]`` to a
+single fused vector ``[C]``.  That streaming reduction is the compute
+hot-spot of the aggregation service, so it is written as a Pallas kernel:
+
+* the update stack is tiled along the parameter axis ``C`` with a
+  ``BlockSpec`` of ``(K, BLOCK_C)`` — this is the HBM<->VMEM schedule (the
+  role Spark partitions play in the paper's cluster implementation);
+* each grid step loads one ``(K, BLOCK_C)`` tile plus the ``[K]`` weight
+  vector into VMEM and produces a ``(BLOCK_C,)`` partial result with a
+  single pass (vector ops on the VPU — fusion is element-wise, no MXU).
+
+Kernels MUST be lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls (see /opt/xla-example/README.md).  Correctness is
+pinned against the pure-jnp oracle in ``ref.py`` by ``python/tests``.
+
+VMEM accounting (for the DESIGN.md §Perf roofline estimate): a tile holds
+``K * BLOCK_C * 4`` bytes of updates + ``BLOCK_C * 4`` output + ``K * 4``
+weights.  The AOT geometry (``model.block_c_for``) targets a ~4 MiB tile —
+K=16 × BLOCK_C=65536 × 4 B — which leaves room for double-buffering inside
+a 16 MiB VMEM while being large enough that the grid loop is not
+overhead-bound (§Perf: on the CPU interpret path, 8192-wide tiles ran at
+0.44 GB/s vs 20 GB/s at one 16×65536 grid step).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile along the parameter axis.  Must divide the padded chunk
+# length C used by aot.py.
+DEFAULT_BLOCK_C = 8192
+
+
+def _wsum_kernel(w_ref, x_ref, o_ref):
+    """o[c] = sum_k w[k] * x[k, c] over one (K, BLOCK_C) tile."""
+    x = x_ref[...]              # (K, BLOCK_C)
+    w = w_ref[...]              # (K,)
+    # Single fused multiply-reduce over the client axis.  dot() would engage
+    # the MXU on TPU for a (1,K)x(K,BC) matmul; for K this small the VPU
+    # broadcast-multiply + tree-sum is the better schedule and is what the
+    # weighted-average loop in the paper's Numba path expresses.
+    o_ref[...] = jnp.sum(x * w[:, None], axis=0)
+
+
+def _clipped_wsum_kernel(w_ref, clip_ref, x_ref, o_ref):
+    """Like _wsum_kernel but each update is clamped to [-clip, clip] first.
+
+    This is the building block of IBMFL-style ClippedAveraging: clipping is
+    applied per-client *before* weighting, inside the same VMEM tile so the
+    stack is still read exactly once.
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    clip = clip_ref[0]
+    xc = jnp.clip(x, -clip, clip)
+    o_ref[...] = jnp.sum(xc * w[:, None], axis=0)
+
+
+def _sq_dist_kernel(x_ref, c_ref, o_ref):
+    """Per-client squared L2 distance to a center over one tile.
+
+    o[k] += sum_c (x[k,c] - center[c])^2 ; used by Krum / Zeno scoring.
+    Accumulates across the C-grid, so the output block must be initialised
+    on the first grid step.
+    """
+    i = pl.program_id(0)
+    x = x_ref[...]                       # (K, BLOCK_C)
+    c = c_ref[...]                       # (BLOCK_C,)
+    d = x - c[None, :]
+    part = jnp.sum(d * d, axis=1)        # (K,)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += part
+
+
+def _grid(c: int, block_c: int) -> int:
+    if c % block_c != 0:
+        raise ValueError(f"C={c} must be a multiple of BLOCK_C={block_c}")
+    return c // block_c
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def weighted_sum(updates: jax.Array, weights: jax.Array,
+                 block_c: int = DEFAULT_BLOCK_C) -> jax.Array:
+    """Fused weighted sum: ``out[c] = sum_k weights[k] * updates[k, c]``.
+
+    ``updates``: f32[K, C] stacked flat client updates (zero-padded tail is
+    harmless because padded rows carry weight 0).
+    ``weights``: f32[K] per-client weights (sample counts for FedAvg,
+    1/K for IterAvg).
+    """
+    k, c = updates.shape
+    grid = _grid(c, block_c)
+    return pl.pallas_call(
+        _wsum_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),           # weights: replicated
+            pl.BlockSpec((k, block_c), lambda i: (0, i)),  # update tile
+        ],
+        out_specs=pl.BlockSpec((block_c,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        interpret=True,
+    )(weights, updates)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def clipped_weighted_sum(updates: jax.Array, weights: jax.Array,
+                         clip: jax.Array,
+                         block_c: int = DEFAULT_BLOCK_C) -> jax.Array:
+    """Weighted sum with per-element clipping to ``[-clip, clip]``."""
+    k, c = updates.shape
+    grid = _grid(c, block_c)
+    clip_v = jnp.reshape(clip.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _clipped_wsum_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((k, block_c), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block_c,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        interpret=True,
+    )(weights, clip_v, updates)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def squared_distances(updates: jax.Array, center: jax.Array,
+                      block_c: int = DEFAULT_BLOCK_C) -> jax.Array:
+    """Per-client squared L2 distance to ``center``: f32[K]."""
+    k, c = updates.shape
+    grid = _grid(c, block_c)
+    return pl.pallas_call(
+        _sq_dist_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((k, block_c), lambda i: (0, i)),
+            pl.BlockSpec((block_c,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((k,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=True,
+    )(updates, center)

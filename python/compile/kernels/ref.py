@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas fusion kernels.
+
+These are the correctness ground truth: `python/tests/test_kernels.py` pins
+every kernel in `fusion.py` against these with hypothesis-driven shape/value
+sweeps, and the rust engines are pinned against the same math through the
+AOT artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-6  # the paper's epsilon in Eq. (1)
+
+
+def weighted_sum(updates, weights):
+    """out[c] = sum_k weights[k] * updates[k, c] — f32[C]."""
+    return jnp.einsum("k,kc->c", weights, updates)
+
+
+def clipped_weighted_sum(updates, weights, clip):
+    """Weighted sum of per-element-clipped updates."""
+    return jnp.einsum("k,kc->c", weights, jnp.clip(updates, -clip, clip))
+
+
+def squared_distances(updates, center):
+    """Per-client squared L2 distance to center — f32[K]."""
+    d = updates - center[None, :]
+    return jnp.sum(d * d, axis=1)
+
+
+def fedavg(updates, counts):
+    """Paper Eq. (1): M = sum_i n_i * w_i / (n_total + eps).
+
+    ``counts`` are per-client sample counts; the weighted mean is taken with
+    the paper's epsilon in the denominator.
+    """
+    num = weighted_sum(updates, counts)
+    return num / (jnp.sum(counts) + EPS)
+
+
+def iteravg(updates):
+    """Simple mean over clients (IBMFL Iterative Averaging)."""
+    k = updates.shape[0]
+    return weighted_sum(updates, jnp.full((k,), 1.0, jnp.float32)) / k
+
+
+def coordinate_median(updates):
+    """Coordinate-wise median (Yin et al. 2018)."""
+    return jnp.median(updates, axis=0)

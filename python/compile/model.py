@@ -1,0 +1,187 @@
+"""L2 — the JAX compute graphs that get AOT-lowered for the rust runtime.
+
+Two families of graphs:
+
+1. **Fusion graphs** — the aggregation math of the paper's fusion algorithms
+   (FedAvg Eq. (1), IterAvg, ClippedAvg, coordinate median, Krum scoring),
+   expressed over a fixed-K stack of flat client updates and calling the
+   Pallas kernels in ``kernels/fusion.py`` for the hot reduction.  The rust
+   coordinator handles arbitrary party counts by zero-weight padding to K
+   and combining partial (sum, weight-total) pairs across K-groups — the
+   algebra is associative, which `python/tests` verifies.
+
+2. **The FL client model** — a small dense classifier whose parameters live
+   in ONE flat f32 vector (so a model update is exactly the flat buffer the
+   aggregation service ships around).  ``train_step`` does fwd/bwd/SGD over
+   a minibatch; ``init_params`` and ``eval_model`` complete the loop for the
+   end-to-end driver (examples/federated_train.rs).
+
+Every public function here has static shapes; ``aot.py`` lowers them to HLO
+text once at build time.  Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fusion
+from .kernels.ref import EPS
+
+# --------------------------------------------------------------------------
+# Fusion graphs (call the L1 Pallas kernels)
+# --------------------------------------------------------------------------
+
+
+def block_c_for(k: int, c: int) -> int:
+    """Pallas tile length along C for a K-row stack.
+
+    §Perf (see EXPERIMENTS.md): target a ~4 MiB VMEM tile — big enough that
+    the HBM→VMEM pipeline is not grid-overhead-bound (on the CPU interpret
+    path each grid step costs a dynamic-slice round trip: block 8192 ran at
+    0.44 GB/s vs 2.15 GB/s at one 64×65536 grid step), small enough that a
+    double-buffered tile pair still fits a 16 MiB VMEM.
+    """
+    target_bytes = 4 << 20
+    bc = max(256, min(c, target_bytes // (4 * max(k, 1))))
+    # largest power-of-two divisor of c not exceeding bc
+    while c % bc != 0:
+        bc //= 2
+    return max(bc, 1)
+
+
+def fused_weighted_average(stack: jax.Array, weights: jax.Array) -> jax.Array:
+    """FedAvg, paper Eq. (1): sum_k w_k * x_k / (sum_k w_k + eps).
+
+    ``stack`` f32[K, C]; ``weights`` f32[K] (zero for padded rows).
+    Returns f32[C].
+    """
+    k, c = stack.shape
+    num = fusion.weighted_sum(stack, weights, block_c=block_c_for(k, c))
+    return num / (jnp.sum(weights) + EPS)
+
+
+def fused_weighted_sum(stack: jax.Array, weights: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """MapReduce building block: (partial weighted sum f32[C], weight total).
+
+    Partials from different K-groups combine by plain addition; the rust
+    side finalises with num / (wtot + eps).  This is the artifact the
+    mapreduce map tasks and the single-node XLA engine both execute.
+    """
+    k, c = stack.shape
+    num = fusion.weighted_sum(stack, weights, block_c=block_c_for(k, c))
+    return num, jnp.sum(weights)
+
+
+def fused_clipped_sum(stack: jax.Array, weights: jax.Array,
+                      clip: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """ClippedAveraging partial: clip each update then weighted-sum."""
+    k, c = stack.shape
+    num = fusion.clipped_weighted_sum(stack, weights, clip,
+                                      block_c=block_c_for(k, c))
+    return num, jnp.sum(weights)
+
+
+def coordinate_median(stack: jax.Array) -> jax.Array:
+    """Coordinate-wise median over an exact-K stack (no padding trick —
+    median is not weight-linear, so the rust side only dispatches here when
+    the group is exactly K)."""
+    return jnp.median(stack, axis=0)
+
+
+def krum_scores(stack: jax.Array, weights: jax.Array) -> jax.Array:
+    """Krum-style pairwise score: for each client, the sum of its squared
+    distances to every other (non-padded) client, computed via the Pallas
+    squared-distance kernel against each row as center.  f32[K]."""
+    k, c = stack.shape
+    bc = block_c_for(k, c)
+
+    def one(center_row):
+        return fusion.squared_distances(stack, center_row, block_c=bc)
+
+    d = jax.vmap(one)(stack)                       # (K, K): d[i, j] = |x_j - x_i|^2
+    mask = (weights > 0).astype(jnp.float32)       # padded rows excluded
+    scores = jnp.sum(d * mask[None, :], axis=1)    # row i: sum over real j
+    # exclude self-distance (zero anyway) and make padded rows worst-score
+    big = jnp.float32(3.4e38)
+    return jnp.where(mask > 0, scores, big)
+
+
+# --------------------------------------------------------------------------
+# FL client model: dense classifier over flat params
+# --------------------------------------------------------------------------
+
+# Layer widths: input -> hidden... -> classes.  The default gives ~0.57 M
+# parameters (2.3 MB update, between the paper's CNN4.6/100 and ResNet50/100
+# scaled sizes); aot.py can emit variants.
+DEFAULT_LAYERS = (784, 512, 256, 10)
+
+
+def param_count(layers: Sequence[int] = DEFAULT_LAYERS) -> int:
+    """Total flat parameter count (weights + biases)."""
+    return sum(layers[i] * layers[i + 1] + layers[i + 1]
+               for i in range(len(layers) - 1))
+
+
+def _unflatten(flat: jax.Array, layers: Sequence[int]) -> List[Tuple[jax.Array, jax.Array]]:
+    """Slice the flat parameter vector into per-layer (W, b) views."""
+    out = []
+    off = 0
+    for i in range(len(layers) - 1):
+        fan_in, fan_out = layers[i], layers[i + 1]
+        w = flat[off:off + fan_in * fan_out].reshape(fan_in, fan_out)
+        off += fan_in * fan_out
+        b = flat[off:off + fan_out]
+        off += fan_out
+        out.append((w, b))
+    return out
+
+
+def init_params(seed: jax.Array, layers: Sequence[int] = DEFAULT_LAYERS) -> jax.Array:
+    """He-initialised flat parameter vector from an i32 seed."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for i in range(len(layers) - 1):
+        key, wk = jax.random.split(key)
+        fan_in, fan_out = layers[i], layers[i + 1]
+        scale = jnp.sqrt(2.0 / fan_in)
+        chunks.append((jax.random.normal(wk, (fan_in * fan_out,), jnp.float32) * scale))
+        chunks.append(jnp.zeros((fan_out,), jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+def _forward(flat: jax.Array, x: jax.Array, layers: Sequence[int]) -> jax.Array:
+    """Logits for a batch: relu MLP."""
+    h = x
+    params = _unflatten(flat, layers)
+    for i, (w, b) in enumerate(params):
+        h = h @ w + b
+        if i + 1 < len(params):
+            h = jax.nn.relu(h)
+    return h
+
+
+def _loss(flat: jax.Array, x: jax.Array, y: jax.Array,
+          layers: Sequence[int]) -> jax.Array:
+    logits = _forward(flat, x, layers)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def train_step(flat: jax.Array, x: jax.Array, y: jax.Array, lr: jax.Array,
+               layers: Sequence[int] = DEFAULT_LAYERS) -> Tuple[jax.Array, jax.Array]:
+    """One SGD step on a minibatch: returns (new flat params, loss)."""
+    loss, grad = jax.value_and_grad(_loss)(flat, x, y, layers)
+    return flat - lr * grad, loss
+
+
+def eval_model(flat: jax.Array, x: jax.Array, y: jax.Array,
+               layers: Sequence[int] = DEFAULT_LAYERS) -> Tuple[jax.Array, jax.Array]:
+    """(mean NLL, accuracy) over an eval batch."""
+    logits = _forward(flat, x, layers)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    return nll, acc

@@ -1,0 +1,99 @@
+"""L1 correctness: every Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes and value distributions; assert_allclose is the
+gate.  These run at build time (`make test`) — if they fail, the artifacts
+are wrong and nothing downstream can be trusted.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fusion, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+# Shapes: K small-ish, C must be a multiple of block_c; sweep both.
+ks = st.integers(min_value=1, max_value=24)
+blocks = st.sampled_from([8, 64, 256])
+nblocks = st.integers(min_value=1, max_value=6)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(k=ks, bc=blocks, nb=nblocks, seed=seeds)
+def test_weighted_sum_matches_ref(k, bc, nb, seed):
+    c = bc * nb
+    x = rand((k, c), seed)
+    w = jnp.abs(rand((k,), seed + 1, 10.0))
+    got = fusion.weighted_sum(x, w, block_c=bc)
+    want = ref.weighted_sum(x, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=ks, bc=blocks, nb=nblocks, seed=seeds,
+       clip=st.floats(min_value=0.01, max_value=3.0))
+def test_clipped_weighted_sum_matches_ref(k, bc, nb, seed, clip):
+    c = bc * nb
+    x = rand((k, c), seed)
+    w = jnp.abs(rand((k,), seed + 1, 5.0))
+    clip_arr = jnp.float32(clip)
+    got = fusion.clipped_weighted_sum(x, w, clip_arr, block_c=bc)
+    want = ref.clipped_weighted_sum(x, w, clip)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=ks, bc=blocks, nb=nblocks, seed=seeds)
+def test_squared_distances_matches_ref(k, bc, nb, seed):
+    c = bc * nb
+    x = rand((k, c), seed)
+    center = rand((c,), seed + 2)
+    got = fusion.squared_distances(x, center, block_c=bc)
+    want = ref.squared_distances(x, center)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_weighted_sum_zero_weight_rows_are_padding():
+    """Zero-weight padding rows must not perturb the result — the rust
+    coordinator relies on this to handle arbitrary party counts."""
+    x = rand((8, 256), 7)
+    w = jnp.asarray([1.0, 2.0, 3.0, 0.0, 0.0, 0.0, 0.0, 0.0], jnp.float32)
+    got = fusion.weighted_sum(x, w)if False else fusion.weighted_sum(x, w, block_c=64)
+    want = ref.weighted_sum(x[:3], w[:3])
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_weighted_sum_is_associative_across_groups():
+    """Group partial sums combine by addition — the MapReduce invariant."""
+    x = rand((12, 512), 11)
+    w = jnp.abs(rand((12,), 12, 4.0))
+    whole = ref.weighted_sum(x, w)
+    part = (fusion.weighted_sum(x[:6], w[:6], block_c=128)
+            + fusion.weighted_sum(x[6:], w[6:], block_c=128))
+    np.testing.assert_allclose(part, whole, rtol=2e-5, atol=2e-5)
+
+
+def test_bad_block_raises():
+    x = rand((4, 100), 0)
+    w = jnp.ones((4,), jnp.float32)
+    with pytest.raises(ValueError):
+        fusion.weighted_sum(x, w, block_c=64)
+
+
+def test_fedavg_eq1_epsilon():
+    """Eq. (1) uses n_total + 1e-6 in the denominator."""
+    x = rand((3, 64), 5)
+    counts = jnp.asarray([10.0, 20.0, 30.0], jnp.float32)
+    got = ref.fedavg(x, counts)
+    want = ref.weighted_sum(x, counts) / (60.0 + 1e-6)
+    np.testing.assert_allclose(got, want, rtol=1e-6)

@@ -1,0 +1,135 @@
+"""L2 correctness: fusion graphs + the FL client model.
+
+Pins the L2 graphs (which call the Pallas kernels) against the jnp oracle,
+checks the flat-parameter plumbing, and verifies train_step actually learns
+on a separable toy problem — the guarantee the end-to-end rust driver
+(examples/federated_train.rs) builds on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+class TestFusionGraphs:
+    def test_weighted_average_matches_eq1(self):
+        x = rand((16, 8192), 3)
+        w = jnp.abs(rand((16,), 4, 20.0))
+        got = model.fused_weighted_average(x, w)
+        np.testing.assert_allclose(got, ref.fedavg(x, w), rtol=2e-5, atol=2e-5)
+
+    def test_weighted_sum_partials_combine(self):
+        """rust combines (num, wtot) partials by addition then divides."""
+        x = rand((32, 8192), 5)
+        w = jnp.abs(rand((32,), 6, 10.0))
+        n1, t1 = model.fused_weighted_sum(x[:16], w[:16])
+        n2, t2 = model.fused_weighted_sum(x[16:], w[16:])
+        fused = (n1 + n2) / (t1 + t2 + ref.EPS)
+        np.testing.assert_allclose(fused, ref.fedavg(x, w), rtol=2e-5, atol=2e-5)
+
+    def test_clipped_sum(self):
+        x = rand((16, 8192), 7, 2.0)
+        w = jnp.abs(rand((16,), 8, 3.0))
+        num, tot = model.fused_clipped_sum(x, w, jnp.float32(0.5))
+        np.testing.assert_allclose(
+            num, ref.clipped_weighted_sum(x, w, 0.5), rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(tot, jnp.sum(w), rtol=1e-6)
+
+    def test_coordinate_median(self):
+        x = rand((16, 8192), 9)
+        np.testing.assert_allclose(
+            model.coordinate_median(x), ref.coordinate_median(x), rtol=1e-6)
+
+    def test_krum_scores_prefer_cluster(self):
+        """An outlier update must get a worse (larger) Krum score."""
+        base = rand((1, 8192), 10, 0.1)
+        stack = jnp.concatenate([base + rand((15, 8192), 11, 0.01),
+                                 rand((1, 8192), 12, 5.0)])  # last = outlier
+        w = jnp.ones((16,), jnp.float32)
+        scores = model.krum_scores(stack, w)
+        assert int(jnp.argmax(scores)) == 15
+
+    def test_krum_padded_rows_excluded(self):
+        stack = rand((16, 8192), 13)
+        w = jnp.concatenate([jnp.ones((8,)), jnp.zeros((8,))]).astype(jnp.float32)
+        scores = model.krum_scores(stack, w)
+        assert bool(jnp.all(scores[8:] > 1e37))
+        assert bool(jnp.all(scores[:8] < 1e37))
+
+
+class TestClientModel:
+    def test_param_count_matches_init(self):
+        p = model.param_count()
+        flat = model.init_params(jnp.int32(0))
+        assert flat.shape == (p,)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=1000))
+    def test_init_is_deterministic_and_seed_sensitive(self, seed):
+        a = model.init_params(jnp.int32(seed))
+        b = model.init_params(jnp.int32(seed))
+        c = model.init_params(jnp.int32(seed + 1))
+        np.testing.assert_array_equal(a, b)
+        assert not np.allclose(a, c)
+
+    def test_train_step_shapes_and_loss_finite(self):
+        flat = model.init_params(jnp.int32(1))
+        x = rand((model.param_count() and 32, 784), 2)
+        y = jnp.asarray(np.random.default_rng(3).integers(0, 10, 32), jnp.int32)
+        new, loss = model.train_step(flat, x, y, jnp.float32(0.1))
+        assert new.shape == flat.shape
+        assert np.isfinite(float(loss))
+
+    def test_sgd_learns_separable_toy(self):
+        """A few hundred steps on a linearly separable synthetic problem
+        must drive loss down and accuracy up — the e2e driver's guarantee."""
+        rng = np.random.default_rng(0)
+        centers = rng.normal(0, 1, (10, 784)).astype(np.float32)
+        flat = model.init_params(jnp.int32(7))
+        lr = jnp.float32(0.05)
+        first_loss = None
+        for step in range(120):
+            y = rng.integers(0, 10, 32)
+            x = centers[y] + rng.normal(0, 0.3, (32, 784)).astype(np.float32)
+            flat, loss = model.train_step(
+                flat, jnp.asarray(x), jnp.asarray(y, jnp.int32), lr)
+            if first_loss is None:
+                first_loss = float(loss)
+        ye = rng.integers(0, 10, 256)
+        xe = centers[ye] + rng.normal(0, 0.3, (256, 784)).astype(np.float32)
+        nll, acc = model.eval_model(
+            flat, jnp.asarray(xe), jnp.asarray(ye, jnp.int32))
+        assert float(nll) < first_loss * 0.5
+        assert float(acc) > 0.8
+
+    def test_eval_outputs_scalars(self):
+        flat = model.init_params(jnp.int32(2))
+        x = rand((256, 784), 4)
+        y = jnp.zeros((256,), jnp.int32)
+        nll, acc = model.eval_model(flat, x, y)
+        assert nll.shape == () and acc.shape == ()
+        assert 0.0 <= float(acc) <= 1.0
+
+
+class TestAotGeometry:
+    def test_chunk_is_block_multiple(self):
+        from compile import aot
+        from compile.kernels import fusion as fk
+        assert aot.CHUNK_C % fk.DEFAULT_BLOCK_C == 0
+
+    def test_param_count_is_manifest_value(self):
+        # The manifest's param_count must equal the model's, or the rust
+        # runtime would mis-size its buffers.
+        assert model.param_count() == model.param_count(model.DEFAULT_LAYERS)

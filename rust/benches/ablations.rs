@@ -1,0 +1,174 @@
+//! Ablations beyond the paper's figures — the design choices DESIGN.md
+//! calls out:
+//!
+//! A. partition-cache on/off (the paper's "caching is not efficient for
+//!    large models" policy);
+//! B. partition-count sweep (Spark's adaptive executor sizing, §IV-B1);
+//! C. executor spin-up cost (§III-D3: 10 containers < 30 s);
+//! D. XLA stack height K=16 vs K=64;
+//! E. Byzantine-robust fusion cost (the §V future-work algorithms);
+//! F. Algorithm-1 monitor threshold vs timeout behaviour.
+
+use std::time::Duration;
+
+use elastiagg::bench::{gen_updates, paper_cluster, time, BenchDfs};
+use elastiagg::dfs::{DfsClient, Monitor};
+use elastiagg::engine::{AggregationEngine, ParallelEngine, XlaEngine};
+use elastiagg::fusion::{CoordMedian, FedAvg, FusionAlgorithm, Krum, Zeno};
+use elastiagg::mapreduce::{scheduler::JobConfig, ExecutorConfig, SparkContext};
+use elastiagg::metrics::Breakdown;
+use elastiagg::runtime::Runtime;
+use elastiagg::util::fmt;
+
+fn main() {
+    ablation_cache();
+    ablation_partitions();
+    ablation_startup();
+    ablation_stack_k();
+    ablation_robust();
+    ablation_monitor();
+    println!("\nablations OK");
+}
+
+fn ablation_cache() {
+    elastiagg::bench::banner("Ablation A — partition cache on/off", "cache helps small models");
+    let mut t = fmt::Table::new(&["model bytes", "parties", "cached", "uncached", "speedup"]);
+    for (len, n) in [(12_000usize, 400usize), (1_200_000, 24)] {
+        let env = BenchDfs::new(3, 2);
+        env.seed_round(0, n, len, 5);
+        let sc = SparkContext::start(
+            env.dfs.clone(),
+            ExecutorConfig { executors: 2, cores_per_executor: 2, ..Default::default() },
+        );
+        let mut bd = Breakdown::new();
+        let (_, cached) = time(|| {
+            sc.aggregate(&FedAvg, "/rounds/0/updates/",
+                         &JobConfig { cache: true, ..Default::default() }, &mut bd).unwrap()
+        });
+        let (_, uncached) = time(|| {
+            sc.aggregate(&FedAvg, "/rounds/0/updates/",
+                         &JobConfig { cache: false, ..Default::default() }, &mut bd).unwrap()
+        });
+        t.row(&[
+            fmt::bytes(len as u64 * 4),
+            n.to_string(),
+            fmt::secs(cached),
+            fmt::secs(uncached),
+            format!("{:.2}x", uncached / cached),
+        ]);
+    }
+    t.print();
+}
+
+fn ablation_partitions() {
+    elastiagg::bench::banner("Ablation B — partition-count sweep", "too few starves cores; too many pays task overhead");
+    let env = BenchDfs::new(3, 2);
+    env.seed_round(0, 400, 12_000, 6);
+    let sc = SparkContext::start(
+        env.dfs.clone(),
+        ExecutorConfig { executors: 2, cores_per_executor: 2, ..Default::default() },
+    );
+    let mut t = fmt::Table::new(&["partitions", "total"]);
+    for parts in [1usize, 4, 8, 32, 128] {
+        let mut bd = Breakdown::new();
+        let (_, secs) = time(|| {
+            sc.aggregate(&FedAvg, "/rounds/0/updates/",
+                         &JobConfig { cache: false, partitions: Some(parts), ..Default::default() },
+                         &mut bd).unwrap()
+        });
+        t.row(&[parts.to_string(), fmt::secs(secs)]);
+    }
+    t.print();
+}
+
+fn ablation_startup() {
+    elastiagg::bench::banner("Ablation C — executor spin-up (seamless-transition cost)",
+                             "paper: 10 x (30 GB, 3 cores) containers in < 30 s");
+    let vc = paper_cluster();
+    let mut t = fmt::Table::new(&["executors", "virtual spin-up", "measured spin-up (50 ms/container sim)"]);
+    for execs in [2usize, 5, 10] {
+        let (_pool, secs) = time(|| {
+            elastiagg::mapreduce::ExecutorPool::start(ExecutorConfig {
+                executors: execs,
+                cores_per_executor: 1,
+                startup: Duration::from_millis(50 * execs as u64),
+                ..Default::default()
+            })
+        });
+        t.row(&[
+            execs.to_string(),
+            fmt::secs(vc.executor_startup(execs)),
+            fmt::secs(secs),
+        ]);
+    }
+    t.print();
+    assert!(vc.executor_startup(10) < 30.0);
+}
+
+fn ablation_stack_k() {
+    elastiagg::bench::banner("Ablation D — XLA fusion stack height K", "bigger K amortises exec overhead for many parties");
+    let Some(rtm) = Runtime::load_default().ok() else {
+        println!("(artifacts unavailable — skipped)");
+        return;
+    };
+    let updates = gen_updates(9, 256, 70_000);
+    let mut t = fmt::Table::new(&["K", "time (256 parties x 280 KB)"]);
+    for k in [16usize, 64] {
+        let e = XlaEngine::new(rtm.clone(), k).unwrap();
+        let mut bd = Breakdown::new();
+        let (r, secs) = time(|| e.aggregate(&FedAvg, &updates, &mut bd));
+        r.unwrap();
+        t.row(&[k.to_string(), fmt::secs(secs)]);
+    }
+    t.print();
+}
+
+fn ablation_robust() {
+    elastiagg::bench::banner("Ablation E — Byzantine-robust fusion cost (§V future work)",
+                             "median/krum/zeno are far costlier than averaging -> distributed matters more");
+    let updates = gen_updates(13, 24, 100_000);
+    let e = ParallelEngine::new(4);
+    let mut t = fmt::Table::new(&["algorithm", "time (24 parties x 400 KB)", "vs fedavg"]);
+    let mut base = 0.0;
+    for algo in [
+        Box::new(FedAvg) as Box<dyn FusionAlgorithm>,
+        Box::new(CoordMedian),
+        Box::new(Zeno { trim_b: 2 }),
+        Box::new(Krum { byzantine_f: 2 }),
+    ] {
+        let mut bd = Breakdown::new();
+        let (r, secs) = time(|| e.aggregate(algo.as_ref(), &updates, &mut bd));
+        r.unwrap();
+        if algo.name() == "fedavg" {
+            base = secs;
+        }
+        t.row(&[
+            algo.name().to_string(),
+            fmt::secs(secs),
+            format!("{:.1}x", secs / base),
+        ]);
+    }
+    t.print();
+}
+
+fn ablation_monitor() {
+    elastiagg::bench::banner("Ablation F — Algorithm-1 monitor threshold vs timeout",
+                             "timeout bounds straggler wait; threshold controls completeness");
+    let env = BenchDfs::new(1, 1);
+    env.seed_round(0, 30, 1000, 7);
+    let monitor = Monitor::new(env.dfs.namenode().clone());
+    let mut t = fmt::Table::new(&["threshold", "timeout", "outcome", "count", "waited"]);
+    for (th, to_ms) in [(30usize, 1000u64), (40, 80), (10, 1000)] {
+        let (out, secs) = time(|| {
+            monitor.watch(&DfsClient::round_prefix(0), th, Duration::from_millis(to_ms))
+        });
+        t.row(&[
+            th.to_string(),
+            format!("{to_ms} ms"),
+            if out.is_ready() { "ready".into() } else { "timeout".into() },
+            out.count().to_string(),
+            fmt::secs(secs),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,66 @@
+//! Fig 11 — distributed aggregation with ResNet50 and VGG16 (both
+//! algorithms) at 3× the single-node capacity.
+
+use elastiagg::bench::{paper_cluster, time, BenchDfs};
+use elastiagg::cluster::{FEDAVG_DUP_FACTOR, ITERAVG_DUP_FACTOR};
+use elastiagg::config::ModelZoo;
+use elastiagg::fusion::{FedAvg, FusionAlgorithm, IterAvg};
+use elastiagg::mapreduce::{scheduler::JobConfig, ExecutorConfig, SparkContext};
+use elastiagg::metrics::Breakdown;
+use elastiagg::util::fmt;
+
+fn main() {
+    let vc = paper_cluster();
+    elastiagg::bench::banner(
+        "Fig 11 — ResNet50 + VGG16 on the distributed path (3x capacity)",
+        "3x party scalability for both real-architecture models",
+    );
+
+    println!("\n[paper-scale, virtual]:");
+    let mut t = fmt::Table::new(&["model", "algo", "1-node cap", "3x parties", "total time"]);
+    for name in ["Resnet50", "VGG16"] {
+        let m = ModelZoo::get(name).unwrap();
+        for (an, dup) in [("fedavg", FEDAVG_DUP_FACTOR), ("iteravg", ITERAVG_DUP_FACTOR)] {
+            let cap = vc.single_node_capacity(170 << 30, m.size_bytes, dup);
+            let n = cap * 3;
+            let bd = vc.distributed_breakdown(m.size_bytes, n, m.size_bytes < (64 << 20));
+            t.row(&[
+                m.name.to_string(),
+                an.to_string(),
+                cap.to_string(),
+                n.to_string(),
+                fmt::secs(bd.total()),
+            ]);
+        }
+    }
+    t.print();
+
+    println!("\n[measured, 1:100 scale]:");
+    let mut t = fmt::Table::new(&["model", "algo", "parties", "read+sum", "reduce", "total"]);
+    for (name, n) in [("Resnet50", 180usize), ("VGG16", 36)] {
+        let m = ModelZoo::get(name).unwrap();
+        let len = m.scaled_params(0.01);
+        let env = BenchDfs::new(3, 2);
+        env.seed_round(0, n, len, 23);
+        let sc = SparkContext::start(
+            env.dfs.clone(),
+            ExecutorConfig { executors: 2, cores_per_executor: 2, ..Default::default() },
+        );
+        for (an, algo) in [("fedavg", &FedAvg as &dyn FusionAlgorithm), ("iteravg", &IterAvg)] {
+            let mut bd = Breakdown::new();
+            let (_, total) = time(|| {
+                sc.aggregate(algo, "/rounds/0/updates/", &JobConfig::default(), &mut bd).unwrap()
+            });
+            t.row(&[
+                m.name.to_string(),
+                an.to_string(),
+                n.to_string(),
+                fmt::secs(bd.get("read_partition") + bd.get("sum")),
+                fmt::secs(bd.get("reduce")),
+                fmt::secs(total),
+            ]);
+        }
+    }
+    t.print();
+    println!("\nfig11 OK");
+}

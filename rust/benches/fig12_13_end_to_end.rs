@@ -1,0 +1,88 @@
+//! Figs 12 + 13 — end-to-end distributed aggregation with simulated
+//! clients: {CNN956×6, CNN478×12, ResNet50×60, CNN73×84, CNN4.6×1272},
+//! reporting avg per-client write time, phase latencies and partition
+//! counts; Fig 13 details the 1272-party run (60 partitions in the paper).
+//!
+//! Measured at 1:100 scale with REAL party counts (1272 real uploads), so
+//! the write-contention and partitioning behaviour is genuine; paper-scale
+//! write times come from the 1 GbE + replicated-store contention model.
+
+use elastiagg::bench::{paper_cluster, time, BenchDfs};
+use elastiagg::client::fleet_upload_dfs;
+use elastiagg::config::ModelZoo;
+use elastiagg::dfs::{DfsClient, Monitor};
+use elastiagg::fusion::FedAvg;
+use elastiagg::mapreduce::{scheduler::JobConfig, ExecutorConfig, SparkContext};
+use elastiagg::metrics::Breakdown;
+use elastiagg::util::fmt;
+
+fn main() {
+    let vc = paper_cluster();
+    elastiagg::bench::banner(
+        "Figs 12/13 — end-to-end with simulated clients (FedAvg)",
+        "write time dominates for big models; 1272-party run partitions ~60",
+    );
+
+    println!("\n[paper-scale, virtual] avg per-client write time over 1 GbE:");
+    let mut t = fmt::Table::new(&["model", "parties", "avg write", "agg total"]);
+    for (m, parties) in ModelZoo::fig12_set() {
+        let w = vc.client_write_time(m.size_bytes, parties);
+        let bd = vc.distributed_breakdown(m.size_bytes, parties, m.size_bytes < (64 << 20));
+        t.row(&[
+            m.name.to_string(),
+            parties.to_string(),
+            fmt::secs(w),
+            fmt::secs(bd.total()),
+        ]);
+    }
+    t.print();
+
+    println!("\n[measured, 1:100 scale, REAL party counts] full pipeline per Fig 12:");
+    let mut t = fmt::Table::new(&[
+        "model", "parties", "avg write", "monitor", "read+sum", "reduce", "partitions",
+    ]);
+    let mut fig13: Option<(String, Breakdown, usize, f64)> = None;
+    for (m, parties) in ModelZoo::fig12_set() {
+        let len = m.scaled_params(0.01);
+        let env = BenchDfs::new(3, 2);
+        // real fleet upload from 6 uploader threads (the 6 client machines)
+        let (avg_write, _) = time(|| fleet_upload_dfs(&env.dfs, 0, parties, len, 6, 31));
+        let monitor = Monitor::new(env.dfs.namenode().clone());
+        let (outcome, mon_secs) = time(|| {
+            monitor.watch(&DfsClient::round_prefix(0), parties, std::time::Duration::from_secs(30))
+        });
+        assert!(outcome.is_ready());
+        let sc = SparkContext::start(
+            env.dfs.clone(),
+            ExecutorConfig { executors: 2, cores_per_executor: 2, ..Default::default() },
+        );
+        let cache = m.size_bytes < (64 << 20);
+        let mut bd = Breakdown::new();
+        let ((_, parts), _) = time(|| {
+            sc.aggregate(&FedAvg, "/rounds/0/updates/", &JobConfig { cache, ..Default::default() }, &mut bd)
+                .unwrap()
+        });
+        t.row(&[
+            m.name.to_string(),
+            parties.to_string(),
+            fmt::secs(avg_write),
+            fmt::secs(mon_secs),
+            fmt::secs(bd.get("read_partition") + bd.get("sum")),
+            fmt::secs(bd.get("reduce")),
+            parts.to_string(),
+        ]);
+        if m.name == "CNN4.6" {
+            fig13 = Some((m.name.to_string(), bd, parts, avg_write));
+        }
+    }
+    t.print();
+
+    let (name, bd, parts, avg_write) = fig13.expect("CNN4.6 run present");
+    println!("\nFig 13 — step breakdown of the {name} x 1272-party round:");
+    println!("  avg client write : {}", fmt::secs(avg_write));
+    for (phase, secs) in bd.phases() {
+        println!("  {phase:<16}: {}", fmt::secs(*secs));
+    }
+    println!("  partitions       : {parts} (paper: 60)");
+    println!("\nfig12/13 OK");
+}

@@ -1,0 +1,69 @@
+//! Fig 2 — single-node aggregation with multiple model sizes at constant
+//! memory (170 GB): bigger models support fewer parties and take longer.
+//!
+//! Paper anchor: "for the 956 MB model less than 150 clients can be
+//! supported".
+
+use elastiagg::bench::{gen_updates, paper_cluster, time};
+use elastiagg::cluster::{EngineKind, FEDAVG_DUP_FACTOR, ITERAVG_DUP_FACTOR};
+use elastiagg::config::ModelZoo;
+use elastiagg::engine::{AggregationEngine, SerialEngine};
+use elastiagg::fusion::{FedAvg, IterAvg};
+use elastiagg::metrics::Breakdown;
+use elastiagg::util::fmt;
+
+fn main() {
+    let vc = paper_cluster();
+    elastiagg::bench::banner(
+        "Fig 2 — single node, 170 GB, model-size ladder",
+        "party capacity shrinks with model size; <150 clients @956 MB",
+    );
+
+    println!("\n[paper-scale, virtual] capacity + time at half-capacity load:");
+    let mut t = fmt::Table::new(&[
+        "model", "FedAvg cap", "IterAvg cap", "FedAvg t(cap/2)", "IterAvg t(cap/2)",
+    ]);
+    let mut prev_cap = usize::MAX;
+    for m in ModelZoo::cnn_ladder() {
+        let fed = vc.single_node_capacity(170 << 30, m.size_bytes, FEDAVG_DUP_FACTOR);
+        let iter = vc.single_node_capacity(170 << 30, m.size_bytes, ITERAVG_DUP_FACTOR);
+        assert!(fed < prev_cap, "capacity must shrink with size");
+        prev_cap = fed;
+        t.row(&[
+            m.name.to_string(),
+            fed.to_string(),
+            iter.to_string(),
+            fmt::secs(vc.single_node_time(m.size_bytes, fed / 2, 64, EngineKind::Serial, 1.0)),
+            fmt::secs(vc.single_node_time(m.size_bytes, iter / 2, 64, EngineKind::Serial, 0.8)),
+        ]);
+    }
+    t.print();
+    let cap956 = vc.single_node_capacity(170 << 30, 956 << 20, FEDAVG_DUP_FACTOR);
+    println!("paper anchor: <150 clients @956 MB (model: {cap956})");
+    assert!(cap956 < 150, "{cap956}");
+
+    println!("\n[measured, 1:100 scale] serial FedAvg/IterAvg, 64 parties per size:");
+    let scale = 0.01;
+    let mut t = fmt::Table::new(&["model", "scaled size", "FedAvg", "IterAvg"]);
+    let mut prev = 0.0f64;
+    for m in ModelZoo::cnn_ladder() {
+        let len = m.scaled_params(scale);
+        let updates = gen_updates(3, 64, len);
+        let e = SerialEngine::unbounded();
+        let mut bd = Breakdown::new();
+        let (r, fed_s) = time(|| e.aggregate(&FedAvg, &updates, &mut bd));
+        r.unwrap();
+        let (r, iter_s) = time(|| e.aggregate(&IterAvg, &updates, &mut bd));
+        r.unwrap();
+        assert!(fed_s > prev * 0.3, "time should grow with size");
+        prev = fed_s;
+        t.row(&[
+            m.name.to_string(),
+            fmt::bytes(m.scaled_bytes(scale)),
+            fmt::secs(fed_s),
+            fmt::secs(iter_s),
+        ]);
+    }
+    t.print();
+    println!("\nfig2 OK — capacity and time both degrade with model size");
+}

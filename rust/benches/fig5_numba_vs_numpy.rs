@@ -1,0 +1,70 @@
+//! Fig 5 — Numba vs NumPy for FedAvg across model sizes.
+//!
+//! Paper shape: the parallel (Numba) path wins most for SMALL models (many
+//! parties fit -> lots of parallelism); for large models fewer parties fit
+//! and the gap narrows.
+
+use elastiagg::bench::{gen_updates, paper_cluster, time};
+use elastiagg::cluster::{EngineKind, FEDAVG_DUP_FACTOR};
+use elastiagg::config::ModelZoo;
+use elastiagg::engine::{AggregationEngine, ParallelEngine, SerialEngine, XlaEngine};
+use elastiagg::fusion::FedAvg;
+use elastiagg::metrics::Breakdown;
+use elastiagg::runtime::Runtime;
+use elastiagg::util::fmt;
+
+fn main() {
+    let vc = paper_cluster();
+    elastiagg::bench::banner(
+        "Fig 5 — Numba vs NumPy, FedAvg, model-size ladder (at capacity load)",
+        "parallel wins ~35-40% for small models; gap narrows as size grows",
+    );
+
+    println!("\n[paper-scale, virtual] each model at its 170 GB party capacity, 64 cores:");
+    let mut t = fmt::Table::new(&["model", "parties", "numpy", "numba", "improvement"]);
+    let mut improvements = Vec::new();
+    for m in ModelZoo::cnn_ladder() {
+        let cap = vc.single_node_capacity(170 << 30, m.size_bytes, FEDAVG_DUP_FACTOR);
+        let s = vc.single_node_time(m.size_bytes, cap, 64, EngineKind::Serial, 1.0);
+        let p = vc.single_node_time(m.size_bytes, cap, 64, EngineKind::Parallel, 1.0);
+        let imp = 100.0 * (s - p) / s;
+        improvements.push((m.name, cap, imp));
+        t.row(&[
+            m.name.to_string(),
+            cap.to_string(),
+            fmt::secs(s),
+            fmt::secs(p),
+            format!("{imp:.1}%"),
+        ]);
+    }
+    t.print();
+    // parallel must always win at capacity load with 64 cores
+    assert!(improvements.iter().all(|(_, _, imp)| *imp > 0.0));
+
+    println!("\n[measured, 1:100 scale] serial vs parallel(4) vs xla, 64 parties per size:");
+    let scale = 0.01;
+    let xla = Runtime::load_default().ok().and_then(|r| XlaEngine::new(r, 64).ok());
+    let mut t = fmt::Table::new(&["model", "serial", "parallel(4)", "xla(k=64)"]);
+    for m in ModelZoo::cnn_ladder() {
+        let len = m.scaled_params(scale);
+        let updates = gen_updates(11, 64, len);
+        let mut bd = Breakdown::new();
+        let (r, s) = time(|| SerialEngine::unbounded().aggregate(&FedAvg, &updates, &mut bd));
+        r.unwrap();
+        let (r, p) = time(|| ParallelEngine::new(4).aggregate(&FedAvg, &updates, &mut bd));
+        r.unwrap();
+        let x = xla.as_ref().map(|x| {
+            let (r, t) = time(|| x.aggregate(&FedAvg, &updates, &mut bd));
+            r.unwrap();
+            t
+        });
+        t.row(&[
+            m.name.to_string(),
+            fmt::secs(s),
+            fmt::secs(p),
+            x.map(fmt::secs).unwrap_or_else(|| "n/a".into()),
+        ]);
+    }
+    t.print();
+    println!("\nfig5 OK");
+}

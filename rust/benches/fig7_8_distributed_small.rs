@@ -1,0 +1,94 @@
+//! Figs 7 + 8 — distributed aggregation of the 4.6 MB model up to 100 000
+//! parties (FedAvg with read/sum/reduce breakdown; IterAvg total).
+//!
+//! Paper anchors: 100 000 parties supported vs 18 900 single-node for
+//! FedAvg (+429.1% scalability) and 32 400 for IterAvg (+207.7%);
+//! reduce time small when caching is on (small models).
+
+use elastiagg::bench::{paper_cluster, time, BenchDfs};
+use elastiagg::cluster::{FEDAVG_DUP_FACTOR, ITERAVG_DUP_FACTOR};
+use elastiagg::fusion::{FedAvg, IterAvg};
+use elastiagg::mapreduce::{scheduler::JobConfig, ExecutorConfig, SparkContext};
+use elastiagg::metrics::Breakdown;
+use elastiagg::util::fmt;
+
+const UPDATE_46MB: u64 = (4.6 * 1024.0 * 1024.0) as u64;
+
+fn main() {
+    let vc = paper_cluster();
+    elastiagg::bench::banner(
+        "Figs 7/8 — distributed aggregation, 4.6 MB model, up to 100k parties",
+        "+429.1% party scalability (FedAvg), +207.7% (IterAvg); cached reduce is cheap",
+    );
+
+    // ---- scalability headline -----------------------------------------
+    let fed_cap = vc.single_node_capacity(170 << 30, UPDATE_46MB, FEDAVG_DUP_FACTOR);
+    let iter_cap = vc.single_node_capacity(170 << 30, UPDATE_46MB, ITERAVG_DUP_FACTOR);
+    let fed_gain = 100.0 * (100_000.0 - fed_cap as f64) / fed_cap as f64;
+    let iter_gain = 100.0 * (100_000.0 - iter_cap as f64) / iter_cap as f64;
+    println!("\nscalability at 100 000 parties vs single-node ceiling:");
+    println!("  FedAvg : single-node {fed_cap} -> +{fed_gain:.1}%   (paper: +429.1%)");
+    println!("  IterAvg: single-node {iter_cap} -> +{iter_gain:.1}%   (paper: +207.7%)");
+    assert!((300.0..600.0).contains(&fed_gain), "{fed_gain}");
+    assert!((150.0..300.0).contains(&iter_gain), "{iter_gain}");
+    // storage, not memory, is the distributed bound (2.6 TB HDFS in paper)
+    let cap = vc.distributed_capacity(UPDATE_46MB, 2600u64 << 30);
+    println!("  distributed capacity bound (2.6 TB HDFS, repl 2): {cap} parties");
+    assert!(cap > 100_000);
+
+    // ---- virtual: paper-scale breakdowns -------------------------------
+    println!("\n[paper-scale, virtual] FedAvg phase breakdown (cached):");
+    let mut t = fmt::Table::new(&["parties", "read time", "sum time", "reduce time", "total"]);
+    for n in [20_000usize, 40_000, 60_000, 80_000, 100_000] {
+        let bd = vc.distributed_breakdown(UPDATE_46MB, n, true);
+        t.row(&[
+            n.to_string(),
+            fmt::secs(bd.get("read_partition")),
+            fmt::secs(bd.get("sum")),
+            fmt::secs(bd.get("reduce")),
+            fmt::secs(bd.total()),
+        ]);
+        // cached reduce stays far below read (the paper's Fig-7 shape)
+        assert!(bd.get("reduce") < bd.get("read_partition"));
+    }
+    t.print();
+
+    println!("\n[paper-scale, virtual] IterAvg total time:");
+    let mut t = fmt::Table::new(&["parties", "total"]);
+    for n in [20_000usize, 60_000, 100_000] {
+        let bd = vc.distributed_breakdown(UPDATE_46MB, n, true);
+        t.row(&[n.to_string(), fmt::secs(bd.total() * 0.9)]); // no weight pass
+    }
+    t.print();
+
+    // ---- measured: real DFS + MapReduce at 1:100 scale ------------------
+    println!("\n[measured, 1:100 scale] real store + scheduler, 46 KB updates:");
+    let mut t = fmt::Table::new(&["parties", "algo", "read_partition", "sum", "reduce", "total", "parts"]);
+    for n in [200usize, 500, 1000, 2000] {
+        let env = BenchDfs::new(3, 2);
+        env.seed_round(0, n, (UPDATE_46MB / 100 / 4) as usize, n as u64);
+        let sc = SparkContext::start(
+            env.dfs.clone(),
+            ExecutorConfig { executors: 2, cores_per_executor: 2, ..Default::default() },
+        );
+        for (name, algo) in [("fedavg", &FedAvg as &dyn elastiagg::fusion::FusionAlgorithm),
+                             ("iteravg", &IterAvg)] {
+            let mut bd = Breakdown::new();
+            let ((_, parts), total) = time(|| {
+                sc.aggregate(algo, "/rounds/0/updates/", &JobConfig::default(), &mut bd)
+                    .unwrap()
+            });
+            t.row(&[
+                n.to_string(),
+                name.to_string(),
+                fmt::secs(bd.get("read_partition")),
+                fmt::secs(bd.get("sum")),
+                fmt::secs(bd.get("reduce")),
+                fmt::secs(total),
+                parts.to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!("\nfig7/8 OK — distributed path unbound by node memory");
+}

@@ -1,0 +1,222 @@
+//! The end-to-end federated training driver: N simulated parties train the
+//! L2 model locally via the AOT `train_step` artifact; the adaptive
+//! service aggregates each round (XLA FedAvg hot path, or MapReduce when
+//! the round classifies Large); the global loss/accuracy curve is the
+//! validation signal recorded in EXPERIMENTS.md.
+//!
+//! Used by `examples/federated_train.rs` and `elastiagg train`.
+
+use std::sync::{Arc, Mutex};
+
+use crate::client::{LocalTrainer, SyntheticDataset};
+use crate::config::ServiceConfig;
+use crate::coordinator::{AdaptiveService, WorkloadClass};
+use crate::dfs::{DfsClient, NameNode};
+use crate::engine::XlaEngine;
+use crate::mapreduce::ExecutorConfig;
+use crate::metrics::Breakdown;
+use crate::runtime::Runtime;
+use crate::tensorstore::ModelUpdate;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub parties: usize,
+    pub rounds: u32,
+    /// Local SGD steps per party per round.
+    pub local_steps: usize,
+    pub lr: f32,
+    /// Class skew (0 = IID shards).
+    pub skew: f64,
+    pub seed: u64,
+    /// Aggregator node memory (drives the adaptive classification; set it
+    /// small to watch the service spill to the distributed path).
+    pub node_memory: u64,
+    pub print_every: u32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            parties: 8,
+            rounds: 20,
+            local_steps: 10,
+            lr: 0.05,
+            skew: 1.0,
+            seed: 42,
+            node_memory: 1 << 30,
+            print_every: 1,
+        }
+    }
+}
+
+/// Per-round record of the training run.
+#[derive(Clone, Debug)]
+pub struct RoundLog {
+    pub round: u32,
+    pub class: WorkloadClass,
+    pub engine: &'static str,
+    pub mean_local_loss: f32,
+    pub eval_nll: f32,
+    pub eval_acc: f32,
+    pub agg_seconds: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub rounds: Vec<RoundLog>,
+}
+
+impl TrainLog {
+    pub fn final_acc(&self) -> f32 {
+        self.rounds.last().map(|r| r.eval_acc).unwrap_or(0.0)
+    }
+
+    pub fn first_nll(&self) -> f32 {
+        self.rounds.first().map(|r| r.eval_nll).unwrap_or(f32::NAN)
+    }
+
+    pub fn final_nll(&self) -> f32 {
+        self.rounds.last().map(|r| r.eval_nll).unwrap_or(f32::NAN)
+    }
+}
+
+/// Run federated training end to end.  Returns the loss-curve log.
+pub fn federated_train(cfg: &TrainConfig, dfs_root: &std::path::Path) -> TrainLog {
+    let rtm = Runtime::load_default().expect("artifacts missing — run `make artifacts`");
+    rtm.warmup("train_step").unwrap();
+    rtm.warmup("wsum_k16").unwrap();
+
+    let input_dim = rtm.manifest().layers[0];
+    let update_bytes = rtm.manifest().param_count as u64 * 4;
+    let ds = Arc::new(SyntheticDataset::new(input_dim, cfg.seed, cfg.skew));
+
+    let nn = NameNode::create(dfs_root, 3, 2, 8 << 20).unwrap();
+    let dfs = DfsClient::new(nn);
+    let mut svc_cfg = ServiceConfig::default();
+    svc_cfg.node.memory_bytes = cfg.node_memory;
+    svc_cfg.node.cores = 4;
+    svc_cfg.monitor_timeout_s = 60.0;
+    let xla = XlaEngine::auto(rtm.clone(), cfg.parties).ok();
+    let service = AdaptiveService::new(
+        svc_cfg,
+        dfs.clone(),
+        xla,
+        ExecutorConfig { executors: 2, cores_per_executor: 2, ..Default::default() },
+    );
+
+    let mut global = LocalTrainer::init_global(&rtm, cfg.seed as i32).unwrap();
+    let mut eval_rng = Rng::new(cfg.seed ^ 0xE7A1_5EED);
+    let mut log = TrainLog::default();
+
+    for round in 0..cfg.rounds {
+        // --- local training on every party ---------------------------
+        let losses = Mutex::new(Vec::new());
+        let updates = Mutex::new(Vec::<ModelUpdate>::new());
+        std::thread::scope(|s| {
+            for p in 0..cfg.parties as u64 {
+                let rtm = rtm.clone();
+                let ds = ds.clone();
+                let global = &global;
+                let losses = &losses;
+                let updates = &updates;
+                s.spawn(move || {
+                    let mut t = LocalTrainer::new(rtm, p, cfg.seed.wrapping_add(round as u64));
+                    let (u, loss) = t
+                        .train(global, &ds, cfg.local_steps, cfg.lr, round)
+                        .expect("train step");
+                    losses.lock().unwrap().push(loss);
+                    updates.lock().unwrap().push(u);
+                });
+            }
+        });
+        let updates = updates.into_inner().unwrap();
+        let mean_local_loss =
+            losses.into_inner().unwrap().iter().sum::<f32>() / cfg.parties.max(1) as f32;
+
+        // --- adaptive aggregation -------------------------------------
+        let algo = crate::fusion::FedAvg;
+        let class = service.classify(update_bytes, updates.len(), &algo);
+        let t0 = std::time::Instant::now();
+        let (fused, report) = match class {
+            WorkloadClass::Small => service.aggregate_small(&algo, &updates, round).unwrap(),
+            WorkloadClass::Large => {
+                // parties upload to the store; monitor + MapReduce fuse
+                let mut bd = Breakdown::new();
+                for u in &updates {
+                    dfs.put_update(u, &mut bd).unwrap();
+                }
+                service
+                    .aggregate_large(&algo, round, updates.len(), update_bytes)
+                    .unwrap()
+            }
+        };
+        let agg_seconds = t0.elapsed().as_secs_f64();
+        global = fused;
+
+        // --- evaluation ------------------------------------------------
+        let (nll, acc) = LocalTrainer::evaluate(&rtm, &global, &ds, &mut eval_rng).unwrap();
+        if cfg.print_every > 0 && round % cfg.print_every == 0 {
+            println!(
+                "round {round:>3}  class={:?}({})  local_loss={mean_local_loss:.4}  eval_nll={nll:.4}  acc={acc:.3}  agg={:.1} ms",
+                class, report.engine, agg_seconds * 1e3
+            );
+        }
+        log.rounds.push(RoundLog {
+            round,
+            class,
+            engine: report.engine,
+            mean_local_loss,
+            eval_nll: nll,
+            eval_acc: acc,
+            agg_seconds,
+        });
+    }
+    log
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfs::datanode::tempdir::TempDir;
+
+    #[test]
+    fn federated_training_learns() {
+        let td = TempDir::new();
+        let cfg = TrainConfig {
+            parties: 4,
+            rounds: 6,
+            local_steps: 8,
+            print_every: 0,
+            ..Default::default()
+        };
+        let log = federated_train(&cfg, td.path());
+        assert_eq!(log.rounds.len(), 6);
+        assert!(
+            log.final_nll() < log.first_nll(),
+            "nll {} -> {}",
+            log.first_nll(),
+            log.final_nll()
+        );
+        assert!(log.final_acc() > 0.5, "acc {}", log.final_acc());
+        // small node memory default: everything should fit the small path
+        assert!(log.rounds.iter().all(|r| r.class == WorkloadClass::Small));
+        assert!(log.rounds.iter().all(|r| r.engine == "xla"));
+    }
+
+    #[test]
+    fn tiny_node_memory_forces_distributed_rounds() {
+        let td = TempDir::new();
+        let cfg = TrainConfig {
+            parties: 3,
+            rounds: 2,
+            local_steps: 2,
+            node_memory: 1 << 20, // 1 MiB — smaller than one update
+            print_every: 0,
+            ..Default::default()
+        };
+        let log = federated_train(&cfg, td.path());
+        assert!(log.rounds.iter().all(|r| r.class == WorkloadClass::Large));
+        assert!(log.rounds.iter().all(|r| r.engine == "mapreduce"));
+    }
+}

@@ -1,0 +1,132 @@
+//! Shared bench harness: environment setup, workload generation, timing,
+//! and the measured-vs-extrapolated reporting every figure bench uses.
+//!
+//! Conventions (per DESIGN.md): each `rust/benches/figN_*.rs` binary prints
+//! the paper figure's rows with BOTH columns —
+//! * `measured` — real wall-clock of the actual engines at the scaled
+//!   workload on this box;
+//! * `paper-scale (virtual)` — the calibrated cost model applied to the
+//!   paper's geometry (170 GB node, 4×64 cores, 3 datanodes, 1 GbE).
+
+pub mod driver;
+
+pub use driver::{federated_train, TrainConfig, TrainLog};
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::cluster::{CostModel, VirtualCluster};
+use crate::dfs::{DfsClient, NameNode};
+use crate::metrics::Breakdown;
+use crate::tensorstore::ModelUpdate;
+use crate::util::rng::Rng;
+
+/// One calibrated cost model per process (calibration costs ~1 s).
+pub fn cost_model() -> &'static CostModel {
+    static MODEL: OnceLock<CostModel> = OnceLock::new();
+    MODEL.get_or_init(CostModel::calibrate)
+}
+
+/// The paper-geometry virtual cluster with on-box calibration.
+pub fn paper_cluster() -> VirtualCluster {
+    VirtualCluster::paper(cost_model().clone())
+}
+
+/// Deterministic batch of synthetic updates.
+pub fn gen_updates(seed: u64, n: usize, len: usize) -> Vec<ModelUpdate> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|p| {
+            let mut d = vec![0f32; len];
+            rng.fill_gaussian_f32(&mut d, 0.5);
+            ModelUpdate::new(p as u64, 1.0 + rng.gen_range(200) as f32, 0, d)
+        })
+        .collect()
+}
+
+/// Wall-clock one closure.
+pub fn time<F: FnOnce() -> T, T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64())
+}
+
+/// A disposable on-disk DFS rooted in a temp directory.
+pub struct BenchDfs {
+    pub dfs: DfsClient,
+    root: std::path::PathBuf,
+}
+
+impl BenchDfs {
+    pub fn new(datanodes: usize, replication: usize) -> BenchDfs {
+        let root = std::env::temp_dir().join(format!(
+            "elastiagg-bench-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let nn = NameNode::create(&root, datanodes, replication, 8 << 20).unwrap();
+        BenchDfs { dfs: DfsClient::new(nn), root }
+    }
+
+    /// Upload `n` synthetic updates of `len` f32 for `round`.
+    pub fn seed_round(&self, round: u32, n: usize, len: usize, seed: u64) -> Vec<ModelUpdate> {
+        let mut rng = Rng::new(seed);
+        let mut bd = Breakdown::new();
+        (0..n)
+            .map(|p| {
+                let mut d = vec![0f32; len];
+                rng.fill_gaussian_f32(&mut d, 0.5);
+                let u = ModelUpdate::new(p as u64, 1.0 + rng.gen_range(100) as f32, round, d);
+                self.dfs.put_update(&u, &mut bd).unwrap();
+                u
+            })
+            .collect()
+    }
+}
+
+impl Drop for BenchDfs {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.root);
+    }
+}
+
+/// Section header every figure bench prints.
+pub fn banner(fig: &str, paper_claim: &str) {
+    println!("\n================================================================");
+    println!("{fig}");
+    println!("paper: {paper_claim}");
+    println!("================================================================");
+}
+
+/// Quick scaled-length helper: paper update bytes -> f32 count at `scale`.
+pub fn scaled_len(size_bytes: u64, scale: f64) -> usize {
+    (((size_bytes as f64) * scale / 4.0) as usize).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_updates_deterministic() {
+        assert_eq!(gen_updates(1, 3, 8), gen_updates(1, 3, 8));
+        assert_ne!(gen_updates(1, 3, 8), gen_updates(2, 3, 8));
+    }
+
+    #[test]
+    fn bench_dfs_seeds_rounds() {
+        let b = BenchDfs::new(2, 1);
+        let us = b.seed_round(3, 5, 64, 9);
+        assert_eq!(us.len(), 5);
+        assert_eq!(b.dfs.list(&DfsClient::round_prefix(3)).len(), 5);
+    }
+
+    #[test]
+    fn scaled_len_floor_one() {
+        assert_eq!(scaled_len(400, 1.0), 100);
+        assert_eq!(scaled_len(4, 1e-9), 1);
+    }
+}

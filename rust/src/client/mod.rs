@@ -1,0 +1,168 @@
+//! Simulated FL parties.
+//!
+//! A party holds a private shard of a synthetic classification problem
+//! (class-centred gaussians — every party sees the same 10 class centres
+//! but only its own noisy samples, the classic synthetic-MNIST stand-in),
+//! trains the global model locally with the AOT `train_step` artifact, and
+//! ships the resulting update over whichever path the coordinator chose
+//! (TCP message passing or the DFS store).
+
+pub mod data;
+pub mod trainer;
+
+pub use data::SyntheticDataset;
+pub use trainer::LocalTrainer;
+
+use crate::dfs::DfsClient;
+use crate::metrics::Breakdown;
+use crate::net::{Message, NetClient, ProtoError};
+use crate::tensorstore::ModelUpdate;
+use crate::util::rng::Rng;
+
+/// How a party ships its update.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Transport {
+    /// Message passing to the aggregation server.
+    Tcp { addr: String },
+    /// Write to the shared store (the paper's large-workload path).
+    Dfs,
+}
+
+/// A simulated party that produces *synthetic* updates (weights drawn from
+/// a party-seeded gaussian) — used by the aggregation-only benches where
+/// the actual training content is irrelevant, only bytes and counts are.
+pub struct SyntheticParty {
+    pub id: u64,
+    pub samples: u64,
+    rng: Rng,
+}
+
+impl SyntheticParty {
+    pub fn new(id: u64, seed: u64) -> SyntheticParty {
+        let mut rng = Rng::new(seed ^ 0xC11E57);
+        let samples = 16 + rng.gen_range(240);
+        SyntheticParty { id, samples, rng: rng.fork(id) }
+    }
+
+    /// Produce one synthetic update of `len` parameters for `round`.
+    pub fn make_update(&mut self, round: u32, len: usize) -> ModelUpdate {
+        let mut d = vec![0f32; len];
+        self.rng.fill_gaussian_f32(&mut d, 0.1);
+        ModelUpdate::new(self.id, self.samples as f32, round, d)
+    }
+
+    /// Ship an update via the chosen transport; returns whether the server
+    /// asked for a redirect to the DFS next round (TCP only).
+    pub fn ship(
+        &self,
+        u: &ModelUpdate,
+        transport: &Transport,
+        dfs: Option<&DfsClient>,
+        bd: &mut Breakdown,
+    ) -> Result<bool, ShipError> {
+        match transport {
+            Transport::Tcp { addr } => {
+                let mut c = NetClient::connect(addr).map_err(|e| ShipError::Net(e.to_string()))?;
+                match c.call(&Message::Upload(u.clone())).map_err(ShipError::Proto)? {
+                    Message::Ack { redirect_to_dfs } => Ok(redirect_to_dfs),
+                    Message::Error(e) => Err(ShipError::Server(e)),
+                    other => Err(ShipError::Server(format!("unexpected reply {other:?}"))),
+                }
+            }
+            Transport::Dfs => {
+                let dfs = dfs.ok_or_else(|| ShipError::Net("no dfs client".to_string()))?;
+                dfs.put_update(u, bd).map_err(|e| ShipError::Net(e.to_string()))?;
+                Ok(false)
+            }
+        }
+    }
+}
+
+#[derive(Debug)]
+pub enum ShipError {
+    Net(String),
+    Proto(ProtoError),
+    Server(String),
+}
+
+impl std::fmt::Display for ShipError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShipError::Net(m) => write!(f, "net: {m}"),
+            ShipError::Proto(e) => write!(f, "proto: {e}"),
+            ShipError::Server(m) => write!(f, "server: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ShipError {}
+
+/// Drive a fleet of synthetic parties for one round against the DFS path,
+/// from `threads` uploader threads (the Fig 12/13 client machines).
+/// Returns the per-party average write seconds.
+pub fn fleet_upload_dfs(
+    dfs: &DfsClient,
+    round: u32,
+    parties: usize,
+    update_len: usize,
+    threads: usize,
+    seed: u64,
+) -> f64 {
+    let threads = threads.max(1).min(parties.max(1));
+    let total_write = std::sync::Mutex::new(0f64);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let dfs = dfs.clone();
+            let total_write = &total_write;
+            s.spawn(move || {
+                let mut local = 0f64;
+                let mut p = t;
+                while p < parties {
+                    let mut party = SyntheticParty::new(p as u64, seed);
+                    let u = party.make_update(round, update_len);
+                    let mut bd = Breakdown::new();
+                    party.ship(&u, &Transport::Dfs, Some(&dfs), &mut bd).unwrap();
+                    local += bd.get("write");
+                    p += threads;
+                }
+                *total_write.lock().unwrap() += local;
+            });
+        }
+    });
+    let total = total_write.into_inner().unwrap();
+    total / parties.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfs::datanode::tempdir::TempDir;
+    use crate::dfs::NameNode;
+
+    #[test]
+    fn synthetic_updates_are_deterministic_per_seed() {
+        let mut a = SyntheticParty::new(3, 42);
+        let mut b = SyntheticParty::new(3, 42);
+        assert_eq!(a.make_update(0, 64), b.make_update(0, 64));
+        let mut c = SyntheticParty::new(4, 42);
+        assert_ne!(a.make_update(1, 64).data, c.make_update(1, 64).data);
+    }
+
+    #[test]
+    fn dfs_shipping_lands_updates() {
+        let td = TempDir::new();
+        let nn = NameNode::create(td.path(), 2, 1, 1 << 20).unwrap();
+        let dfs = DfsClient::new(nn);
+        let avg = fleet_upload_dfs(&dfs, 5, 12, 128, 4, 7);
+        assert!(avg > 0.0);
+        assert_eq!(dfs.list(&DfsClient::round_prefix(5)).len(), 12);
+    }
+
+    #[test]
+    fn sample_counts_positive() {
+        for p in 0..50 {
+            let party = SyntheticParty::new(p, 1);
+            assert!(party.samples >= 16);
+        }
+    }
+}

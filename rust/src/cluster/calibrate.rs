@@ -1,0 +1,136 @@
+//! Cost-model constants: nominal values + on-box calibration.
+//!
+//! `calibrate()` measures real throughputs with micro-runs of the actual
+//! engines/substrates so virtual-time extrapolations inherit this box's
+//! constants; `nominal()` is a fixed fallback (CI, docs) chosen to be
+//! representative of the paper's Xeon Gold 6226R testbed.
+
+use std::time::Instant;
+
+use crate::dfs::{DfsClient, NameNode};
+use crate::engine::{AggregationEngine, SerialEngine};
+use crate::fusion::FedAvg;
+use crate::metrics::Breakdown;
+use crate::tensorstore::ModelUpdate;
+
+/// Calibrated per-byte costs (bytes/sec unless noted).
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Serial in-memory fusion throughput (weighted-sum bytes/s).
+    pub fuse_bps: f64,
+    /// Amdahl serial fraction of the parallel engine (launch + finalize).
+    pub parallel_serial_frac: f64,
+    /// Per-core thread-launch overhead of the parallel engine (s).
+    pub parallel_launch_s: f64,
+    /// Memory-bandwidth cap on parallel speedup: fusion is a streaming op
+    /// (~0.25 flop/byte), so extra cores only help until the socket's
+    /// bandwidth saturates.  Fitted from the paper's measured Numba gains
+    /// (−36 % @4.6 MB many parties, −39.6 % @ResNet50 900 parties):
+    /// max speedup ≈ 1.65×.
+    pub parallel_bw_cap: f64,
+    /// Party count at which half the bandwidth-capped speedup is reached —
+    /// Numba parallelises the per-party loop, so few parties mean little
+    /// parallel work (the paper: "Numba ... gives a comparable performance
+    /// to Numpy for smaller number of parties").
+    pub parallel_n_half: f64,
+    /// DFS read/write throughput per datanode.
+    pub dfs_read_bps: f64,
+    pub dfs_write_bps: f64,
+    /// Wire-format decode throughput.
+    pub decode_bps: f64,
+    /// Per-task scheduling overhead (Spark task launch ≈ 5–20 ms).
+    pub task_overhead_s: f64,
+    /// Executor container spin-up (paper: 10 containers < 30 s).
+    pub executor_startup_s: f64,
+}
+
+impl CostModel {
+    /// Representative fixed constants (Xeon Gold 6226R class).
+    pub fn nominal() -> CostModel {
+        CostModel {
+            fuse_bps: 2.0e9,
+            parallel_serial_frac: 0.05,
+            parallel_launch_s: 2e-4,
+            parallel_bw_cap: 1.65,
+            parallel_n_half: 150.0,
+            dfs_read_bps: 400e6,
+            dfs_write_bps: 250e6,
+            decode_bps: 1.5e9,
+            task_overhead_s: 0.01,
+            executor_startup_s: 2.5,
+        }
+    }
+
+    /// Decode cost in seconds for `bytes`.
+    pub fn decode_bytes(&self, bytes: f64) -> f64 {
+        bytes / self.decode_bps
+    }
+
+    /// Measure real constants on this box.  ~1 s of micro-runs.
+    pub fn calibrate() -> CostModel {
+        let mut m = CostModel::nominal();
+
+        // Fusion throughput: serial FedAvg over 32 × 1 MiB updates.
+        let len = 256 * 1024; // 1 MiB of f32
+        let updates: Vec<ModelUpdate> = (0..32)
+            .map(|i| ModelUpdate::new(i, 1.0, 0, vec![0.5; len]))
+            .collect();
+        let engine = SerialEngine::unbounded();
+        let mut bd = Breakdown::new();
+        let t0 = Instant::now();
+        let _ = engine.aggregate(&FedAvg, &updates, &mut bd);
+        let dt = t0.elapsed().as_secs_f64().max(1e-6);
+        m.fuse_bps = (32.0 * len as f64 * 4.0) / dt;
+
+        // DFS read/write: 8 × 1 MiB files through a temp store.
+        let root = std::env::temp_dir().join(format!("elastiagg-cal-{}", std::process::id()));
+        if let Ok(nn) = NameNode::create(&root, 1, 1, 8 << 20) {
+            let dfs = DfsClient::new(nn);
+            let payload = vec![7u8; 1 << 20];
+            let t0 = Instant::now();
+            for i in 0..8 {
+                let _ = dfs.write(&format!("/cal/{i}"), &payload);
+            }
+            m.dfs_write_bps = (8.0 * payload.len() as f64) / t0.elapsed().as_secs_f64().max(1e-6);
+            let t0 = Instant::now();
+            for i in 0..8 {
+                let _ = dfs.read(&format!("/cal/{i}"));
+            }
+            m.dfs_read_bps = (8.0 * payload.len() as f64) / t0.elapsed().as_secs_f64().max(1e-6);
+        }
+        let _ = std::fs::remove_dir_all(&root);
+
+        // Decode throughput.
+        let u = ModelUpdate::new(0, 1.0, 0, vec![1.0; 1 << 20]);
+        let buf = u.encode();
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            let _ = ModelUpdate::decode(&buf);
+        }
+        m.decode_bps = (4.0 * buf.len() as f64) / t0.elapsed().as_secs_f64().max(1e-6);
+
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_is_sane() {
+        let m = CostModel::nominal();
+        assert!(m.fuse_bps > 1e8);
+        assert!(m.parallel_serial_frac > 0.0 && m.parallel_serial_frac < 1.0);
+        assert!(m.dfs_read_bps > m.dfs_write_bps / 10.0);
+    }
+
+    #[test]
+    fn calibration_produces_positive_constants() {
+        let m = CostModel::calibrate();
+        assert!(m.fuse_bps > 1e6, "fuse {}", m.fuse_bps);
+        assert!(m.dfs_read_bps > 1e6, "read {}", m.dfs_read_bps);
+        assert!(m.dfs_write_bps > 1e6, "write {}", m.dfs_write_bps);
+        assert!(m.decode_bps > 1e6, "decode {}", m.decode_bps);
+    }
+}

@@ -1,0 +1,292 @@
+//! Virtual-time cluster model.
+//!
+//! This testbed is ONE physical core; the paper's is 4×64-core nodes, 170 GB
+//! aggregator RAM, 3 HDFS datanodes and a 1 GbE client switch.  Everything
+//! *logical* (partitioning, placement, replication, retry, thresholds) runs
+//! for real in this repo; what cannot be measured here is elapsed time at
+//! paper scale.  The cost model closes that gap:
+//!
+//! 1. [`CostModel::calibrate`] measures real per-byte throughputs on this
+//!    box (serial fusion, DFS read/write, wire decode);
+//! 2. the analytic schedulers below ([`VirtualCluster`]) combine those
+//!    constants with a cluster geometry to predict phase times at any
+//!    scale, using the same list-scheduling shape the real scheduler has
+//!    (`ceil(tasks/cores)` waves × per-task time + overheads).
+//!
+//! Every figure bench prints BOTH the real measured small-scale points and
+//! the model's paper-scale extrapolation, labelled as such.
+
+pub mod calibrate;
+
+pub use calibrate::CostModel;
+
+use crate::config::ClusterSpec;
+use crate::metrics::Breakdown;
+
+/// Which single-node engine a virtual run models (Figs 1–3, 5–6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// NumPy baseline: single stream regardless of core count (Fig 3).
+    Serial,
+    /// Numba replacement: parallel across cores with imperfect efficiency.
+    Parallel,
+}
+
+/// Memory-duplication factors of the IBMFL fusion implementations, fitted
+/// from the paper's Fig 1 OOM points at 170 GB with 4.6 MB updates:
+/// FedAvg OOMs at 18 900 parties -> 170 GB / 18 900 ≈ 2.0× the update size
+/// (input list + weighted working copies); IterAvg at 32 400 -> ≈ 1.2×.
+pub const FEDAVG_DUP_FACTOR: f64 = 2.0;
+pub const ITERAVG_DUP_FACTOR: f64 = 1.15;
+
+/// A cluster geometry + calibrated constants; all returned times are
+/// virtual seconds.
+#[derive(Clone, Debug)]
+pub struct VirtualCluster {
+    pub spec: ClusterSpec,
+    pub cost: CostModel,
+}
+
+impl VirtualCluster {
+    pub fn new(spec: ClusterSpec, cost: CostModel) -> VirtualCluster {
+        VirtualCluster { spec, cost }
+    }
+
+    /// Paper-testbed geometry with constants calibrated on this box.
+    pub fn paper(cost: CostModel) -> VirtualCluster {
+        VirtualCluster { spec: ClusterSpec::default(), cost }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.spec.workers * self.spec.cores_per_worker
+    }
+
+    // ---------------------------------------------------------------
+    // Single-node path (Figs 1, 2, 3, 5, 6)
+    // ---------------------------------------------------------------
+
+    /// Max parties a single node supports before OOM (Fig 1/2 ceilings).
+    pub fn single_node_capacity(&self, mem_bytes: u64, update_bytes: u64, dup: f64) -> usize {
+        if update_bytes == 0 {
+            return usize::MAX;
+        }
+        (mem_bytes as f64 / (update_bytes as f64 * dup)) as usize
+    }
+
+    /// Virtual seconds to fuse `n` updates of `update_bytes` on one node.
+    /// `algo_flops` scales arithmetic intensity (FedAvg≈1, IterAvg≈0.8:
+    /// no per-client weight multiply).
+    pub fn single_node_time(
+        &self,
+        update_bytes: u64,
+        n: usize,
+        cores: usize,
+        engine: EngineKind,
+        algo_flops: f64,
+    ) -> f64 {
+        let total = update_bytes as f64 * n as f64 * algo_flops;
+        match engine {
+            EngineKind::Serial => total / self.cost.fuse_bps,
+            EngineKind::Parallel => {
+                // Three effects bound the Numba-style speedup:
+                // 1. Amdahl with the calibrated serial fraction,
+                // 2. the socket's memory-bandwidth ceiling (fusion is a
+                //    streaming op; fitted to the paper's −36/−39.6 %),
+                // 3. parallel-work availability: Numba parallelises the
+                //    per-party loop, so few parties ≈ no gain (the paper:
+                //    "comparable performance to Numpy for smaller number
+                //    of parties").
+                let amdahl = 1.0
+                    / (self.cost.parallel_serial_frac
+                        + (1.0 - self.cost.parallel_serial_frac) / cores as f64);
+                let cap = self.cost.parallel_bw_cap;
+                let work_frac = n as f64 / (n as f64 + self.cost.parallel_n_half);
+                let speedup = 1.0 + (amdahl.min(cap) - 1.0) * work_frac;
+                total / (self.cost.fuse_bps * speedup)
+                    + self.cost.parallel_launch_s * cores as f64
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Distributed path (Figs 7–13)
+    // ---------------------------------------------------------------
+
+    /// Partition count the paper's policy would pick.
+    pub fn partitions(&self, n_files: usize) -> usize {
+        crate::mapreduce::default_partitions(n_files, self.total_cores())
+    }
+
+    /// Virtual phase breakdown for a distributed aggregation of `n`
+    /// updates of `update_bytes` (the Fig 7/9 read/sum/reduce bars).
+    pub fn distributed_breakdown(&self, update_bytes: u64, n: usize, cache: bool) -> Breakdown {
+        let mut bd = Breakdown::new();
+        let parts = self.partitions(n);
+        let cores = self.total_cores().min(parts.max(1));
+        let total_bytes = update_bytes as f64 * n as f64;
+        let waves = (parts as f64 / cores as f64).ceil();
+
+        // read+partition: one full pass over the data from the DFS, spread
+        // over min(parts, cores) concurrent readers but bounded by the
+        // datanodes' aggregate disk bandwidth.
+        let disk_agg = self.cost.dfs_read_bps * self.spec.datanodes as f64;
+        let reader_agg = (self.cost.dfs_read_bps * cores as f64).min(disk_agg);
+        let read = total_bytes / reader_agg
+            + self.cost.decode_bytes(total_bytes) / cores as f64
+            + waves * self.cost.task_overhead_s;
+        bd.add("read_partition", read);
+
+        // sum: count extraction — cached partitions make this almost free,
+        // uncached re-reads the data (the paper's large-model penalty).
+        let sum = if cache {
+            waves * self.cost.task_overhead_s + n as f64 * 1e-7
+        } else {
+            total_bytes / reader_agg + waves * self.cost.task_overhead_s
+        };
+        bd.add("sum", sum);
+
+        // reduce: the weighted-average fold over cores, plus driver combine
+        // of per-partition partials (one update-size buffer per partition).
+        let fold = total_bytes / (self.cost.fuse_bps * cores as f64);
+        let combine = parts as f64 * update_bytes as f64 / self.cost.fuse_bps;
+        let reduce = if cache {
+            fold + combine + waves * self.cost.task_overhead_s
+        } else {
+            // uncached: the reduce pass re-reads from the store
+            total_bytes / reader_agg + fold + combine + waves * self.cost.task_overhead_s
+        };
+        bd.add("reduce", reduce);
+        bd
+    }
+
+    /// Spark-context spin-up (paper §III-D3: <30 s for 10 executors).
+    pub fn executor_startup(&self, executors: usize) -> f64 {
+        self.cost.executor_startup_s * executors as f64
+    }
+
+    /// Fig 12 "average write time": `n` clients push `update_bytes` through
+    /// the shared 1 GbE switch into the replicated store.
+    pub fn client_write_time(&self, update_bytes: u64, n: usize) -> f64 {
+        let per_client = self.spec.client_link_bps;
+        let switch = self.spec.client_link_bps; // 1 GbE aggregate at the switch
+        let store_agg = self.cost.dfs_write_bps * self.spec.datanodes as f64
+            / self.spec.replication as f64;
+        // effective per-client bandwidth under contention
+        let eff = per_client.min(switch / n as f64).min(store_agg / n as f64);
+        update_bytes as f64 / eff
+    }
+
+    /// Party capacity of the distributed path: bounded by HDFS storage,
+    /// not node memory — the scalability headline (Figs 7–11).
+    pub fn distributed_capacity(&self, update_bytes: u64, hdfs_bytes: u64) -> usize {
+        (hdfs_bytes as f64 / (update_bytes as f64 * self.spec.replication as f64)) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vc() -> VirtualCluster {
+        VirtualCluster::paper(CostModel::nominal())
+    }
+
+    #[test]
+    fn capacity_matches_fig1_points() {
+        let v = vc();
+        let fed = v.single_node_capacity(170 << 30, (4.6 * 1024.0 * 1024.0) as u64, FEDAVG_DUP_FACTOR);
+        let iter = v.single_node_capacity(170 << 30, (4.6 * 1024.0 * 1024.0) as u64, ITERAVG_DUP_FACTOR);
+        // paper: 18 900 (fedavg) and 32 400 (iteravg)
+        assert!((17_000..21_000).contains(&fed), "{fed}");
+        assert!((29_000..36_000).contains(&iter), "{iter}");
+    }
+
+    #[test]
+    fn capacity_shrinks_with_model_size() {
+        let v = vc();
+        let big = v.single_node_capacity(170 << 30, 956 << 20, FEDAVG_DUP_FACTOR);
+        // paper: "for the 956 MB model less than 150 clients"
+        assert!(big < 150, "{big}");
+    }
+
+    #[test]
+    fn serial_ignores_cores_parallel_uses_them() {
+        let v = vc();
+        let s8 = v.single_node_time(4 << 20, 1000, 8, EngineKind::Serial, 1.0);
+        let s64 = v.single_node_time(4 << 20, 1000, 64, EngineKind::Serial, 1.0);
+        assert_eq!(s8, s64); // Fig 3
+        let p8 = v.single_node_time(4 << 20, 1000, 8, EngineKind::Parallel, 1.0);
+        let p64 = v.single_node_time(4 << 20, 1000, 64, EngineKind::Parallel, 1.0);
+        // the bandwidth cap flattens 8->64 cores, but parallel beats serial
+        assert!(p8 < s8);
+        assert!(p64 < s64);
+        // at many parties the gain sits in the paper's 30-45% band
+        let gain = 100.0 * (s64 - p64) / s64;
+        assert!((30.0..45.0).contains(&gain), "{gain}");
+    }
+
+    #[test]
+    fn parallel_gain_narrows_for_few_parties() {
+        // Fig 5's shape: large models support few parties -> small gain.
+        let v = vc();
+        let s = v.single_node_time(956 << 20, 91, 64, EngineKind::Serial, 1.0);
+        let p = v.single_node_time(956 << 20, 91, 64, EngineKind::Parallel, 1.0);
+        let gain_large = 100.0 * (s - p) / s;
+        let s2 = v.single_node_time((4.6 * 1048576.0) as u64, 18900, 64, EngineKind::Serial, 1.0);
+        let p2 = v.single_node_time((4.6 * 1048576.0) as u64, 18900, 64, EngineKind::Parallel, 1.0);
+        let gain_small = 100.0 * (s2 - p2) / s2;
+        assert!(gain_small > gain_large + 10.0, "{gain_small} vs {gain_large}");
+    }
+
+    #[test]
+    fn parallel_loses_for_tiny_workloads() {
+        // Numba ≈/> NumPy for small party counts (launch overhead).
+        let v = vc();
+        let s = v.single_node_time(4 << 20, 2, 64, EngineKind::Serial, 1.0);
+        let p = v.single_node_time(4 << 20, 2, 64, EngineKind::Parallel, 1.0);
+        assert!(p > s * 0.8, "parallel should not win big at n=2: {p} vs {s}");
+    }
+
+    #[test]
+    fn distributed_breakdown_phases_scale_with_n() {
+        let v = vc();
+        let small = v.distributed_breakdown(4 << 20, 1_000, true);
+        let big = v.distributed_breakdown(4 << 20, 100_000, true);
+        assert!(big.get("read_partition") > small.get("read_partition"));
+        assert!(big.get("reduce") > small.get("reduce"));
+        assert!(big.total() > 10.0 * small.total());
+    }
+
+    #[test]
+    fn cache_helps_sum_phase() {
+        let v = vc();
+        let cached = v.distributed_breakdown(4 << 20, 10_000, true);
+        let uncached = v.distributed_breakdown(4 << 20, 10_000, false);
+        assert!(cached.get("sum") < uncached.get("sum") / 5.0);
+        assert!(cached.total() < uncached.total());
+    }
+
+    #[test]
+    fn write_time_grows_with_contention() {
+        let v = vc();
+        let few = v.client_write_time(91 << 20, 6);
+        let many = v.client_write_time(91 << 20, 600);
+        assert!(many > few);
+    }
+
+    #[test]
+    fn distributed_capacity_uses_storage_not_memory() {
+        let v = vc();
+        // 2.6 TB HDFS (paper) with 4.6 MB updates, repl 2 -> ~296 k parties
+        let cap = v.distributed_capacity((4.6 * 1024.0 * 1024.0) as u64, 2600u64 << 30);
+        assert!(cap > 100_000, "{cap}"); // covers the paper's 100 k evaluation
+    }
+
+    #[test]
+    fn startup_matches_paper_30s_claim() {
+        let v = vc();
+        let t = v.executor_startup(10);
+        assert!(t <= 30.0, "10 executors must start in <30 s, got {t}");
+        assert!(t >= 5.0);
+    }
+}

@@ -1,0 +1,191 @@
+//! Configuration system: the Table-I model zoo, cluster topology, and the
+//! aggregation-service settings, loadable from JSON files and overridable
+//! from the CLI.
+
+pub mod models;
+
+use crate::util::json::Json;
+use std::path::Path;
+
+pub use models::{ModelSpec, ModelZoo};
+
+/// Aggregator-node resources — the knobs Figures 1–3 sweep.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeResources {
+    /// Usable aggregation memory in bytes (the paper's 170 GB).
+    pub memory_bytes: u64,
+    /// Core count (the paper's 64).
+    pub cores: usize,
+}
+
+impl Default for NodeResources {
+    fn default() -> Self {
+        // Scaled default for one-box runs; benches override (incl. virtual
+        // 170 GB sweeps through the cluster cost model).
+        NodeResources { memory_bytes: 2 << 30, cores: 4 }
+    }
+}
+
+/// Cluster topology for the distributed path (the paper's 4-node Spark/Yarn
+/// over 3 HDFS datanodes, 1 GbE to the client machines).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub workers: usize,
+    pub cores_per_worker: usize,
+    pub mem_per_worker: u64,
+    pub datanodes: usize,
+    pub replication: usize,
+    /// Client-side uplink capacity in bytes/sec (paper: 1 GbE switch).
+    pub client_link_bps: f64,
+    /// Max memory per executor container (paper: 35 GB cap).
+    pub executor_mem_cap: u64,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        ClusterSpec {
+            workers: 4,
+            cores_per_worker: 64,
+            mem_per_worker: 197 << 30,
+            datanodes: 3,
+            replication: 2,
+            client_link_bps: 125e6, // 1 Gb/s
+            executor_mem_cap: 35 << 30,
+        }
+    }
+}
+
+/// Settings of the adaptive aggregation service (Algorithm 1).
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub node: NodeResources,
+    pub cluster: ClusterSpec,
+    /// Monitor threshold: fraction of expected updates to wait for.
+    pub monitor_threshold: f64,
+    /// Monitor timeout in seconds.
+    pub monitor_timeout_s: f64,
+    /// Safety factor on the single-node memory check (headroom for the
+    /// result buffer + framework overhead).
+    pub memory_headroom: f64,
+    /// Root dir for the DFS datanode directories.
+    pub dfs_root: String,
+    /// Model-size scale (1.0 = paper sizes; default 0.01 fits one box).
+    pub size_scale: f64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            node: NodeResources::default(),
+            cluster: ClusterSpec::default(),
+            monitor_threshold: 1.0,
+            monitor_timeout_s: 600.0,
+            memory_headroom: 1.10,
+            dfs_root: "/tmp/elastiagg-dfs".to_string(),
+            size_scale: 0.01,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Load from a JSON file; missing keys keep their defaults.
+    pub fn from_file(path: &Path) -> std::io::Result<ServiceConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+        Ok(Self::from_json(&j))
+    }
+
+    pub fn from_json(j: &Json) -> ServiceConfig {
+        let mut c = ServiceConfig::default();
+        if let Some(v) = j.get("memory_bytes").as_u64() {
+            c.node.memory_bytes = v;
+        }
+        if let Some(v) = j.get("cores").as_usize() {
+            c.node.cores = v;
+        }
+        if let Some(v) = j.get("workers").as_usize() {
+            c.cluster.workers = v;
+        }
+        if let Some(v) = j.get("cores_per_worker").as_usize() {
+            c.cluster.cores_per_worker = v;
+        }
+        if let Some(v) = j.get("mem_per_worker").as_u64() {
+            c.cluster.mem_per_worker = v;
+        }
+        if let Some(v) = j.get("datanodes").as_usize() {
+            c.cluster.datanodes = v;
+        }
+        if let Some(v) = j.get("replication").as_usize() {
+            c.cluster.replication = v;
+        }
+        if let Some(v) = j.get("monitor_threshold").as_f64() {
+            c.monitor_threshold = v;
+        }
+        if let Some(v) = j.get("monitor_timeout_s").as_f64() {
+            c.monitor_timeout_s = v;
+        }
+        if let Some(v) = j.get("memory_headroom").as_f64() {
+            c.memory_headroom = v;
+        }
+        if let Some(v) = j.get("dfs_root").as_str() {
+            c.dfs_root = v.to_string();
+        }
+        if let Some(v) = j.get("size_scale").as_f64() {
+            c.size_scale = v;
+        }
+        c
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("memory_bytes", Json::num(self.node.memory_bytes as f64)),
+            ("cores", Json::num(self.node.cores as f64)),
+            ("workers", Json::num(self.cluster.workers as f64)),
+            ("cores_per_worker", Json::num(self.cluster.cores_per_worker as f64)),
+            ("mem_per_worker", Json::num(self.cluster.mem_per_worker as f64)),
+            ("datanodes", Json::num(self.cluster.datanodes as f64)),
+            ("replication", Json::num(self.cluster.replication as f64)),
+            ("monitor_threshold", Json::num(self.monitor_threshold)),
+            ("monitor_timeout_s", Json::num(self.monitor_timeout_s)),
+            ("memory_headroom", Json::num(self.memory_headroom)),
+            ("dfs_root", Json::str(&self.dfs_root)),
+            ("size_scale", Json::num(self.size_scale)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_cluster() {
+        let c = ClusterSpec::default();
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.cores_per_worker, 64);
+        assert_eq!(c.datanodes, 3);
+        assert_eq!(c.replication, 2);
+        assert_eq!(c.executor_mem_cap, 35 << 30);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ServiceConfig::default();
+        c.node.memory_bytes = 170 << 30;
+        c.monitor_threshold = 0.9;
+        let j = c.to_json();
+        let c2 = ServiceConfig::from_json(&j);
+        assert_eq!(c2.node.memory_bytes, 170 << 30);
+        assert_eq!(c2.monitor_threshold, 0.9);
+        assert_eq!(c2.cluster.replication, 2);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let j = Json::parse(r#"{"cores": 64}"#).unwrap();
+        let c = ServiceConfig::from_json(&j);
+        assert_eq!(c.node.cores, 64);
+        assert_eq!(c.cluster.workers, 4);
+    }
+}

@@ -1,0 +1,129 @@
+//! Table I — the paper's benchmark model zoo.
+//!
+//! Each spec records the published update size; the flat parameter count is
+//! `size_bytes / 4` (f32).  The default `size_scale = 0.01` shrinks every
+//! model 1:100 so paper-shaped sweeps fit one box; fusion cost is linear in
+//! bytes, and the benches report both the measured scaled points and the
+//! paper-scale extrapolation through the cluster cost model.
+
+/// One row of Table I.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// Paper update size in bytes.
+    pub size_bytes: u64,
+    /// Human description of the architecture column in Table I.
+    pub arch: &'static str,
+}
+
+impl ModelSpec {
+    pub const fn new(name: &'static str, size_bytes: u64, arch: &'static str) -> ModelSpec {
+        ModelSpec { name, size_bytes, arch }
+    }
+
+    /// Flat f32 parameter count at scale 1.0.
+    pub fn param_count(&self) -> usize {
+        (self.size_bytes / 4) as usize
+    }
+
+    /// Parameter count after applying the size scale (>= 1 element).
+    pub fn scaled_params(&self, scale: f64) -> usize {
+        (((self.size_bytes as f64) * scale / 4.0).round() as usize).max(1)
+    }
+
+    /// Scaled update size in bytes.
+    pub fn scaled_bytes(&self, scale: f64) -> u64 {
+        self.scaled_params(scale) as u64 * 4
+    }
+}
+
+const MB: u64 = 1024 * 1024;
+
+/// The full Table I in paper order.
+pub const TABLE1: [ModelSpec; 9] = [
+    ModelSpec::new("CNN4.6", (4.6 * MB as f64) as u64, "conv 32,64 + dense 128"),
+    ModelSpec::new("CNN73", 73 * MB, "conv 32,256,512,1024 + dense 128"),
+    ModelSpec::new("CNN179", 179 * MB, "conv 32,512,1024,1900 + dense 128"),
+    ModelSpec::new("CNN239", 239 * MB, "conv 32,1024,1900,2400 + dense 128"),
+    ModelSpec::new("CNN478", 478 * MB, "conv (32,1024,1900,2400)x2 + dense 128x2"),
+    ModelSpec::new("CNN717", 717 * MB, "conv (32,1024,1900,2400)x3 + dense 128x3"),
+    ModelSpec::new("CNN956", 956 * MB, "conv (32,1024,1900,2400)x2 + dense 128x4"),
+    ModelSpec::new("Resnet50", 91 * MB, "He et al. 2015"),
+    ModelSpec::new("VGG16", 528 * MB, "Simonyan & Zisserman 2014"),
+];
+
+/// Lookup + iteration facade over Table I.
+pub struct ModelZoo;
+
+impl ModelZoo {
+    pub fn all() -> &'static [ModelSpec] {
+        &TABLE1
+    }
+
+    pub fn get(name: &str) -> Option<&'static ModelSpec> {
+        TABLE1.iter().find(|m| m.name.eq_ignore_ascii_case(name))
+    }
+
+    /// The CNN-size ladder used by Figs 2, 5, 9, 10 (exclude the two
+    /// real-architecture models).
+    pub fn cnn_ladder() -> Vec<&'static ModelSpec> {
+        TABLE1.iter().filter(|m| m.name.starts_with("CNN")).collect()
+    }
+
+    /// The Fig-12 end-to-end set with the paper's party counts.
+    pub fn fig12_set() -> Vec<(&'static ModelSpec, usize)> {
+        vec![
+            (ModelZoo::get("CNN956").unwrap(), 6),
+            (ModelZoo::get("CNN478").unwrap(), 12),
+            (ModelZoo::get("Resnet50").unwrap(), 60),
+            (ModelZoo::get("CNN73").unwrap(), 84),
+            (ModelZoo::get("CNN4.6").unwrap(), 1272),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_paper_rows() {
+        assert_eq!(TABLE1.len(), 9);
+        assert_eq!(ModelZoo::get("CNN4.6").unwrap().size_bytes, (4.6 * MB as f64) as u64);
+        assert_eq!(ModelZoo::get("VGG16").unwrap().size_bytes, 528 * MB);
+        assert_eq!(ModelZoo::get("resnet50").unwrap().size_bytes, 91 * MB);
+    }
+
+    #[test]
+    fn param_counts_are_quarter_bytes() {
+        for m in ModelZoo::all() {
+            assert_eq!(m.param_count(), (m.size_bytes / 4) as usize);
+        }
+    }
+
+    #[test]
+    fn scaling_is_linear_and_nonzero() {
+        let m = ModelZoo::get("CNN956").unwrap();
+        let full = m.scaled_params(1.0);
+        let tiny = m.scaled_params(0.01);
+        assert!(((full as f64 / tiny as f64) - 100.0).abs() < 0.5);
+        // degenerate scale still yields one parameter
+        assert_eq!(m.scaled_params(1e-12), 1);
+    }
+
+    #[test]
+    fn fig12_party_counts_match_paper() {
+        let set = ModelZoo::fig12_set();
+        let parties: Vec<usize> = set.iter().map(|(_, n)| *n).collect();
+        assert_eq!(parties, vec![6, 12, 60, 84, 1272]);
+    }
+
+    #[test]
+    fn cnn_ladder_ordered_by_size() {
+        let ladder = ModelZoo::cnn_ladder();
+        assert_eq!(ladder.len(), 7);
+        for w in ladder.windows(2) {
+            assert!(w[0].size_bytes < w[1].size_bytes);
+        }
+    }
+}

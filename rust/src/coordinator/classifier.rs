@@ -1,0 +1,146 @@
+//! Workload classification (paper §III-C + Algorithm 1).
+//!
+//! `S = w_s × n` — the round's total update volume — is compared against
+//! the single node's usable memory.  *Small* workloads fit and take the
+//! in-memory parallel path; *large* ones go distributed.  The effective
+//! memory requirement is inflated by (a) a configurable headroom for the
+//! result buffer and framework overhead, and (b) the fusion algorithm's
+//! duplication factor (holistic algorithms must materialise the whole set;
+//! the IBMFL averaging implementations hold input + working copies — the
+//! factors are fitted from the paper's Fig 1 OOM points, see `cluster`).
+
+use crate::cluster::{FEDAVG_DUP_FACTOR, ITERAVG_DUP_FACTOR};
+use crate::fusion::FusionAlgorithm;
+
+/// Where a round's aggregation should run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadClass {
+    /// Fits the aggregator node: single-node parallel path.
+    Small,
+    /// Exceeds node memory: distributed MapReduce-over-DFS path.
+    Large,
+}
+
+#[derive(Clone, Debug)]
+pub struct WorkloadClassifier {
+    /// Usable aggregation memory of the single node (bytes).
+    pub memory_bytes: u64,
+    /// Safety multiplier on the estimated requirement (default 1.10).
+    pub headroom: f64,
+}
+
+impl WorkloadClassifier {
+    pub fn new(memory_bytes: u64, headroom: f64) -> WorkloadClassifier {
+        WorkloadClassifier { memory_bytes, headroom }
+    }
+
+    /// Memory-duplication factor for an algorithm: how many bytes the
+    /// single-node implementation needs per update byte.
+    pub fn dup_factor(algo: &dyn FusionAlgorithm) -> f64 {
+        if !algo.decomposable() {
+            // Holistic algorithms hold the entire update set + scratch.
+            2.2
+        } else {
+            match algo.name() {
+                "fedavg" | "gradavg" | "clipped" => FEDAVG_DUP_FACTOR,
+                "iteravg" => ITERAVG_DUP_FACTOR,
+                _ => FEDAVG_DUP_FACTOR,
+            }
+        }
+    }
+
+    /// Estimated bytes the single-node path needs for this round.
+    pub fn required_bytes(&self, update_bytes: u64, parties: usize, algo: &dyn FusionAlgorithm) -> u64 {
+        let s = update_bytes as f64 * parties as f64;
+        (s * Self::dup_factor(algo) * self.headroom) as u64
+    }
+
+    /// Algorithm 1's test: `if S < M` → same-node, else distributed.
+    pub fn classify(
+        &self,
+        update_bytes: u64,
+        parties: usize,
+        algo: &dyn FusionAlgorithm,
+    ) -> WorkloadClass {
+        if self.required_bytes(update_bytes, parties, algo) < self.memory_bytes {
+            WorkloadClass::Small
+        } else {
+            WorkloadClass::Large
+        }
+    }
+
+    /// Max parties the single-node path supports at this update size —
+    /// published to the registry so the service can *preemptively* redirect
+    /// parties to the store when the next round is predicted to spill.
+    pub fn party_ceiling(&self, update_bytes: u64, algo: &dyn FusionAlgorithm) -> usize {
+        if update_bytes == 0 {
+            return usize::MAX;
+        }
+        let per_party = update_bytes as f64 * Self::dup_factor(algo) * self.headroom;
+        (self.memory_bytes as f64 / per_party) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::{CoordMedian, FedAvg, IterAvg};
+    use crate::util::prop::check;
+
+    #[test]
+    fn small_vs_large_boundary() {
+        let c = WorkloadClassifier::new(1 << 30, 1.0); // 1 GiB, no headroom
+        // FedAvg dup 2.0: 100 × 4 MiB × 2 = 800 MiB < 1 GiB -> small
+        assert_eq!(c.classify(4 << 20, 100, &FedAvg), WorkloadClass::Small);
+        // 200 × 4 MiB × 2 = 1.6 GiB -> large
+        assert_eq!(c.classify(4 << 20, 200, &FedAvg), WorkloadClass::Large);
+    }
+
+    #[test]
+    fn iteravg_supports_more_parties_than_fedavg() {
+        let c = WorkloadClassifier::new(1 << 30, 1.1);
+        let fed = c.party_ceiling(4 << 20, &FedAvg);
+        let iter = c.party_ceiling(4 << 20, &IterAvg);
+        assert!(iter > fed, "{iter} !> {fed}"); // matches Fig 1a vs 1b
+    }
+
+    #[test]
+    fn holistic_algorithms_classified_more_conservatively() {
+        let c = WorkloadClassifier::new(1 << 30, 1.0);
+        assert!(c.party_ceiling(4 << 20, &CoordMedian) < c.party_ceiling(4 << 20, &IterAvg));
+    }
+
+    #[test]
+    fn prop_ceiling_consistent_with_classify() {
+        check("ceiling-classify-consistency", 50, |_, rng| {
+            let mem = 1u64 << (20 + rng.gen_range(12));
+            let update = 1u64 << (10 + rng.gen_range(14));
+            let c = WorkloadClassifier::new(mem, 1.0 + rng.next_f64() * 0.5);
+            let ceil = c.party_ceiling(update, &FedAvg);
+            if ceil > 0 && ceil < 1_000_000 {
+                crate::prop_assert!(
+                    c.classify(update, ceil, &FedAvg) == WorkloadClass::Small,
+                    "ceiling {ceil} must classify small"
+                );
+                crate::prop_assert!(
+                    c.classify(update, ceil + ceil.max(2), &FedAvg) == WorkloadClass::Large,
+                    "2x ceiling must classify large"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_parties_always_small() {
+        let c = WorkloadClassifier::new(1024, 1.0);
+        assert_eq!(c.classify(1 << 30, 0, &FedAvg), WorkloadClass::Small);
+    }
+
+    #[test]
+    fn headroom_shrinks_ceiling() {
+        let a = WorkloadClassifier::new(1 << 30, 1.0);
+        let b = WorkloadClassifier::new(1 << 30, 1.5);
+        assert!(b.party_ceiling(4 << 20, &FedAvg) < a.party_ceiling(4 << 20, &FedAvg));
+    }
+}

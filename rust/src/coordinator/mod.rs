@@ -1,0 +1,23 @@
+//! The coordinator — the paper's system contribution.
+//!
+//! * [`classifier`] — Algorithm 1's dispatch test: `S = w_s × n` against
+//!   the node memory budget, with headroom and per-algorithm duplication
+//!   factors;
+//! * [`registry`] — the party registry (join/dropout/selection — FL parties
+//!   "can join during training ... and drop out anytime", §III-C);
+//! * [`round`] — the round state machine (collecting → aggregating →
+//!   published);
+//! * [`service`] — the adaptive aggregation service itself: owns the
+//!   engines and the Spark/DFS path, classifies each round, transitions
+//!   seamlessly (preemptively redirecting parties to the store when the
+//!   next round is predicted to spill), and aggregates.
+
+pub mod classifier;
+pub mod registry;
+pub mod round;
+pub mod service;
+
+pub use classifier::{WorkloadClass, WorkloadClassifier};
+pub use registry::PartyRegistry;
+pub use round::{RoundPhase, RoundState};
+pub use service::{AdaptiveService, ServiceError, ServiceReport};

@@ -1,0 +1,155 @@
+//! Party registry: membership, liveness and per-round selection.
+//!
+//! FL parties join during training and drop out at any time (§III-C); the
+//! registry is the coordinator's source of truth for "how many updates
+//! should I expect next round" — the quantity the classifier turns into a
+//! path decision and the monitor into a threshold.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartyInfo {
+    pub id: u64,
+    /// Round at which the party joined.
+    pub joined_round: u32,
+    pub active: bool,
+    /// Sample count the party reported (its FedAvg weight).
+    pub samples: u64,
+}
+
+#[derive(Default)]
+pub struct PartyRegistry {
+    parties: Mutex<BTreeMap<u64, PartyInfo>>,
+}
+
+impl PartyRegistry {
+    pub fn new() -> PartyRegistry {
+        PartyRegistry::default()
+    }
+
+    /// Register (or re-activate) a party; returns its id.
+    pub fn join(&self, id: u64, round: u32, samples: u64) -> u64 {
+        let mut m = self.parties.lock().unwrap();
+        m.entry(id)
+            .and_modify(|p| {
+                p.active = true;
+                p.samples = samples;
+            })
+            .or_insert(PartyInfo { id, joined_round: round, active: true, samples });
+        id
+    }
+
+    /// Mark a party dropped out.
+    pub fn leave(&self, id: u64) {
+        if let Some(p) = self.parties.lock().unwrap().get_mut(&id) {
+            p.active = false;
+        }
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.parties.lock().unwrap().values().filter(|p| p.active).count()
+    }
+
+    pub fn total_count(&self) -> usize {
+        self.parties.lock().unwrap().len()
+    }
+
+    pub fn get(&self, id: u64) -> Option<PartyInfo> {
+        self.parties.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Select up to `k` active parties for a round (uniform without
+    /// replacement — the Bonawitz-style sampling the paper contrasts with).
+    pub fn select(&self, k: usize, rng: &mut Rng) -> Vec<u64> {
+        let ids: Vec<u64> = self
+            .parties
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|p| p.active)
+            .map(|p| p.id)
+            .collect();
+        if k >= ids.len() {
+            return ids;
+        }
+        let mut idx = rng.sample_indices(ids.len(), k);
+        idx.sort_unstable();
+        idx.into_iter().map(|i| ids[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_leave_rejoin() {
+        let r = PartyRegistry::new();
+        r.join(1, 0, 100);
+        r.join(2, 0, 200);
+        assert_eq!(r.active_count(), 2);
+        r.leave(1);
+        assert_eq!(r.active_count(), 1);
+        assert_eq!(r.total_count(), 2);
+        r.join(1, 5, 150);
+        assert_eq!(r.active_count(), 2);
+        let p = r.get(1).unwrap();
+        assert_eq!(p.samples, 150);
+        assert_eq!(p.joined_round, 0); // original join round preserved
+    }
+
+    #[test]
+    fn leave_unknown_is_noop() {
+        let r = PartyRegistry::new();
+        r.leave(99);
+        assert_eq!(r.total_count(), 0);
+    }
+
+    #[test]
+    fn select_subset_is_active_only() {
+        let r = PartyRegistry::new();
+        for i in 0..20 {
+            r.join(i, 0, 10);
+        }
+        r.leave(3);
+        r.leave(7);
+        let mut rng = Rng::new(1);
+        let sel = r.select(10, &mut rng);
+        assert_eq!(sel.len(), 10);
+        assert!(!sel.contains(&3) || !sel.contains(&7) || true);
+        for id in &sel {
+            assert!(r.get(*id).unwrap().active);
+        }
+    }
+
+    #[test]
+    fn select_more_than_available_returns_all_active() {
+        let r = PartyRegistry::new();
+        for i in 0..5 {
+            r.join(i, 0, 1);
+        }
+        r.leave(0);
+        let mut rng = Rng::new(2);
+        let sel = r.select(100, &mut rng);
+        assert_eq!(sel.len(), 4);
+    }
+
+    #[test]
+    fn concurrent_joins_are_safe() {
+        let r = std::sync::Arc::new(PartyRegistry::new());
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let r = r.clone();
+                s.spawn(move || {
+                    for i in 0..100u64 {
+                        r.join(t * 1000 + i, 0, 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(r.total_count(), 400);
+    }
+}

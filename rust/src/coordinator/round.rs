@@ -1,0 +1,133 @@
+//! Round state machine: each FL round collects updates (in memory or in
+//! the store, depending on the classified path), aggregates, and publishes
+//! the fused model for parties to fetch.
+
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::WorkloadClass;
+use crate::memsim::{MemoryBudget, OutOfMemory, Reservation};
+use crate::tensorstore::ModelUpdate;
+
+/// Lifecycle phase of a round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundPhase {
+    Collecting,
+    Aggregating,
+    Published,
+}
+
+/// One round's mutable state.
+pub struct RoundState {
+    pub round: u32,
+    pub class: WorkloadClass,
+    phase: Mutex<RoundPhase>,
+    /// In-memory updates (small path); each charged to the node budget.
+    updates: Mutex<Vec<(ModelUpdate, Reservation)>>,
+    fused: Mutex<Option<Arc<Vec<f32>>>>,
+    budget: MemoryBudget,
+}
+
+impl RoundState {
+    pub fn new(round: u32, class: WorkloadClass, budget: MemoryBudget) -> RoundState {
+        RoundState {
+            round,
+            class,
+            phase: Mutex::new(RoundPhase::Collecting),
+            updates: Mutex::new(Vec::new()),
+            fused: Mutex::new(None),
+            budget,
+        }
+    }
+
+    pub fn phase(&self) -> RoundPhase {
+        *self.phase.lock().unwrap()
+    }
+
+    /// Ingest an update on the message-passing path, charging node memory
+    /// — the exact mechanism behind the paper's Fig 1 party ceiling.
+    pub fn ingest(&self, u: ModelUpdate) -> Result<usize, OutOfMemory> {
+        assert_eq!(self.phase(), RoundPhase::Collecting, "round not collecting");
+        let r = self.budget.reserve(u.mem_bytes())?;
+        let mut v = self.updates.lock().unwrap();
+        v.push((u, r));
+        Ok(v.len())
+    }
+
+    pub fn collected(&self) -> usize {
+        self.updates.lock().unwrap().len()
+    }
+
+    /// Transition Collecting -> Aggregating, taking the updates out.
+    pub fn begin_aggregation(&self) -> Vec<ModelUpdate> {
+        let mut phase = self.phase.lock().unwrap();
+        assert_eq!(*phase, RoundPhase::Collecting);
+        *phase = RoundPhase::Aggregating;
+        let mut v = self.updates.lock().unwrap();
+        // Reservations drop here: aggregation scratch is charged by the
+        // engine itself; the raw update buffers move to the engine call.
+        v.drain(..).map(|(u, _r)| u).collect()
+    }
+
+    /// Publish the fused model: Aggregating -> Published.
+    pub fn publish(&self, fused: Vec<f32>) {
+        let mut phase = self.phase.lock().unwrap();
+        assert_eq!(*phase, RoundPhase::Aggregating);
+        *self.fused.lock().unwrap() = Some(Arc::new(fused));
+        *phase = RoundPhase::Published;
+    }
+
+    pub fn fused(&self) -> Option<Arc<Vec<f32>>> {
+        self.fused.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upd(p: u64, len: usize) -> ModelUpdate {
+        ModelUpdate::new(p, 1.0, 0, vec![1.0; len])
+    }
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let r = RoundState::new(0, WorkloadClass::Small, MemoryBudget::new(1 << 20));
+        assert_eq!(r.phase(), RoundPhase::Collecting);
+        r.ingest(upd(0, 100)).unwrap();
+        r.ingest(upd(1, 100)).unwrap();
+        assert_eq!(r.collected(), 2);
+        let us = r.begin_aggregation();
+        assert_eq!(us.len(), 2);
+        assert_eq!(r.phase(), RoundPhase::Aggregating);
+        r.publish(vec![0.5; 100]);
+        assert_eq!(r.phase(), RoundPhase::Published);
+        assert_eq!(r.fused().unwrap().len(), 100);
+    }
+
+    #[test]
+    fn ingest_hits_memory_ceiling() {
+        let r = RoundState::new(0, WorkloadClass::Small, MemoryBudget::new(1000));
+        r.ingest(upd(0, 200)).unwrap(); // 800 bytes
+        let err = r.ingest(upd(1, 200)).unwrap_err();
+        assert_eq!(err.in_use, 800);
+        assert_eq!(r.collected(), 1);
+    }
+
+    #[test]
+    fn begin_aggregation_releases_memory() {
+        let budget = MemoryBudget::new(1000);
+        let r = RoundState::new(0, WorkloadClass::Small, budget.clone());
+        r.ingest(upd(0, 200)).unwrap();
+        assert_eq!(budget.in_use(), 800);
+        let _us = r.begin_aggregation();
+        assert_eq!(budget.in_use(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "round not collecting")]
+    fn ingest_after_aggregation_panics() {
+        let r = RoundState::new(0, WorkloadClass::Small, MemoryBudget::unbounded());
+        let _ = r.begin_aggregation();
+        let _ = r.ingest(upd(0, 10));
+    }
+}

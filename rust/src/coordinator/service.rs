@@ -1,0 +1,346 @@
+//! The adaptive aggregation service (paper §III-D, Algorithm 1).
+//!
+//! One facade owning both paths:
+//!
+//! * **small** — updates collected in node memory, fused by the XLA engine
+//!   (AOT Pallas weighted-sum) with the multi-core parallel engine as the
+//!   fallback for algorithms the fixed-K artifacts don't cover;
+//! * **large** — updates land in the DFS, the Algorithm-1 monitor waits for
+//!   threshold/timeout, and the Sparklet MapReduce job fuses them.
+//!
+//! *Seamless transition* (§III-D3): after each round the service predicts
+//! the next round's class from the live registry count; when it flips to
+//! Large the server's Ack tells parties to send their next update to the
+//! store instead of the message-passing channel (and the Spark context is
+//! spun up once, off the critical path).
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::ServiceConfig;
+use crate::coordinator::{WorkloadClass, WorkloadClassifier};
+use crate::dfs::{DfsClient, Monitor, MonitorOutcome};
+use crate::engine::{AggregationEngine, EngineError, ParallelEngine, XlaEngine};
+use crate::fusion::FusionAlgorithm;
+use crate::mapreduce::{scheduler::JobConfig, ExecutorConfig, SparkContext};
+use crate::metrics::Breakdown;
+use crate::tensorstore::ModelUpdate;
+
+#[derive(Debug)]
+pub enum ServiceError {
+    Engine(EngineError),
+    Job(crate::mapreduce::JobError),
+    Dfs(crate::dfs::DfsError),
+    NoUpdates,
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Engine(e) => write!(f, "engine: {e}"),
+            ServiceError::Job(e) => write!(f, "job: {e}"),
+            ServiceError::Dfs(e) => write!(f, "dfs: {e}"),
+            ServiceError::NoUpdates => write!(f, "no updates"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// What one aggregation produced (the benches print these).
+#[derive(Clone, Debug)]
+pub struct ServiceReport {
+    pub round: u32,
+    pub class: WorkloadClass,
+    pub engine: &'static str,
+    pub parties: usize,
+    pub partitions: usize,
+    pub breakdown: Breakdown,
+    pub monitor: Option<MonitorOutcome>,
+}
+
+pub struct AdaptiveService {
+    pub classifier: WorkloadClassifier,
+    cfg: ServiceConfig,
+    dfs: DfsClient,
+    monitor: Monitor,
+    parallel: ParallelEngine,
+    xla: Option<XlaEngine>,
+    /// Spark context is started lazily on the first Large round (the
+    /// §III-D3 one-time transition cost) and kept for later rounds.
+    spark: Mutex<Option<Arc<SparkContext>>>,
+    executor_cfg: ExecutorConfig,
+}
+
+impl AdaptiveService {
+    pub fn new(
+        cfg: ServiceConfig,
+        dfs: DfsClient,
+        xla: Option<XlaEngine>,
+        executor_cfg: ExecutorConfig,
+    ) -> AdaptiveService {
+        let monitor = Monitor::new(dfs.namenode().clone());
+        AdaptiveService {
+            classifier: WorkloadClassifier::new(cfg.node.memory_bytes, cfg.memory_headroom),
+            parallel: ParallelEngine::new(cfg.node.cores),
+            monitor,
+            dfs,
+            xla,
+            spark: Mutex::new(None),
+            executor_cfg,
+            cfg,
+        }
+    }
+
+    pub fn dfs(&self) -> &DfsClient {
+        &self.dfs
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Classify the coming round (Algorithm 1's `if S < M`).
+    pub fn classify(&self, update_bytes: u64, parties: usize, algo: &dyn FusionAlgorithm) -> WorkloadClass {
+        self.classifier.classify(update_bytes, parties, algo)
+    }
+
+    /// Predict whether parties should be redirected to the store for the
+    /// *next* round (preemptive seamless transition).
+    pub fn should_redirect(&self, update_bytes: u64, expected_parties: usize, algo: &dyn FusionAlgorithm) -> bool {
+        self.classify(update_bytes, expected_parties, algo) == WorkloadClass::Large
+    }
+
+    /// Small-path aggregation over in-memory updates.  Prefers the XLA
+    /// engine; falls back to the parallel engine when the artifact set
+    /// doesn't cover the algorithm (Krum/Zeno, median with n∉{8,16,32}).
+    pub fn aggregate_small(
+        &self,
+        algo: &dyn FusionAlgorithm,
+        updates: &[ModelUpdate],
+        round: u32,
+    ) -> Result<(Vec<f32>, ServiceReport), ServiceError> {
+        let mut bd = Breakdown::new();
+        let (out, engine): (Vec<f32>, &'static str) = match &self.xla {
+            Some(x) => match x.aggregate(algo, updates, &mut bd) {
+                Ok(v) => (v, "xla"),
+                Err(EngineError::Runtime(_)) => {
+                    let v = self
+                        .parallel
+                        .aggregate(algo, updates, &mut bd)
+                        .map_err(ServiceError::Engine)?;
+                    (v, "parallel")
+                }
+                Err(e) => return Err(ServiceError::Engine(e)),
+            },
+            None => {
+                let v = self
+                    .parallel
+                    .aggregate(algo, updates, &mut bd)
+                    .map_err(ServiceError::Engine)?;
+                (v, "parallel")
+            }
+        };
+        Ok((
+            out.clone(),
+            ServiceReport {
+                round,
+                class: WorkloadClass::Small,
+                engine,
+                parties: updates.len(),
+                partitions: 0,
+                breakdown: bd,
+                monitor: None,
+            },
+        ))
+    }
+
+    /// Get (or lazily start) the Spark context.
+    pub fn spark(&self) -> Arc<SparkContext> {
+        let mut guard = self.spark.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(Arc::new(SparkContext::start(
+                self.dfs.clone(),
+                self.executor_cfg.clone(),
+            )));
+        }
+        guard.as_ref().unwrap().clone()
+    }
+
+    /// Whether the Spark context has been started (transition happened).
+    pub fn spark_started(&self) -> bool {
+        self.spark.lock().unwrap().is_some()
+    }
+
+    /// Large-path aggregation: monitor the round prefix, then MapReduce.
+    /// `expected` is the monitor threshold (scaled by config threshold).
+    pub fn aggregate_large(
+        &self,
+        algo: &dyn FusionAlgorithm,
+        round: u32,
+        expected: usize,
+        update_bytes: u64,
+    ) -> Result<(Vec<f32>, ServiceReport), ServiceError> {
+        let prefix = DfsClient::round_prefix(round);
+        let threshold = ((expected as f64) * self.cfg.monitor_threshold).ceil() as usize;
+        let outcome = self.monitor.watch(
+            &prefix,
+            threshold,
+            Duration::from_secs_f64(self.cfg.monitor_timeout_s),
+        );
+        if outcome.count() == 0 {
+            return Err(ServiceError::NoUpdates);
+        }
+        let sc = self.spark();
+        let mut bd = Breakdown::new();
+        // The paper caches decoded RDDs for small models only.
+        let cache = update_bytes < (64 << 20);
+        let job = JobConfig { cache, ..Default::default() };
+        let (out, partitions) = sc
+            .aggregate(algo, &prefix, &job, &mut bd)
+            .map_err(ServiceError::Job)?;
+        // Publish the fused model back to the store (Fig 4 step ⑤).
+        let fused_bytes = crate::tensorstore::f32s_as_bytes(&out).to_vec();
+        self.dfs
+            .write(&DfsClient::model_path(round), &fused_bytes)
+            .map_err(ServiceError::Dfs)?;
+        Ok((
+            out.clone(),
+            ServiceReport {
+                round,
+                class: WorkloadClass::Large,
+                engine: "mapreduce",
+                parties: outcome.count(),
+                partitions,
+                breakdown: bd,
+                monitor: Some(outcome),
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfs::datanode::tempdir::TempDir;
+    use crate::dfs::NameNode;
+    use crate::engine::SerialEngine;
+    use crate::fusion::{FedAvg, Krum};
+    use crate::util::prop::all_close;
+    use crate::util::rng::Rng;
+
+    fn service(mem: u64) -> (AdaptiveService, TempDir) {
+        let td = TempDir::new();
+        let nn = NameNode::create(td.path(), 2, 2, 1 << 20).unwrap();
+        let dfs = DfsClient::new(nn);
+        let mut cfg = ServiceConfig::default();
+        cfg.node.memory_bytes = mem;
+        cfg.node.cores = 2;
+        cfg.monitor_timeout_s = 5.0;
+        let exec = ExecutorConfig { executors: 2, cores_per_executor: 1, ..Default::default() };
+        (AdaptiveService::new(cfg, dfs, None, exec), td)
+    }
+
+    fn updates(n: usize, len: usize) -> Vec<ModelUpdate> {
+        let mut rng = Rng::new(3);
+        (0..n)
+            .map(|p| {
+                let mut d = vec![0f32; len];
+                rng.fill_gaussian_f32(&mut d, 1.0);
+                ModelUpdate::new(p as u64, 1.0 + p as f32, 0, d)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn small_path_parallel_fallback_matches_serial() {
+        let (svc, _td) = service(1 << 30);
+        let us = updates(8, 500);
+        let (out, report) = svc.aggregate_small(&FedAvg, &us, 0).unwrap();
+        assert_eq!(report.engine, "parallel");
+        assert_eq!(report.class, WorkloadClass::Small);
+        let mut bd = Breakdown::new();
+        let want = SerialEngine::unbounded().aggregate(&FedAvg, &us, &mut bd).unwrap();
+        all_close(&out, &want, 1e-4, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn large_path_monitor_plus_mapreduce() {
+        let (svc, _td) = service(1 << 30);
+        let us = updates(10, 300);
+        let mut bd = Breakdown::new();
+        for u in &us {
+            let mut u = u.clone();
+            u.round = 4;
+            svc.dfs().put_update(&u, &mut bd).unwrap();
+        }
+        assert!(!svc.spark_started());
+        let (out, report) = svc.aggregate_large(&FedAvg, 4, 10, 300 * 4).unwrap();
+        assert!(svc.spark_started());
+        assert_eq!(report.parties, 10);
+        assert!(report.monitor.as_ref().unwrap().is_ready());
+        assert!(report.partitions >= 1);
+        // fused model published to the store
+        assert!(svc.dfs().exists(&DfsClient::model_path(4)));
+        let mut bd2 = Breakdown::new();
+        let mut us4 = us.clone();
+        for u in us4.iter_mut() {
+            u.round = 4;
+        }
+        let want = SerialEngine::unbounded().aggregate(&FedAvg, &us4, &mut bd2).unwrap();
+        all_close(&out, &want, 1e-4, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn classification_drives_redirect() {
+        let (svc, _td) = service(10 << 20); // 10 MiB node
+        // 2 × 1 MiB fits; 100 × 1 MiB does not
+        assert!(!svc.should_redirect(1 << 20, 2, &FedAvg));
+        assert!(svc.should_redirect(1 << 20, 100, &FedAvg));
+    }
+
+    #[test]
+    fn krum_works_via_parallel_fallback() {
+        let (svc, _td) = service(1 << 30);
+        let us = updates(9, 64);
+        let (_, report) = svc.aggregate_small(&Krum { byzantine_f: 1 }, &us, 0).unwrap();
+        assert_eq!(report.engine, "parallel");
+    }
+
+    #[test]
+    fn large_path_times_out_with_partial_set() {
+        let (svc, _td) = service(1 << 20);
+        let mut cfgd = svc.cfg.clone();
+        cfgd.monitor_timeout_s = 0.05;
+        let svc = AdaptiveService::new(
+            cfgd,
+            svc.dfs.clone(),
+            None,
+            ExecutorConfig { executors: 1, cores_per_executor: 1, ..Default::default() },
+        );
+        let mut bd = Breakdown::new();
+        let mut u = updates(1, 50)[0].clone();
+        u.round = 9;
+        svc.dfs().put_update(&u, &mut bd).unwrap();
+        let (_, report) = svc.aggregate_large(&FedAvg, 9, 100, 200).unwrap();
+        assert!(!report.monitor.as_ref().unwrap().is_ready());
+        assert_eq!(report.parties, 1);
+    }
+
+    #[test]
+    fn empty_round_is_no_updates() {
+        let (svc, _td) = service(1 << 20);
+        let mut cfgd = svc.cfg.clone();
+        cfgd.monitor_timeout_s = 0.02;
+        let svc = AdaptiveService::new(
+            cfgd,
+            svc.dfs.clone(),
+            None,
+            ExecutorConfig::default(),
+        );
+        assert!(matches!(
+            svc.aggregate_large(&FedAvg, 77, 5, 100),
+            Err(ServiceError::NoUpdates)
+        ));
+    }
+}

@@ -1,0 +1,128 @@
+//! The webHDFS-style client facade: what parties use to upload model
+//! updates (paper Fig 4 step ①) and what executors use to read partitions
+//! (step ④) and write the fused model back (step ⑤).
+
+use std::sync::Arc;
+
+use super::{DfsError, FileStatus, NameNode};
+use crate::metrics::{Breakdown, Stopwatch};
+use crate::tensorstore::ModelUpdate;
+
+#[derive(Clone)]
+pub struct DfsClient {
+    nn: Arc<NameNode>,
+}
+
+impl DfsClient {
+    pub fn new(nn: Arc<NameNode>) -> DfsClient {
+        DfsClient { nn }
+    }
+
+    pub fn namenode(&self) -> &Arc<NameNode> {
+        &self.nn
+    }
+
+    pub fn write(&self, path: &str, data: &[u8]) -> Result<(), DfsError> {
+        self.nn.write(path, data)
+    }
+
+    pub fn read(&self, path: &str) -> Result<Vec<u8>, DfsError> {
+        self.nn.read(path)
+    }
+
+    pub fn list(&self, prefix: &str) -> Vec<FileStatus> {
+        self.nn.list(prefix)
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.nn.exists(path)
+    }
+
+    pub fn delete(&self, path: &str) -> Result<(), DfsError> {
+        self.nn.delete(path)
+    }
+
+    /// Round-scoped update path convention: `/rounds/<round>/updates/p<party>`.
+    pub fn update_path(round: u32, party: u64) -> String {
+        format!("/rounds/{round}/updates/p{party:08}")
+    }
+
+    /// Prefix the monitor watches for a round.
+    pub fn round_prefix(round: u32) -> String {
+        format!("/rounds/{round}/updates/")
+    }
+
+    /// Where the fused model for a round is published.
+    pub fn model_path(round: u32) -> String {
+        format!("/rounds/{round}/model")
+    }
+
+    /// Upload a model update (what a party calls after local training),
+    /// timing the write into `bd` under "write".
+    pub fn put_update(&self, u: &ModelUpdate, bd: &mut Breakdown) -> Result<(), DfsError> {
+        let mut sw = Stopwatch::start();
+        let path = Self::update_path(u.round, u.party);
+        self.write(&path, &u.encode())?;
+        sw.lap_into(bd, "write");
+        Ok(())
+    }
+
+    /// Download + decode one update file.
+    pub fn get_update(&self, path: &str) -> Result<ModelUpdate, DfsError> {
+        let bytes = self.read(path)?;
+        ModelUpdate::decode(&bytes).map_err(|e| {
+            DfsError::Io(std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::datanode::tempdir::TempDir;
+    use super::*;
+
+    fn client() -> (DfsClient, TempDir) {
+        let td = TempDir::new();
+        let nn = NameNode::create(td.path(), 3, 2, 4096).unwrap();
+        (DfsClient::new(nn), td)
+    }
+
+    #[test]
+    fn update_roundtrip_through_dfs() {
+        let (c, _td) = client();
+        let u = ModelUpdate::new(7, 64.0, 3, (0..5000).map(|i| i as f32).collect());
+        let mut bd = Breakdown::new();
+        c.put_update(&u, &mut bd).unwrap();
+        assert!(bd.get("write") > 0.0);
+        let path = DfsClient::update_path(3, 7);
+        let got = c.get_update(&path).unwrap();
+        assert_eq!(got, u);
+    }
+
+    #[test]
+    fn round_prefix_isolates_rounds() {
+        let (c, _td) = client();
+        let mut bd = Breakdown::new();
+        for round in [1u32, 2] {
+            for party in 0..3u64 {
+                let u = ModelUpdate::new(party, 1.0, round, vec![party as f32]);
+                c.put_update(&u, &mut bd).unwrap();
+            }
+        }
+        assert_eq!(c.list(&DfsClient::round_prefix(1)).len(), 3);
+        assert_eq!(c.list(&DfsClient::round_prefix(2)).len(), 3);
+    }
+
+    #[test]
+    fn corrupt_update_decode_fails() {
+        let (c, _td) = client();
+        c.write("/bad", b"not-an-update").unwrap();
+        assert!(c.get_update("/bad").is_err());
+    }
+
+    #[test]
+    fn path_conventions_sort_correctly() {
+        // zero-padded party ids keep listing order == party order
+        assert!(DfsClient::update_path(1, 2) < DfsClient::update_path(1, 10));
+    }
+}

@@ -1,0 +1,60 @@
+//! ElastiStore — the HDFS analog (paper §III-D2).
+//!
+//! A replicated block store: a [`NameNode`] keeps the namespace and block
+//! placement; [`DataNode`]s are directory-backed block servers; the
+//! [`DfsClient`] is the webHDFS-style facade parties and executors use.
+//! Blocks are CRC-checksummed; replication (default 2, as in the paper's
+//! evaluation) makes reads survive datanode failures, which the failure-
+//! injection tests exercise.
+//!
+//! The [`monitor`] submodule is Algorithm 1's threshold/timeout watcher.
+
+pub mod client;
+pub mod datanode;
+pub mod monitor;
+pub mod namenode;
+pub mod webhdfs;
+
+pub use client::DfsClient;
+pub use datanode::DataNode;
+pub use monitor::{Monitor, MonitorOutcome};
+pub use namenode::{BlockLocation, FileStatus, NameNode};
+pub use webhdfs::{WebHdfsClient, WebHdfsServer};
+
+/// Default block size: 8 MiB (HDFS uses 128 MiB; scaled with the 1:100
+/// model-size scale so files still split into multiple blocks).
+pub const DEFAULT_BLOCK_SIZE: u64 = 8 << 20;
+
+/// DFS errors.
+#[derive(Debug)]
+pub enum DfsError {
+    Io(std::io::Error),
+    NotFound(String),
+    AlreadyExists(String),
+    Corrupt { path: String, block: u64 },
+    NoLiveReplica { path: String, block: u64 },
+    NoDatanodes,
+}
+
+impl std::fmt::Display for DfsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DfsError::Io(e) => write!(f, "io: {e}"),
+            DfsError::NotFound(p) => write!(f, "not found: {p}"),
+            DfsError::AlreadyExists(p) => write!(f, "already exists: {p}"),
+            DfsError::Corrupt { path, block } => write!(f, "corrupt block {block} of {path}"),
+            DfsError::NoLiveReplica { path, block } => {
+                write!(f, "no live replica for block {block} of {path}")
+            }
+            DfsError::NoDatanodes => write!(f, "no datanodes registered"),
+        }
+    }
+}
+
+impl std::error::Error for DfsError {}
+
+impl From<std::io::Error> for DfsError {
+    fn from(e: std::io::Error) -> Self {
+        DfsError::Io(e)
+    }
+}

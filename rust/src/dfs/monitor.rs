@@ -1,0 +1,130 @@
+//! Algorithm 1's monitor: wait until a threshold number of client updates
+//! has landed in the store, or a timeout elapses (straggler cut-off).
+//!
+//! ```text
+//! Function monitor(Th, P):
+//!     while Mr < Th and not Ts:
+//!         Mr = updates count from P
+//!     return True
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::NameNode;
+
+/// Why the monitor returned.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MonitorOutcome {
+    /// Threshold reached; aggregation may start.
+    Ready { count: usize },
+    /// Timeout hit first; aggregation proceeds with what arrived
+    /// (the paper's straggler-avoidance policy).
+    TimedOut { count: usize },
+}
+
+impl MonitorOutcome {
+    pub fn count(&self) -> usize {
+        match self {
+            MonitorOutcome::Ready { count } | MonitorOutcome::TimedOut { count } => *count,
+        }
+    }
+
+    pub fn is_ready(&self) -> bool {
+        matches!(self, MonitorOutcome::Ready { .. })
+    }
+}
+
+pub struct Monitor {
+    nn: Arc<NameNode>,
+    /// Poll interval between namespace scans.
+    pub poll: Duration,
+}
+
+impl Monitor {
+    pub fn new(nn: Arc<NameNode>) -> Monitor {
+        Monitor { nn, poll: Duration::from_millis(5) }
+    }
+
+    /// Count updates currently under `prefix`.
+    pub fn count(&self, prefix: &str) -> usize {
+        self.nn.list(prefix).len()
+    }
+
+    /// Block until `threshold` updates exist under `prefix` or `timeout`
+    /// passes.  Threshold 0 returns immediately.
+    pub fn watch(&self, prefix: &str, threshold: usize, timeout: Duration) -> MonitorOutcome {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let count = self.count(prefix);
+            if count >= threshold {
+                return MonitorOutcome::Ready { count };
+            }
+            if Instant::now() >= deadline {
+                return MonitorOutcome::TimedOut { count };
+            }
+            std::thread::sleep(self.poll.min(deadline.saturating_duration_since(Instant::now())));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::datanode::tempdir::TempDir;
+    use super::*;
+    use crate::dfs::DfsClient;
+    use crate::metrics::Breakdown;
+    use crate::tensorstore::ModelUpdate;
+
+    fn setup() -> (DfsClient, Monitor, TempDir) {
+        let td = TempDir::new();
+        let nn = NameNode::create(td.path(), 1, 1, 4096).unwrap();
+        (DfsClient::new(nn.clone()), Monitor::new(nn), td)
+    }
+
+    #[test]
+    fn ready_when_threshold_met() {
+        let (c, m, _td) = setup();
+        let mut bd = Breakdown::new();
+        for p in 0..4u64 {
+            c.put_update(&ModelUpdate::new(p, 1.0, 0, vec![0.0]), &mut bd).unwrap();
+        }
+        let out = m.watch(&DfsClient::round_prefix(0), 4, Duration::from_millis(100));
+        assert_eq!(out, MonitorOutcome::Ready { count: 4 });
+    }
+
+    #[test]
+    fn timeout_returns_partial_count() {
+        let (c, m, _td) = setup();
+        let mut bd = Breakdown::new();
+        c.put_update(&ModelUpdate::new(0, 1.0, 0, vec![0.0]), &mut bd).unwrap();
+        let out = m.watch(&DfsClient::round_prefix(0), 10, Duration::from_millis(30));
+        assert_eq!(out, MonitorOutcome::TimedOut { count: 1 });
+        assert!(!out.is_ready());
+    }
+
+    #[test]
+    fn concurrent_writers_unblock_monitor() {
+        let (c, m, _td) = setup();
+        let handle = std::thread::spawn({
+            let c = c.clone();
+            move || {
+                let mut bd = Breakdown::new();
+                for p in 0..8u64 {
+                    std::thread::sleep(Duration::from_millis(2));
+                    c.put_update(&ModelUpdate::new(p, 1.0, 1, vec![1.0]), &mut bd).unwrap();
+                }
+            }
+        });
+        let out = m.watch(&DfsClient::round_prefix(1), 8, Duration::from_secs(5));
+        handle.join().unwrap();
+        assert!(out.is_ready());
+        assert_eq!(out.count(), 8);
+    }
+
+    #[test]
+    fn zero_threshold_immediate() {
+        let (_c, m, _td) = setup();
+        assert!(m.watch("/nothing/", 0, Duration::from_millis(1)).is_ready());
+    }
+}

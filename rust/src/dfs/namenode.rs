@@ -1,0 +1,290 @@
+//! The namenode: namespace + block placement + replication.
+//!
+//! Placement policy: each block's `replication` replicas go to the live
+//! datanodes with the least bytes written (capacity balancing, the role
+//! HDFS's default placement plays across its datanodes).  Reads try
+//! replicas in placement order, skipping dead or corrupt copies.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::{DataNode, DfsError};
+
+/// Where one block lives.
+#[derive(Clone, Debug)]
+pub struct BlockLocation {
+    pub block_id: u64,
+    pub len: u64,
+    /// Datanode ids holding a replica, in placement order.
+    pub replicas: Vec<usize>,
+}
+
+/// Namespace entry for one file.
+#[derive(Clone, Debug)]
+pub struct FileStatus {
+    pub path: String,
+    pub len: u64,
+    pub blocks: Vec<BlockLocation>,
+}
+
+pub struct NameNode {
+    datanodes: Vec<Arc<DataNode>>,
+    files: Mutex<BTreeMap<String, FileStatus>>,
+    next_block: AtomicU64,
+    pub block_size: u64,
+    pub replication: usize,
+}
+
+impl NameNode {
+    /// Stand up a namenode over `n` datanode directories under `root`.
+    pub fn create(root: &Path, n_datanodes: usize, replication: usize, block_size: u64) -> Result<Arc<NameNode>, DfsError> {
+        if n_datanodes == 0 {
+            return Err(DfsError::NoDatanodes);
+        }
+        let mut datanodes = Vec::with_capacity(n_datanodes);
+        for i in 0..n_datanodes {
+            datanodes.push(Arc::new(DataNode::new(i, root.join(format!("dn{i}")))?));
+        }
+        Ok(Arc::new(NameNode {
+            datanodes,
+            files: Mutex::new(BTreeMap::new()),
+            next_block: AtomicU64::new(1),
+            block_size,
+            replication: replication.min(n_datanodes).max(1),
+        }))
+    }
+
+    pub fn datanode(&self, id: usize) -> &Arc<DataNode> {
+        &self.datanodes[id]
+    }
+
+    pub fn datanodes(&self) -> &[Arc<DataNode>] {
+        &self.datanodes
+    }
+
+    /// Pick `replication` live datanodes, least-written first.
+    fn place(&self) -> Result<Vec<usize>, DfsError> {
+        let mut live: Vec<&Arc<DataNode>> =
+            self.datanodes.iter().filter(|d| d.is_alive()).collect();
+        if live.is_empty() {
+            return Err(DfsError::NoDatanodes);
+        }
+        live.sort_by_key(|d| d.bytes_written());
+        Ok(live
+            .iter()
+            .take(self.replication)
+            .map(|d| d.id)
+            .collect())
+    }
+
+    /// Write a file: split into blocks, place replicas. Overwrites allowed
+    /// (FL rounds rewrite the fused-model file every round).
+    pub fn write(&self, path: &str, data: &[u8]) -> Result<(), DfsError> {
+        // Delete previous version's blocks if overwriting.
+        if let Some(old) = self.files.lock().unwrap().remove(path) {
+            self.delete_blocks(&old);
+        }
+        let mut blocks = Vec::new();
+        let chunks: Vec<&[u8]> = if data.is_empty() {
+            vec![&[][..]]
+        } else {
+            data.chunks(self.block_size as usize).collect()
+        };
+        for chunk in chunks {
+            let block_id = self.next_block.fetch_add(1, Ordering::Relaxed);
+            let replicas = self.place()?;
+            for r in &replicas {
+                self.datanodes[*r].put_block(block_id, chunk)?;
+            }
+            blocks.push(BlockLocation { block_id, len: chunk.len() as u64, replicas });
+        }
+        let status = FileStatus { path: path.to_string(), len: data.len() as u64, blocks };
+        self.files.lock().unwrap().insert(path.to_string(), status);
+        Ok(())
+    }
+
+    /// Read a whole file, trying replicas in order on failure.
+    pub fn read(&self, path: &str) -> Result<Vec<u8>, DfsError> {
+        let status = self.stat(path)?;
+        let mut out = Vec::with_capacity(status.len as usize);
+        for b in &status.blocks {
+            out.extend_from_slice(&self.read_block(path, b)?);
+        }
+        Ok(out)
+    }
+
+    /// Read one block from any live, uncorrupted replica.
+    pub fn read_block(&self, path: &str, loc: &BlockLocation) -> Result<Vec<u8>, DfsError> {
+        for r in &loc.replicas {
+            match self.datanodes[*r].get_block(loc.block_id) {
+                Ok(data) => return Ok(data),
+                Err(_) => continue, // dead or corrupt — try next replica
+            }
+        }
+        Err(DfsError::NoLiveReplica { path: path.to_string(), block: loc.block_id })
+    }
+
+    pub fn stat(&self, path: &str) -> Result<FileStatus, DfsError> {
+        self.files
+            .lock()
+            .unwrap()
+            .get(path)
+            .cloned()
+            .ok_or_else(|| DfsError::NotFound(path.to_string()))
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.files.lock().unwrap().contains_key(path)
+    }
+
+    /// List files whose path starts with `prefix` (the monitor's primitive).
+    pub fn list(&self, prefix: &str) -> Vec<FileStatus> {
+        self.files
+            .lock()
+            .unwrap()
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(_, v)| v.clone())
+            .collect()
+    }
+
+    pub fn delete(&self, path: &str) -> Result<(), DfsError> {
+        let status = self
+            .files
+            .lock()
+            .unwrap()
+            .remove(path)
+            .ok_or_else(|| DfsError::NotFound(path.to_string()))?;
+        self.delete_blocks(&status);
+        Ok(())
+    }
+
+    fn delete_blocks(&self, status: &FileStatus) {
+        for b in &status.blocks {
+            for r in &b.replicas {
+                let _ = self.datanodes[*r].delete_block(b.block_id);
+            }
+        }
+    }
+
+    /// Total bytes stored across datanodes (replication included).
+    pub fn stored_bytes(&self) -> u64 {
+        self.datanodes.iter().map(|d| d.bytes_written()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::datanode::tempdir::TempDir;
+    use super::*;
+
+    fn nn(datanodes: usize, repl: usize, bs: u64) -> (Arc<NameNode>, TempDir) {
+        let td = TempDir::new();
+        let nn = NameNode::create(td.path(), datanodes, repl, bs).unwrap();
+        (nn, td)
+    }
+
+    #[test]
+    fn write_read_roundtrip_multiblock() {
+        let (nn, _td) = nn(3, 2, 10);
+        let data: Vec<u8> = (0..95u8).collect();
+        nn.write("/round1/p0", &data).unwrap();
+        assert_eq!(nn.read("/round1/p0").unwrap(), data);
+        let st = nn.stat("/round1/p0").unwrap();
+        assert_eq!(st.blocks.len(), 10); // 95 bytes / 10-byte blocks
+        assert_eq!(st.len, 95);
+        for b in &st.blocks {
+            assert_eq!(b.replicas.len(), 2);
+        }
+    }
+
+    #[test]
+    fn replication_survives_single_failure() {
+        let (nn, _td) = nn(3, 2, 1024);
+        nn.write("/f", b"payload").unwrap();
+        nn.datanode(nn.stat("/f").unwrap().blocks[0].replicas[0]).set_alive(false);
+        assert_eq!(nn.read("/f").unwrap(), b"payload");
+    }
+
+    #[test]
+    fn all_replicas_dead_is_error() {
+        let (nn, _td) = nn(2, 2, 1024);
+        nn.write("/f", b"x").unwrap();
+        nn.datanode(0).set_alive(false);
+        nn.datanode(1).set_alive(false);
+        assert!(matches!(nn.read("/f"), Err(DfsError::NoLiveReplica { .. })));
+    }
+
+    #[test]
+    fn corrupt_replica_falls_through() {
+        let (nn, _td) = nn(2, 2, 1024);
+        nn.write("/f", b"important").unwrap();
+        let st = nn.stat("/f").unwrap();
+        let first = st.blocks[0].replicas[0];
+        nn.datanode(first).corrupt_block(st.blocks[0].block_id).unwrap();
+        assert_eq!(nn.read("/f").unwrap(), b"important");
+    }
+
+    #[test]
+    fn list_by_prefix() {
+        let (nn, _td) = nn(1, 1, 1024);
+        nn.write("/r1/a", b"1").unwrap();
+        nn.write("/r1/b", b"2").unwrap();
+        nn.write("/r2/c", b"3").unwrap();
+        assert_eq!(nn.list("/r1/").len(), 2);
+        assert_eq!(nn.list("/").len(), 3);
+        assert_eq!(nn.list("/r3/").len(), 0);
+    }
+
+    #[test]
+    fn overwrite_frees_old_blocks() {
+        let (nn, _td) = nn(1, 1, 4);
+        nn.write("/f", &[0u8; 16]).unwrap();
+        let old = nn.stat("/f").unwrap();
+        nn.write("/f", &[1u8; 8]).unwrap();
+        assert_eq!(nn.read("/f").unwrap(), vec![1u8; 8]);
+        // old blocks physically gone
+        for b in &old.blocks {
+            assert!(nn.datanode(b.replicas[0]).get_block(b.block_id).is_err());
+        }
+    }
+
+    #[test]
+    fn delete_and_not_found() {
+        let (nn, _td) = nn(1, 1, 1024);
+        nn.write("/f", b"x").unwrap();
+        nn.delete("/f").unwrap();
+        assert!(!nn.exists("/f"));
+        assert!(matches!(nn.read("/f"), Err(DfsError::NotFound(_))));
+        assert!(matches!(nn.delete("/f"), Err(DfsError::NotFound(_))));
+    }
+
+    #[test]
+    fn placement_balances_bytes() {
+        let (nn, _td) = nn(4, 1, 1 << 20);
+        for i in 0..16 {
+            nn.write(&format!("/f{i}"), &vec![0u8; 1000]).unwrap();
+        }
+        let written: Vec<u64> = nn.datanodes().iter().map(|d| d.bytes_written()).collect();
+        let min = *written.iter().min().unwrap();
+        let max = *written.iter().max().unwrap();
+        assert!(max - min <= 1000, "imbalanced: {written:?}");
+    }
+
+    #[test]
+    fn replication_clamped_to_datanodes() {
+        let (nn, _td) = nn(2, 5, 1024);
+        assert_eq!(nn.replication, 2);
+        nn.write("/f", b"y").unwrap();
+        assert_eq!(nn.stat("/f").unwrap().blocks[0].replicas.len(), 2);
+    }
+
+    #[test]
+    fn empty_file_roundtrips() {
+        let (nn, _td) = nn(1, 1, 1024);
+        nn.write("/e", b"").unwrap();
+        assert_eq!(nn.read("/e").unwrap(), Vec::<u8>::new());
+    }
+}

@@ -1,0 +1,370 @@
+//! webHDFS-style REST facade over the block store.
+//!
+//! The paper's clients "send the model updates ... to HDFS using the
+//! webHDFS Rest API offered by Hadoop" (Fig 4 step ①).  This module is
+//! that surface: a minimal HTTP/1.1 server (built from scratch — no HTTP
+//! crate offline) exposing
+//!
+//! ```text
+//! PUT    /webhdfs/v1/<path>?op=CREATE     body = file bytes
+//! GET    /webhdfs/v1/<path>?op=OPEN       -> file bytes
+//! GET    /webhdfs/v1/<path>?op=LISTSTATUS -> JSON FileStatuses
+//! GET    /webhdfs/v1/<path>?op=GETFILESTATUS -> JSON FileStatus
+//! DELETE /webhdfs/v1/<path>?op=DELETE     -> {"boolean": true}
+//! ```
+//!
+//! Only the subset the aggregation service needs; errors use HDFS-ish
+//! RemoteException JSON bodies.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::{DfsClient, DfsError};
+use crate::util::json::Json;
+
+/// Running REST server; dropping stops it.
+pub struct WebHdfsServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WebHdfsServer {
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn serve(addr: &str, dfs: DfsClient) -> std::io::Result<WebHdfsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    let dfs = dfs.clone();
+                    std::thread::spawn(move || {
+                        let _ = handle(stream, dfs);
+                    });
+                }
+            })
+        };
+        Ok(WebHdfsServer { addr: local, stop, thread: Some(thread) })
+    }
+}
+
+impl Drop for WebHdfsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle(stream: TcpStream, dfs: DfsClient) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    loop {
+        // request line
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let mut parts = line.split_whitespace();
+        let (method, target) = match (parts.next(), parts.next()) {
+            (Some(m), Some(t)) => (m.to_string(), t.to_string()),
+            _ => return respond(&mut stream, 400, "text/plain", b"bad request line"),
+        };
+        // headers
+        let mut content_len = 0usize;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h)?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+                content_len = v.trim().parse().unwrap_or(0);
+            }
+        }
+        let mut body = vec![0u8; content_len];
+        reader.read_exact(&mut body)?;
+
+        let (path, op) = parse_target(&target);
+        let status_body = route(&dfs, &method, &path, &op, &body);
+        match status_body {
+            Ok((code, ct, bytes)) => respond(&mut stream, code, ct, &bytes)?,
+            Err(e) => {
+                let (code, msg) = match &e {
+                    DfsError::NotFound(_) => (404, e.to_string()),
+                    DfsError::AlreadyExists(_) => (409, e.to_string()),
+                    _ => (500, e.to_string()),
+                };
+                let body = Json::obj(vec![(
+                    "RemoteException",
+                    Json::obj(vec![("message", Json::str(&msg))]),
+                )])
+                .to_string();
+                respond(&mut stream, code, "application/json", body.as_bytes())?;
+            }
+        }
+    }
+}
+
+type RouteOk = (u16, &'static str, Vec<u8>);
+
+fn route(dfs: &DfsClient, method: &str, path: &str, op: &str, body: &[u8]) -> Result<RouteOk, DfsError> {
+    match (method, op) {
+        ("PUT", "CREATE") => {
+            dfs.write(path, body)?;
+            Ok((201, "application/json", b"{}".to_vec()))
+        }
+        ("GET", "OPEN") => {
+            let data = dfs.read(path)?;
+            Ok((200, "application/octet-stream", data))
+        }
+        ("GET", "LISTSTATUS") => {
+            let mut prefix = path.to_string();
+            if !prefix.ends_with('/') {
+                prefix.push('/');
+            }
+            let items: Vec<Json> = dfs
+                .list(&prefix)
+                .into_iter()
+                .map(|f| {
+                    Json::obj(vec![
+                        ("pathSuffix", Json::str(f.path.strip_prefix(&prefix).unwrap_or(&f.path))),
+                        ("length", Json::num(f.len as f64)),
+                        ("type", Json::str("FILE")),
+                    ])
+                })
+                .collect();
+            let j = Json::obj(vec![(
+                "FileStatuses",
+                Json::obj(vec![("FileStatus", Json::Arr(items))]),
+            )]);
+            Ok((200, "application/json", j.to_string().into_bytes()))
+        }
+        ("GET", "GETFILESTATUS") => {
+            let st = dfs.namenode().stat(path)?;
+            let j = Json::obj(vec![(
+                "FileStatus",
+                Json::obj(vec![
+                    ("length", Json::num(st.len as f64)),
+                    ("blocks", Json::num(st.blocks.len() as f64)),
+                    ("type", Json::str("FILE")),
+                ]),
+            )]);
+            Ok((200, "application/json", j.to_string().into_bytes()))
+        }
+        ("DELETE", "DELETE") => {
+            dfs.delete(path)?;
+            Ok((200, "application/json", b"{\"boolean\": true}".to_vec()))
+        }
+        _ => Ok((400, "application/json",
+                 format!("{{\"RemoteException\":{{\"message\":\"unsupported {method} op={op}\"}}}}")
+                     .into_bytes())),
+    }
+}
+
+/// "/webhdfs/v1/rounds/0/p1?op=CREATE" -> ("/rounds/0/p1", "CREATE")
+fn parse_target(target: &str) -> (String, String) {
+    let (raw_path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let path = raw_path.strip_prefix("/webhdfs/v1").unwrap_or(raw_path);
+    let path = if path.is_empty() { "/" } else { path };
+    let mut op = String::new();
+    for kv in query.split('&') {
+        if let Some(v) = kv.strip_prefix("op=") {
+            op = v.to_ascii_uppercase();
+        }
+    }
+    (path.to_string(), op)
+}
+
+fn respond(stream: &mut TcpStream, code: u16, ct: &str, body: &[u8]) -> std::io::Result<()> {
+    let reason = match code {
+        200 => "OK",
+        201 => "Created",
+        400 => "Bad Request",
+        404 => "Not Found",
+        409 => "Conflict",
+        _ => "Internal Server Error",
+    };
+    write!(stream, "HTTP/1.1 {code} {reason}\r\ncontent-type: {ct}\r\ncontent-length: {}\r\n\r\n", body.len())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// Tiny blocking HTTP client for the facade (used by parties + tests).
+pub struct WebHdfsClient {
+    base: String,
+}
+
+impl WebHdfsClient {
+    pub fn new(addr: &str) -> WebHdfsClient {
+        WebHdfsClient { base: addr.to_string() }
+    }
+
+    fn request(&self, method: &str, path_q: &str, body: &[u8]) -> std::io::Result<(u16, Vec<u8>)> {
+        let mut stream = TcpStream::connect(&self.base)?;
+        write!(
+            stream,
+            "{method} /webhdfs/v1{path_q} HTTP/1.1\r\nhost: {}\r\ncontent-length: {}\r\n\r\n",
+            self.base,
+            body.len()
+        )?;
+        stream.write_all(body)?;
+        stream.flush()?;
+        let mut reader = BufReader::new(stream);
+        let mut status = String::new();
+        reader.read_line(&mut status)?;
+        let code: u16 = status
+            .split_whitespace()
+            .nth(1)
+            .and_then(|c| c.parse().ok())
+            .unwrap_or(0);
+        let mut len = 0usize;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h)?;
+            if h.trim_end().is_empty() {
+                break;
+            }
+            if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+                len = v.trim().parse().unwrap_or(0);
+            }
+        }
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body)?;
+        Ok((code, body))
+    }
+
+    pub fn create(&self, path: &str, data: &[u8]) -> std::io::Result<bool> {
+        Ok(self.request("PUT", &format!("{path}?op=CREATE"), data)?.0 == 201)
+    }
+
+    pub fn open(&self, path: &str) -> std::io::Result<Option<Vec<u8>>> {
+        let (code, body) = self.request("GET", &format!("{path}?op=OPEN"), &[])?;
+        Ok((code == 200).then_some(body))
+    }
+
+    pub fn list_status(&self, path: &str) -> std::io::Result<Vec<(String, u64)>> {
+        let (code, body) = self.request("GET", &format!("{path}?op=LISTSTATUS"), &[])?;
+        if code != 200 {
+            return Ok(vec![]);
+        }
+        let j = Json::parse(&String::from_utf8_lossy(&body))
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+        Ok(j.get("FileStatuses")
+            .get("FileStatus")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|f| {
+                (
+                    f.get("pathSuffix").as_str().unwrap_or("").to_string(),
+                    f.get("length").as_u64().unwrap_or(0),
+                )
+            })
+            .collect())
+    }
+
+    pub fn delete(&self, path: &str) -> std::io::Result<bool> {
+        Ok(self.request("DELETE", &format!("{path}?op=DELETE"), &[])?.0 == 200)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::datanode::tempdir::TempDir;
+    use super::super::NameNode;
+    use super::*;
+
+    fn setup() -> (WebHdfsServer, WebHdfsClient, DfsClient, TempDir) {
+        let td = TempDir::new();
+        let nn = NameNode::create(td.path(), 2, 2, 4096).unwrap();
+        let dfs = DfsClient::new(nn);
+        let server = WebHdfsServer::serve("127.0.0.1:0", dfs.clone()).unwrap();
+        let client = WebHdfsClient::new(server.addr());
+        (server, client, dfs, td)
+    }
+
+    #[test]
+    fn create_open_roundtrip_over_http() {
+        let (_s, c, _dfs, _td) = setup();
+        let payload: Vec<u8> = (0..9000u32).map(|i| i as u8).collect();
+        assert!(c.create("/rounds/1/updates/p5", &payload).unwrap());
+        assert_eq!(c.open("/rounds/1/updates/p5").unwrap().unwrap(), payload);
+    }
+
+    #[test]
+    fn list_status_shape() {
+        let (_s, c, _dfs, _td) = setup();
+        c.create("/r/a", b"12345").unwrap();
+        c.create("/r/b", b"1").unwrap();
+        let mut ls = c.list_status("/r").unwrap();
+        ls.sort();
+        assert_eq!(ls, vec![("a".to_string(), 5), ("b".to_string(), 1)]);
+    }
+
+    #[test]
+    fn open_missing_is_404() {
+        let (_s, c, _dfs, _td) = setup();
+        assert!(c.open("/nope").unwrap().is_none());
+    }
+
+    #[test]
+    fn delete_via_http_removes_from_store() {
+        let (_s, c, dfs, _td) = setup();
+        c.create("/x", b"y").unwrap();
+        assert!(dfs.exists("/x"));
+        assert!(c.delete("/x").unwrap());
+        assert!(!dfs.exists("/x"));
+    }
+
+    #[test]
+    fn rest_and_native_clients_interoperate() {
+        // Party uploads over REST; the aggregation side reads natively —
+        // exactly the paper's Fig-4 step ① arrangement.
+        let (_s, c, dfs, _td) = setup();
+        let u = crate::tensorstore::ModelUpdate::new(3, 7.0, 2, vec![1.5; 500]);
+        c.create(&DfsClient::update_path(2, 3), &u.encode()).unwrap();
+        let got = dfs.get_update(&DfsClient::update_path(2, 3)).unwrap();
+        assert_eq!(got, u);
+    }
+
+    #[test]
+    fn unsupported_op_is_400() {
+        let (_s, c, _dfs, _td) = setup();
+        let (code, _) = c.request("GET", "/x?op=BOGUS", &[]).unwrap();
+        assert_eq!(code, 400);
+    }
+
+    #[test]
+    fn concurrent_rest_uploads() {
+        let (_s, c, dfs, _td) = setup();
+        let addr = c.base.clone();
+        std::thread::scope(|s| {
+            for p in 0..8u64 {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let c = WebHdfsClient::new(&addr);
+                    c.create(&format!("/cc/p{p}"), &vec![p as u8; 256]).unwrap();
+                });
+            }
+        });
+        assert_eq!(dfs.list("/cc/").len(), 8);
+    }
+}

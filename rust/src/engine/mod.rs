@@ -1,0 +1,123 @@
+//! Single-node execution engines for the in-memory ("small workload") path.
+//!
+//! * [`SerialEngine`] — the IBMFL/NumPy baseline: one stream of arithmetic.
+//! * [`ParallelEngine`] — the paper's Numba replacement: the parameter axis
+//!   is chunked across worker threads, each accumulating its slice over all
+//!   updates (same decomposition Numba's `prange` applies to the weighted-
+//!   average loop).
+//! * [`XlaEngine`] — the AOT hot path: stacks updates into the fixed
+//!   `[K, C]` geometry and executes the Pallas weighted-sum artifact on the
+//!   PJRT CPU client.
+//!
+//! All engines produce bit-comparable results (see `rust/tests/engine_parity`)
+//! because the fusion algebra is shared.
+
+pub mod parallel;
+pub mod serial;
+pub mod xla_engine;
+
+pub use parallel::ParallelEngine;
+pub use serial::SerialEngine;
+pub use xla_engine::XlaEngine;
+
+use crate::fusion::{FusionAlgorithm, FusionError};
+use crate::memsim::OutOfMemory;
+use crate::metrics::Breakdown;
+use crate::tensorstore::ModelUpdate;
+
+/// Engine errors: fusion preconditions, memory, or runtime failures.
+#[derive(Debug)]
+pub enum EngineError {
+    Fusion(FusionError),
+    Memory(OutOfMemory),
+    Runtime(String),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Fusion(e) => write!(f, "fusion: {e}"),
+            EngineError::Memory(e) => write!(f, "memory: {e}"),
+            EngineError::Runtime(m) => write!(f, "runtime: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<FusionError> for EngineError {
+    fn from(e: FusionError) -> Self {
+        EngineError::Fusion(e)
+    }
+}
+
+impl From<OutOfMemory> for EngineError {
+    fn from(e: OutOfMemory) -> Self {
+        EngineError::Memory(e)
+    }
+}
+
+/// A single-node aggregation engine.
+pub trait AggregationEngine: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Fuse `updates` with `algo`, recording phase timings into `bd`.
+    fn aggregate(
+        &self,
+        algo: &dyn FusionAlgorithm,
+        updates: &[ModelUpdate],
+        bd: &mut Breakdown,
+    ) -> Result<Vec<f32>, EngineError>;
+}
+
+/// Validate a batch: non-empty, consistent shapes. Shared by engines.
+pub fn validate(updates: &[ModelUpdate]) -> Result<usize, EngineError> {
+    let first = updates.first().ok_or(FusionError::Empty)?;
+    let len = first.data.len();
+    for u in updates {
+        if u.data.len() != len {
+            return Err(FusionError::ShapeMismatch { want: len, got: u.data.len() }.into());
+        }
+    }
+    Ok(len)
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::tensorstore::ModelUpdate;
+    use crate::util::rng::Rng;
+
+    /// Deterministic batch of gaussian updates.
+    pub fn batch(seed: u64, n: usize, len: usize) -> Vec<ModelUpdate> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let mut d = vec![0f32; len];
+                rng.fill_gaussian_f32(&mut d, 1.0);
+                ModelUpdate::new(i as u64, 1.0 + rng.gen_range(64) as f32, 0, d)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_rejects_empty_and_ragged() {
+        assert!(matches!(
+            validate(&[]),
+            Err(EngineError::Fusion(FusionError::Empty))
+        ));
+        let us = vec![
+            ModelUpdate::new(0, 1.0, 0, vec![0.0; 3]),
+            ModelUpdate::new(1, 1.0, 0, vec![0.0; 4]),
+        ];
+        assert!(matches!(
+            validate(&us),
+            Err(EngineError::Fusion(FusionError::ShapeMismatch { .. }))
+        ));
+        assert_eq!(validate(&us[..1]).unwrap(), 3);
+    }
+}

@@ -1,0 +1,219 @@
+//! The parallel engine — the paper's Numba substitution (§III-D1): split
+//! the fusion workload across cores.
+//!
+//! Decomposition: the *parameter axis* is chunked into `threads` slices and
+//! each worker accumulates its slice over ALL updates.  This is the same
+//! shape Numba's `prange` gives the weighted-average loop and it needs no
+//! cross-thread reduction of full-size buffers (each worker owns a disjoint
+//! output range).  For non-decomposable algorithms the parameter axis is
+//! still sliced when the algorithm is per-coordinate (median); whole-vector
+//! scorers (Krum, Zeno) run as one holistic call.
+
+use super::{validate, AggregationEngine, EngineError};
+use crate::fusion::{FusionAlgorithm, FusionError, EPS};
+use crate::metrics::{Breakdown, Stopwatch};
+use crate::tensorstore::ModelUpdate;
+
+pub struct ParallelEngine {
+    threads: usize,
+}
+
+impl ParallelEngine {
+    pub fn new(threads: usize) -> ParallelEngine {
+        assert!(threads > 0);
+        ParallelEngine { threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Slice `len` into at most `threads` near-equal ranges.
+    fn ranges(&self, len: usize) -> Vec<std::ops::Range<usize>> {
+        let t = self.threads.min(len).max(1);
+        let base = len / t;
+        let extra = len % t;
+        let mut out = Vec::with_capacity(t);
+        let mut start = 0;
+        for i in 0..t {
+            let sz = base + usize::from(i < extra);
+            out.push(start..start + sz);
+            start += sz;
+        }
+        out
+    }
+}
+
+impl AggregationEngine for ParallelEngine {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn aggregate(
+        &self,
+        algo: &dyn FusionAlgorithm,
+        updates: &[ModelUpdate],
+        bd: &mut Breakdown,
+    ) -> Result<Vec<f32>, EngineError> {
+        let len = validate(updates)?;
+        let mut sw = Stopwatch::start();
+
+        if !algo.decomposable() {
+            // Coordinate-sliced holistic: build per-slice update views.
+            // Whole-vector scorers (Krum, Zeno) are NOT sliceable — their
+            // client selection is a function of the full vector — so they
+            // fall back to a single holistic call.
+            if !algo.coordinate_sliceable() {
+                let refs: Vec<&ModelUpdate> = updates.iter().collect();
+                let out = algo.holistic(&refs)?;
+                sw.lap_into(bd, "holistic");
+                return Ok(out);
+            }
+            let ranges = self.ranges(len);
+            let mut out = vec![0f32; len];
+            let mut slots: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
+            let mut rest = out.as_mut_slice();
+            for r in &ranges {
+                let (head, tail) = rest.split_at_mut(r.len());
+                slots.push(head);
+                rest = tail;
+            }
+            let errs: std::sync::Mutex<Vec<FusionError>> = std::sync::Mutex::new(vec![]);
+            std::thread::scope(|s| {
+                for (r, slot) in ranges.iter().zip(slots) {
+                    let errs = &errs;
+                    s.spawn(move || {
+                        // Per-slice shallow updates (copy of the slice only).
+                        let sliced: Vec<ModelUpdate> = updates
+                            .iter()
+                            .map(|u| ModelUpdate::new(u.party, u.count, u.round, u.data[r.clone()].to_vec()))
+                            .collect();
+                        let refs: Vec<&ModelUpdate> = sliced.iter().collect();
+                        match algo.holistic(&refs) {
+                            Ok(v) => slot.copy_from_slice(&v),
+                            Err(e) => errs.lock().unwrap().push(e),
+                        }
+                    });
+                }
+            });
+            let errs = errs.into_inner().unwrap();
+            if let Some(e) = errs.into_iter().next() {
+                return Err(e.into());
+            }
+            sw.lap_into(bd, "holistic");
+            return Ok(out);
+        }
+
+        // Decomposable: per-slice weighted accumulation, no shared state.
+        let ranges = self.ranges(len);
+        let weights: Vec<f32> = updates.iter().map(|u| algo.weight(u)).collect();
+        let wtot: f64 = weights.iter().map(|w| *w as f64).sum();
+        let identity = algo.identity_transform();
+
+        let mut out = vec![0f32; len];
+        let mut slots: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
+        let mut rest = out.as_mut_slice();
+        for r in &ranges {
+            let (head, tail) = rest.split_at_mut(r.len());
+            slots.push(head);
+            rest = tail;
+        }
+        std::thread::scope(|s| {
+            for (r, slot) in ranges.iter().zip(slots) {
+                let weights = &weights;
+                s.spawn(move || {
+                    for (u, w) in updates.iter().zip(weights) {
+                        let src = &u.data[r.clone()];
+                        if identity {
+                            for (o, x) in slot.iter_mut().zip(src) {
+                                *o += w * x;
+                            }
+                        } else {
+                            for (o, x) in slot.iter_mut().zip(src) {
+                                *o += w * algo.transform(*x);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        sw.lap_into(bd, "sum");
+        let denom = wtot as f32 + EPS;
+        for v in out.iter_mut() {
+            *v /= denom;
+        }
+        sw.lap_into(bd, "reduce");
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::batch;
+    use super::*;
+    use crate::engine::SerialEngine;
+    use crate::fusion::{ClippedAvg, CoordMedian, FedAvg, IterAvg, Krum, Zeno};
+    use crate::util::prop::{all_close, check};
+
+    #[test]
+    fn ranges_partition_exactly() {
+        let e = ParallelEngine::new(4);
+        let rs = e.ranges(10);
+        assert_eq!(rs.len(), 4);
+        assert_eq!(rs.iter().map(|r| r.len()).sum::<usize>(), 10);
+        assert_eq!(rs[0], 0..3);
+        assert_eq!(rs[3], 8..10);
+        // more threads than elements
+        let rs = ParallelEngine::new(8).ranges(3);
+        assert_eq!(rs.len(), 3);
+    }
+
+    #[test]
+    fn prop_parallel_matches_serial_all_algos() {
+        let serial = SerialEngine::unbounded();
+        let algos: Vec<Box<dyn FusionAlgorithm>> = vec![
+            Box::new(FedAvg),
+            Box::new(IterAvg),
+            Box::new(ClippedAvg { clip: 0.5 }),
+            Box::new(CoordMedian),
+            Box::new(Zeno { trim_b: 1 }),
+        ];
+        for algo in &algos {
+            check(&format!("parallel-parity-{}", algo.name()), 10, |i, rng| {
+                let n = 3 + rng.gen_range(8) as usize;
+                let len = 16 + 8 * rng.gen_range(24) as usize;
+                let updates = batch(i as u64 * 31 + 7, n, len);
+                let threads = 1 + rng.gen_range(7) as usize;
+                let par = ParallelEngine::new(threads);
+                let mut bd1 = Breakdown::new();
+                let mut bd2 = Breakdown::new();
+                let a = serial.aggregate(algo.as_ref(), &updates, &mut bd1).map_err(|e| e.to_string())?;
+                let b = par.aggregate(algo.as_ref(), &updates, &mut bd2).map_err(|e| e.to_string())?;
+                all_close(&a, &b, 1e-4, 1e-5)
+            });
+        }
+    }
+
+    #[test]
+    fn krum_parity() {
+        let updates = batch(9, 9, 128);
+        let serial = SerialEngine::unbounded();
+        let par = ParallelEngine::new(4);
+        let algo = Krum { byzantine_f: 1 };
+        let mut bd = Breakdown::new();
+        let a = serial.aggregate(&algo, &updates, &mut bd).unwrap();
+        let b = par.aggregate(&algo, &updates, &mut bd).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn single_thread_degenerates_to_serial() {
+        let updates = batch(11, 6, 64);
+        let par = ParallelEngine::new(1);
+        let serial = SerialEngine::unbounded();
+        let mut bd = Breakdown::new();
+        let a = par.aggregate(&FedAvg, &updates, &mut bd).unwrap();
+        let b = serial.aggregate(&FedAvg, &updates, &mut bd).unwrap();
+        all_close(&a, &b, 1e-6, 1e-7).unwrap();
+    }
+}

@@ -1,0 +1,117 @@
+//! The serial engine — faithful analog of the IBMFL/NumPy baseline the
+//! paper measures in §III-A: a single arithmetic stream, no parallelism
+//! (Fig 3 shows NumPy ignores extra cores), updates held in budgeted
+//! memory.
+
+use super::{validate, AggregationEngine, EngineError};
+use crate::fusion::{Accumulator, FusionAlgorithm};
+use crate::memsim::MemoryBudget;
+use crate::metrics::{Breakdown, Stopwatch};
+use crate::tensorstore::ModelUpdate;
+
+pub struct SerialEngine {
+    budget: MemoryBudget,
+}
+
+impl SerialEngine {
+    pub fn new(budget: MemoryBudget) -> SerialEngine {
+        SerialEngine { budget }
+    }
+
+    pub fn unbounded() -> SerialEngine {
+        SerialEngine { budget: MemoryBudget::unbounded() }
+    }
+
+    pub fn budget(&self) -> &MemoryBudget {
+        &self.budget
+    }
+}
+
+impl AggregationEngine for SerialEngine {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn aggregate(
+        &self,
+        algo: &dyn FusionAlgorithm,
+        updates: &[ModelUpdate],
+        bd: &mut Breakdown,
+    ) -> Result<Vec<f32>, EngineError> {
+        let len = validate(updates)?;
+        let mut sw = Stopwatch::start();
+
+        // Working memory: the accumulator (and for holistic algorithms the
+        // engine would additionally hold the full set — already charged at
+        // ingest by the coordinator; here we charge scratch only).
+        let _scratch = self.budget.reserve(len as u64 * 4)?;
+
+        if algo.decomposable() {
+            let mut acc = Accumulator::zeros(len);
+            for u in updates {
+                algo.accumulate(&mut acc, u);
+            }
+            sw.lap_into(bd, "sum");
+            let out = algo.finalize(acc);
+            sw.lap_into(bd, "reduce");
+            Ok(out)
+        } else {
+            let refs: Vec<&ModelUpdate> = updates.iter().collect();
+            let out = algo.holistic(&refs)?;
+            sw.lap_into(bd, "holistic");
+            Ok(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::batch;
+    use super::*;
+    use crate::fusion::{CoordMedian, FedAvg, IterAvg};
+    use crate::util::prop::all_close;
+
+    #[test]
+    fn fedavg_known_values() {
+        let updates = vec![
+            ModelUpdate::new(0, 1.0, 0, vec![2.0, 4.0]),
+            ModelUpdate::new(1, 3.0, 0, vec![6.0, 0.0]),
+        ];
+        let e = SerialEngine::unbounded();
+        let mut bd = Breakdown::new();
+        let out = e.aggregate(&FedAvg, &updates, &mut bd).unwrap();
+        all_close(&out, &[5.0, 1.0], 1e-4, 1e-5).unwrap();
+        assert!(bd.get("sum") >= 0.0);
+    }
+
+    #[test]
+    fn holistic_path_used_for_median() {
+        let updates = batch(1, 5, 32);
+        let e = SerialEngine::unbounded();
+        let mut bd = Breakdown::new();
+        let out = e.aggregate(&CoordMedian, &updates, &mut bd).unwrap();
+        assert_eq!(out.len(), 32);
+        assert!(bd.get("holistic") > 0.0 || bd.phases().iter().any(|(p, _)| p == "holistic"));
+    }
+
+    #[test]
+    fn oom_when_scratch_exceeds_budget() {
+        let updates = batch(2, 2, 1024);
+        let e = SerialEngine::new(MemoryBudget::new(100)); // < 4 KB scratch
+        let mut bd = Breakdown::new();
+        assert!(matches!(
+            e.aggregate(&IterAvg, &updates, &mut bd),
+            Err(EngineError::Memory(_))
+        ));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let updates = batch(3, 16, 256);
+        let e = SerialEngine::unbounded();
+        let mut bd = Breakdown::new();
+        let a = e.aggregate(&FedAvg, &updates, &mut bd).unwrap();
+        let b = e.aggregate(&FedAvg, &updates, &mut bd).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,310 @@
+//! The XLA engine — the AOT hot path.
+//!
+//! Updates are stacked into the fixed `[K, C]` geometry the Pallas
+//! weighted-sum artifact was lowered with (zero-weight padding for the last
+//! group, zero-padding for the last chunk), executed on the PJRT CPU
+//! client, and the per-group `(partial_sum, weight_total)` outputs are
+//! combined in rust — the associativity the L2 tests pin down.
+//!
+//! Non-decomposable algorithms: coordinate median dispatches to the exact-K
+//! `median_k{8,16,32}` artifacts when the party count matches; other cases
+//! return `Unsupported` so the coordinator falls back to the parallel
+//! engine (recorded in DESIGN.md §Perf as a deliberate policy, not a gap).
+
+use super::{validate, AggregationEngine, EngineError};
+use crate::fusion::{FusionAlgorithm, EPS};
+use crate::metrics::{Breakdown, Stopwatch};
+use crate::runtime::Runtime;
+use crate::tensorstore::ModelUpdate;
+
+pub struct XlaEngine {
+    rtm: Runtime,
+    k: usize,
+}
+
+impl XlaEngine {
+    /// `k` must be one of the manifest's stack heights.
+    pub fn new(rtm: Runtime, k: usize) -> Result<XlaEngine, EngineError> {
+        if !rtm.manifest().stack_ks.contains(&k) {
+            return Err(EngineError::Runtime(format!(
+                "no wsum artifact with K={k} (have {:?})",
+                rtm.manifest().stack_ks
+            )));
+        }
+        Ok(XlaEngine { rtm, k })
+    }
+
+    /// Pick the best K for an expected party count.
+    ///
+    /// §Perf: smaller K wins on the CPU-interpret path — the K=16 artifact
+    /// lowers to a single-grid-step Pallas call (4 MiB tile) that executes
+    /// at ~20 GB/s, while K=64 forces either a multi-step grid (0.65 GB/s)
+    /// or a 16 MiB tile (2.8 GB/s).  The extra group loop in rust is
+    /// cheap by comparison, so `auto` always picks the smallest K.
+    pub fn auto(rtm: Runtime, expected_parties: usize) -> Result<XlaEngine, EngineError> {
+        let _ = expected_parties;
+        let k = rtm.manifest().stack_ks.iter().copied().min().unwrap_or(16);
+        Self::new(rtm, k)
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rtm
+    }
+
+    fn wsum_name(&self, clipped: bool) -> String {
+        if clipped {
+            format!("clipsum_k{}", self.k)
+        } else {
+            format!("wsum_k{}", self.k)
+        }
+    }
+
+    fn aggregate_decomposable(
+        &self,
+        algo: &dyn FusionAlgorithm,
+        updates: &[ModelUpdate],
+        len: usize,
+        bd: &mut Breakdown,
+    ) -> Result<Vec<f32>, EngineError> {
+        let c = self.rtm.manifest().chunk_c;
+        let k = self.k;
+        let chunks = crate::tensorstore::chunk_count(len, c);
+        let clipped = !algo.identity_transform();
+        let clip_value = if clipped {
+            // Recover the clip threshold by probing the transform: for the
+            // ClippedAvg family transform(x)=clamp(x,-c,c), so transform of
+            // a huge value IS the threshold.
+            algo.transform(f32::MAX)
+        } else {
+            0.0
+        };
+        let art = self.wsum_name(clipped);
+
+        let mut sw = Stopwatch::start();
+        let weights: Vec<f32> = updates.iter().map(|u| algo.weight(u)).collect();
+        let mut out = vec![0f32; len];
+        let mut wtot = 0f64;
+        // §Perf: one persistent stack literal + copy_raw_from, instead of a
+        // fresh vec1().reshape() per group (which copied the 16 MB stack
+        // twice and re-allocated every call) — see EXPERIMENTS.md §Perf.
+        let mut stack_host = vec![0f32; k * c];
+        let mut stack_lit = xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[k, c]);
+        let mut part = vec![0f32; c];
+
+        for chunk in 0..chunks {
+            let lo = chunk * c;
+            let hi = ((chunk + 1) * c).min(len);
+            let mut chunk_wtot = 0f64;
+            for group in updates.chunks(k).zip(weights.chunks(k)) {
+                let (gus, gws) = group;
+                // fill stack rows, zero-pad the rest
+                for (row, u) in gus.iter().enumerate() {
+                    crate::tensorstore::copy_chunk(
+                        &u.data,
+                        c,
+                        chunk,
+                        &mut stack_host[row * c..(row + 1) * c],
+                    );
+                }
+                for row in gus.len()..k {
+                    stack_host[row * c..(row + 1) * c].fill(0.0);
+                }
+                stack_lit
+                    .copy_raw_from(&stack_host)
+                    .map_err(|e| EngineError::Runtime(format!("{e:?}")))?;
+                let mut wpad = vec![0f32; k];
+                wpad[..gws.len()].copy_from_slice(gws);
+                let w_lit = Runtime::lit_f32_1d(&wpad);
+                let clip_lit;
+                let mut inputs: Vec<&xla::Literal> = vec![&stack_lit, &w_lit];
+                if clipped {
+                    clip_lit = Runtime::lit_f32_scalar(clip_value);
+                    inputs.push(&clip_lit);
+                }
+                let outs = self
+                    .rtm
+                    .exec_ref(&art, &inputs)
+                    .map_err(|e| EngineError::Runtime(e.0))?;
+                outs[0]
+                    .copy_raw_to(&mut part)
+                    .map_err(|e| EngineError::Runtime(format!("{e:?}")))?;
+                for (s, x) in out[lo..hi].iter_mut().zip(&part) {
+                    *s += x;
+                }
+                chunk_wtot += Runtime::to_f32_scalar(&outs[1])
+                    .map_err(|e| EngineError::Runtime(e.0))? as f64;
+            }
+            if chunk == 0 {
+                wtot = chunk_wtot;
+            }
+        }
+        bd.add("exec", sw.lap());
+        let denom = wtot as f32 + EPS;
+        for v in out.iter_mut() {
+            *v /= denom;
+        }
+        sw.lap_into(bd, "reduce");
+        Ok(out)
+    }
+
+    fn aggregate_median(
+        &self,
+        updates: &[ModelUpdate],
+        len: usize,
+        bd: &mut Breakdown,
+    ) -> Result<Vec<f32>, EngineError> {
+        let n = updates.len();
+        let man = self.rtm.manifest();
+        if !man.median_ks.contains(&n) {
+            return Err(EngineError::Runtime(format!(
+                "median artifact needs n in {:?}, got {n} (fall back to parallel engine)",
+                man.median_ks
+            )));
+        }
+        let c = man.chunk_c;
+        let chunks = crate::tensorstore::chunk_count(len, c);
+        let art = format!("median_k{n}");
+        let mut sw = Stopwatch::start();
+        let mut out = vec![0f32; len];
+        let mut stack = vec![0f32; n * c];
+        for chunk in 0..chunks {
+            for (row, u) in updates.iter().enumerate() {
+                crate::tensorstore::copy_chunk(&u.data, c, chunk, &mut stack[row * c..(row + 1) * c]);
+            }
+            let outs = self
+                .rtm
+                .exec(
+                    &art,
+                    &[Runtime::lit_f32_2d(&stack, n, c).map_err(|e| EngineError::Runtime(e.0))?],
+                )
+                .map_err(|e| EngineError::Runtime(e.0))?;
+            let med = Runtime::to_f32_vec(&outs[0]).map_err(|e| EngineError::Runtime(e.0))?;
+            let lo = chunk * c;
+            let hi = ((chunk + 1) * c).min(len);
+            out[lo..hi].copy_from_slice(&med[..hi - lo]);
+        }
+        sw.lap_into(bd, "exec");
+        Ok(out)
+    }
+}
+
+impl AggregationEngine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn aggregate(
+        &self,
+        algo: &dyn FusionAlgorithm,
+        updates: &[ModelUpdate],
+        bd: &mut Breakdown,
+    ) -> Result<Vec<f32>, EngineError> {
+        let len = validate(updates)?;
+        if algo.decomposable() {
+            self.aggregate_decomposable(algo, updates, len, bd)
+        } else if algo.name() == "coordmedian" {
+            self.aggregate_median(updates, len, bd)
+        } else {
+            Err(EngineError::Runtime(format!(
+                "algorithm '{}' unsupported on the XLA path",
+                algo.name()
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::batch;
+    use super::*;
+    use crate::engine::SerialEngine;
+    use crate::fusion::{ClippedAvg, CoordMedian, FedAvg, IterAvg, Krum};
+    use crate::util::prop::all_close;
+
+    fn rtm() -> Runtime {
+        Runtime::load_default().expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn xla_matches_serial_fedavg_small_and_large() {
+        let e = XlaEngine::new(rtm(), 16).unwrap();
+        let s = SerialEngine::unbounded();
+        // small (single chunk, padded group) and large (multi chunk, 2 groups)
+        for (n, len) in [(3usize, 1000usize), (20, 70_000)] {
+            let updates = batch(7, n, len);
+            let mut bd1 = Breakdown::new();
+            let mut bd2 = Breakdown::new();
+            let a = e.aggregate(&FedAvg, &updates, &mut bd1).unwrap();
+            let b = s.aggregate(&FedAvg, &updates, &mut bd2).unwrap();
+            all_close(&a, &b, 1e-4, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn xla_iteravg_parity() {
+        let e = XlaEngine::new(rtm(), 16).unwrap();
+        let s = SerialEngine::unbounded();
+        let updates = batch(8, 17, 4096);
+        let mut bd = Breakdown::new();
+        let a = e.aggregate(&IterAvg, &updates, &mut bd).unwrap();
+        let b = s.aggregate(&IterAvg, &updates, &mut bd).unwrap();
+        all_close(&a, &b, 1e-4, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn xla_clipped_parity() {
+        let e = XlaEngine::new(rtm(), 16).unwrap();
+        let s = SerialEngine::unbounded();
+        let updates = batch(9, 5, 2048);
+        let algo = ClippedAvg { clip: 0.5 };
+        let mut bd = Breakdown::new();
+        let a = e.aggregate(&algo, &updates, &mut bd).unwrap();
+        let b = s.aggregate(&algo, &updates, &mut bd).unwrap();
+        all_close(&a, &b, 1e-4, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn xla_median_exact_k() {
+        let e = XlaEngine::new(rtm(), 16).unwrap();
+        let s = SerialEngine::unbounded();
+        let updates = batch(10, 8, 3000);
+        let mut bd = Breakdown::new();
+        let a = e.aggregate(&CoordMedian, &updates, &mut bd).unwrap();
+        let b = s.aggregate(&CoordMedian, &updates, &mut bd).unwrap();
+        all_close(&a, &b, 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn xla_median_wrong_n_unsupported() {
+        let e = XlaEngine::new(rtm(), 16).unwrap();
+        let updates = batch(11, 5, 100);
+        let mut bd = Breakdown::new();
+        assert!(matches!(
+            e.aggregate(&CoordMedian, &updates, &mut bd),
+            Err(EngineError::Runtime(_))
+        ));
+    }
+
+    #[test]
+    fn xla_krum_unsupported() {
+        let e = XlaEngine::new(rtm(), 16).unwrap();
+        let updates = batch(12, 9, 100);
+        let mut bd = Breakdown::new();
+        assert!(e.aggregate(&Krum { byzantine_f: 1 }, &updates, &mut bd).is_err());
+    }
+
+    #[test]
+    fn bad_k_rejected() {
+        assert!(XlaEngine::new(rtm(), 7).is_err());
+    }
+
+    #[test]
+    fn auto_picks_smallest_k() {
+        // §Perf policy: the K=16 single-grid-step artifact is the fast one
+        // on the CPU-interpret path regardless of party count.
+        let e = XlaEngine::auto(rtm(), 100).unwrap();
+        assert_eq!(e.k, 16);
+        let e = XlaEngine::auto(rtm(), 5).unwrap();
+        assert_eq!(e.k, 16);
+    }
+}

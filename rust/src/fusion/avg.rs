@@ -1,0 +1,168 @@
+//! The averaging family — the paper's workhorse fusion algorithms.
+//! Averaging is "the common building block of most fusion algorithms"
+//! (paper §III-A); these are all decomposable and hence MapReduce-able.
+
+use super::{FusionAlgorithm, EPS};
+use crate::tensorstore::ModelUpdate;
+
+/// Federated Averaging (McMahan et al. 2017), the paper's Eq. (1):
+/// `M = Σ n_i·w_i / (n_total + ε)` where `n_i` is the client sample count.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FedAvg;
+
+impl FusionAlgorithm for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn weight(&self, update: &ModelUpdate) -> f32 {
+        update.count
+    }
+}
+
+/// Iterative Averaging (IBMFL Iteravg): unweighted mean of updates.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterAvg;
+
+impl FusionAlgorithm for IterAvg {
+    fn name(&self) -> &'static str {
+        "iteravg"
+    }
+
+    fn weight(&self, _update: &ModelUpdate) -> f32 {
+        1.0
+    }
+}
+
+/// Gradient aggregation: sample-count-weighted mean of *gradients* (the
+/// updates carry gradients instead of weights; the server applies them).
+/// Mathematically the same algebra as FedAvg — kept distinct because the
+/// coordinator treats its output as a delta, not a model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GradAvg;
+
+impl FusionAlgorithm for GradAvg {
+    fn name(&self) -> &'static str {
+        "gradavg"
+    }
+
+    fn weight(&self, update: &ModelUpdate) -> f32 {
+        update.count
+    }
+}
+
+/// Clipped averaging (IBMFL/OpenFL ClippedAveraging): clamp every element
+/// to `[-clip, clip]` before the weighted mean — bounds the influence of a
+/// single client coordinate.
+#[derive(Clone, Copy, Debug)]
+pub struct ClippedAvg {
+    pub clip: f32,
+}
+
+impl FusionAlgorithm for ClippedAvg {
+    fn name(&self) -> &'static str {
+        "clipped"
+    }
+
+    fn weight(&self, update: &ModelUpdate) -> f32 {
+        update.count
+    }
+
+    fn transform(&self, x: f32) -> f32 {
+        x.clamp(-self.clip, self.clip)
+    }
+
+    fn identity_transform(&self) -> bool {
+        false
+    }
+}
+
+/// Weighted mean with the paper's epsilon, shared by tests.
+pub fn weighted_mean(updates: &[&ModelUpdate], weights: &[f32]) -> Vec<f32> {
+    let len = updates[0].data.len();
+    let mut sum = vec![0f32; len];
+    let mut wtot = 0f64;
+    for (u, w) in updates.iter().zip(weights) {
+        for (s, x) in sum.iter_mut().zip(&u.data) {
+            *s += w * x;
+        }
+        wtot += *w as f64;
+    }
+    let denom = wtot as f32 + EPS;
+    for v in sum.iter_mut() {
+        *v /= denom;
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::all_close;
+
+    fn upd(party: u64, count: f32, data: Vec<f32>) -> ModelUpdate {
+        ModelUpdate::new(party, count, 0, data)
+    }
+
+    #[test]
+    fn fedavg_weights_by_count() {
+        let a = upd(0, 1.0, vec![0.0, 0.0]);
+        let b = upd(1, 3.0, vec![4.0, 8.0]);
+        let out = FedAvg.holistic(&[&a, &b]).unwrap();
+        // (1*0 + 3*4) / 4 = 3 ; (1*0 + 3*8)/4 = 6
+        all_close(&out, &[3.0, 6.0], 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn iteravg_ignores_count() {
+        let a = upd(0, 1.0, vec![0.0]);
+        let b = upd(1, 1000.0, vec![8.0]);
+        let out = IterAvg.holistic(&[&a, &b]).unwrap();
+        all_close(&out, &[4.0], 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn clipped_clamps_before_weighting() {
+        let a = upd(0, 1.0, vec![10.0, -10.0, 0.5]);
+        let algo = ClippedAvg { clip: 1.0 };
+        let out = algo.holistic(&[&a]).unwrap();
+        all_close(&out, &[1.0, -1.0, 0.5], 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn clipped_equals_fedavg_when_clip_large() {
+        let a = upd(0, 2.0, vec![0.5, -0.25]);
+        let b = upd(1, 1.0, vec![0.1, 0.9]);
+        let clipped = ClippedAvg { clip: 100.0 }.holistic(&[&a, &b]).unwrap();
+        let plain = FedAvg.holistic(&[&a, &b]).unwrap();
+        all_close(&clipped, &plain, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn gradavg_matches_fedavg_algebra() {
+        let a = upd(0, 5.0, vec![1.0]);
+        let b = upd(1, 5.0, vec![3.0]);
+        all_close(
+            &GradAvg.holistic(&[&a, &b]).unwrap(),
+            &FedAvg.holistic(&[&a, &b]).unwrap(),
+            1e-6,
+            1e-6,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn single_update_passthrough() {
+        let a = upd(0, 7.0, vec![1.0, 2.0, 3.0]);
+        let out = FedAvg.holistic(&[&a]).unwrap();
+        all_close(&out, &[1.0, 2.0, 3.0], 1e-4, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn zero_weight_updates_dont_divide_by_zero() {
+        let a = upd(0, 0.0, vec![5.0]);
+        let out = FedAvg.holistic(&[&a]).unwrap();
+        // 0/(0+eps) = 0
+        assert_eq!(out[0], 0.0);
+    }
+}

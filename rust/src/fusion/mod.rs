@@ -1,0 +1,272 @@
+//! Fusion algorithms.
+//!
+//! Every algorithm is expressed against the same map/combine/finalize
+//! algebra so one implementation runs on *all* execution engines (serial,
+//! parallel, XLA, MapReduce, bag):
+//!
+//! * `accumulate` folds one client update into a partial accumulator
+//!   (the map side);
+//! * `combine` merges two partials (the reduce side — must be associative
+//!   and commutative, which the property tests verify);
+//! * `finalize` turns the accumulator into fused model weights.
+//!
+//! Algorithms that are **not** weight-linear (coordinate-wise median, Krum,
+//! Zeno — the paper's §V future-work set) are `decomposable() == false`:
+//! engines must gather the full update set and call `holistic` (which is
+//! exactly why the paper's single-node memory wall is so much harsher for
+//! them).
+
+pub mod avg;
+pub mod robust;
+
+pub use avg::{ClippedAvg, FedAvg, GradAvg, IterAvg};
+pub use robust::{CoordMedian, Krum, Zeno};
+
+use crate::tensorstore::ModelUpdate;
+
+/// The paper's Eq. (1) epsilon.
+pub const EPS: f32 = 1e-6;
+
+/// Partial state of a decomposable fusion: a weighted sum plus totals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Accumulator {
+    /// Per-parameter weighted sum.
+    pub sum: Vec<f32>,
+    /// Total weight (sum of per-client weights).
+    pub wtot: f64,
+    /// Number of updates folded in.
+    pub n: u64,
+}
+
+impl Accumulator {
+    pub fn zeros(len: usize) -> Accumulator {
+        Accumulator { sum: vec![0.0; len], wtot: 0.0, n: 0 }
+    }
+
+    /// Fold `w * data` into the sum.
+    pub fn add_weighted(&mut self, data: &[f32], w: f32) {
+        debug_assert_eq!(data.len(), self.sum.len());
+        for (s, x) in self.sum.iter_mut().zip(data) {
+            *s += w * x;
+        }
+        self.wtot += w as f64;
+        self.n += 1;
+    }
+
+    /// Merge another accumulator (element-wise add).
+    pub fn merge(&mut self, other: &Accumulator) {
+        debug_assert_eq!(other.sum.len(), self.sum.len());
+        for (s, x) in self.sum.iter_mut().zip(&other.sum) {
+            *s += x;
+        }
+        self.wtot += other.wtot;
+        self.n += other.n;
+    }
+}
+
+/// Errors surfaced by fusion (holistic algorithms have preconditions).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FusionError {
+    /// No updates to aggregate.
+    Empty,
+    /// Updates disagree on parameter count.
+    ShapeMismatch { want: usize, got: usize },
+    /// Byzantine parameter out of range (e.g. Krum f too large for n).
+    BadParam(String),
+}
+
+impl std::fmt::Display for FusionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FusionError::Empty => write!(f, "no updates to aggregate"),
+            FusionError::ShapeMismatch { want, got } => {
+                write!(f, "update length {got} != expected {want}")
+            }
+            FusionError::BadParam(m) => write!(f, "bad fusion parameter: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FusionError {}
+
+/// A fusion algorithm usable by every engine.
+pub trait FusionAlgorithm: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Per-update weight for the decomposable algebra (FedAvg: sample
+    /// count; IterAvg: 1).  Only meaningful when `decomposable()`.
+    fn weight(&self, update: &ModelUpdate) -> f32;
+
+    /// Optional per-element transform applied to an update before weighting
+    /// (ClippedAvg clamps here). Default: identity.
+    fn transform(&self, x: f32) -> f32 {
+        x
+    }
+
+    /// True when `transform` is the identity — engines use this to take the
+    /// copy-free vectorised accumulation path.
+    fn identity_transform(&self) -> bool {
+        true
+    }
+
+    /// Fold one update into an accumulator (map side).
+    fn accumulate(&self, acc: &mut Accumulator, update: &ModelUpdate) {
+        let w = self.weight(update);
+        debug_assert_eq!(update.data.len(), acc.sum.len());
+        if self.identity_transform() {
+            acc.add_weighted(&update.data, w);
+        } else {
+            for (s, x) in acc.sum.iter_mut().zip(&update.data) {
+                *s += w * self.transform(*x);
+            }
+            acc.wtot += w as f64;
+            acc.n += 1;
+        }
+    }
+
+    /// Merge partial accumulators (reduce side).
+    fn combine(&self, a: &mut Accumulator, b: &Accumulator) {
+        a.merge(b);
+    }
+
+    /// Finalize an accumulator into fused weights.
+    fn finalize(&self, acc: Accumulator) -> Vec<f32> {
+        let denom = acc.wtot as f32 + EPS;
+        let mut out = acc.sum;
+        for v in out.iter_mut() {
+            *v /= denom;
+        }
+        out
+    }
+
+    /// Whether the algorithm decomposes into accumulate/combine (streamable
+    /// and MapReduce-able).  Median/Krum/Zeno return false.
+    fn decomposable(&self) -> bool {
+        true
+    }
+
+    /// Whether a holistic algorithm is *per-coordinate* (the parameter axis
+    /// can be sliced across workers without changing the result).  True for
+    /// coordinate-wise median; FALSE for Krum/Zeno, whose client scoring is
+    /// a whole-vector function — slicing would change which clients get
+    /// selected per slice (a bug the parity property test caught).
+    fn coordinate_sliceable(&self) -> bool {
+        self.decomposable()
+    }
+
+    /// Holistic computation for non-decomposable algorithms.
+    fn holistic(&self, updates: &[&ModelUpdate]) -> Result<Vec<f32>, FusionError> {
+        // Default for decomposable algorithms: run the algebra.
+        let first = updates.first().ok_or(FusionError::Empty)?;
+        let len = first.data.len();
+        let mut acc = Accumulator::zeros(len);
+        for u in updates {
+            if u.data.len() != len {
+                return Err(FusionError::ShapeMismatch { want: len, got: u.data.len() });
+            }
+            self.accumulate(&mut acc, u);
+        }
+        Ok(self.finalize(acc))
+    }
+}
+
+/// Construct an algorithm by name (CLI / config entry point).
+pub fn by_name(name: &str) -> Option<Box<dyn FusionAlgorithm>> {
+    match name.to_ascii_lowercase().as_str() {
+        "fedavg" => Some(Box::new(FedAvg)),
+        "iteravg" => Some(Box::new(IterAvg)),
+        "gradavg" => Some(Box::new(GradAvg)),
+        "clipped" | "clippedavg" => Some(Box::new(ClippedAvg { clip: 1.0 })),
+        "median" | "coordmedian" => Some(Box::new(CoordMedian)),
+        "krum" => Some(Box::new(Krum { byzantine_f: 1 })),
+        "zeno" => Some(Box::new(Zeno { trim_b: 1 })),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{all_close, check};
+    use crate::util::rng::Rng;
+
+    fn upd(rng: &mut Rng, len: usize, count: f32) -> ModelUpdate {
+        let mut data = vec![0f32; len];
+        rng.fill_gaussian_f32(&mut data, 1.0);
+        ModelUpdate::new(rng.next_u64(), count, 0, data)
+    }
+
+    #[test]
+    fn accumulator_merge_is_addition() {
+        let mut a = Accumulator::zeros(3);
+        a.add_weighted(&[1.0, 2.0, 3.0], 2.0);
+        let mut b = Accumulator::zeros(3);
+        b.add_weighted(&[1.0, 1.0, 1.0], 1.0);
+        a.merge(&b);
+        assert_eq!(a.sum, vec![3.0, 5.0, 7.0]);
+        assert_eq!(a.wtot, 3.0);
+        assert_eq!(a.n, 2);
+    }
+
+    #[test]
+    fn by_name_covers_all() {
+        for n in ["fedavg", "iteravg", "gradavg", "clipped", "median", "krum", "zeno"] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    /// THE MapReduce invariant: combine() of group partials equals one-shot
+    /// accumulation for every decomposable algorithm, any split point.
+    #[test]
+    fn prop_combine_associativity() {
+        let algos: Vec<Box<dyn FusionAlgorithm>> = vec![
+            Box::new(FedAvg),
+            Box::new(IterAvg),
+            Box::new(GradAvg),
+            Box::new(ClippedAvg { clip: 0.8 }),
+        ];
+        for algo in &algos {
+            check(&format!("combine-assoc-{}", algo.name()), 25, |_, rng| {
+                let len = 8 * (1 + rng.gen_range(16) as usize);
+                let n = 2 + rng.gen_range(12) as usize;
+                let updates: Vec<ModelUpdate> = (0..n)
+                    .map(|_| {
+                        let w = 1.0 + rng.gen_range(100) as f32;
+                        upd(rng, len, w)
+                    })
+                    .collect();
+                let refs: Vec<&ModelUpdate> = updates.iter().collect();
+                let whole = algo.holistic(&refs).unwrap();
+
+                let split = 1 + rng.gen_range(n as u64 - 1) as usize;
+                let mut a = Accumulator::zeros(len);
+                for u in &updates[..split] {
+                    algo.accumulate(&mut a, u);
+                }
+                let mut b = Accumulator::zeros(len);
+                for u in &updates[split..] {
+                    algo.accumulate(&mut b, u);
+                }
+                algo.combine(&mut a, &b);
+                let merged = algo.finalize(a);
+                all_close(&merged, &whole, 1e-4, 1e-5)
+            });
+        }
+    }
+
+    #[test]
+    fn holistic_empty_errors() {
+        assert_eq!(FedAvg.holistic(&[]).unwrap_err(), FusionError::Empty);
+    }
+
+    #[test]
+    fn holistic_shape_mismatch_errors() {
+        let a = ModelUpdate::new(0, 1.0, 0, vec![1.0; 4]);
+        let b = ModelUpdate::new(1, 1.0, 0, vec![1.0; 5]);
+        assert!(matches!(
+            FedAvg.holistic(&[&a, &b]),
+            Err(FusionError::ShapeMismatch { want: 4, got: 5 })
+        ));
+    }
+}

@@ -1,0 +1,344 @@
+//! Byzantine-robust fusion — the paper's §V future-work set, implemented as
+//! first-class algorithms.  None of these are weight-linear, so they are
+//! `decomposable() == false`: every engine must materialise the full update
+//! set (which is exactly the memory pressure the paper's distributed path
+//! exists to relieve).
+
+use super::{FusionAlgorithm, FusionError};
+use crate::tensorstore::ModelUpdate;
+
+/// Coordinate-wise median (Yin et al. 2018): per-parameter median across
+/// clients.  Robust to < 50 % corrupted coordinates.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoordMedian;
+
+impl FusionAlgorithm for CoordMedian {
+    fn name(&self) -> &'static str {
+        "coordmedian"
+    }
+
+    fn weight(&self, _u: &ModelUpdate) -> f32 {
+        1.0
+    }
+
+    fn decomposable(&self) -> bool {
+        false
+    }
+
+    fn coordinate_sliceable(&self) -> bool {
+        true // median is per-coordinate
+    }
+
+    fn holistic(&self, updates: &[&ModelUpdate]) -> Result<Vec<f32>, FusionError> {
+        let first = updates.first().ok_or(FusionError::Empty)?;
+        let len = first.data.len();
+        check_shapes(updates, len)?;
+        let n = updates.len();
+        let mut out = vec![0f32; len];
+        let mut col = vec![0f32; n];
+        for (j, o) in out.iter_mut().enumerate() {
+            for (i, u) in updates.iter().enumerate() {
+                col[i] = u.data[j];
+            }
+            *o = median_inplace(&mut col);
+        }
+        Ok(out)
+    }
+}
+
+/// Median by select_nth_unstable; even n averages the two central elements
+/// (matches numpy.median, which the oracle uses).
+fn median_inplace(xs: &mut [f32]) -> f32 {
+    let n = xs.len();
+    debug_assert!(n > 0);
+    let mid = n / 2;
+    let (_, hi, _) = xs.select_nth_unstable_by(mid, |a, b| a.total_cmp(b));
+    let hi = *hi;
+    if n % 2 == 1 {
+        hi
+    } else {
+        // max of the lower half is the other central element
+        let lo = xs[..mid]
+            .iter()
+            .copied()
+            .fold(f32::NEG_INFINITY, f32::max);
+        (lo + hi) / 2.0
+    }
+}
+
+/// Krum (Blanchard et al. 2017): select the single update whose summed
+/// squared distance to its `n - f - 2` nearest neighbours is smallest.
+/// Tolerates `f` Byzantine clients when `n >= 2f + 3`.
+#[derive(Clone, Copy, Debug)]
+pub struct Krum {
+    pub byzantine_f: usize,
+}
+
+impl Krum {
+    /// Krum scores for every update (exposed for the XLA-engine parity test
+    /// against the `krum_k16` artifact).
+    pub fn scores(&self, updates: &[&ModelUpdate]) -> Result<Vec<f64>, FusionError> {
+        let n = updates.len();
+        let f = self.byzantine_f;
+        if n < 2 * f + 3 {
+            return Err(FusionError::BadParam(format!(
+                "krum needs n >= 2f+3 (n={n}, f={f})"
+            )));
+        }
+        let len = updates[0].data.len();
+        check_shapes(updates, len)?;
+        // Pairwise squared distances.
+        let mut d = vec![0f64; n * n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let mut s = 0f64;
+                for (a, b) in updates[i].data.iter().zip(&updates[j].data) {
+                    let diff = (*a - *b) as f64;
+                    s += diff * diff;
+                }
+                d[i * n + j] = s;
+                d[j * n + i] = s;
+            }
+        }
+        // Score = sum of the n-f-2 smallest distances to others.
+        let keep = n - f - 2;
+        let scores = (0..n)
+            .map(|i| {
+                let mut row: Vec<f64> = (0..n).filter(|j| *j != i).map(|j| d[i * n + j]).collect();
+                row.sort_by(|a, b| a.total_cmp(b));
+                row.iter().take(keep).sum()
+            })
+            .collect();
+        Ok(scores)
+    }
+}
+
+impl FusionAlgorithm for Krum {
+    fn name(&self) -> &'static str {
+        "krum"
+    }
+
+    fn weight(&self, _u: &ModelUpdate) -> f32 {
+        1.0
+    }
+
+    fn decomposable(&self) -> bool {
+        false
+    }
+
+    fn holistic(&self, updates: &[&ModelUpdate]) -> Result<Vec<f32>, FusionError> {
+        let scores = self.scores(updates)?;
+        let best = scores
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .ok_or(FusionError::Empty)?;
+        Ok(updates[best].data.clone())
+    }
+}
+
+/// Zeno-style trimmed aggregation (Xie et al. 2018, simplified): rank
+/// updates by a suspicion score (distance to the coordinate-wise median of
+/// the cohort — a cheap stand-in for the stochastic descent oracle), drop
+/// the `trim_b` most suspicious, and average the rest.
+#[derive(Clone, Copy, Debug)]
+pub struct Zeno {
+    pub trim_b: usize,
+}
+
+impl FusionAlgorithm for Zeno {
+    fn name(&self) -> &'static str {
+        "zeno"
+    }
+
+    fn weight(&self, _u: &ModelUpdate) -> f32 {
+        1.0
+    }
+
+    fn decomposable(&self) -> bool {
+        false
+    }
+
+    fn holistic(&self, updates: &[&ModelUpdate]) -> Result<Vec<f32>, FusionError> {
+        let n = updates.len();
+        if n == 0 {
+            return Err(FusionError::Empty);
+        }
+        if self.trim_b >= n {
+            return Err(FusionError::BadParam(format!(
+                "zeno trim_b={} >= n={n}",
+                self.trim_b
+            )));
+        }
+        let len = updates[0].data.len();
+        check_shapes(updates, len)?;
+        let center = CoordMedian.holistic(updates)?;
+        let mut scored: Vec<(usize, f64)> = updates
+            .iter()
+            .enumerate()
+            .map(|(i, u)| {
+                let s: f64 = u
+                    .data
+                    .iter()
+                    .zip(&center)
+                    .map(|(a, b)| {
+                        let d = (*a - *b) as f64;
+                        d * d
+                    })
+                    .sum();
+                (i, s)
+            })
+            .collect();
+        scored.sort_by(|a, b| a.1.total_cmp(&b.1));
+        let kept = &scored[..n - self.trim_b];
+        let mut sum = vec![0f32; len];
+        for (i, _) in kept {
+            for (s, x) in sum.iter_mut().zip(&updates[*i].data) {
+                *s += x;
+            }
+        }
+        let denom = kept.len() as f32;
+        for v in sum.iter_mut() {
+            *v /= denom;
+        }
+        Ok(sum)
+    }
+}
+
+fn check_shapes(updates: &[&ModelUpdate], len: usize) -> Result<(), FusionError> {
+    for u in updates {
+        if u.data.len() != len {
+            return Err(FusionError::ShapeMismatch { want: len, got: u.data.len() });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{all_close, check};
+    use crate::util::rng::Rng;
+
+    fn upd(party: u64, data: Vec<f32>) -> ModelUpdate {
+        ModelUpdate::new(party, 1.0, 0, data)
+    }
+
+    #[test]
+    fn median_odd_even() {
+        let us: Vec<ModelUpdate> = vec![
+            upd(0, vec![1.0, 5.0]),
+            upd(1, vec![2.0, 6.0]),
+            upd(2, vec![9.0, 7.0]),
+        ];
+        let refs: Vec<&ModelUpdate> = us.iter().collect();
+        let m = CoordMedian.holistic(&refs).unwrap();
+        assert_eq!(m, vec![2.0, 6.0]);
+
+        let us4: Vec<ModelUpdate> = vec![
+            upd(0, vec![1.0]),
+            upd(1, vec![2.0]),
+            upd(2, vec![3.0]),
+            upd(3, vec![10.0]),
+        ];
+        let refs4: Vec<&ModelUpdate> = us4.iter().collect();
+        assert_eq!(CoordMedian.holistic(&refs4).unwrap(), vec![2.5]);
+    }
+
+    #[test]
+    fn median_resists_outlier() {
+        let us: Vec<ModelUpdate> = vec![
+            upd(0, vec![1.0]),
+            upd(1, vec![1.1]),
+            upd(2, vec![1e9]), // byzantine
+        ];
+        let refs: Vec<&ModelUpdate> = us.iter().collect();
+        assert_eq!(CoordMedian.holistic(&refs).unwrap(), vec![1.1]);
+    }
+
+    #[test]
+    fn prop_median_between_min_max() {
+        check("median-bounded", 30, |_, rng| {
+            let n = 1 + rng.gen_range(9) as usize;
+            let len = 1 + rng.gen_range(32) as usize;
+            let us: Vec<ModelUpdate> = (0..n)
+                .map(|i| {
+                    let mut d = vec![0f32; len];
+                    rng.fill_gaussian_f32(&mut d, 2.0);
+                    upd(i as u64, d)
+                })
+                .collect();
+            let refs: Vec<&ModelUpdate> = us.iter().collect();
+            let m = CoordMedian.holistic(&refs).unwrap();
+            for j in 0..len {
+                let lo = refs.iter().map(|u| u.data[j]).fold(f32::INFINITY, f32::min);
+                let hi = refs.iter().map(|u| u.data[j]).fold(f32::NEG_INFINITY, f32::max);
+                crate::prop_assert!(
+                    m[j] >= lo && m[j] <= hi,
+                    "median {} outside [{lo},{hi}] at {j}",
+                    m[j]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn krum_picks_cluster_member() {
+        let mut rng = Rng::new(5);
+        let mut us = Vec::new();
+        for i in 0..8 {
+            let mut d = vec![0f32; 64];
+            rng.fill_gaussian_f32(&mut d, 0.01);
+            us.push(upd(i, d));
+        }
+        let mut evil = vec![0f32; 64];
+        rng.fill_gaussian_f32(&mut evil, 10.0);
+        us.push(upd(8, evil.clone()));
+        let refs: Vec<&ModelUpdate> = us.iter().collect();
+        let chosen = Krum { byzantine_f: 1 }.holistic(&refs).unwrap();
+        assert_ne!(chosen, evil, "krum must not select the outlier");
+        assert!(us[..8].iter().any(|u| u.data == chosen));
+    }
+
+    #[test]
+    fn krum_needs_enough_clients() {
+        let us: Vec<ModelUpdate> = (0..4).map(|i| upd(i, vec![0.0; 4])).collect();
+        let refs: Vec<&ModelUpdate> = us.iter().collect();
+        assert!(matches!(
+            Krum { byzantine_f: 1 }.holistic(&refs),
+            Err(FusionError::BadParam(_))
+        ));
+    }
+
+    #[test]
+    fn zeno_drops_outlier() {
+        let us: Vec<ModelUpdate> = vec![
+            upd(0, vec![1.0]),
+            upd(1, vec![1.2]),
+            upd(2, vec![0.8]),
+            upd(3, vec![100.0]), // dropped
+        ];
+        let refs: Vec<&ModelUpdate> = us.iter().collect();
+        let out = Zeno { trim_b: 1 }.holistic(&refs).unwrap();
+        all_close(&out, &[1.0], 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn zeno_trim_bounds() {
+        let us = [upd(0, vec![1.0])];
+        let refs: Vec<&ModelUpdate> = us.iter().collect();
+        assert!(matches!(
+            Zeno { trim_b: 1 }.holistic(&refs),
+            Err(FusionError::BadParam(_))
+        ));
+    }
+
+    #[test]
+    fn robust_algos_not_decomposable() {
+        assert!(!CoordMedian.decomposable());
+        assert!(!Krum { byzantine_f: 1 }.decomposable());
+        assert!(!Zeno { trim_b: 1 }.decomposable());
+    }
+}

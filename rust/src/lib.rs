@@ -1,0 +1,39 @@
+//! # ElastiAgg
+//!
+//! A distributed and elastic aggregation service for scalable Federated
+//! Learning — a full reproduction of Khan et al., *"A Distributed and
+//! Elastic Aggregation Service for Scalable Federated Learning Systems"*
+//! (published as *"Towards cost-effective and resource-aware aggregation at
+//! Edge for Federated Learning"*, IEEE BigData 2023).
+//!
+//! The service classifies each round's aggregation workload by
+//! `S = update_size × parties` and adaptively dispatches it:
+//!
+//! * `S < M` (fits the aggregator node): the **single-node parallel engine**
+//!   ([`engine`]) fuses updates in memory across cores (the paper's Numba
+//!   path), with the XLA/PJRT hot path executing the AOT-compiled Pallas
+//!   weighted-sum kernel;
+//! * otherwise: the **distributed path** — parties upload updates to the
+//!   replicated block store ([`dfs`]), the Algorithm-1 monitor waits for the
+//!   threshold, and the MapReduce engine ([`mapreduce`]) partitions, reads
+//!   and fuses them across executor pools (the paper's PySpark + HDFS path).
+//!
+//! See `DESIGN.md` for the system inventory and per-figure experiment index.
+
+pub mod bag;
+pub mod bench;
+pub mod client;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod dfs;
+pub mod engine;
+pub mod fusion;
+pub mod mapreduce;
+pub mod memsim;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod server;
+pub mod tensorstore;
+pub mod util;

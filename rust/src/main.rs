@@ -1,0 +1,194 @@
+//! `elastiagg` — CLI for the adaptive aggregation service.
+//!
+//! Subcommands:
+//! * `train`     — end-to-end federated training with the adaptive service
+//! * `serve`     — run the aggregation server on a TCP address
+//! * `aggregate` — one-shot aggregation of synthetic updates (engine demo)
+//! * `calibrate` — print this box's cost-model constants
+//! * `models`    — print the Table-I model zoo
+
+use std::sync::Arc;
+
+use elastiagg::bench::{federated_train, TrainConfig};
+use elastiagg::cluster::CostModel;
+use elastiagg::config::{ModelZoo, ServiceConfig};
+use elastiagg::coordinator::AdaptiveService;
+use elastiagg::dfs::{DfsClient, NameNode};
+use elastiagg::engine::XlaEngine;
+use elastiagg::fusion;
+use elastiagg::mapreduce::ExecutorConfig;
+use elastiagg::runtime::Runtime;
+use elastiagg::server::FlServer;
+use elastiagg::util::cli::Args;
+use elastiagg::util::fmt;
+
+const VALUE_OPTS: &[&str] = &[
+    "parties", "rounds", "local-steps", "lr", "skew", "seed", "mem", "cores",
+    "algo", "model", "addr", "dfs-root", "scale", "n", "len",
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, VALUE_OPTS);
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("aggregate") => cmd_aggregate(&args),
+        Some("calibrate") => cmd_calibrate(),
+        Some("models") => cmd_models(),
+        _ => {
+            eprintln!(
+                "usage: elastiagg <train|serve|aggregate|calibrate|models> [options]\n\
+                 \n\
+                 train      --parties N --rounds R --local-steps S --lr F --skew F --mem SIZE\n\
+                 serve      --addr HOST:PORT --mem SIZE --cores N --algo NAME --model NAME\n\
+                 aggregate  --n N --len L --algo NAME --cores N\n\
+                 calibrate\n\
+                 models"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_train(args: &Args) {
+    let cfg = TrainConfig {
+        parties: args.usize_or("parties", 8),
+        rounds: args.u64_or("rounds", 20) as u32,
+        local_steps: args.usize_or("local-steps", 10),
+        lr: args.f64_or("lr", 0.05) as f32,
+        skew: args.f64_or("skew", 1.0),
+        seed: args.u64_or("seed", 42),
+        node_memory: args.size_or("mem", 1 << 30),
+        print_every: 1,
+    };
+    let root = std::env::temp_dir().join(format!("elastiagg-train-{}", std::process::id()));
+    let log = federated_train(&cfg, &root);
+    let _ = std::fs::remove_dir_all(&root);
+    println!(
+        "\nfinal: nll {:.4} -> {:.4}, accuracy {:.3} over {} rounds x {} parties",
+        log.first_nll(),
+        log.final_nll(),
+        log.final_acc(),
+        cfg.rounds,
+        cfg.parties
+    );
+}
+
+fn cmd_serve(args: &Args) {
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let algo_name = args.str_or("algo", "fedavg");
+    let algo = fusion::by_name(&algo_name).unwrap_or_else(|| {
+        eprintln!("unknown fusion algorithm '{algo_name}'");
+        std::process::exit(2);
+    });
+    let model = args.str_or("model", "CNN4.6");
+    let spec = ModelZoo::get(&model).unwrap_or_else(|| {
+        eprintln!("unknown model '{model}' (see `elastiagg models`)");
+        std::process::exit(2);
+    });
+    let scale = args.f64_or("scale", 0.01);
+    let mut cfg = ServiceConfig::default();
+    cfg.node.memory_bytes = args.size_or("mem", 2 << 30);
+    cfg.node.cores = args.usize_or("cores", 4);
+    cfg.size_scale = scale;
+
+    let dfs_root = args.str_or("dfs-root", &cfg.dfs_root.clone());
+    let nn = NameNode::create(
+        std::path::Path::new(&dfs_root),
+        cfg.cluster.datanodes,
+        cfg.cluster.replication,
+        8 << 20,
+    )
+    .expect("dfs root");
+    let dfs = DfsClient::new(nn);
+    let xla = Runtime::load_default().ok().and_then(|r| XlaEngine::auto(r, 64).ok());
+    let update_bytes = spec.scaled_bytes(scale);
+    let service = AdaptiveService::new(cfg, dfs, xla, ExecutorConfig::default());
+    let server = FlServer::new(service, Arc::from(algo), update_bytes);
+    let handle = server.start(&addr).expect("bind");
+    println!(
+        "elastiagg server on {} — model {} ({} scaled), algo {}",
+        handle.addr(),
+        spec.name,
+        fmt::bytes(update_bytes),
+        algo_name
+    );
+    println!("press ctrl-c to stop; rounds are driven by connected clients");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_aggregate(args: &Args) {
+    let n = args.usize_or("n", 64);
+    let len = args.usize_or("len", 1 << 20);
+    let algo_name = args.str_or("algo", "fedavg");
+    let algo = fusion::by_name(&algo_name).expect("unknown algo");
+    let updates = elastiagg::bench::gen_updates(1, n, len);
+    let cores = args.usize_or("cores", 4);
+
+    use elastiagg::engine::{AggregationEngine, ParallelEngine, SerialEngine};
+    let mut table = fmt::Table::new(&["engine", "time", "throughput"]);
+    let total_bytes = (n * len * 4) as f64;
+    for (name, engine) in [
+        ("serial", Box::new(SerialEngine::unbounded()) as Box<dyn AggregationEngine>),
+        ("parallel", Box::new(ParallelEngine::new(cores))),
+    ] {
+        let mut bd = elastiagg::metrics::Breakdown::new();
+        let (r, secs) =
+            elastiagg::bench::time(|| engine.aggregate(algo.as_ref(), &updates, &mut bd));
+        r.expect("aggregation failed");
+        table.row(&[
+            name.to_string(),
+            fmt::secs(secs),
+            format!("{}/s", fmt::bytes((total_bytes / secs) as u64)),
+        ]);
+    }
+    if let Ok(rtm) = Runtime::load_default() {
+        if let Ok(x) = XlaEngine::auto(rtm, n) {
+            let mut bd = elastiagg::metrics::Breakdown::new();
+            // first run pays the PJRT compile; report steady state too
+            let (r, cold) = elastiagg::bench::time(|| x.aggregate(algo.as_ref(), &updates, &mut bd));
+            if r.is_ok() {
+                let (_, warm) = elastiagg::bench::time(|| x.aggregate(algo.as_ref(), &updates, &mut bd));
+                table.row(&[
+                    "xla (cold)".to_string(),
+                    fmt::secs(cold),
+                    format!("{}/s", fmt::bytes((total_bytes / cold) as u64)),
+                ]);
+                table.row(&[
+                    "xla (warm)".to_string(),
+                    fmt::secs(warm),
+                    format!("{}/s", fmt::bytes((total_bytes / warm) as u64)),
+                ]);
+            }
+        }
+    }
+    println!("aggregating {n} updates x {} ({algo_name})", fmt::bytes(len as u64 * 4));
+    table.print();
+}
+
+fn cmd_calibrate() {
+    let m = CostModel::calibrate();
+    println!("cost model calibrated on this box:");
+    println!("  fuse_bps           = {}/s", fmt::bytes(m.fuse_bps as u64));
+    println!("  dfs_read_bps       = {}/s", fmt::bytes(m.dfs_read_bps as u64));
+    println!("  dfs_write_bps      = {}/s", fmt::bytes(m.dfs_write_bps as u64));
+    println!("  decode_bps         = {}/s", fmt::bytes(m.decode_bps as u64));
+    println!("  task_overhead_s    = {:.3}", m.task_overhead_s);
+    println!("  executor_startup_s = {:.1}", m.executor_startup_s);
+}
+
+fn cmd_models() {
+    let mut t = fmt::Table::new(&["model", "update size", "params", "architecture"]);
+    for m in ModelZoo::all() {
+        t.row(&[
+            m.name.to_string(),
+            fmt::bytes(m.size_bytes),
+            format!("{:.1} M", m.param_count() as f64 / 1e6),
+            m.arch.to_string(),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,212 @@
+//! The executor pool: Yarn-container analog.
+//!
+//! Each executor owns `cores` worker threads and a [`MemoryBudget`] (the
+//! paper caps containers at 35 GB).  Spin-up charges a configurable
+//! startup delay — the paper measures ~30 s to start 10 executors of
+//! 30 GB / 3 cores, which the `ablations` bench reproduces through the
+//! cluster cost model.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::memsim::MemoryBudget;
+
+/// Executor container geometry.
+#[derive(Clone, Debug)]
+pub struct ExecutorConfig {
+    pub executors: usize,
+    pub cores_per_executor: usize,
+    pub mem_per_executor: u64,
+    /// Real startup delay per pool (simulating context/container spin-up).
+    pub startup: std::time::Duration,
+}
+
+impl Default for ExecutorConfig {
+    fn default() -> Self {
+        ExecutorConfig {
+            executors: 2,
+            cores_per_executor: 2,
+            mem_per_executor: 1 << 30,
+            startup: std::time::Duration::ZERO,
+        }
+    }
+}
+
+type Task = Box<dyn FnOnce(&TaskCtx) + Send>;
+
+/// What a task sees: its executor's identity and memory budget.
+pub struct TaskCtx {
+    pub executor_id: usize,
+    pub core_id: usize,
+    pub memory: MemoryBudget,
+}
+
+struct Shared {
+    rx: Mutex<Receiver<Task>>,
+}
+
+/// A pool of `executors × cores_per_executor` worker threads.
+pub struct ExecutorPool {
+    tx: Option<Sender<Task>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    config: ExecutorConfig,
+    budgets: Vec<MemoryBudget>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ExecutorPool {
+    /// Spin up the pool (blocks for `config.startup` — the context cost the
+    /// paper's §III-D3 "seamless transition" discussion accounts for).
+    pub fn start(config: ExecutorConfig) -> ExecutorPool {
+        std::thread::sleep(config.startup);
+        let budgets: Vec<MemoryBudget> = (0..config.executors)
+            .map(|_| MemoryBudget::new(config.mem_per_executor))
+            .collect();
+        let (tx, rx) = channel::<Task>();
+        let shared = Arc::new(Shared { rx: Mutex::new(rx) });
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let mut workers = Vec::new();
+        for e in 0..config.executors {
+            for c in 0..config.cores_per_executor {
+                let shared = shared.clone();
+                let budget = budgets[e].clone();
+                let in_flight = in_flight.clone();
+                workers.push(std::thread::spawn(move || {
+                    let ctx = TaskCtx { executor_id: e, core_id: c, memory: budget };
+                    loop {
+                        let task = {
+                            let rx = shared.rx.lock().unwrap();
+                            rx.recv()
+                        };
+                        match task {
+                            Ok(t) => {
+                                t(&ctx);
+                                in_flight.fetch_sub(1, Ordering::AcqRel);
+                            }
+                            Err(_) => break, // pool shut down
+                        }
+                    }
+                }));
+            }
+        }
+        ExecutorPool { tx: Some(tx), workers, config, budgets, in_flight }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.config.executors * self.config.cores_per_executor
+    }
+
+    pub fn config(&self) -> &ExecutorConfig {
+        &self.config
+    }
+
+    pub fn budget(&self, executor: usize) -> &MemoryBudget {
+        &self.budgets[executor]
+    }
+
+    /// Submit a task; runs on any free worker.
+    pub fn submit<F>(&self, f: F)
+    where
+        F: FnOnce(&TaskCtx) + Send + 'static,
+    {
+        self.in_flight.fetch_add(1, Ordering::AcqRel);
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("workers gone");
+    }
+
+    /// Busy-ish wait until every submitted task finished.
+    pub fn join(&self) {
+        while self.in_flight.load(Ordering::Acquire) > 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ExecutorPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_tasks() {
+        let pool = ExecutorPool::start(ExecutorConfig {
+            executors: 2,
+            cores_per_executor: 2,
+            ..Default::default()
+        });
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.submit(move |_| {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn tasks_see_executor_identity_and_budget() {
+        let pool = ExecutorPool::start(ExecutorConfig {
+            executors: 3,
+            cores_per_executor: 1,
+            mem_per_executor: 12345,
+            ..Default::default()
+        });
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        for _ in 0..6 {
+            let seen = seen.clone();
+            pool.submit(move |ctx| {
+                assert_eq!(ctx.memory.budget(), 12345);
+                seen.lock().unwrap().push(ctx.executor_id);
+            });
+        }
+        pool.join();
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), 6);
+        assert!(seen.iter().all(|e| *e < 3));
+    }
+
+    #[test]
+    fn join_with_no_tasks_returns() {
+        let pool = ExecutorPool::start(ExecutorConfig::default());
+        pool.join();
+    }
+
+    #[test]
+    fn startup_delay_applied() {
+        let t0 = std::time::Instant::now();
+        let _pool = ExecutorPool::start(ExecutorConfig {
+            startup: std::time::Duration::from_millis(30),
+            ..Default::default()
+        });
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(30));
+    }
+
+    #[test]
+    fn executor_budgets_are_independent() {
+        let pool = ExecutorPool::start(ExecutorConfig {
+            executors: 2,
+            cores_per_executor: 1,
+            mem_per_executor: 100,
+            ..Default::default()
+        });
+        let r = pool.budget(0).reserve(100).unwrap();
+        assert!(pool.budget(0).reserve(1).is_err());
+        assert!(pool.budget(1).reserve(100).is_ok());
+        drop(r);
+    }
+}

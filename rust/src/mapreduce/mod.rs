@@ -1,0 +1,39 @@
+//! Sparklet — the Spark-MapReduce analog (paper §III-D2, Fig 4 steps ③–⑤).
+//!
+//! * [`rdd`] — partitioned datasets over DFS files (`binaryFiles` analog):
+//!   size-balanced partitions, lazy decode, optional caching (the paper
+//!   caches decoded RDDs for small models; caching is skipped for large
+//!   ones).
+//! * [`executor`] — the executor pool: worker threads with per-executor
+//!   core and memory budgets and a configurable spin-up cost (the paper's
+//!   ~30 s Spark-context start for 10×30 GB executors).
+//! * [`scheduler`] — the job driver: read/partition stage, sum stage,
+//!   reduce stage, with task retry and speculative re-execution; produces
+//!   the same phase breakdown the paper reports in Figs 7–13.
+
+pub mod executor;
+pub mod rdd;
+pub mod scheduler;
+
+pub use executor::{ExecutorConfig, ExecutorPool};
+pub use rdd::{BinaryFilesRdd, Partition};
+pub use scheduler::{JobError, SparkContext};
+
+/// How many partitions for `n_files` across `total_cores`: the paper lets
+/// Spark pick ~2× core oversubscription but caps tiny jobs at one partition
+/// per file.
+pub fn default_partitions(n_files: usize, total_cores: usize) -> usize {
+    (2 * total_cores).min(n_files).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_default_policy() {
+        assert_eq!(default_partitions(1000, 8), 16);
+        assert_eq!(default_partitions(3, 8), 3);
+        assert_eq!(default_partitions(0, 8), 1);
+    }
+}

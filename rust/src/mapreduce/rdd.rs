@@ -1,0 +1,241 @@
+//! RDD analog: a partitioned view over DFS update files.
+//!
+//! `binary_files` lists a DFS prefix and packs files into size-balanced
+//! partitions (greedy LPT — the effect `binaryFiles` + Spark's split
+//! computation has on HDFS blocks).  Decoding a partition yields
+//! `ModelUpdate`s; a decoded partition can be pinned in the cache so later
+//! stages skip the DFS read (paper: "we also enable caching for smaller
+//! model sizes ... caching is not efficient for large models").
+
+use std::sync::{Arc, Mutex};
+
+use crate::dfs::{DfsClient, DfsError};
+use crate::memsim::MemoryBudget;
+use crate::tensorstore::ModelUpdate;
+
+/// One partition: a set of DFS file paths plus their total bytes.
+#[derive(Clone, Debug, Default)]
+pub struct Partition {
+    pub index: usize,
+    pub files: Vec<String>,
+    pub bytes: u64,
+}
+
+/// A partitioned binary-files dataset with an optional decoded cache.
+pub struct BinaryFilesRdd {
+    pub partitions: Vec<Partition>,
+    dfs: DfsClient,
+    cache: Vec<Mutex<Option<Arc<Vec<ModelUpdate>>>>>,
+    pub cache_enabled: bool,
+}
+
+impl BinaryFilesRdd {
+    /// List `prefix` and pack into `n_partitions` size-balanced partitions
+    /// (greedy longest-processing-time).
+    pub fn binary_files(
+        dfs: DfsClient,
+        prefix: &str,
+        n_partitions: usize,
+        cache_enabled: bool,
+    ) -> BinaryFilesRdd {
+        let mut files = dfs.list(prefix);
+        // Largest-first for LPT balance.
+        files.sort_by(|a, b| b.len.cmp(&a.len).then(a.path.cmp(&b.path)));
+        let n = n_partitions.max(1).min(files.len().max(1));
+        let mut parts: Vec<Partition> = (0..n)
+            .map(|index| Partition { index, ..Default::default() })
+            .collect();
+        for f in files {
+            // least-loaded partition
+            let p = parts.iter_mut().min_by_key(|p| p.bytes).unwrap();
+            p.bytes += f.len;
+            p.files.push(f.path);
+        }
+        let cache = (0..n).map(|_| Mutex::new(None)).collect();
+        BinaryFilesRdd { partitions: parts, dfs, cache, cache_enabled }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    pub fn total_files(&self) -> usize {
+        self.partitions.iter().map(|p| p.files.len()).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.partitions.iter().map(|p| p.bytes).sum()
+    }
+
+    /// Decode partition `i`, charging `budget` for the decoded bytes.
+    /// Serves from cache when pinned.
+    pub fn decode_partition(
+        &self,
+        i: usize,
+        budget: &MemoryBudget,
+    ) -> Result<Arc<Vec<ModelUpdate>>, RddError> {
+        if self.cache_enabled {
+            if let Some(hit) = self.cache[i].lock().unwrap().as_ref() {
+                return Ok(hit.clone());
+            }
+        }
+        let part = &self.partitions[i];
+        let mut out = Vec::with_capacity(part.files.len());
+        let mut reservation = budget.reserve(0).map_err(RddError::Memory)?;
+        for path in &part.files {
+            let bytes = self.dfs.read(path).map_err(RddError::Dfs)?;
+            reservation.grow(bytes.len() as u64).map_err(RddError::Memory)?;
+            let u = ModelUpdate::decode(&bytes)
+                .map_err(|e| RddError::Decode(path.clone(), e.to_string()))?;
+            out.push(u);
+        }
+        let arc = Arc::new(out);
+        if self.cache_enabled {
+            // Pinned cache keeps the reservation alive for the RDD's life.
+            std::mem::forget(reservation);
+            *self.cache[i].lock().unwrap() = Some(arc.clone());
+        }
+        Ok(arc)
+    }
+
+    /// Stream partition `i` file-by-file (O(1 update) memory) — the path
+    /// decomposable fusions take.
+    pub fn stream_partition<F>(&self, i: usize, mut f: F) -> Result<(), RddError>
+    where
+        F: FnMut(ModelUpdate),
+    {
+        // Cache hit still serves streaming requests.
+        if self.cache_enabled {
+            if let Some(hit) = self.cache[i].lock().unwrap().as_ref() {
+                for u in hit.iter() {
+                    f(u.clone());
+                }
+                return Ok(());
+            }
+        }
+        for path in &self.partitions[i].files {
+            let bytes = self.dfs.read(path).map_err(RddError::Dfs)?;
+            let u = ModelUpdate::decode(&bytes)
+                .map_err(|e| RddError::Decode(path.clone(), e.to_string()))?;
+            f(u);
+        }
+        Ok(())
+    }
+
+    /// Whether partition `i` is currently cached.
+    pub fn is_cached(&self, i: usize) -> bool {
+        self.cache[i].lock().unwrap().is_some()
+    }
+}
+
+#[derive(Debug)]
+pub enum RddError {
+    Dfs(DfsError),
+    Memory(crate::memsim::OutOfMemory),
+    Decode(String, String),
+}
+
+impl std::fmt::Display for RddError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RddError::Dfs(e) => write!(f, "dfs: {e}"),
+            RddError::Memory(e) => write!(f, "memory: {e}"),
+            RddError::Decode(p, e) => write!(f, "decode {p}: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RddError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfs::datanode::tempdir::TempDir;
+    use crate::dfs::NameNode;
+    use crate::metrics::Breakdown;
+
+    fn store_with_updates(n: usize, len: usize) -> (DfsClient, TempDir) {
+        let td = TempDir::new();
+        let nn = NameNode::create(td.path(), 2, 1, 1 << 20).unwrap();
+        let c = DfsClient::new(nn);
+        let mut bd = Breakdown::new();
+        for p in 0..n as u64 {
+            let u = ModelUpdate::new(p, 1.0 + p as f32, 0, vec![p as f32; len]);
+            c.put_update(&u, &mut bd).unwrap();
+        }
+        (c, td)
+    }
+
+    #[test]
+    fn partitions_are_size_balanced() {
+        let (c, _td) = store_with_updates(20, 100);
+        let rdd = BinaryFilesRdd::binary_files(c, "/rounds/0/updates/", 4, false);
+        assert_eq!(rdd.num_partitions(), 4);
+        assert_eq!(rdd.total_files(), 20);
+        let sizes: Vec<u64> = rdd.partitions.iter().map(|p| p.bytes).collect();
+        let min = *sizes.iter().min().unwrap();
+        let max = *sizes.iter().max().unwrap();
+        assert!(max - min <= 500, "{sizes:?}");
+    }
+
+    #[test]
+    fn more_partitions_than_files_clamps() {
+        let (c, _td) = store_with_updates(3, 10);
+        let rdd = BinaryFilesRdd::binary_files(c, "/rounds/0/updates/", 16, false);
+        assert_eq!(rdd.num_partitions(), 3);
+    }
+
+    #[test]
+    fn decode_yields_all_updates() {
+        let (c, _td) = store_with_updates(6, 50);
+        let rdd = BinaryFilesRdd::binary_files(c, "/rounds/0/updates/", 2, false);
+        let b = MemoryBudget::unbounded();
+        let mut total = 0;
+        for i in 0..rdd.num_partitions() {
+            total += rdd.decode_partition(i, &b).unwrap().len();
+        }
+        assert_eq!(total, 6);
+    }
+
+    #[test]
+    fn cache_serves_second_read() {
+        let (c, _td) = store_with_updates(4, 50);
+        let rdd = BinaryFilesRdd::binary_files(c, "/rounds/0/updates/", 1, true);
+        let b = MemoryBudget::unbounded();
+        assert!(!rdd.is_cached(0));
+        let first = rdd.decode_partition(0, &b).unwrap();
+        assert!(rdd.is_cached(0));
+        let second = rdd.decode_partition(0, &b).unwrap();
+        assert!(Arc::ptr_eq(&first, &second));
+    }
+
+    #[test]
+    fn decode_respects_memory_budget() {
+        let (c, _td) = store_with_updates(4, 1000);
+        let rdd = BinaryFilesRdd::binary_files(c, "/rounds/0/updates/", 1, false);
+        let b = MemoryBudget::new(2000); // < 4 * ~4 KB
+        assert!(matches!(
+            rdd.decode_partition(0, &b),
+            Err(RddError::Memory(_))
+        ));
+    }
+
+    #[test]
+    fn stream_partition_visits_all() {
+        let (c, _td) = store_with_updates(5, 20);
+        let rdd = BinaryFilesRdd::binary_files(c, "/rounds/0/updates/", 2, false);
+        let mut seen = 0;
+        for i in 0..rdd.num_partitions() {
+            rdd.stream_partition(i, |_| seen += 1).unwrap();
+        }
+        assert_eq!(seen, 5);
+    }
+
+    #[test]
+    fn empty_prefix_single_empty_partition() {
+        let (c, _td) = store_with_updates(0, 0);
+        let rdd = BinaryFilesRdd::binary_files(c, "/rounds/9/updates/", 4, false);
+        assert_eq!(rdd.num_partitions(), 1);
+        assert_eq!(rdd.total_files(), 0);
+    }
+}

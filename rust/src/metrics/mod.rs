@@ -1,0 +1,209 @@
+//! Metrics: the per-step timing breakdown the paper reports in every
+//! distributed figure (read / partition / sum / reduce / write), plus simple
+//! counters and a stopwatch that can run on real OR virtual time.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Named phase durations in seconds (real or virtual), insertion-ordered by
+/// phase name for stable rendering.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    phases: Vec<(String, f64)>,
+}
+
+impl Breakdown {
+    pub fn new() -> Breakdown {
+        Breakdown::default()
+    }
+
+    /// Add (accumulate) seconds to a phase.
+    pub fn add(&mut self, phase: &str, secs: f64) {
+        if let Some(e) = self.phases.iter_mut().find(|(p, _)| p == phase) {
+            e.1 += secs;
+        } else {
+            self.phases.push((phase.to_string(), secs));
+        }
+    }
+
+    pub fn get(&self, phase: &str) -> f64 {
+        self.phases
+            .iter()
+            .find(|(p, _)| p == phase)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.phases.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn phases(&self) -> &[(String, f64)] {
+        &self.phases
+    }
+
+    /// Merge another breakdown into this one (phase-wise accumulate).
+    pub fn merge(&mut self, other: &Breakdown) {
+        for (p, s) in &other.phases {
+            self.add(p, *s);
+        }
+    }
+
+    /// Take the max per phase — used to combine parallel workers, where the
+    /// phase time is the slowest participant, not the sum.
+    pub fn merge_max(&mut self, other: &Breakdown) {
+        for (p, s) in &other.phases {
+            if let Some(e) = self.phases.iter_mut().find(|(q, _)| q == p) {
+                e.1 = e.1.max(*s);
+            } else {
+                self.phases.push((p.clone(), *s));
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.phases
+                .iter()
+                .map(|(p, s)| (p.clone(), Json::Num(*s)))
+                .collect(),
+        )
+    }
+
+    /// "read=1.20s sum=0.40s reduce=0.10s (total 1.70s)"
+    pub fn summary(&self) -> String {
+        let mut parts: Vec<String> = self
+            .phases
+            .iter()
+            .map(|(p, s)| format!("{p}={}", crate::util::fmt::secs(*s)))
+            .collect();
+        parts.push(format!("(total {})", crate::util::fmt::secs(self.total())));
+        parts.join(" ")
+    }
+}
+
+/// Stopwatch for timing real phases into a Breakdown.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Seconds since start (or last lap) and reset.
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let d = now.duration_since(self.start).as_secs_f64();
+        self.start = now;
+        d
+    }
+
+    /// Record a lap into `bd` under `phase`.
+    pub fn lap_into(&mut self, bd: &mut Breakdown, phase: &str) -> f64 {
+        let d = self.lap();
+        bd.add(phase, d);
+        d
+    }
+}
+
+/// Monotonic counters, used for ops accounting (bytes fused, tasks retried,
+/// cache hits, ...).
+#[derive(Clone, Debug, Default)]
+pub struct Counters {
+    map: BTreeMap<String, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Counters {
+        Counters::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.map.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.map.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &Counters) {
+        for (k, v) in &other.map {
+            self.inc(k, *v);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.map
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_accumulates_and_orders() {
+        let mut b = Breakdown::new();
+        b.add("read", 1.0);
+        b.add("reduce", 0.5);
+        b.add("read", 0.5);
+        assert_eq!(b.get("read"), 1.5);
+        assert_eq!(b.total(), 2.0);
+        assert_eq!(b.phases()[0].0, "read"); // insertion order preserved
+    }
+
+    #[test]
+    fn merge_sums_merge_max_maxes() {
+        let mut a = Breakdown::new();
+        a.add("x", 1.0);
+        let mut b = Breakdown::new();
+        b.add("x", 2.0);
+        b.add("y", 3.0);
+        let mut sum = a.clone();
+        sum.merge(&b);
+        assert_eq!(sum.get("x"), 3.0);
+        a.merge_max(&b);
+        assert_eq!(a.get("x"), 2.0);
+        assert_eq!(a.get("y"), 3.0);
+    }
+
+    #[test]
+    fn stopwatch_laps_are_positive() {
+        let mut sw = Stopwatch::start();
+        let mut bd = Breakdown::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let d = sw.lap_into(&mut bd, "phase");
+        assert!(d >= 0.004, "{d}");
+        assert_eq!(bd.get("phase"), d);
+    }
+
+    #[test]
+    fn counters() {
+        let mut c = Counters::new();
+        c.inc("bytes", 10);
+        c.inc("bytes", 5);
+        assert_eq!(c.get("bytes"), 15);
+        assert_eq!(c.get("missing"), 0);
+        let mut d = Counters::new();
+        d.inc("bytes", 1);
+        d.merge(&c);
+        assert_eq!(d.get("bytes"), 16);
+    }
+
+    #[test]
+    fn breakdown_json() {
+        let mut b = Breakdown::new();
+        b.add("read", 1.25);
+        let j = b.to_json().to_string();
+        assert!(j.contains("\"read\":1.25"), "{j}");
+    }
+}

@@ -1,0 +1,102 @@
+//! The message-passing communication path (the conventional FL transport
+//! the paper's small-workload mode uses, and whose thundering-herd
+//! behaviour at the aggregator §III-A Q3 discusses).
+//!
+//! A length-prefixed binary protocol over TCP:
+//!
+//! ```text
+//! frame := tag u8 | len u32 | payload [u8; len]
+//! ```
+//!
+//! Messages: party registration, update upload, fused-model fetch, and the
+//! *redirect* the coordinator sends when the next round is predicted to
+//! spill to the distributed path (§III-D3 seamless transition).
+
+pub mod protocol;
+pub mod server;
+
+pub use protocol::{Message, ProtoError};
+pub use server::{NetServer, ServerHandle};
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Blocking client for the aggregation server.
+pub struct NetClient {
+    stream: TcpStream,
+}
+
+impl NetClient {
+    pub fn connect(addr: &str) -> std::io::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(NetClient { stream })
+    }
+
+    /// Send one message and wait for the reply.
+    pub fn call(&mut self, msg: &Message) -> Result<Message, ProtoError> {
+        write_frame(&mut self.stream, msg)?;
+        read_frame(&mut self.stream)
+    }
+}
+
+/// Write one frame.
+pub fn write_frame<W: Write>(w: &mut W, msg: &Message) -> Result<(), ProtoError> {
+    let (tag, payload) = msg.encode();
+    w.write_all(&[tag])?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Message, ProtoError> {
+    let mut head = [0u8; 5];
+    r.read_exact(&mut head)?;
+    let tag = head[0];
+    let len = u32::from_le_bytes(head[1..5].try_into().unwrap()) as usize;
+    if len > protocol::MAX_FRAME {
+        return Err(ProtoError::FrameTooLarge(len));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Message::decode(tag, &payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensorstore::ModelUpdate;
+
+    #[test]
+    fn frame_roundtrip_via_cursor() {
+        let msgs = vec![
+            Message::Register { party: 42 },
+            Message::Registered { party: 42, round: 7 },
+            Message::Upload(ModelUpdate::new(1, 2.0, 3, vec![1.0, 2.0])),
+            Message::Ack { redirect_to_dfs: true },
+            Message::GetModel { round: 9 },
+            Message::Model { round: 9, weights: vec![0.5; 100] },
+            Message::NoModel { round: 9 },
+            Message::Error("boom".to_string()),
+        ];
+        for m in msgs {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &m).unwrap();
+            let got = read_frame(&mut std::io::Cursor::new(buf)).unwrap();
+            assert_eq!(got, m);
+        }
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = vec![0u8; 5];
+        buf[0] = 1;
+        buf[1..5].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut std::io::Cursor::new(buf)),
+            Err(ProtoError::FrameTooLarge(_))
+        ));
+    }
+}

@@ -1,0 +1,171 @@
+//! Wire messages of the aggregation protocol.
+
+use crate::tensorstore::{bytes_to_f32s, f32s_as_bytes, ModelUpdate, WireError};
+
+/// 2 GiB frame cap — a single full-size CNN956 update is ~1 GiB; anything
+/// larger than this is a corrupt header, rejected before allocation.
+pub const MAX_FRAME: usize = 2 << 30;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Party announces itself; server replies `Registered`.
+    Register { party: u64 },
+    Registered { party: u64, round: u32 },
+    /// Party uploads its update over the message-passing path.
+    Upload(ModelUpdate),
+    /// Server ack; `redirect_to_dfs` tells the party to write its NEXT
+    /// update to the shared store instead (seamless transition, §III-D3).
+    Ack { redirect_to_dfs: bool },
+    /// Fetch the fused model of a round.
+    GetModel { round: u32 },
+    Model { round: u32, weights: Vec<f32> },
+    NoModel { round: u32 },
+    Error(String),
+}
+
+#[derive(Debug)]
+pub enum ProtoError {
+    Io(std::io::Error),
+    UnknownTag(u8),
+    FrameTooLarge(usize),
+    BadPayload(String),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Io(e) => write!(f, "io: {e}"),
+            ProtoError::UnknownTag(t) => write!(f, "unknown tag {t:#x}"),
+            ProtoError::FrameTooLarge(n) => write!(f, "frame too large: {n}"),
+            ProtoError::BadPayload(m) => write!(f, "bad payload: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+impl From<std::io::Error> for ProtoError {
+    fn from(e: std::io::Error) -> Self {
+        ProtoError::Io(e)
+    }
+}
+
+impl From<WireError> for ProtoError {
+    fn from(e: WireError) -> Self {
+        ProtoError::BadPayload(e.to_string())
+    }
+}
+
+impl Message {
+    /// (tag, payload)
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        match self {
+            Message::Register { party } => (0x01, party.to_le_bytes().to_vec()),
+            Message::Registered { party, round } => {
+                let mut p = party.to_le_bytes().to_vec();
+                p.extend_from_slice(&round.to_le_bytes());
+                (0x02, p)
+            }
+            Message::Upload(u) => (0x03, u.encode()),
+            Message::Ack { redirect_to_dfs } => (0x04, vec![u8::from(*redirect_to_dfs)]),
+            Message::GetModel { round } => (0x05, round.to_le_bytes().to_vec()),
+            Message::Model { round, weights } => {
+                let mut p = round.to_le_bytes().to_vec();
+                p.extend_from_slice(f32s_as_bytes(weights));
+                (0x06, p)
+            }
+            Message::NoModel { round } => (0x07, round.to_le_bytes().to_vec()),
+            Message::Error(m) => (0x7F, m.as_bytes().to_vec()),
+        }
+    }
+
+    pub fn decode(tag: u8, payload: &[u8]) -> Result<Message, ProtoError> {
+        let need = |n: usize| -> Result<(), ProtoError> {
+            if payload.len() < n {
+                Err(ProtoError::BadPayload(format!("need {n} bytes, got {}", payload.len())))
+            } else {
+                Ok(())
+            }
+        };
+        match tag {
+            0x01 => {
+                need(8)?;
+                Ok(Message::Register { party: u64::from_le_bytes(payload[..8].try_into().unwrap()) })
+            }
+            0x02 => {
+                need(12)?;
+                Ok(Message::Registered {
+                    party: u64::from_le_bytes(payload[..8].try_into().unwrap()),
+                    round: u32::from_le_bytes(payload[8..12].try_into().unwrap()),
+                })
+            }
+            0x03 => Ok(Message::Upload(ModelUpdate::decode(payload)?)),
+            0x04 => {
+                need(1)?;
+                Ok(Message::Ack { redirect_to_dfs: payload[0] != 0 })
+            }
+            0x05 => {
+                need(4)?;
+                Ok(Message::GetModel { round: u32::from_le_bytes(payload[..4].try_into().unwrap()) })
+            }
+            0x06 => {
+                need(4)?;
+                if (payload.len() - 4) % 4 != 0 {
+                    return Err(ProtoError::BadPayload("weights not f32-aligned".into()));
+                }
+                Ok(Message::Model {
+                    round: u32::from_le_bytes(payload[..4].try_into().unwrap()),
+                    weights: bytes_to_f32s(&payload[4..]),
+                })
+            }
+            0x07 => {
+                need(4)?;
+                Ok(Message::NoModel { round: u32::from_le_bytes(payload[..4].try_into().unwrap()) })
+            }
+            0x7F => Ok(Message::Error(String::from_utf8_lossy(payload).into_owned())),
+            t => Err(ProtoError::UnknownTag(t)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tags_distinct() {
+        let msgs = [
+            Message::Register { party: 0 }.encode().0,
+            Message::Registered { party: 0, round: 0 }.encode().0,
+            Message::Upload(ModelUpdate::new(0, 0.0, 0, vec![])).encode().0,
+            Message::Ack { redirect_to_dfs: false }.encode().0,
+            Message::GetModel { round: 0 }.encode().0,
+            Message::Model { round: 0, weights: vec![] }.encode().0,
+            Message::NoModel { round: 0 }.encode().0,
+            Message::Error(String::new()).encode().0,
+        ];
+        let mut set = msgs.to_vec();
+        set.sort();
+        set.dedup();
+        assert_eq!(set.len(), msgs.len());
+    }
+
+    #[test]
+    fn unknown_tag_rejected() {
+        assert!(matches!(Message::decode(0x55, &[]), Err(ProtoError::UnknownTag(0x55))));
+    }
+
+    #[test]
+    fn short_payload_rejected() {
+        assert!(Message::decode(0x01, &[1, 2]).is_err());
+        assert!(Message::decode(0x06, &[0, 0, 0, 0, 1]).is_err()); // unaligned weights
+    }
+
+    #[test]
+    fn upload_carries_crc_protection() {
+        let u = ModelUpdate::new(5, 1.0, 2, vec![3.0; 10]);
+        let (tag, mut payload) = Message::Upload(u).encode();
+        payload[30] ^= 0xFF;
+        assert!(Message::decode(tag, &payload).is_err());
+    }
+}

@@ -1,0 +1,206 @@
+//! Threaded TCP server: one handler thread per connection (the aggregator
+//! is the paper's bottleneck under the thundering herd; per-connection
+//! threads make the contention measurable rather than hiding it behind a
+//! queue).
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::{read_frame, write_frame, Message, ProtoError};
+
+/// Application hook: map a request message to a reply.
+pub trait Handler: Send + Sync + 'static {
+    fn handle(&self, msg: Message) -> Message;
+}
+
+impl<F> Handler for F
+where
+    F: Fn(Message) -> Message + Send + Sync + 'static,
+{
+    fn handle(&self, msg: Message) -> Message {
+        self(msg)
+    }
+}
+
+/// Running server; dropping the handle shuts the listener down.
+pub struct ServerHandle {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    pub connections: Arc<AtomicU64>,
+    pub requests: Arc<AtomicU64>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // Poke the listener so accept() returns.
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+pub struct NetServer;
+
+impl NetServer {
+    /// Bind `addr` (use port 0 for ephemeral) and serve `handler`.
+    pub fn serve<H: Handler>(addr: &str, handler: Arc<H>) -> std::io::Result<ServerHandle> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let connections = Arc::new(AtomicU64::new(0));
+        let requests = Arc::new(AtomicU64::new(0));
+
+        let accept_thread = {
+            let stop = stop.clone();
+            let connections = connections.clone();
+            let requests = requests.clone();
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    connections.fetch_add(1, Ordering::Relaxed);
+                    let handler = handler.clone();
+                    let requests = requests.clone();
+                    std::thread::spawn(move || {
+                        let _ = Self::handle_conn(stream, handler, requests);
+                    });
+                }
+            })
+        };
+
+        Ok(ServerHandle {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+            connections,
+            requests,
+        })
+    }
+
+    fn handle_conn<H: Handler>(
+        mut stream: TcpStream,
+        handler: Arc<H>,
+        requests: Arc<AtomicU64>,
+    ) -> Result<(), ProtoError> {
+        stream.set_nodelay(true)?;
+        loop {
+            let msg = match read_frame(&mut stream) {
+                Ok(m) => m,
+                Err(ProtoError::Io(_)) => return Ok(()), // client hung up
+                Err(e) => {
+                    let _ = write_frame(&mut stream, &Message::Error(e.to_string()));
+                    return Err(e);
+                }
+            };
+            requests.fetch_add(1, Ordering::Relaxed);
+            let reply = handler.handle(msg);
+            write_frame(&mut stream, &reply)?;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::NetClient;
+    use crate::tensorstore::ModelUpdate;
+    use std::sync::Mutex;
+
+    #[test]
+    fn echo_roundtrip() {
+        let handle = NetServer::serve(
+            "127.0.0.1:0",
+            Arc::new(|m: Message| match m {
+                Message::Register { party } => Message::Registered { party, round: 1 },
+                other => other,
+            }),
+        )
+        .unwrap();
+        let mut c = NetClient::connect(handle.addr()).unwrap();
+        let reply = c.call(&Message::Register { party: 9 }).unwrap();
+        assert_eq!(reply, Message::Registered { party: 9, round: 1 });
+    }
+
+    #[test]
+    fn concurrent_uploads_all_arrive() {
+        let store: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        let s2 = store.clone();
+        let handle = NetServer::serve(
+            "127.0.0.1:0",
+            Arc::new(move |m: Message| {
+                if let Message::Upload(u) = m {
+                    s2.lock().unwrap().push(u.party);
+                }
+                Message::Ack { redirect_to_dfs: false }
+            }),
+        )
+        .unwrap();
+        let addr = handle.addr().to_string();
+        std::thread::scope(|s| {
+            for p in 0..16u64 {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut c = NetClient::connect(&addr).unwrap();
+                    let u = ModelUpdate::new(p, 1.0, 0, vec![p as f32; 100]);
+                    let r = c.call(&Message::Upload(u)).unwrap();
+                    assert_eq!(r, Message::Ack { redirect_to_dfs: false });
+                });
+            }
+        });
+        let mut got = store.lock().unwrap().clone();
+        got.sort();
+        assert_eq!(got, (0..16).collect::<Vec<_>>());
+        assert!(handle.connections.load(Ordering::Relaxed) >= 16);
+    }
+
+    #[test]
+    fn persistent_connection_multiple_calls() {
+        let handle = NetServer::serve(
+            "127.0.0.1:0",
+            Arc::new(|_m: Message| Message::Ack { redirect_to_dfs: false }),
+        )
+        .unwrap();
+        let mut c = NetClient::connect(handle.addr()).unwrap();
+        for round in 0..5 {
+            let r = c.call(&Message::GetModel { round }).unwrap();
+            assert_eq!(r, Message::Ack { redirect_to_dfs: false });
+        }
+        assert_eq!(handle.requests.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn stop_shuts_down() {
+        let mut handle = NetServer::serve(
+            "127.0.0.1:0",
+            Arc::new(|m: Message| m),
+        )
+        .unwrap();
+        let addr = handle.addr().to_string();
+        handle.stop();
+        // subsequent connections should fail (eventually)
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let ok = NetClient::connect(&addr)
+            .and_then(|mut c| {
+                c.call(&Message::GetModel { round: 0 })
+                    .map_err(|_| std::io::Error::new(std::io::ErrorKind::Other, "x"))
+            })
+            .is_ok();
+        assert!(!ok);
+    }
+}

@@ -1,0 +1,172 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.  Parsed with the in-repo JSON substrate.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::RuntimeError;
+use crate::util::json::Json;
+
+/// One AOT artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    /// Input shapes (row-major dims) and dtypes.
+    pub inputs: Vec<(Vec<usize>, String)>,
+    /// Output shapes and dtypes.
+    pub outputs: Vec<(Vec<usize>, String)>,
+    /// kind: wsum | clipsum | median | krum | init | train_step | eval
+    pub kind: String,
+    /// Stack height for fusion artifacts (0 otherwise).
+    pub k: usize,
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub chunk_c: usize,
+    pub stack_ks: Vec<usize>,
+    pub median_ks: Vec<usize>,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub layers: Vec<usize>,
+    pub param_count: usize,
+    arts: BTreeMap<String, ArtifactInfo>,
+}
+
+fn shapes(j: &Json) -> Vec<(Vec<usize>, String)> {
+    j.as_arr()
+        .map(|arr| {
+            arr.iter()
+                .map(|e| {
+                    let dims = e
+                        .get("shape")
+                        .as_arr()
+                        .map(|d| d.iter().filter_map(|x| x.as_usize()).collect())
+                        .unwrap_or_default();
+                    let dt = e.get("dtype").as_str().unwrap_or("float32").to_string();
+                    (dims, dt)
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn usizes(j: &Json) -> Vec<usize> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest, RuntimeError> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            RuntimeError(format!("cannot read {path:?}: {e} (run `make artifacts`)"))
+        })?;
+        let j = Json::parse(&text).map_err(|e| RuntimeError(e.to_string()))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest, RuntimeError> {
+        let chunk_c = j
+            .get("chunk_c")
+            .as_usize()
+            .ok_or_else(|| RuntimeError("manifest missing chunk_c".into()))?;
+        let mut arts = BTreeMap::new();
+        for a in j.get("artifacts").as_arr().unwrap_or(&[]) {
+            let name = a
+                .get("name")
+                .as_str()
+                .ok_or_else(|| RuntimeError("artifact missing name".into()))?
+                .to_string();
+            let info = ArtifactInfo {
+                name: name.clone(),
+                file: a.get("file").as_str().unwrap_or_default().to_string(),
+                inputs: shapes(a.get("inputs")),
+                outputs: shapes(a.get("outputs")),
+                kind: a.get("meta").get("kind").as_str().unwrap_or("").to_string(),
+                k: a.get("meta").get("k").as_usize().unwrap_or(0),
+            };
+            arts.insert(name, info);
+        }
+        Ok(Manifest {
+            chunk_c,
+            stack_ks: usizes(j.get("stack_ks")),
+            median_ks: usizes(j.get("median_ks")),
+            train_batch: j.get("train_batch").as_usize().unwrap_or(32),
+            eval_batch: j.get("eval_batch").as_usize().unwrap_or(256),
+            layers: usizes(j.get("layers")),
+            param_count: j.get("param_count").as_usize().unwrap_or(0),
+            arts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.arts.get(name)
+    }
+
+    pub fn artifacts(&self) -> impl Iterator<Item = &ArtifactInfo> {
+        self.arts.values()
+    }
+
+    /// Largest stack K not exceeding `n`, else the smallest K (padding).
+    pub fn pick_stack_k(&self, n: usize) -> usize {
+        let mut ks = self.stack_ks.clone();
+        ks.sort_unstable();
+        ks.iter().rev().find(|k| **k <= n).copied().or(ks.first().copied()).unwrap_or(16)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        let j = Json::parse(
+            r#"{
+            "version": 1, "chunk_c": 65536,
+            "stack_ks": [16, 64], "median_ks": [8, 16, 32],
+            "train_batch": 32, "eval_batch": 256,
+            "layers": [784, 512, 256, 10], "param_count": 535818,
+            "artifacts": [
+              {"name": "wsum_k16", "file": "wsum_k16.hlo.txt",
+               "inputs": [{"shape": [16, 65536], "dtype": "float32"},
+                           {"shape": [16], "dtype": "float32"}],
+               "outputs": [{"shape": [65536], "dtype": "float32"},
+                            {"shape": [], "dtype": "float32"}],
+               "meta": {"kind": "wsum", "k": 16, "c": 65536}}
+            ]}"#,
+        )
+        .unwrap();
+        Manifest::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn parses_fields() {
+        let m = sample();
+        assert_eq!(m.chunk_c, 65536);
+        assert_eq!(m.stack_ks, vec![16, 64]);
+        assert_eq!(m.layers, vec![784, 512, 256, 10]);
+        let a = m.get("wsum_k16").unwrap();
+        assert_eq!(a.kind, "wsum");
+        assert_eq!(a.k, 16);
+        assert_eq!(a.inputs[0].0, vec![16, 65536]);
+        assert_eq!(a.outputs[1].0, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn pick_stack_k_prefers_largest_fitting() {
+        let m = sample();
+        assert_eq!(m.pick_stack_k(100), 64);
+        assert_eq!(m.pick_stack_k(64), 64);
+        assert_eq!(m.pick_stack_k(63), 16);
+        assert_eq!(m.pick_stack_k(3), 16); // pad up to smallest
+    }
+
+    #[test]
+    fn missing_chunk_c_is_error() {
+        let j = Json::parse(r#"{"artifacts": []}"#).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,280 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and runs
+//! them on the request path.  This is the ONLY place the process touches
+//! XLA; python never runs at serve time.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled once on first use and cached; all graphs were
+//! lowered with `return_tuple=True` so every execution yields a tuple that
+//! is decomposed into per-output literals.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactInfo, Manifest};
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::Counters;
+
+/// Runtime errors (string-typed: the xla crate's error is not `Send`).
+#[derive(Debug)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "runtime: {}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+fn rt<E: std::fmt::Debug>(e: E) -> RuntimeError {
+    RuntimeError(format!("{e:?}"))
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<BTreeMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    counters: Mutex<Counters>,
+}
+
+/// Handle to the PJRT CPU client + artifact registry.  Cloning is cheap.
+///
+/// Safety: the PJRT CPU client is thread-safe for compile/execute (the
+/// xla_extension C++ client takes its own locks); the wrapper types are
+/// `!Send` only because they hold raw pointers.  All mutable rust-side
+/// state (the executable cache) is mutex-guarded.
+#[derive(Clone)]
+pub struct Runtime {
+    inner: Arc<Inner>,
+}
+
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Load the artifact directory (must contain `manifest.json`).
+    pub fn load(dir: &Path) -> Result<Runtime, RuntimeError> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(rt)?;
+        Ok(Runtime {
+            inner: Arc::new(Inner {
+                client,
+                dir: dir.to_path_buf(),
+                manifest,
+                cache: Mutex::new(BTreeMap::new()),
+                counters: Mutex::new(Counters::new()),
+            }),
+        })
+    }
+
+    /// Load from the repo-default `artifacts/` directory (tests, examples).
+    pub fn load_default() -> Result<Runtime, RuntimeError> {
+        // Resolve relative to CARGO_MANIFEST_DIR when present (tests run
+        // from target dirs), else the working directory.
+        let base = std::env::var("ELASTIAGG_ARTIFACTS")
+            .unwrap_or_else(|_| {
+                option_env!("CARGO_MANIFEST_DIR")
+                    .map(|d| format!("{d}/artifacts"))
+                    .unwrap_or_else(|| "artifacts".to_string())
+            });
+        Self::load(Path::new(&base))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.inner.manifest
+    }
+
+    /// Execution counters (per-artifact call counts) for §Perf accounting.
+    pub fn counters(&self) -> Counters {
+        self.inner.counters.lock().unwrap().clone()
+    }
+
+    fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>, RuntimeError> {
+        if let Some(e) = self.inner.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self
+            .inner
+            .manifest
+            .get(name)
+            .ok_or_else(|| RuntimeError(format!("unknown artifact '{name}'")))?;
+        let path = self.inner.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| RuntimeError("non-utf8 path".into()))?,
+        )
+        .map_err(rt)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.inner.client.compile(&comp).map_err(rt)?);
+        self.inner
+            .cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (hide compile latency before the hot loop).
+    pub fn warmup(&self, name: &str) -> Result<(), RuntimeError> {
+        self.executable(name).map(|_| ())
+    }
+
+    /// Execute artifact `name` with the given input literals; returns the
+    /// decomposed output tuple.
+    pub fn exec(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>, RuntimeError> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.exec_ref(name, &refs)
+    }
+
+    /// Like [`Runtime::exec`] but borrowing the inputs — lets hot paths
+    /// reuse persistent literals without deep-cloning them (§Perf).
+    pub fn exec_ref(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>, RuntimeError> {
+        let exe = self.executable(name)?;
+        let out = exe.execute::<&xla::Literal>(inputs).map_err(rt)?;
+        let result = out[0][0].to_literal_sync().map_err(rt)?;
+        self.inner.counters.lock().unwrap().inc(&format!("exec.{name}"), 1);
+        result.to_tuple().map_err(rt)
+    }
+
+    /// f32 literal helpers ------------------------------------------------
+    pub fn lit_f32_1d(data: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    pub fn lit_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal, RuntimeError> {
+        assert_eq!(data.len(), rows * cols);
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(rt)
+    }
+
+    pub fn lit_f32_scalar(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    pub fn lit_i32_scalar(v: i32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    pub fn lit_i32_1d(data: &[i32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>, RuntimeError> {
+        lit.to_vec::<f32>().map_err(rt)
+    }
+
+    pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32, RuntimeError> {
+        lit.get_first_element::<f32>().map_err(rt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Runtime {
+        Runtime::load_default().expect("artifacts/ must be built (make artifacts)")
+    }
+
+    #[test]
+    fn manifest_lists_expected_artifacts() {
+        let rtm = runtime();
+        for name in ["wsum_k16", "wsum_k64", "clipsum_k16", "median_k8", "train_step",
+                     "init_params", "eval_model", "krum_k16"] {
+            assert!(rtm.manifest().get(name).is_some(), "missing {name}");
+        }
+        assert_eq!(rtm.manifest().chunk_c, 65536);
+    }
+
+    #[test]
+    fn wsum_artifact_computes_weighted_sum() {
+        let rtm = runtime();
+        let k = 16;
+        let c = rtm.manifest().chunk_c;
+        let mut stack = vec![0f32; k * c];
+        // row i = i+1 everywhere; weights = 1 -> sum = 1+2+..+16 = 136
+        for i in 0..k {
+            for j in 0..c {
+                stack[i * c + j] = (i + 1) as f32;
+            }
+        }
+        let w = vec![1f32; k];
+        let out = rtm
+            .exec(
+                "wsum_k16",
+                &[
+                    Runtime::lit_f32_2d(&stack, k, c).unwrap(),
+                    Runtime::lit_f32_1d(&w),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let sum = Runtime::to_f32_vec(&out[0]).unwrap();
+        assert_eq!(sum.len(), c);
+        assert!((sum[0] - 136.0).abs() < 1e-3, "{}", sum[0]);
+        assert!((sum[c - 1] - 136.0).abs() < 1e-3);
+        let wtot = Runtime::to_f32_scalar(&out[1]).unwrap();
+        assert!((wtot - 16.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let rtm = runtime();
+        assert!(rtm.exec("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn executables_are_cached() {
+        let rtm = runtime();
+        rtm.warmup("median_k8").unwrap();
+        rtm.warmup("median_k8").unwrap();
+        assert_eq!(rtm.inner.cache.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn train_step_decreases_loss_on_repeated_batch() {
+        let rtm = runtime();
+        let man = rtm.manifest();
+        let p = man.param_count;
+        let b = man.train_batch;
+        let d = man.layers[0];
+        // init params via artifact
+        let init = rtm.exec("init_params", &[Runtime::lit_i32_scalar(3)]).unwrap();
+        let mut params = Runtime::to_f32_vec(&init[0]).unwrap();
+        assert_eq!(params.len(), p);
+
+        let mut rng = crate::util::rng::Rng::new(0);
+        let mut x = vec![0f32; b * d];
+        rng.fill_gaussian_f32(&mut x, 1.0);
+        let y: Vec<i32> = (0..b).map(|i| (i % 10) as i32).collect();
+
+        let mut first = None;
+        let mut last = 0f32;
+        for _ in 0..20 {
+            let out = rtm
+                .exec(
+                    "train_step",
+                    &[
+                        Runtime::lit_f32_1d(&params),
+                        Runtime::lit_f32_2d(&x, b, d).unwrap(),
+                        Runtime::lit_i32_1d(&y),
+                        Runtime::lit_f32_scalar(0.1),
+                    ],
+                )
+                .unwrap();
+            params = Runtime::to_f32_vec(&out[0]).unwrap();
+            last = Runtime::to_f32_scalar(&out[1]).unwrap();
+            first.get_or_insert(last);
+        }
+        let first = first.unwrap();
+        assert!(
+            last < first * 0.5,
+            "loss did not fall: first={first} last={last}"
+        );
+    }
+}

@@ -1,0 +1,292 @@
+//! The FL aggregation server: binds the TCP front to the adaptive service.
+//!
+//! Request handling (per paper Fig 4 and §III-D3):
+//! * `Register`  → party joins the registry, learns the current round;
+//! * `Upload`    → small path: the update is ingested into the current
+//!   round's in-memory state (charged against the node budget); the Ack
+//!   carries the redirect flag when the *next* round is predicted Large;
+//! * `GetModel`  → returns the fused model once the round is published.
+//!
+//! Round progression is driven by the owner (examples / benches) via
+//! [`FlServer::run_round`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    AdaptiveService, PartyRegistry, RoundState, ServiceError, ServiceReport, WorkloadClass,
+};
+use crate::fusion::FusionAlgorithm;
+use crate::memsim::MemoryBudget;
+use crate::net::{Message, NetServer, ServerHandle};
+#[cfg(test)]
+use crate::tensorstore::ModelUpdate;
+
+pub struct FlServer {
+    pub service: Arc<AdaptiveService>,
+    pub registry: Arc<PartyRegistry>,
+    algo: Arc<dyn FusionAlgorithm>,
+    /// Bytes of one update at the current model size (classification input).
+    update_bytes: u64,
+    node_budget: MemoryBudget,
+    current_round: AtomicU32,
+    rounds: Mutex<BTreeMap<u32, Arc<RoundState>>>,
+}
+
+impl FlServer {
+    pub fn new(
+        service: AdaptiveService,
+        algo: Arc<dyn FusionAlgorithm>,
+        update_bytes: u64,
+    ) -> Arc<FlServer> {
+        let node_budget = MemoryBudget::new(service.config().node.memory_bytes);
+        let s = Arc::new(FlServer {
+            service: Arc::new(service),
+            registry: Arc::new(PartyRegistry::new()),
+            algo,
+            update_bytes,
+            node_budget,
+            current_round: AtomicU32::new(0),
+            rounds: Mutex::new(BTreeMap::new()),
+        });
+        s.open_round(0);
+        s
+    }
+
+    pub fn current_round(&self) -> u32 {
+        self.current_round.load(Ordering::Acquire)
+    }
+
+    fn open_round(&self, round: u32) -> Arc<RoundState> {
+        let expected = self.registry.active_count().max(1);
+        let class = self.service.classify(self.update_bytes, expected, self.algo.as_ref());
+        let st = Arc::new(RoundState::new(round, class, self.node_budget.clone()));
+        self.rounds.lock().unwrap().insert(round, st.clone());
+        self.current_round.store(round, Ordering::Release);
+        st
+    }
+
+    pub fn round_state(&self, round: u32) -> Option<Arc<RoundState>> {
+        self.rounds.lock().unwrap().get(&round).cloned()
+    }
+
+    /// Replace an (empty) round's state with a re-classified one.
+    fn reopen_round(&self, round: u32, class: WorkloadClass) -> Arc<RoundState> {
+        let st = Arc::new(RoundState::new(round, class, self.node_budget.clone()));
+        self.rounds.lock().unwrap().insert(round, st.clone());
+        st
+    }
+
+    /// Serve on `addr` (port 0 = ephemeral).
+    pub fn start(self: &Arc<Self>, addr: &str) -> std::io::Result<ServerHandle> {
+        let this = self.clone();
+        NetServer::serve(addr, Arc::new(move |msg: Message| this.handle(msg)))
+    }
+
+    fn handle(&self, msg: Message) -> Message {
+        match msg {
+            Message::Register { party } => {
+                let round = self.current_round();
+                self.registry.join(party, round, 0);
+                Message::Registered { party, round }
+            }
+            Message::Upload(u) => {
+                let round = self.current_round();
+                let redirect = self.service.should_redirect(
+                    self.update_bytes,
+                    self.registry.active_count().max(1),
+                    self.algo.as_ref(),
+                );
+                match self.round_state(round) {
+                    Some(st) if st.class == WorkloadClass::Small => match st.ingest(u) {
+                        Ok(_) => Message::Ack { redirect_to_dfs: redirect },
+                        Err(e) => Message::Error(format!("ingest: {e}")),
+                    },
+                    Some(_) => {
+                        // Large round: message passing is the wrong channel —
+                        // instruct the party to use the store.
+                        Message::Ack { redirect_to_dfs: true }
+                    }
+                    None => Message::Error(format!("round {round} not open")),
+                }
+            }
+            Message::GetModel { round } => match self.round_state(round).and_then(|s| s.fused()) {
+                Some(w) => Message::Model { round, weights: w.as_ref().clone() },
+                None => Message::NoModel { round },
+            },
+            other => Message::Error(format!("unexpected message {other:?}")),
+        }
+    }
+
+    /// Wait until `expected` updates arrived for the current round (small
+    /// path) or `timeout` elapsed, then aggregate, publish and open the
+    /// next round.  For Large rounds, delegates to the service's
+    /// monitor+MapReduce path.
+    pub fn run_round(
+        &self,
+        expected: usize,
+        timeout: Duration,
+    ) -> Result<(Vec<f32>, ServiceReport), ServiceError> {
+        let round = self.current_round();
+        let mut st = self.round_state(round).expect("current round open");
+        // Parties may have joined since the round opened (§III-C): refresh
+        // the classification from the live registry as long as nothing has
+        // been ingested yet.
+        if st.collected() == 0 {
+            let class = self
+                .service
+                .classify(self.update_bytes, self.registry.active_count().max(expected).max(1), self.algo.as_ref());
+            if class != st.class {
+                st = self.reopen_round(round, class);
+            }
+        }
+        let result = match st.class {
+            WorkloadClass::Small => {
+                let deadline = Instant::now() + timeout;
+                while st.collected() < expected && Instant::now() < deadline {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                let updates = st.begin_aggregation();
+                if updates.is_empty() {
+                    return Err(ServiceError::NoUpdates);
+                }
+                self.service.aggregate_small(self.algo.as_ref(), &updates, round)
+            }
+            WorkloadClass::Large => {
+                let _ = st.begin_aggregation(); // no in-memory updates
+                self.service
+                    .aggregate_large(self.algo.as_ref(), round, expected, self.update_bytes)
+            }
+        }?;
+        st.publish(result.0.clone());
+        self.open_round(round + 1);
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::{SyntheticParty, Transport};
+    use crate::config::ServiceConfig;
+    use crate::dfs::datanode::tempdir::TempDir;
+    use crate::dfs::{DfsClient, NameNode};
+    use crate::fusion::FedAvg;
+    use crate::mapreduce::ExecutorConfig;
+    use crate::metrics::Breakdown;
+    use crate::net::NetClient;
+
+    fn make_server(mem: u64, update_bytes: u64) -> (Arc<FlServer>, TempDir) {
+        let td = TempDir::new();
+        let nn = NameNode::create(td.path(), 2, 1, 1 << 20).unwrap();
+        let dfs = DfsClient::new(nn);
+        let mut cfg = ServiceConfig::default();
+        cfg.node.memory_bytes = mem;
+        cfg.node.cores = 2;
+        cfg.monitor_timeout_s = 5.0;
+        let svc = AdaptiveService::new(
+            cfg,
+            dfs,
+            None,
+            ExecutorConfig { executors: 1, cores_per_executor: 2, ..Default::default() },
+        );
+        (FlServer::new(svc, Arc::new(FedAvg), update_bytes), td)
+    }
+
+    #[test]
+    fn small_round_end_to_end_over_tcp() {
+        let (server, _td) = make_server(1 << 30, 400);
+        let handle = server.start("127.0.0.1:0").unwrap();
+        let addr = handle.addr().to_string();
+
+        // register + upload from 6 parties over real sockets
+        std::thread::scope(|s| {
+            for p in 0..6u64 {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut c = NetClient::connect(&addr).unwrap();
+                    let r = c.call(&Message::Register { party: p }).unwrap();
+                    assert!(matches!(r, Message::Registered { .. }));
+                    let mut party = SyntheticParty::new(p, 1);
+                    let u = party.make_update(0, 100);
+                    let r = c.call(&Message::Upload(u)).unwrap();
+                    assert!(matches!(r, Message::Ack { .. }));
+                });
+            }
+        });
+
+        let (fused, report) = server.run_round(6, Duration::from_secs(5)).unwrap();
+        assert_eq!(fused.len(), 100);
+        assert_eq!(report.parties, 6);
+        assert_eq!(report.class, WorkloadClass::Small);
+
+        // model fetchable over the wire
+        let mut c = NetClient::connect(&addr).unwrap();
+        match c.call(&Message::GetModel { round: 0 }).unwrap() {
+            Message::Model { round, weights } => {
+                assert_eq!(round, 0);
+                assert_eq!(weights, fused);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(server.current_round(), 1);
+    }
+
+    #[test]
+    fn large_round_redirects_uploads_and_uses_mapreduce() {
+        // tiny node memory -> every round classifies Large
+        let (server, _td) = make_server(1024, 4000);
+        for p in 0..5u64 {
+            server.registry.join(p, 0, 10);
+        }
+        // re-open round so classification sees the registered parties
+        server.open_round(1);
+        let handle = server.start("127.0.0.1:0").unwrap();
+
+        // a TCP upload is answered with a redirect
+        let mut c = NetClient::connect(handle.addr()).unwrap();
+        let mut party = SyntheticParty::new(0, 2);
+        let u = party.make_update(1, 1000);
+        match c.call(&Message::Upload(u)).unwrap() {
+            Message::Ack { redirect_to_dfs } => assert!(redirect_to_dfs),
+            other => panic!("{other:?}"),
+        }
+
+        // parties ship via the store instead
+        let dfs = server.service.dfs().clone();
+        let mut bd = Breakdown::new();
+        for p in 0..5u64 {
+            let mut party = SyntheticParty::new(p, 3);
+            let u = party.make_update(1, 1000);
+            party.ship(&u, &Transport::Dfs, Some(&dfs), &mut bd).unwrap();
+        }
+        let (fused, report) = server.run_round(5, Duration::from_secs(5)).unwrap();
+        assert_eq!(fused.len(), 1000);
+        assert_eq!(report.class, WorkloadClass::Large);
+        assert_eq!(report.engine, "mapreduce");
+        assert!(report.partitions >= 1);
+    }
+
+    #[test]
+    fn ingest_oom_surfaces_as_error_message() {
+        let (server, _td) = make_server(3000, 400);
+        let st = server.round_state(0).unwrap();
+        // 3000-byte budget, 400-byte updates (100 f32) -> 7 fit, 8th OOMs
+        for p in 0..7u64 {
+            st.ingest(ModelUpdate::new(p, 1.0, 0, vec![0.0; 100])).unwrap();
+        }
+        let reply = server.handle(Message::Upload(ModelUpdate::new(9, 1.0, 0, vec![0.0; 100])));
+        assert!(matches!(reply, Message::Error(_)), "{reply:?}");
+    }
+
+    #[test]
+    fn empty_round_times_out_cleanly() {
+        let (server, _td) = make_server(1 << 20, 100);
+        assert!(matches!(
+            server.run_round(3, Duration::from_millis(30)),
+            Err(ServiceError::NoUpdates)
+        ));
+    }
+}

@@ -1,0 +1,159 @@
+//! Model-update tensors: flat f32 buffers with a checksummed wire format.
+//!
+//! A model update in the aggregation service is ONE flat f32 vector (the
+//! same representation the L2 train-step artifact uses), tagged with the
+//! sending party's id and its sample count (the FedAvg weight).  The wire
+//! format is what travels over the TCP message-passing path and what is
+//! stored as DFS files:
+//!
+//! ```text
+//! magic  u32  = 0x45AG ("EA01" -> 0x4541_3031)
+//! party  u64
+//! count  f32  (FedAvg weight / sample count)
+//! round  u32
+//! len    u64  (number of f32 elements)
+//! data   [f32; len]  little-endian
+//! crc32  u32  over everything above
+//! ```
+
+pub mod wire;
+
+pub use wire::{ModelUpdate, WireError};
+
+/// Slice a flat parameter vector into fixed-length chunks, zero-padding the
+/// tail — the geometry the AOT fusion artifacts expect (`chunk_c` f32 each).
+pub fn chunk_count(len: usize, chunk_c: usize) -> usize {
+    len.div_ceil(chunk_c)
+}
+
+/// Copy chunk `i` of `flat` into `out` (len == chunk_c), zero-padding.
+pub fn copy_chunk(flat: &[f32], chunk_c: usize, i: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), chunk_c);
+    let start = i * chunk_c;
+    let end = ((i + 1) * chunk_c).min(flat.len());
+    if start >= flat.len() {
+        out.fill(0.0);
+        return;
+    }
+    let n = end - start;
+    out[..n].copy_from_slice(&flat[start..end]);
+    out[n..].fill(0.0);
+}
+
+/// CRC-32 (IEEE 802.3) — slicing-by-8, used by the wire format and the DFS
+/// block integrity check.
+///
+/// §Perf: the original byte-at-a-time table walk capped the whole
+/// decode/DFS path at ~300 MB/s (one dependent table lookup per byte);
+/// slicing-by-8 processes 8 bytes per step through 8 parallel tables,
+/// measured ~5× faster on this box (see EXPERIMENTS.md §Perf).
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLES: std::sync::OnceLock<[[u32; 256]; 8]> = std::sync::OnceLock::new();
+    let t = TABLES.get_or_init(|| {
+        let mut t = [[0u32; 256]; 8];
+        for i in 0..256usize {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            t[0][i] = c;
+        }
+        for i in 0..256usize {
+            let mut c = t[0][i];
+            for k in 1..8 {
+                c = t[0][(c & 0xFF) as usize] ^ (c >> 8);
+                t[k][i] = c;
+            }
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    let mut chunks = data.chunks_exact(8);
+    for ch in &mut chunks {
+        let lo = u32::from_le_bytes(ch[0..4].try_into().unwrap()) ^ c;
+        let hi = u32::from_le_bytes(ch[4..8].try_into().unwrap());
+        c = t[7][(lo & 0xFF) as usize]
+            ^ t[6][((lo >> 8) & 0xFF) as usize]
+            ^ t[5][((lo >> 16) & 0xFF) as usize]
+            ^ t[4][((lo >> 24) & 0xFF) as usize]
+            ^ t[3][(hi & 0xFF) as usize]
+            ^ t[2][((hi >> 8) & 0xFF) as usize]
+            ^ t[1][((hi >> 16) & 0xFF) as usize]
+            ^ t[0][((hi >> 24) & 0xFF) as usize];
+    }
+    for &b in chunks.remainder() {
+        c = t[0][((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Reinterpret a f32 slice as bytes (little-endian hosts only, which is all
+/// we target; asserted at compile time below).
+pub fn f32s_as_bytes(v: &[f32]) -> &[u8] {
+    #[cfg(target_endian = "big")]
+    compile_error!("little-endian host required");
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// Parse bytes as f32s (must be 4-aligned length; copies).
+///
+/// §Perf: the per-element `from_le_bytes().collect()` version cost a bounds
+/// check + insert per float; one `copy_nonoverlapping` into an initialised
+/// buffer is a plain memcpy (little-endian host asserted at compile time).
+pub fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    assert_eq!(b.len() % 4, 0, "byte length not a multiple of 4");
+    let n = b.len() / 4;
+    let mut out = vec![0f32; n];
+    // Safety: out has exactly n f32s = b.len() bytes; f32 has no invalid
+    // bit patterns; alignment of out is stricter than of b, and we copy
+    // bytewise into it.
+    unsafe {
+        std::ptr::copy_nonoverlapping(b.as_ptr(), out.as_mut_ptr() as *mut u8, b.len());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard test vector: "123456789" -> 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn chunking_covers_and_pads() {
+        let flat: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        assert_eq!(chunk_count(10, 4), 3);
+        let mut buf = [0f32; 4];
+        copy_chunk(&flat, 4, 0, &mut buf);
+        assert_eq!(buf, [0.0, 1.0, 2.0, 3.0]);
+        copy_chunk(&flat, 4, 2, &mut buf);
+        assert_eq!(buf, [8.0, 9.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn chunk_beyond_end_is_zero() {
+        let flat = [1.0f32];
+        let mut buf = [9f32; 4];
+        copy_chunk(&flat, 4, 5, &mut buf);
+        assert_eq!(buf, [0.0; 4]);
+    }
+
+    #[test]
+    fn f32_byte_roundtrip() {
+        let v = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        let b = f32s_as_bytes(&v);
+        assert_eq!(bytes_to_f32s(b), v);
+    }
+
+    #[test]
+    fn chunk_count_edges() {
+        assert_eq!(chunk_count(0, 8), 0);
+        assert_eq!(chunk_count(8, 8), 1);
+        assert_eq!(chunk_count(9, 8), 2);
+    }
+}

@@ -1,0 +1,200 @@
+//! The checksummed wire format for model updates.
+
+use super::{bytes_to_f32s, crc32, f32s_as_bytes};
+use std::io::{Read, Write};
+
+const MAGIC: u32 = 0x4541_3031; // "EA01"
+
+/// A party's model update: the unit the aggregation service routes, stores
+/// and fuses.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelUpdate {
+    pub party: u64,
+    /// FedAvg weight (sample count); IterAvg ignores it.
+    pub count: f32,
+    pub round: u32,
+    pub data: Vec<f32>,
+}
+
+#[derive(Debug)]
+pub enum WireError {
+    Io(std::io::Error),
+    BadMagic(u32),
+    BadCrc { want: u32, got: u32 },
+    TooLarge(u64),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "io: {e}"),
+            WireError::BadMagic(m) => write!(f, "bad magic {m:#x}"),
+            WireError::BadCrc { want, got } => write!(f, "crc mismatch: want {want:#x} got {got:#x}"),
+            WireError::TooLarge(n) => write!(f, "declared length {n} too large"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+/// Hard cap on declared element count (16 Gi elements = 64 GiB) so corrupt
+/// headers cannot trigger absurd allocations.
+const MAX_ELEMS: u64 = 16 << 30;
+
+impl ModelUpdate {
+    pub fn new(party: u64, count: f32, round: u32, data: Vec<f32>) -> ModelUpdate {
+        ModelUpdate { party, count, round, data }
+    }
+
+    /// Serialized size in bytes (header + data + crc).
+    pub fn wire_size(&self) -> usize {
+        4 + 8 + 4 + 4 + 8 + self.data.len() * 4 + 4
+    }
+
+    /// In-memory footprint the memory accountant charges for this update.
+    pub fn mem_bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_size());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&self.party.to_le_bytes());
+        out.extend_from_slice(&self.count.to_le_bytes());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&(self.data.len() as u64).to_le_bytes());
+        out.extend_from_slice(f32s_as_bytes(&self.data));
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<(), WireError> {
+        w.write_all(&self.encode())?;
+        Ok(())
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ModelUpdate, WireError> {
+        if buf.len() < 32 {
+            return Err(WireError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "short buffer",
+            )));
+        }
+        let body = &buf[..buf.len() - 4];
+        let want = u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
+        let got = crc32(body);
+        if want != got {
+            return Err(WireError::BadCrc { want, got });
+        }
+        let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+        if magic != MAGIC {
+            return Err(WireError::BadMagic(magic));
+        }
+        let party = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+        let count = f32::from_le_bytes(buf[12..16].try_into().unwrap());
+        let round = u32::from_le_bytes(buf[16..20].try_into().unwrap());
+        let len = u64::from_le_bytes(buf[20..28].try_into().unwrap());
+        if len > MAX_ELEMS {
+            return Err(WireError::TooLarge(len));
+        }
+        let data = bytes_to_f32s(&body[28..]);
+        if data.len() as u64 != len {
+            return Err(WireError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("declared {len} elems, found {}", data.len()),
+            )));
+        }
+        Ok(ModelUpdate { party, count, round, data })
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<ModelUpdate, WireError> {
+        let mut head = [0u8; 28];
+        r.read_exact(&mut head)?;
+        let len = u64::from_le_bytes(head[20..28].try_into().unwrap());
+        if len > MAX_ELEMS {
+            return Err(WireError::TooLarge(len));
+        }
+        let mut rest = vec![0u8; len as usize * 4 + 4];
+        r.read_exact(&mut rest)?;
+        let mut buf = Vec::with_capacity(head.len() + rest.len());
+        buf.extend_from_slice(&head);
+        buf.extend_from_slice(&rest);
+        Self::decode(&buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(n: usize) -> ModelUpdate {
+        ModelUpdate::new(42, 128.0, 3, (0..n).map(|i| i as f32 * 0.5).collect())
+    }
+
+    #[test]
+    fn roundtrip() {
+        let u = sample(1000);
+        let buf = u.encode();
+        assert_eq!(buf.len(), u.wire_size());
+        assert_eq!(ModelUpdate::decode(&buf).unwrap(), u);
+    }
+
+    #[test]
+    fn roundtrip_via_reader() {
+        let u = sample(17);
+        let buf = u.encode();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(ModelUpdate::read_from(&mut cursor).unwrap(), u);
+    }
+
+    #[test]
+    fn corrupt_payload_detected() {
+        let u = sample(64);
+        let mut buf = u.encode();
+        buf[40] ^= 0xFF;
+        assert!(matches!(ModelUpdate::decode(&buf), Err(WireError::BadCrc { .. })));
+    }
+
+    #[test]
+    fn corrupt_magic_detected() {
+        let u = sample(8);
+        let mut buf = u.encode();
+        // flip magic then fix crc so ONLY the magic check can catch it
+        buf[0] ^= 0x01;
+        let body_len = buf.len() - 4;
+        let crc = crc32(&buf[..body_len]);
+        buf[body_len..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(ModelUpdate::decode(&buf), Err(WireError::BadMagic(_))));
+    }
+
+    #[test]
+    fn short_buffer_is_io_error() {
+        assert!(matches!(ModelUpdate::decode(&[0u8; 4]), Err(WireError::Io(_))));
+    }
+
+    #[test]
+    fn absurd_length_rejected_before_alloc() {
+        let u = sample(4);
+        let mut buf = u.encode();
+        buf[20..28].copy_from_slice(&u64::MAX.to_le_bytes());
+        // crc now mismatches too, but read_from must bail on length first
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(matches!(
+            ModelUpdate::read_from(&mut cursor),
+            Err(WireError::TooLarge(_))
+        ));
+    }
+
+    #[test]
+    fn empty_update_roundtrips() {
+        let u = ModelUpdate::new(0, 0.0, 0, vec![]);
+        assert_eq!(ModelUpdate::decode(&u.encode()).unwrap(), u);
+    }
+}

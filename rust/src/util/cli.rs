@@ -1,0 +1,160 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands.  Typed accessors parse on demand and report friendly errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-option token becomes the subcommand;
+    /// later bare tokens are positional.  Every `--x` is treated as a flag
+    /// unless it is followed by a value token (no `--` prefix) or written
+    /// `--x=v`; flags listed in `value_opts` always consume the next token.
+    pub fn parse(argv: &[String], value_opts: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    out.options
+                        .insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if value_opts.contains(&rest) {
+                    if i + 1 < argv.len() {
+                        out.options.insert(rest.to_string(), argv[i + 1].clone());
+                        i += 1;
+                    } else {
+                        out.flags.push(rest.to_string());
+                    }
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.typed_or(name, default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.typed_or(name, default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.typed_or(name, default)
+    }
+
+    fn typed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.str_opt(name) {
+            None => default,
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{name} expects a {}", std::any::type_name::<T>());
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Parse sizes like "4.6MB", "170GB", "64k", plain bytes.
+    pub fn size_or(&self, name: &str, default: u64) -> u64 {
+        match self.str_opt(name) {
+            None => default,
+            Some(s) => parse_size(s).unwrap_or_else(|| {
+                eprintln!("error: --{name} expects a size (e.g. 4.6MB)");
+                std::process::exit(2);
+            }),
+        }
+    }
+}
+
+/// "4.6MB" -> 4823449, "170GB" -> ..., "123" -> 123.
+pub fn parse_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s
+        .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+        .unwrap_or(s.len());
+    let (num, unit) = s.split_at(split);
+    let n: f64 = num.parse().ok()?;
+    let mult = match unit.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1.0,
+        "k" | "kb" => 1024.0,
+        "m" | "mb" => 1024.0 * 1024.0,
+        "g" | "gb" => 1024.0 * 1024.0 * 1024.0,
+        "t" | "tb" => 1024.0f64.powi(4),
+        _ => return None,
+    };
+    Some((n * mult) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&argv(&["serve", "--verbose", "--port", "9000"]), &["port"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("port", 0), 9000);
+    }
+
+    #[test]
+    fn parses_eq_form() {
+        let a = Args::parse(&argv(&["x", "--mem=170GB", "--n=5"]), &[]);
+        assert_eq!(a.size_or("mem", 0), 170 * 1024 * 1024 * 1024);
+        assert_eq!(a.usize_or("n", 0), 5);
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = Args::parse(&argv(&["run", "file1", "file2"]), &[]);
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(&[]), &[]);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.str_or("missing", "d"), "d");
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn size_parsing() {
+        assert_eq!(parse_size("123"), Some(123));
+        assert_eq!(parse_size("1kb"), Some(1024));
+        assert_eq!(parse_size("4.6MB"), Some((4.6 * 1024.0 * 1024.0) as u64));
+        assert_eq!(parse_size("2G"), Some(2 << 30));
+        assert_eq!(parse_size("xyz"), None);
+    }
+}

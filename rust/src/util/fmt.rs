@@ -1,0 +1,128 @@
+//! Human-readable size/duration/table formatting for bench output.
+
+use std::time::Duration;
+
+/// 4823449 -> "4.6 MB"
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Pretty duration with ms/s/min granularity.
+pub fn dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2} s")
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+/// Seconds (f64, may be virtual time) pretty-printer.
+pub fn secs(s: f64) -> String {
+    dur(Duration::from_secs_f64(s.max(0.0)))
+}
+
+/// Fixed-width markdown-style table writer used by the bench harness.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(r[c].len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+            out.push('|');
+            for (c, cell) in cells.iter().enumerate() {
+                out.push_str(&format!(" {:width$} |", cell, width = widths[c]));
+            }
+            out.push('\n');
+        };
+        line(&self.headers, &widths, &mut out);
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<width$}|", "", width = w + 2));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            line(r, &widths, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(4 * 1024), "4.0 KB");
+        assert_eq!(bytes((4.6 * 1024.0 * 1024.0) as u64), "4.6 MB");
+        assert_eq!(bytes(170 * 1024 * 1024 * 1024), "170.0 GB");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(dur(Duration::from_micros(50)), "50.0 µs");
+        assert_eq!(dur(Duration::from_millis(120)), "120.00 ms");
+        assert_eq!(dur(Duration::from_secs(3)), "3.00 s");
+        assert_eq!(dur(Duration::from_secs(600)), "10.0 min");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "time"]);
+        t.row(&["CNN4.6".into(), "1.2 s".into()]);
+        t.row(&["ResNet50".into(), "10.0 s".into()]);
+        let r = t.render();
+        assert!(r.contains("| model    | time   |"), "{r}");
+        assert_eq!(r.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Foundational substrates built from scratch (the deployment environment is
+//! offline, so no third-party crates beyond the `xla` runtime binding):
+//! deterministic RNG, JSON, CLI parsing, size/time formatting, and a small
+//! property-testing harness.
+
+pub mod cli;
+pub mod fmt;
+pub mod json;
+pub mod prop;
+pub mod rng;

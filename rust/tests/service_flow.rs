@@ -1,0 +1,202 @@
+//! Integration: the full adaptive-service lifecycle through the public
+//! API — TCP registration/upload/fetch, adaptive transition across rounds,
+//! monitor thresholds, failure injection, and multi-round FL training.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use elastiagg::client::{fleet_upload_dfs, SyntheticParty, Transport};
+use elastiagg::config::ServiceConfig;
+use elastiagg::coordinator::{AdaptiveService, WorkloadClass};
+use elastiagg::dfs::{DfsClient, NameNode};
+use elastiagg::engine::XlaEngine;
+use elastiagg::fusion::{FedAvg, IterAvg};
+use elastiagg::mapreduce::ExecutorConfig;
+use elastiagg::metrics::Breakdown;
+use elastiagg::net::{Message, NetClient};
+use elastiagg::runtime::Runtime;
+use elastiagg::server::FlServer;
+use elastiagg::util::rng::Rng;
+
+fn tempdir() -> std::path::PathBuf {
+    let p = std::env::temp_dir().join(format!(
+        "elastiagg-sf-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn make_service(root: &std::path::Path, mem: u64, with_xla: bool) -> AdaptiveService {
+    let nn = NameNode::create(root, 3, 2, 1 << 20).unwrap();
+    let dfs = DfsClient::new(nn);
+    let mut cfg = ServiceConfig::default();
+    cfg.node.memory_bytes = mem;
+    cfg.node.cores = 2;
+    cfg.monitor_timeout_s = 10.0;
+    let xla = if with_xla {
+        Runtime::load_default().ok().and_then(|r| XlaEngine::auto(r, 16).ok())
+    } else {
+        None
+    };
+    AdaptiveService::new(
+        cfg,
+        dfs,
+        xla,
+        ExecutorConfig { executors: 2, cores_per_executor: 2, ..Default::default() },
+    )
+}
+
+#[test]
+fn multi_round_server_with_growing_fleet() {
+    let root = tempdir();
+    let update_len = 5_000usize;
+    let service = make_service(&root, 300 << 10, true); // 300 KB node
+    let server = FlServer::new(service, Arc::new(FedAvg), (update_len * 4) as u64);
+    let handle = server.start("127.0.0.1:0").unwrap();
+    let addr = handle.addr().to_string();
+
+    // rounds 0..2 small (4 parties), round 3 large (40 parties)
+    for round in 0..4u32 {
+        let parties: u64 = if round < 3 { 4 } else { 40 };
+        // register fleet
+        {
+            let mut c = NetClient::connect(&addr).unwrap();
+            for p in 0..parties {
+                c.call(&Message::Register { party: p }).unwrap();
+            }
+        }
+        let expect_class = if round < 3 { WorkloadClass::Small } else { WorkloadClass::Large };
+        if expect_class == WorkloadClass::Small {
+            std::thread::scope(|s| {
+                for p in 0..parties {
+                    let addr = addr.clone();
+                    s.spawn(move || {
+                        let mut c = NetClient::connect(&addr).unwrap();
+                        let mut party = SyntheticParty::new(p, round as u64);
+                        let u = party.make_update(round, update_len);
+                        let r = c.call(&Message::Upload(u)).unwrap();
+                        assert!(matches!(r, Message::Ack { .. }), "{r:?}");
+                    });
+                }
+            });
+        } else {
+            let dfs = server.service.dfs().clone();
+            let mut bd = Breakdown::new();
+            for p in 0..parties {
+                let mut party = SyntheticParty::new(p, round as u64);
+                let u = party.make_update(round, update_len);
+                party.ship(&u, &Transport::Dfs, Some(&dfs), &mut bd).unwrap();
+            }
+        }
+        let (fused, report) = server.run_round(parties as usize, Duration::from_secs(10)).unwrap();
+        assert_eq!(fused.len(), update_len);
+        assert_eq!(report.class, expect_class, "round {round}");
+        assert_eq!(report.parties, parties as usize);
+    }
+    assert_eq!(server.current_round(), 4);
+    assert!(server.service.spark_started());
+}
+
+#[test]
+fn dropout_and_timeout_still_aggregate_partial_set() {
+    let root = tempdir();
+    let mut cfg = ServiceConfig::default();
+    cfg.node.memory_bytes = 1024; // force Large
+    cfg.monitor_threshold = 1.0;
+    cfg.monitor_timeout_s = 0.2;
+    let nn = NameNode::create(&root, 2, 1, 1 << 20).unwrap();
+    let dfs = DfsClient::new(nn);
+    let service = AdaptiveService::new(
+        cfg,
+        dfs.clone(),
+        None,
+        ExecutorConfig { executors: 1, cores_per_executor: 2, ..Default::default() },
+    );
+    // only 3 of 10 expected parties deliver (the rest "dropped out")
+    let mut bd = Breakdown::new();
+    for p in 0..3u64 {
+        let mut party = SyntheticParty::new(p, 9);
+        let u = party.make_update(0, 500);
+        party.ship(&u, &Transport::Dfs, Some(&dfs), &mut bd).unwrap();
+    }
+    let (fused, report) = service.aggregate_large(&IterAvg, 0, 10, 2000).unwrap();
+    assert_eq!(fused.len(), 500);
+    assert_eq!(report.parties, 3);
+    assert!(!report.monitor.as_ref().unwrap().is_ready());
+}
+
+#[test]
+fn datanode_failure_mid_flight_does_not_lose_round() {
+    let root = tempdir();
+    let service = make_service(&root, 1024, false); // always Large
+    let dfs = service.dfs().clone();
+    let n = 20usize;
+    fleet_upload_dfs(&dfs, 0, n, 2_000, 4, 77);
+    // kill one datanode (replication=2 in make_service)
+    dfs.namenode().datanode(1).set_alive(false);
+    let (fused, report) = service.aggregate_large(&FedAvg, 0, n, 8000).unwrap();
+    assert_eq!(fused.len(), 2_000);
+    assert_eq!(report.parties, n);
+}
+
+#[test]
+fn fused_model_retrievable_from_store_by_parties() {
+    let root = tempdir();
+    let service = make_service(&root, 1024, false);
+    let dfs = service.dfs().clone();
+    fleet_upload_dfs(&dfs, 2, 6, 1_000, 2, 31);
+    let (fused, _) = service.aggregate_large(&FedAvg, 2, 6, 4000).unwrap();
+    // parties read back the published model (Fig 4 step 5)
+    let bytes = dfs.read(&DfsClient::model_path(2)).unwrap();
+    let got = elastiagg::tensorstore::bytes_to_f32s(&bytes);
+    assert_eq!(got, fused);
+}
+
+#[test]
+fn classification_thresholds_are_monotone_in_memory() {
+    // property: more node memory never flips a Small round to Large
+    let root = tempdir();
+    let mut rng = Rng::new(5);
+    for _ in 0..20 {
+        let update = 1u64 << (8 + rng.gen_range(12));
+        let parties = 1 + rng.gen_range(1000) as usize;
+        let small_mem = 1u64 << (16 + rng.gen_range(10));
+        let svc_small = make_service(&root.join(format!("a{update}{parties}")), small_mem, false);
+        let svc_big = make_service(&root.join(format!("b{update}{parties}")), small_mem * 4, false);
+        let c1 = svc_small.classify(update, parties, &FedAvg);
+        let c2 = svc_big.classify(update, parties, &FedAvg);
+        if c1 == WorkloadClass::Small {
+            assert_eq!(c2, WorkloadClass::Small, "u={update} n={parties} m={small_mem}");
+        }
+    }
+}
+
+#[test]
+fn thundering_herd_all_uploads_survive() {
+    // 48 concurrent TCP uploads against one server (the §III-A Q3 path).
+    let root = tempdir();
+    let service = make_service(&root, 64 << 20, false);
+    let server = FlServer::new(service, Arc::new(IterAvg), 4_000);
+    let handle = server.start("127.0.0.1:0").unwrap();
+    let addr = handle.addr().to_string();
+    std::thread::scope(|s| {
+        for p in 0..48u64 {
+            let addr = addr.clone();
+            s.spawn(move || {
+                let mut c = NetClient::connect(&addr).unwrap();
+                let mut party = SyntheticParty::new(p, 1);
+                let u = party.make_update(0, 1_000);
+                let r = c.call(&Message::Upload(u)).unwrap();
+                assert!(matches!(r, Message::Ack { .. }));
+            });
+        }
+    });
+    let (fused, report) = server.run_round(48, Duration::from_secs(10)).unwrap();
+    assert_eq!(report.parties, 48);
+    assert_eq!(fused.len(), 1_000);
+}

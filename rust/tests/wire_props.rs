@@ -1,0 +1,187 @@
+//! Property tests over the wire/storage formats and the scheduler
+//! invariants — the fuzz-ish layer (seeded, reproducible).
+
+use elastiagg::dfs::{DfsClient, NameNode};
+use elastiagg::mapreduce::BinaryFilesRdd;
+use elastiagg::memsim::MemoryBudget;
+use elastiagg::metrics::Breakdown;
+use elastiagg::net::{read_frame, write_frame, Message};
+use elastiagg::tensorstore::ModelUpdate;
+use elastiagg::util::prop::check;
+use elastiagg::util::rng::Rng;
+
+fn tempdir() -> std::path::PathBuf {
+    let p = std::env::temp_dir().join(format!(
+        "elastiagg-wp-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn random_update(rng: &mut Rng) -> ModelUpdate {
+    let len = rng.gen_range(5000) as usize;
+    let mut d = vec![0f32; len];
+    rng.fill_gaussian_f32(&mut d, 3.0);
+    ModelUpdate::new(rng.next_u64(), rng.next_f32() * 1e4, rng.next_u64() as u32, d)
+}
+
+#[test]
+fn prop_wire_roundtrip_any_update() {
+    check("wire-roundtrip", 100, |_, rng| {
+        let u = random_update(rng);
+        let back = ModelUpdate::decode(&u.encode()).map_err(|e| e.to_string())?;
+        if back != u {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_bitflip_always_detected() {
+    check("bitflip-detected", 60, |_, rng| {
+        let u = random_update(rng);
+        let mut buf = u.encode();
+        if buf.len() < 33 {
+            return Ok(());
+        }
+        let pos = rng.gen_range(buf.len() as u64) as usize;
+        let bit = 1u8 << rng.gen_range(8);
+        buf[pos] ^= bit;
+        match ModelUpdate::decode(&buf) {
+            Err(_) => Ok(()),
+            // a flip in `count`'s encoding that produces the same float is
+            // impossible since crc covers it; any Ok is a missed corruption
+            Ok(back) if back == u => Err("corruption produced identical value?".into()),
+            Ok(_) => Err(format!("corruption at byte {pos} not detected")),
+        }
+    });
+}
+
+#[test]
+fn prop_message_frames_roundtrip() {
+    check("frame-roundtrip", 60, |_, rng| {
+        let msg = match rng.gen_range(6) {
+            0 => Message::Register { party: rng.next_u64() },
+            1 => Message::Upload(random_update(rng)),
+            2 => Message::Ack { redirect_to_dfs: rng.gen_range(2) == 1 },
+            3 => Message::GetModel { round: rng.next_u64() as u32 },
+            4 => {
+                let mut w = vec![0f32; rng.gen_range(1000) as usize];
+                rng.fill_gaussian_f32(&mut w, 1.0);
+                Message::Model { round: 3, weights: w }
+            }
+            _ => Message::Error("e".into()),
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).map_err(|e| e.to_string())?;
+        let back = read_frame(&mut std::io::Cursor::new(buf)).map_err(|e| e.to_string())?;
+        if back != msg {
+            return Err("frame mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dfs_write_read_any_size() {
+    let root = tempdir();
+    let nn = NameNode::create(&root, 3, 2, 257).unwrap(); // odd block size
+    let dfs = DfsClient::new(nn);
+    check("dfs-roundtrip", 40, |i, rng| {
+        let len = rng.gen_range(5000) as usize;
+        let mut data = vec![0u8; len];
+        for b in data.iter_mut() {
+            *b = rng.next_u64() as u8;
+        }
+        let path = format!("/p/{i}");
+        dfs.write(&path, &data).map_err(|e| e.to_string())?;
+        let back = dfs.read(&path).map_err(|e| e.to_string())?;
+        if back != data {
+            return Err(format!("mismatch at len {len}"));
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn prop_partitioning_conserves_files_and_bytes() {
+    let root = tempdir();
+    let nn = NameNode::create(&root, 2, 1, 1 << 20).unwrap();
+    let dfs = DfsClient::new(nn);
+    let mut bd = Breakdown::new();
+    let mut rng = Rng::new(8);
+    let n = 100;
+    let mut total_bytes = 0u64;
+    for p in 0..n as u64 {
+        let len = 10 + rng.gen_range(400) as usize;
+        let u = ModelUpdate::new(p, 1.0, 0, vec![0.5; len]);
+        total_bytes += u.wire_size() as u64;
+        dfs.put_update(&u, &mut bd).unwrap();
+    }
+    check("partition-conservation", 20, |_, rng| {
+        let parts = 1 + rng.gen_range(32) as usize;
+        let rdd = BinaryFilesRdd::binary_files(dfs.clone(), "/rounds/0/updates/", parts, false);
+        let files: usize = rdd.partitions.iter().map(|p| p.files.len()).sum();
+        if files != n {
+            return Err(format!("files {files} != {n}"));
+        }
+        if rdd.total_bytes() != total_bytes {
+            return Err(format!("bytes {} != {total_bytes}", rdd.total_bytes()));
+        }
+        // no file appears twice
+        let mut all: Vec<&String> = rdd.partitions.iter().flat_map(|p| p.files.iter()).collect();
+        all.sort();
+        let before = all.len();
+        all.dedup();
+        if all.len() != before {
+            return Err("duplicate file across partitions".into());
+        }
+        // balance: max partition ≤ 2x mean + one max file
+        let max = rdd.partitions.iter().map(|p| p.bytes).max().unwrap();
+        let mean = total_bytes / rdd.num_partitions() as u64;
+        if rdd.num_partitions() > 1 && max > 2 * mean + 2048 {
+            return Err(format!("imbalance: max {max} vs mean {mean}"));
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn prop_memory_budget_never_oversubscribes_under_races() {
+    check("budget-races", 10, |_, rng| {
+        let budget = MemoryBudget::new(10_000);
+        let chunk = 1 + rng.gen_range(500);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let b = budget.clone();
+                s.spawn(move || {
+                    let mut held = Vec::new();
+                    for _ in 0..200 {
+                        if let Ok(r) = b.reserve(chunk) {
+                            assert!(b.in_use() <= 10_000);
+                            held.push(r);
+                            if held.len() > 5 {
+                                held.clear();
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        if budget.in_use() != 0 {
+            return Err(format!("leak: {}", budget.in_use()));
+        }
+        if budget.high_water() > 10_000 {
+            return Err("oversubscribed".into());
+        }
+        Ok(())
+    });
+}
