@@ -137,7 +137,13 @@ pub fn federated_train(cfg: &TrainConfig, dfs_root: &std::path::Path) -> TrainLo
         // --- adaptive aggregation -------------------------------------
         let algo = crate::fusion::FedAvg;
         let class = service.classify(update_bytes, updates.len(), &algo);
+        // Shadow-plan the round with the cost-aware planner: dispatch here
+        // stays classifier-driven (the training loop's contract), but the
+        // plan's prediction is compared against the observed wall-clock
+        // below so calibration drift is visible in every training log.
+        let plan = service.plan_round(update_bytes, updates.len(), &algo);
         let t0 = std::time::Instant::now();
+        let mut upload_s = 0.0;
         let (fused, report) = match class {
             WorkloadClass::Small => service.aggregate_small(&algo, &updates, round).unwrap(),
             WorkloadClass::Large => {
@@ -146,6 +152,7 @@ pub fn federated_train(cfg: &TrainConfig, dfs_root: &std::path::Path) -> TrainLo
                 for u in &updates {
                     dfs.put_update(u, &mut bd).unwrap();
                 }
+                upload_s = t0.elapsed().as_secs_f64();
                 service
                     .aggregate_large(&algo, round, updates.len(), update_bytes)
                     .unwrap()
@@ -153,6 +160,17 @@ pub fn federated_train(cfg: &TrainConfig, dfs_root: &std::path::Path) -> TrainLo
         };
         let agg_seconds = t0.elapsed().as_secs_f64();
         global = fused;
+        // Feed the observation back — but only when the shadow plan's path
+        // family matches what the classifier actually dispatched, so the
+        // per-family EWMA corrections never learn from the wrong engine.
+        // The upload split keeps observed cost priced like the prediction
+        // (store upload holds only the node, not the executors).
+        let executed_distributed = class == WorkloadClass::Large;
+        let cal = if plan.chosen.kind.is_distributed() == executed_distributed {
+            Some(service.observe_round(round, &plan.chosen, agg_seconds, upload_s))
+        } else {
+            None
+        };
 
         // --- evaluation ------------------------------------------------
         let (nll, acc) = LocalTrainer::evaluate(&rtm, &global, &ds, &mut eval_rng).unwrap();
@@ -161,6 +179,14 @@ pub fn federated_train(cfg: &TrainConfig, dfs_root: &std::path::Path) -> TrainLo
                 "round {round:>3}  class={:?}({})  local_loss={mean_local_loss:.4}  eval_nll={nll:.4}  acc={acc:.3}  agg={:.1} ms",
                 class, report.engine, agg_seconds * 1e3
             );
+            match &cal {
+                Some(cal) => println!("           {}", cal.log_line()),
+                None => println!(
+                    "           plan={} not observed (dispatch took the {} path)",
+                    plan.chosen.kind.engine_label(),
+                    report.engine
+                ),
+            }
         }
         log.rounds.push(RoundLog {
             round,

@@ -42,6 +42,8 @@ pub struct CostModel {
     pub task_overhead_s: f64,
     /// Executor container spin-up (paper: 10 containers < 30 s).
     pub executor_startup_s: f64,
+    /// One-off dispatch latency of an AOT XLA execution (PJRT call setup).
+    pub xla_launch_s: f64,
 }
 
 impl CostModel {
@@ -58,12 +60,20 @@ impl CostModel {
             decode_bps: 1.5e9,
             task_overhead_s: 0.01,
             executor_startup_s: 2.5,
+            xla_launch_s: 5e-4,
         }
     }
 
     /// Decode cost in seconds for `bytes`.
     pub fn decode_bytes(&self, bytes: f64) -> f64 {
         bytes / self.decode_bps
+    }
+
+    /// Effective fuse throughput of the AOT XLA path: a single dispatch
+    /// streaming at the socket's bandwidth ceiling (the same cap that
+    /// bounds the parallel engine, without its per-core launch costs).
+    pub fn xla_bps(&self) -> f64 {
+        self.fuse_bps * self.parallel_bw_cap
     }
 
     /// Measure real constants on this box.  ~1 s of micro-runs.

@@ -118,11 +118,26 @@ impl VirtualCluster {
     }
 
     /// Virtual phase breakdown for a distributed aggregation of `n`
-    /// updates of `update_bytes` (the Fig 7/9 read/sum/reduce bars).
+    /// updates of `update_bytes` (the Fig 7/9 read/sum/reduce bars) at the
+    /// full cluster width.
     pub fn distributed_breakdown(&self, update_bytes: u64, n: usize, cache: bool) -> Breakdown {
+        self.distributed_breakdown_for_cores(update_bytes, n, cache, self.total_cores())
+    }
+
+    /// Same model at an explicit pool width: the dispatch planner prices
+    /// the distributed path at every candidate executor count k by calling
+    /// this with `total_cores = k × cores_per_executor`.
+    pub fn distributed_breakdown_for_cores(
+        &self,
+        update_bytes: u64,
+        n: usize,
+        cache: bool,
+        total_cores: usize,
+    ) -> Breakdown {
         let mut bd = Breakdown::new();
-        let parts = self.partitions(n);
-        let cores = self.total_cores().min(parts.max(1));
+        let total_cores = total_cores.max(1);
+        let parts = crate::mapreduce::default_partitions(n, total_cores);
+        let cores = total_cores.min(parts.max(1));
         let total_bytes = update_bytes as f64 * n as f64;
         let waves = (parts as f64 / cores as f64).ceil();
 
@@ -264,6 +279,27 @@ mod tests {
         let uncached = v.distributed_breakdown(4 << 20, 10_000, false);
         assert!(cached.get("sum") < uncached.get("sum") / 5.0);
         assert!(cached.total() < uncached.total());
+    }
+
+    #[test]
+    fn wider_pools_are_never_slower() {
+        // The planner's k-sweep relies on the breakdown being monotone
+        // non-increasing in pool width (same data, more readers/folders).
+        let v = vc();
+        let mut last = f64::INFINITY;
+        for cores in [3usize, 6, 12, 24, 48] {
+            let t = v.distributed_breakdown_for_cores(4 << 20, 20_000, true, cores).total();
+            assert!(t <= last + 1e-9, "{cores} cores: {t} > {last}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn full_width_breakdown_matches_explicit_cores() {
+        let v = vc();
+        let a = v.distributed_breakdown(4 << 20, 5_000, true);
+        let b = v.distributed_breakdown_for_cores(4 << 20, 5_000, true, v.total_cores());
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 pub mod models;
 
+use crate::planner::DispatchPolicy;
 use crate::util::json::Json;
 use std::path::Path;
 
@@ -71,6 +72,15 @@ pub struct ServiceConfig {
     pub dfs_root: String,
     /// Model-size scale (1.0 = paper sizes; default 0.01 fits one box).
     pub size_scale: f64,
+    /// Dispatch-planner policy: `min_latency`, `min_cost`, or
+    /// `balanced:<alpha>` (the cost/efficiency trade-off knob).
+    pub policy: DispatchPolicy,
+    /// $/s rate of the aggregator node (plan pricing).
+    pub node_usd_per_s: f64,
+    /// $/s rate per distributed executor container (plan pricing).
+    pub executor_usd_per_s: f64,
+    /// Largest executor pool the planner/autoscaler may use.
+    pub max_executors: usize,
 }
 
 impl Default for ServiceConfig {
@@ -83,6 +93,10 @@ impl Default for ServiceConfig {
             memory_headroom: 1.10,
             dfs_root: "/tmp/elastiagg-dfs".to_string(),
             size_scale: 0.01,
+            policy: DispatchPolicy::Balanced(0.5),
+            node_usd_per_s: 8.5e-4,
+            executor_usd_per_s: 5.6e-5,
+            max_executors: 8,
         }
     }
 }
@@ -134,6 +148,18 @@ impl ServiceConfig {
         if let Some(v) = j.get("size_scale").as_f64() {
             c.size_scale = v;
         }
+        if let Some(p) = j.get("policy").as_str().and_then(DispatchPolicy::parse) {
+            c.policy = p;
+        }
+        if let Some(v) = j.get("node_usd_per_s").as_f64() {
+            c.node_usd_per_s = v;
+        }
+        if let Some(v) = j.get("executor_usd_per_s").as_f64() {
+            c.executor_usd_per_s = v;
+        }
+        if let Some(v) = j.get("max_executors").as_usize() {
+            c.max_executors = v;
+        }
         c
     }
 
@@ -151,6 +177,10 @@ impl ServiceConfig {
             ("memory_headroom", Json::num(self.memory_headroom)),
             ("dfs_root", Json::str(&self.dfs_root)),
             ("size_scale", Json::num(self.size_scale)),
+            ("policy", Json::str(&self.policy.to_string())),
+            ("node_usd_per_s", Json::num(self.node_usd_per_s)),
+            ("executor_usd_per_s", Json::num(self.executor_usd_per_s)),
+            ("max_executors", Json::num(self.max_executors as f64)),
         ])
     }
 }
@@ -187,5 +217,28 @@ mod tests {
         let c = ServiceConfig::from_json(&j);
         assert_eq!(c.node.cores, 64);
         assert_eq!(c.cluster.workers, 4);
+        assert_eq!(c.policy, DispatchPolicy::Balanced(0.5));
+        assert_eq!(c.max_executors, 8);
+    }
+
+    #[test]
+    fn planner_knobs_roundtrip() {
+        let mut c = ServiceConfig::default();
+        c.policy = DispatchPolicy::Balanced(0.25);
+        c.node_usd_per_s = 1e-3;
+        c.executor_usd_per_s = 2e-5;
+        c.max_executors = 12;
+        let c2 = ServiceConfig::from_json(&c.to_json());
+        assert_eq!(c2.policy, DispatchPolicy::Balanced(0.25));
+        assert_eq!(c2.node_usd_per_s, 1e-3);
+        assert_eq!(c2.executor_usd_per_s, 2e-5);
+        assert_eq!(c2.max_executors, 12);
+    }
+
+    #[test]
+    fn bad_policy_string_keeps_default() {
+        let j = Json::parse(r#"{"policy": "warp_speed"}"#).unwrap();
+        let c = ServiceConfig::from_json(&j);
+        assert_eq!(c.policy, DispatchPolicy::Balanced(0.5));
     }
 }

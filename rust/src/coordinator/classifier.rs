@@ -2,12 +2,19 @@
 //!
 //! `S = w_s × n` — the round's total update volume — is compared against
 //! the single node's usable memory.  *Small* workloads fit and take the
-//! in-memory parallel path; *large* ones go distributed.  The effective
-//! memory requirement is inflated by (a) a configurable headroom for the
-//! result buffer and framework overhead, and (b) the fusion algorithm's
+//! in-memory path; *large* ones go distributed.  The effective memory
+//! requirement is inflated by (a) a configurable headroom for the result
+//! buffer and framework overhead, and (b) the fusion algorithm's
 //! duplication factor (holistic algorithms must materialise the whole set;
 //! the IBMFL averaging implementations hold input + working copies — the
 //! factors are fitted from the paper's Fig 1 OOM points, see `cluster`).
+//!
+//! Since the cost-aware planner landed, this binary test is no longer the
+//! dispatch decision itself: the classifier is the *feasibility oracle*
+//! the [`DispatchPlanner`](crate::planner::DispatchPlanner) consults —
+//! single-node plans are only enumerated (and priced) when the round
+//! classifies `Small`; which feasible plan actually runs is chosen by the
+//! configured [`DispatchPolicy`](crate::planner::DispatchPolicy).
 
 use crate::cluster::{FEDAVG_DUP_FACTOR, ITERAVG_DUP_FACTOR};
 use crate::fusion::FusionAlgorithm;
@@ -94,6 +101,39 @@ mod tests {
         assert_eq!(c.classify(4 << 20, 100, &FedAvg), WorkloadClass::Small);
         // 200 × 4 MiB × 2 = 1.6 GiB -> large
         assert_eq!(c.classify(4 << 20, 200, &FedAvg), WorkloadClass::Large);
+    }
+
+    #[test]
+    fn exact_boundary_classifies_large() {
+        // Algorithm 1's test is strict (`S < M`): at S == M exactly the
+        // round must go distributed — the single node has zero slack.
+        let c = WorkloadClassifier::new(1000, 1.0);
+        // 2 × 250 B × dup 2.0 (FedAvg) = 1000 == M
+        assert_eq!(c.required_bytes(250, 2, &FedAvg), 1000);
+        assert_eq!(c.classify(250, 2, &FedAvg), WorkloadClass::Large);
+        // one byte of slack flips it back
+        let c = WorkloadClassifier::new(1001, 1.0);
+        assert_eq!(c.classify(250, 2, &FedAvg), WorkloadClass::Small);
+    }
+
+    #[test]
+    fn required_bytes_inflated_by_headroom_and_dup_factor() {
+        let plain = WorkloadClassifier::new(1 << 30, 1.0);
+        let padded = WorkloadClassifier::new(1 << 30, 1.25);
+        // headroom inflates the estimate linearly (±1 byte of f64 rounding)
+        let ratio = padded.required_bytes(1 << 20, 10, &IterAvg) as f64
+            / plain.required_bytes(1 << 20, 10, &IterAvg) as f64;
+        assert!((ratio - 1.25).abs() < 1e-6, "{ratio}");
+        // FedAvg's working copies (dup 2.0) need more than IterAvg's 1.15
+        assert!(
+            plain.required_bytes(1 << 20, 10, &FedAvg)
+                > plain.required_bytes(1 << 20, 10, &IterAvg)
+        );
+        // holistic algorithms are the most conservative of all
+        assert!(
+            plain.required_bytes(1 << 20, 10, &CoordMedian)
+                > plain.required_bytes(1 << 20, 10, &FedAvg)
+        );
     }
 
     #[test]

@@ -2,15 +2,18 @@
 //!
 //! * [`classifier`] — Algorithm 1's dispatch test: `S = w_s × n` against
 //!   the node memory budget, with headroom and per-algorithm duplication
-//!   factors;
+//!   factors; it survives as the feasibility oracle inside the cost-aware
+//!   [`planner`](crate::planner), which prices every feasible plan rather
+//!   than just picking a side of the boundary;
 //! * [`registry`] — the party registry (join/dropout/selection — FL parties
 //!   "can join during training ... and drop out anytime", §III-C);
 //! * [`round`] — the round state machine (collecting → aggregating →
 //!   published);
 //! * [`service`] — the adaptive aggregation service itself: owns the
-//!   engines and the Spark/DFS path, classifies each round, transitions
-//!   seamlessly (preemptively redirecting parties to the store when the
-//!   next round is predicted to spill), and aggregates.
+//!   engines, the Spark/DFS path, the planner and the autoscaler; plans
+//!   each round, transitions seamlessly (preemptively redirecting parties
+//!   to the store when the next round is predicted to spill), aggregates,
+//!   and feeds observed timings back into the cost model.
 
 pub mod classifier;
 pub mod registry;

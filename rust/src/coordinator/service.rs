@@ -1,12 +1,26 @@
-//! The adaptive aggregation service (paper §III-D, Algorithm 1).
+//! The adaptive aggregation service (paper §III-D, Algorithm 1 —
+//! generalized by the cost-aware planner).
 //!
 //! One facade owning both paths:
 //!
 //! * **small** — updates collected in node memory, fused by the XLA engine
 //!   (AOT Pallas weighted-sum) with the multi-core parallel engine as the
-//!   fallback for algorithms the fixed-K artifacts don't cover;
+//!   fallback for algorithms the fixed-K artifacts don't cover (a serial
+//!   engine is also held for rounds the planner prices as too small to be
+//!   worth thread launches);
 //! * **large** — updates land in the DFS, the Algorithm-1 monitor waits for
 //!   threshold/timeout, and the Sparklet MapReduce job fuses them.
+//!
+//! Dispatch is decided by the [`DispatchPlanner`]: each round it prices
+//! serial/parallel/XLA single-node plans and the MapReduce path at every
+//! candidate executor count, then selects under the configured
+//! [`DispatchPolicy`] (`ServiceConfig::policy`).  The binary Algorithm-1
+//! classifier remains the planner's feasibility oracle and is still
+//! exposed directly ([`AdaptiveService::classify`]) for callers that only
+//! need the small/large split.  After every round the observed wall-clock
+//! feeds back into the planner ([`AdaptiveService::observe_round`]) and
+//! the [`Autoscaler`] grows/shrinks the executor pool with hysteresis
+//! instead of re-provisioning it statically.
 //!
 //! *Seamless transition* (§III-D3): after each round the service predicts
 //! the next round's class from the live registry count; when it flips to
@@ -15,15 +29,20 @@
 //! spun up once, off the critical path).
 
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use crate::cluster::{CostModel, VirtualCluster};
 use crate::config::ServiceConfig;
 use crate::coordinator::{WorkloadClass, WorkloadClassifier};
 use crate::dfs::{DfsClient, Monitor, MonitorOutcome};
-use crate::engine::{AggregationEngine, EngineError, ParallelEngine, XlaEngine};
+use crate::engine::{AggregationEngine, EngineError, ParallelEngine, SerialEngine, XlaEngine};
 use crate::fusion::FusionAlgorithm;
 use crate::mapreduce::{scheduler::JobConfig, ExecutorConfig, SparkContext};
 use crate::metrics::Breakdown;
+use crate::planner::{
+    Autoscaler, AutoscalerConfig, CandidatePlan, DispatchPlanner, DispatchPolicy, PlanCost,
+    PlanKind, PlannerConfig, PricingModel, RoundCalibration, RoundPlan, ScaleDecision,
+};
 use crate::tensorstore::ModelUpdate;
 
 #[derive(Debug)]
@@ -55,8 +74,13 @@ pub struct ServiceReport {
     pub engine: &'static str,
     pub parties: usize,
     pub partitions: usize,
+    /// Executor containers the round ran on (0 for single-node engines).
+    pub executors: usize,
     pub breakdown: Breakdown,
     pub monitor: Option<MonitorOutcome>,
+    /// The planner's predicted (latency, $) for the chosen plan, when the
+    /// round went through [`AdaptiveService::aggregate_planned`].
+    pub predicted: Option<PlanCost>,
 }
 
 pub struct AdaptiveService {
@@ -64,12 +88,15 @@ pub struct AdaptiveService {
     cfg: ServiceConfig,
     dfs: DfsClient,
     monitor: Monitor,
+    serial: SerialEngine,
     parallel: ParallelEngine,
     xla: Option<XlaEngine>,
     /// Spark context is started lazily on the first Large round (the
     /// §III-D3 one-time transition cost) and kept for later rounds.
     spark: Mutex<Option<Arc<SparkContext>>>,
     executor_cfg: ExecutorConfig,
+    planner: Mutex<DispatchPlanner>,
+    autoscaler: Mutex<Autoscaler>,
 }
 
 impl AdaptiveService {
@@ -80,14 +107,39 @@ impl AdaptiveService {
         executor_cfg: ExecutorConfig,
     ) -> AdaptiveService {
         let monitor = Monitor::new(dfs.namenode().clone());
+        let classifier = WorkloadClassifier::new(cfg.node.memory_bytes, cfg.memory_headroom);
+        let max_executors = cfg.max_executors.max(1);
+        let planner = DispatchPlanner::new(
+            classifier.clone(),
+            VirtualCluster::new(cfg.cluster.clone(), CostModel::nominal()),
+            PricingModel {
+                node_usd_per_s: cfg.node_usd_per_s,
+                executor_usd_per_s: cfg.executor_usd_per_s,
+            },
+            PlannerConfig {
+                policy: cfg.policy,
+                max_executors,
+                cores_per_executor: executor_cfg.cores_per_executor.max(1),
+                node_cores: cfg.node.cores.max(1),
+                xla_available: xla.is_some(),
+                feedback_beta: 0.3,
+            },
+        );
+        let autoscaler = Autoscaler::new(
+            AutoscalerConfig { max_executors, ..Default::default() },
+            executor_cfg.executors.max(1),
+        );
         AdaptiveService {
-            classifier: WorkloadClassifier::new(cfg.node.memory_bytes, cfg.memory_headroom),
+            classifier,
+            serial: SerialEngine::unbounded(),
             parallel: ParallelEngine::new(cfg.node.cores),
             monitor,
             dfs,
             xla,
             spark: Mutex::new(None),
             executor_cfg,
+            planner: Mutex::new(planner),
+            autoscaler: Mutex::new(autoscaler),
             cfg,
         }
     }
@@ -111,6 +163,147 @@ impl AdaptiveService {
         self.classify(update_bytes, expected_parties, algo) == WorkloadClass::Large
     }
 
+    // ------------------------------------------------------------------
+    // Cost-aware planning
+    // ------------------------------------------------------------------
+
+    /// Price every candidate plan for the coming round and select under
+    /// the configured policy.  The warm executor-pool size is taken from
+    /// the live Spark context so distributed candidates only pay spin-up
+    /// for the executors they would add.
+    pub fn plan_round(
+        &self,
+        update_bytes: u64,
+        parties: usize,
+        algo: &dyn FusionAlgorithm,
+    ) -> RoundPlan {
+        let current = {
+            let guard = self.spark.lock().unwrap();
+            guard.as_ref().map(|sc| sc.current_executors()).unwrap_or(0)
+        };
+        self.planner.lock().unwrap().plan(update_bytes, parties, algo, current)
+    }
+
+    /// Feed a plan's desired executor count through the autoscaler and,
+    /// when it decides to act, resize the live pool.  Returns the pool's
+    /// target size after the decision.
+    pub fn apply_scale(&self, plan: &RoundPlan) -> usize {
+        let desired = plan.chosen.kind.executors();
+        let decision = { self.autoscaler.lock().unwrap().observe(desired) };
+        match decision {
+            ScaleDecision::ScaleTo(n) => {
+                let sc = { self.spark.lock().unwrap().as_ref().cloned() };
+                if let Some(sc) = sc {
+                    sc.scale_to(n);
+                }
+                n
+            }
+            ScaleDecision::Hold(n) => n,
+        }
+    }
+
+    /// Record a round's observed wall-clock against its chosen plan: the
+    /// planner's EWMA corrections absorb the drift and the pair lands in
+    /// the calibration ledger.  `upload_s` is the store-upload portion of
+    /// `observed_s` (0 for single-node rounds or when unknown), priced at
+    /// the node-only rate exactly like the prediction.
+    pub fn observe_round(
+        &self,
+        round: u32,
+        chosen: &CandidatePlan,
+        observed_s: f64,
+        upload_s: f64,
+    ) -> RoundCalibration {
+        self.planner.lock().unwrap().observe_split(round, chosen, observed_s, upload_s)
+    }
+
+    /// The full predicted-vs-observed calibration history.
+    pub fn calibration_ledger(&self) -> Vec<RoundCalibration> {
+        self.planner.lock().unwrap().ledger().to_vec()
+    }
+
+    pub fn policy(&self) -> DispatchPolicy {
+        self.planner.lock().unwrap().policy()
+    }
+
+    /// Change the cost/latency trade-off knob between rounds.
+    pub fn set_policy(&self, policy: DispatchPolicy) {
+        self.planner.lock().unwrap().set_policy(policy);
+    }
+
+    /// Swap freshly calibrated cost-model constants into the planner
+    /// (e.g. from [`CostModel::calibrate`]).
+    pub fn recalibrate(&self, cost: CostModel) {
+        self.planner.lock().unwrap().set_cost_model(cost);
+    }
+
+    /// One fully planned round over in-memory updates: plan → autoscale →
+    /// dispatch to the chosen substrate (uploading to the store first for
+    /// distributed plans) → feed the observed wall-clock back into the
+    /// cost model.
+    pub fn aggregate_planned(
+        &self,
+        algo: &dyn FusionAlgorithm,
+        updates: &[ModelUpdate],
+        round: u32,
+    ) -> Result<(Vec<f32>, ServiceReport), ServiceError> {
+        if updates.is_empty() {
+            return Err(ServiceError::NoUpdates);
+        }
+        let update_bytes = updates.iter().map(|u| u.data.len() as u64 * 4).max().unwrap_or(0);
+        let plan = self.plan_round(update_bytes, updates.len(), algo);
+        let pool_target = self.apply_scale(&plan);
+        // The autoscaler may hold the pool at a size other than the chosen
+        // plan's k (hysteresis); the round then actually runs at the held
+        // size, so dispatch/observe against THAT candidate's prediction.
+        let mut chosen = plan.chosen;
+        if let PlanKind::Distributed { executors } = chosen.kind {
+            if executors != pool_target {
+                if let Some(c) = plan
+                    .candidates
+                    .iter()
+                    .find(|c| c.kind == PlanKind::Distributed { executors: pool_target })
+                {
+                    chosen = *c;
+                }
+            }
+        }
+        let t0 = Instant::now();
+        let (out, mut report, upload_s) = match chosen.kind {
+            PlanKind::Distributed { .. } => {
+                let mut bd = Breakdown::new();
+                for u in updates {
+                    if u.round == round {
+                        self.dfs.put_update(u, &mut bd).map_err(ServiceError::Dfs)?;
+                    } else {
+                        let mut u = u.clone();
+                        u.round = round;
+                        self.dfs.put_update(&u, &mut bd).map_err(ServiceError::Dfs)?;
+                    }
+                }
+                let upload_s = t0.elapsed().as_secs_f64();
+                let (out, report) =
+                    self.aggregate_large(algo, round, updates.len(), update_bytes)?;
+                (out, report, upload_s)
+            }
+            kind => {
+                let (out, report) = self.aggregate_single(kind, algo, updates, round)?;
+                (out, report, 0.0)
+            }
+        };
+        let observed_s = t0.elapsed().as_secs_f64();
+        self.planner
+            .lock()
+            .unwrap()
+            .observe_split(round, &chosen, observed_s, upload_s);
+        report.predicted = Some(chosen.cost);
+        Ok((out, report))
+    }
+
+    // ------------------------------------------------------------------
+    // Execution paths
+    // ------------------------------------------------------------------
+
     /// Small-path aggregation over in-memory updates.  Prefers the XLA
     /// engine; falls back to the parallel engine when the artifact set
     /// doesn't cover the algorithm (Krum/Zeno, median with n∉{8,16,32}).
@@ -120,26 +313,49 @@ impl AdaptiveService {
         updates: &[ModelUpdate],
         round: u32,
     ) -> Result<(Vec<f32>, ServiceReport), ServiceError> {
+        self.aggregate_single(PlanKind::Xla, algo, updates, round)
+    }
+
+    /// Run a single-node plan.  `PlanKind::Xla` keeps the historical
+    /// fallback chain (XLA, then parallel); `Serial`/`Parallel` run their
+    /// engine directly.
+    fn aggregate_single(
+        &self,
+        kind: PlanKind,
+        algo: &dyn FusionAlgorithm,
+        updates: &[ModelUpdate],
+        round: u32,
+    ) -> Result<(Vec<f32>, ServiceReport), ServiceError> {
         let mut bd = Breakdown::new();
-        let (out, engine): (Vec<f32>, &'static str) = match &self.xla {
-            Some(x) => match x.aggregate(algo, updates, &mut bd) {
-                Ok(v) => (v, "xla"),
-                Err(EngineError::Runtime(_)) => {
+        let (out, engine): (Vec<f32>, &'static str) = match kind {
+            PlanKind::Serial => (
+                self.serial.aggregate(algo, updates, &mut bd).map_err(ServiceError::Engine)?,
+                "serial",
+            ),
+            PlanKind::Xla => match &self.xla {
+                Some(x) => match x.aggregate(algo, updates, &mut bd) {
+                    Ok(v) => (v, "xla"),
+                    Err(EngineError::Runtime(_)) => {
+                        let v = self
+                            .parallel
+                            .aggregate(algo, updates, &mut bd)
+                            .map_err(ServiceError::Engine)?;
+                        (v, "parallel")
+                    }
+                    Err(e) => return Err(ServiceError::Engine(e)),
+                },
+                None => {
                     let v = self
                         .parallel
                         .aggregate(algo, updates, &mut bd)
                         .map_err(ServiceError::Engine)?;
                     (v, "parallel")
                 }
-                Err(e) => return Err(ServiceError::Engine(e)),
             },
-            None => {
-                let v = self
-                    .parallel
-                    .aggregate(algo, updates, &mut bd)
-                    .map_err(ServiceError::Engine)?;
-                (v, "parallel")
-            }
+            _ => (
+                self.parallel.aggregate(algo, updates, &mut bd).map_err(ServiceError::Engine)?,
+                "parallel",
+            ),
         };
         Ok((
             out.clone(),
@@ -149,20 +365,24 @@ impl AdaptiveService {
                 engine,
                 parties: updates.len(),
                 partitions: 0,
+                executors: 0,
                 breakdown: bd,
                 monitor: None,
+                predicted: None,
             },
         ))
     }
 
-    /// Get (or lazily start) the Spark context.
+    /// Get (or lazily start) the Spark context.  The pool is started
+    /// directly at the autoscaler's current target so one provisioning
+    /// event pays the spin-up delay exactly once.
     pub fn spark(&self) -> Arc<SparkContext> {
         let mut guard = self.spark.lock().unwrap();
         if guard.is_none() {
-            *guard = Some(Arc::new(SparkContext::start(
-                self.dfs.clone(),
-                self.executor_cfg.clone(),
-            )));
+            let target = self.autoscaler.lock().unwrap().current();
+            let mut exec_cfg = self.executor_cfg.clone();
+            exec_cfg.executors = target;
+            *guard = Some(Arc::new(SparkContext::start(self.dfs.clone(), exec_cfg)));
         }
         guard.as_ref().unwrap().clone()
     }
@@ -212,8 +432,10 @@ impl AdaptiveService {
                 engine: "mapreduce",
                 parties: outcome.count(),
                 partitions,
+                executors: sc.current_executors(),
                 breakdown: bd,
                 monitor: Some(outcome),
+                predicted: None,
             },
         ))
     }
@@ -280,6 +502,7 @@ mod tests {
         assert_eq!(report.parties, 10);
         assert!(report.monitor.as_ref().unwrap().is_ready());
         assert!(report.partitions >= 1);
+        assert!(report.executors >= 1);
         // fused model published to the store
         assert!(svc.dfs().exists(&DfsClient::model_path(4)));
         let mut bd2 = Breakdown::new();
@@ -340,6 +563,82 @@ mod tests {
         );
         assert!(matches!(
             svc.aggregate_large(&FedAvg, 77, 5, 100),
+            Err(ServiceError::NoUpdates)
+        ));
+    }
+
+    #[test]
+    fn planned_small_round_runs_single_node_and_matches_serial() {
+        let (svc, _td) = service(1 << 30);
+        let us = updates(8, 500);
+        let (out, report) = svc.aggregate_planned(&FedAvg, &us, 0).unwrap();
+        assert_eq!(report.class, WorkloadClass::Small);
+        assert!(matches!(report.engine, "serial" | "parallel"), "{}", report.engine);
+        assert!(report.predicted.is_some());
+        let mut bd = Breakdown::new();
+        let want = SerialEngine::unbounded().aggregate(&FedAvg, &us, &mut bd).unwrap();
+        all_close(&out, &want, 1e-4, 1e-5).unwrap();
+        // the round landed in the calibration ledger
+        let ledger = svc.calibration_ledger();
+        assert_eq!(ledger.len(), 1);
+        assert!(!ledger[0].kind.is_distributed());
+        assert!(ledger[0].observed_s > 0.0);
+    }
+
+    #[test]
+    fn planned_large_round_uploads_and_goes_distributed() {
+        let (svc, _td) = service(1 << 20); // 1 MiB node: 10 × 200 KB spills
+        let us = updates(10, 50_000);
+        let (out, report) = svc.aggregate_planned(&FedAvg, &us, 3).unwrap();
+        assert_eq!(report.class, WorkloadClass::Large);
+        assert_eq!(report.engine, "mapreduce");
+        assert!(report.executors >= 1);
+        assert!(svc.spark_started());
+        assert!(report.predicted.is_some());
+        let mut us3 = us.clone();
+        for u in us3.iter_mut() {
+            u.round = 3;
+        }
+        let mut bd = Breakdown::new();
+        let want = SerialEngine::unbounded().aggregate(&FedAvg, &us3, &mut bd).unwrap();
+        all_close(&out, &want, 1e-4, 1e-5).unwrap();
+        let ledger = svc.calibration_ledger();
+        assert_eq!(ledger.len(), 1);
+        assert!(ledger[0].kind.is_distributed());
+    }
+
+    #[test]
+    fn planned_rounds_feed_calibration_and_stay_stable() {
+        // A mixed small/large trace: dispatch keeps matching the class and
+        // the ledger records every round.
+        let (svc, _td) = service(1 << 20);
+        let small = updates(3, 200);
+        let large = updates(8, 50_000);
+        for round in 0..4u32 {
+            let us = if round % 2 == 0 { &small } else { &large };
+            let (_, report) = svc.aggregate_planned(&FedAvg, us, round).unwrap();
+            if round % 2 == 0 {
+                assert_eq!(report.class, WorkloadClass::Small, "round {round}");
+            } else {
+                assert_eq!(report.engine, "mapreduce", "round {round}");
+            }
+        }
+        assert_eq!(svc.calibration_ledger().len(), 4);
+    }
+
+    #[test]
+    fn policy_knob_is_settable() {
+        let (svc, _td) = service(1 << 30);
+        assert_eq!(svc.policy(), DispatchPolicy::Balanced(0.5));
+        svc.set_policy(DispatchPolicy::MinCost);
+        assert_eq!(svc.policy(), DispatchPolicy::MinCost);
+    }
+
+    #[test]
+    fn planned_empty_round_is_no_updates() {
+        let (svc, _td) = service(1 << 30);
+        assert!(matches!(
+            svc.aggregate_planned(&FedAvg, &[], 0),
             Err(ServiceError::NoUpdates)
         ));
     }

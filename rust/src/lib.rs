@@ -9,14 +9,22 @@
 //! The service classifies each round's aggregation workload by
 //! `S = update_size × parties` and adaptively dispatches it:
 //!
-//! * `S < M` (fits the aggregator node): the **single-node parallel engine**
-//!   ([`engine`]) fuses updates in memory across cores (the paper's Numba
-//!   path), with the XLA/PJRT hot path executing the AOT-compiled Pallas
-//!   weighted-sum kernel;
+//! * `S < M` (fits the aggregator node): the **single-node engines**
+//!   ([`engine`]) fuse updates in memory — serial, multi-core parallel
+//!   (the paper's Numba path), or the XLA/PJRT hot path executing the
+//!   AOT-compiled Pallas weighted-sum kernel;
 //! * otherwise: the **distributed path** — parties upload updates to the
 //!   replicated block store ([`dfs`]), the Algorithm-1 monitor waits for the
 //!   threshold, and the MapReduce engine ([`mapreduce`]) partitions, reads
 //!   and fuses them across executor pools (the paper's PySpark + HDFS path).
+//!
+//! The binary `S < M` test is generalized by the cost-aware dispatch
+//! [`planner`]: every round it prices each single-node engine and the
+//! distributed path at every executor count with the calibrated
+//! [`cluster`] cost model, selects under a user policy (`min_latency`,
+//! `min_cost`, or the `balanced:<alpha>` Pareto knob), learns from each
+//! round's observed timings, and elastically grows/shrinks the executor
+//! pool between rounds with hysteresis.
 //!
 //! See `DESIGN.md` for the system inventory and per-figure experiment index.
 
@@ -33,6 +41,7 @@ pub mod mapreduce;
 pub mod memsim;
 pub mod metrics;
 pub mod net;
+pub mod planner;
 pub mod runtime;
 pub mod server;
 pub mod tensorstore;

@@ -24,7 +24,7 @@ use elastiagg::util::fmt;
 
 const VALUE_OPTS: &[&str] = &[
     "parties", "rounds", "local-steps", "lr", "skew", "seed", "mem", "cores",
-    "algo", "model", "addr", "dfs-root", "scale", "n", "len",
+    "algo", "model", "addr", "dfs-root", "scale", "n", "len", "policy",
 ];
 
 fn main() {
@@ -42,6 +42,7 @@ fn main() {
                  \n\
                  train      --parties N --rounds R --local-steps S --lr F --skew F --mem SIZE\n\
                  serve      --addr HOST:PORT --mem SIZE --cores N --algo NAME --model NAME\n\
+                            --policy min_latency|min_cost|balanced:<alpha>\n\
                  aggregate  --n N --len L --algo NAME --cores N\n\
                  calibrate\n\
                  models"
@@ -92,6 +93,11 @@ fn cmd_serve(args: &Args) {
     cfg.node.memory_bytes = args.size_or("mem", 2 << 30);
     cfg.node.cores = args.usize_or("cores", 4);
     cfg.size_scale = scale;
+    let policy_str = args.str_or("policy", &cfg.policy.to_string());
+    cfg.policy = elastiagg::planner::DispatchPolicy::parse(&policy_str).unwrap_or_else(|| {
+        eprintln!("unknown policy '{policy_str}' (min_latency | min_cost | balanced:<alpha>)");
+        std::process::exit(2);
+    });
 
     let dfs_root = args.str_or("dfs-root", &cfg.dfs_root.clone());
     let nn = NameNode::create(

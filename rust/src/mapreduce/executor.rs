@@ -1,24 +1,35 @@
-//! The executor pool: Yarn-container analog.
+//! The executor pool: Yarn-container analog, now *elastic*.
 //!
 //! Each executor owns `cores` worker threads and a [`MemoryBudget`] (the
 //! paper caps containers at 35 GB).  Spin-up charges a configurable
 //! startup delay — the paper measures ~30 s to start 10 executors of
 //! 30 GB / 3 cores, which the `ablations` bench reproduces through the
 //! cluster cost model.
+//!
+//! [`ExecutorPool::scale_to`] grows or shrinks the pool *in place* between
+//! rounds (the autoscaler's hook): growing spawns additional executors
+//! (paying the startup delay once per scale event, not per job), shrinking
+//! retires the highest-indexed workers after their current task.  Workers
+//! poll a shared shrink watermark between tasks, so a shrink completes
+//! within one poll interval without tearing down the whole pool — the
+//! "elastic" alternative to static re-provisioning.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::memsim::MemoryBudget;
 
 /// Executor container geometry.
 #[derive(Clone, Debug)]
 pub struct ExecutorConfig {
+    /// Initial executor count (the pool can be rescaled later).
     pub executors: usize,
     pub cores_per_executor: usize,
     pub mem_per_executor: u64,
-    /// Real startup delay per pool (simulating context/container spin-up).
+    /// Real startup delay per scale-up event (simulating context/container
+    /// spin-up).
     pub startup: std::time::Duration,
 }
 
@@ -42,16 +53,35 @@ pub struct TaskCtx {
     pub memory: MemoryBudget,
 }
 
+/// How long an idle worker waits on the queue before re-checking the
+/// shrink watermark.  Task pickup is NOT delayed by this — `recv_timeout`
+/// wakes the moment a task arrives; the interval only bounds how long a
+/// retiring worker can linger (shrinks also inject wake-up sentinels, so
+/// in practice retirement is immediate) and keeps the idle wake-up rate
+/// negligible (~25/s per worker).
+const POLL_INTERVAL: Duration = Duration::from_millis(40);
+
 struct Shared {
     rx: Mutex<Receiver<Task>>,
+    /// Workers whose global core index is >= this exit after their current
+    /// task (the elastic-shrink watermark; also the live core count).
+    target_cores: AtomicUsize,
 }
 
-/// A pool of `executors × cores_per_executor` worker threads.
+struct PoolInner {
+    /// Worker handles in global core-index order (executor-major).
+    workers: Vec<std::thread::JoinHandle<()>>,
+    budgets: Vec<MemoryBudget>,
+    executors: usize,
+}
+
+/// A pool of `executors × cores_per_executor` worker threads that can be
+/// resized between jobs.
 pub struct ExecutorPool {
     tx: Option<Sender<Task>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
-    config: ExecutorConfig,
-    budgets: Vec<MemoryBudget>,
+    shared: Arc<Shared>,
+    inner: Mutex<PoolInner>,
+    base: ExecutorConfig,
     in_flight: Arc<AtomicUsize>,
 }
 
@@ -60,49 +90,126 @@ impl ExecutorPool {
     /// paper's §III-D3 "seamless transition" discussion accounts for).
     pub fn start(config: ExecutorConfig) -> ExecutorPool {
         std::thread::sleep(config.startup);
-        let budgets: Vec<MemoryBudget> = (0..config.executors)
-            .map(|_| MemoryBudget::new(config.mem_per_executor))
-            .collect();
         let (tx, rx) = channel::<Task>();
-        let shared = Arc::new(Shared { rx: Mutex::new(rx) });
-        let in_flight = Arc::new(AtomicUsize::new(0));
-        let mut workers = Vec::new();
-        for e in 0..config.executors {
-            for c in 0..config.cores_per_executor {
-                let shared = shared.clone();
-                let budget = budgets[e].clone();
-                let in_flight = in_flight.clone();
-                workers.push(std::thread::spawn(move || {
-                    let ctx = TaskCtx { executor_id: e, core_id: c, memory: budget };
-                    loop {
-                        let task = {
-                            let rx = shared.rx.lock().unwrap();
-                            rx.recv()
-                        };
-                        match task {
-                            Ok(t) => {
-                                t(&ctx);
-                                in_flight.fetch_sub(1, Ordering::AcqRel);
-                            }
-                            Err(_) => break, // pool shut down
-                        }
+        let pool = ExecutorPool {
+            tx: Some(tx),
+            shared: Arc::new(Shared {
+                rx: Mutex::new(rx),
+                target_cores: AtomicUsize::new(0),
+            }),
+            inner: Mutex::new(PoolInner {
+                workers: Vec::new(),
+                budgets: Vec::new(),
+                executors: 0,
+            }),
+            in_flight: Arc::new(AtomicUsize::new(0)),
+            base: config,
+        };
+        {
+            let mut inner = pool.inner.lock().unwrap();
+            let to = pool.base.executors;
+            pool.grow_locked(&mut inner, to);
+        }
+        pool
+    }
+
+    fn spawn_worker(
+        &self,
+        executor_id: usize,
+        core_id: usize,
+        budget: MemoryBudget,
+    ) -> std::thread::JoinHandle<()> {
+        let shared = self.shared.clone();
+        let in_flight = self.in_flight.clone();
+        let my_core = executor_id * self.base.cores_per_executor + core_id;
+        std::thread::spawn(move || {
+            let ctx = TaskCtx { executor_id, core_id, memory: budget };
+            loop {
+                if my_core >= shared.target_cores.load(Ordering::Acquire) {
+                    break; // retired by a shrink
+                }
+                let task = {
+                    let rx = shared.rx.lock().unwrap();
+                    rx.recv_timeout(POLL_INTERVAL)
+                };
+                match task {
+                    Ok(t) => {
+                        t(&ctx);
+                        in_flight.fetch_sub(1, Ordering::AcqRel);
                     }
-                }));
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break, // pool shut down
+                }
+            }
+        })
+    }
+
+    /// Grow to `to` executors; caller holds the inner lock.  The watermark
+    /// is raised *before* spawning so new workers don't see a stale target
+    /// and exit immediately.
+    fn grow_locked(&self, inner: &mut PoolInner, to: usize) {
+        self.shared
+            .target_cores
+            .store(to * self.base.cores_per_executor, Ordering::Release);
+        for e in inner.executors..to {
+            let budget = MemoryBudget::new(self.base.mem_per_executor);
+            inner.budgets.push(budget.clone());
+            for c in 0..self.base.cores_per_executor {
+                let h = self.spawn_worker(e, c, budget.clone());
+                inner.workers.push(h);
             }
         }
-        ExecutorPool { tx: Some(tx), workers, config, budgets, in_flight }
+        inner.executors = to;
     }
 
+    /// Elastically resize the pool to `executors` containers (min 1).
+    /// Growing pays the configured startup delay once per event; shrinking
+    /// retires the highest-indexed workers after their current task and
+    /// joins them.  Queued tasks are unaffected — survivors drain them.
+    /// Returns the pool size after the resize.
+    pub fn scale_to(&self, executors: usize) -> usize {
+        let to = executors.max(1);
+        let mut inner = self.inner.lock().unwrap();
+        let cur = inner.executors;
+        if to > cur {
+            std::thread::sleep(self.base.startup);
+            self.grow_locked(&mut inner, to);
+        } else if to < cur {
+            let keep = to * self.base.cores_per_executor;
+            self.shared.target_cores.store(keep, Ordering::Release);
+            // Wake idle workers with no-op sentinels so retirees notice the
+            // watermark now instead of after a poll interval.  Survivors
+            // may eat some sentinels — harmless; the poll is the backstop.
+            for _ in keep..inner.workers.len() {
+                self.submit(|_| {});
+            }
+            for h in inner.workers.drain(keep..) {
+                let _ = h.join();
+            }
+            inner.budgets.truncate(to);
+            inner.executors = to;
+        }
+        inner.executors
+    }
+
+    /// Current executor-container count.
+    pub fn executors(&self) -> usize {
+        self.inner.lock().unwrap().executors
+    }
+
+    /// Live worker-thread count (`executors × cores_per_executor`).
     pub fn total_cores(&self) -> usize {
-        self.config.executors * self.config.cores_per_executor
+        self.shared.target_cores.load(Ordering::Acquire)
     }
 
+    /// The geometry the pool was started with (`executors` is the initial
+    /// count — see [`ExecutorPool::executors`] for the live one).
     pub fn config(&self) -> &ExecutorConfig {
-        &self.config
+        &self.base
     }
 
-    pub fn budget(&self, executor: usize) -> &MemoryBudget {
-        &self.budgets[executor]
+    pub fn budget(&self, executor: usize) -> MemoryBudget {
+        self.inner.lock().unwrap().budgets[executor].clone()
     }
 
     /// Submit a task; runs on any free worker.
@@ -128,8 +235,9 @@ impl ExecutorPool {
 
 impl Drop for ExecutorPool {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        for w in self.workers.drain(..) {
+        drop(self.tx.take()); // disconnects the queue; workers exit
+        let mut inner = self.inner.lock().unwrap();
+        for w in inner.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -208,5 +316,87 @@ mod tests {
         assert!(pool.budget(0).reserve(1).is_err());
         assert!(pool.budget(1).reserve(100).is_ok());
         drop(r);
+    }
+
+    #[test]
+    fn scale_up_adds_live_executors() {
+        let pool = ExecutorPool::start(ExecutorConfig {
+            executors: 1,
+            cores_per_executor: 1,
+            mem_per_executor: 777,
+            ..Default::default()
+        });
+        assert_eq!(pool.scale_to(3), 3);
+        assert_eq!(pool.executors(), 3);
+        assert_eq!(pool.total_cores(), 3);
+        assert_eq!(pool.budget(2).budget(), 777);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..30 {
+            let c = counter.clone();
+            pool.submit(move |ctx| {
+                assert!(ctx.executor_id < 3);
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 30);
+    }
+
+    #[test]
+    fn scale_down_retires_high_executors() {
+        let pool = ExecutorPool::start(ExecutorConfig {
+            executors: 3,
+            cores_per_executor: 1,
+            ..Default::default()
+        });
+        assert_eq!(pool.scale_to(1), 1);
+        assert_eq!(pool.executors(), 1);
+        assert_eq!(pool.total_cores(), 1);
+        // the surviving worker still drains the queue, and only it
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        for _ in 0..10 {
+            let seen = seen.clone();
+            pool.submit(move |ctx| {
+                seen.lock().unwrap().push(ctx.executor_id);
+            });
+        }
+        pool.join();
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), 10);
+        assert!(seen.iter().all(|e| *e == 0), "{seen:?}");
+    }
+
+    #[test]
+    fn scale_is_idempotent_and_clamped() {
+        let pool = ExecutorPool::start(ExecutorConfig {
+            executors: 2,
+            cores_per_executor: 2,
+            ..Default::default()
+        });
+        assert_eq!(pool.scale_to(2), 2);
+        assert_eq!(pool.scale_to(0), 1); // clamped to the warm floor
+        assert_eq!(pool.executors(), 1);
+    }
+
+    #[test]
+    fn regrow_after_shrink_reuses_executor_ids() {
+        let pool = ExecutorPool::start(ExecutorConfig {
+            executors: 2,
+            cores_per_executor: 1,
+            ..Default::default()
+        });
+        pool.scale_to(1);
+        pool.scale_to(4);
+        assert_eq!(pool.executors(), 4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..40 {
+            let c = counter.clone();
+            pool.submit(move |ctx| {
+                assert!(ctx.executor_id < 4);
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 40);
     }
 }

@@ -94,6 +94,24 @@ impl SparkContext {
         self.pool.total_cores()
     }
 
+    /// Live executor-container count (the pool is elastic).
+    pub fn current_executors(&self) -> usize {
+        self.pool.executors()
+    }
+
+    /// Elastically resize the executor pool between jobs — the
+    /// autoscaler's hook.  Subsequent jobs partition against the new
+    /// width.  Returns the pool size after the resize and counts a
+    /// `scale_events` tick when the size actually changed.
+    pub fn scale_to(&self, executors: usize) -> usize {
+        let before = self.pool.executors();
+        let after = self.pool.scale_to(executors);
+        if after != before {
+            self.counters.lock().unwrap().inc("scale_events", 1);
+        }
+        after
+    }
+
     pub fn dfs(&self) -> &DfsClient {
         &self.dfs
     }
@@ -458,6 +476,33 @@ mod tests {
         let want = SerialEngine::unbounded().aggregate(&FedAvg, &updates, &mut bd2).unwrap();
         all_close(&got, &want, 1e-4, 1e-5).unwrap();
         assert!(sc.counters.lock().unwrap().get("tasks_retried") > 0);
+    }
+
+    #[test]
+    fn elastic_rescale_between_jobs_keeps_results_exact() {
+        let (sc, updates, _td) = setup(11, 120);
+        let mut bd = Breakdown::new();
+        let (a, _) = sc
+            .aggregate(&FedAvg, "/rounds/0/updates/", &JobConfig::default(), &mut bd)
+            .unwrap();
+        assert_eq!(sc.scale_to(5), 5); // grow between rounds
+        assert_eq!(sc.current_executors(), 5);
+        let (b, _) = sc
+            .aggregate(&FedAvg, "/rounds/0/updates/", &JobConfig::default(), &mut bd)
+            .unwrap();
+        assert_eq!(sc.scale_to(1), 1); // shrink between rounds
+        let (c, _) = sc
+            .aggregate(&FedAvg, "/rounds/0/updates/", &JobConfig::default(), &mut bd)
+            .unwrap();
+        let mut bd2 = Breakdown::new();
+        let want = SerialEngine::unbounded().aggregate(&FedAvg, &updates, &mut bd2).unwrap();
+        all_close(&a, &want, 1e-4, 1e-5).unwrap();
+        all_close(&b, &want, 1e-4, 1e-5).unwrap();
+        all_close(&c, &want, 1e-4, 1e-5).unwrap();
+        assert_eq!(sc.counters.lock().unwrap().get("scale_events"), 2);
+        // resizing to the current size is a no-op, not a scale event
+        sc.scale_to(1);
+        assert_eq!(sc.counters.lock().unwrap().get("scale_events"), 2);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Metrics: the per-step timing breakdown the paper reports in every
-//! distributed figure (read / partition / sum / reduce / write), plus simple
-//! counters and a stopwatch that can run on real OR virtual time.
+//! distributed figure (read / partition / sum / reduce / write), simple
+//! counters, a stopwatch that can run on real OR virtual time, and the
+//! EWMA the planner's observed/predicted feedback loop smooths with.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -146,6 +147,43 @@ impl Counters {
     }
 }
 
+/// Exponentially-weighted moving average.
+///
+/// Used by `planner` to smooth observed/predicted latency ratios: `beta`
+/// is the weight of the newest observation (0 = frozen, 1 = no memory).
+/// The first observation seeds the average directly.
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    beta: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(beta: f64) -> Ewma {
+        Ewma { beta: beta.clamp(0.0, 1.0), value: None }
+    }
+
+    /// Fold in an observation and return the updated average.
+    pub fn observe(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => v + self.beta * (x - v),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    /// The current average, if any observation arrived yet.
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+
+    /// The current average, or `default` before the first observation.
+    pub fn value_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +235,25 @@ mod tests {
         d.inc("bytes", 1);
         d.merge(&c);
         assert_eq!(d.get("bytes"), 16);
+    }
+
+    #[test]
+    fn ewma_seeds_then_smooths() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.value(), None);
+        assert_eq!(e.value_or(1.0), 1.0);
+        assert_eq!(e.observe(4.0), 4.0); // first observation seeds
+        assert_eq!(e.observe(2.0), 3.0); // 4 + 0.5 × (2 − 4)
+        assert_eq!(e.value_or(1.0), 3.0);
+    }
+
+    #[test]
+    fn ewma_converges_to_constant_input() {
+        let mut e = Ewma::new(0.3);
+        for _ in 0..50 {
+            e.observe(7.0);
+        }
+        assert!((e.value().unwrap() - 7.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! Elastic executor-pool autoscaling with hysteresis.
+//!
+//! The planner emits a *desired* executor count every round; resizing the
+//! real pool on every wish would thrash on alternating small/large traces
+//! (grow, shrink, grow, …), paying the container spin-up cost each flip.
+//! The autoscaler is the damper between wish and action: growing is eager
+//! (an under-provisioned pool slows the very next round) while shrinking
+//! requires the lower target to persist for `shrink_patience` consecutive
+//! rounds, so a warm pool rides out interleaved small rounds.
+
+/// Autoscaler bounds and damping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AutoscalerConfig {
+    /// Never shrink below this many executors (a warm floor keeps the
+    /// distributed path's transition seamless, paper §III-D3).
+    pub min_executors: usize,
+    /// Never grow beyond this many executors.
+    pub max_executors: usize,
+    /// Consecutive rounds a *higher* target must persist before growing.
+    pub grow_patience: usize,
+    /// Consecutive rounds a *lower* target must persist before shrinking.
+    pub shrink_patience: usize,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        AutoscalerConfig {
+            min_executors: 1,
+            max_executors: 16,
+            grow_patience: 1,
+            shrink_patience: 2,
+        }
+    }
+}
+
+/// What the autoscaler wants done to the pool after an observation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Keep the pool at its current size (the carried value).
+    Hold(usize),
+    /// Resize the pool to this many executors.
+    ScaleTo(usize),
+}
+
+impl ScaleDecision {
+    /// The executor count the pool should be at after this decision.
+    pub fn target(&self) -> usize {
+        match self {
+            ScaleDecision::Hold(n) | ScaleDecision::ScaleTo(n) => *n,
+        }
+    }
+}
+
+/// Hysteresis state machine between the planner's wishes and the pool.
+#[derive(Clone, Debug)]
+pub struct Autoscaler {
+    cfg: AutoscalerConfig,
+    current: usize,
+    pending: usize,
+    streak: usize,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscalerConfig, initial: usize) -> Autoscaler {
+        let current = initial.clamp(cfg.min_executors, cfg.max_executors.max(1));
+        Autoscaler { cfg, current, pending: current, streak: 0 }
+    }
+
+    /// The executor count the pool is (believed to be) at.
+    pub fn current(&self) -> usize {
+        self.current
+    }
+
+    pub fn config(&self) -> &AutoscalerConfig {
+        &self.cfg
+    }
+
+    /// Feed one round's desired executor count (0 means "no distributed
+    /// work" and decays toward the warm floor).  Returns what to do.
+    pub fn observe(&mut self, desired: usize) -> ScaleDecision {
+        let desired = desired.clamp(self.cfg.min_executors, self.cfg.max_executors.max(1));
+        if desired == self.current {
+            self.streak = 0;
+            self.pending = desired;
+            return ScaleDecision::Hold(self.current);
+        }
+        if desired == self.pending {
+            self.streak += 1;
+        } else {
+            self.pending = desired;
+            self.streak = 1;
+        }
+        let patience = if desired > self.current {
+            self.cfg.grow_patience
+        } else {
+            self.cfg.shrink_patience
+        };
+        if self.streak >= patience.max(1) {
+            self.current = desired;
+            self.streak = 0;
+            ScaleDecision::ScaleTo(desired)
+        } else {
+            ScaleDecision::Hold(self.current)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scaler(initial: usize) -> Autoscaler {
+        Autoscaler::new(AutoscalerConfig::default(), initial)
+    }
+
+    #[test]
+    fn grows_eagerly() {
+        let mut a = scaler(1);
+        assert_eq!(a.observe(8), ScaleDecision::ScaleTo(8));
+        assert_eq!(a.current(), 8);
+    }
+
+    #[test]
+    fn shrink_requires_persistent_target() {
+        let mut a = scaler(8);
+        assert_eq!(a.observe(2), ScaleDecision::Hold(8)); // streak 1 of 2
+        assert_eq!(a.observe(2), ScaleDecision::ScaleTo(2));
+        assert_eq!(a.current(), 2);
+    }
+
+    #[test]
+    fn no_oscillation_on_alternating_small_large_trace() {
+        // Alternating small (k=1) / large (k=8) rounds: the pool must
+        // grow once and then stay put — the exact thrash the paper's
+        // static re-provisioning would pay for on every flip.
+        let mut a = scaler(2);
+        let mut scale_events = 0;
+        for round in 0..20 {
+            let desired = if round % 2 == 0 { 1 } else { 8 };
+            if let ScaleDecision::ScaleTo(_) = a.observe(desired) {
+                scale_events += 1;
+            }
+        }
+        assert_eq!(scale_events, 1, "pool thrashed");
+        assert_eq!(a.current(), 8);
+    }
+
+    #[test]
+    fn interrupted_shrink_streak_resets() {
+        let mut a = scaler(8);
+        assert_eq!(a.observe(2), ScaleDecision::Hold(8));
+        assert_eq!(a.observe(8), ScaleDecision::Hold(8)); // back to current: reset
+        assert_eq!(a.observe(2), ScaleDecision::Hold(8)); // streak restarts at 1
+        assert_eq!(a.observe(2), ScaleDecision::ScaleTo(2));
+    }
+
+    #[test]
+    fn clamps_to_bounds() {
+        let mut a = Autoscaler::new(
+            AutoscalerConfig { min_executors: 2, max_executors: 6, ..Default::default() },
+            4,
+        );
+        assert_eq!(a.observe(100), ScaleDecision::ScaleTo(6));
+        // desired 0 clamps to the warm floor; needs shrink_patience rounds
+        assert_eq!(a.observe(0), ScaleDecision::Hold(6));
+        assert_eq!(a.observe(0), ScaleDecision::ScaleTo(2));
+    }
+
+    #[test]
+    fn stable_target_holds_forever() {
+        let mut a = scaler(4);
+        for _ in 0..10 {
+            assert_eq!(a.observe(4), ScaleDecision::Hold(4));
+        }
+    }
+}

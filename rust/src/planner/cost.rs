@@ -1,0 +1,91 @@
+//! Plan pricing: the latency/dollar pair every candidate plan is scored on.
+//!
+//! The paper's headline is a *cost/efficiency trade-off* (2×+ cost
+//! reduction at 8× time efficiency), so a plan's quality is a point in a
+//! two-axis space, not a scalar.  [`PlanCost`] is that point;
+//! [`PricingModel`] converts predicted occupancy (node-seconds and
+//! executor-seconds) into dollars with cloud-style per-second rates.
+
+/// Predicted — or, after a round runs, observed — latency and dollar cost
+/// of one candidate plan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanCost {
+    /// End-to-end round latency in seconds (virtual time at plan time).
+    pub latency_s: f64,
+    /// Modeled dollar cost of the resources the plan occupies.
+    pub usd: f64,
+}
+
+impl PlanCost {
+    pub fn new(latency_s: f64, usd: f64) -> PlanCost {
+        PlanCost { latency_s, usd }
+    }
+
+    /// Strict Pareto dominance: better on BOTH axes.
+    pub fn dominates(&self, other: &PlanCost) -> bool {
+        self.latency_s < other.latency_s && self.usd < other.usd
+    }
+}
+
+/// Per-second resource rates used to price plans.
+///
+/// The defaults are representative on-demand cloud rates for the paper's
+/// testbed classes: the aggregator is a 64-core / 170 GB box (~$3.06/h)
+/// and each distributed executor is a 3-core / 30 GB Yarn container
+/// (~$0.20/h).  Override via `ServiceConfig::{node_usd_per_s,
+/// executor_usd_per_s}` to price a different fleet.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PricingModel {
+    /// $/s of the always-on aggregator node (driver + single-node engines).
+    pub node_usd_per_s: f64,
+    /// $/s of one distributed executor container.
+    pub executor_usd_per_s: f64,
+}
+
+impl Default for PricingModel {
+    fn default() -> Self {
+        PricingModel { node_usd_per_s: 8.5e-4, executor_usd_per_s: 5.6e-5 }
+    }
+}
+
+impl PricingModel {
+    /// Dollar cost of occupying only the aggregator node for `latency_s`.
+    pub fn single_node(&self, latency_s: f64) -> f64 {
+        latency_s * self.node_usd_per_s
+    }
+
+    /// Dollar cost of the distributed path: the driver node plus
+    /// `executors` containers, all held for the round's duration.
+    pub fn distributed(&self, latency_s: f64, executors: usize) -> f64 {
+        latency_s * (self.node_usd_per_s + executors as f64 * self.executor_usd_per_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_is_strict_on_both_axes() {
+        let a = PlanCost::new(1.0, 1.0);
+        assert!(PlanCost::new(0.5, 0.5).dominates(&a));
+        assert!(!PlanCost::new(0.5, 1.0).dominates(&a)); // equal cost
+        assert!(!PlanCost::new(0.5, 2.0).dominates(&a)); // worse cost
+        assert!(!a.dominates(&a));
+    }
+
+    #[test]
+    fn distributed_costs_more_per_second_than_single_node() {
+        let p = PricingModel::default();
+        assert!(p.distributed(10.0, 1) > p.single_node(10.0));
+        assert!(p.distributed(10.0, 8) > p.distributed(10.0, 2));
+    }
+
+    #[test]
+    fn default_rates_are_plausible() {
+        let p = PricingModel::default();
+        // node ~$3/h, executor ~$0.2/h
+        assert!((2.0..5.0).contains(&(p.node_usd_per_s * 3600.0)));
+        assert!((0.1..0.5).contains(&(p.executor_usd_per_s * 3600.0)));
+    }
+}

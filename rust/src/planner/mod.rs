@@ -1,0 +1,519 @@
+//! Cost-aware dispatch planning — the generalization of Algorithm 1.
+//!
+//! The seed of this repo dispatched each round with the paper's binary
+//! test (`S < M` → single node, else distributed).  The planner keeps that
+//! test as its *feasibility oracle* ([`WorkloadClassifier`]) but replaces
+//! the either/or decision with explicit plan enumeration and pricing:
+//!
+//! 1. **Enumerate** every way the round could run: the serial, parallel
+//!    and XLA single-node engines (when the round fits node memory), plus
+//!    the distributed MapReduce path at every executor count
+//!    k ∈ {1..max_executors};
+//! 2. **Price** each candidate with the calibrated [`CostModel`] constants
+//!    (per-byte fuse throughput, DFS bandwidth, task overhead, container
+//!    spin-up) and a [`PricingModel`] of $/node-second rates, yielding a
+//!    [`PlanCost`] (latency, dollars) point per candidate;
+//! 3. **Select** under the user's [`DispatchPolicy`] — `MinLatency`,
+//!    `MinCost`, or the `Balanced(α)` Pareto knob;
+//! 4. **Learn**: after the round runs, the observed wall-clock from the
+//!    [`Breakdown`](crate::metrics::Breakdown) flows back in via
+//!    [`DispatchPlanner::observe`], updating per-path EWMA correction
+//!    factors so predictions track the box the service actually runs on.
+//!    Every round's predicted-vs-observed pair is kept in a calibration
+//!    ledger so drift is visible (`benches/fig_adaptive_policy` prints it).
+//!
+//! The [`Autoscaler`] sits between the planner's per-round wishes and the
+//! real executor pool, damping resize thrash with hysteresis.
+
+pub mod autoscaler;
+pub mod cost;
+pub mod policy;
+
+pub use autoscaler::{Autoscaler, AutoscalerConfig, ScaleDecision};
+pub use cost::{PlanCost, PricingModel};
+pub use policy::DispatchPolicy;
+
+use crate::cluster::{CostModel, EngineKind, VirtualCluster};
+use crate::coordinator::{WorkloadClass, WorkloadClassifier};
+use crate::fusion::FusionAlgorithm;
+use crate::metrics::Ewma;
+
+/// Which execution substrate a candidate plan uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanKind {
+    /// Single-node serial engine (the NumPy-baseline analog).
+    Serial,
+    /// Single-node multi-core engine (the Numba analog).
+    Parallel,
+    /// Single-node AOT Pallas/XLA hot path.
+    Xla,
+    /// MapReduce over the DFS with this many executor containers.
+    Distributed { executors: usize },
+}
+
+impl PlanKind {
+    /// The engine name `ServiceReport.engine` uses for this plan.
+    pub fn engine_label(&self) -> &'static str {
+        match self {
+            PlanKind::Serial => "serial",
+            PlanKind::Parallel => "parallel",
+            PlanKind::Xla => "xla",
+            PlanKind::Distributed { .. } => "mapreduce",
+        }
+    }
+
+    /// Executor containers this plan occupies (0 for single-node plans).
+    pub fn executors(&self) -> usize {
+        match self {
+            PlanKind::Distributed { executors } => *executors,
+            _ => 0,
+        }
+    }
+
+    pub fn is_distributed(&self) -> bool {
+        matches!(self, PlanKind::Distributed { .. })
+    }
+}
+
+/// One priced way to run a round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CandidatePlan {
+    pub kind: PlanKind,
+    pub cost: PlanCost,
+}
+
+/// The planner's output for one round: the selected plan plus the full
+/// priced candidate set (benches print it; tests assert over it).
+#[derive(Clone, Debug)]
+pub struct RoundPlan {
+    /// Algorithm 1's feasibility class for this round.
+    pub class: WorkloadClass,
+    pub chosen: CandidatePlan,
+    pub candidates: Vec<CandidatePlan>,
+}
+
+/// One row of the calibration ledger: what the model predicted for the
+/// chosen plan vs. what actually happened.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundCalibration {
+    pub round: u32,
+    pub kind: PlanKind,
+    pub predicted_s: f64,
+    pub observed_s: f64,
+    pub predicted_usd: f64,
+    pub observed_usd: f64,
+}
+
+impl RoundCalibration {
+    /// Observed/predicted latency ratio (1.0 = perfectly calibrated).
+    pub fn drift(&self) -> f64 {
+        self.observed_s / self.predicted_s.max(1e-12)
+    }
+
+    /// The per-round log line the benches and driver print.
+    pub fn log_line(&self) -> String {
+        let plan = match self.kind {
+            PlanKind::Distributed { executors } => format!("mapreduce(k={executors})"),
+            k => k.engine_label().to_string(),
+        };
+        format!(
+            "plan={plan} predicted {:.4}s/${:.6} observed {:.4}s/${:.6} drift x{:.2}",
+            self.predicted_s, self.predicted_usd, self.observed_s, self.observed_usd,
+            self.drift()
+        )
+    }
+}
+
+/// Planner knobs beyond the cluster geometry.
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    pub policy: DispatchPolicy,
+    /// Largest executor pool the distributed path may be planned at.
+    pub max_executors: usize,
+    /// Cores per executor container (paper: 3).
+    pub cores_per_executor: usize,
+    /// Cores of the aggregator node's single-node engines.
+    pub node_cores: usize,
+    /// Whether the XLA engine is loaded (candidates are only enumerated
+    /// for substrates that can actually run).
+    pub xla_available: bool,
+    /// EWMA weight of the newest observed/predicted ratio (0..1).
+    pub feedback_beta: f64,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            policy: DispatchPolicy::Balanced(0.5),
+            max_executors: 8,
+            cores_per_executor: 3,
+            node_cores: 4,
+            xla_available: false,
+            feedback_beta: 0.3,
+        }
+    }
+}
+
+/// The cost-aware dispatch planner.
+pub struct DispatchPlanner {
+    classifier: WorkloadClassifier,
+    cluster: VirtualCluster,
+    pricing: PricingModel,
+    cfg: PlannerConfig,
+    /// Observed/predicted latency correction for single-node plans.
+    corr_single: Ewma,
+    /// Observed/predicted latency correction for distributed plans.
+    corr_dist: Ewma,
+    ledger: Vec<RoundCalibration>,
+}
+
+impl DispatchPlanner {
+    pub fn new(
+        classifier: WorkloadClassifier,
+        cluster: VirtualCluster,
+        pricing: PricingModel,
+        cfg: PlannerConfig,
+    ) -> DispatchPlanner {
+        let beta = cfg.feedback_beta.clamp(0.0, 1.0);
+        DispatchPlanner {
+            classifier,
+            cluster,
+            pricing,
+            cfg,
+            corr_single: Ewma::new(beta),
+            corr_dist: Ewma::new(beta),
+            ledger: Vec::new(),
+        }
+    }
+
+    pub fn policy(&self) -> DispatchPolicy {
+        self.cfg.policy
+    }
+
+    pub fn set_policy(&mut self, policy: DispatchPolicy) {
+        self.cfg.policy = policy;
+    }
+
+    pub fn pricing(&self) -> &PricingModel {
+        &self.pricing
+    }
+
+    /// Swap in freshly calibrated cost-model constants (e.g. from
+    /// [`CostModel::calibrate`]); learned corrections are kept.
+    pub fn set_cost_model(&mut self, cost: CostModel) {
+        self.cluster.cost = cost;
+    }
+
+    /// The learned observed/predicted correction for a path family.
+    pub fn correction(&self, distributed: bool) -> f64 {
+        if distributed {
+            self.corr_dist.value_or(1.0)
+        } else {
+            self.corr_single.value_or(1.0)
+        }
+    }
+
+    /// Full predicted-vs-observed history, oldest first.
+    pub fn ledger(&self) -> &[RoundCalibration] {
+        &self.ledger
+    }
+
+    /// Enumerate and price every candidate plan for a round of `parties`
+    /// updates of `update_bytes`, then select under the policy.
+    ///
+    /// `current_executors` is the warm pool size: distributed candidates
+    /// only pay container spin-up for executors *beyond* it, which is what
+    /// makes an elastically held pool cheaper than static re-provisioning.
+    pub fn plan(
+        &self,
+        update_bytes: u64,
+        parties: usize,
+        algo: &dyn FusionAlgorithm,
+        current_executors: usize,
+    ) -> RoundPlan {
+        let class = self.classifier.classify(update_bytes, parties, algo);
+        let total_bytes = update_bytes as f64 * parties as f64;
+        let mut candidates = Vec::new();
+
+        if class == WorkloadClass::Small {
+            let corr = self.corr_single.value_or(1.0);
+            let node_cores = self.cfg.node_cores.max(1);
+            let serial = corr
+                * self.cluster.single_node_time(
+                    update_bytes,
+                    parties,
+                    node_cores,
+                    EngineKind::Serial,
+                    1.0,
+                );
+            candidates.push(CandidatePlan {
+                kind: PlanKind::Serial,
+                cost: PlanCost::new(serial, self.pricing.single_node(serial)),
+            });
+            let parallel = corr
+                * self.cluster.single_node_time(
+                    update_bytes,
+                    parties,
+                    node_cores,
+                    EngineKind::Parallel,
+                    1.0,
+                );
+            candidates.push(CandidatePlan {
+                kind: PlanKind::Parallel,
+                cost: PlanCost::new(parallel, self.pricing.single_node(parallel)),
+            });
+            if self.cfg.xla_available && algo.decomposable() {
+                // The AOT path streams at the socket's bandwidth ceiling
+                // with one dispatch instead of per-core thread launches.
+                let cost = &self.cluster.cost;
+                let xla = corr * (total_bytes / cost.xla_bps() + cost.xla_launch_s);
+                candidates.push(CandidatePlan {
+                    kind: PlanKind::Xla,
+                    cost: PlanCost::new(xla, self.pricing.single_node(xla)),
+                });
+            }
+        }
+
+        // The distributed path is always available (it is the only path
+        // for Large rounds); enumerate it at every candidate pool size.
+        //
+        // Latency: the store upload IS on the critical path — Algorithm
+        // 1's monitor gates the job on the uploads completing (the Fig
+        // 12/13 "average write time"), unlike the small path whose ingest
+        // overlaps collection.  Cost: executors are only charged for job
+        // occupancy (spin-up + read/sum/reduce); during the upload phase
+        // only the aggregator node is held.
+        let cache = update_bytes < (64 << 20); // the paper's small-model rule
+        let corr = self.corr_dist.value_or(1.0);
+        let write = if parties == 0 {
+            0.0
+        } else {
+            self.cluster.client_write_time(update_bytes, parties)
+        };
+        for k in 1..=self.cfg.max_executors.max(1) {
+            let cores = k * self.cfg.cores_per_executor.max(1);
+            let bd = self
+                .cluster
+                .distributed_breakdown_for_cores(update_bytes, parties, cache, cores);
+            let startup = self
+                .cluster
+                .executor_startup(k.saturating_sub(current_executors));
+            let occupancy = startup + corr * bd.total();
+            let usd = self.pricing.single_node(write) + self.pricing.distributed(occupancy, k);
+            candidates.push(CandidatePlan {
+                kind: PlanKind::Distributed { executors: k },
+                cost: PlanCost::new(write + occupancy, usd),
+            });
+        }
+
+        let chosen = *self
+            .cfg
+            .policy
+            .select(&candidates)
+            .expect("candidate set is never empty");
+        RoundPlan { class, chosen, candidates }
+    }
+
+    /// Feed one executed round back into the model: the observed/predicted
+    /// latency ratio updates the chosen path family's EWMA correction, and
+    /// the pair is appended to the calibration ledger.
+    pub fn observe(
+        &mut self,
+        round: u32,
+        chosen: &CandidatePlan,
+        observed_s: f64,
+    ) -> RoundCalibration {
+        self.observe_split(round, chosen, observed_s, 0.0)
+    }
+
+    /// Like [`DispatchPlanner::observe`], with the store-upload portion of
+    /// `observed_s` split out so observed cost mirrors plan pricing
+    /// (upload holds only the node; executors are charged for the rest).
+    /// Pass `upload_s = 0` when the split is unknown.
+    pub fn observe_split(
+        &mut self,
+        round: u32,
+        chosen: &CandidatePlan,
+        observed_s: f64,
+        upload_s: f64,
+    ) -> RoundCalibration {
+        let ratio = (observed_s / chosen.cost.latency_s.max(1e-12)).clamp(0.05, 20.0);
+        // The prediction was already scaled by the current correction, so
+        // feeding the raw ratio back would converge to the *square root*
+        // of the true miscalibration.  Updating toward corr × ratio makes
+        // the fixed point exactly "predicted == observed".
+        let corr = if chosen.kind.is_distributed() {
+            &mut self.corr_dist
+        } else {
+            &mut self.corr_single
+        };
+        let target = (corr.value_or(1.0) * ratio).clamp(0.05, 20.0);
+        corr.observe(target);
+        let upload_s = upload_s.clamp(0.0, observed_s);
+        let observed_usd = match chosen.kind {
+            PlanKind::Distributed { executors } => {
+                self.pricing.single_node(upload_s)
+                    + self.pricing.distributed(observed_s - upload_s, executors)
+            }
+            _ => self.pricing.single_node(observed_s),
+        };
+        let cal = RoundCalibration {
+            round,
+            kind: chosen.kind,
+            predicted_s: chosen.cost.latency_s,
+            observed_s,
+            predicted_usd: chosen.cost.usd,
+            observed_usd,
+        };
+        self.ledger.push(cal);
+        cal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::FedAvg;
+
+    const UPDATE_46MB: u64 = (4.6 * 1024.0 * 1024.0) as u64;
+
+    fn planner(policy: DispatchPolicy) -> DispatchPlanner {
+        DispatchPlanner::new(
+            WorkloadClassifier::new(170 << 30, 1.1),
+            VirtualCluster::paper(CostModel::nominal()),
+            PricingModel::default(),
+            PlannerConfig {
+                policy,
+                max_executors: 10,
+                cores_per_executor: 3,
+                node_cores: 64,
+                xla_available: false,
+                feedback_beta: 0.3,
+            },
+        )
+    }
+
+    #[test]
+    fn small_round_prefers_single_node() {
+        let p = planner(DispatchPolicy::MinLatency);
+        let plan = p.plan(UPDATE_46MB, 1000, &FedAvg, 0);
+        assert_eq!(plan.class, WorkloadClass::Small);
+        assert!(!plan.chosen.kind.is_distributed(), "{:?}", plan.chosen);
+        // and it beats every distributed candidate on both axes
+        for c in plan.candidates.iter().filter(|c| c.kind.is_distributed()) {
+            assert!(plan.chosen.cost.dominates(&c.cost), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn large_round_has_only_distributed_candidates() {
+        let p = planner(DispatchPolicy::MinLatency);
+        // 30 000 × 4.6 MB × dup 2.0 × headroom 1.1 ≈ 303 GB > 170 GB
+        let plan = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        assert_eq!(plan.class, WorkloadClass::Large);
+        assert!(plan.candidates.iter().all(|c| c.kind.is_distributed()));
+        assert!(plan.chosen.kind.is_distributed());
+    }
+
+    #[test]
+    fn exact_s_equals_m_boundary_goes_distributed() {
+        // Algorithm 1's test is strict: S < M.  At S == M exactly the
+        // single-node plans must NOT be enumerated.
+        let p = DispatchPlanner::new(
+            WorkloadClassifier::new(1000, 1.0),
+            VirtualCluster::paper(CostModel::nominal()),
+            PricingModel::default(),
+            PlannerConfig::default(),
+        );
+        // 2 × 250 B × dup 2.0 (FedAvg) × headroom 1.0 = 1000 = M
+        let plan = p.plan(250, 2, &FedAvg, 0);
+        assert_eq!(plan.class, WorkloadClass::Large);
+        assert!(plan.candidates.iter().all(|c| c.kind.is_distributed()));
+    }
+
+    #[test]
+    fn raising_alpha_never_picks_a_slower_plan() {
+        // Policy monotonicity over REAL candidate sets (not synthetic):
+        // a large round (distributed-only, k sweeps the latency/cost
+        // frontier) and a small round (mixed single-node + distributed).
+        for (bytes, parties) in [(UPDATE_46MB, 30_000usize), (UPDATE_46MB, 1_000)] {
+            let mut last = f64::INFINITY;
+            for alpha in [0.0, 0.2, 0.4, 0.5, 0.6, 0.8, 1.0] {
+                let p = planner(DispatchPolicy::Balanced(alpha));
+                let plan = p.plan(bytes, parties, &FedAvg, 0);
+                assert!(
+                    plan.chosen.cost.latency_s <= last + 1e-9,
+                    "alpha {alpha} on ({bytes}, {parties}): {} > {last}",
+                    plan.chosen.cost.latency_s
+                );
+                last = plan.chosen.cost.latency_s;
+            }
+        }
+    }
+
+    #[test]
+    fn min_cost_is_cheapest_min_latency_is_fastest() {
+        let fast = planner(DispatchPolicy::MinLatency).plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        let cheap = planner(DispatchPolicy::MinCost).plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        assert!(fast.chosen.cost.latency_s <= cheap.chosen.cost.latency_s);
+        assert!(cheap.chosen.cost.usd <= fast.chosen.cost.usd);
+    }
+
+    #[test]
+    fn warm_pool_amortizes_startup() {
+        let p = planner(DispatchPolicy::MinLatency);
+        let cold = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        let warm = p.plan(UPDATE_46MB, 30_000, &FedAvg, 10);
+        let k = PlanKind::Distributed { executors: 10 };
+        let cold_k = cold.candidates.iter().find(|c| c.kind == k).unwrap();
+        let warm_k = warm.candidates.iter().find(|c| c.kind == k).unwrap();
+        assert!(warm_k.cost.latency_s < cold_k.cost.latency_s);
+        // the gap is exactly the spin-up of 10 containers
+        let gap = cold_k.cost.latency_s - warm_k.cost.latency_s;
+        let spin = CostModel::nominal().executor_startup_s * 10.0;
+        assert!((gap - spin).abs() < 1e-6, "{gap} vs {spin}");
+    }
+
+    #[test]
+    fn feedback_converges_predictions_to_observations() {
+        let mut p = planner(DispatchPolicy::MinLatency);
+        let before = p.plan(UPDATE_46MB, 1000, &FedAvg, 0);
+        // the box is a fixed 3× slower than the uncorrected model
+        let truth = before.chosen.cost.latency_s * 3.0;
+        let mut last_drift = f64::INFINITY;
+        for round in 0..12 {
+            let plan = p.plan(UPDATE_46MB, 1000, &FedAvg, 0);
+            let cal = p.observe(round, &plan.chosen, truth);
+            last_drift = cal.drift();
+        }
+        // the correction must reach the TRUE miscalibration (3×), not its
+        // square root — i.e. late-round predictions match observations
+        assert!((p.correction(false) - 3.0).abs() < 0.2, "{}", p.correction(false));
+        assert!((last_drift - 1.0).abs() < 0.1, "drift {last_drift}");
+        let after = p.plan(UPDATE_46MB, 1000, &FedAvg, 0);
+        assert!(after.chosen.cost.latency_s > before.chosen.cost.latency_s);
+        // the distributed family is calibrated independently
+        assert_eq!(p.correction(true), 1.0);
+    }
+
+    #[test]
+    fn ledger_records_predicted_vs_observed() {
+        let mut p = planner(DispatchPolicy::Balanced(0.5));
+        let plan = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        let cal = p.observe(7, &plan.chosen, plan.chosen.cost.latency_s * 1.25);
+        assert_eq!(p.ledger().len(), 1);
+        assert_eq!(cal.round, 7);
+        assert!((cal.drift() - 1.25).abs() < 1e-9);
+        assert!(cal.observed_usd > 0.0 && cal.predicted_usd > 0.0);
+        assert!(cal.log_line().contains("predicted"));
+    }
+
+    #[test]
+    fn zero_parties_plans_trivially_small() {
+        let p = planner(DispatchPolicy::MinLatency);
+        let plan = p.plan(UPDATE_46MB, 0, &FedAvg, 0);
+        assert_eq!(plan.class, WorkloadClass::Small);
+        assert!(!plan.chosen.kind.is_distributed());
+        assert!(plan.chosen.cost.latency_s < 1e-6);
+    }
+}

@@ -1,0 +1,155 @@
+//! Dispatch policies: how a round's candidate plans are ranked.
+//!
+//! All three policies are linear scalarizations of the normalized
+//! (latency, cost) axes with a weight `α` ∈ [0, 1]: `MinCost` is α = 0,
+//! `MinLatency` is α = 1, and `Balanced(α)` exposes the knob directly.
+//! Linear scalarization gives the monotonicity the tests pin down —
+//! raising α can never select a *slower* plan from the same candidate set
+//! (sum the two optimality inequalities and the cross terms cancel).
+
+use super::CandidatePlan;
+
+/// User-facing cost/latency trade-off knob (the paper's §III "users can
+/// manage the trade-off between cost and efficiency").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DispatchPolicy {
+    /// Fastest plan regardless of resource cost.
+    MinLatency,
+    /// Cheapest plan regardless of wall-clock.
+    MinCost,
+    /// Pareto knob: α = 0 behaves like `MinCost`, α = 1 like `MinLatency`.
+    Balanced(f64),
+}
+
+impl DispatchPolicy {
+    /// The latency weight this policy scores with.
+    pub fn alpha(&self) -> f64 {
+        match self {
+            DispatchPolicy::MinLatency => 1.0,
+            DispatchPolicy::MinCost => 0.0,
+            DispatchPolicy::Balanced(a) => a.clamp(0.0, 1.0),
+        }
+    }
+
+    /// Parse the config/CLI spelling: `min_latency`, `min_cost`,
+    /// `balanced` (α = 0.5) or `balanced:<alpha>`.
+    pub fn parse(s: &str) -> Option<DispatchPolicy> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "min_latency" | "minlatency" | "latency" => Some(DispatchPolicy::MinLatency),
+            "min_cost" | "mincost" | "cost" => Some(DispatchPolicy::MinCost),
+            "balanced" => Some(DispatchPolicy::Balanced(0.5)),
+            _ => {
+                let alpha = s
+                    .strip_prefix("balanced:")?
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|a| a.is_finite())?;
+                Some(DispatchPolicy::Balanced(alpha.clamp(0.0, 1.0)))
+            }
+        }
+    }
+
+    /// Pick the best candidate under this policy.  Both axes are
+    /// normalized by the candidate-set minima so the score is scale-free;
+    /// ties break toward lower latency, then lower cost, so selection is
+    /// deterministic.  Returns `None` only for an empty candidate set.
+    pub fn select<'a>(&self, candidates: &'a [CandidatePlan]) -> Option<&'a CandidatePlan> {
+        if candidates.is_empty() {
+            return None;
+        }
+        let a = self.alpha();
+        let lmin = candidates
+            .iter()
+            .map(|c| c.cost.latency_s)
+            .fold(f64::INFINITY, f64::min)
+            .max(1e-12);
+        let cmin = candidates
+            .iter()
+            .map(|c| c.cost.usd)
+            .fold(f64::INFINITY, f64::min)
+            .max(1e-12);
+        let score =
+            |p: &CandidatePlan| a * p.cost.latency_s / lmin + (1.0 - a) * p.cost.usd / cmin;
+        candidates.iter().min_by(|x, y| {
+            (score(x), x.cost.latency_s, x.cost.usd)
+                .partial_cmp(&(score(y), y.cost.latency_s, y.cost.usd))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+    }
+}
+
+impl std::fmt::Display for DispatchPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DispatchPolicy::MinLatency => write!(f, "min_latency"),
+            DispatchPolicy::MinCost => write!(f, "min_cost"),
+            DispatchPolicy::Balanced(a) => write!(f, "balanced:{a}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{PlanCost, PlanKind};
+    use super::*;
+
+    fn cand(kind: PlanKind, lat: f64, usd: f64) -> CandidatePlan {
+        CandidatePlan { kind, cost: PlanCost::new(lat, usd) }
+    }
+
+    fn set() -> Vec<CandidatePlan> {
+        vec![
+            cand(PlanKind::Serial, 10.0, 0.010),
+            cand(PlanKind::Parallel, 6.0, 0.006),
+            cand(PlanKind::Distributed { executors: 2 }, 4.0, 0.012),
+            cand(PlanKind::Distributed { executors: 8 }, 2.0, 0.030),
+        ]
+    }
+
+    #[test]
+    fn extremes_pick_extremes() {
+        let c = set();
+        let fast = DispatchPolicy::MinLatency.select(&c).unwrap();
+        assert_eq!(fast.kind, PlanKind::Distributed { executors: 8 });
+        let cheap = DispatchPolicy::MinCost.select(&c).unwrap();
+        assert_eq!(cheap.kind, PlanKind::Parallel);
+    }
+
+    #[test]
+    fn raising_alpha_never_picks_a_slower_plan() {
+        let c = set();
+        let mut last = f64::INFINITY;
+        for alpha in [0.0, 0.1, 0.25, 0.4, 0.5, 0.6, 0.75, 0.9, 1.0] {
+            let chosen = DispatchPolicy::Balanced(alpha).select(&c).unwrap();
+            assert!(
+                chosen.cost.latency_s <= last,
+                "alpha {alpha}: latency {} > previous {last}",
+                chosen.cost.latency_s
+            );
+            last = chosen.cost.latency_s;
+        }
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for p in [
+            DispatchPolicy::MinLatency,
+            DispatchPolicy::MinCost,
+            DispatchPolicy::Balanced(0.25),
+        ] {
+            assert_eq!(DispatchPolicy::parse(&p.to_string()), Some(p));
+        }
+        assert_eq!(DispatchPolicy::parse("balanced"), Some(DispatchPolicy::Balanced(0.5)));
+        assert_eq!(DispatchPolicy::parse("nonsense"), None);
+        // out-of-range alphas clamp; non-finite alphas are rejected
+        assert_eq!(DispatchPolicy::parse("balanced:7"), Some(DispatchPolicy::Balanced(1.0)));
+        assert_eq!(DispatchPolicy::parse("balanced:nan"), None);
+        assert_eq!(DispatchPolicy::parse("balanced:inf"), None);
+    }
+
+    #[test]
+    fn empty_set_selects_none() {
+        assert!(DispatchPolicy::MinCost.select(&[]).is_none());
+    }
+}
