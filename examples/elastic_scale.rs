@@ -56,6 +56,17 @@ fn main() {
                 let (_, report) = service.aggregate_small(&FedAvg, &updates, round).unwrap();
                 report
             }
+            // this demo dispatches on the binary Algorithm-1 oracle, so
+            // the streaming class never fires here; see `quickstart` for
+            // the streaming round and DESIGN.md for when the planner
+            // prefers it over MapReduce
+            WorkloadClass::Streaming => {
+                let updates: Vec<_> = (0..parties as u64)
+                    .map(|p| SyntheticParty::new(p, round as u64).make_update(round, update_len))
+                    .collect();
+                let (_, report) = service.aggregate_streaming(&FedAvg, &updates, round).unwrap();
+                report
+            }
             WorkloadClass::Large => {
                 if !transitioned {
                     println!(">>> TRANSITION: load exceeds node memory — spinning up the");

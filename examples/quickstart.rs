@@ -1,5 +1,6 @@
-//! Quickstart: stand up the adaptive aggregation service, feed it one
-//! small round and one large round, and watch it pick the right path.
+//! Quickstart: stand up the adaptive aggregation service, feed it a small
+//! round, a past-the-ceiling streaming round, and a holistic round that
+//! must go distributed — and watch it pick the right path each time.
 //!
 //! Run: `cargo run --release --offline --example quickstart`
 
@@ -58,6 +59,14 @@ fn main() {
             });
         }
     });
+    // The fleet grows to 64 BEFORE round 0 finishes, so round 1 opens
+    // against the full registry (§III-D3 preemptive classification).
+    {
+        let mut c = NetClient::connect(&addr).unwrap();
+        for p in 8..64u64 {
+            c.call(&Message::Register { party: p }).unwrap();
+        }
+    }
     let (fused, report) = server.run_round(8, Duration::from_secs(5)).unwrap();
     assert_eq!(report.class, WorkloadClass::Small);
     println!(
@@ -69,26 +78,51 @@ fn main() {
         report.breakdown.summary()
     );
 
-    // --- 3. the fleet grows to 64 parties -------------------------------
-    // Register them BEFORE the next round opens: the coordinator predicts
-    // the incoming load from the live registry (§III-D3) and classifies
-    // round 1 as Large — 64 × 40 KB × dup 2.0 exceeds the 1 MiB node.
-    {
-        let mut c = NetClient::connect(&addr).unwrap();
-        for p in 8..64u64 {
-            c.call(&Message::Register { party: p }).unwrap();
+    // --- 3. 64 parties: STREAM past the buffered ceiling ----------------
+    // 64 × 40 KB × dup 2.0 exceeds the 1 MiB node, but FedAvg is an
+    // associative fold — so instead of redirecting everyone to the store,
+    // round 1 classifies Streaming: every TCP upload folds into one O(C)
+    // accumulator on receipt and its buffer is freed.  Spark never starts.
+    std::thread::scope(|s| {
+        for p in 0..64u64 {
+            let addr = addr.clone();
+            s.spawn(move || {
+                let mut c = NetClient::connect(&addr).unwrap();
+                let mut party = SyntheticParty::new(p, 0xB0B);
+                let u = party.make_update(1, update_len);
+                c.call(&Message::Upload(u)).unwrap();
+            });
         }
-    }
+    });
+    let (fused, report) = server.run_round(64, Duration::from_secs(10)).unwrap();
+    assert_eq!(report.class, WorkloadClass::Streaming);
+    assert!(!server.service.spark_started());
+    println!(
+        "round 1: class={:?} engine={} parties={} fused[0..4]={:?}  [{}]",
+        report.class,
+        report.engine,
+        report.parties,
+        &fused[..4],
+        report.breakdown.summary()
+    );
+
+    // --- 4. a holistic fusion cannot stream: store + MapReduce ----------
+    // Coordinate-wise median needs the full update set, so the same fleet
+    // takes the distributed path: updates land in the store, the monitor
+    // gates the job, Sparklet fuses with per-executor combiners.
     let mut bd = Breakdown::new();
     for p in 0..64u64 {
-        let mut party = SyntheticParty::new(p, 0xB0B);
-        let u = party.make_update(1, update_len);
+        let mut party = SyntheticParty::new(p, 0xC0DE);
+        let u = party.make_update(2, update_len);
         party.ship(&u, &Transport::Dfs, Some(&dfs), &mut bd).unwrap();
     }
-    let (fused, report) = server.run_round(64, Duration::from_secs(10)).unwrap();
-    assert_eq!(report.class, WorkloadClass::Large);
+    let (fused, report) = server
+        .service
+        .aggregate_large(&elastiagg::fusion::CoordMedian, 2, 64, update_bytes)
+        .unwrap();
+    assert_eq!(report.engine, "mapreduce");
     println!(
-        "round 1: class={:?} engine={} parties={} partitions={} fused[0..4]={:?}  [{}]",
+        "round 2: class={:?} engine={} parties={} partitions={} fused[0..4]={:?}  [{}]",
         report.class,
         report.engine,
         report.parties,

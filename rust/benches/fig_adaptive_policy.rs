@@ -211,17 +211,20 @@ fn main() {
 
     let update_len = 50_000usize; // 200 KB updates
     let mut rng = Rng::new(41);
-    let mut small_single = 0usize;
-    let mut large_mapreduce = 0usize;
-    for round in 0..8u32 {
-        let parties = if round % 2 == 0 { 4 } else { 24 };
-        let updates: Vec<ModelUpdate> = (0..parties as u64)
+    let mut gen = |parties: usize, round: u32| -> Vec<ModelUpdate> {
+        (0..parties as u64)
             .map(|p| {
                 let mut d = vec![0f32; update_len];
                 rng.fill_gaussian_f32(&mut d, 0.5);
                 ModelUpdate::new(p, 1.0 + p as f32, round, d)
             })
-            .collect();
+            .collect()
+    };
+    let mut small_single = 0usize;
+    let mut spill_streaming = 0usize;
+    for round in 0..8u32 {
+        let parties = if round % 2 == 0 { 4 } else { 24 };
+        let updates = gen(parties, round);
         let (_, report) = service.aggregate_planned(&FedAvg, &updates, round).unwrap();
         let cal = *service.calibration_ledger().last().unwrap();
         println!(
@@ -233,12 +236,38 @@ fn main() {
         );
         match report.class {
             WorkloadClass::Small if report.engine != "mapreduce" => small_single += 1,
-            WorkloadClass::Large if report.engine == "mapreduce" => large_mapreduce += 1,
+            WorkloadClass::Streaming if report.engine == "streaming" => spill_streaming += 1,
             _ => {}
         }
     }
-    assert_eq!(large_mapreduce, 4, "every 24-party round must spill to MapReduce");
+    assert_eq!(
+        spill_streaming, 4,
+        "every 24-party FedAvg round must stream past the buffered ceiling"
+    );
     assert_eq!(small_single, 4, "every 4-party round must stay on the node");
+    assert!(!service.spark_started(), "streaming spills must not start Spark");
+
+    // Holistic fusion cannot stream: the same spilling rounds DO go
+    // through the store + MapReduce (and spin the executor pool up).
+    let mut large_mapreduce = 0usize;
+    for round in 8..10u32 {
+        let updates = gen(24, round);
+        let (_, report) = service
+            .aggregate_planned(&elastiagg::fusion::CoordMedian, &updates, round)
+            .unwrap();
+        let cal = *service.calibration_ledger().last().unwrap();
+        println!(
+            "  round {round}: 24 parties (median) -> {:?}({}, k={})  {}",
+            report.class,
+            report.engine,
+            report.executors,
+            cal.log_line()
+        );
+        if report.engine == "mapreduce" {
+            large_mapreduce += 1;
+        }
+    }
+    assert_eq!(large_mapreduce, 2, "holistic spills must go to MapReduce");
     let scale_events = service.spark().counters.lock().unwrap().get("scale_events");
     println!(
         "\npool scale events across the alternating trace: {scale_events} (hysteresis holds)"

@@ -1,0 +1,160 @@
+//! Fig S (beyond the paper's numbered figures) — buffered vs streaming
+//! ingest: peak resident bytes and round latency across party counts.
+//!
+//! The paper's Fig 1 party ceiling is the buffered path's O(K·C) resident
+//! set.  The streaming fold runs the same round in O(C): one running
+//! accumulator plus one in-flight update, independent of K.  This bench
+//! measures both shapes with the real budgeted `RoundState` — peak bytes
+//! from the memory accountant's high-water mark, latency as ingest+fold
+//! through publish — and then demonstrates the ceiling lift: a party count
+//! that OOMs buffered ingest under a small budget completes streaming.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use elastiagg::coordinator::{RoundError, RoundState, WorkloadClass};
+use elastiagg::engine::{AggregationEngine, SerialEngine};
+use elastiagg::fusion::FedAvg;
+use elastiagg::memsim::MemoryBudget;
+use elastiagg::metrics::Breakdown;
+use elastiagg::tensorstore::ModelUpdate;
+use elastiagg::util::fmt;
+use elastiagg::util::rng::Rng;
+
+const UPDATE_LEN: usize = 25_000; // 100 KB updates
+const UPDATE_BYTES: u64 = (UPDATE_LEN * 4) as u64;
+
+fn gen_update(p: u64, rng: &mut Rng) -> ModelUpdate {
+    let mut d = vec![0f32; UPDATE_LEN];
+    rng.fill_gaussian_f32(&mut d, 1.0);
+    ModelUpdate::new(p, 1.0 + rng.gen_range(32) as f32, 0, d)
+}
+
+/// Buffered round: ingest all, then batch-aggregate.  Returns
+/// (peak resident bytes, wall seconds).
+fn run_buffered(updates: &[ModelUpdate]) -> (u64, f64) {
+    let budget = MemoryBudget::unbounded();
+    let st = RoundState::new(0, WorkloadClass::Small, budget.clone());
+    let t0 = Instant::now();
+    for u in updates {
+        st.ingest(u.clone()).unwrap();
+    }
+    let collected = st.begin_aggregation().unwrap();
+    let mut bd = Breakdown::new();
+    let fused = SerialEngine::unbounded().aggregate(&FedAvg, &collected, &mut bd).unwrap();
+    st.publish(fused).unwrap();
+    (budget.high_water(), t0.elapsed().as_secs_f64())
+}
+
+/// Streaming round: every ingest folds immediately; finish is the drain.
+fn run_streaming(updates: &[ModelUpdate]) -> (u64, f64) {
+    let budget = MemoryBudget::unbounded();
+    let st = RoundState::new_streaming(
+        0,
+        WorkloadClass::Streaming,
+        budget.clone(),
+        Arc::new(FedAvg),
+        4,
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    for u in updates {
+        st.ingest(u.clone()).unwrap();
+    }
+    let (fused, _folded) = st.finish_streaming().unwrap();
+    st.publish(fused).unwrap();
+    (budget.high_water(), t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    elastiagg::bench::banner(
+        "Fig S — buffered vs streaming ingest: peak memory and latency",
+        "buffered peaks at O(K*C); streaming holds O(C) at any party count",
+    );
+
+    let mut rng = Rng::new(17);
+    println!("\n[measured] {UPDATE_LEN}-param (100 KB) updates, FedAvg:");
+    let mut t = fmt::Table::new(&[
+        "parties",
+        "buffered peak",
+        "streaming peak",
+        "peak ratio",
+        "buffered round",
+        "streaming round",
+    ]);
+    let mut stream_peaks = Vec::new();
+    for parties in [8usize, 32, 128, 512] {
+        let updates: Vec<ModelUpdate> =
+            (0..parties as u64).map(|p| gen_update(p, &mut rng)).collect();
+        let (buf_peak, buf_s) = run_buffered(&updates);
+        let (str_peak, str_s) = run_streaming(&updates);
+        stream_peaks.push(str_peak);
+        // buffered parks every update: peak grows with K
+        assert!(
+            buf_peak >= parties as u64 * UPDATE_BYTES,
+            "buffered peak {buf_peak} must hold all {parties} updates"
+        );
+        // streaming: accumulator + one in-flight update, no matter the K
+        assert!(
+            str_peak <= 2 * UPDATE_BYTES,
+            "streaming peak {str_peak} must stay O(C)"
+        );
+        t.row(&[
+            parties.to_string(),
+            fmt::bytes(buf_peak),
+            fmt::bytes(str_peak),
+            format!("{:.1}x", buf_peak as f64 / str_peak as f64),
+            fmt::secs(buf_s),
+            fmt::secs(str_s),
+        ]);
+    }
+    t.print();
+    assert!(
+        stream_peaks.iter().all(|p| *p == stream_peaks[0]),
+        "streaming peak must be independent of the party count: {stream_peaks:?}"
+    );
+
+    // ---- the Fig 1 lift: same budget, buffered OOMs, streaming completes
+    let budget_bytes = 1 << 20; // 1 MiB node: ~10 buffered updates
+    println!(
+        "\n[measured] ceiling lift under a {} node budget:",
+        fmt::bytes(budget_bytes)
+    );
+    let budget = MemoryBudget::new(budget_bytes);
+    let st = RoundState::new(0, WorkloadClass::Small, budget.clone());
+    let mut ceiling = 0usize;
+    loop {
+        match st.ingest(gen_update(ceiling as u64, &mut rng)) {
+            Ok(_) => ceiling += 1,
+            Err(RoundError::Memory(_)) => break,
+            Err(e) => panic!("{e}"),
+        }
+    }
+    drop(st);
+
+    let parties = ceiling * 20;
+    let budget = MemoryBudget::new(budget_bytes);
+    let st = RoundState::new_streaming(
+        0,
+        WorkloadClass::Streaming,
+        budget.clone(),
+        Arc::new(FedAvg),
+        4,
+    )
+    .unwrap();
+    for p in 0..parties as u64 {
+        st.ingest(gen_update(p, &mut rng)).unwrap();
+    }
+    let (fused, folded) = st.finish_streaming().unwrap();
+    assert_eq!(folded, parties);
+    assert_eq!(fused.len(), UPDATE_LEN);
+    println!(
+        "  buffered OOMs at {ceiling} parties; streaming completed {parties} \
+         (peak {} of {})",
+        fmt::bytes(budget.high_water()),
+        fmt::bytes(budget_bytes)
+    );
+    assert!(budget.high_water() <= 2 * UPDATE_BYTES);
+
+    println!("\nfigS OK — streaming holds the round at O(C) and lifts the party ceiling");
+}

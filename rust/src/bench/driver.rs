@@ -146,6 +146,12 @@ pub fn federated_train(cfg: &TrainConfig, dfs_root: &std::path::Path) -> TrainLo
         let mut upload_s = 0.0;
         let (fused, report) = match class {
             WorkloadClass::Small => service.aggregate_small(&algo, &updates, round).unwrap(),
+            // The training loop dispatches on the binary Algorithm-1 oracle
+            // (its historical contract); the streaming arm covers callers
+            // that opt into the three-way classify_full.
+            WorkloadClass::Streaming => {
+                service.aggregate_streaming(&algo, &updates, round).unwrap()
+            }
             WorkloadClass::Large => {
                 // parties upload to the store; monitor + MapReduce fuse
                 let mut bd = Breakdown::new();

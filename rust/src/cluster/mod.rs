@@ -108,6 +108,27 @@ impl VirtualCluster {
         }
     }
 
+    /// Arrival span of `n` message-passing updates pushed through the
+    /// shared client switch into the aggregator (no store hop).
+    pub fn streaming_ingest_span(&self, update_bytes: u64, n: usize) -> f64 {
+        update_bytes as f64 * n as f64 / self.spec.client_link_bps
+    }
+
+    /// Virtual seconds for a streaming-fold round: every update folds into
+    /// the O(C) accumulator *as it arrives*, so ingest and compute overlap
+    /// and wall time is max(arrival span, fold throughput) plus the drain
+    /// of the final update.  Contrast with the buffered single-node path
+    /// (collection not on the aggregation clock, but O(K·C) memory) and
+    /// the distributed path (store upload on the critical path).
+    pub fn streaming_time(&self, update_bytes: u64, n: usize, cores: usize) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let ingest = self.streaming_ingest_span(update_bytes, n);
+        let fold = self.single_node_time(update_bytes, n, cores, EngineKind::Parallel, 1.0);
+        ingest.max(fold) + update_bytes as f64 / self.cost.fuse_bps
+    }
+
     // ---------------------------------------------------------------
     // Distributed path (Figs 7–13)
     // ---------------------------------------------------------------
@@ -260,6 +281,20 @@ mod tests {
         let s = v.single_node_time(4 << 20, 2, 64, EngineKind::Serial, 1.0);
         let p = v.single_node_time(4 << 20, 2, 64, EngineKind::Parallel, 1.0);
         assert!(p > s * 0.8, "parallel should not win big at n=2: {p} vs {s}");
+    }
+
+    #[test]
+    fn streaming_is_ingest_bound_at_scale() {
+        let v = vc();
+        let u = (4.6 * 1024.0 * 1024.0) as u64;
+        // 30 000 parties: the 1 GbE switch is the bottleneck, not the fold
+        let t = v.streaming_time(u, 30_000, 64);
+        let ingest = v.streaming_ingest_span(u, 30_000);
+        assert!(t >= ingest && t < ingest * 1.01, "{t} vs {ingest}");
+        // and the overlap means it beats upload-then-MapReduce end to end
+        let dist = v.client_write_time(u, 30_000) + v.distributed_breakdown(u, 30_000, true).total();
+        assert!(t < dist, "streaming {t} must beat store+job {dist}");
+        assert_eq!(v.streaming_time(u, 0, 64), 0.0);
     }
 
     #[test]

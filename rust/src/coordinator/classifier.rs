@@ -24,7 +24,12 @@ use crate::fusion::FusionAlgorithm;
 pub enum WorkloadClass {
     /// Fits the aggregator node: single-node parallel path.
     Small,
-    /// Exceeds node memory: distributed MapReduce-over-DFS path.
+    /// The buffered set would spill, but the algorithm is an associative
+    /// fold: updates stream through an O(C) accumulator on the node
+    /// instead of redirecting to MapReduce (the Fig 1 ceiling lift).
+    Streaming,
+    /// Exceeds node memory even for streaming (or the algorithm is
+    /// holistic): distributed MapReduce-over-DFS path.
     Large,
 }
 
@@ -73,6 +78,38 @@ impl WorkloadClassifier {
             WorkloadClass::Small
         } else {
             WorkloadClass::Large
+        }
+    }
+
+    /// Resident bytes of the streaming-fold path: the O(C) running
+    /// accumulator plus one in-flight update buffer, inflated by headroom.
+    /// Independent of the party count — that is the whole point.
+    pub fn streaming_required_bytes(&self, update_bytes: u64) -> u64 {
+        (update_bytes as f64 * 2.0 * self.headroom) as u64
+    }
+
+    /// Whether the streaming fold can run this round at all: the algorithm
+    /// must decompose and the O(C) working set must fit the node.  The
+    /// single source of truth shared by `classify_with_streaming` and the
+    /// planner's candidate enumeration.
+    pub fn streaming_feasible(&self, update_bytes: u64, algo: &dyn FusionAlgorithm) -> bool {
+        algo.decomposable() && self.streaming_required_bytes(update_bytes) < self.memory_bytes
+    }
+
+    /// The three-way dispatch test the streaming path adds to Algorithm 1:
+    /// rounds that fit buffered stay `Small`; rounds that would trip the
+    /// Fig 1 ceiling stream on the node when the algorithm decomposes and
+    /// the O(C) working set fits; only the rest go distributed.
+    pub fn classify_with_streaming(
+        &self,
+        update_bytes: u64,
+        parties: usize,
+        algo: &dyn FusionAlgorithm,
+    ) -> WorkloadClass {
+        match self.classify(update_bytes, parties, algo) {
+            WorkloadClass::Small => WorkloadClass::Small,
+            _ if self.streaming_feasible(update_bytes, algo) => WorkloadClass::Streaming,
+            _ => WorkloadClass::Large,
         }
     }
 
@@ -169,6 +206,44 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn streaming_class_lifts_the_party_ceiling_for_decomposable_algos() {
+        let c = WorkloadClassifier::new(1 << 30, 1.0); // 1 GiB
+        // 200 × 4 MiB buffered spills (1.6 GiB), but the O(C) fold needs
+        // only 8 MiB -> the round streams instead of going distributed.
+        assert_eq!(c.classify(4 << 20, 200, &FedAvg), WorkloadClass::Large);
+        assert_eq!(
+            c.classify_with_streaming(4 << 20, 200, &FedAvg),
+            WorkloadClass::Streaming
+        );
+        // ... at ANY party count: the streaming class is N-independent.
+        assert_eq!(
+            c.classify_with_streaming(4 << 20, 10_000_000, &FedAvg),
+            WorkloadClass::Streaming
+        );
+        // rounds that fit buffered stay Small
+        assert_eq!(
+            c.classify_with_streaming(4 << 20, 100, &FedAvg),
+            WorkloadClass::Small
+        );
+    }
+
+    #[test]
+    fn holistic_and_oversized_rounds_still_go_distributed() {
+        let c = WorkloadClassifier::new(1 << 30, 1.0);
+        // holistic algorithms cannot stream
+        assert_eq!(
+            c.classify_with_streaming(4 << 20, 200, &CoordMedian),
+            WorkloadClass::Large
+        );
+        // an update whose O(C) working set alone exceeds the node
+        assert_eq!(c.streaming_required_bytes(600 << 20), 1200 << 20);
+        assert_eq!(
+            c.classify_with_streaming(600 << 20, 4, &FedAvg),
+            WorkloadClass::Large
+        );
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //! * [`registry`] — the party registry (join/dropout/selection — FL parties
 //!   "can join during training ... and drop out anytime", §III-C);
 //! * [`round`] — the round state machine (collecting → aggregating →
-//!   published);
+//!   published), with two ingest modes: buffered (O(K·C)) and streaming
+//!   (each update folds into an O(C) accumulator on arrival);
 //! * [`service`] — the adaptive aggregation service itself: owns the
 //!   engines, the Spark/DFS path, the planner and the autoscaler; plans
 //!   each round, transitions seamlessly (preemptively redirecting parties
@@ -22,5 +23,5 @@ pub mod service;
 
 pub use classifier::{WorkloadClass, WorkloadClassifier};
 pub use registry::PartyRegistry;
-pub use round::{RoundPhase, RoundState};
+pub use round::{RoundError, RoundPhase, RoundState};
 pub use service::{AdaptiveService, ServiceError, ServiceReport};

@@ -1,10 +1,26 @@
-//! Round state machine: each FL round collects updates (in memory or in
-//! the store, depending on the classified path), aggregates, and publishes
-//! the fused model for parties to fetch.
+//! Round state machine: each FL round collects updates (in memory, folded
+//! on arrival, or in the store, depending on the classified path),
+//! aggregates, and publishes the fused model for parties to fetch.
+//!
+//! Two ingest modes:
+//!
+//! * **buffered** ([`RoundState::new`]) — every update is parked in node
+//!   memory until `begin_aggregation` hands the whole set to a batch
+//!   engine: K reservations of O(C) each, the paper's Fig 1 party
+//!   ceiling;
+//! * **streaming** ([`RoundState::new_streaming`]) — each arriving update
+//!   folds into an O(C) [`StreamingFold`] accumulator and its buffer is
+//!   released immediately: ONE reservation against the node budget (plus
+//!   one transient in-flight update), independent of the party count.
+//!
+//! Phase misuse and shape mismatches surface as [`RoundError`] — a
+//! misbehaving party can no longer crash the coordinator with an assert.
 
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::WorkloadClass;
+use crate::engine::{EngineError, StreamingFold};
+use crate::fusion::{FusionAlgorithm, FusionError};
 use crate::memsim::{MemoryBudget, OutOfMemory, Reservation};
 use crate::tensorstore::ModelUpdate;
 
@@ -16,64 +32,266 @@ pub enum RoundPhase {
     Published,
 }
 
+/// What went wrong with a round-state operation.  These are *protocol*
+/// errors: the coordinator reports them to the offending party (or caller)
+/// and keeps serving everyone else.
+#[derive(Debug)]
+pub enum RoundError {
+    /// The operation is only valid in `expected`; the round is in `actual`.
+    WrongPhase { round: u32, expected: RoundPhase, actual: RoundPhase },
+    /// An update disagreed with the round's established parameter count.
+    ShapeMismatch { want: usize, got: usize },
+    /// The node budget is exhausted (the Fig 1 ceiling, as an error).
+    Memory(OutOfMemory),
+    /// A streaming-only operation was called on a buffered round.
+    NotStreaming,
+    /// A buffered-only operation was called on a streaming round.
+    NotBuffered,
+    /// The streaming fold failed below the coordinator.
+    Engine(EngineError),
+}
+
+impl std::fmt::Display for RoundError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RoundError::WrongPhase { round, expected, actual } => {
+                write!(f, "round {round} is {actual:?}, not {expected:?}")
+            }
+            RoundError::ShapeMismatch { want, got } => {
+                write!(f, "update length {got} != round's {want}")
+            }
+            RoundError::Memory(e) => write!(f, "memory: {e}"),
+            RoundError::NotStreaming => write!(f, "round is buffered, not streaming"),
+            RoundError::NotBuffered => write!(f, "round is streaming, not buffered"),
+            RoundError::Engine(e) => write!(f, "engine: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RoundError {}
+
+impl From<OutOfMemory> for RoundError {
+    fn from(e: OutOfMemory) -> Self {
+        RoundError::Memory(e)
+    }
+}
+
+impl From<EngineError> for RoundError {
+    fn from(e: EngineError) -> Self {
+        match e {
+            EngineError::Memory(m) => RoundError::Memory(m),
+            EngineError::Fusion(FusionError::ShapeMismatch { want, got }) => {
+                RoundError::ShapeMismatch { want, got }
+            }
+            other => RoundError::Engine(other),
+        }
+    }
+}
+
+/// How a round holds what parties sent so far.
+enum IngestState {
+    /// Small path: updates parked until aggregation, each charged O(C).
+    Buffered {
+        updates: Vec<(ModelUpdate, Reservation)>,
+        /// Parameter count fixed by the first ingested update.
+        len: Option<usize>,
+    },
+    /// Streaming path: one O(C) fold; buffers released on arrival.
+    Streaming {
+        fold: StreamingFold,
+        algo: Arc<dyn FusionAlgorithm>,
+    },
+    /// Updates (or the fold) have been handed to the aggregation step.
+    Drained,
+}
+
 /// One round's mutable state.
 pub struct RoundState {
     pub round: u32,
     pub class: WorkloadClass,
     phase: Mutex<RoundPhase>,
-    /// In-memory updates (small path); each charged to the node budget.
-    updates: Mutex<Vec<(ModelUpdate, Reservation)>>,
+    ingest: Mutex<IngestState>,
     fused: Mutex<Option<Arc<Vec<f32>>>>,
     budget: MemoryBudget,
 }
 
 impl RoundState {
+    /// A buffered round (the historical collect-then-aggregate shape).
     pub fn new(round: u32, class: WorkloadClass, budget: MemoryBudget) -> RoundState {
         RoundState {
             round,
             class,
             phase: Mutex::new(RoundPhase::Collecting),
-            updates: Mutex::new(Vec::new()),
+            ingest: Mutex::new(IngestState::Buffered { updates: Vec::new(), len: None }),
             fused: Mutex::new(None),
             budget,
         }
+    }
+
+    /// A streaming round: arriving updates fold into an O(C) accumulator
+    /// (chunked across `threads` workers) and are released immediately.
+    /// Fails for holistic algorithms, which cannot stream.
+    pub fn new_streaming(
+        round: u32,
+        class: WorkloadClass,
+        budget: MemoryBudget,
+        algo: Arc<dyn FusionAlgorithm>,
+        threads: usize,
+    ) -> Result<RoundState, EngineError> {
+        let fold = StreamingFold::new(algo.as_ref(), threads, budget.clone())?;
+        Ok(RoundState {
+            round,
+            class,
+            phase: Mutex::new(RoundPhase::Collecting),
+            ingest: Mutex::new(IngestState::Streaming { fold, algo }),
+            fused: Mutex::new(None),
+            budget,
+        })
     }
 
     pub fn phase(&self) -> RoundPhase {
         *self.phase.lock().unwrap()
     }
 
-    /// Ingest an update on the message-passing path, charging node memory
-    /// — the exact mechanism behind the paper's Fig 1 party ceiling.
-    pub fn ingest(&self, u: ModelUpdate) -> Result<usize, OutOfMemory> {
-        assert_eq!(self.phase(), RoundPhase::Collecting, "round not collecting");
-        let r = self.budget.reserve(u.mem_bytes())?;
-        let mut v = self.updates.lock().unwrap();
-        v.push((u, r));
-        Ok(v.len())
+    pub fn is_streaming(&self) -> bool {
+        matches!(&*self.ingest.lock().unwrap(), IngestState::Streaming { .. })
     }
 
+    fn require_phase(&self, expected: RoundPhase) -> Result<(), RoundError> {
+        let actual = self.phase();
+        if actual != expected {
+            return Err(RoundError::WrongPhase { round: self.round, expected, actual });
+        }
+        Ok(())
+    }
+
+    /// Ingest an update on the message-passing path.  Buffered rounds
+    /// charge node memory per update — the exact mechanism behind the
+    /// paper's Fig 1 party ceiling; streaming rounds fold the update into
+    /// the running accumulator and release its buffer before returning.
+    /// Both paths shape-check against the round's first update.
+    pub fn ingest(&self, u: ModelUpdate) -> Result<usize, RoundError> {
+        self.require_phase(RoundPhase::Collecting)?;
+        let mut state = self.ingest.lock().unwrap();
+        match &mut *state {
+            IngestState::Buffered { updates, len } => {
+                match *len {
+                    Some(want) if want != u.data.len() => {
+                        return Err(RoundError::ShapeMismatch { want, got: u.data.len() })
+                    }
+                    Some(_) => {}
+                    None => *len = Some(u.data.len()),
+                }
+                let r = self.budget.reserve(u.mem_bytes())?;
+                updates.push((u, r));
+                Ok(updates.len())
+            }
+            IngestState::Streaming { fold, algo } => {
+                // Charge the in-flight buffer for the duration of the fold
+                // only: peak resident is accumulator + one update = O(C).
+                let inflight = self.budget.reserve(u.mem_bytes())?;
+                fold.fold(algo.as_ref(), &u)?;
+                drop(inflight);
+                drop(u); // buffer released here, not at aggregation time
+                Ok(fold.folded() as usize)
+            }
+            // Drained only happens once aggregation started; never lock
+            // `phase` here (lock order is phase -> ingest elsewhere).
+            IngestState::Drained => Err(RoundError::WrongPhase {
+                round: self.round,
+                expected: RoundPhase::Collecting,
+                actual: RoundPhase::Aggregating,
+            }),
+        }
+    }
+
+    /// Updates received so far (buffered count or folded count).
     pub fn collected(&self) -> usize {
-        self.updates.lock().unwrap().len()
+        match &*self.ingest.lock().unwrap() {
+            IngestState::Buffered { updates, .. } => updates.len(),
+            IngestState::Streaming { fold, .. } => fold.folded() as usize,
+            IngestState::Drained => 0,
+        }
     }
 
-    /// Transition Collecting -> Aggregating, taking the updates out.
-    pub fn begin_aggregation(&self) -> Vec<ModelUpdate> {
+    /// Transition Collecting -> Aggregating, taking the buffered updates
+    /// out.  Streaming rounds use [`RoundState::finish_streaming`].
+    pub fn begin_aggregation(&self) -> Result<Vec<ModelUpdate>, RoundError> {
         let mut phase = self.phase.lock().unwrap();
-        assert_eq!(*phase, RoundPhase::Collecting);
-        *phase = RoundPhase::Aggregating;
-        let mut v = self.updates.lock().unwrap();
-        // Reservations drop here: aggregation scratch is charged by the
-        // engine itself; the raw update buffers move to the engine call.
-        v.drain(..).map(|(u, _r)| u).collect()
+        if *phase != RoundPhase::Collecting {
+            return Err(RoundError::WrongPhase {
+                round: self.round,
+                expected: RoundPhase::Collecting,
+                actual: *phase,
+            });
+        }
+        let mut state = self.ingest.lock().unwrap();
+        let taken = std::mem::replace(&mut *state, IngestState::Drained);
+        match taken {
+            IngestState::Buffered { updates, .. } => {
+                *phase = RoundPhase::Aggregating;
+                // Reservations drop here: aggregation scratch is charged by
+                // the engine itself; the raw buffers move to the engine call.
+                Ok(updates.into_iter().map(|(u, _r)| u).collect())
+            }
+            other @ IngestState::Streaming { .. } => {
+                *state = other; // put the fold back untouched
+                Err(RoundError::NotBuffered)
+            }
+            // Unreachable while the phase guard holds (Drained implies the
+            // phase already left Collecting), but keep the misuse contract
+            // uniform with `ingest` rather than returning a hollow Ok.
+            IngestState::Drained => Err(RoundError::WrongPhase {
+                round: self.round,
+                expected: RoundPhase::Collecting,
+                actual: RoundPhase::Aggregating,
+            }),
+        }
+    }
+
+    /// Streaming rounds: transition Collecting -> Aggregating and finalize
+    /// the fold into fused weights.  Because every update was folded at
+    /// ingest time, this is only the O(C) finalize — ingest and compute
+    /// already overlapped.  Returns the weights together with the folded
+    /// update count, read atomically with the finalize so a straggler that
+    /// slips in just before the transition is counted in both.
+    pub fn finish_streaming(&self) -> Result<(Vec<f32>, usize), RoundError> {
+        let mut phase = self.phase.lock().unwrap();
+        if *phase != RoundPhase::Collecting {
+            return Err(RoundError::WrongPhase {
+                round: self.round,
+                expected: RoundPhase::Collecting,
+                actual: *phase,
+            });
+        }
+        let mut state = self.ingest.lock().unwrap();
+        let taken = std::mem::replace(&mut *state, IngestState::Drained);
+        match taken {
+            IngestState::Streaming { fold, algo } => {
+                *phase = RoundPhase::Aggregating;
+                let folded = fold.folded() as usize;
+                Ok((fold.finish(algo.as_ref())?, folded))
+            }
+            other => {
+                *state = other; // put the buffered set back untouched
+                Err(RoundError::NotStreaming)
+            }
+        }
     }
 
     /// Publish the fused model: Aggregating -> Published.
-    pub fn publish(&self, fused: Vec<f32>) {
+    pub fn publish(&self, fused: Vec<f32>) -> Result<(), RoundError> {
         let mut phase = self.phase.lock().unwrap();
-        assert_eq!(*phase, RoundPhase::Aggregating);
+        if *phase != RoundPhase::Aggregating {
+            return Err(RoundError::WrongPhase {
+                round: self.round,
+                expected: RoundPhase::Aggregating,
+                actual: *phase,
+            });
+        }
         *self.fused.lock().unwrap() = Some(Arc::new(fused));
         *phase = RoundPhase::Published;
+        Ok(())
     }
 
     pub fn fused(&self) -> Option<Arc<Vec<f32>>> {
@@ -84,6 +302,7 @@ impl RoundState {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fusion::FedAvg;
 
     fn upd(p: u64, len: usize) -> ModelUpdate {
         ModelUpdate::new(p, 1.0, 0, vec![1.0; len])
@@ -96,10 +315,10 @@ mod tests {
         r.ingest(upd(0, 100)).unwrap();
         r.ingest(upd(1, 100)).unwrap();
         assert_eq!(r.collected(), 2);
-        let us = r.begin_aggregation();
+        let us = r.begin_aggregation().unwrap();
         assert_eq!(us.len(), 2);
         assert_eq!(r.phase(), RoundPhase::Aggregating);
-        r.publish(vec![0.5; 100]);
+        r.publish(vec![0.5; 100]).unwrap();
         assert_eq!(r.phase(), RoundPhase::Published);
         assert_eq!(r.fused().unwrap().len(), 100);
     }
@@ -109,7 +328,10 @@ mod tests {
         let r = RoundState::new(0, WorkloadClass::Small, MemoryBudget::new(1000));
         r.ingest(upd(0, 200)).unwrap(); // 800 bytes
         let err = r.ingest(upd(1, 200)).unwrap_err();
-        assert_eq!(err.in_use, 800);
+        match err {
+            RoundError::Memory(e) => assert_eq!(e.in_use, 800),
+            other => panic!("want Memory, got {other:?}"),
+        }
         assert_eq!(r.collected(), 1);
     }
 
@@ -119,15 +341,142 @@ mod tests {
         let r = RoundState::new(0, WorkloadClass::Small, budget.clone());
         r.ingest(upd(0, 200)).unwrap();
         assert_eq!(budget.in_use(), 800);
-        let _us = r.begin_aggregation();
+        let _us = r.begin_aggregation().unwrap();
         assert_eq!(budget.in_use(), 0);
     }
 
     #[test]
-    #[should_panic(expected = "round not collecting")]
-    fn ingest_after_aggregation_panics() {
+    fn phase_misuse_is_an_error_not_a_panic() {
+        let r = RoundState::new(3, WorkloadClass::Small, MemoryBudget::unbounded());
+        let _ = r.begin_aggregation().unwrap();
+        // a straggler upload after aggregation started must not crash
+        assert!(matches!(
+            r.ingest(upd(0, 10)),
+            Err(RoundError::WrongPhase { round: 3, expected: RoundPhase::Collecting, .. })
+        ));
+        // double begin_aggregation is equally survivable
+        assert!(matches!(r.begin_aggregation(), Err(RoundError::WrongPhase { .. })));
+        // publish before aggregating (fresh round) errors too
+        let r2 = RoundState::new(4, WorkloadClass::Small, MemoryBudget::unbounded());
+        assert!(matches!(
+            r2.publish(vec![]),
+            Err(RoundError::WrongPhase { expected: RoundPhase::Aggregating, .. })
+        ));
+    }
+
+    #[test]
+    fn ingest_shape_checks_both_modes() {
         let r = RoundState::new(0, WorkloadClass::Small, MemoryBudget::unbounded());
-        let _ = r.begin_aggregation();
-        let _ = r.ingest(upd(0, 10));
+        r.ingest(upd(0, 64)).unwrap();
+        assert!(matches!(
+            r.ingest(upd(1, 65)),
+            Err(RoundError::ShapeMismatch { want: 64, got: 65 })
+        ));
+        assert_eq!(r.collected(), 1, "the bad update must not be parked");
+
+        let s = RoundState::new_streaming(
+            0,
+            WorkloadClass::Streaming,
+            MemoryBudget::unbounded(),
+            Arc::new(FedAvg),
+            2,
+        )
+        .unwrap();
+        s.ingest(upd(0, 64)).unwrap();
+        assert!(matches!(
+            s.ingest(upd(1, 63)),
+            Err(RoundError::ShapeMismatch { want: 64, got: 63 })
+        ));
+        assert_eq!(s.collected(), 1);
+    }
+
+    #[test]
+    fn streaming_round_folds_and_publishes() {
+        let budget = MemoryBudget::new(1 << 20);
+        let s = RoundState::new_streaming(
+            7,
+            WorkloadClass::Streaming,
+            budget.clone(),
+            Arc::new(FedAvg),
+            1,
+        )
+        .unwrap();
+        assert!(s.is_streaming());
+        for p in 0..10u64 {
+            s.ingest(upd(p, 128)).unwrap();
+        }
+        assert_eq!(s.collected(), 10);
+        // buffered-only API is a typed error on streaming rounds
+        assert!(matches!(s.begin_aggregation(), Err(RoundError::NotBuffered)));
+        let (out, folded) = s.finish_streaming().unwrap();
+        assert_eq!(folded, 10);
+        assert_eq!(out.len(), 128);
+        assert!((out[0] - 1.0).abs() < 1e-4); // avg of all-ones
+        s.publish(out).unwrap();
+        assert_eq!(s.phase(), RoundPhase::Published);
+        assert_eq!(budget.in_use(), 0, "fold scratch released");
+    }
+
+    /// The Fig 1 lift, as a unit test: a party count that OOMs the
+    /// buffered path completes under the same budget when streaming —
+    /// peak round memory is O(C), independent of N.
+    #[test]
+    fn streaming_breaks_the_buffered_party_ceiling() {
+        const LEN: usize = 200; // 800-byte updates
+        const BUDGET: u64 = 4096;
+
+        // buffered: 5 × 800 B fit, the 6th trips OutOfMemory
+        let buffered = RoundState::new(0, WorkloadClass::Small, MemoryBudget::new(BUDGET));
+        for p in 0..5u64 {
+            buffered.ingest(upd(p, LEN)).unwrap();
+        }
+        assert!(matches!(buffered.ingest(upd(5, LEN)), Err(RoundError::Memory(_))));
+
+        // streaming under the SAME budget takes 64 parties (and would take
+        // any N): peak resident = accumulator + one in-flight update.
+        let budget = MemoryBudget::new(BUDGET);
+        let streaming = RoundState::new_streaming(
+            0,
+            WorkloadClass::Streaming,
+            budget.clone(),
+            Arc::new(FedAvg),
+            2,
+        )
+        .unwrap();
+        for p in 0..64u64 {
+            streaming.ingest(upd(p, LEN)).unwrap();
+        }
+        assert_eq!(streaming.collected(), 64);
+        assert!(
+            budget.high_water() <= 2 * (LEN as u64 * 4),
+            "peak {} must be O(C), not O(N*C)",
+            budget.high_water()
+        );
+        let (out, folded) = streaming.finish_streaming().unwrap();
+        assert_eq!(folded, 64);
+        assert_eq!(out.len(), LEN);
+        assert!((out[0] - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn streaming_rejects_holistic_algorithms() {
+        assert!(RoundState::new_streaming(
+            0,
+            WorkloadClass::Streaming,
+            MemoryBudget::unbounded(),
+            Arc::new(crate::fusion::CoordMedian),
+            1,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn finish_streaming_on_buffered_round_is_typed_error() {
+        let r = RoundState::new(0, WorkloadClass::Small, MemoryBudget::unbounded());
+        r.ingest(upd(0, 16)).unwrap();
+        assert!(matches!(r.finish_streaming(), Err(RoundError::NotStreaming)));
+        // and the buffered set survived the failed call
+        assert_eq!(r.collected(), 1);
+        assert_eq!(r.begin_aggregation().unwrap().len(), 1);
     }
 }

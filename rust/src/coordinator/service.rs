@@ -33,12 +33,15 @@ use std::time::{Duration, Instant};
 
 use crate::cluster::{CostModel, VirtualCluster};
 use crate::config::ServiceConfig;
-use crate::coordinator::{WorkloadClass, WorkloadClassifier};
+use crate::coordinator::{RoundError, WorkloadClass, WorkloadClassifier};
 use crate::dfs::{DfsClient, Monitor, MonitorOutcome};
-use crate::engine::{AggregationEngine, EngineError, ParallelEngine, SerialEngine, XlaEngine};
+use crate::engine::{
+    AggregationEngine, EngineError, ParallelEngine, SerialEngine, StreamingFold, XlaEngine,
+};
 use crate::fusion::FusionAlgorithm;
 use crate::mapreduce::{scheduler::JobConfig, ExecutorConfig, SparkContext};
-use crate::metrics::Breakdown;
+use crate::memsim::MemoryBudget;
+use crate::metrics::{Breakdown, Stopwatch};
 use crate::planner::{
     Autoscaler, AutoscalerConfig, CandidatePlan, DispatchPlanner, DispatchPolicy, PlanCost,
     PlanKind, PlannerConfig, PricingModel, RoundCalibration, RoundPlan, ScaleDecision,
@@ -50,6 +53,8 @@ pub enum ServiceError {
     Engine(EngineError),
     Job(crate::mapreduce::JobError),
     Dfs(crate::dfs::DfsError),
+    /// A round-state protocol error (wrong phase / shape / mode).
+    Round(RoundError),
     NoUpdates,
 }
 
@@ -59,6 +64,7 @@ impl std::fmt::Display for ServiceError {
             ServiceError::Engine(e) => write!(f, "engine: {e}"),
             ServiceError::Job(e) => write!(f, "job: {e}"),
             ServiceError::Dfs(e) => write!(f, "dfs: {e}"),
+            ServiceError::Round(e) => write!(f, "round: {e}"),
             ServiceError::NoUpdates => write!(f, "no updates"),
         }
     }
@@ -152,15 +158,26 @@ impl AdaptiveService {
         &self.cfg
     }
 
-    /// Classify the coming round (Algorithm 1's `if S < M`).
+    /// Classify the coming round (Algorithm 1's `if S < M`).  This is the
+    /// binary buffered-vs-distributed oracle; [`AdaptiveService::classify_full`]
+    /// adds the streaming middle class.
     pub fn classify(&self, update_bytes: u64, parties: usize, algo: &dyn FusionAlgorithm) -> WorkloadClass {
         self.classifier.classify(update_bytes, parties, algo)
     }
 
+    /// Three-way classification: rounds past the buffered ceiling stream
+    /// on the node when the algorithm decomposes and the O(C) working set
+    /// fits; only the rest go distributed.
+    pub fn classify_full(&self, update_bytes: u64, parties: usize, algo: &dyn FusionAlgorithm) -> WorkloadClass {
+        self.classifier.classify_with_streaming(update_bytes, parties, algo)
+    }
+
     /// Predict whether parties should be redirected to the store for the
-    /// *next* round (preemptive seamless transition).
+    /// *next* round (preemptive seamless transition).  Streaming rounds
+    /// keep the message-passing channel — the whole point is that they no
+    /// longer need the store.
     pub fn should_redirect(&self, update_bytes: u64, expected_parties: usize, algo: &dyn FusionAlgorithm) -> bool {
-        self.classify(update_bytes, expected_parties, algo) == WorkloadClass::Large
+        self.classify_full(update_bytes, expected_parties, algo) == WorkloadClass::Large
     }
 
     // ------------------------------------------------------------------
@@ -286,6 +303,10 @@ impl AdaptiveService {
                     self.aggregate_large(algo, round, updates.len(), update_bytes)?;
                 (out, report, upload_s)
             }
+            PlanKind::Streaming => {
+                let (out, report) = self.aggregate_streaming(algo, updates, round)?;
+                (out, report, 0.0)
+            }
             kind => {
                 let (out, report) = self.aggregate_single(kind, algo, updates, round)?;
                 (out, report, 0.0)
@@ -297,6 +318,10 @@ impl AdaptiveService {
             .unwrap()
             .observe_split(round, &chosen, observed_s, upload_s);
         report.predicted = Some(chosen.cost);
+        // The report's class is the round's feasibility class from the
+        // plan; `engine` names the substrate the policy actually chose
+        // (a Small round may well run on the streaming fold).
+        report.class = plan.class;
         Ok((out, report))
     }
 
@@ -363,6 +388,54 @@ impl AdaptiveService {
                 round,
                 class: WorkloadClass::Small,
                 engine,
+                parties: updates.len(),
+                partitions: 0,
+                executors: 0,
+                breakdown: bd,
+                monitor: None,
+                predicted: None,
+            },
+        ))
+    }
+
+    /// Streaming-path aggregation over a ready update sequence: fold each
+    /// update into one O(C) accumulator and finalize — the substrate the
+    /// planner prices as `PlanKind::Streaming`.  Peak engine memory is the
+    /// accumulator, independent of the party count, which is what lets
+    /// rounds past the Fig 1 buffered ceiling stay on the node.  (On the
+    /// coordinator's live ingest path the same fold runs inside
+    /// [`RoundState`](crate::coordinator::RoundState) as updates arrive,
+    /// overlapping ingest and compute; this entry point drives it over an
+    /// already-collected batch so the planner can dispatch to it.)
+    pub fn aggregate_streaming(
+        &self,
+        algo: &dyn FusionAlgorithm,
+        updates: &[ModelUpdate],
+        round: u32,
+    ) -> Result<(Vec<f32>, ServiceReport), ServiceError> {
+        if updates.is_empty() {
+            return Err(ServiceError::NoUpdates);
+        }
+        let mut bd = Breakdown::new();
+        let mut sw = Stopwatch::start();
+        let mut fold = StreamingFold::new(
+            algo,
+            self.cfg.node.cores.max(1),
+            MemoryBudget::unbounded(),
+        )
+        .map_err(ServiceError::Engine)?;
+        for u in updates {
+            fold.fold(algo, u).map_err(ServiceError::Engine)?;
+        }
+        sw.lap_into(&mut bd, "fold");
+        let out = fold.finish(algo).map_err(ServiceError::Engine)?;
+        sw.lap_into(&mut bd, "reduce");
+        Ok((
+            out,
+            ServiceReport {
+                round,
+                class: WorkloadClass::Streaming,
+                engine: "streaming",
                 parties: updates.len(),
                 partitions: 0,
                 executors: 0,
@@ -516,10 +589,18 @@ mod tests {
 
     #[test]
     fn classification_drives_redirect() {
+        use crate::fusion::CoordMedian;
         let (svc, _td) = service(10 << 20); // 10 MiB node
-        // 2 × 1 MiB fits; 100 × 1 MiB does not
+        // 2 × 1 MiB fits buffered: no redirect
         assert!(!svc.should_redirect(1 << 20, 2, &FedAvg));
-        assert!(svc.should_redirect(1 << 20, 100, &FedAvg));
+        // 100 × 1 MiB spills the buffer, but FedAvg streams in O(C):
+        // the round STAYS on the message-passing channel
+        assert!(!svc.should_redirect(1 << 20, 100, &FedAvg));
+        assert_eq!(svc.classify_full(1 << 20, 100, &FedAvg), WorkloadClass::Streaming);
+        // holistic algorithms cannot stream: redirect to the store
+        assert!(svc.should_redirect(1 << 20, 100, &CoordMedian));
+        // nor can updates whose O(C) working set alone exceeds the node
+        assert!(svc.should_redirect(8 << 20, 100, &FedAvg));
     }
 
     #[test]
@@ -573,7 +654,11 @@ mod tests {
         let us = updates(8, 500);
         let (out, report) = svc.aggregate_planned(&FedAvg, &us, 0).unwrap();
         assert_eq!(report.class, WorkloadClass::Small);
-        assert!(matches!(report.engine, "serial" | "parallel"), "{}", report.engine);
+        assert!(
+            matches!(report.engine, "serial" | "parallel" | "streaming"),
+            "{}",
+            report.engine
+        );
         assert!(report.predicted.is_some());
         let mut bd = Breakdown::new();
         let want = SerialEngine::unbounded().aggregate(&FedAvg, &us, &mut bd).unwrap();
@@ -586,10 +671,34 @@ mod tests {
     }
 
     #[test]
-    fn planned_large_round_uploads_and_goes_distributed() {
-        let (svc, _td) = service(1 << 20); // 1 MiB node: 10 × 200 KB spills
+    fn planned_spill_round_streams_on_the_node() {
+        // 1 MiB node: 10 × 200 KB spills the buffer, but the O(C) fold
+        // fits — the round that used to redirect to MapReduce by default
+        // now streams, with no store hop and no executors.
+        let (svc, _td) = service(1 << 20);
         let us = updates(10, 50_000);
         let (out, report) = svc.aggregate_planned(&FedAvg, &us, 3).unwrap();
+        assert_eq!(report.class, WorkloadClass::Streaming);
+        assert_eq!(report.engine, "streaming");
+        assert_eq!(report.executors, 0);
+        assert!(!svc.spark_started(), "streaming must not spin up Spark");
+        assert!(report.predicted.is_some());
+        let mut bd = Breakdown::new();
+        let want = SerialEngine::unbounded().aggregate(&FedAvg, &us, &mut bd).unwrap();
+        all_close(&out, &want, 1e-4, 1e-5).unwrap();
+        let ledger = svc.calibration_ledger();
+        assert_eq!(ledger.len(), 1);
+        assert_eq!(ledger[0].kind, PlanKind::Streaming);
+    }
+
+    #[test]
+    fn planned_holistic_round_uploads_and_goes_distributed() {
+        use crate::fusion::CoordMedian;
+        // median cannot stream, so the same spilling round takes the
+        // store + MapReduce path exactly as before.
+        let (svc, _td) = service(1 << 20);
+        let us = updates(10, 50_000);
+        let (out, report) = svc.aggregate_planned(&CoordMedian, &us, 3).unwrap();
         assert_eq!(report.class, WorkloadClass::Large);
         assert_eq!(report.engine, "mapreduce");
         assert!(report.executors >= 1);
@@ -600,7 +709,7 @@ mod tests {
             u.round = 3;
         }
         let mut bd = Breakdown::new();
-        let want = SerialEngine::unbounded().aggregate(&FedAvg, &us3, &mut bd).unwrap();
+        let want = SerialEngine::unbounded().aggregate(&CoordMedian, &us3, &mut bd).unwrap();
         all_close(&out, &want, 1e-4, 1e-5).unwrap();
         let ledger = svc.calibration_ledger();
         assert_eq!(ledger.len(), 1);
@@ -608,22 +717,48 @@ mod tests {
     }
 
     #[test]
+    fn streaming_path_matches_serial() {
+        let (svc, _td) = service(1 << 30);
+        let us = updates(12, 700);
+        let (out, report) = svc.aggregate_streaming(&FedAvg, &us, 5).unwrap();
+        assert_eq!(report.engine, "streaming");
+        assert_eq!(report.class, WorkloadClass::Streaming);
+        assert_eq!(report.parties, 12);
+        assert!(report.breakdown.phases().iter().any(|(p, _)| p == "fold"));
+        let mut bd = Breakdown::new();
+        let want = SerialEngine::unbounded().aggregate(&FedAvg, &us, &mut bd).unwrap();
+        all_close(&out, &want, 1e-4, 1e-5).unwrap();
+        // holistic algorithms are rejected, empty rounds are NoUpdates
+        assert!(matches!(
+            svc.aggregate_streaming(&crate::fusion::CoordMedian, &us, 5),
+            Err(ServiceError::Engine(_))
+        ));
+        assert!(matches!(
+            svc.aggregate_streaming(&FedAvg, &[], 5),
+            Err(ServiceError::NoUpdates)
+        ));
+    }
+
+    #[test]
     fn planned_rounds_feed_calibration_and_stay_stable() {
-        // A mixed small/large trace: dispatch keeps matching the class and
-        // the ledger records every round.
+        // A mixed small/spilling trace: dispatch keeps matching the class
+        // and the ledger records every round.  The spilling rounds stream
+        // (FedAvg decomposes) instead of paying for the store + Spark.
         let (svc, _td) = service(1 << 20);
         let small = updates(3, 200);
-        let large = updates(8, 50_000);
+        let spill = updates(8, 50_000);
         for round in 0..4u32 {
-            let us = if round % 2 == 0 { &small } else { &large };
+            let us = if round % 2 == 0 { &small } else { &spill };
             let (_, report) = svc.aggregate_planned(&FedAvg, us, round).unwrap();
             if round % 2 == 0 {
                 assert_eq!(report.class, WorkloadClass::Small, "round {round}");
             } else {
-                assert_eq!(report.engine, "mapreduce", "round {round}");
+                assert_eq!(report.engine, "streaming", "round {round}");
+                assert_eq!(report.class, WorkloadClass::Streaming, "round {round}");
             }
         }
         assert_eq!(svc.calibration_ledger().len(), 4);
+        assert!(!svc.spark_started());
     }
 
     #[test]

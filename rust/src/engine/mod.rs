@@ -8,16 +8,21 @@
 //! * [`XlaEngine`] — the AOT hot path: stacks updates into the fixed
 //!   `[K, C]` geometry and executes the Pallas weighted-sum artifact on the
 //!   PJRT CPU client.
+//! * [`StreamingFold`] — the incremental alternative to the batch
+//!   `aggregate` call: updates fold into an O(C) accumulator as they
+//!   arrive instead of being collected first (the Fig 1 ceiling lift).
 //!
 //! All engines produce bit-comparable results (see `rust/tests/engine_parity`)
 //! because the fusion algebra is shared.
 
 pub mod parallel;
 pub mod serial;
+pub mod streaming;
 pub mod xla_engine;
 
 pub use parallel::ParallelEngine;
 pub use serial::SerialEngine;
+pub use streaming::StreamingFold;
 pub use xla_engine::XlaEngine;
 
 use crate::fusion::{FusionAlgorithm, FusionError};

@@ -9,10 +9,28 @@
 //! still sliced when the algorithm is per-coordinate (median); whole-vector
 //! scorers (Krum, Zeno) run as one holistic call.
 
+use super::streaming::StreamingFold;
 use super::{validate, AggregationEngine, EngineError};
 use crate::fusion::{FusionAlgorithm, FusionError, EPS};
+use crate::memsim::MemoryBudget;
 use crate::metrics::{Breakdown, Stopwatch};
 use crate::tensorstore::ModelUpdate;
+
+/// Slice `len` into at most `threads` near-equal ranges — the parameter-axis
+/// decomposition shared by the batch engine and the streaming fold.
+pub(crate) fn split_ranges(len: usize, threads: usize) -> Vec<std::ops::Range<usize>> {
+    let t = threads.min(len).max(1);
+    let base = len / t;
+    let extra = len % t;
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let sz = base + usize::from(i < extra);
+        out.push(start..start + sz);
+        start += sz;
+    }
+    out
+}
 
 pub struct ParallelEngine {
     threads: usize,
@@ -28,19 +46,19 @@ impl ParallelEngine {
         self.threads
     }
 
+    /// Start an incremental fold that chunks the parameter axis across this
+    /// engine's thread count; the O(C) scratch is charged to `budget`.
+    pub fn streaming_fold(
+        &self,
+        algo: &dyn FusionAlgorithm,
+        budget: MemoryBudget,
+    ) -> Result<StreamingFold, EngineError> {
+        StreamingFold::new(algo, self.threads, budget)
+    }
+
     /// Slice `len` into at most `threads` near-equal ranges.
     fn ranges(&self, len: usize) -> Vec<std::ops::Range<usize>> {
-        let t = self.threads.min(len).max(1);
-        let base = len / t;
-        let extra = len % t;
-        let mut out = Vec::with_capacity(t);
-        let mut start = 0;
-        for i in 0..t {
-            let sz = base + usize::from(i < extra);
-            out.push(start..start + sz);
-            start += sz;
-        }
-        out
+        split_ranges(len, self.threads)
     }
 }
 

@@ -25,6 +25,17 @@ impl SerialEngine {
     pub fn budget(&self) -> &MemoryBudget {
         &self.budget
     }
+
+    /// Start an incremental fold with this engine's semantics (single
+    /// arithmetic stream, scratch charged to the engine budget).  The fold
+    /// is bit-identical to [`SerialEngine::aggregate`] over the same
+    /// update sequence.
+    pub fn streaming_fold(
+        &self,
+        algo: &dyn FusionAlgorithm,
+    ) -> Result<super::StreamingFold, EngineError> {
+        super::StreamingFold::new(algo, 1, self.budget.clone())
+    }
 }
 
 impl AggregationEngine for SerialEngine {

@@ -1,0 +1,305 @@
+//! Streaming fold — the O(C) alternative to collect-then-aggregate.
+//!
+//! The paper's Fig 1 party ceiling exists because the single-node path
+//! buffers all K updates of C parameters (O(K·C)) before the batch engines
+//! run.  A weighted average is an associative fold, so the same round can
+//! run in O(C): one running [`Accumulator`] of weighted sums that each
+//! update is folded into *as it arrives*, after which its buffer is freed.
+//! [`StreamingFold`] is that accumulator:
+//!
+//! * [`StreamingFold::fold`] — add one update (shape-validated against the
+//!   first folded update; the O(C) scratch is reserved from the memory
+//!   budget on the first fold, and never grows with the party count);
+//! * [`StreamingFold::merge`] — combine two partial folds (the MapReduce
+//!   combiner shape; order-insensitive up to float association);
+//! * [`StreamingFold::finish`] — finalize into fused weights.
+//!
+//! Bit-parity with the batch path: the serial fold calls the exact
+//! `accumulate`/`finalize` algebra [`SerialEngine`](super::SerialEngine)
+//! uses, and the chunked fold performs the identical per-element
+//! `sum += w * x` sequence on disjoint slices, so a fold over the same
+//! update sequence produces *bit-identical* output to
+//! `SerialEngine::aggregate` (see `rust/tests/engine_parity`).  Merging
+//! partials regroups the additions and is only close, not identical —
+//! the same property the fusion combine-associativity tests pin down.
+//!
+//! Only decomposable algorithms stream; holistic ones (median/Krum/Zeno)
+//! must gather the full set and are rejected at construction.
+
+use super::EngineError;
+use crate::fusion::{Accumulator, FusionAlgorithm, FusionError};
+use crate::memsim::{MemoryBudget, Reservation};
+use crate::tensorstore::ModelUpdate;
+
+/// Below this parameter count the chunked fold runs single-threaded.  The
+/// per-element operation sequence is identical either way (so results do
+/// not change), and — unlike the batch engine, which pays one thread
+/// launch per *round* — the fold pays one per *update*, so chunking only
+/// wins once a single update's C-element add clearly outweighs the spawn
+/// cost (~1 MiB of f32 and up).
+const CHUNK_MIN_LEN: usize = 256 * 1024;
+
+/// Incremental aggregation state: running weighted sums in O(C) memory.
+///
+/// The algorithm is passed to each call (mirroring
+/// [`AggregationEngine::aggregate`](super::AggregationEngine::aggregate))
+/// so a fold can be driven by a borrowed algorithm without `Arc` plumbing;
+/// callers must use the same algorithm for every call on one fold.
+pub struct StreamingFold {
+    /// Running sums; `None` until the first update fixes the shape.
+    acc: Option<Accumulator>,
+    /// Parameter-axis worker count for the chunked fold (1 = serial).
+    threads: usize,
+    /// Node budget the O(C) scratch is charged to.
+    budget: MemoryBudget,
+    /// The single O(C) reservation (held from first fold to drop).
+    scratch: Option<Reservation>,
+}
+
+impl StreamingFold {
+    /// Start a fold.  `threads` > 1 chunks the parameter axis across scoped
+    /// worker threads exactly as [`ParallelEngine`](super::ParallelEngine)
+    /// does.  Fails for non-decomposable algorithms, which cannot stream.
+    pub fn new(
+        algo: &dyn FusionAlgorithm,
+        threads: usize,
+        budget: MemoryBudget,
+    ) -> Result<StreamingFold, EngineError> {
+        if !algo.decomposable() {
+            return Err(EngineError::Fusion(FusionError::BadParam(format!(
+                "{} is holistic and cannot stream",
+                algo.name()
+            ))));
+        }
+        Ok(StreamingFold {
+            acc: None,
+            threads: threads.max(1),
+            budget,
+            scratch: None,
+        })
+    }
+
+    /// Updates folded in so far.
+    pub fn folded(&self) -> u64 {
+        self.acc.as_ref().map(|a| a.n).unwrap_or(0)
+    }
+
+    /// Parameter count fixed by the first folded update.
+    pub fn params(&self) -> Option<usize> {
+        self.acc.as_ref().map(|a| a.sum.len())
+    }
+
+    /// Fold one update into the running sums.  The first fold fixes the
+    /// shape and reserves the O(C) scratch; every later update is
+    /// shape-validated against it.
+    pub fn fold(&mut self, algo: &dyn FusionAlgorithm, u: &ModelUpdate) -> Result<(), EngineError> {
+        if let Some(a) = &self.acc {
+            if a.sum.len() != u.data.len() {
+                return Err(EngineError::Fusion(FusionError::ShapeMismatch {
+                    want: a.sum.len(),
+                    got: u.data.len(),
+                }));
+            }
+        } else {
+            self.scratch = Some(self.budget.reserve(u.data.len() as u64 * 4)?);
+            self.acc = Some(Accumulator::zeros(u.data.len()));
+        }
+        let acc = self.acc.as_mut().expect("acc initialised above");
+        let len = acc.sum.len();
+        if self.threads <= 1 || len < CHUNK_MIN_LEN {
+            algo.accumulate(acc, u);
+            return Ok(());
+        }
+
+        // Chunked fold: the parameter axis sliced across workers, each
+        // owning a disjoint output range — the ParallelEngine decomposition
+        // applied to one update.  Per element this is the same
+        // `sum += w * x` the serial path performs, so results are
+        // bit-identical regardless of the chunking.
+        let w = algo.weight(u);
+        let identity = algo.identity_transform();
+        let ranges = super::parallel::split_ranges(len, self.threads);
+        let mut slots: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
+        let mut rest = acc.sum.as_mut_slice();
+        for r in &ranges {
+            let (head, tail) = rest.split_at_mut(r.len());
+            slots.push(head);
+            rest = tail;
+        }
+        std::thread::scope(|s| {
+            for (r, slot) in ranges.iter().zip(slots) {
+                s.spawn(move || {
+                    let src = &u.data[r.clone()];
+                    if identity {
+                        for (o, x) in slot.iter_mut().zip(src) {
+                            *o += w * x;
+                        }
+                    } else {
+                        for (o, x) in slot.iter_mut().zip(src) {
+                            *o += w * algo.transform(*x);
+                        }
+                    }
+                });
+            }
+        });
+        acc.wtot += w as f64;
+        acc.n += 1;
+        Ok(())
+    }
+
+    /// Merge another partial fold into this one (the reduce/combiner side).
+    /// Two empty-or-matching folds merge; mismatched shapes are rejected.
+    pub fn merge(&mut self, algo: &dyn FusionAlgorithm, other: StreamingFold) -> Result<(), EngineError> {
+        let Some(b) = other.acc else { return Ok(()) };
+        match self.acc.as_mut() {
+            None => {
+                // Adopt the other side's state — and its O(C) charge.
+                self.scratch = other.scratch;
+                self.acc = Some(b);
+            }
+            Some(a) => {
+                if a.sum.len() != b.sum.len() {
+                    return Err(EngineError::Fusion(FusionError::ShapeMismatch {
+                        want: a.sum.len(),
+                        got: b.sum.len(),
+                    }));
+                }
+                algo.combine(a, &b);
+            }
+        }
+        Ok(())
+    }
+
+    /// Finalize into fused weights.  Errors on an empty fold.
+    pub fn finish(self, algo: &dyn FusionAlgorithm) -> Result<Vec<f32>, EngineError> {
+        let acc = self.acc.ok_or(EngineError::Fusion(FusionError::Empty))?;
+        Ok(algo.finalize(acc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::batch;
+    use super::*;
+    use crate::engine::{AggregationEngine, SerialEngine};
+    use crate::fusion::{ClippedAvg, CoordMedian, FedAvg, IterAvg};
+    use crate::metrics::Breakdown;
+    use crate::util::prop::all_close;
+
+    #[test]
+    fn sequential_fold_is_bit_identical_to_serial_batch() {
+        let us = batch(11, 13, 3000);
+        let mut bd = Breakdown::new();
+        let want = SerialEngine::unbounded().aggregate(&FedAvg, &us, &mut bd).unwrap();
+        let mut f = StreamingFold::new(&FedAvg, 1, MemoryBudget::unbounded()).unwrap();
+        for u in &us {
+            f.fold(&FedAvg, u).unwrap();
+        }
+        assert_eq!(f.finish(&FedAvg).unwrap(), want);
+    }
+
+    #[test]
+    fn chunked_fold_is_bit_identical_too() {
+        // Above the chunking cutoff the parameter axis is sliced across
+        // threads; per element the op sequence is unchanged.
+        let us = batch(5, 9, CHUNK_MIN_LEN + 777);
+        let mut bd = Breakdown::new();
+        for algo in [&FedAvg as &dyn FusionAlgorithm, &IterAvg, &ClippedAvg { clip: 0.5 }] {
+            let want = SerialEngine::unbounded().aggregate(algo, &us, &mut bd).unwrap();
+            let mut f = StreamingFold::new(algo, 4, MemoryBudget::unbounded()).unwrap();
+            for u in &us {
+                f.fold(algo, u).unwrap();
+            }
+            assert_eq!(f.finish(algo).unwrap(), want, "{}", algo.name());
+        }
+    }
+
+    #[test]
+    fn merge_of_partials_matches_batch() {
+        let us = batch(3, 12, 500);
+        let mut bd = Breakdown::new();
+        let want = SerialEngine::unbounded().aggregate(&FedAvg, &us, &mut bd).unwrap();
+        let mut a = StreamingFold::new(&FedAvg, 1, MemoryBudget::unbounded()).unwrap();
+        let mut b = StreamingFold::new(&FedAvg, 1, MemoryBudget::unbounded()).unwrap();
+        for u in &us[..5] {
+            a.fold(&FedAvg, u).unwrap();
+        }
+        for u in &us[5..] {
+            b.fold(&FedAvg, u).unwrap();
+        }
+        // out-of-order: the later partial absorbs the earlier one
+        b.merge(&FedAvg, a).unwrap();
+        assert_eq!(b.folded(), 12);
+        all_close(&b.finish(&FedAvg).unwrap(), &want, 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected_at_fold_and_merge() {
+        let mut f = StreamingFold::new(&FedAvg, 1, MemoryBudget::unbounded()).unwrap();
+        f.fold(&FedAvg, &ModelUpdate::new(0, 1.0, 0, vec![1.0; 8])).unwrap();
+        assert!(matches!(
+            f.fold(&FedAvg, &ModelUpdate::new(1, 1.0, 0, vec![1.0; 9])),
+            Err(EngineError::Fusion(FusionError::ShapeMismatch { want: 8, got: 9 }))
+        ));
+        let mut g = StreamingFold::new(&FedAvg, 1, MemoryBudget::unbounded()).unwrap();
+        g.fold(&FedAvg, &ModelUpdate::new(2, 1.0, 0, vec![1.0; 9])).unwrap();
+        assert!(matches!(
+            f.merge(&FedAvg, g),
+            Err(EngineError::Fusion(FusionError::ShapeMismatch { .. }))
+        ));
+    }
+
+    #[test]
+    fn holistic_algorithms_cannot_stream() {
+        assert!(matches!(
+            StreamingFold::new(&CoordMedian, 1, MemoryBudget::unbounded()),
+            Err(EngineError::Fusion(FusionError::BadParam(_)))
+        ));
+    }
+
+    #[test]
+    fn empty_fold_errors_on_finish() {
+        let f = StreamingFold::new(&FedAvg, 1, MemoryBudget::unbounded()).unwrap();
+        assert!(matches!(
+            f.finish(&FedAvg),
+            Err(EngineError::Fusion(FusionError::Empty))
+        ));
+    }
+
+    #[test]
+    fn scratch_is_one_o_c_reservation_independent_of_party_count() {
+        let budget = MemoryBudget::new(1 << 20);
+        let mut f = StreamingFold::new(&FedAvg, 1, budget.clone()).unwrap();
+        for p in 0..200u64 {
+            f.fold(&FedAvg, &ModelUpdate::new(p, 1.0, 0, vec![1.0; 256]))
+                .unwrap();
+        }
+        // exactly one C-sized reservation, no matter how many folds
+        assert_eq!(budget.in_use(), 256 * 4);
+        drop(f);
+        assert_eq!(budget.in_use(), 0);
+    }
+
+    #[test]
+    fn first_fold_oom_surfaces() {
+        let budget = MemoryBudget::new(100);
+        let mut f = StreamingFold::new(&FedAvg, 1, budget).unwrap();
+        assert!(matches!(
+            f.fold(&FedAvg, &ModelUpdate::new(0, 1.0, 0, vec![1.0; 256])),
+            Err(EngineError::Memory(_))
+        ));
+    }
+
+    #[test]
+    fn merge_into_empty_adopts_state() {
+        let budget = MemoryBudget::new(1 << 20);
+        let mut a = StreamingFold::new(&FedAvg, 1, budget.clone()).unwrap();
+        let mut b = StreamingFold::new(&FedAvg, 1, budget.clone()).unwrap();
+        b.fold(&FedAvg, &ModelUpdate::new(0, 2.0, 0, vec![4.0; 16])).unwrap();
+        a.merge(&FedAvg, b).unwrap();
+        assert_eq!(a.folded(), 1);
+        assert_eq!(budget.in_use(), 16 * 4); // the charge moved, not doubled
+        let out = a.finish(&FedAvg).unwrap();
+        all_close(&out, &vec![4.0; 16], 1e-4, 1e-5).unwrap();
+    }
+}

@@ -48,6 +48,12 @@ type Task = Box<dyn FnOnce(&TaskCtx) + Send>;
 
 /// What a task sees: its executor's identity and memory budget.
 pub struct TaskCtx {
+    /// Stable container index in `0..executors()`.  Workers retire from
+    /// the top on a shrink and regrow reuses the same ids, so a task's
+    /// `executor_id` is always a valid index into any per-executor state
+    /// sized at submit time — the contract the scheduler's combiner slots
+    /// (one partial [`Accumulator`](crate::fusion::Accumulator) per
+    /// executor) index by.
     pub executor_id: usize,
     pub core_id: usize,
     pub memory: MemoryBudget,
@@ -376,6 +382,32 @@ mod tests {
         assert_eq!(pool.scale_to(2), 2);
         assert_eq!(pool.scale_to(0), 1); // clamped to the warm floor
         assert_eq!(pool.executors(), 1);
+    }
+
+    #[test]
+    fn executor_ids_always_index_per_executor_state() {
+        // The combiner contract: every task's executor_id is a valid index
+        // into a per-executor slot vector sized when the job starts — even
+        // across shrink/regrow cycles.
+        let pool = ExecutorPool::start(ExecutorConfig {
+            executors: 3,
+            cores_per_executor: 2,
+            ..Default::default()
+        });
+        for live in [3usize, 1, 4] {
+            pool.scale_to(live);
+            let slots: Arc<Vec<AtomicU64>> =
+                Arc::new((0..pool.executors()).map(|_| AtomicU64::new(0)).collect());
+            for _ in 0..24 {
+                let slots = slots.clone();
+                pool.submit(move |ctx| {
+                    slots[ctx.executor_id].fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.join();
+            let total: u64 = slots.iter().map(|s| s.load(Ordering::Relaxed)).sum();
+            assert_eq!(total, 24, "live={live}");
+        }
     }
 
     #[test]

@@ -10,8 +10,12 @@
 //!    them);
 //! 3. **reduce** — map tasks fold their partition into a partial
 //!    [`Accumulator`] (streamed file-by-file for decomposable fusions, so
-//!    executor memory stays O(update)), then partials tree-combine and
-//!    finalize (Fig 4 step ⑤).
+//!    executor memory stays O(update)), each partial then merges into a
+//!    per-executor *combiner* slot before anything moves driver-ward —
+//!    the reducer merges one partial per executor instead of one per
+//!    partition, cutting shuffle volume from `partitions × C` to
+//!    `executors × C` (the `combiner_saved` counter records the cut) —
+//!    and the surviving partials combine and finalize (Fig 4 step ⑤).
 //!
 //! Failed tasks are retried up to `max_retries` (replica fallback in the
 //! DFS absorbs single-datanode failures; retry absorbs transient ones).
@@ -167,42 +171,27 @@ impl SparkContext {
             let _n_total: f64 = totals.iter().sum();
             sw.lap_into(bd, "sum");
 
-            // Stage 3: reduce — partial accumulators per partition, then
-            // combine + finalize at the driver.
-            // Erase the lifetime: `run_stage` joins the pool before
+            // Stage 3: reduce — partial accumulators per partition, folded
+            // combiner-style into one slot per executor before the driver
+            // merge, then combine + finalize.
+            // Erase the lifetime: the stage joins the pool before
             // returning, so no task outlives `algo` (see AlgoRef docs).
             let algo_ptr = AlgoRef(unsafe {
                 std::mem::transmute::<&dyn FusionAlgorithm, &'static dyn FusionAlgorithm>(algo)
             });
-            let partials = self.run_stage(cfg, nparts, {
-                let rdd = rdd.clone();
-                move |p, ctx| {
-                    let algo = algo_ptr.get();
-                    let mut acc: Option<Accumulator> = None;
-                    let fold = |acc: &mut Option<Accumulator>, u: ModelUpdate| {
-                        let a = acc.get_or_insert_with(|| Accumulator::zeros(u.data.len()));
-                        if a.sum.len() == u.data.len() {
-                            algo.accumulate(a, &u);
-                        }
-                    };
-                    if cfg_cache_should_decode(&rdd) {
-                        let dec = rdd
-                            .decode_partition(p, &ctx.memory)
-                            .map_err(|e| e.to_string())?;
-                        let mut a = acc;
-                        for u in dec.iter() {
-                            fold(&mut a, u.clone());
-                        }
-                        acc = a;
-                    } else {
-                        let mut a = acc;
-                        rdd.stream_partition(p, |u| fold(&mut a, u))
-                            .map_err(|e| e.to_string())?;
-                        acc = a;
-                    }
-                    acc.ok_or_else(|| "empty partition".to_string())
-                }
-            })?;
+            let partials = self.run_reduce_combined(cfg, nparts, algo_ptr, rdd.clone())?;
+            self.counters
+                .lock()
+                .unwrap()
+                .inc("combiner_partials", partials.len() as u64);
+            if nparts > partials.len() {
+                // shuffle volume cut: partition-partials merged executor-
+                // locally instead of travelling to the driver individually
+                self.counters
+                    .lock()
+                    .unwrap()
+                    .inc("combiner_saved", (nparts - partials.len()) as u64);
+            }
             let mut it = partials.into_iter();
             let mut acc = it.next().ok_or(JobError::NoUpdates)?;
             for p in it {
@@ -234,6 +223,150 @@ impl SparkContext {
             sw.lap_into(bd, "reduce");
             Ok((out, nparts))
         }
+    }
+
+    /// The reduce stage with executor-local combining: each partition task
+    /// folds its files into a partial [`Accumulator`] and merges it into
+    /// its executor's combiner slot on the spot, so at most one partial
+    /// per *executor* (not per partition) survives to the driver merge —
+    /// the shuffle-volume cut a Spark combiner buys.  Retry and
+    /// speculation mirror [`SparkContext::run_stage`]; the per-partition
+    /// `done` flag is flipped inside the slot lock, so a speculative
+    /// duplicate can never double-fold a partition.
+    ///
+    /// Determinism note: partials merge in task-completion order, so two
+    /// identical runs can regroup the float additions differently — like
+    /// real Spark combiners, results are reproducible to tolerance (the
+    /// combine-associativity property the fusion tests pin down), not to
+    /// the bit.  Bit-exact reproducibility lives on the single-node paths.
+    fn run_reduce_combined(
+        &self,
+        cfg: &JobConfig,
+        n: usize,
+        algo_ptr: AlgoRef,
+        rdd: Arc<BinaryFilesRdd>,
+    ) -> Result<Vec<Accumulator>, JobError> {
+        let executors = self.pool.executors().max(1);
+        let combiners: Arc<Vec<Mutex<Option<Accumulator>>>> =
+            Arc::new((0..executors).map(|_| Mutex::new(None)).collect());
+        let done: Arc<Vec<AtomicBool>> =
+            Arc::new((0..n).map(|_| AtomicBool::new(false)).collect());
+        let errs: Arc<Mutex<Vec<Option<String>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+
+        let launch = |p: usize| {
+            let combiners = combiners.clone();
+            let done = done.clone();
+            let errs = errs.clone();
+            let rdd = rdd.clone();
+            self.pool.submit(move |ctx| {
+                if done[p].load(Ordering::Acquire) {
+                    return; // speculative duplicate lost the race
+                }
+                let algo = algo_ptr.get();
+                // Fold this partition into a local partial (streamed
+                // file-by-file unless the RDD caches decoded partitions).
+                let mut acc: Option<Accumulator> = None;
+                let fold = |acc: &mut Option<Accumulator>, u: ModelUpdate| {
+                    let a = acc.get_or_insert_with(|| Accumulator::zeros(u.data.len()));
+                    if a.sum.len() == u.data.len() {
+                        algo.accumulate(a, &u);
+                    }
+                };
+                let r: Result<(), String> = if cfg_cache_should_decode(&rdd) {
+                    rdd.decode_partition(p, &ctx.memory).map_err(|e| e.to_string()).map(|dec| {
+                        for u in dec.iter() {
+                            fold(&mut acc, u.clone());
+                        }
+                    })
+                } else {
+                    rdd.stream_partition(p, |u| fold(&mut acc, u)).map_err(|e| e.to_string())
+                };
+                let partial = match (r, acc) {
+                    (Err(e), _) => {
+                        if !done[p].load(Ordering::Acquire) {
+                            errs.lock().unwrap()[p] = Some(e);
+                        }
+                        return;
+                    }
+                    (Ok(()), None) => {
+                        if !done[p].load(Ordering::Acquire) {
+                            errs.lock().unwrap()[p] = Some("empty partition".to_string());
+                        }
+                        return;
+                    }
+                    (Ok(()), Some(a)) => a,
+                };
+                // Executor-local combine, exactly once per partition: the
+                // done flag is checked and flipped under the slot lock.
+                let mut slot = combiners[ctx.executor_id % combiners.len()].lock().unwrap();
+                if done[p].load(Ordering::Acquire) {
+                    return;
+                }
+                match slot.as_mut() {
+                    None => *slot = Some(partial),
+                    Some(acc) if acc.sum.len() == partial.sum.len() => {
+                        algo.combine(acc, &partial);
+                    }
+                    Some(acc) => {
+                        errs.lock().unwrap()[p] = Some(
+                            FusionError::ShapeMismatch {
+                                want: acc.sum.len(),
+                                got: partial.sum.len(),
+                            }
+                            .to_string(),
+                        );
+                        return;
+                    }
+                }
+                done[p].store(true, Ordering::Release);
+            });
+        };
+
+        for attempt in 0..=cfg.max_retries {
+            let pending: Vec<usize> = (0..n).filter(|p| !done[*p].load(Ordering::Acquire)).collect();
+            if pending.is_empty() {
+                break;
+            }
+            if attempt > 0 {
+                self.counters
+                    .lock()
+                    .unwrap()
+                    .inc("tasks_retried", pending.len() as u64);
+                std::thread::sleep(cfg.retry_backoff);
+            }
+            for p in &pending {
+                launch(*p);
+            }
+            self.pool.join();
+            if cfg.speculation {
+                let stragglers: Vec<usize> =
+                    (0..n).filter(|p| !done[*p].load(Ordering::Acquire)).collect();
+                if !stragglers.is_empty() {
+                    self.counters
+                        .lock()
+                        .unwrap()
+                        .inc("tasks_speculated", stragglers.len() as u64);
+                    for p in stragglers {
+                        launch(p);
+                    }
+                    self.pool.join();
+                }
+            }
+        }
+
+        if let Some(p) = (0..n).find(|p| !done[*p].load(Ordering::Acquire)) {
+            let last = errs.lock().unwrap()[p].take().unwrap_or_else(|| "never completed".into());
+            return Err(JobError::TaskFailed {
+                partition: p,
+                attempts: cfg.max_retries + 1,
+                last,
+            });
+        }
+        Ok(combiners
+            .iter()
+            .filter_map(|slot| slot.lock().unwrap().take())
+            .collect())
     }
 
     /// Run one stage of `n` partition-indexed tasks with retry +
@@ -512,5 +645,37 @@ mod tests {
         let mut bd = Breakdown::new();
         let (_, parts) = sc.aggregate(&FedAvg, "/rounds/0/updates/", &cfg, &mut bd).unwrap();
         assert_eq!(parts, 5);
+    }
+
+    #[test]
+    fn combiner_cuts_driver_merge_to_executor_count() {
+        // 8 partitions over 2 executors: at most 2 partials reach the
+        // driver; the other ≥6 merged executor-locally (the shuffle cut).
+        let (sc, updates, _td) = setup(16, 150);
+        let cfg = JobConfig { partitions: Some(8), ..Default::default() };
+        let mut bd = Breakdown::new();
+        let (got, parts) = sc.aggregate(&FedAvg, "/rounds/0/updates/", &cfg, &mut bd).unwrap();
+        assert_eq!(parts, 8);
+        let mut bd2 = Breakdown::new();
+        let want = SerialEngine::unbounded().aggregate(&FedAvg, &updates, &mut bd2).unwrap();
+        all_close(&got, &want, 1e-4, 1e-5).unwrap();
+        let counters = sc.counters.lock().unwrap();
+        let partials = counters.get("combiner_partials");
+        assert!((1..=2).contains(&partials), "{partials} partials from 2 executors");
+        assert_eq!(counters.get("combiner_saved"), 8 - partials);
+    }
+
+    #[test]
+    fn combiner_preserves_results_under_speculation_and_retry() {
+        // Speculative duplicates must never double-fold a partition into
+        // the executor combiner (exactly-once is enforced under the slot
+        // lock).
+        let (sc, updates, _td) = setup(10, 90);
+        let cfg = JobConfig { speculation: true, cache: false, ..Default::default() };
+        let mut bd = Breakdown::new();
+        let (got, _) = sc.aggregate(&IterAvg, "/rounds/0/updates/", &cfg, &mut bd).unwrap();
+        let mut bd2 = Breakdown::new();
+        let want = SerialEngine::unbounded().aggregate(&IterAvg, &updates, &mut bd2).unwrap();
+        all_close(&got, &want, 1e-4, 1e-5).unwrap();
     }
 }

@@ -170,6 +170,61 @@ mod tests {
     }
 
     #[test]
+    fn handler_folds_uploads_on_receipt() {
+        // The O(C) ingest shape at the socket layer: the handler folds
+        // every Upload into a shared StreamingFold as it is read off the
+        // wire, instead of parking K update buffers until aggregation.
+        use crate::engine::StreamingFold;
+        use crate::fusion::FedAvg;
+        use crate::memsim::MemoryBudget;
+
+        let budget = MemoryBudget::new(1 << 20);
+        let fold = Arc::new(Mutex::new(
+            StreamingFold::new(&FedAvg, 1, budget.clone()).unwrap(),
+        ));
+        let f2 = fold.clone();
+        let handle = NetServer::serve(
+            "127.0.0.1:0",
+            Arc::new(move |m: Message| match m {
+                Message::Upload(u) => match f2.lock().unwrap().fold(&FedAvg, &u) {
+                    Ok(()) => Message::Ack { redirect_to_dfs: false },
+                    Err(e) => Message::Error(e.to_string()),
+                },
+                other => other,
+            }),
+        )
+        .unwrap();
+
+        let addr = handle.addr().to_string();
+        const LEN: usize = 256;
+        std::thread::scope(|s| {
+            for p in 0..16u64 {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut c = NetClient::connect(&addr).unwrap();
+                    let u = ModelUpdate::new(p, 1.0, 0, vec![p as f32; LEN]);
+                    let r = c.call(&Message::Upload(u)).unwrap();
+                    assert_eq!(r, Message::Ack { redirect_to_dfs: false });
+                });
+            }
+        });
+
+        // resident state after 16 network ingests: ONE C-sized accumulator
+        assert_eq!(budget.in_use(), (LEN * 4) as u64);
+        let done = {
+            let mut guard = fold.lock().unwrap();
+            std::mem::replace(
+                &mut *guard,
+                StreamingFold::new(&FedAvg, 1, MemoryBudget::unbounded()).unwrap(),
+            )
+        };
+        assert_eq!(done.folded(), 16);
+        let out = done.finish(&FedAvg).unwrap();
+        // mean of 0..16 = 7.5 in every coordinate
+        assert!(out.iter().all(|v| (v - 7.5).abs() < 1e-3), "{:?}", &out[..4]);
+    }
+
+    #[test]
     fn persistent_connection_multiple_calls() {
         let handle = NetServer::serve(
             "127.0.0.1:0",

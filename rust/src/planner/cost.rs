@@ -59,6 +59,15 @@ impl PricingModel {
     pub fn distributed(&self, latency_s: f64, executors: usize) -> f64 {
         latency_s * (self.node_usd_per_s + executors as f64 * self.executor_usd_per_s)
     }
+
+    /// Dollar cost of the streaming-fold plan: ingest overlaps the O(C)
+    /// fold on the aggregator node alone — no store hop, no executor
+    /// containers — so the plan occupies exactly node-seconds.  This is
+    /// what makes streaming strictly cheaper than MapReduce for every
+    /// round both can run.
+    pub fn streaming(&self, latency_s: f64) -> f64 {
+        self.single_node(latency_s)
+    }
 }
 
 #[cfg(test)]
@@ -79,6 +88,13 @@ mod tests {
         let p = PricingModel::default();
         assert!(p.distributed(10.0, 1) > p.single_node(10.0));
         assert!(p.distributed(10.0, 8) > p.distributed(10.0, 2));
+    }
+
+    #[test]
+    fn streaming_occupies_node_only() {
+        let p = PricingModel::default();
+        assert_eq!(p.streaming(10.0), p.single_node(10.0));
+        assert!(p.streaming(10.0) < p.distributed(10.0, 1));
     }
 
     #[test]

@@ -6,8 +6,10 @@
 //! the either/or decision with explicit plan enumeration and pricing:
 //!
 //! 1. **Enumerate** every way the round could run: the serial, parallel
-//!    and XLA single-node engines (when the round fits node memory), plus
-//!    the distributed MapReduce path at every executor count
+//!    and XLA single-node engines (when the round fits node memory), the
+//!    streaming fold (when the algorithm decomposes and its O(C) working
+//!    set fits — feasible far past the buffered party ceiling), plus the
+//!    distributed MapReduce path at every executor count
 //!    k ∈ {1..max_executors};
 //! 2. **Price** each candidate with the calibrated [`CostModel`] constants
 //!    (per-byte fuse throughput, DFS bandwidth, task overhead, container
@@ -47,6 +49,10 @@ pub enum PlanKind {
     Parallel,
     /// Single-node AOT Pallas/XLA hot path.
     Xla,
+    /// Single-node streaming fold: updates fold into an O(C) accumulator
+    /// on arrival, so the plan is feasible past the buffered party
+    /// ceiling and ingest overlaps compute.
+    Streaming,
     /// MapReduce over the DFS with this many executor containers.
     Distributed { executors: usize },
 }
@@ -58,6 +64,7 @@ impl PlanKind {
             PlanKind::Serial => "serial",
             PlanKind::Parallel => "parallel",
             PlanKind::Xla => "xla",
+            PlanKind::Streaming => "streaming",
             PlanKind::Distributed { .. } => "mapreduce",
         }
     }
@@ -160,8 +167,11 @@ pub struct DispatchPlanner {
     cluster: VirtualCluster,
     pricing: PricingModel,
     cfg: PlannerConfig,
-    /// Observed/predicted latency correction for single-node plans.
+    /// Observed/predicted latency correction for buffered single-node plans.
     corr_single: Ewma,
+    /// Observed/predicted latency correction for the streaming-fold plan
+    /// (its own family: throughput is ingest-coupled, unlike batch).
+    corr_stream: Ewma,
     /// Observed/predicted latency correction for distributed plans.
     corr_dist: Ewma,
     ledger: Vec<RoundCalibration>,
@@ -181,6 +191,7 @@ impl DispatchPlanner {
             pricing,
             cfg,
             corr_single: Ewma::new(beta),
+            corr_stream: Ewma::new(beta),
             corr_dist: Ewma::new(beta),
             ledger: Vec::new(),
         }
@@ -213,6 +224,16 @@ impl DispatchPlanner {
         }
     }
 
+    /// The learned correction for a specific plan kind (streaming has its
+    /// own EWMA family alongside single-node and distributed).
+    pub fn correction_for(&self, kind: PlanKind) -> f64 {
+        match kind {
+            PlanKind::Distributed { .. } => self.corr_dist.value_or(1.0),
+            PlanKind::Streaming => self.corr_stream.value_or(1.0),
+            _ => self.corr_single.value_or(1.0),
+        }
+    }
+
     /// Full predicted-vs-observed history, oldest first.
     pub fn ledger(&self) -> &[RoundCalibration] {
         &self.ledger
@@ -231,7 +252,7 @@ impl DispatchPlanner {
         algo: &dyn FusionAlgorithm,
         current_executors: usize,
     ) -> RoundPlan {
-        let class = self.classifier.classify(update_bytes, parties, algo);
+        let class = self.classifier.classify_with_streaming(update_bytes, parties, algo);
         let total_bytes = update_bytes as f64 * parties as f64;
         let mut candidates = Vec::new();
 
@@ -272,6 +293,23 @@ impl DispatchPlanner {
                     cost: PlanCost::new(xla, self.pricing.single_node(xla)),
                 });
             }
+        }
+
+        // The streaming fold is feasible whenever the algorithm decomposes
+        // and its O(C) working set fits the node — including past the
+        // buffered party ceiling (that is the class it unlocks).  Wall
+        // time is max(arrival span, fold throughput): ingest overlaps
+        // compute, and no store hop is paid.  Only the node is occupied,
+        // so cost is node-rate × latency.
+        if self.classifier.streaming_feasible(update_bytes, algo) {
+            let stream = self.corr_stream.value_or(1.0)
+                * self
+                    .cluster
+                    .streaming_time(update_bytes, parties, self.cfg.node_cores.max(1));
+            candidates.push(CandidatePlan {
+                kind: PlanKind::Streaming,
+                cost: PlanCost::new(stream, self.pricing.streaming(stream)),
+            });
         }
 
         // The distributed path is always available (it is the only path
@@ -342,10 +380,10 @@ impl DispatchPlanner {
         // feeding the raw ratio back would converge to the *square root*
         // of the true miscalibration.  Updating toward corr × ratio makes
         // the fixed point exactly "predicted == observed".
-        let corr = if chosen.kind.is_distributed() {
-            &mut self.corr_dist
-        } else {
-            &mut self.corr_single
+        let corr = match chosen.kind {
+            PlanKind::Distributed { .. } => &mut self.corr_dist,
+            PlanKind::Streaming => &mut self.corr_stream,
+            _ => &mut self.corr_single,
         };
         let target = (corr.value_or(1.0) * ratio).clamp(0.05, 20.0);
         corr.observe(target);
@@ -406,19 +444,35 @@ mod tests {
     }
 
     #[test]
-    fn large_round_has_only_distributed_candidates() {
+    fn spilling_round_streams_instead_of_buffering() {
         let p = planner(DispatchPolicy::MinLatency);
-        // 30 000 × 4.6 MB × dup 2.0 × headroom 1.1 ≈ 303 GB > 170 GB
+        // 30 000 × 4.6 MB × dup 2.0 × headroom 1.1 ≈ 303 GB > 170 GB: the
+        // buffered engines are out, but the O(C) fold fits easily.
         let plan = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        assert_eq!(plan.class, WorkloadClass::Streaming);
+        assert!(plan.candidates.iter().all(|c| matches!(
+            c.kind,
+            PlanKind::Streaming | PlanKind::Distributed { .. }
+        )));
+        assert!(plan.candidates.iter().any(|c| c.kind == PlanKind::Streaming));
+    }
+
+    #[test]
+    fn holistic_large_round_has_only_distributed_candidates() {
+        use crate::fusion::CoordMedian;
+        let p = planner(DispatchPolicy::MinLatency);
+        // median cannot stream, so past the ceiling only MapReduce remains
+        let plan = p.plan(UPDATE_46MB, 30_000, &CoordMedian, 0);
         assert_eq!(plan.class, WorkloadClass::Large);
         assert!(plan.candidates.iter().all(|c| c.kind.is_distributed()));
         assert!(plan.chosen.kind.is_distributed());
     }
 
     #[test]
-    fn exact_s_equals_m_boundary_goes_distributed() {
+    fn exact_s_equals_m_boundary_excludes_buffered_plans() {
         // Algorithm 1's test is strict: S < M.  At S == M exactly the
-        // single-node plans must NOT be enumerated.
+        // buffered single-node plans must NOT be enumerated; the round
+        // streams (FedAvg decomposes and the O(C) fold fits).
         let p = DispatchPlanner::new(
             WorkloadClassifier::new(1000, 1.0),
             VirtualCluster::paper(CostModel::nominal()),
@@ -427,8 +481,47 @@ mod tests {
         );
         // 2 × 250 B × dup 2.0 (FedAvg) × headroom 1.0 = 1000 = M
         let plan = p.plan(250, 2, &FedAvg, 0);
-        assert_eq!(plan.class, WorkloadClass::Large);
-        assert!(plan.candidates.iter().all(|c| c.kind.is_distributed()));
+        assert_eq!(plan.class, WorkloadClass::Streaming);
+        assert!(!plan.candidates.iter().any(|c| matches!(
+            c.kind,
+            PlanKind::Serial | PlanKind::Parallel | PlanKind::Xla
+        )));
+    }
+
+    #[test]
+    fn streaming_selectable_under_all_policies_and_calibrated() {
+        // The acceptance bar: the streaming plan is enumerated and chosen
+        // under every policy for a past-the-ceiling decomposable round,
+        // and observe() calibrates its own EWMA family.
+        for policy in [
+            DispatchPolicy::MinLatency,
+            DispatchPolicy::MinCost,
+            DispatchPolicy::Balanced(0.5),
+        ] {
+            let p = planner(policy);
+            let plan = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+            // no store hop + ingest/compute overlap beats upload+MapReduce
+            // on latency, and node-only occupancy beats it on dollars
+            assert_eq!(plan.chosen.kind, PlanKind::Streaming, "{policy:?}");
+        }
+        let mut p = planner(DispatchPolicy::Balanced(0.5));
+        let before = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        // the box folds a fixed 2x slower than the uncorrected model
+        let truth = before.chosen.cost.latency_s * 2.0;
+        for round in 0..10 {
+            let plan = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+            p.observe(round, &plan.chosen, truth);
+        }
+        // the streaming family learned the 2x drift ...
+        assert!((p.correction_for(PlanKind::Streaming) - 2.0).abs() < 0.25);
+        let after = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        let stream = |pl: &RoundPlan| {
+            pl.candidates.iter().find(|c| c.kind == PlanKind::Streaming).unwrap().cost.latency_s
+        };
+        assert!(stream(&after) > stream(&before) * 1.8);
+        // ... without contaminating the other families
+        assert_eq!(p.correction(false), 1.0);
+        assert_eq!(p.correction(true), 1.0);
     }
 
     #[test]

@@ -3,8 +3,12 @@
 //! Request handling (per paper Fig 4 and §III-D3):
 //! * `Register`  → party joins the registry, learns the current round;
 //! * `Upload`    → small path: the update is ingested into the current
-//!   round's in-memory state (charged against the node budget); the Ack
-//!   carries the redirect flag when the *next* round is predicted Large;
+//!   round's in-memory state (charged against the node budget); on a
+//!   *streaming* round the handler folds the update into the O(C)
+//!   accumulator on receipt and frees its buffer instead of parking it;
+//!   the Ack carries the redirect flag when the *next* round is predicted
+//!   Large (streaming rounds keep the message-passing channel — that is
+//!   the Fig 1 ceiling lift);
 //! * `GetModel`  → returns the fused model once the round is published.
 //!
 //! Round progression is driven by the owner (examples / benches) via
@@ -59,10 +63,37 @@ impl FlServer {
         self.current_round.load(Ordering::Acquire)
     }
 
+    /// Build a round's state for its class.  Streaming rounds fold at
+    /// ingest (one O(C) reservation).
+    fn make_state(&self, round: u32, class: WorkloadClass) -> RoundState {
+        if class == WorkloadClass::Streaming {
+            let threads = self.service.config().node.cores.max(1);
+            match RoundState::new_streaming(
+                round,
+                class,
+                self.node_budget.clone(),
+                self.algo.clone(),
+                threads,
+            ) {
+                Ok(st) => return st,
+                // Unreachable today: `classify_full` returns Streaming only
+                // for decomposable algorithms, which is exactly the fold's
+                // construction precondition.  If the preconditions ever
+                // diverge, fall back to a buffered Large round — per-upload
+                // Acks then carry redirect_to_dfs, steering parties to the
+                // store channel that path expects.
+                Err(_) => {
+                    return RoundState::new(round, WorkloadClass::Large, self.node_budget.clone())
+                }
+            }
+        }
+        RoundState::new(round, class, self.node_budget.clone())
+    }
+
     fn open_round(&self, round: u32) -> Arc<RoundState> {
         let expected = self.registry.active_count().max(1);
-        let class = self.service.classify(self.update_bytes, expected, self.algo.as_ref());
-        let st = Arc::new(RoundState::new(round, class, self.node_budget.clone()));
+        let class = self.service.classify_full(self.update_bytes, expected, self.algo.as_ref());
+        let st = Arc::new(self.make_state(round, class));
         self.rounds.lock().unwrap().insert(round, st.clone());
         self.current_round.store(round, Ordering::Release);
         st
@@ -74,7 +105,7 @@ impl FlServer {
 
     /// Replace an (empty) round's state with a re-classified one.
     fn reopen_round(&self, round: u32, class: WorkloadClass) -> Arc<RoundState> {
-        let st = Arc::new(RoundState::new(round, class, self.node_budget.clone()));
+        let st = Arc::new(self.make_state(round, class));
         self.rounds.lock().unwrap().insert(round, st.clone());
         st
     }
@@ -100,7 +131,11 @@ impl FlServer {
                     self.algo.as_ref(),
                 );
                 match self.round_state(round) {
-                    Some(st) if st.class == WorkloadClass::Small => match st.ingest(u) {
+                    // Small rounds park the update; streaming rounds fold
+                    // it on receipt and free the buffer.  Either way a bad
+                    // update (wrong shape, wrong phase, OOM) is an error
+                    // REPLY, never a coordinator crash.
+                    Some(st) if st.class != WorkloadClass::Large => match st.ingest(u) {
                         Ok(_) => Message::Ack { redirect_to_dfs: redirect },
                         Err(e) => Message::Error(format!("ingest: {e}")),
                     },
@@ -135,9 +170,11 @@ impl FlServer {
         // the classification from the live registry as long as nothing has
         // been ingested yet.
         if st.collected() == 0 {
-            let class = self
-                .service
-                .classify(self.update_bytes, self.registry.active_count().max(expected).max(1), self.algo.as_ref());
+            let class = self.service.classify_full(
+                self.update_bytes,
+                self.registry.active_count().max(expected).max(1),
+                self.algo.as_ref(),
+            );
             if class != st.class {
                 st = self.reopen_round(round, class);
             }
@@ -148,11 +185,43 @@ impl FlServer {
                 while st.collected() < expected && Instant::now() < deadline {
                     std::thread::sleep(Duration::from_millis(2));
                 }
-                let updates = st.begin_aggregation();
+                let updates = st.begin_aggregation().map_err(ServiceError::Round)?;
                 if updates.is_empty() {
                     return Err(ServiceError::NoUpdates);
                 }
                 self.service.aggregate_small(self.algo.as_ref(), &updates, round)
+            }
+            WorkloadClass::Streaming => {
+                // Every received update is already folded into the O(C)
+                // accumulator; all that remains after the barrier is the
+                // finalize — ingest and compute overlapped.
+                let deadline = Instant::now() + timeout;
+                while st.collected() < expected && Instant::now() < deadline {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                if st.collected() == 0 {
+                    return Err(ServiceError::NoUpdates);
+                }
+                let mut bd = crate::metrics::Breakdown::new();
+                let t0 = Instant::now();
+                // the count comes back with the weights so a straggler
+                // folded right before the transition is in both
+                let (fused, parties) = st.finish_streaming().map_err(ServiceError::Round)?;
+                bd.add("reduce", t0.elapsed().as_secs_f64());
+                Ok((
+                    fused,
+                    ServiceReport {
+                        round,
+                        class: WorkloadClass::Streaming,
+                        engine: "streaming",
+                        parties,
+                        partitions: 0,
+                        executors: 0,
+                        breakdown: bd,
+                        monitor: None,
+                        predicted: None,
+                    },
+                ))
             }
             WorkloadClass::Large => {
                 let _ = st.begin_aggregation(); // no in-memory updates
@@ -160,7 +229,7 @@ impl FlServer {
                     .aggregate_large(self.algo.as_ref(), round, expected, self.update_bytes)
             }
         }?;
-        st.publish(result.0.clone());
+        st.publish(result.0.clone()).map_err(ServiceError::Round)?;
         self.open_round(round + 1);
         Ok(result)
     }
@@ -267,6 +336,63 @@ mod tests {
         assert_eq!(report.class, WorkloadClass::Large);
         assert_eq!(report.engine, "mapreduce");
         assert!(report.partitions >= 1);
+    }
+
+    #[test]
+    fn streaming_round_lifts_ceiling_over_tcp() {
+        // 64 KB node, 20 KB updates: 40 parties would need ~1.76 MB
+        // buffered, but the round streams — every TCP upload folds on
+        // receipt, peak node memory stays O(C), and no store/Spark is
+        // touched.
+        let update_len = 5_000usize;
+        let (server, _td) = make_server(64 << 10, (update_len * 4) as u64);
+        for p in 0..40u64 {
+            server.registry.join(p, 0, 10);
+        }
+        server.open_round(1); // re-classify against the registered fleet
+        let st = server.round_state(1).unwrap();
+        assert_eq!(st.class, WorkloadClass::Streaming);
+        assert!(st.is_streaming());
+
+        let handle = server.start("127.0.0.1:0").unwrap();
+        let addr = handle.addr().to_string();
+        std::thread::scope(|s| {
+            for p in 0..40u64 {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut c = NetClient::connect(&addr).unwrap();
+                    let mut party = SyntheticParty::new(p, 7);
+                    let u = party.make_update(1, update_len);
+                    match c.call(&Message::Upload(u)).unwrap() {
+                        // streaming keeps the message-passing channel
+                        Message::Ack { redirect_to_dfs } => assert!(!redirect_to_dfs),
+                        other => panic!("{other:?}"),
+                    }
+                });
+            }
+        });
+
+        let (fused, report) = server.run_round(40, Duration::from_secs(10)).unwrap();
+        assert_eq!(report.class, WorkloadClass::Streaming);
+        assert_eq!(report.engine, "streaming");
+        assert_eq!(report.parties, 40);
+        assert!(!server.service.spark_started());
+        // peak round memory: accumulator + one in-flight update, NOT 40×
+        assert!(
+            server.node_budget.high_water() <= 2 * (update_len as u64 * 4),
+            "peak {}",
+            server.node_budget.high_water()
+        );
+
+        // parity with the serial batch over the same update set
+        let us: Vec<ModelUpdate> = (0..40u64)
+            .map(|p| SyntheticParty::new(p, 7).make_update(1, update_len))
+            .collect();
+        let mut bd = Breakdown::new();
+        let want = crate::engine::SerialEngine::unbounded()
+            .aggregate(&FedAvg, &us, &mut bd)
+            .unwrap();
+        crate::util::prop::all_close(&fused, &want, 1e-3, 1e-4).unwrap();
     }
 
     #[test]

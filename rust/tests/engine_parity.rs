@@ -6,7 +6,8 @@
 
 use elastiagg::bag::BagContext;
 use elastiagg::dfs::{DfsClient, NameNode};
-use elastiagg::engine::{AggregationEngine, ParallelEngine, SerialEngine, XlaEngine};
+use elastiagg::engine::{AggregationEngine, ParallelEngine, SerialEngine, StreamingFold, XlaEngine};
+use elastiagg::memsim::MemoryBudget;
 use elastiagg::fusion::{by_name, FusionAlgorithm};
 use elastiagg::mapreduce::{scheduler::JobConfig, ExecutorConfig, SparkContext};
 use elastiagg::metrics::Breakdown;
@@ -115,6 +116,56 @@ fn parity_zeno_across_all_engines() {
 #[test]
 fn parity_krum_across_all_engines() {
     check_parity(by_name("krum").unwrap().as_ref(), 9, 600, 6);
+}
+
+#[test]
+fn streaming_fold_bit_comparable_with_serial_fedavg() {
+    // The streaming-fold acceptance bar: folding the SAME update sequence
+    // must be bit-identical to SerialEngine::aggregate (same algebra, same
+    // op order), for both the serial and the parameter-chunked fold.
+    let algo = by_name("fedavg").unwrap();
+    for (n, len, seed) in [(13usize, 3_000usize, 1u64), (9, 40_000, 2), (2, 1, 3)] {
+        let us = updates(seed, n, len);
+        let mut bd = Breakdown::new();
+        let want = SerialEngine::unbounded().aggregate(algo.as_ref(), &us, &mut bd).unwrap();
+        for threads in [1usize, 4] {
+            let mut f = StreamingFold::new(algo.as_ref(), threads, MemoryBudget::unbounded())
+                .unwrap();
+            for u in &us {
+                f.fold(algo.as_ref(), u).unwrap();
+            }
+            let got = f.finish(algo.as_ref()).unwrap();
+            assert_eq!(got, want, "threads={threads} n={n} len={len}");
+        }
+    }
+}
+
+#[test]
+fn streaming_partials_merge_out_of_order() {
+    // Two partial folds built independently (the combiner shape) merge in
+    // either order and agree with the one-shot serial result; merging
+    // regroups float additions, so the bar is all_close, exactly like the
+    // fusion combine-associativity property.
+    let algo = by_name("fedavg").unwrap();
+    let us = updates(21, 12, 2_500);
+    let mut bd = Breakdown::new();
+    let want = SerialEngine::unbounded().aggregate(algo.as_ref(), &us, &mut bd).unwrap();
+
+    let build = |range: &[ModelUpdate]| {
+        let mut f = StreamingFold::new(algo.as_ref(), 1, MemoryBudget::unbounded()).unwrap();
+        for u in range {
+            f.fold(algo.as_ref(), u).unwrap();
+        }
+        f
+    };
+    // forward: first-half absorbs second-half
+    let mut a = build(&us[..7]);
+    a.merge(algo.as_ref(), build(&us[7..])).unwrap();
+    all_close(&a.finish(algo.as_ref()).unwrap(), &want, 1e-4, 1e-5).unwrap();
+    // out of order: the LATER partial absorbs the earlier one
+    let mut b = build(&us[7..]);
+    b.merge(algo.as_ref(), build(&us[..7])).unwrap();
+    all_close(&b.finish(algo.as_ref()).unwrap(), &want, 1e-4, 1e-5).unwrap();
 }
 
 #[test]

@@ -54,13 +54,16 @@ fn make_service(root: &std::path::Path, mem: u64, with_xla: bool) -> AdaptiveSer
 #[test]
 fn multi_round_server_with_growing_fleet() {
     let root = tempdir();
-    let update_len = 5_000usize;
+    let update_len = 5_000usize; // 20 KB updates
     let service = make_service(&root, 300 << 10, true); // 300 KB node
     let server = FlServer::new(service, Arc::new(FedAvg), (update_len * 4) as u64);
     let handle = server.start("127.0.0.1:0").unwrap();
     let addr = handle.addr().to_string();
 
-    // rounds 0..2 small (4 parties), round 3 large (40 parties)
+    // rounds 0..2 small (4 parties); round 3 the fleet grows to 40: the
+    // buffered set (40 × 20 KB × dup) would trip the 300 KB node, but
+    // FedAvg decomposes so the round STREAMS over the same TCP channel —
+    // no store hop, no Spark — in O(C) node memory.
     for round in 0..4u32 {
         let parties: u64 = if round < 3 { 4 } else { 40 };
         // register fleet
@@ -70,27 +73,27 @@ fn multi_round_server_with_growing_fleet() {
                 c.call(&Message::Register { party: p }).unwrap();
             }
         }
-        let expect_class = if round < 3 { WorkloadClass::Small } else { WorkloadClass::Large };
-        if expect_class == WorkloadClass::Small {
-            std::thread::scope(|s| {
-                for p in 0..parties {
-                    let addr = addr.clone();
-                    s.spawn(move || {
-                        let mut c = NetClient::connect(&addr).unwrap();
-                        let mut party = SyntheticParty::new(p, round as u64);
-                        let u = party.make_update(round, update_len);
-                        let r = c.call(&Message::Upload(u)).unwrap();
-                        assert!(matches!(r, Message::Ack { .. }), "{r:?}");
-                    });
-                }
-            });
-        } else {
-            let dfs = server.service.dfs().clone();
-            let mut bd = Breakdown::new();
+        let expect_class =
+            if round < 3 { WorkloadClass::Small } else { WorkloadClass::Streaming };
+        std::thread::scope(|s| {
             for p in 0..parties {
-                let mut party = SyntheticParty::new(p, round as u64);
-                let u = party.make_update(round, update_len);
-                party.ship(&u, &Transport::Dfs, Some(&dfs), &mut bd).unwrap();
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut c = NetClient::connect(&addr).unwrap();
+                    let mut party = SyntheticParty::new(p, round as u64);
+                    let u = party.make_update(round, update_len);
+                    let r = c.call(&Message::Upload(u)).unwrap();
+                    assert!(matches!(r, Message::Ack { .. }), "{r:?}");
+                });
+            }
+        });
+        if round == 2 {
+            // the fleet grows BEFORE round 3 opens (§III-D3 preemptive
+            // transition): run_round(2) will open round 3 against the
+            // 40-party registry, classifying it Streaming up front
+            let mut c = NetClient::connect(&addr).unwrap();
+            for p in 4..40u64 {
+                c.call(&Message::Register { party: p }).unwrap();
             }
         }
         let (fused, report) = server.run_round(parties as usize, Duration::from_secs(10)).unwrap();
@@ -99,6 +102,33 @@ fn multi_round_server_with_growing_fleet() {
         assert_eq!(report.parties, parties as usize);
     }
     assert_eq!(server.current_round(), 4);
+    // the streaming round never needed the distributed substrate
+    assert!(!server.service.spark_started());
+}
+
+#[test]
+fn holistic_spill_round_still_goes_distributed() {
+    use elastiagg::fusion::CoordMedian;
+    let root = tempdir();
+    let update_len = 5_000usize;
+    let service = make_service(&root, 300 << 10, false);
+    let server = FlServer::new(service, Arc::new(CoordMedian), (update_len * 4) as u64);
+    // 40 registered parties + a holistic fusion: streaming is off the
+    // table, so the round classifies Large and runs via store + MapReduce.
+    for p in 0..40u64 {
+        server.registry.join(p, 0, 10);
+    }
+    let dfs = server.service.dfs().clone();
+    let mut bd = Breakdown::new();
+    for p in 0..40u64 {
+        let mut party = SyntheticParty::new(p, 3);
+        let u = party.make_update(0, update_len);
+        party.ship(&u, &Transport::Dfs, Some(&dfs), &mut bd).unwrap();
+    }
+    let (fused, report) = server.run_round(40, Duration::from_secs(10)).unwrap();
+    assert_eq!(fused.len(), update_len);
+    assert_eq!(report.class, WorkloadClass::Large);
+    assert_eq!(report.engine, "mapreduce");
     assert!(server.service.spark_started());
 }
 
