@@ -76,6 +76,7 @@ fn main() {
             max_executors: MAX_K,
             cores_per_executor: 3, // the paper's 3-core containers
             node_cores: 64,
+            ingest_lanes: 64, // streaming priced at the sharded width
             xla_available: true,
             feedback_beta: 0.3,
         },

@@ -60,6 +60,14 @@ pub struct RoundLog {
     pub eval_nll: f32,
     pub eval_acc: f32,
     pub agg_seconds: f64,
+    /// Wire bytes the round's party uploads put on the ingest path
+    /// (update frames, header included) — the transfer volume the
+    /// planner's arrival-span term models.  On the TCP path the server
+    /// counts this for real (`ServerHandle::bytes_in`); the in-process
+    /// driver computes it from the same wire encoding.
+    pub bytes_in: u64,
+    /// Wire bytes of the fused-model broadcast back to the parties.
+    pub bytes_out: u64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -165,6 +173,10 @@ pub fn federated_train(cfg: &TrainConfig, dfs_root: &std::path::Path) -> TrainLo
             }
         };
         let agg_seconds = t0.elapsed().as_secs_f64();
+        // Round transfer volumes (frame header = 5 bytes): uploads in,
+        // fused-model broadcast out — feeds arrival-span calibration.
+        let bytes_in: u64 = updates.iter().map(|u| 5 + u.wire_size() as u64).sum();
+        let bytes_out = cfg.parties as u64 * (5 + 4 + fused.len() as u64 * 4);
         global = fused;
         // Feed the observation back — but only when the shadow plan's path
         // family matches what the classifier actually dispatched, so the
@@ -182,8 +194,12 @@ pub fn federated_train(cfg: &TrainConfig, dfs_root: &std::path::Path) -> TrainLo
         let (nll, acc) = LocalTrainer::evaluate(&rtm, &global, &ds, &mut eval_rng).unwrap();
         if cfg.print_every > 0 && round % cfg.print_every == 0 {
             println!(
-                "round {round:>3}  class={:?}({})  local_loss={mean_local_loss:.4}  eval_nll={nll:.4}  acc={acc:.3}  agg={:.1} ms",
-                class, report.engine, agg_seconds * 1e3
+                "round {round:>3}  class={:?}({})  local_loss={mean_local_loss:.4}  eval_nll={nll:.4}  acc={acc:.3}  agg={:.1} ms  in={} out={}",
+                class,
+                report.engine,
+                agg_seconds * 1e3,
+                crate::util::fmt::bytes(bytes_in),
+                crate::util::fmt::bytes(bytes_out)
             );
             match &cal {
                 Some(cal) => println!("           {}", cal.log_line()),
@@ -202,6 +218,8 @@ pub fn federated_train(cfg: &TrainConfig, dfs_root: &std::path::Path) -> TrainLo
             eval_nll: nll,
             eval_acc: acc,
             agg_seconds,
+            bytes_in,
+            bytes_out,
         });
     }
     log

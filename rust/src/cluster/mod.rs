@@ -115,18 +115,35 @@ impl VirtualCluster {
     }
 
     /// Virtual seconds for a streaming-fold round: every update folds into
-    /// the O(C) accumulator *as it arrives*, so ingest and compute overlap
-    /// and wall time is max(arrival span, fold throughput) plus the drain
-    /// of the final update.  Contrast with the buffered single-node path
-    /// (collection not on the aggregation clock, but O(K·C) memory) and
-    /// the distributed path (store upload on the critical path).
-    pub fn streaming_time(&self, update_bytes: u64, n: usize, cores: usize) -> f64 {
+    /// a shard-local O(C) accumulator *as it arrives*, so ingest and
+    /// compute overlap and wall time is max(arrival span, fold throughput)
+    /// plus the drain (the S-way partial merge and the finalize).
+    ///
+    /// `lanes` is the server's sharded-ingest width (S): with one lane the
+    /// folds serialise on a single lock (the pre-shard design); with S
+    /// lanes up to min(S, cores) connection handlers fold concurrently,
+    /// scaling throughput until the same memory-bandwidth ceiling that
+    /// caps the batch parallel engine (`parallel_bw_cap` — folding is a
+    /// streaming op either way).  Contrast with the buffered single-node
+    /// path (collection not on the aggregation clock, but O(K·C) memory)
+    /// and the distributed path (store upload on the critical path).  The
+    /// planner's per-round EWMA correction (`observe_round`) calibrates
+    /// the whole expression against the box's observed wall-clock.
+    pub fn streaming_time(&self, update_bytes: u64, n: usize, cores: usize, lanes: usize) -> f64 {
         if n == 0 {
             return 0.0;
         }
         let ingest = self.streaming_ingest_span(update_bytes, n);
-        let fold = self.single_node_time(update_bytes, n, cores, EngineKind::Parallel, 1.0);
-        ingest.max(fold) + update_bytes as f64 / self.cost.fuse_bps
+        let lanes = lanes.clamp(1, cores.max(1));
+        let total = update_bytes as f64 * n as f64;
+        // Node-side per-update work that serialises on one lock lane:
+        // wire decode (CRC + in-place view) plus the fold arithmetic.
+        let per_lane = total / self.cost.fuse_bps + self.cost.decode_bytes(total);
+        let speedup = (lanes as f64).min(self.cost.parallel_bw_cap);
+        let fold = per_lane / speedup;
+        // Drain: merge the S lane partials, then finalize — O(C) each.
+        let drain = (lanes as f64 + 1.0) * update_bytes as f64 / self.cost.fuse_bps;
+        ingest.max(fold) + drain
     }
 
     // ---------------------------------------------------------------
@@ -288,13 +305,43 @@ mod tests {
         let v = vc();
         let u = (4.6 * 1024.0 * 1024.0) as u64;
         // 30 000 parties: the 1 GbE switch is the bottleneck, not the fold
-        let t = v.streaming_time(u, 30_000, 64);
+        let t = v.streaming_time(u, 30_000, 64, 64);
         let ingest = v.streaming_ingest_span(u, 30_000);
         assert!(t >= ingest && t < ingest * 1.01, "{t} vs {ingest}");
         // and the overlap means it beats upload-then-MapReduce end to end
         let dist = v.client_write_time(u, 30_000) + v.distributed_breakdown(u, 30_000, true).total();
         assert!(t < dist, "streaming {t} must beat store+job {dist}");
-        assert_eq!(v.streaming_time(u, 0, 64), 0.0);
+        assert_eq!(v.streaming_time(u, 0, 64, 64), 0.0);
+    }
+
+    #[test]
+    fn streaming_lanes_term_prices_ingest_parallelism() {
+        // On the paper's 1 GbE switch streaming is ingest-bound and the
+        // lanes term is moot; on a fast edge link (25 GbE) the node-side
+        // decode+fold becomes the bottleneck, and one lock lane must be
+        // priced slower than the sharded server, monotonically in S up to
+        // the bandwidth cap.
+        let spec = crate::config::ClusterSpec {
+            client_link_bps: 25e9 / 8.0,
+            ..crate::config::ClusterSpec::default()
+        };
+        let v = VirtualCluster::new(spec, CostModel::nominal());
+        let u = 1u64 << 20;
+        let n = 2_000;
+        let one = v.streaming_time(u, n, 64, 1);
+        let two = v.streaming_time(u, n, 64, 2);
+        let many = v.streaming_time(u, n, 64, 64);
+        assert!(two < one, "{two} !< {one}");
+        // wide sharding still beats the lock lane, though its S-way merge
+        // drain grows with the lane count
+        assert!(many < one, "{many} !< {one}");
+        // lanes are clamped by the core count: a 1-core node cannot fold
+        // in parallel no matter how many shards it configures
+        assert_eq!(v.streaming_time(u, n, 1, 64), v.streaming_time(u, n, 1, 1));
+        // the 1 GbE paper geometry stays ingest-bound regardless of lanes
+        let p = vc();
+        let span = p.streaming_ingest_span(u, n);
+        assert!(p.streaming_time(u, n, 64, 64) >= span);
     }
 
     #[test]

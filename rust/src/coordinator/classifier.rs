@@ -81,9 +81,14 @@ impl WorkloadClassifier {
         }
     }
 
-    /// Resident bytes of the streaming-fold path: the O(C) running
-    /// accumulator plus one in-flight update buffer, inflated by headroom.
-    /// Independent of the party count — that is the whole point.
+    /// Resident bytes of the streaming-fold path's *minimum feasible
+    /// shape*: one O(C) running accumulator plus one in-flight update
+    /// buffer, inflated by headroom.  Independent of the party count —
+    /// that is the whole point.  The sharded server prefers S ≈ cores
+    /// lane accumulators (S·O(C)) but its budget fallback degrades
+    /// gracefully to this single-lane shape, so feasibility deliberately
+    /// guarantees only the floor; the planner separately caps the lane
+    /// width it prices at what the budget admits.
     pub fn streaming_required_bytes(&self, update_bytes: u64) -> u64 {
         (update_bytes as f64 * 2.0 * self.headroom) as u64
     }

@@ -9,20 +9,25 @@
 //!   engine: K reservations of O(C) each, the paper's Fig 1 party
 //!   ceiling;
 //! * **streaming** ([`RoundState::new_streaming`]) — each arriving update
-//!   folds into an O(C) [`StreamingFold`] accumulator and its buffer is
-//!   released immediately: ONE reservation against the node budget (plus
-//!   one transient in-flight update), independent of the party count.
+//!   folds into one of S shard-local O(C) accumulators
+//!   ([`ShardedFold`]) and its buffer is released immediately: at most
+//!   S reservations against the node budget (plus the transient in-flight
+//!   updates), independent of the party count.  The round-level mutex is
+//!   held only long enough to grab the shard set — concurrent connection
+//!   handlers fold in parallel, contending 1/S as often as the global
+//!   lock they replaced.
 //!
 //! Phase misuse and shape mismatches surface as [`RoundError`] — a
 //! misbehaving party can no longer crash the coordinator with an assert.
 
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::WorkloadClass;
-use crate::engine::{EngineError, StreamingFold};
+use crate::engine::{EngineError, FoldError, ShardedFold};
 use crate::fusion::{FusionAlgorithm, FusionError};
 use crate::memsim::{MemoryBudget, OutOfMemory, Reservation};
-use crate::tensorstore::ModelUpdate;
+use crate::tensorstore::{ModelUpdate, ModelUpdateView};
 
 /// Lifecycle phase of a round.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -96,9 +101,12 @@ enum IngestState {
         /// Parameter count fixed by the first ingested update.
         len: Option<usize>,
     },
-    /// Streaming path: one O(C) fold; buffers released on arrival.
+    /// Streaming path: S shard-local O(C) folds; buffers released on
+    /// arrival.  Behind an `Arc` so the hot path clones the handle under
+    /// the state lock and folds *outside* it — the `ShardedFold`'s seal
+    /// makes the drop of the lock safe against a racing finish.
     Streaming {
-        fold: StreamingFold,
+        fold: Arc<ShardedFold>,
         algo: Arc<dyn FusionAlgorithm>,
     },
     /// Updates (or the fold) have been handed to the aggregation step.
@@ -128,17 +136,19 @@ impl RoundState {
         }
     }
 
-    /// A streaming round: arriving updates fold into an O(C) accumulator
-    /// (chunked across `threads` workers) and are released immediately.
-    /// Fails for holistic algorithms, which cannot stream.
+    /// A streaming round: arriving updates fold into one of `lanes`
+    /// shard-local O(C) accumulators and are released immediately; lanes
+    /// fold concurrently (one per ingesting connection, typically sized to
+    /// the node's cores).  Fails for holistic algorithms, which cannot
+    /// stream.
     pub fn new_streaming(
         round: u32,
         class: WorkloadClass,
         budget: MemoryBudget,
         algo: Arc<dyn FusionAlgorithm>,
-        threads: usize,
+        lanes: usize,
     ) -> Result<RoundState, EngineError> {
-        let fold = StreamingFold::new(algo.as_ref(), threads, budget.clone())?;
+        let fold = Arc::new(ShardedFold::new(algo.as_ref(), lanes, budget.clone())?);
         Ok(RoundState {
             round,
             class,
@@ -165,13 +175,128 @@ impl RoundState {
         Ok(())
     }
 
+    /// Grab the streaming shard set without holding the state lock past
+    /// the clone — the fold itself runs lock-free with respect to the
+    /// round (only the chosen shard's lane lock is taken).
+    fn streaming_lane(
+        &self,
+    ) -> Result<Option<(Arc<ShardedFold>, Arc<dyn FusionAlgorithm>)>, RoundError> {
+        match &*self.ingest.lock().unwrap() {
+            IngestState::Streaming { fold, algo } => Ok(Some((fold.clone(), algo.clone()))),
+            IngestState::Buffered { .. } => Ok(None),
+            // Drained only happens once aggregation started; never lock
+            // `phase` here (lock order is phase -> ingest elsewhere).
+            IngestState::Drained => Err(RoundError::WrongPhase {
+                round: self.round,
+                expected: RoundPhase::Collecting,
+                actual: RoundPhase::Aggregating,
+            }),
+        }
+    }
+
+    /// Map a sharded-fold rejection onto the round's protocol errors: a
+    /// seal means `finish_streaming` won the race — the same straggler
+    /// story as an upload after `begin_aggregation`.
+    fn map_fold_err(&self, e: FoldError) -> RoundError {
+        match e {
+            FoldError::Sealed => RoundError::WrongPhase {
+                round: self.round,
+                expected: RoundPhase::Collecting,
+                actual: self.phase(),
+            },
+            FoldError::Engine(e) => e.into(),
+        }
+    }
+
+    /// How long a streaming ingest waits out *transient* memory pressure
+    /// (concurrent in-flight frames racing for the same headroom) before
+    /// reporting OOM: under the thundering herd the edge node applies
+    /// backpressure — the upload completes a moment later — instead of
+    /// failing work that fits as soon as a neighbouring fold drains.  A
+    /// genuinely over-budget round still errors (fast when the update
+    /// can never fit, after the grace window otherwise).
+    const INGEST_BACKPRESSURE: Duration = Duration::from_secs(2);
+
+    /// Streaming-side fold with the in-flight charge and backpressure:
+    /// reserve the frame's bytes, run the fold, retry transient OOMs
+    /// until the grace window closes.
+    fn fold_streaming<F>(&self, fold: &ShardedFold, bytes: u64, fold_once: F) -> Result<usize, RoundError>
+    where
+        F: Fn() -> Result<u64, FoldError>,
+    {
+        // Fail fast when no amount of waiting can help: the frame alone
+        // exceeds the budget, or no lane holds an accumulator yet and
+        // in-flight + a fresh O(C) scratch can never coexist (waiting
+        // would only park a connection thread for the whole grace window).
+        if bytes > self.budget.budget()
+            || (!fold.has_active_lane() && bytes.saturating_mul(2) > self.budget.budget())
+        {
+            return Err(RoundError::Memory(OutOfMemory {
+                requested: bytes,
+                in_use: self.budget.in_use(),
+                budget: self.budget.budget(),
+            }));
+        }
+        let deadline = Instant::now() + Self::INGEST_BACKPRESSURE;
+        loop {
+            // Charge the in-flight buffer for the duration of the fold
+            // only: steady-state resident is the lane accumulators plus
+            // the frames currently being folded.  `would_fit` gates the
+            // spin so a backpressure wait doesn't spam OOM events.
+            let last = if self.budget.would_fit(bytes) {
+                match self.budget.reserve(bytes) {
+                    Ok(inflight) => match fold_once() {
+                        Ok(n) => return Ok(n as usize),
+                        Err(FoldError::Engine(EngineError::Memory(m))) => {
+                            drop(inflight);
+                            RoundError::Memory(m)
+                        }
+                        Err(e) => return Err(self.map_fold_err(e)),
+                    },
+                    Err(oom) => RoundError::Memory(oom),
+                }
+            } else {
+                RoundError::Memory(OutOfMemory {
+                    requested: bytes,
+                    in_use: self.budget.in_use(),
+                    budget: self.budget.budget(),
+                })
+            };
+            if Instant::now() >= deadline {
+                return Err(last);
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
     /// Ingest an update on the message-passing path.  Buffered rounds
     /// charge node memory per update — the exact mechanism behind the
     /// paper's Fig 1 party ceiling; streaming rounds fold the update into
-    /// the running accumulator and release its buffer before returning.
+    /// a shard-local accumulator and release its buffer before returning.
     /// Both paths shape-check against the round's first update.
     pub fn ingest(&self, u: ModelUpdate) -> Result<usize, RoundError> {
         self.require_phase(RoundPhase::Collecting)?;
+        if let Some((fold, algo)) = self.streaming_lane()? {
+            let n = self.fold_streaming(&fold, u.mem_bytes(), || fold.fold(algo.as_ref(), &u))?;
+            drop(u); // buffer released here, not at aggregation time
+            return Ok(n);
+        }
+        self.ingest_buffered(u)
+    }
+
+    /// Zero-copy ingest: the update's weights still live in the caller's
+    /// wire buffer.  Streaming rounds fold them in place — the upload path
+    /// never materialises an owned `Vec<f32>`; buffered rounds copy once
+    /// (parking an update past the life of the wire buffer requires it).
+    pub fn ingest_view(&self, v: &ModelUpdateView<'_>) -> Result<usize, RoundError> {
+        self.require_phase(RoundPhase::Collecting)?;
+        if let Some((fold, algo)) = self.streaming_lane()? {
+            return self.fold_streaming(&fold, v.mem_bytes(), || fold.fold_view(algo.as_ref(), v));
+        }
+        self.ingest_buffered(v.to_update())
+    }
+
+    fn ingest_buffered(&self, u: ModelUpdate) -> Result<usize, RoundError> {
         let mut state = self.ingest.lock().unwrap();
         match &mut *state {
             IngestState::Buffered { updates, len } => {
@@ -186,18 +311,9 @@ impl RoundState {
                 updates.push((u, r));
                 Ok(updates.len())
             }
-            IngestState::Streaming { fold, algo } => {
-                // Charge the in-flight buffer for the duration of the fold
-                // only: peak resident is accumulator + one update = O(C).
-                let inflight = self.budget.reserve(u.mem_bytes())?;
-                fold.fold(algo.as_ref(), &u)?;
-                drop(inflight);
-                drop(u); // buffer released here, not at aggregation time
-                Ok(fold.folded() as usize)
-            }
-            // Drained only happens once aggregation started; never lock
-            // `phase` here (lock order is phase -> ingest elsewhere).
-            IngestState::Drained => Err(RoundError::WrongPhase {
+            // The state can only have changed under our feet towards
+            // Drained (streaming_lane saw Buffered moments ago).
+            _ => Err(RoundError::WrongPhase {
                 round: self.round,
                 expected: RoundPhase::Collecting,
                 actual: RoundPhase::Aggregating,
@@ -249,12 +365,13 @@ impl RoundState {
         }
     }
 
-    /// Streaming rounds: transition Collecting -> Aggregating and finalize
-    /// the fold into fused weights.  Because every update was folded at
-    /// ingest time, this is only the O(C) finalize — ingest and compute
-    /// already overlapped.  Returns the weights together with the folded
-    /// update count, read atomically with the finalize so a straggler that
-    /// slips in just before the transition is counted in both.
+    /// Streaming rounds: transition Collecting -> Aggregating, seal the
+    /// sharded fold and merge its lane partials into fused weights.
+    /// Because every update was folded at ingest time, this is only the
+    /// S-way O(C) merge plus the finalize — ingest and compute already
+    /// overlapped.  Returns the weights together with the folded update
+    /// count, read under the seal so a straggler that slips in just before
+    /// the transition is either merged *and* counted, or rejected whole.
     pub fn finish_streaming(&self) -> Result<(Vec<f32>, usize), RoundError> {
         let mut phase = self.phase.lock().unwrap();
         if *phase != RoundPhase::Collecting {
@@ -269,8 +386,8 @@ impl RoundState {
         match taken {
             IngestState::Streaming { fold, algo } => {
                 *phase = RoundPhase::Aggregating;
-                let folded = fold.folded() as usize;
-                Ok((fold.finish(algo.as_ref())?, folded))
+                let (out, folded) = fold.finish(algo.as_ref())?;
+                Ok((out, folded as usize))
             }
             other => {
                 *state = other; // put the buffered set back untouched
@@ -417,6 +534,133 @@ mod tests {
         assert_eq!(budget.in_use(), 0, "fold scratch released");
     }
 
+    #[test]
+    fn streaming_round_concurrent_ingest_no_global_lock_loss() {
+        // 8 threads fold concurrently into 4 lanes; every update must land
+        // exactly once and the fused mean must be exact.
+        let s = Arc::new(
+            RoundState::new_streaming(
+                0,
+                WorkloadClass::Streaming,
+                MemoryBudget::unbounded(),
+                Arc::new(FedAvg),
+                4,
+            )
+            .unwrap(),
+        );
+        std::thread::scope(|scope| {
+            for t in 0..8u64 {
+                let s = s.clone();
+                scope.spawn(move || {
+                    for k in 0..4u64 {
+                        s.ingest(upd(t * 4 + k, 256)).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(s.collected(), 32);
+        let (out, folded) = s.finish_streaming().unwrap();
+        assert_eq!(folded, 32);
+        assert!((out[0] - 1.0).abs() < 1e-4); // mean of all-ones
+    }
+
+    #[test]
+    fn streaming_backpressure_absorbs_transient_pressure() {
+        // Budget fits one lane accumulator + two in-flight frames; 8
+        // concurrent uploaders racing for that headroom must ALL succeed
+        // — the ingest waits out the pressure instead of failing uploads
+        // that fit as soon as a neighbouring fold drains.
+        const LEN: usize = 512;
+        let budget = MemoryBudget::new((3 * LEN * 4) as u64);
+        let s = Arc::new(
+            RoundState::new_streaming(
+                0,
+                WorkloadClass::Streaming,
+                budget.clone(),
+                Arc::new(FedAvg),
+                4,
+            )
+            .unwrap(),
+        );
+        std::thread::scope(|scope| {
+            for t in 0..8u64 {
+                let s = s.clone();
+                scope.spawn(move || {
+                    for k in 0..8u64 {
+                        s.ingest(upd(t * 8 + k, LEN)).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(s.collected(), 64);
+        let (out, folded) = s.finish_streaming().unwrap();
+        assert_eq!(folded, 64);
+        assert!((out[0] - 1.0).abs() < 1e-4);
+        assert_eq!(budget.in_use(), 0, "all scratch and in-flight released");
+    }
+
+    #[test]
+    fn never_fitting_streaming_update_fails_fast() {
+        // 500 B frame + 500 B lane scratch can never coexist in 600 B:
+        // the ingest must report OOM immediately, not park the connection
+        // thread for the whole backpressure grace window.
+        let s = RoundState::new_streaming(
+            0,
+            WorkloadClass::Streaming,
+            MemoryBudget::new(600),
+            Arc::new(FedAvg),
+            2,
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(matches!(s.ingest(upd(0, 125)), Err(RoundError::Memory(_))));
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "fast-fail must not wait out the grace window"
+        );
+    }
+
+    #[test]
+    fn streaming_ingest_view_folds_in_place() {
+        let budget = MemoryBudget::new(1 << 20);
+        let s = RoundState::new_streaming(
+            1,
+            WorkloadClass::Streaming,
+            budget.clone(),
+            Arc::new(FedAvg),
+            2,
+        )
+        .unwrap();
+        for p in 0..6u64 {
+            let u = upd(p, 100);
+            s.ingest_view(&u.as_view()).unwrap();
+        }
+        assert_eq!(s.collected(), 6);
+        // wrong-shape views are rejected like owned updates
+        assert!(matches!(
+            s.ingest_view(&upd(9, 99).as_view()),
+            Err(RoundError::ShapeMismatch { want: 100, got: 99 })
+        ));
+        let (out, folded) = s.finish_streaming().unwrap();
+        assert_eq!(folded, 6);
+        assert_eq!(out.len(), 100);
+        // a straggler view after the finish is a phase error, not a panic
+        assert!(matches!(
+            s.ingest_view(&upd(10, 100).as_view()),
+            Err(RoundError::WrongPhase { .. })
+        ));
+    }
+
+    #[test]
+    fn buffered_ingest_view_copies_once_and_parks() {
+        let r = RoundState::new(0, WorkloadClass::Small, MemoryBudget::new(1 << 20));
+        let u = upd(0, 50);
+        r.ingest_view(&u.as_view()).unwrap();
+        assert_eq!(r.collected(), 1);
+        let got = r.begin_aggregation().unwrap();
+        assert_eq!(got[0], u);
+    }
+
     /// The Fig 1 lift, as a unit test: a party count that OOMs the
     /// buffered path completes under the same budget when streaming —
     /// peak round memory is O(C), independent of N.
@@ -433,7 +677,8 @@ mod tests {
         assert!(matches!(buffered.ingest(upd(5, LEN)), Err(RoundError::Memory(_))));
 
         // streaming under the SAME budget takes 64 parties (and would take
-        // any N): peak resident = accumulator + one in-flight update.
+        // any N): peak resident = the S=2 lane accumulators + one
+        // in-flight update (sequential driver), independent of N.
         let budget = MemoryBudget::new(BUDGET);
         let streaming = RoundState::new_streaming(
             0,
@@ -448,8 +693,8 @@ mod tests {
         }
         assert_eq!(streaming.collected(), 64);
         assert!(
-            budget.high_water() <= 2 * (LEN as u64 * 4),
-            "peak {} must be O(C), not O(N*C)",
+            budget.high_water() <= (2 + 1) * (LEN as u64 * 4),
+            "peak {} must be O(S*C), not O(N*C)",
             budget.high_water()
         );
         let (out, folded) = streaming.finish_streaming().unwrap();

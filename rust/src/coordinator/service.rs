@@ -127,6 +127,9 @@ impl AdaptiveService {
                 max_executors,
                 cores_per_executor: executor_cfg.cores_per_executor.max(1),
                 node_cores: cfg.node.cores.max(1),
+                // the FL server shards its streaming ingest one lane per
+                // core — price the plan against that width
+                ingest_lanes: cfg.node.cores.max(1),
                 xla_available: xla.is_some(),
                 feedback_beta: 0.3,
             },

@@ -11,6 +11,9 @@
 //! * [`StreamingFold`] — the incremental alternative to the batch
 //!   `aggregate` call: updates fold into an O(C) accumulator as they
 //!   arrive instead of being collected first (the Fig 1 ceiling lift).
+//! * [`ShardedFold`] — S shard-local streaming folds for concurrent
+//!   ingest: connection handlers fold without a global lock; partials
+//!   merge once at finish (the ingest-throughput lift).
 //!
 //! All engines produce bit-comparable results (see `rust/tests/engine_parity`)
 //! because the fusion algebra is shared.
@@ -22,7 +25,7 @@ pub mod xla_engine;
 
 pub use parallel::ParallelEngine;
 pub use serial::SerialEngine;
-pub use streaming::StreamingFold;
+pub use streaming::{FoldError, ShardedFold, StreamingFold};
 pub use xla_engine::XlaEngine;
 
 use crate::fusion::{FusionAlgorithm, FusionError};

@@ -14,7 +14,7 @@
 //!   combiner shape; order-insensitive up to float association);
 //! * [`StreamingFold::finish`] — finalize into fused weights.
 //!
-//! Bit-parity with the batch path: the serial fold calls the exact
+//! Bit-parity with the batch path: the serial fold performs the exact
 //! `accumulate`/`finalize` algebra [`SerialEngine`](super::SerialEngine)
 //! uses, and the chunked fold performs the identical per-element
 //! `sum += w * x` sequence on disjoint slices, so a fold over the same
@@ -25,11 +25,19 @@
 //!
 //! Only decomposable algorithms stream; holistic ones (median/Krum/Zeno)
 //! must gather the full set and are rejected at construction.
+//!
+//! [`ShardedFold`] is the concurrent-ingest wrapper: S shard-local folds
+//! (one per ingest lane) that connection handlers fold into without a
+//! global lock, merged once at finish — see its docs for the budget and
+//! sealing contracts.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use super::EngineError;
 use crate::fusion::{Accumulator, FusionAlgorithm, FusionError};
 use crate::memsim::{MemoryBudget, Reservation};
-use crate::tensorstore::ModelUpdate;
+use crate::tensorstore::{ModelUpdate, ModelUpdateView};
 
 /// Below this parameter count the chunked fold runs single-threaded.  The
 /// per-element operation sequence is identical either way (so results do
@@ -93,21 +101,47 @@ impl StreamingFold {
     /// shape and reserves the O(C) scratch; every later update is
     /// shape-validated against it.
     pub fn fold(&mut self, algo: &dyn FusionAlgorithm, u: &ModelUpdate) -> Result<(), EngineError> {
+        self.fold_weighted(algo, algo.weight(u), &u.data)
+    }
+
+    /// Zero-copy entry: fold a decoded wire view — the weights are consumed
+    /// straight out of the (borrowed) buffer, never materialised into an
+    /// owned `ModelUpdate` (`weight_parts` supplies the per-update weight
+    /// without one either).
+    pub fn fold_view(
+        &mut self,
+        algo: &dyn FusionAlgorithm,
+        v: &ModelUpdateView<'_>,
+    ) -> Result<(), EngineError> {
+        self.fold_weighted(algo, algo.weight_parts(v.count, &v.data), &v.data)
+    }
+
+    /// The shared fold core over (weight, data).  The serial path calls
+    /// [`FusionAlgorithm::accumulate_weighted`] — the same trait method the
+    /// batch `accumulate` delegates to — so owned and borrowed entries are
+    /// bit-identical and an algorithm's algebra override reaches every
+    /// path.
+    fn fold_weighted(
+        &mut self,
+        algo: &dyn FusionAlgorithm,
+        w: f32,
+        data: &[f32],
+    ) -> Result<(), EngineError> {
         if let Some(a) = &self.acc {
-            if a.sum.len() != u.data.len() {
+            if a.sum.len() != data.len() {
                 return Err(EngineError::Fusion(FusionError::ShapeMismatch {
                     want: a.sum.len(),
-                    got: u.data.len(),
+                    got: data.len(),
                 }));
             }
         } else {
-            self.scratch = Some(self.budget.reserve(u.data.len() as u64 * 4)?);
-            self.acc = Some(Accumulator::zeros(u.data.len()));
+            self.scratch = Some(self.budget.reserve(data.len() as u64 * 4)?);
+            self.acc = Some(Accumulator::zeros(data.len()));
         }
         let acc = self.acc.as_mut().expect("acc initialised above");
         let len = acc.sum.len();
         if self.threads <= 1 || len < CHUNK_MIN_LEN {
-            algo.accumulate(acc, u);
+            algo.accumulate_weighted(acc, w, data);
             return Ok(());
         }
 
@@ -116,7 +150,6 @@ impl StreamingFold {
         // applied to one update.  Per element this is the same
         // `sum += w * x` the serial path performs, so results are
         // bit-identical regardless of the chunking.
-        let w = algo.weight(u);
         let identity = algo.identity_transform();
         let ranges = super::parallel::split_ranges(len, self.threads);
         let mut slots: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
@@ -129,7 +162,7 @@ impl StreamingFold {
         std::thread::scope(|s| {
             for (r, slot) in ranges.iter().zip(slots) {
                 s.spawn(move || {
-                    let src = &u.data[r.clone()];
+                    let src = &data[r.clone()];
                     if identity {
                         for (o, x) in slot.iter_mut().zip(src) {
                             *o += w * x;
@@ -174,6 +207,236 @@ impl StreamingFold {
     pub fn finish(self, algo: &dyn FusionAlgorithm) -> Result<Vec<f32>, EngineError> {
         let acc = self.acc.ok_or(EngineError::Fusion(FusionError::Empty))?;
         Ok(algo.finalize(acc))
+    }
+}
+
+/// Why a sharded fold rejected an update.
+#[derive(Debug)]
+pub enum FoldError {
+    /// [`ShardedFold::finish`] already ran; the round has moved on.
+    Sealed,
+    Engine(EngineError),
+}
+
+impl std::fmt::Display for FoldError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FoldError::Sealed => write!(f, "fold already finished"),
+            FoldError::Engine(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for FoldError {}
+
+/// Sharded streaming fold: S shard-local [`StreamingFold`]s, one ingest
+/// lane per shard, merged once at [`ShardedFold::finish`].
+///
+/// The single-`Mutex<StreamingFold>` ingest of PR 2 made every concurrent
+/// upload queue on one lock lane — correctness at the cost of collapsing
+/// the thundering herd back to serial aggregation.  Here each caller folds
+/// into one of S shards (round-robin over a relaxed atomic cursor), so S
+/// connection handlers fold concurrently and contention is 1/S of the
+/// global-lock design.  `merge` is order-insensitive up to float
+/// association, so the finishing merge matches the serial fold within the
+/// documented combine-associativity tolerance.
+///
+/// **Budget accounting**: each shard lazily reserves its own O(C) scratch
+/// on first use — S·O(C) worst case, charged shard by shard.  When the
+/// budget cannot fit another lane's scratch, the fold *falls back* to a
+/// lane that already holds its accumulator instead of failing the ingest:
+/// a tight budget gracefully degrades to fewer effective lanes (down to
+/// one), never to a lost update.
+///
+/// **Sealing**: `finish` seals the fold, then drains the shards one lock
+/// at a time.  A fold never holds more than one shard lock and re-checks
+/// the seal *inside* the lock, so every update is either merged into the
+/// final output or rejected with [`FoldError::Sealed`] — none slip between
+/// the merge and the count.
+pub struct ShardedFold {
+    shards: Vec<Mutex<StreamingFold>>,
+    /// Round-robin lane cursor (relaxed: distribution, not ordering).
+    next: AtomicUsize,
+    /// Fold-global parameter count, fixed by the first update: `0` until
+    /// set, `len + 1` after.  Lanes initialise lazily, so without this a
+    /// wrong-shape update could seed an untouched lane and poison the
+    /// round at merge time instead of being rejected at ingest.
+    expect_len: AtomicUsize,
+    sealed: AtomicBool,
+    folded: AtomicU64,
+    /// Cheap hot-path flag: at least one lane holds its accumulator (so a
+    /// fold can succeed on the in-flight charge alone, no fresh scratch).
+    any_active: AtomicBool,
+    budget: MemoryBudget,
+}
+
+impl ShardedFold {
+    /// `shards` ingest lanes (typically the server's core count), each a
+    /// serial `StreamingFold` — parallelism comes from concurrent callers,
+    /// not from per-update chunking.  Fails for holistic algorithms.
+    pub fn new(
+        algo: &dyn FusionAlgorithm,
+        shards: usize,
+        budget: MemoryBudget,
+    ) -> Result<ShardedFold, EngineError> {
+        let lanes = shards.max(1);
+        let shards = (0..lanes)
+            .map(|_| StreamingFold::new(algo, 1, budget.clone()).map(Mutex::new))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(ShardedFold {
+            shards,
+            next: AtomicUsize::new(0),
+            expect_len: AtomicUsize::new(0),
+            sealed: AtomicBool::new(false),
+            folded: AtomicU64::new(0),
+            any_active: AtomicBool::new(false),
+            budget,
+        })
+    }
+
+    /// Whether any lane already holds an initialised accumulator — a
+    /// lock-free peek callers use to decide if a fold could succeed
+    /// without reserving a fresh O(C) scratch (the backpressure fast-fail
+    /// test).
+    pub fn has_active_lane(&self) -> bool {
+        self.any_active.load(Ordering::Acquire)
+    }
+
+    /// Parameter count fixed by the first folded update.
+    pub fn params(&self) -> Option<usize> {
+        match self.expect_len.load(Ordering::Acquire) {
+            0 => None,
+            n => Some(n - 1),
+        }
+    }
+
+    /// Configured lane count.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Lanes holding an initialised accumulator — fewer than `shards()`
+    /// when the budget forced the graceful fallback (or ingest was light).
+    pub fn active_shards(&self) -> usize {
+        self.shards.iter().filter(|s| s.lock().unwrap().params().is_some()).count()
+    }
+
+    /// Updates folded in so far (across all lanes).
+    pub fn folded(&self) -> u64 {
+        self.folded.load(Ordering::Acquire)
+    }
+
+    /// Fold an owned update; returns the running folded count.
+    pub fn fold(&self, algo: &dyn FusionAlgorithm, u: &ModelUpdate) -> Result<u64, FoldError> {
+        self.fold_weighted(algo, algo.weight(u), &u.data)
+    }
+
+    /// Fold a wire view — the zero-copy ingest entry: weights are consumed
+    /// straight out of the connection's pooled frame buffer.
+    pub fn fold_view(
+        &self,
+        algo: &dyn FusionAlgorithm,
+        v: &ModelUpdateView<'_>,
+    ) -> Result<u64, FoldError> {
+        self.fold_weighted(algo, algo.weight_parts(v.count, &v.data), &v.data)
+    }
+
+    fn fold_weighted(
+        &self,
+        algo: &dyn FusionAlgorithm,
+        w: f32,
+        data: &[f32],
+    ) -> Result<u64, FoldError> {
+        // Fix (or check) the fold-global shape first: the winning CAS pins
+        // it for everyone, so two racing first updates of different shapes
+        // cannot seed incompatible lanes.
+        let pinned_by_us = match self.expect_len.compare_exchange(
+            0,
+            data.len() + 1,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => true,
+            Err(cur) if cur - 1 == data.len() => false,
+            Err(cur) => {
+                return Err(FoldError::Engine(EngineError::Fusion(
+                    FusionError::ShapeMismatch { want: cur - 1, got: data.len() },
+                )))
+            }
+        };
+        let lanes = self.shards.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed) % lanes;
+        let scratch = (data.len() * 4) as u64;
+        let mut oom: Option<EngineError> = None;
+        for i in 0..lanes {
+            let shard = &self.shards[(start + i) % lanes];
+            let mut guard = shard.lock().unwrap();
+            // Re-check under the lock: `finish` seals first, then takes
+            // each lock, so a true read here guarantees this lane was not
+            // merged yet (or ever will fold again).
+            if self.sealed.load(Ordering::Acquire) {
+                return Err(FoldError::Sealed);
+            }
+            // Skip lanes whose first fold would reserve an O(C) scratch the
+            // budget cannot fit — `would_fit` peeks without recording an
+            // OOM event, so graceful fallback doesn't pollute the stats.
+            // The designated lane (i == 0) always tries, so a genuinely
+            // exhausted budget still surfaces as a real OOM below.
+            if i > 0 && guard.params().is_none() && !self.budget.would_fit(scratch) {
+                continue;
+            }
+            match guard.fold_weighted(algo, w, data) {
+                Ok(()) => {
+                    self.any_active.store(true, Ordering::Release);
+                    return Ok(self.folded.fetch_add(1, Ordering::AcqRel) + 1);
+                }
+                // An uninitialised lane OOMing on its scratch is the
+                // fallback trigger; keep scanning for an active lane.
+                Err(e @ EngineError::Memory(_)) if guard.params().is_none() => oom = Some(e),
+                Err(e) => return Err(FoldError::Engine(e)),
+            }
+        }
+        // The pinning fold failed everywhere: unpin the shape (iff nothing
+        // folded under it) so one oversized first update cannot poison the
+        // round for every correctly-sized update that follows.  A same-
+        // shape fold racing through this window re-pins via its own CAS on
+        // retry; the residual cross-shape race resolves as a typed
+        // mismatch at merge time, never silent corruption.
+        if pinned_by_us && self.folded.load(Ordering::Acquire) == 0 {
+            let _ = self.expect_len.compare_exchange(
+                data.len() + 1,
+                0,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            );
+        }
+        Err(FoldError::Engine(oom.expect("lane 0 always attempts, so a miss recorded an error")))
+    }
+
+    /// Seal the fold and merge every lane partial into the fused output.
+    /// Returns the weights together with the folded count, read after the
+    /// drain so every merged update is counted and vice versa.
+    ///
+    /// Lock discipline: a fold holds exactly one shard lock at a time, so
+    /// taking the shard locks one by one here cannot deadlock; any fold
+    /// acquiring a lock after the seal bails out, so the drain observes a
+    /// quiescent set.
+    pub fn finish(&self, algo: &dyn FusionAlgorithm) -> Result<(Vec<f32>, u64), EngineError> {
+        self.sealed.store(true, Ordering::Release);
+        let mut merged = StreamingFold::new(algo, 1, self.budget.clone())?;
+        for shard in &self.shards {
+            let mut guard = shard.lock().unwrap();
+            let taken = std::mem::replace(
+                &mut *guard,
+                StreamingFold::new(algo, 1, MemoryBudget::unbounded())?,
+            );
+            // Adopts the first non-empty lane's accumulator and charge;
+            // every later lane's scratch is released as it merges in.
+            merged.merge(algo, taken)?;
+        }
+        let folded = self.folded.load(Ordering::Acquire);
+        let out = merged.finish(algo)?;
+        Ok((out, folded))
     }
 }
 
@@ -288,6 +551,135 @@ mod tests {
             f.fold(&FedAvg, &ModelUpdate::new(0, 1.0, 0, vec![1.0; 256])),
             Err(EngineError::Memory(_))
         ));
+    }
+
+    #[test]
+    fn sharded_concurrent_fold_matches_serial() {
+        // 8 writer threads × 4 updates each through 4 lanes; the merged
+        // output must match the serial batch within the documented
+        // combine-associativity tolerance.
+        let us = batch(29, 32, 4_000);
+        let mut bd = Breakdown::new();
+        let want = SerialEngine::unbounded().aggregate(&FedAvg, &us, &mut bd).unwrap();
+        let fold = ShardedFold::new(&FedAvg, 4, MemoryBudget::unbounded()).unwrap();
+        std::thread::scope(|s| {
+            for chunk in us.chunks(4) {
+                let fold = &fold;
+                s.spawn(move || {
+                    for u in chunk {
+                        fold.fold(&FedAvg, u).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(fold.folded(), 32);
+        assert_eq!(fold.active_shards(), 4, "round-robin must touch every lane");
+        let (out, folded) = fold.finish(&FedAvg).unwrap();
+        assert_eq!(folded, 32);
+        all_close(&out, &want, 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn sharded_fold_view_is_zero_copy_parity() {
+        let us = batch(31, 9, 600);
+        let mut bd = Breakdown::new();
+        let want = SerialEngine::unbounded().aggregate(&FedAvg, &us, &mut bd).unwrap();
+        let fold = ShardedFold::new(&FedAvg, 3, MemoryBudget::unbounded()).unwrap();
+        for u in &us {
+            fold.fold_view(&FedAvg, &u.as_view()).unwrap();
+        }
+        let (out, _) = fold.finish(&FedAvg).unwrap();
+        all_close(&out, &want, 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn sharded_budget_fallback_degrades_to_fewer_lanes() {
+        const LEN: usize = 64;
+        // Budget fits exactly ONE O(C) accumulator: 4 configured lanes
+        // must gracefully collapse to one instead of failing ingest.
+        let budget = MemoryBudget::new((LEN * 4) as u64);
+        let fold = ShardedFold::new(&FedAvg, 4, budget.clone()).unwrap();
+        for p in 0..12u64 {
+            fold.fold(&FedAvg, &ModelUpdate::new(p, 1.0, 0, vec![1.0; LEN])).unwrap();
+        }
+        assert_eq!(fold.folded(), 12);
+        assert_eq!(fold.active_shards(), 1, "budget admits exactly one lane");
+        assert_eq!(budget.in_use(), (LEN * 4) as u64);
+        // the would_fit peek means fallbacks did not spam OOM events: only
+        // the designated-lane attempts (at most one per fold) count
+        assert!(budget.oom_events() <= 12, "{}", budget.oom_events());
+        let (out, folded) = fold.finish(&FedAvg).unwrap();
+        assert_eq!(folded, 12);
+        assert!(out.iter().all(|v| (v - 1.0).abs() < 1e-4));
+        assert_eq!(budget.in_use(), 0, "merge released the scratch");
+    }
+
+    #[test]
+    fn oversized_first_update_does_not_poison_the_round() {
+        // The failed pinning fold must roll its shape pin back: one
+        // oversized first update cannot condemn every correctly-sized
+        // update that follows to a ShapeMismatch.
+        const LEN: usize = 64; // 256 B scratch fits the 512 B budget
+        let budget = MemoryBudget::new(512);
+        let fold = ShardedFold::new(&FedAvg, 2, budget.clone()).unwrap();
+        assert!(matches!(
+            fold.fold(&FedAvg, &ModelUpdate::new(0, 1.0, 0, vec![1.0; 1024])), // 4 KB
+            Err(FoldError::Engine(EngineError::Memory(_)))
+        ));
+        assert_eq!(fold.params(), None, "failed pin must be rolled back");
+        for p in 0..5u64 {
+            fold.fold(&FedAvg, &ModelUpdate::new(p, 1.0, 0, vec![1.0; LEN])).unwrap();
+        }
+        let (out, folded) = fold.finish(&FedAvg).unwrap();
+        assert_eq!(folded, 5);
+        assert_eq!(out.len(), LEN);
+    }
+
+    #[test]
+    fn sharded_first_fold_oom_still_surfaces() {
+        let budget = MemoryBudget::new(10);
+        let fold = ShardedFold::new(&FedAvg, 2, budget).unwrap();
+        assert!(matches!(
+            fold.fold(&FedAvg, &ModelUpdate::new(0, 1.0, 0, vec![1.0; 256])),
+            Err(FoldError::Engine(EngineError::Memory(_)))
+        ));
+    }
+
+    #[test]
+    fn sharded_shape_mismatch_rejected_at_ingest_not_merge() {
+        // The second update has a different shape and lands on an
+        // UNTOUCHED lane — without the fold-global shape pin it would seed
+        // that lane and only explode at merge time.
+        let fold = ShardedFold::new(&FedAvg, 4, MemoryBudget::unbounded()).unwrap();
+        fold.fold(&FedAvg, &ModelUpdate::new(0, 1.0, 0, vec![1.0; 8])).unwrap();
+        assert_eq!(fold.params(), Some(8));
+        assert!(matches!(
+            fold.fold(&FedAvg, &ModelUpdate::new(1, 1.0, 0, vec![1.0; 9])),
+            Err(FoldError::Engine(EngineError::Fusion(FusionError::ShapeMismatch {
+                want: 8,
+                got: 9
+            })))
+        ));
+        assert_eq!(fold.folded(), 1);
+        let (_, folded) = fold.finish(&FedAvg).unwrap();
+        assert_eq!(folded, 1);
+    }
+
+    #[test]
+    fn sharded_fold_after_finish_is_sealed() {
+        let fold = ShardedFold::new(&FedAvg, 2, MemoryBudget::unbounded()).unwrap();
+        fold.fold(&FedAvg, &ModelUpdate::new(0, 1.0, 0, vec![2.0; 16])).unwrap();
+        let (out, _) = fold.finish(&FedAvg).unwrap();
+        assert_eq!(out.len(), 16);
+        assert!(matches!(
+            fold.fold(&FedAvg, &ModelUpdate::new(1, 1.0, 0, vec![2.0; 16])),
+            Err(FoldError::Sealed)
+        ));
+    }
+
+    #[test]
+    fn sharded_rejects_holistic_algorithms() {
+        assert!(ShardedFold::new(&CoordMedian, 4, MemoryBudget::unbounded()).is_err());
     }
 
     #[test]

@@ -18,6 +18,10 @@ impl FusionAlgorithm for FedAvg {
     fn weight(&self, update: &ModelUpdate) -> f32 {
         update.count
     }
+
+    fn weight_parts(&self, count: f32, _data: &[f32]) -> f32 {
+        count
+    }
 }
 
 /// Iterative Averaging (IBMFL Iteravg): unweighted mean of updates.
@@ -30,6 +34,10 @@ impl FusionAlgorithm for IterAvg {
     }
 
     fn weight(&self, _update: &ModelUpdate) -> f32 {
+        1.0
+    }
+
+    fn weight_parts(&self, _count: f32, _data: &[f32]) -> f32 {
         1.0
     }
 }
@@ -49,6 +57,10 @@ impl FusionAlgorithm for GradAvg {
     fn weight(&self, update: &ModelUpdate) -> f32 {
         update.count
     }
+
+    fn weight_parts(&self, count: f32, _data: &[f32]) -> f32 {
+        count
+    }
 }
 
 /// Clipped averaging (IBMFL/OpenFL ClippedAveraging): clamp every element
@@ -66,6 +78,10 @@ impl FusionAlgorithm for ClippedAvg {
 
     fn weight(&self, update: &ModelUpdate) -> f32 {
         update.count
+    }
+
+    fn weight_parts(&self, count: f32, _data: &[f32]) -> f32 {
+        count
     }
 
     fn transform(&self, x: f32) -> f32 {

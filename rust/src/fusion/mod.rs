@@ -109,19 +109,37 @@ pub trait FusionAlgorithm: Send + Sync {
         true
     }
 
-    /// Fold one update into an accumulator (map side).
-    fn accumulate(&self, acc: &mut Accumulator, update: &ModelUpdate) {
-        let w = self.weight(update);
-        debug_assert_eq!(update.data.len(), acc.sum.len());
+    /// Per-update weight from the update's parts — the borrowed-wire twin
+    /// of [`FusionAlgorithm::weight`], used by the zero-copy fold so a
+    /// decoded view never has to materialise an owned `ModelUpdate`.  The
+    /// default is correct for ANY `weight` override (it rebuilds a full
+    /// update, paying a data copy); the decomposable algorithms override
+    /// it with their header-only forms to keep the hot path copy-free.
+    fn weight_parts(&self, count: f32, data: &[f32]) -> f32 {
+        self.weight(&ModelUpdate::new(0, count, 0, data.to_vec()))
+    }
+
+    /// Fold one update's weights into the accumulator with a precomputed
+    /// per-update weight — the slice-based algebra core shared by the
+    /// batch `accumulate` and the streaming/zero-copy folds.  An algorithm
+    /// that customises its accumulation overrides THIS method and every
+    /// engine path follows.
+    fn accumulate_weighted(&self, acc: &mut Accumulator, w: f32, data: &[f32]) {
+        debug_assert_eq!(data.len(), acc.sum.len());
         if self.identity_transform() {
-            acc.add_weighted(&update.data, w);
+            acc.add_weighted(data, w);
         } else {
-            for (s, x) in acc.sum.iter_mut().zip(&update.data) {
+            for (s, x) in acc.sum.iter_mut().zip(data) {
                 *s += w * self.transform(*x);
             }
             acc.wtot += w as f64;
             acc.n += 1;
         }
+    }
+
+    /// Fold one update into an accumulator (map side).
+    fn accumulate(&self, acc: &mut Accumulator, update: &ModelUpdate) {
+        self.accumulate_weighted(acc, self.weight(update), &update.data);
     }
 
     /// Merge partial accumulators (reduce side).

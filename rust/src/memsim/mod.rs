@@ -81,6 +81,15 @@ impl MemoryBudget {
         self.inner.budget.saturating_sub(self.in_use())
     }
 
+    /// Whether `bytes` could be reserved *right now* — a peek that, unlike
+    /// a failed [`MemoryBudget::reserve`], does not record an OOM event.
+    /// The sharded ingest uses it to fall back to fewer fold lanes on a
+    /// tight budget without polluting the OOM statistics (the answer is
+    /// advisory under concurrency; the reserve itself stays the authority).
+    pub fn would_fit(&self, bytes: u64) -> bool {
+        self.in_use().checked_add(bytes).is_some_and(|n| n <= self.inner.budget)
+    }
+
     /// Reserve `bytes`, returning an RAII guard that releases on drop.
     pub fn reserve(&self, bytes: u64) -> Result<Reservation, OutOfMemory> {
         // CAS loop so concurrent reservations cannot oversubscribe.
@@ -189,6 +198,17 @@ mod tests {
         assert!(r.grow(100).is_err());
         drop(r);
         assert_eq!(b.in_use(), 0);
+    }
+
+    #[test]
+    fn would_fit_peeks_without_oom_events() {
+        let b = MemoryBudget::new(100);
+        assert!(b.would_fit(100));
+        let _r = b.reserve(60).unwrap();
+        assert!(b.would_fit(40));
+        assert!(!b.would_fit(41));
+        assert!(!b.would_fit(u64::MAX)); // overflow-safe
+        assert_eq!(b.oom_events(), 0, "peeks must not count as OOMs");
     }
 
     #[test]

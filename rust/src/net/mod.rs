@@ -15,53 +15,151 @@
 pub mod protocol;
 pub mod server;
 
-pub use protocol::{Message, ProtoError};
+pub use protocol::{checked_frame_len, Message, ProtoError, Reply};
 pub use server::{NetServer, ServerHandle};
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 
-/// Blocking client for the aggregation server.
+use crate::tensorstore::f32s_as_bytes;
+
+/// A reusable, 4-byte-aligned frame payload buffer.
+///
+/// Backing the pool with `Vec<u32>` guarantees the payload base pointer is
+/// f32-aligned, so an `Upload` frame read into it decodes through
+/// [`ModelUpdateView`](crate::tensorstore::ModelUpdateView) *borrowing* the
+/// weights in place (the update header is 28 bytes, a multiple of 4).
+/// Reusing the buffer across frames removes the `vec![0u8; len]` the old
+/// `read_frame` allocated per message — the second of the two hot-path
+/// copies the upload used to pay.
+#[derive(Debug, Default)]
+pub struct FrameBuf {
+    words: Vec<u32>,
+    len: usize,
+}
+
+impl FrameBuf {
+    pub fn new() -> FrameBuf {
+        FrameBuf { words: Vec::new(), len: 0 }
+    }
+
+    /// Current payload length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        // Safety: `words` holds at least `len.div_ceil(4)` initialised u32s
+        // (see `reset`), so the first `len` bytes are initialised; u32 is
+        // stricter-aligned than u8.
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr() as *const u8, self.len) }
+    }
+
+    fn as_mut_slice(&mut self) -> &mut [u8] {
+        // Safety: as above, plus exclusive access via &mut self.
+        unsafe { std::slice::from_raw_parts_mut(self.words.as_mut_ptr() as *mut u8, self.len) }
+    }
+
+    /// Resize to `len` bytes, keeping the allocation when shrinking.
+    fn reset(&mut self, len: usize) {
+        self.words.resize(len.div_ceil(4), 0);
+        self.len = len;
+    }
+}
+
+/// Blocking client for the aggregation server.  Send and receive buffers
+/// are pooled across calls, mirroring the server's per-connection pools.
 pub struct NetClient {
     stream: TcpStream,
+    send: Vec<u8>,
+    recv: FrameBuf,
 }
 
 impl NetClient {
     pub fn connect(addr: &str) -> std::io::Result<NetClient> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
-        Ok(NetClient { stream })
+        Ok(NetClient { stream, send: Vec::new(), recv: FrameBuf::new() })
     }
 
     /// Send one message and wait for the reply.
     pub fn call(&mut self, msg: &Message) -> Result<Message, ProtoError> {
-        write_frame(&mut self.stream, msg)?;
-        read_frame(&mut self.stream)
+        msg.encode_into(&mut self.send)?;
+        self.stream.write_all(&self.send)?;
+        self.stream.flush()?;
+        let tag = read_frame_into(&mut self.stream, &mut self.recv)?;
+        Message::decode(tag, self.recv.as_slice())
     }
 }
 
-/// Write one frame.
+/// Write one frame.  Rejects oversized payloads with
+/// [`ProtoError::FrameTooLarge`] *before* writing anything (a silent
+/// `as u32` length truncation would corrupt the stream for good).
 pub fn write_frame<W: Write>(w: &mut W, msg: &Message) -> Result<(), ProtoError> {
-    let (tag, payload) = msg.encode();
-    w.write_all(&[tag])?;
-    w.write_all(&(payload.len() as u32).to_le_bytes())?;
-    w.write_all(&payload)?;
+    let mut buf = Vec::new();
+    msg.encode_into(&mut buf)?;
+    w.write_all(&buf)?;
     w.flush()?;
     Ok(())
 }
 
-/// Read one frame.
-pub fn read_frame<R: Read>(r: &mut R) -> Result<Message, ProtoError> {
+/// Write one reply frame, reusing `scratch` as the encode buffer.  Returns
+/// the number of bytes put on the wire.
+///
+/// [`Reply::Model`] takes the gather-write path: a 9-byte stack header
+/// (tag, length, round) followed by the shared weights viewed as bytes —
+/// the full fused model crosses from the published `Arc` to the socket
+/// without ever being cloned or re-buffered.
+pub fn write_reply<W: Write>(
+    w: &mut W,
+    reply: &Reply,
+    scratch: &mut Vec<u8>,
+) -> Result<usize, ProtoError> {
+    match reply {
+        Reply::Msg(m) => {
+            m.encode_into(scratch)?;
+            w.write_all(scratch)?;
+            w.flush()?;
+            Ok(scratch.len())
+        }
+        Reply::Model { round, weights } => {
+            let body = f32s_as_bytes(weights);
+            let len = checked_frame_len(4 + body.len())?;
+            let mut head = [0u8; 9];
+            head[0] = protocol::TAG_MODEL;
+            head[1..5].copy_from_slice(&len.to_le_bytes());
+            head[5..9].copy_from_slice(&round.to_le_bytes());
+            w.write_all(&head)?;
+            w.write_all(body)?;
+            w.flush()?;
+            Ok(head.len() + body.len())
+        }
+    }
+}
+
+/// Read one frame's tag and payload into the pooled `buf`.
+pub fn read_frame_into<R: Read>(r: &mut R, buf: &mut FrameBuf) -> Result<u8, ProtoError> {
     let mut head = [0u8; 5];
     r.read_exact(&mut head)?;
-    let tag = head[0];
     let len = u32::from_le_bytes(head[1..5].try_into().unwrap()) as usize;
     if len > protocol::MAX_FRAME {
         return Err(ProtoError::FrameTooLarge(len));
     }
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload)?;
-    Message::decode(tag, &payload)
+    buf.reset(len);
+    r.read_exact(buf.as_mut_slice())?;
+    Ok(head[0])
+}
+
+/// Read one frame into an owned [`Message`] (allocating; the pooled
+/// server path uses [`read_frame_into`] + `Handler::handle_frame`).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Message, ProtoError> {
+    let mut buf = FrameBuf::new();
+    let tag = read_frame_into(r, &mut buf)?;
+    Message::decode(tag, buf.as_slice())
 }
 
 #[cfg(test)]
@@ -97,6 +195,68 @@ mod tests {
         assert!(matches!(
             read_frame(&mut std::io::Cursor::new(buf)),
             Err(ProtoError::FrameTooLarge(_))
+        ));
+    }
+
+    #[test]
+    fn pooled_buffer_reused_across_frames() {
+        // Three frames of different sizes through ONE FrameBuf; each must
+        // decode correctly and Upload must borrow straight from the pool.
+        let msgs = vec![
+            Message::Upload(ModelUpdate::new(4, 2.0, 1, vec![1.5; 300])),
+            Message::Ack { redirect_to_dfs: false },
+            Message::Upload(ModelUpdate::new(5, 3.0, 1, vec![-2.0; 50])),
+        ];
+        let mut wire = Vec::new();
+        for m in &msgs {
+            write_frame(&mut wire, m).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(wire);
+        let mut buf = FrameBuf::new();
+        for m in &msgs {
+            let tag = read_frame_into(&mut cursor, &mut buf).unwrap();
+            if tag == protocol::TAG_UPLOAD {
+                let v = crate::tensorstore::ModelUpdateView::decode(buf.as_slice()).unwrap();
+                assert!(
+                    matches!(v.data, std::borrow::Cow::Borrowed(_)),
+                    "pool is 4-aligned: upload decode must borrow"
+                );
+                assert_eq!(&Message::Upload(v.into_owned()), m);
+            } else {
+                assert_eq!(&Message::decode(tag, buf.as_slice()).unwrap(), m);
+            }
+        }
+    }
+
+    #[test]
+    fn model_reply_gather_write_matches_message_encoding() {
+        // The zero-copy Reply::Model path must be byte-identical on the
+        // wire to the owned Message::Model encoding.
+        let weights = vec![0.25f32; 123];
+        let mut owned = Vec::new();
+        write_frame(&mut owned, &Message::Model { round: 9, weights: weights.clone() }).unwrap();
+        let mut gathered = Vec::new();
+        let mut scratch = Vec::new();
+        let n = write_reply(
+            &mut gathered,
+            &Reply::Model { round: 9, weights: std::sync::Arc::new(weights) },
+            &mut scratch,
+        )
+        .unwrap();
+        assert_eq!(gathered, owned);
+        assert_eq!(n, gathered.len());
+    }
+
+    #[test]
+    fn torn_frame_is_io_error() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Message::Upload(ModelUpdate::new(0, 1.0, 0, vec![1.0; 64])))
+            .unwrap();
+        wire.truncate(wire.len() - 10); // connection died mid-payload
+        let mut buf = FrameBuf::new();
+        assert!(matches!(
+            read_frame_into(&mut std::io::Cursor::new(wire), &mut buf),
+            Err(ProtoError::Io(_))
         ));
     }
 }

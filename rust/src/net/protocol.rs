@@ -1,10 +1,35 @@
 //! Wire messages of the aggregation protocol.
 
+use std::sync::Arc;
+
 use crate::tensorstore::{bytes_to_f32s, f32s_as_bytes, ModelUpdate, WireError};
 
 /// 2 GiB frame cap — a single full-size CNN956 update is ~1 GiB; anything
 /// larger than this is a corrupt header, rejected before allocation.
+/// `MAX_FRAME < u32::MAX`, so a length that passes [`checked_frame_len`]
+/// always fits the wire's u32 length field exactly.
 pub const MAX_FRAME: usize = 2 << 30;
+
+/// Frame tags (the `tag u8` of every frame).
+pub const TAG_REGISTER: u8 = 0x01;
+pub const TAG_REGISTERED: u8 = 0x02;
+pub const TAG_UPLOAD: u8 = 0x03;
+pub const TAG_ACK: u8 = 0x04;
+pub const TAG_GET_MODEL: u8 = 0x05;
+pub const TAG_MODEL: u8 = 0x06;
+pub const TAG_NO_MODEL: u8 = 0x07;
+pub const TAG_ERROR: u8 = 0x7F;
+
+/// Validate a payload length before it is cast into the wire's u32 length
+/// field.  Without this check an oversized payload would be silently
+/// truncated by `as u32` and frame-corrupt the stream for every later
+/// message on the connection.
+pub fn checked_frame_len(len: usize) -> Result<u32, ProtoError> {
+    if len > MAX_FRAME {
+        return Err(ProtoError::FrameTooLarge(len));
+    }
+    Ok(len as u32)
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Message {
@@ -57,26 +82,66 @@ impl From<WireError> for ProtoError {
 }
 
 impl Message {
+    /// Append this message's payload to `out`; returns the frame tag.
+    fn payload_into(&self, out: &mut Vec<u8>) -> u8 {
+        match self {
+            Message::Register { party } => {
+                out.extend_from_slice(&party.to_le_bytes());
+                TAG_REGISTER
+            }
+            Message::Registered { party, round } => {
+                out.extend_from_slice(&party.to_le_bytes());
+                out.extend_from_slice(&round.to_le_bytes());
+                TAG_REGISTERED
+            }
+            Message::Upload(u) => {
+                u.encode_into(out);
+                TAG_UPLOAD
+            }
+            Message::Ack { redirect_to_dfs } => {
+                out.push(u8::from(*redirect_to_dfs));
+                TAG_ACK
+            }
+            Message::GetModel { round } => {
+                out.extend_from_slice(&round.to_le_bytes());
+                TAG_GET_MODEL
+            }
+            Message::Model { round, weights } => {
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(f32s_as_bytes(weights));
+                TAG_MODEL
+            }
+            Message::NoModel { round } => {
+                out.extend_from_slice(&round.to_le_bytes());
+                TAG_NO_MODEL
+            }
+            Message::Error(m) => {
+                out.extend_from_slice(m.as_bytes());
+                TAG_ERROR
+            }
+        }
+    }
+
     /// (tag, payload)
     pub fn encode(&self) -> (u8, Vec<u8>) {
-        match self {
-            Message::Register { party } => (0x01, party.to_le_bytes().to_vec()),
-            Message::Registered { party, round } => {
-                let mut p = party.to_le_bytes().to_vec();
-                p.extend_from_slice(&round.to_le_bytes());
-                (0x02, p)
-            }
-            Message::Upload(u) => (0x03, u.encode()),
-            Message::Ack { redirect_to_dfs } => (0x04, vec![u8::from(*redirect_to_dfs)]),
-            Message::GetModel { round } => (0x05, round.to_le_bytes().to_vec()),
-            Message::Model { round, weights } => {
-                let mut p = round.to_le_bytes().to_vec();
-                p.extend_from_slice(f32s_as_bytes(weights));
-                (0x06, p)
-            }
-            Message::NoModel { round } => (0x07, round.to_le_bytes().to_vec()),
-            Message::Error(m) => (0x7F, m.as_bytes().to_vec()),
-        }
+        let mut p = Vec::new();
+        let tag = self.payload_into(&mut p);
+        (tag, p)
+    }
+
+    /// Serialize the whole frame (`tag | len | payload`) into `out`,
+    /// reusing its capacity — the per-frame `Vec` the original
+    /// `encode()`-then-`write` path allocated disappears on pooled
+    /// connections.  Oversized payloads are rejected *before* anything is
+    /// written, so a failed encode can never leave a half-frame behind.
+    pub fn encode_into(&self, out: &mut Vec<u8>) -> Result<(), ProtoError> {
+        out.clear();
+        out.extend_from_slice(&[0u8; 5]); // tag + len, patched below
+        let tag = self.payload_into(out);
+        let len = checked_frame_len(out.len() - 5)?;
+        out[0] = tag;
+        out[1..5].copy_from_slice(&len.to_le_bytes());
+        Ok(())
     }
 
     pub fn decode(tag: u8, payload: &[u8]) -> Result<Message, ProtoError> {
@@ -88,27 +153,27 @@ impl Message {
             }
         };
         match tag {
-            0x01 => {
+            TAG_REGISTER => {
                 need(8)?;
                 Ok(Message::Register { party: u64::from_le_bytes(payload[..8].try_into().unwrap()) })
             }
-            0x02 => {
+            TAG_REGISTERED => {
                 need(12)?;
                 Ok(Message::Registered {
                     party: u64::from_le_bytes(payload[..8].try_into().unwrap()),
                     round: u32::from_le_bytes(payload[8..12].try_into().unwrap()),
                 })
             }
-            0x03 => Ok(Message::Upload(ModelUpdate::decode(payload)?)),
-            0x04 => {
+            TAG_UPLOAD => Ok(Message::Upload(ModelUpdate::decode(payload)?)),
+            TAG_ACK => {
                 need(1)?;
                 Ok(Message::Ack { redirect_to_dfs: payload[0] != 0 })
             }
-            0x05 => {
+            TAG_GET_MODEL => {
                 need(4)?;
                 Ok(Message::GetModel { round: u32::from_le_bytes(payload[..4].try_into().unwrap()) })
             }
-            0x06 => {
+            TAG_MODEL => {
                 need(4)?;
                 if (payload.len() - 4) % 4 != 0 {
                     return Err(ProtoError::BadPayload("weights not f32-aligned".into()));
@@ -118,13 +183,31 @@ impl Message {
                     weights: bytes_to_f32s(&payload[4..]),
                 })
             }
-            0x07 => {
+            TAG_NO_MODEL => {
                 need(4)?;
                 Ok(Message::NoModel { round: u32::from_le_bytes(payload[..4].try_into().unwrap()) })
             }
-            0x7F => Ok(Message::Error(String::from_utf8_lossy(payload).into_owned())),
+            TAG_ERROR => Ok(Message::Error(String::from_utf8_lossy(payload).into_owned())),
             t => Err(ProtoError::UnknownTag(t)),
         }
+    }
+}
+
+/// What a frame handler produces for one request.
+///
+/// `Msg` is the ordinary owned reply.  `Model` is the zero-copy fused-model
+/// reply: the weights are framed straight out of the shared `Arc` the round
+/// published — no `Vec<f32>` clone, no payload materialisation (see
+/// [`write_reply`](super::write_reply)).
+#[derive(Clone, Debug)]
+pub enum Reply {
+    Msg(Message),
+    Model { round: u32, weights: Arc<Vec<f32>> },
+}
+
+impl From<Message> for Reply {
+    fn from(m: Message) -> Reply {
+        Reply::Msg(m)
     }
 }
 
@@ -159,6 +242,42 @@ mod tests {
     fn short_payload_rejected() {
         assert!(Message::decode(0x01, &[1, 2]).is_err());
         assert!(Message::decode(0x06, &[0, 0, 0, 0, 1]).is_err()); // unaligned weights
+    }
+
+    #[test]
+    fn frame_len_check_rejects_before_u32_truncation() {
+        // Anything past MAX_FRAME would either truncate in the `as u32`
+        // cast or lie about its length; both must be FrameTooLarge.
+        assert!(matches!(
+            checked_frame_len(MAX_FRAME + 1),
+            Err(ProtoError::FrameTooLarge(n)) if n == MAX_FRAME + 1
+        ));
+        assert!(matches!(
+            checked_frame_len(u32::MAX as usize + 1),
+            Err(ProtoError::FrameTooLarge(_))
+        ));
+        assert_eq!(checked_frame_len(0).unwrap(), 0);
+        assert_eq!(checked_frame_len(MAX_FRAME).unwrap(), MAX_FRAME as u32);
+        // the cap itself must fit u32, or the Ok cast above would be wrong
+        assert!(MAX_FRAME <= u32::MAX as usize);
+    }
+
+    #[test]
+    fn encode_into_frames_exactly_like_encode() {
+        let msgs = [
+            Message::Register { party: 7 },
+            Message::Upload(ModelUpdate::new(1, 2.0, 3, vec![0.5; 40])),
+            Message::Model { round: 2, weights: vec![1.0; 9] },
+            Message::Error("x".into()),
+        ];
+        let mut buf = Vec::new();
+        for m in msgs {
+            m.encode_into(&mut buf).unwrap();
+            let (tag, payload) = m.encode();
+            assert_eq!(buf[0], tag);
+            assert_eq!(u32::from_le_bytes(buf[1..5].try_into().unwrap()) as usize, payload.len());
+            assert_eq!(&buf[5..], &payload[..]);
+        }
     }
 
     #[test]

@@ -7,11 +7,20 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-use super::{read_frame, write_frame, Message, ProtoError};
+use super::{read_frame_into, write_frame, write_reply, FrameBuf, Message, ProtoError, Reply};
 
 /// Application hook: map a request message to a reply.
 pub trait Handler: Send + Sync + 'static {
     fn handle(&self, msg: Message) -> Message;
+
+    /// Zero-copy hook: map a raw frame (already length-checked, payload in
+    /// the connection's 4-aligned pool) to a reply.  The default decodes an
+    /// owned [`Message`] and delegates to [`Handler::handle`]; the FL
+    /// server overrides it to fold uploads straight out of the wire buffer
+    /// and to frame model replies from the published `Arc` without cloning.
+    fn handle_frame(&self, tag: u8, payload: &[u8]) -> Result<Reply, ProtoError> {
+        Ok(Reply::Msg(self.handle(Message::decode(tag, payload)?)))
+    }
 }
 
 impl<F> Handler for F
@@ -30,6 +39,11 @@ pub struct ServerHandle {
     accept_thread: Option<std::thread::JoinHandle<()>>,
     pub connections: Arc<AtomicU64>,
     pub requests: Arc<AtomicU64>,
+    /// Frame bytes read off all connections (headers + payloads) — the
+    /// real ingest volume the planner's arrival-span term models.
+    pub bytes_in: Arc<AtomicU64>,
+    /// Frame bytes written as replies.
+    pub bytes_out: Arc<AtomicU64>,
 }
 
 impl ServerHandle {
@@ -63,11 +77,15 @@ impl NetServer {
         let stop = Arc::new(AtomicBool::new(false));
         let connections = Arc::new(AtomicU64::new(0));
         let requests = Arc::new(AtomicU64::new(0));
+        let bytes_in = Arc::new(AtomicU64::new(0));
+        let bytes_out = Arc::new(AtomicU64::new(0));
 
         let accept_thread = {
             let stop = stop.clone();
             let connections = connections.clone();
             let requests = requests.clone();
+            let bytes_in = bytes_in.clone();
+            let bytes_out = bytes_out.clone();
             std::thread::spawn(move || {
                 for stream in listener.incoming() {
                     if stop.load(Ordering::Acquire) {
@@ -77,8 +95,10 @@ impl NetServer {
                     connections.fetch_add(1, Ordering::Relaxed);
                     let handler = handler.clone();
                     let requests = requests.clone();
+                    let bytes_in = bytes_in.clone();
+                    let bytes_out = bytes_out.clone();
                     std::thread::spawn(move || {
-                        let _ = Self::handle_conn(stream, handler, requests);
+                        let _ = Self::handle_conn(stream, handler, requests, bytes_in, bytes_out);
                     });
                 }
             })
@@ -90,6 +110,8 @@ impl NetServer {
             accept_thread: Some(accept_thread),
             connections,
             requests,
+            bytes_in,
+            bytes_out,
         })
     }
 
@@ -97,20 +119,36 @@ impl NetServer {
         mut stream: TcpStream,
         handler: Arc<H>,
         requests: Arc<AtomicU64>,
+        bytes_in: Arc<AtomicU64>,
+        bytes_out: Arc<AtomicU64>,
     ) -> Result<(), ProtoError> {
         stream.set_nodelay(true)?;
+        // Per-connection pools, reused for every frame on this socket: the
+        // 4-aligned payload buffer (so upload decode borrows in place) and
+        // the reply encode scratch.  No per-frame allocation on the steady
+        // state of the upload hot path.
+        let mut payload = FrameBuf::new();
+        let mut scratch = Vec::new();
         loop {
-            let msg = match read_frame(&mut stream) {
-                Ok(m) => m,
+            let tag = match read_frame_into(&mut stream, &mut payload) {
+                Ok(t) => t,
                 Err(ProtoError::Io(_)) => return Ok(()), // client hung up
                 Err(e) => {
                     let _ = write_frame(&mut stream, &Message::Error(e.to_string()));
                     return Err(e);
                 }
             };
+            bytes_in.fetch_add(5 + payload.len() as u64, Ordering::Relaxed);
             requests.fetch_add(1, Ordering::Relaxed);
-            let reply = handler.handle(msg);
-            write_frame(&mut stream, &reply)?;
+            let reply = match handler.handle_frame(tag, payload.as_slice()) {
+                Ok(r) => r,
+                Err(e) => {
+                    let _ = write_frame(&mut stream, &Message::Error(e.to_string()));
+                    return Err(e);
+                }
+            };
+            let n = write_reply(&mut stream, &reply, &mut scratch)?;
+            bytes_out.fetch_add(n as u64, Ordering::Relaxed);
         }
     }
 }
@@ -237,6 +275,32 @@ mod tests {
             assert_eq!(r, Message::Ack { redirect_to_dfs: false });
         }
         assert_eq!(handle.requests.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn byte_counters_track_wire_volume() {
+        let handle = NetServer::serve(
+            "127.0.0.1:0",
+            Arc::new(|_m: Message| Message::Ack { redirect_to_dfs: false }),
+        )
+        .unwrap();
+        let mut c = NetClient::connect(handle.addr()).unwrap();
+        let u = ModelUpdate::new(1, 1.0, 0, vec![0.5; 100]);
+        let in_frame = 5 + Message::Upload(u.clone()).encode().1.len() as u64;
+        let out_frame = 5 + Message::Ack { redirect_to_dfs: false }.encode().1.len() as u64;
+        for _ in 0..3 {
+            c.call(&Message::Upload(u.clone())).unwrap();
+        }
+        // the reply write and its counter update race the client's recv by
+        // a few instructions; poll briefly instead of sleeping blind
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+        while handle.bytes_out.load(Ordering::Relaxed) < 3 * out_frame
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::yield_now();
+        }
+        assert_eq!(handle.bytes_in.load(Ordering::Relaxed), 3 * in_frame);
+        assert_eq!(handle.bytes_out.load(Ordering::Relaxed), 3 * out_frame);
     }
 
     #[test]

@@ -141,6 +141,11 @@ pub struct PlannerConfig {
     pub cores_per_executor: usize,
     /// Cores of the aggregator node's single-node engines.
     pub node_cores: usize,
+    /// Sharded-ingest lane count of the streaming server (S): the
+    /// streaming plan is priced against this parallelism via
+    /// [`VirtualCluster::streaming_time`]'s lanes term.  Typically equal
+    /// to `node_cores` (the server shards one lane per core).
+    pub ingest_lanes: usize,
     /// Whether the XLA engine is loaded (candidates are only enumerated
     /// for substrates that can actually run).
     pub xla_available: bool,
@@ -155,6 +160,7 @@ impl Default for PlannerConfig {
             max_executors: 8,
             cores_per_executor: 3,
             node_cores: 4,
+            ingest_lanes: 4,
             xla_available: false,
             feedback_beta: 0.3,
         }
@@ -299,13 +305,27 @@ impl DispatchPlanner {
         // and its O(C) working set fits the node — including past the
         // buffered party ceiling (that is the class it unlocks).  Wall
         // time is max(arrival span, fold throughput): ingest overlaps
-        // compute, and no store hop is paid.  Only the node is occupied,
-        // so cost is node-rate × latency.
+        // compute, and no store hop is paid.  The fold side is priced at
+        // the server's real sharded-ingest width (`ingest_lanes`), not at
+        // a single lock lane.  Only the node is occupied, so cost is
+        // node-rate × latency.
         if self.classifier.streaming_feasible(update_bytes, algo) {
+            // The server's lane fallback collapses to fewer shards when
+            // the budget cannot hold S accumulators plus an in-flight
+            // frame — price against the width the budget actually admits
+            // (memory/C − 1 in-flight), not the nominal S.
+            let lane_cap = if update_bytes == 0 {
+                usize::MAX
+            } else {
+                ((self.classifier.memory_bytes / update_bytes).saturating_sub(1)).max(1) as usize
+            };
             let stream = self.corr_stream.value_or(1.0)
-                * self
-                    .cluster
-                    .streaming_time(update_bytes, parties, self.cfg.node_cores.max(1));
+                * self.cluster.streaming_time(
+                    update_bytes,
+                    parties,
+                    self.cfg.node_cores.max(1),
+                    self.cfg.ingest_lanes.max(1).min(lane_cap),
+                );
             candidates.push(CandidatePlan {
                 kind: PlanKind::Streaming,
                 cost: PlanCost::new(stream, self.pricing.streaming(stream)),
@@ -425,6 +445,7 @@ mod tests {
                 max_executors: 10,
                 cores_per_executor: 3,
                 node_cores: 64,
+                ingest_lanes: 64,
                 xla_available: false,
                 feedback_beta: 0.3,
             },

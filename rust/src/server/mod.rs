@@ -4,12 +4,14 @@
 //! * `Register`  → party joins the registry, learns the current round;
 //! * `Upload`    → small path: the update is ingested into the current
 //!   round's in-memory state (charged against the node budget); on a
-//!   *streaming* round the handler folds the update into the O(C)
-//!   accumulator on receipt and frees its buffer instead of parking it;
-//!   the Ack carries the redirect flag when the *next* round is predicted
-//!   Large (streaming rounds keep the message-passing channel — that is
-//!   the Fig 1 ceiling lift);
-//! * `GetModel`  → returns the fused model once the round is published.
+//!   *streaming* round the handler folds the update — decoded as a
+//!   borrowed view straight out of the connection's pooled wire buffer —
+//!   into one of S ≈ cores shard-local O(C) accumulators on receipt,
+//!   instead of parking it; the Ack carries the redirect flag when the
+//!   *next* round is predicted Large (streaming rounds keep the
+//!   message-passing channel — that is the Fig 1 ceiling lift);
+//! * `GetModel`  → returns the fused model once the round is published,
+//!   framed zero-copy from the published `Arc`.
 //!
 //! Round progression is driven by the owner (examples / benches) via
 //! [`FlServer::run_round`].
@@ -20,11 +22,14 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{
-    AdaptiveService, PartyRegistry, RoundState, ServiceError, ServiceReport, WorkloadClass,
+    AdaptiveService, PartyRegistry, RoundError, RoundState, ServiceError, ServiceReport,
+    WorkloadClass,
 };
 use crate::fusion::FusionAlgorithm;
 use crate::memsim::MemoryBudget;
-use crate::net::{Message, NetServer, ServerHandle};
+use crate::net::server::Handler;
+use crate::net::{protocol, Message, NetServer, ProtoError, Reply, ServerHandle};
+use crate::tensorstore::ModelUpdateView;
 #[cfg(test)]
 use crate::tensorstore::ModelUpdate;
 
@@ -64,16 +69,17 @@ impl FlServer {
     }
 
     /// Build a round's state for its class.  Streaming rounds fold at
-    /// ingest (one O(C) reservation).
+    /// ingest into S ≈ cores shard lanes (at most S·O(C) reserved, less
+    /// when the budget forces the lane fallback).
     fn make_state(&self, round: u32, class: WorkloadClass) -> RoundState {
         if class == WorkloadClass::Streaming {
-            let threads = self.service.config().node.cores.max(1);
+            let lanes = self.service.config().node.cores.max(1);
             match RoundState::new_streaming(
                 round,
                 class,
                 self.node_budget.clone(),
                 self.algo.clone(),
-                threads,
+                lanes,
             ) {
                 Ok(st) => return st,
                 // Unreachable today: `classify_full` returns Streaming only
@@ -112,8 +118,65 @@ impl FlServer {
 
     /// Serve on `addr` (port 0 = ephemeral).
     pub fn start(self: &Arc<Self>, addr: &str) -> std::io::Result<ServerHandle> {
-        let this = self.clone();
-        NetServer::serve(addr, Arc::new(move |msg: Message| this.handle(msg)))
+        NetServer::serve(addr, Arc::new(FlHandler(self.clone())))
+    }
+
+    /// Shared shape of the upload reply: route the ingest closure to the
+    /// current round's state, turn protocol failures (wrong shape/phase,
+    /// OOM) into error REPLIES — never a coordinator crash — and carry the
+    /// seamless-transition redirect flag on the Ack.
+    fn upload_with<F>(&self, ingest: F) -> Message
+    where
+        F: FnOnce(&RoundState) -> Result<usize, RoundError>,
+    {
+        let round = self.current_round();
+        let redirect = self.service.should_redirect(
+            self.update_bytes,
+            self.registry.active_count().max(1),
+            self.algo.as_ref(),
+        );
+        match self.round_state(round) {
+            // Small rounds park the update; streaming rounds fold it on
+            // receipt (straight out of the wire buffer on the frame path)
+            // and free it.
+            Some(st) if st.class != WorkloadClass::Large => match ingest(&st) {
+                Ok(_) => Message::Ack { redirect_to_dfs: redirect },
+                Err(e) => Message::Error(format!("ingest: {e}")),
+            },
+            Some(_) => {
+                // Large round: message passing is the wrong channel —
+                // instruct the party to use the store.
+                Message::Ack { redirect_to_dfs: true }
+            }
+            None => Message::Error(format!("round {round} not open")),
+        }
+    }
+
+    /// The zero-copy request path ([`Handler::handle_frame`]): uploads are
+    /// decoded as borrowed views and folded in place; model fetches are
+    /// framed from the published `Arc` without cloning the weights.  Every
+    /// other tag goes through the owned [`FlServer::handle`].
+    fn handle_frame(&self, tag: u8, payload: &[u8]) -> Result<Reply, ProtoError> {
+        match tag {
+            protocol::TAG_UPLOAD => {
+                let v = ModelUpdateView::decode(payload)?;
+                Ok(Reply::Msg(self.upload_with(|st| st.ingest_view(&v))))
+            }
+            protocol::TAG_GET_MODEL => {
+                if payload.len() < 4 {
+                    return Err(ProtoError::BadPayload(format!(
+                        "need 4 bytes, got {}",
+                        payload.len()
+                    )));
+                }
+                let round = u32::from_le_bytes(payload[..4].try_into().unwrap());
+                Ok(match self.round_state(round).and_then(|s| s.fused()) {
+                    Some(w) => Reply::Model { round, weights: w },
+                    None => Reply::Msg(Message::NoModel { round }),
+                })
+            }
+            _ => Ok(Reply::Msg(self.handle(Message::decode(tag, payload)?))),
+        }
     }
 
     fn handle(&self, msg: Message) -> Message {
@@ -123,30 +186,7 @@ impl FlServer {
                 self.registry.join(party, round, 0);
                 Message::Registered { party, round }
             }
-            Message::Upload(u) => {
-                let round = self.current_round();
-                let redirect = self.service.should_redirect(
-                    self.update_bytes,
-                    self.registry.active_count().max(1),
-                    self.algo.as_ref(),
-                );
-                match self.round_state(round) {
-                    // Small rounds park the update; streaming rounds fold
-                    // it on receipt and free the buffer.  Either way a bad
-                    // update (wrong shape, wrong phase, OOM) is an error
-                    // REPLY, never a coordinator crash.
-                    Some(st) if st.class != WorkloadClass::Large => match st.ingest(u) {
-                        Ok(_) => Message::Ack { redirect_to_dfs: redirect },
-                        Err(e) => Message::Error(format!("ingest: {e}")),
-                    },
-                    Some(_) => {
-                        // Large round: message passing is the wrong channel —
-                        // instruct the party to use the store.
-                        Message::Ack { redirect_to_dfs: true }
-                    }
-                    None => Message::Error(format!("round {round} not open")),
-                }
-            }
+            Message::Upload(u) => self.upload_with(|st| st.ingest(u)),
             Message::GetModel { round } => match self.round_state(round).and_then(|s| s.fused()) {
                 Some(w) => Message::Model { round, weights: w.as_ref().clone() },
                 None => Message::NoModel { round },
@@ -232,6 +272,20 @@ impl FlServer {
         st.publish(result.0.clone()).map_err(ServiceError::Round)?;
         self.open_round(round + 1);
         Ok(result)
+    }
+}
+
+/// The TCP-facing newtype: routes raw frames into [`FlServer`]'s zero-copy
+/// path while keeping the owned-message path for everything else.
+struct FlHandler(Arc<FlServer>);
+
+impl Handler for FlHandler {
+    fn handle(&self, msg: Message) -> Message {
+        self.0.handle(msg)
+    }
+
+    fn handle_frame(&self, tag: u8, payload: &[u8]) -> Result<Reply, ProtoError> {
+        self.0.handle_frame(tag, payload)
     }
 }
 
@@ -340,12 +394,14 @@ mod tests {
 
     #[test]
     fn streaming_round_lifts_ceiling_over_tcp() {
-        // 64 KB node, 20 KB updates: 40 parties would need ~1.76 MB
-        // buffered, but the round streams — every TCP upload folds on
-        // receipt, peak node memory stays O(C), and no store/Spark is
+        // 1 MB node, 20 KB updates: 40 parties would need ~1.76 MB
+        // buffered (dup 2.0 × headroom 1.1), but the round streams — every
+        // TCP upload folds on receipt into one of S=2 shard lanes, peak
+        // node memory stays at S·O(C) plus the in-flight frames of the
+        // concurrently uploading connections, and no store/Spark is
         // touched.
         let update_len = 5_000usize;
-        let (server, _td) = make_server(64 << 10, (update_len * 4) as u64);
+        let (server, _td) = make_server(1 << 20, (update_len * 4) as u64);
         for p in 0..40u64 {
             server.registry.join(p, 0, 10);
         }
@@ -377,12 +433,17 @@ mod tests {
         assert_eq!(report.engine, "streaming");
         assert_eq!(report.parties, 40);
         assert!(!server.service.spark_started());
-        // peak round memory: accumulator + one in-flight update, NOT 40×
+        // peak round memory: S=2 lane accumulators + the in-flight frames
+        // (≤ 40 concurrent) — and strictly below what buffering 40 parked
+        // updates would have charged, let alone the 2.0× dup the batch
+        // engines add on top.
+        let c_bytes = update_len as u64 * 4;
         assert!(
-            server.node_budget.high_water() <= 2 * (update_len as u64 * 4),
+            server.node_budget.high_water() <= (2 + 40) * c_bytes,
             "peak {}",
             server.node_budget.high_water()
         );
+        assert!(server.node_budget.high_water() < 40 * c_bytes * 2);
 
         // parity with the serial batch over the same update set
         let us: Vec<ModelUpdate> = (0..40u64)

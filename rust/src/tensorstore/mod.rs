@@ -18,7 +18,7 @@
 
 pub mod wire;
 
-pub use wire::{ModelUpdate, WireError};
+pub use wire::{ModelUpdate, ModelUpdateView, WireError};
 
 /// Slice a flat parameter vector into fixed-length chunks, zero-padding the
 /// tail — the geometry the AOT fusion artifacts expect (`chunk_c` f32 each).
@@ -93,6 +93,23 @@ pub fn f32s_as_bytes(v: &[f32]) -> &[u8] {
     #[cfg(target_endian = "big")]
     compile_error!("little-endian host required");
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// Reinterpret bytes as f32s *in place* — the zero-copy decode path.
+/// Returns `None` when the slice cannot be viewed as f32s (length not a
+/// multiple of 4, or the base pointer not 4-aligned — e.g. an offset into
+/// an arbitrary `Vec<u8>`); callers fall back to the copying
+/// [`bytes_to_f32s`].  The network layer reads frames into a 4-aligned
+/// pooled buffer precisely so this path is taken on the ingest hot path.
+pub fn bytes_as_f32s(b: &[u8]) -> Option<&[f32]> {
+    #[cfg(target_endian = "big")]
+    compile_error!("little-endian host required");
+    if b.len() % 4 != 0 || b.as_ptr() as usize % std::mem::align_of::<f32>() != 0 {
+        return None;
+    }
+    // Safety: length and alignment checked above; f32 has no invalid bit
+    // patterns; the lifetime is tied to the input slice.
+    Some(unsafe { std::slice::from_raw_parts(b.as_ptr() as *const f32, b.len() / 4) })
 }
 
 /// Parse bytes as f32s (must be 4-aligned length; copies).

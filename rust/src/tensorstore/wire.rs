@@ -1,6 +1,7 @@
 //! The checksummed wire format for model updates.
 
-use super::{bytes_to_f32s, crc32, f32s_as_bytes};
+use super::{bytes_as_f32s, bytes_to_f32s, crc32, f32s_as_bytes};
+use std::borrow::Cow;
 use std::io::{Read, Write};
 
 const MAGIC: u32 = 0x4541_3031; // "EA01"
@@ -64,15 +65,23 @@ impl ModelUpdate {
 
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.wire_size());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append the wire encoding to `out` (reusing its capacity) — the
+    /// pooled-buffer sibling of [`ModelUpdate::encode`].
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let start = out.len();
+        out.reserve(self.wire_size());
         out.extend_from_slice(&MAGIC.to_le_bytes());
         out.extend_from_slice(&self.party.to_le_bytes());
         out.extend_from_slice(&self.count.to_le_bytes());
         out.extend_from_slice(&self.round.to_le_bytes());
         out.extend_from_slice(&(self.data.len() as u64).to_le_bytes());
         out.extend_from_slice(f32s_as_bytes(&self.data));
-        let crc = crc32(&out);
+        let crc = crc32(&out[start..]);
         out.extend_from_slice(&crc.to_le_bytes());
-        out
     }
 
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<(), WireError> {
@@ -81,6 +90,58 @@ impl ModelUpdate {
     }
 
     pub fn decode(buf: &[u8]) -> Result<ModelUpdate, WireError> {
+        Ok(ModelUpdateView::decode(buf)?.into_owned())
+    }
+
+    /// Borrow this update as a view (no data copy) — for driving the
+    /// zero-copy fold entry points with an already-owned update.
+    pub fn as_view(&self) -> ModelUpdateView<'_> {
+        ModelUpdateView {
+            party: self.party,
+            count: self.count,
+            round: self.round,
+            data: Cow::Borrowed(&self.data),
+        }
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<ModelUpdate, WireError> {
+        let mut head = [0u8; 28];
+        r.read_exact(&mut head)?;
+        let len = u64::from_le_bytes(head[20..28].try_into().unwrap());
+        if len > MAX_ELEMS {
+            return Err(WireError::TooLarge(len));
+        }
+        let mut rest = vec![0u8; len as usize * 4 + 4];
+        r.read_exact(&mut rest)?;
+        let mut buf = Vec::with_capacity(head.len() + rest.len());
+        buf.extend_from_slice(&head);
+        buf.extend_from_slice(&rest);
+        Self::decode(&buf)
+    }
+}
+
+/// A decoded update whose weights may still live in the caller's buffer.
+///
+/// [`ModelUpdateView::decode`] runs the exact validation chain of
+/// [`ModelUpdate::decode`] (CRC first, then magic, then declared length)
+/// but borrows the f32 data in place when the buffer allows it — a frame
+/// read into the network layer's 4-aligned pooled buffer decodes without
+/// copying a single weight, and the streaming fold consumes the floats
+/// straight out of the wire bytes.  Buffers that cannot be reinterpreted
+/// (unaligned base pointer, e.g. an offset into a store block) fall back
+/// to an owned copy, so every caller sees the same `Cow<[f32]>` shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelUpdateView<'a> {
+    pub party: u64,
+    /// FedAvg weight (sample count); IterAvg ignores it.
+    pub count: f32,
+    pub round: u32,
+    pub data: Cow<'a, [f32]>,
+}
+
+impl<'a> ModelUpdateView<'a> {
+    /// Decode a wire buffer, borrowing the weights when possible.
+    pub fn decode(buf: &'a [u8]) -> Result<ModelUpdateView<'a>, WireError> {
         if buf.len() < 32 {
             return Err(WireError::Io(std::io::Error::new(
                 std::io::ErrorKind::UnexpectedEof,
@@ -104,29 +165,47 @@ impl ModelUpdate {
         if len > MAX_ELEMS {
             return Err(WireError::TooLarge(len));
         }
-        let data = bytes_to_f32s(&body[28..]);
-        if data.len() as u64 != len {
+        let raw = &body[28..];
+        if raw.len() % 4 != 0 || (raw.len() / 4) as u64 != len {
             return Err(WireError::Io(std::io::Error::new(
                 std::io::ErrorKind::InvalidData,
-                format!("declared {len} elems, found {}", data.len()),
+                format!("declared {len} elems, found {} bytes", raw.len()),
             )));
         }
-        Ok(ModelUpdate { party, count, round, data })
+        let data = match bytes_as_f32s(raw) {
+            Some(s) => Cow::Borrowed(s),
+            None => Cow::Owned(bytes_to_f32s(raw)),
+        };
+        Ok(ModelUpdateView { party, count, round, data })
     }
 
-    pub fn read_from<R: Read>(r: &mut R) -> Result<ModelUpdate, WireError> {
-        let mut head = [0u8; 28];
-        r.read_exact(&mut head)?;
-        let len = u64::from_le_bytes(head[20..28].try_into().unwrap());
-        if len > MAX_ELEMS {
-            return Err(WireError::TooLarge(len));
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// In-memory footprint the memory accountant charges for this update.
+    pub fn mem_bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+
+    /// Materialise an owned [`ModelUpdate`] (copies only if still borrowed).
+    pub fn into_owned(self) -> ModelUpdate {
+        ModelUpdate {
+            party: self.party,
+            count: self.count,
+            round: self.round,
+            data: self.data.into_owned(),
         }
-        let mut rest = vec![0u8; len as usize * 4 + 4];
-        r.read_exact(&mut rest)?;
-        let mut buf = Vec::with_capacity(head.len() + rest.len());
-        buf.extend_from_slice(&head);
-        buf.extend_from_slice(&rest);
-        Self::decode(&buf)
+    }
+
+    /// Owned copy, leaving the view usable (the buffered ingest path must
+    /// park updates past the life of the wire buffer).
+    pub fn to_update(&self) -> ModelUpdate {
+        ModelUpdate::new(self.party, self.count, self.round, self.data.to_vec())
     }
 }
 
@@ -196,5 +275,70 @@ mod tests {
     fn empty_update_roundtrips() {
         let u = ModelUpdate::new(0, 0.0, 0, vec![]);
         assert_eq!(ModelUpdate::decode(&u.encode()).unwrap(), u);
+    }
+
+    #[test]
+    fn encode_into_appends_and_matches_encode() {
+        let u = sample(33);
+        let mut buf = vec![0xAAu8; 7]; // pre-existing bytes must survive
+        u.encode_into(&mut buf);
+        assert_eq!(&buf[..7], &[0xAA; 7]);
+        assert_eq!(&buf[7..], &u.encode()[..]);
+    }
+
+    #[test]
+    fn view_decode_matches_owned_decode() {
+        let u = sample(257);
+        let buf = u.encode();
+        let v = ModelUpdateView::decode(&buf).unwrap();
+        assert_eq!(v.party, u.party);
+        assert_eq!(v.count, u.count);
+        assert_eq!(v.round, u.round);
+        assert_eq!(&*v.data, &u.data[..]);
+        assert_eq!(v.mem_bytes(), u.mem_bytes());
+        assert_eq!(v.into_owned(), u);
+    }
+
+    #[test]
+    fn view_decode_enforces_crc_and_magic() {
+        let u = sample(64);
+        let mut buf = u.encode();
+        buf[40] ^= 0xFF;
+        assert!(matches!(
+            ModelUpdateView::decode(&buf),
+            Err(WireError::BadCrc { .. })
+        ));
+        let mut buf = u.encode();
+        buf[0] ^= 0x01;
+        let body_len = buf.len() - 4;
+        let crc = crc32(&buf[..body_len]);
+        buf[body_len..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            ModelUpdateView::decode(&buf),
+            Err(WireError::BadMagic(_))
+        ));
+    }
+
+    #[test]
+    fn view_on_aligned_buffer_borrows() {
+        // A frame landed in a 4-aligned pool: the view must borrow, not copy.
+        let u = sample(100);
+        let enc = u.encode();
+        let mut words = vec![0u32; enc.len().div_ceil(4)];
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u8, enc.len())
+        };
+        bytes.copy_from_slice(&enc);
+        let v = ModelUpdateView::decode(&bytes[..]).unwrap();
+        assert!(matches!(v.data, Cow::Borrowed(_)), "aligned decode must borrow");
+        assert_eq!(v.to_update(), u);
+    }
+
+    #[test]
+    fn as_view_borrows_owned_update() {
+        let u = sample(12);
+        let v = u.as_view();
+        assert!(matches!(v.data, Cow::Borrowed(_)));
+        assert_eq!(v.to_update(), u);
     }
 }

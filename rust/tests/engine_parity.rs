@@ -6,7 +6,9 @@
 
 use elastiagg::bag::BagContext;
 use elastiagg::dfs::{DfsClient, NameNode};
-use elastiagg::engine::{AggregationEngine, ParallelEngine, SerialEngine, StreamingFold, XlaEngine};
+use elastiagg::engine::{
+    AggregationEngine, ParallelEngine, SerialEngine, ShardedFold, StreamingFold, XlaEngine,
+};
 use elastiagg::memsim::MemoryBudget;
 use elastiagg::fusion::{by_name, FusionAlgorithm};
 use elastiagg::mapreduce::{scheduler::JobConfig, ExecutorConfig, SparkContext};
@@ -166,6 +168,56 @@ fn streaming_partials_merge_out_of_order() {
     let mut b = build(&us[7..]);
     b.merge(algo.as_ref(), build(&us[..7])).unwrap();
     all_close(&b.finish(algo.as_ref()).unwrap(), &want, 1e-4, 1e-5).unwrap();
+}
+
+#[test]
+fn sharded_concurrent_ingest_matches_serial_within_tolerance() {
+    // The sharded-ingest acceptance bar: W writer threads racing over S
+    // lanes must produce the serial batch result within the documented
+    // merge-associativity tolerance (the S-way merge regroups additions,
+    // so the bar is all_close, not bit equality), for every decomposable
+    // algorithm and for lane counts above and below the writer count.
+    for name in ["fedavg", "iteravg", "clipped"] {
+        let algo = by_name(name).unwrap();
+        let us = updates(37, 48, 3_000);
+        let mut bd = Breakdown::new();
+        let want = SerialEngine::unbounded().aggregate(algo.as_ref(), &us, &mut bd).unwrap();
+        for lanes in [1usize, 3, 8] {
+            let fold = ShardedFold::new(algo.as_ref(), lanes, MemoryBudget::unbounded()).unwrap();
+            std::thread::scope(|s| {
+                for chunk in us.chunks(8) {
+                    let fold = &fold;
+                    let algo = algo.as_ref();
+                    s.spawn(move || {
+                        for u in chunk {
+                            fold.fold(algo, u).unwrap();
+                        }
+                    });
+                }
+            });
+            let (got, folded) = fold.finish(algo.as_ref()).unwrap();
+            assert_eq!(folded, 48, "{name} lanes={lanes}");
+            all_close(&got, &want, 1e-4, 1e-5)
+                .unwrap_or_else(|e| panic!("sharded({name}, lanes={lanes}): {e}"));
+        }
+    }
+}
+
+#[test]
+fn sharded_single_lane_is_bit_identical_to_streaming_fold() {
+    // With one lane and one writer the sharded wrapper IS the streaming
+    // fold: same algebra, same op order, bit-identical output.
+    let algo = by_name("fedavg").unwrap();
+    let us = updates(41, 11, 2_000);
+    let mut f = StreamingFold::new(algo.as_ref(), 1, MemoryBudget::unbounded()).unwrap();
+    let sharded = ShardedFold::new(algo.as_ref(), 1, MemoryBudget::unbounded()).unwrap();
+    for u in &us {
+        f.fold(algo.as_ref(), u).unwrap();
+        sharded.fold(algo.as_ref(), u).unwrap();
+    }
+    let want = f.finish(algo.as_ref()).unwrap();
+    let (got, _) = sharded.finish(algo.as_ref()).unwrap();
+    assert_eq!(got, want);
 }
 
 #[test]
