@@ -79,6 +79,7 @@ fn main() {
             ingest_lanes: 64, // streaming priced at the sharded width
             xla_available: true,
             feedback_beta: 0.3,
+            expected_participation: 1.0, // this trace has no dropout
         },
     );
     let mut scaler = Autoscaler::new(

@@ -231,6 +231,10 @@ mod tests {
     use crate::dfs::datanode::tempdir::TempDir;
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn federated_training_learns() {
         let td = TempDir::new();
         let cfg = TrainConfig {
@@ -255,6 +259,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn tiny_node_memory_forces_distributed_rounds() {
         let td = TempDir::new();
         let cfg = TrainConfig {

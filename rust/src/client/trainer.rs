@@ -92,6 +92,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn local_training_reduces_loss() {
         let rtm = rtm();
         let ds = SyntheticDataset::new(rtm.manifest().layers[0], 11, 0.0);
@@ -105,6 +109,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn evaluation_improves_after_training() {
         let rtm = rtm();
         let ds = SyntheticDataset::new(rtm.manifest().layers[0], 13, 0.0);
@@ -118,6 +126,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn updates_from_different_parties_differ() {
         let rtm = rtm();
         let ds = SyntheticDataset::new(rtm.manifest().layers[0], 17, 1.0);

@@ -146,6 +146,24 @@ impl VirtualCluster {
         ingest.max(fold) + drain
     }
 
+    /// [`VirtualCluster::streaming_time`] at an expected-participation
+    /// factor `p ∈ (0, 1]`: of `n` registered parties only ~`n·p` deliver
+    /// an upload (dropouts, stragglers past the round deadline), so the
+    /// round's arrival span and fold work shrink accordingly.  The planner
+    /// prices every quorum round through this entry; `p = 1` is exactly
+    /// `streaming_time`.
+    pub fn streaming_time_p(
+        &self,
+        update_bytes: u64,
+        n: usize,
+        cores: usize,
+        lanes: usize,
+        p: f64,
+    ) -> f64 {
+        let eff = (((n as f64) * p.clamp(0.0, 1.0)).ceil() as usize).min(n);
+        self.streaming_time(update_bytes, eff, cores, lanes)
+    }
+
     // ---------------------------------------------------------------
     // Distributed path (Figs 7–13)
     // ---------------------------------------------------------------
@@ -342,6 +360,20 @@ mod tests {
         let p = vc();
         let span = p.streaming_ingest_span(u, n);
         assert!(p.streaming_time(u, n, 64, 64) >= span);
+    }
+
+    #[test]
+    fn participation_scales_the_streaming_span() {
+        let v = vc();
+        let u = (4.6 * 1024.0 * 1024.0) as u64;
+        let full = v.streaming_time_p(u, 30_000, 64, 64, 1.0);
+        assert_eq!(full, v.streaming_time(u, 30_000, 64, 64));
+        // ingest-bound geometry: half the arrivals ≈ half the span
+        let half = v.streaming_time_p(u, 30_000, 64, 64, 0.5);
+        assert!((0.45..0.60).contains(&(half / full)), "{}", half / full);
+        // monotone in p, and floored at zero arrivals
+        assert!(v.streaming_time_p(u, 30_000, 64, 64, 0.2) < half);
+        assert_eq!(v.streaming_time_p(u, 0, 64, 64, 0.5), 0.0);
     }
 
     #[test]

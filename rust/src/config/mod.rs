@@ -81,6 +81,16 @@ pub struct ServiceConfig {
     pub executor_usd_per_s: f64,
     /// Largest executor pool the planner/autoscaler may use.
     pub max_executors: usize,
+    /// Quorum for a driven round, as a fraction of the expected uploads:
+    /// at the round deadline, `ceil(fraction × expected)` folded updates
+    /// aggregate as a Quorum round; fewer abort it.  1.0 = all-or-abort.
+    pub quorum_fraction: f64,
+    /// Deadline of a driven round in seconds (`run_round_configured`).
+    pub round_deadline_s: f64,
+    /// Prior on the fraction of registered parties that actually deliver
+    /// an upload (edge fleets drop out and straggle); the planner prices
+    /// K·p uploads and calibrates p from observed rounds.
+    pub expected_participation: f64,
 }
 
 impl Default for ServiceConfig {
@@ -97,6 +107,9 @@ impl Default for ServiceConfig {
             node_usd_per_s: 8.5e-4,
             executor_usd_per_s: 5.6e-5,
             max_executors: 8,
+            quorum_fraction: 1.0,
+            round_deadline_s: 600.0,
+            expected_participation: 1.0,
         }
     }
 }
@@ -160,6 +173,19 @@ impl ServiceConfig {
         if let Some(v) = j.get("max_executors").as_usize() {
             c.max_executors = v;
         }
+        if let Some(v) = j.get("quorum_fraction").as_f64() {
+            c.quorum_fraction = v.clamp(0.0, 1.0);
+        }
+        if let Some(v) = j.get("round_deadline_s").as_f64() {
+            // a negative/NaN/oversized deadline would panic in
+            // Duration::from_secs_f64; cap at one year
+            if v.is_finite() && v >= 0.0 {
+                c.round_deadline_s = v.min(31_536_000.0);
+            }
+        }
+        if let Some(v) = j.get("expected_participation").as_f64() {
+            c.expected_participation = v.clamp(0.0, 1.0);
+        }
         c
     }
 
@@ -181,6 +207,9 @@ impl ServiceConfig {
             ("node_usd_per_s", Json::num(self.node_usd_per_s)),
             ("executor_usd_per_s", Json::num(self.executor_usd_per_s)),
             ("max_executors", Json::num(self.max_executors as f64)),
+            ("quorum_fraction", Json::num(self.quorum_fraction)),
+            ("round_deadline_s", Json::num(self.round_deadline_s)),
+            ("expected_participation", Json::num(self.expected_participation)),
         ])
     }
 }
@@ -233,6 +262,36 @@ mod tests {
         assert_eq!(c2.node_usd_per_s, 1e-3);
         assert_eq!(c2.executor_usd_per_s, 2e-5);
         assert_eq!(c2.max_executors, 12);
+    }
+
+    #[test]
+    fn fault_knobs_roundtrip_and_default_to_strict() {
+        let c = ServiceConfig::default();
+        assert_eq!(c.quorum_fraction, 1.0);
+        assert_eq!(c.expected_participation, 1.0);
+        let mut c2 = c.clone();
+        c2.quorum_fraction = 0.6;
+        c2.round_deadline_s = 12.5;
+        c2.expected_participation = 0.8;
+        let c3 = ServiceConfig::from_json(&c2.to_json());
+        assert_eq!(c3.quorum_fraction, 0.6);
+        assert_eq!(c3.round_deadline_s, 12.5);
+        assert_eq!(c3.expected_participation, 0.8);
+        // out-of-range values clamp to the [0, 1] fraction domain
+        let j = Json::parse(r#"{"quorum_fraction": 2.5, "expected_participation": -1.0}"#).unwrap();
+        let c4 = ServiceConfig::from_json(&j);
+        assert_eq!(c4.quorum_fraction, 1.0);
+        assert_eq!(c4.expected_participation, 0.0);
+        // a negative deadline would panic Duration::from_secs_f64 — it
+        // must be rejected at load, keeping the default
+        let j = Json::parse(r#"{"round_deadline_s": -1}"#).unwrap();
+        let c5 = ServiceConfig::from_json(&j);
+        assert_eq!(c5.round_deadline_s, 600.0);
+        // ... and an oversized one caps at a year (from_secs_f64 also
+        // panics past ~1.8e19 s)
+        let j = Json::parse(r#"{"round_deadline_s": 1e20}"#).unwrap();
+        let c6 = ServiceConfig::from_json(&j);
+        assert_eq!(c6.round_deadline_s, 31_536_000.0);
     }
 
     #[test]

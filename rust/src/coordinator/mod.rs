@@ -8,8 +8,10 @@
 //! * [`registry`] — the party registry (join/dropout/selection — FL parties
 //!   "can join during training ... and drop out anytime", §III-C);
 //! * [`round`] — the round state machine (collecting → aggregating →
-//!   published), with two ingest modes: buffered (O(K·C)) and streaming
-//!   (each update folds into an O(C) accumulator on arrival);
+//!   published, or aborted), with two ingest modes: buffered (O(K·C)) and
+//!   streaming (each update folds into an O(C) accumulator on arrival),
+//!   per-party dedup of retransmitted uploads, and an abort path that
+//!   returns every reservation to the node budget;
 //! * [`service`] — the adaptive aggregation service itself: owns the
 //!   engines, the Spark/DFS path, the planner and the autoscaler; plans
 //!   each round, transitions seamlessly (preemptively redirecting parties
@@ -23,5 +25,5 @@ pub mod service;
 
 pub use classifier::{WorkloadClass, WorkloadClassifier};
 pub use registry::PartyRegistry;
-pub use round::{RoundError, RoundPhase, RoundState};
+pub use round::{RoundError, RoundOutcome, RoundPhase, RoundState};
 pub use service::{AdaptiveService, ServiceError, ServiceReport};

@@ -19,7 +19,25 @@
 //!
 //! Phase misuse and shape mismatches surface as [`RoundError`] — a
 //! misbehaving party can no longer crash the coordinator with an assert.
+//!
+//! **Fault model** (edge fleets misbehave; the round survives):
+//!
+//! * *retransmission* — every upload is admitted through a per-round dedup
+//!   ledger (sharded by party id so different parties don't contend)
+//!   before any fold lane is picked, so a duplicated frame folds exactly
+//!   once; the retransmit gets a typed [`RoundError::Duplicate`] carrying
+//!   the accepted upload's nonce once the original durably folded, or
+//!   [`RoundError::InFlight`] (retry) while it is still folding;
+//! * *stragglers* — an upload racing the seal (quorum reached, deadline
+//!   hit, or abort) maps to [`RoundError::WrongPhase`], never a panic;
+//! * *dropouts* — a round that cannot reach its quorum is
+//!   [aborted](RoundState::abort): the parked updates (buffered) or the
+//!   sharded fold's lane scratch (streaming) are dropped and their
+//!   reservations released back to the [`MemoryBudget`], so a dead round
+//!   cannot leak the node's aggregation memory.  [`RoundOutcome`] names
+//!   how a driven round ended (see `FlServer::run_round_quorum`).
 
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -35,6 +53,24 @@ pub enum RoundPhase {
     Collecting,
     Aggregating,
     Published,
+    /// The round was abandoned (below quorum at its deadline, or the owner
+    /// cancelled it); its ingest state is dropped and every memory
+    /// reservation released.  Terminal.
+    Aborted,
+}
+
+/// How a driven round ended — the typed result of the quorum lifecycle
+/// (`Open → Ingest → {Complete | Quorum | Aborted}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundOutcome {
+    /// Every expected upload arrived before the deadline.
+    Complete,
+    /// The deadline hit with at least the quorum (but not all expected)
+    /// folded; the round aggregated the partial set.
+    Quorum,
+    /// The deadline hit below quorum: the round was aborted and its memory
+    /// reservations released — no model was published.
+    Aborted,
 }
 
 /// What went wrong with a round-state operation.  These are *protocol*
@@ -46,6 +82,16 @@ pub enum RoundError {
     WrongPhase { round: u32, expected: RoundPhase, actual: RoundPhase },
     /// An update disagreed with the round's established parameter count.
     ShapeMismatch { want: usize, got: usize },
+    /// This party's update was already folded into the round; `nonce` is
+    /// the accepted upload's nonce, so a retransmitting client can tell
+    /// "my frame landed" apart from "someone else used my id".
+    Duplicate { party: u64, nonce: u64 },
+    /// This party's upload is admitted but still folding on another
+    /// connection: it is NOT yet durably absorbed (the fold may still
+    /// fail and release the slot), so the retransmit must retry rather
+    /// than be told `Duplicate`.  The server surfaces this as a plain
+    /// (retryable) error reply.
+    InFlight { party: u64 },
     /// The node budget is exhausted (the Fig 1 ceiling, as an error).
     Memory(OutOfMemory),
     /// A streaming-only operation was called on a buffered round.
@@ -64,6 +110,12 @@ impl std::fmt::Display for RoundError {
             }
             RoundError::ShapeMismatch { want, got } => {
                 write!(f, "update length {got} != round's {want}")
+            }
+            RoundError::Duplicate { party, nonce } => {
+                write!(f, "party {party} already folded (accepted nonce {nonce:#x})")
+            }
+            RoundError::InFlight { party } => {
+                write!(f, "party {party} upload still folding; retry")
             }
             RoundError::Memory(e) => write!(f, "memory: {e}"),
             RoundError::NotStreaming => write!(f, "round is buffered, not streaming"),
@@ -113,6 +165,21 @@ enum IngestState {
     Drained,
 }
 
+/// The admission-ledger shard count: dedup must serialize same-party
+/// frames, but uploads from *different* parties should contend no more
+/// than the sharded fold they feed — so the ledger shards by party id
+/// instead of reintroducing one global lock on the ingest hot path.
+const LEDGER_SHARDS: usize = 16;
+
+/// One party's admission slot: claimed at ingest, marked folded once the
+/// fold durably landed.  The distinction drives the retransmit reply —
+/// `Duplicate` only after the fold succeeded, `InFlight` while it might
+/// still fail and release the slot.
+struct Slot {
+    nonce: u64,
+    folded: bool,
+}
+
 /// One round's mutable state.
 pub struct RoundState {
     pub round: u32,
@@ -121,6 +188,13 @@ pub struct RoundState {
     ingest: Mutex<IngestState>,
     fused: Mutex<Option<Arc<Vec<f32>>>>,
     budget: MemoryBudget,
+    /// Dedup admission ledger: party id → admission [`Slot`], sharded by
+    /// party.  Checked (and claimed) *before* any fold lane is picked, so
+    /// a retransmitted frame racing its original through the sharded
+    /// ingest cannot fold twice — one of the two claims the slot, the
+    /// other gets [`RoundError::Duplicate`] (folded) or
+    /// [`RoundError::InFlight`] (original still folding).
+    seen: Vec<Mutex<BTreeMap<u64, Slot>>>,
 }
 
 impl RoundState {
@@ -133,6 +207,7 @@ impl RoundState {
             ingest: Mutex::new(IngestState::Buffered { updates: Vec::new(), len: None }),
             fused: Mutex::new(None),
             budget,
+            seen: (0..LEDGER_SHARDS).map(|_| Mutex::new(BTreeMap::new())).collect(),
         }
     }
 
@@ -156,6 +231,7 @@ impl RoundState {
             ingest: Mutex::new(IngestState::Streaming { fold, algo }),
             fused: Mutex::new(None),
             budget,
+            seen: (0..LEDGER_SHARDS).map(|_| Mutex::new(BTreeMap::new())).collect(),
         })
     }
 
@@ -269,13 +345,75 @@ impl RoundState {
         }
     }
 
+    /// Claim this party's once-per-round admission slot.  MUST run before
+    /// any lane is picked or byte is charged: the sharded fold assigns
+    /// lanes round-robin, so two copies of the same frame admitted
+    /// concurrently would land on different lanes and both fold — the
+    /// ledger is the only serialization point ahead of that.
+    fn ledger(&self, party: u64) -> &Mutex<BTreeMap<u64, Slot>> {
+        &self.seen[(party as usize) % LEDGER_SHARDS]
+    }
+
+    fn admit(&self, party: u64, nonce: u64) -> Result<(), RoundError> {
+        match self.ledger(party).lock().unwrap().entry(party) {
+            std::collections::btree_map::Entry::Occupied(e) => {
+                let slot = e.get();
+                if slot.folded {
+                    Err(RoundError::Duplicate { party, nonce: slot.nonce })
+                } else {
+                    // The original is still folding and may yet fail: the
+                    // retransmit must not be told "landed" prematurely.
+                    Err(RoundError::InFlight { party })
+                }
+            }
+            std::collections::btree_map::Entry::Vacant(v) => {
+                v.insert(Slot { nonce, folded: false });
+                Ok(())
+            }
+        }
+    }
+
+    /// The fold durably landed: retransmits from here on are `Duplicate`.
+    fn mark_folded(&self, party: u64) {
+        if let Some(slot) = self.ledger(party).lock().unwrap().get_mut(&party) {
+            slot.folded = true;
+        }
+    }
+
+    /// Release a claimed slot after a failed fold (OOM, shape, seal race)
+    /// so an honest retry is not condemned to `Duplicate` forever.
+    fn unadmit(&self, party: u64) {
+        self.ledger(party).lock().unwrap().remove(&party);
+    }
+
     /// Ingest an update on the message-passing path.  Buffered rounds
     /// charge node memory per update — the exact mechanism behind the
     /// paper's Fig 1 party ceiling; streaming rounds fold the update into
     /// a shard-local accumulator and release its buffer before returning.
-    /// Both paths shape-check against the round's first update.
+    /// Both paths shape-check against the round's first update and dedup
+    /// on party id (the nonce defaults to the party id — use
+    /// [`RoundState::ingest_tagged`] to carry the wire nonce).
     pub fn ingest(&self, u: ModelUpdate) -> Result<usize, RoundError> {
+        let nonce = u.party;
+        self.ingest_tagged(u, nonce)
+    }
+
+    /// [`RoundState::ingest`] with an explicit retransmission nonce: the
+    /// nonce is recorded in the admission ledger and echoed in the typed
+    /// `Duplicate` a retransmit receives.
+    pub fn ingest_tagged(&self, u: ModelUpdate, nonce: u64) -> Result<usize, RoundError> {
         self.require_phase(RoundPhase::Collecting)?;
+        let party = u.party;
+        self.admit(party, nonce)?;
+        let r = self.ingest_inner(u);
+        match &r {
+            Ok(_) => self.mark_folded(party),
+            Err(_) => self.unadmit(party),
+        }
+        r
+    }
+
+    fn ingest_inner(&self, u: ModelUpdate) -> Result<usize, RoundError> {
         if let Some((fold, algo)) = self.streaming_lane()? {
             let n = self.fold_streaming(&fold, u.mem_bytes(), || fold.fold(algo.as_ref(), &u))?;
             drop(u); // buffer released here, not at aggregation time
@@ -289,7 +427,26 @@ impl RoundState {
     /// never materialises an owned `Vec<f32>`; buffered rounds copy once
     /// (parking an update past the life of the wire buffer requires it).
     pub fn ingest_view(&self, v: &ModelUpdateView<'_>) -> Result<usize, RoundError> {
+        self.ingest_view_tagged(v, v.party)
+    }
+
+    /// [`RoundState::ingest_view`] with an explicit retransmission nonce.
+    pub fn ingest_view_tagged(
+        &self,
+        v: &ModelUpdateView<'_>,
+        nonce: u64,
+    ) -> Result<usize, RoundError> {
         self.require_phase(RoundPhase::Collecting)?;
+        self.admit(v.party, nonce)?;
+        let r = self.ingest_view_inner(v);
+        match &r {
+            Ok(_) => self.mark_folded(v.party),
+            Err(_) => self.unadmit(v.party),
+        }
+        r
+    }
+
+    fn ingest_view_inner(&self, v: &ModelUpdateView<'_>) -> Result<usize, RoundError> {
         if let Some((fold, algo)) = self.streaming_lane()? {
             return self.fold_streaming(&fold, v.mem_bytes(), || fold.fold_view(algo.as_ref(), v));
         }
@@ -413,6 +570,42 @@ impl RoundState {
 
     pub fn fused(&self) -> Option<Arc<Vec<f32>>> {
         self.fused.lock().unwrap().clone()
+    }
+
+    /// Abandon the round (below quorum at its deadline, or cancelled by
+    /// the owner): drop the ingest state — the buffered updates' per-party
+    /// reservations, or the sharded fold's lane scratch — releasing every
+    /// byte back to the [`MemoryBudget`].  Valid from `Collecting` or
+    /// `Aggregating`; a published or already-aborted round is `WrongPhase`.
+    ///
+    /// Streaming rounds are *sealed* before the state is dropped, so an
+    /// upload racing the abort is either folded-then-discarded with the
+    /// rest of the lane scratch or rejected with the same `WrongPhase` a
+    /// straggler after `finish_streaming` gets — never a panic, never a
+    /// leaked in-flight reservation (the in-flight charge is RAII-scoped
+    /// to the fold call itself).
+    pub fn abort(&self) -> Result<(), RoundError> {
+        let mut phase = self.phase.lock().unwrap();
+        match *phase {
+            RoundPhase::Collecting | RoundPhase::Aggregating => {}
+            actual => {
+                return Err(RoundError::WrongPhase {
+                    round: self.round,
+                    expected: RoundPhase::Collecting,
+                    actual,
+                })
+            }
+        }
+        let mut state = self.ingest.lock().unwrap();
+        if let IngestState::Streaming { fold, .. } = &*state {
+            fold.seal();
+        }
+        // Dropping the state releases the buffered reservations; the
+        // sharded fold's lane scratch follows when the last transient
+        // handler clone drops (immediately, absent a mid-flight fold).
+        *state = IngestState::Drained;
+        *phase = RoundPhase::Aborted;
+        Ok(())
     }
 }
 
@@ -713,6 +906,293 @@ mod tests {
             1,
         )
         .is_err());
+    }
+
+    #[test]
+    fn duplicate_upload_folds_exactly_once_both_modes() {
+        // Same party, same round: the second frame is a typed Duplicate
+        // carrying the accepted nonce, and only one update lands.
+        let buffered = RoundState::new(0, WorkloadClass::Small, MemoryBudget::unbounded());
+        buffered.ingest_tagged(upd(5, 32), 0xA).unwrap();
+        assert!(matches!(
+            buffered.ingest_tagged(upd(5, 32), 0xB),
+            Err(RoundError::Duplicate { party: 5, nonce: 0xA })
+        ));
+        assert_eq!(buffered.collected(), 1);
+
+        let streaming = RoundState::new_streaming(
+            0,
+            WorkloadClass::Streaming,
+            MemoryBudget::unbounded(),
+            Arc::new(FedAvg),
+            4,
+        )
+        .unwrap();
+        streaming.ingest_tagged(upd(5, 32), 0xA).unwrap();
+        assert!(matches!(
+            streaming.ingest_tagged(upd(5, 32), 0xA),
+            Err(RoundError::Duplicate { party: 5, nonce: 0xA })
+        ));
+        // views dedup through the same ledger
+        assert!(matches!(
+            streaming.ingest_view_tagged(&upd(5, 32).as_view(), 0xC),
+            Err(RoundError::Duplicate { party: 5, .. })
+        ));
+        let (_, folded) = streaming.finish_streaming().unwrap();
+        assert_eq!(folded, 1);
+    }
+
+    /// The sharded-path retransmit window, as a regression test: lanes are
+    /// picked round-robin, so WITHOUT admission-time dedup a duplicate
+    /// racing its original lands on a second lane and folds twice.  Racing
+    /// the two frames from two threads must always yield exactly one fold
+    /// and one typed Duplicate.
+    #[test]
+    fn duplicate_racing_original_folds_exactly_once() {
+        for trial in 0..48u64 {
+            let s = Arc::new(
+                RoundState::new_streaming(
+                    0,
+                    WorkloadClass::Streaming,
+                    MemoryBudget::unbounded(),
+                    Arc::new(FedAvg),
+                    4,
+                )
+                .unwrap(),
+            );
+            let barrier = Arc::new(std::sync::Barrier::new(2));
+            let results: Vec<Result<usize, RoundError>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..2)
+                    .map(|_| {
+                        let s = s.clone();
+                        let b = barrier.clone();
+                        scope.spawn(move || {
+                            b.wait();
+                            s.ingest_tagged(upd(7, 64), 0xBEEF)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let oks = results.iter().filter(|r| r.is_ok()).count();
+            // the loser sees Duplicate (winner already folded) or InFlight
+            // (winner mid-fold) — never a second Ok, never a panic
+            let rejected = results
+                .iter()
+                .filter(|r| {
+                    matches!(
+                        r,
+                        Err(RoundError::Duplicate { party: 7, nonce: 0xBEEF })
+                            | Err(RoundError::InFlight { party: 7 })
+                    )
+                })
+                .count();
+            assert_eq!((oks, rejected), (1, 1), "trial {trial}: {results:?}");
+            assert_eq!(s.collected(), 1, "trial {trial}");
+            let (out, folded) = s.finish_streaming().unwrap();
+            assert_eq!(folded, 1);
+            assert!((out[0] - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn failed_fold_releases_the_admission_slot() {
+        // An update that OOMs (or otherwise fails) must not burn its
+        // party's once-per-round slot: the retry is NOT a Duplicate.
+        let s = RoundState::new_streaming(
+            0,
+            WorkloadClass::Streaming,
+            MemoryBudget::new(600),
+            Arc::new(FedAvg),
+            2,
+        )
+        .unwrap();
+        // 500 B frame + 500 B lane scratch cannot coexist in 600 B
+        assert!(matches!(s.ingest_tagged(upd(3, 125), 1), Err(RoundError::Memory(_))));
+        // the smaller retry from the same party is admitted and folds
+        s.ingest_tagged(upd(3, 16), 2).unwrap();
+        assert_eq!(s.collected(), 1);
+        // ... and only NOW is the slot burned
+        assert!(matches!(
+            s.ingest_tagged(upd(3, 16), 3),
+            Err(RoundError::Duplicate { party: 3, nonce: 2 })
+        ));
+    }
+
+    #[test]
+    fn abort_releases_memory_both_modes() {
+        // buffered: the parked updates' reservations return to the budget
+        let budget = MemoryBudget::new(1 << 20);
+        let r = RoundState::new(2, WorkloadClass::Small, budget.clone());
+        r.ingest(upd(0, 200)).unwrap();
+        r.ingest(upd(1, 200)).unwrap();
+        assert_eq!(budget.in_use(), 1600);
+        r.abort().unwrap();
+        assert_eq!(r.phase(), RoundPhase::Aborted);
+        assert_eq!(budget.in_use(), 0, "buffered abort must release the parked updates");
+
+        // streaming: the sharded fold's lane scratch returns too
+        let budget = MemoryBudget::new(1 << 20);
+        let s = RoundState::new_streaming(
+            3,
+            WorkloadClass::Streaming,
+            budget.clone(),
+            Arc::new(FedAvg),
+            2,
+        )
+        .unwrap();
+        for p in 0..6u64 {
+            s.ingest(upd(p, 128)).unwrap();
+        }
+        assert!(budget.in_use() > 0);
+        s.abort().unwrap();
+        assert_eq!(budget.in_use(), 0, "streaming abort must release the lane scratch");
+        // the sealed fold rejects stragglers as WrongPhase, not a panic
+        assert!(matches!(
+            s.ingest(upd(9, 128)),
+            Err(RoundError::WrongPhase { actual: RoundPhase::Aborted, .. })
+        ));
+    }
+
+    #[test]
+    fn quorum_abort_transition_table() {
+        // Table-driven over both modes: which phases may abort, and what
+        // every operation returns afterwards.
+        #[derive(Clone, Copy)]
+        enum Mode {
+            Buffered,
+            Streaming,
+        }
+        for mode in [Mode::Buffered, Mode::Streaming] {
+            let make = |round: u32| match mode {
+                Mode::Buffered => {
+                    RoundState::new(round, WorkloadClass::Small, MemoryBudget::unbounded())
+                }
+                Mode::Streaming => RoundState::new_streaming(
+                    round,
+                    WorkloadClass::Streaming,
+                    MemoryBudget::unbounded(),
+                    Arc::new(FedAvg),
+                    2,
+                )
+                .unwrap(),
+            };
+
+            // Collecting -> Aborted is the dropout path
+            let r = make(0);
+            r.ingest(upd(0, 16)).unwrap();
+            r.abort().unwrap();
+            assert_eq!(r.phase(), RoundPhase::Aborted);
+            // every later operation is a typed WrongPhase against Aborted
+            assert!(matches!(
+                r.ingest(upd(1, 16)),
+                Err(RoundError::WrongPhase { actual: RoundPhase::Aborted, .. })
+            ));
+            assert!(matches!(r.begin_aggregation(), Err(RoundError::WrongPhase { .. })));
+            assert!(matches!(r.finish_streaming(), Err(RoundError::WrongPhase { .. })));
+            assert!(matches!(r.publish(vec![]), Err(RoundError::WrongPhase { .. })));
+            assert!(matches!(
+                r.abort(),
+                Err(RoundError::WrongPhase { actual: RoundPhase::Aborted, .. })
+            ));
+            assert!(r.fused().is_none(), "an aborted round never publishes");
+            assert_eq!(r.collected(), 0);
+
+            // Aggregating -> Aborted is the owner-cancel path
+            let r = make(1);
+            r.ingest(upd(0, 16)).unwrap();
+            match mode {
+                Mode::Buffered => drop(r.begin_aggregation().unwrap()),
+                Mode::Streaming => drop(r.finish_streaming().unwrap()),
+            }
+            r.abort().unwrap();
+            assert_eq!(r.phase(), RoundPhase::Aborted);
+
+            // Published rounds are immutable: abort is WrongPhase
+            let r = make(2);
+            r.ingest(upd(0, 16)).unwrap();
+            let fused = match mode {
+                Mode::Buffered => {
+                    let us = r.begin_aggregation().unwrap();
+                    vec![0.5; us[0].data.len()]
+                }
+                Mode::Streaming => r.finish_streaming().unwrap().0,
+            };
+            r.publish(fused).unwrap();
+            assert!(matches!(
+                r.abort(),
+                Err(RoundError::WrongPhase { actual: RoundPhase::Published, .. })
+            ));
+            assert!(r.fused().is_some());
+        }
+    }
+
+    #[test]
+    fn seal_vs_ingest_race_is_typed_both_modes() {
+        // Concurrent finish/ingest: every ingest either lands before the
+        // seal (counted) or gets a typed WrongPhase — never a panic, and
+        // the fold count always equals the successful ingests.
+        for _ in 0..16 {
+            let s = Arc::new(
+                RoundState::new_streaming(
+                    0,
+                    WorkloadClass::Streaming,
+                    MemoryBudget::unbounded(),
+                    Arc::new(FedAvg),
+                    4,
+                )
+                .unwrap(),
+            );
+            s.ingest(upd(1000, 64)).unwrap(); // the finisher must see ≥1
+            let (oks, folded) = std::thread::scope(|scope| {
+                let uploaders: Vec<_> = (0..4u64)
+                    .map(|t| {
+                        let s = s.clone();
+                        scope.spawn(move || {
+                            let mut oks = 0usize;
+                            for k in 0..8u64 {
+                                match s.ingest(upd(t * 8 + k, 64)) {
+                                    Ok(_) => oks += 1,
+                                    Err(RoundError::WrongPhase { .. }) => {}
+                                    Err(e) => panic!("unexpected: {e}"),
+                                }
+                            }
+                            oks
+                        })
+                    })
+                    .collect();
+                let finisher = {
+                    let s = s.clone();
+                    scope.spawn(move || {
+                        std::thread::sleep(Duration::from_micros(200));
+                        s.finish_streaming().unwrap().1
+                    })
+                };
+                let oks: usize = uploaders.into_iter().map(|h| h.join().unwrap()).sum();
+                (oks, finisher.join().unwrap())
+            });
+            assert_eq!(folded, oks + 1, "every successful ingest is merged and counted");
+        }
+
+        // buffered flavour: begin_aggregation racing ingest
+        let r = Arc::new(RoundState::new(0, WorkloadClass::Small, MemoryBudget::unbounded()));
+        r.ingest(upd(500, 16)).unwrap();
+        std::thread::scope(|scope| {
+            let uploader = {
+                let r = r.clone();
+                scope.spawn(move || {
+                    for p in 0..32u64 {
+                        match r.ingest(upd(p, 16)) {
+                            Ok(_) | Err(RoundError::WrongPhase { .. }) => {}
+                            Err(e) => panic!("unexpected: {e}"),
+                        }
+                    }
+                })
+            };
+            let taken = scope.spawn(|| r.begin_aggregation().unwrap().len());
+            uploader.join().unwrap();
+            assert!(taken.join().unwrap() >= 1);
+        });
     }
 
     #[test]

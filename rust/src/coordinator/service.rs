@@ -132,6 +132,7 @@ impl AdaptiveService {
                 ingest_lanes: cfg.node.cores.max(1),
                 xla_available: xla.is_some(),
                 feedback_beta: 0.3,
+                expected_participation: cfg.expected_participation,
             },
         );
         let autoscaler = Autoscaler::new(
@@ -240,6 +241,19 @@ impl AdaptiveService {
     /// The full predicted-vs-observed calibration history.
     pub fn calibration_ledger(&self) -> Vec<RoundCalibration> {
         self.planner.lock().unwrap().ledger().to_vec()
+    }
+
+    /// Record a sealed round's delivered-vs-expected turnout: the planner
+    /// prices the next round against the fleet's observed participation
+    /// (K·p uploads) instead of the full register.  Returns the updated
+    /// factor.
+    pub fn observe_participation(&self, delivered: usize, expected: usize) -> f64 {
+        self.planner.lock().unwrap().observe_participation(delivered, expected)
+    }
+
+    /// The participation factor the planner currently prices against.
+    pub fn participation(&self) -> f64 {
+        self.planner.lock().unwrap().participation()
     }
 
     pub fn policy(&self) -> DispatchPolicy {

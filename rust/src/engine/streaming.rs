@@ -326,6 +326,15 @@ impl ShardedFold {
         self.folded.load(Ordering::Acquire)
     }
 
+    /// Seal the fold without draining it: every later (and every racing —
+    /// the lane locks re-check under the lock) fold is rejected with
+    /// [`FoldError::Sealed`].  [`ShardedFold::finish`] seals implicitly;
+    /// an *aborting* round seals explicitly and then simply drops the fold,
+    /// releasing the lane scratch without paying the merge.
+    pub fn seal(&self) {
+        self.sealed.store(true, Ordering::Release);
+    }
+
     /// Fold an owned update; returns the running folded count.
     pub fn fold(&self, algo: &dyn FusionAlgorithm, u: &ModelUpdate) -> Result<u64, FoldError> {
         self.fold_weighted(algo, algo.weight(u), &u.data)
@@ -422,7 +431,7 @@ impl ShardedFold {
     /// acquiring a lock after the seal bails out, so the drain observes a
     /// quiescent set.
     pub fn finish(&self, algo: &dyn FusionAlgorithm) -> Result<(Vec<f32>, u64), EngineError> {
-        self.sealed.store(true, Ordering::Release);
+        self.seal();
         let mut merged = StreamingFold::new(algo, 1, self.budget.clone())?;
         for shard in &self.shards {
             let mut guard = shard.lock().unwrap();

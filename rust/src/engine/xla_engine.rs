@@ -226,6 +226,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn xla_matches_serial_fedavg_small_and_large() {
         let e = XlaEngine::new(rtm(), 16).unwrap();
         let s = SerialEngine::unbounded();
@@ -241,6 +245,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn xla_iteravg_parity() {
         let e = XlaEngine::new(rtm(), 16).unwrap();
         let s = SerialEngine::unbounded();
@@ -252,6 +260,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn xla_clipped_parity() {
         let e = XlaEngine::new(rtm(), 16).unwrap();
         let s = SerialEngine::unbounded();
@@ -264,6 +276,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn xla_median_exact_k() {
         let e = XlaEngine::new(rtm(), 16).unwrap();
         let s = SerialEngine::unbounded();
@@ -275,6 +291,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn xla_median_wrong_n_unsupported() {
         let e = XlaEngine::new(rtm(), 16).unwrap();
         let updates = batch(11, 5, 100);
@@ -286,6 +306,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn xla_krum_unsupported() {
         let e = XlaEngine::new(rtm(), 16).unwrap();
         let updates = batch(12, 9, 100);
@@ -294,11 +318,19 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn bad_k_rejected() {
         assert!(XlaEngine::new(rtm(), 7).is_err());
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn auto_picks_smallest_k() {
         // §Perf policy: the K=16 single-grid-step artifact is the fast one
         // on the CPU-interpret path regardless of party count.

@@ -44,5 +44,6 @@ pub mod net;
 pub mod planner;
 pub mod runtime;
 pub mod server;
+pub mod sim;
 pub mod tensorstore;
 pub mod util;

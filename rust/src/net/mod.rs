@@ -173,7 +173,13 @@ mod tests {
             Message::Register { party: 42 },
             Message::Registered { party: 42, round: 7 },
             Message::Upload(ModelUpdate::new(1, 2.0, 3, vec![1.0, 2.0])),
+            Message::UploadNonce {
+                nonce: 0xA5A5_5A5A,
+                update: ModelUpdate::new(1, 2.0, 3, vec![1.0, 2.0]),
+            },
             Message::Ack { redirect_to_dfs: true },
+            Message::Duplicate { party: 1, nonce: 0xA5A5_5A5A },
+            Message::Late { round: 3 },
             Message::GetModel { round: 9 },
             Message::Model { round: 9, weights: vec![0.5; 100] },
             Message::NoModel { round: 9 },

@@ -18,6 +18,13 @@ pub const TAG_ACK: u8 = 0x04;
 pub const TAG_GET_MODEL: u8 = 0x05;
 pub const TAG_MODEL: u8 = 0x06;
 pub const TAG_NO_MODEL: u8 = 0x07;
+/// Upload with a leading retransmission nonce (8 bytes, outside the
+/// update's CRC) — the fault-tolerant sibling of [`TAG_UPLOAD`].
+pub const TAG_UPLOAD_NONCE: u8 = 0x08;
+/// Reply: this party's update was already folded this round.
+pub const TAG_DUPLICATE: u8 = 0x09;
+/// Reply: the upload arrived after the round sealed (quorum/deadline/abort).
+pub const TAG_LATE: u8 = 0x0A;
 pub const TAG_ERROR: u8 = 0x7F;
 
 /// Validate a payload length before it is cast into the wire's u32 length
@@ -38,9 +45,21 @@ pub enum Message {
     Registered { party: u64, round: u32 },
     /// Party uploads its update over the message-passing path.
     Upload(ModelUpdate),
+    /// Upload tagged with a retransmission nonce: the coordinator folds
+    /// each party at most once per round and answers a retransmit with
+    /// [`Message::Duplicate`] instead of double-folding (the nonce rides
+    /// ahead of the update bytes so the CRC-covered payload is unchanged
+    /// and still decodes zero-copy at an 8-byte offset).
+    UploadNonce { nonce: u64, update: ModelUpdate },
     /// Server ack; `redirect_to_dfs` tells the party to write its NEXT
     /// update to the shared store instead (seamless transition, §III-D3).
     Ack { redirect_to_dfs: bool },
+    /// The round already folded this party's update; `nonce` is the
+    /// accepted upload's nonce (retransmit absorbed, not an error).
+    Duplicate { party: u64, nonce: u64 },
+    /// The upload missed the round: it sealed (quorum reached at the
+    /// deadline, or aborted) before the frame arrived.
+    Late { round: u32 },
     /// Fetch the fused model of a round.
     GetModel { round: u32 },
     Model { round: u32, weights: Vec<f32> },
@@ -98,9 +117,23 @@ impl Message {
                 u.encode_into(out);
                 TAG_UPLOAD
             }
+            Message::UploadNonce { nonce, update } => {
+                out.extend_from_slice(&nonce.to_le_bytes());
+                update.encode_into(out);
+                TAG_UPLOAD_NONCE
+            }
             Message::Ack { redirect_to_dfs } => {
                 out.push(u8::from(*redirect_to_dfs));
                 TAG_ACK
+            }
+            Message::Duplicate { party, nonce } => {
+                out.extend_from_slice(&party.to_le_bytes());
+                out.extend_from_slice(&nonce.to_le_bytes());
+                TAG_DUPLICATE
+            }
+            Message::Late { round } => {
+                out.extend_from_slice(&round.to_le_bytes());
+                TAG_LATE
             }
             Message::GetModel { round } => {
                 out.extend_from_slice(&round.to_le_bytes());
@@ -165,9 +198,27 @@ impl Message {
                 })
             }
             TAG_UPLOAD => Ok(Message::Upload(ModelUpdate::decode(payload)?)),
+            TAG_UPLOAD_NONCE => {
+                need(8)?;
+                Ok(Message::UploadNonce {
+                    nonce: u64::from_le_bytes(payload[..8].try_into().unwrap()),
+                    update: ModelUpdate::decode(&payload[8..])?,
+                })
+            }
             TAG_ACK => {
                 need(1)?;
                 Ok(Message::Ack { redirect_to_dfs: payload[0] != 0 })
+            }
+            TAG_DUPLICATE => {
+                need(16)?;
+                Ok(Message::Duplicate {
+                    party: u64::from_le_bytes(payload[..8].try_into().unwrap()),
+                    nonce: u64::from_le_bytes(payload[8..16].try_into().unwrap()),
+                })
+            }
+            TAG_LATE => {
+                need(4)?;
+                Ok(Message::Late { round: u32::from_le_bytes(payload[..4].try_into().unwrap()) })
             }
             TAG_GET_MODEL => {
                 need(4)?;
@@ -221,7 +272,15 @@ mod tests {
             Message::Register { party: 0 }.encode().0,
             Message::Registered { party: 0, round: 0 }.encode().0,
             Message::Upload(ModelUpdate::new(0, 0.0, 0, vec![])).encode().0,
+            Message::UploadNonce {
+                nonce: 0,
+                update: ModelUpdate::new(0, 0.0, 0, vec![]),
+            }
+            .encode()
+            .0,
             Message::Ack { redirect_to_dfs: false }.encode().0,
+            Message::Duplicate { party: 0, nonce: 0 }.encode().0,
+            Message::Late { round: 0 }.encode().0,
             Message::GetModel { round: 0 }.encode().0,
             Message::Model { round: 0, weights: vec![] }.encode().0,
             Message::NoModel { round: 0 }.encode().0,
@@ -286,5 +345,33 @@ mod tests {
         let (tag, mut payload) = Message::Upload(u).encode();
         payload[30] ^= 0xFF;
         assert!(Message::decode(tag, &payload).is_err());
+    }
+
+    #[test]
+    fn nonce_upload_roundtrips_and_keeps_crc_protection() {
+        let u = ModelUpdate::new(5, 1.0, 2, vec![3.0; 10]);
+        let m = Message::UploadNonce { nonce: 0xDEAD_BEEF, update: u.clone() };
+        let (tag, payload) = m.encode();
+        assert_eq!(tag, TAG_UPLOAD_NONCE);
+        assert_eq!(Message::decode(tag, &payload).unwrap(), m);
+        // the update body (past the 8-byte nonce) is still CRC-guarded
+        let mut corrupt = payload.clone();
+        corrupt[8 + 30] ^= 0xFF;
+        assert!(Message::decode(tag, &corrupt).is_err());
+        // a short frame cannot even carry the nonce
+        assert!(Message::decode(TAG_UPLOAD_NONCE, &payload[..7]).is_err());
+    }
+
+    #[test]
+    fn duplicate_and_late_roundtrip() {
+        for m in [
+            Message::Duplicate { party: 7, nonce: u64::MAX },
+            Message::Late { round: 42 },
+        ] {
+            let (tag, payload) = m.encode();
+            assert_eq!(Message::decode(tag, &payload).unwrap(), m);
+        }
+        assert!(Message::decode(TAG_DUPLICATE, &[0u8; 15]).is_err());
+        assert!(Message::decode(TAG_LATE, &[0u8; 3]).is_err());
     }
 }

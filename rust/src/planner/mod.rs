@@ -151,6 +151,14 @@ pub struct PlannerConfig {
     pub xla_available: bool,
     /// EWMA weight of the newest observed/predicted ratio (0..1).
     pub feedback_beta: f64,
+    /// Prior on the fraction of registered parties that actually deliver
+    /// an upload: real edge fleets drop out and straggle, so a policy that
+    /// prices K uploads when K·p arrive systematically over-estimates
+    /// every plan.  Pricing uses K·p; *feasibility* (the classifier)
+    /// keeps assuming the full K, so a surprise full turnout can never
+    /// OOM a plan that was only priced optimistically.  Calibrated per
+    /// round via [`DispatchPlanner::observe_participation`].
+    pub expected_participation: f64,
 }
 
 impl Default for PlannerConfig {
@@ -163,6 +171,7 @@ impl Default for PlannerConfig {
             ingest_lanes: 4,
             xla_available: false,
             feedback_beta: 0.3,
+            expected_participation: 1.0,
         }
     }
 }
@@ -180,6 +189,8 @@ pub struct DispatchPlanner {
     corr_stream: Ewma,
     /// Observed/predicted latency correction for distributed plans.
     corr_dist: Ewma,
+    /// Observed delivered/expected turnout (the participation factor p).
+    part: Ewma,
     ledger: Vec<RoundCalibration>,
 }
 
@@ -199,8 +210,24 @@ impl DispatchPlanner {
             corr_single: Ewma::new(beta),
             corr_stream: Ewma::new(beta),
             corr_dist: Ewma::new(beta),
+            part: Ewma::new(beta),
             ledger: Vec::new(),
         }
+    }
+
+    /// The participation factor pricing currently uses: the observed EWMA
+    /// once rounds have reported turnout, the configured prior before.
+    pub fn participation(&self) -> f64 {
+        self.part.value_or(self.cfg.expected_participation).clamp(0.05, 1.0)
+    }
+
+    /// Record a sealed round's delivered/expected turnout; returns the
+    /// updated participation factor the next plan will price against.
+    pub fn observe_participation(&mut self, delivered: usize, expected: usize) -> f64 {
+        if expected > 0 {
+            self.part.observe((delivered as f64 / expected as f64).clamp(0.0, 1.0));
+        }
+        self.participation()
     }
 
     pub fn policy(&self) -> DispatchPolicy {
@@ -259,7 +286,16 @@ impl DispatchPlanner {
         current_executors: usize,
     ) -> RoundPlan {
         let class = self.classifier.classify_with_streaming(update_bytes, parties, algo);
-        let total_bytes = update_bytes as f64 * parties as f64;
+        // Feasibility (the class above) assumes the full K registered
+        // parties; *pricing* assumes the K·p the fleet actually delivers
+        // (p = 1.0 until the quorum rounds report real turnout).
+        let p = self.participation();
+        let eff = if parties == 0 {
+            0
+        } else {
+            (((parties as f64) * p).ceil() as usize).clamp(1, parties)
+        };
+        let total_bytes = update_bytes as f64 * eff as f64;
         let mut candidates = Vec::new();
 
         if class == WorkloadClass::Small {
@@ -268,7 +304,7 @@ impl DispatchPlanner {
             let serial = corr
                 * self.cluster.single_node_time(
                     update_bytes,
-                    parties,
+                    eff,
                     node_cores,
                     EngineKind::Serial,
                     1.0,
@@ -280,7 +316,7 @@ impl DispatchPlanner {
             let parallel = corr
                 * self.cluster.single_node_time(
                     update_bytes,
-                    parties,
+                    eff,
                     node_cores,
                     EngineKind::Parallel,
                     1.0,
@@ -319,10 +355,13 @@ impl DispatchPlanner {
             } else {
                 ((self.classifier.memory_bytes / update_bytes).saturating_sub(1)).max(1) as usize
             };
+            // `eff` is the one K·p derivation for every candidate family
+            // (streaming_time_p is the standalone participation entry for
+            // direct callers; pricing must not re-derive the count).
             let stream = self.corr_stream.value_or(1.0)
                 * self.cluster.streaming_time(
                     update_bytes,
-                    parties,
+                    eff,
                     self.cfg.node_cores.max(1),
                     self.cfg.ingest_lanes.max(1).min(lane_cap),
                 );
@@ -343,16 +382,16 @@ impl DispatchPlanner {
         // only the aggregator node is held.
         let cache = update_bytes < (64 << 20); // the paper's small-model rule
         let corr = self.corr_dist.value_or(1.0);
-        let write = if parties == 0 {
+        let write = if eff == 0 {
             0.0
         } else {
-            self.cluster.client_write_time(update_bytes, parties)
+            self.cluster.client_write_time(update_bytes, eff)
         };
         for k in 1..=self.cfg.max_executors.max(1) {
             let cores = k * self.cfg.cores_per_executor.max(1);
             let bd = self
                 .cluster
-                .distributed_breakdown_for_cores(update_bytes, parties, cache, cores);
+                .distributed_breakdown_for_cores(update_bytes, eff, cache, cores);
             let startup = self
                 .cluster
                 .executor_startup(k.saturating_sub(current_executors));
@@ -448,6 +487,7 @@ mod tests {
                 ingest_lanes: 64,
                 xla_available: false,
                 feedback_beta: 0.3,
+                expected_participation: 1.0,
             },
         )
     }
@@ -620,6 +660,84 @@ mod tests {
         assert!((cal.drift() - 1.25).abs() < 1e-9);
         assert!(cal.observed_usd > 0.0 && cal.predicted_usd > 0.0);
         assert!(cal.log_line().contains("predicted"));
+    }
+
+    #[test]
+    fn participation_prior_prices_k_p_uploads_without_changing_class() {
+        // A 0.6 prior must shrink every candidate's priced latency (the
+        // fleet only delivers K·p uploads) while the feasibility class
+        // keeps assuming the full K — a surprise full turnout can't OOM.
+        let mut cfg = PlannerConfig {
+            policy: DispatchPolicy::MinLatency,
+            max_executors: 10,
+            cores_per_executor: 3,
+            node_cores: 64,
+            ingest_lanes: 64,
+            xla_available: false,
+            feedback_beta: 0.3,
+            expected_participation: 1.0,
+        };
+        let full = DispatchPlanner::new(
+            WorkloadClassifier::new(170 << 30, 1.1),
+            VirtualCluster::paper(CostModel::nominal()),
+            PricingModel::default(),
+            cfg.clone(),
+        )
+        .plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        cfg.expected_participation = 0.6;
+        let partial = DispatchPlanner::new(
+            WorkloadClassifier::new(170 << 30, 1.1),
+            VirtualCluster::paper(CostModel::nominal()),
+            PricingModel::default(),
+            cfg,
+        )
+        .plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        assert_eq!(full.class, partial.class, "feasibility must stay full-K");
+        let stream = |pl: &RoundPlan| {
+            pl.candidates
+                .iter()
+                .find(|c| c.kind == PlanKind::Streaming)
+                .unwrap()
+                .cost
+                .latency_s
+        };
+        // streaming is ingest-bound at this geometry: span is linear in
+        // the arriving upload count, so 0.6 turnout prices ≈ 0.6× the span
+        let ratio = stream(&partial) / stream(&full);
+        assert!((0.55..0.70).contains(&ratio), "{ratio}");
+        // distributed candidates shrink too (fewer uploads to write+read)
+        let dist = |pl: &RoundPlan, k: usize| {
+            pl.candidates
+                .iter()
+                .find(|c| c.kind == PlanKind::Distributed { executors: k })
+                .unwrap()
+                .cost
+                .latency_s
+        };
+        assert!(dist(&partial, 10) < dist(&full, 10));
+    }
+
+    #[test]
+    fn observed_turnout_calibrates_participation() {
+        let mut p = planner(DispatchPolicy::MinLatency);
+        assert_eq!(p.participation(), 1.0);
+        let before = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        // eight straight rounds at 80% turnout: the EWMA of a constant is
+        // that constant from the first observation
+        for _ in 0..8 {
+            p.observe_participation(24_000, 30_000);
+        }
+        assert!((p.participation() - 0.8).abs() < 1e-9);
+        let after = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        assert!(after.chosen.cost.latency_s < before.chosen.cost.latency_s);
+        // a zero-expected round must not poison the factor
+        p.observe_participation(0, 0);
+        assert!((p.participation() - 0.8).abs() < 1e-9);
+        // and the factor is floored so pricing never collapses to zero
+        for _ in 0..64 {
+            p.observe_participation(0, 30_000);
+        }
+        assert!(p.participation() >= 0.05);
     }
 
     #[test]

@@ -182,6 +182,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn manifest_lists_expected_artifacts() {
         let rtm = runtime();
         for name in ["wsum_k16", "wsum_k64", "clipsum_k16", "median_k8", "train_step",
@@ -192,6 +196,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn wsum_artifact_computes_weighted_sum() {
         let rtm = runtime();
         let k = 16;
@@ -223,12 +231,20 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn unknown_artifact_is_error() {
         let rtm = runtime();
         assert!(rtm.exec("nope", &[]).is_err());
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn executables_are_cached() {
         let rtm = runtime();
         rtm.warmup("median_k8").unwrap();
@@ -237,6 +253,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "xla-tests"),
+        ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+    )]
     fn train_step_decreases_loss_on_repeated_batch() {
         let rtm = runtime();
         let man = rtm.manifest();

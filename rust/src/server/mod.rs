@@ -22,8 +22,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{
-    AdaptiveService, PartyRegistry, RoundError, RoundState, ServiceError, ServiceReport,
-    WorkloadClass,
+    AdaptiveService, PartyRegistry, RoundError, RoundOutcome, RoundState, ServiceError,
+    ServiceReport, WorkloadClass,
 };
 use crate::fusion::FusionAlgorithm;
 use crate::memsim::MemoryBudget;
@@ -110,9 +110,26 @@ impl FlServer {
     }
 
     /// Replace an (empty) round's state with a re-classified one.
+    ///
+    /// Uploads race this: a connection may have fetched the OLD state and
+    /// be folding into it right now.  Two defenses keep that window
+    /// honest: the emptiness check is re-taken *under the rounds lock*
+    /// (an upload that already landed keeps its state — and its class),
+    /// and the replaced state is aborted, so a fold still in flight gets
+    /// the typed `WrongPhase`/`Late` reply instead of a silent discard
+    /// behind an Ack.  (A fold that completes in the final instruction
+    /// window between the check and the abort can still be dropped — the
+    /// callers' settle beat covers it; see `sim::run_scenario`.)
     fn reopen_round(&self, round: u32, class: WorkloadClass) -> Arc<RoundState> {
         let st = Arc::new(self.make_state(round, class));
-        self.rounds.lock().unwrap().insert(round, st.clone());
+        let mut rounds = self.rounds.lock().unwrap();
+        if let Some(old) = rounds.get(&round) {
+            if old.collected() > 0 {
+                return old.clone();
+            }
+            let _ = old.abort();
+        }
+        rounds.insert(round, st.clone());
         st
     }
 
@@ -122,14 +139,25 @@ impl FlServer {
     }
 
     /// Shared shape of the upload reply: route the ingest closure to the
-    /// current round's state, turn protocol failures (wrong shape/phase,
-    /// OOM) into error REPLIES — never a coordinator crash — and carry the
+    /// current round's state, turn protocol failures into typed REPLIES —
+    /// never a coordinator crash: a retransmit gets `Duplicate` (with the
+    /// accepted nonce), a frame that missed the seal gets `Late`, anything
+    /// else (wrong shape, OOM) an `Error` — and carry the
     /// seamless-transition redirect flag on the Ack.
-    fn upload_with<F>(&self, ingest: F) -> Message
+    ///
+    /// `declared` is the round the update says it belongs to: a straggler
+    /// whose round already sealed AND reopened must not be folded into the
+    /// successor (a stale gradient would pollute the aggregate and burn
+    /// the party's dedup slot) — it gets the same `Late` reply as one that
+    /// raced the seal itself.
+    fn upload_with<F>(&self, declared: u32, ingest: F) -> Message
     where
         F: FnOnce(&RoundState) -> Result<usize, RoundError>,
     {
         let round = self.current_round();
+        if declared != round {
+            return Message::Late { round };
+        }
         let redirect = self.service.should_redirect(
             self.update_bytes,
             self.registry.active_count().max(1),
@@ -141,6 +169,10 @@ impl FlServer {
             // and free it.
             Some(st) if st.class != WorkloadClass::Large => match ingest(&st) {
                 Ok(_) => Message::Ack { redirect_to_dfs: redirect },
+                Err(RoundError::Duplicate { party, nonce }) => {
+                    Message::Duplicate { party, nonce }
+                }
+                Err(RoundError::WrongPhase { .. }) => Message::Late { round },
                 Err(e) => Message::Error(format!("ingest: {e}")),
             },
             Some(_) => {
@@ -160,7 +192,22 @@ impl FlServer {
         match tag {
             protocol::TAG_UPLOAD => {
                 let v = ModelUpdateView::decode(payload)?;
-                Ok(Reply::Msg(self.upload_with(|st| st.ingest_view(&v))))
+                Ok(Reply::Msg(self.upload_with(v.round, |st| st.ingest_view(&v))))
+            }
+            protocol::TAG_UPLOAD_NONCE => {
+                if payload.len() < 8 {
+                    return Err(ProtoError::BadPayload(format!(
+                        "need 8 nonce bytes, got {}",
+                        payload.len()
+                    )));
+                }
+                let nonce = u64::from_le_bytes(payload[..8].try_into().unwrap());
+                // the pooled buffer is 4-aligned and the nonce is 8 bytes,
+                // so the update body still decodes as a borrowed view
+                let v = ModelUpdateView::decode(&payload[8..])?;
+                Ok(Reply::Msg(
+                    self.upload_with(v.round, |st| st.ingest_view_tagged(&v, nonce)),
+                ))
             }
             protocol::TAG_GET_MODEL => {
                 if payload.len() < 4 {
@@ -186,7 +233,14 @@ impl FlServer {
                 self.registry.join(party, round, 0);
                 Message::Registered { party, round }
             }
-            Message::Upload(u) => self.upload_with(|st| st.ingest(u)),
+            Message::Upload(u) => {
+                let declared = u.round;
+                self.upload_with(declared, |st| st.ingest(u))
+            }
+            Message::UploadNonce { nonce, update } => {
+                let declared = update.round;
+                self.upload_with(declared, |st| st.ingest_tagged(update, nonce))
+            }
             Message::GetModel { round } => match self.round_state(round).and_then(|s| s.fused()) {
                 Some(w) => Message::Model { round, weights: w.as_ref().clone() },
                 None => Message::NoModel { round },
@@ -199,11 +253,66 @@ impl FlServer {
     /// path) or `timeout` elapsed, then aggregate, publish and open the
     /// next round.  For Large rounds, delegates to the service's
     /// monitor+MapReduce path.
+    ///
+    /// This is the legacy quorum-of-one shape: whatever arrived by the
+    /// deadline is aggregated, and only a fully empty round fails (as
+    /// [`ServiceError::NoUpdates`], after aborting and reopening).
     pub fn run_round(
         &self,
         expected: usize,
         timeout: Duration,
     ) -> Result<(Vec<f32>, ServiceReport), ServiceError> {
+        match self.run_round_quorum(expected, 1, timeout)? {
+            RoundRun { result: Some(r), .. } => Ok(r),
+            RoundRun { .. } => Err(ServiceError::NoUpdates),
+        }
+    }
+
+    /// [`FlServer::run_round_quorum`] with the quorum and deadline taken
+    /// from the service config (`quorum_fraction` of `expected`,
+    /// `round_deadline_s`).
+    pub fn run_round_configured(&self, expected: usize) -> Result<RoundRun, ServiceError> {
+        let cfg = self.service.config();
+        let quorum = ((expected as f64) * cfg.quorum_fraction.clamp(0.0, 1.0)).ceil() as usize;
+        // Defend the Duration conversion: a hand-edited config with a
+        // negative, NaN or absurdly large deadline must degrade (seal
+        // immediately / cap at a year), not panic the coordinator —
+        // Duration::from_secs_f64 panics on negatives AND on values past
+        // ~1.8e19 s.
+        let deadline_s = cfg.round_deadline_s;
+        let deadline_s = if deadline_s.is_finite() {
+            deadline_s.clamp(0.0, 31_536_000.0) // ≤ one year
+        } else {
+            0.0
+        };
+        self.run_round_quorum(expected, quorum, Duration::from_secs_f64(deadline_s))
+    }
+
+    /// Drive the current round with quorum semantics: the round seals when
+    /// all `expected` uploads arrived (→ [`RoundOutcome::Complete`]) or at
+    /// the deadline, whichever first — at the deadline it aggregates the
+    /// partial set if at least `quorum` folded (→ [`RoundOutcome::Quorum`]),
+    /// otherwise it ABORTS: the ingest state is dropped, every memory
+    /// reservation returns to the node budget, no model is published, and
+    /// the next round opens (→ [`RoundOutcome::Aborted`]).  Uploads racing
+    /// the seal are answered with the typed `Late` reply.
+    ///
+    /// Covers all three ingest paths: buffered Small rounds, sharded
+    /// streaming rounds (seal-then-drain, so an abort cannot leak lane
+    /// scratch), and Large rounds via the store monitor (whose own
+    /// threshold/timeout machinery supplies the wait; a below-quorum
+    /// partial set is discarded unpublished).  `quorum = expected`
+    /// recovers all-or-abort; `quorum = 1` the legacy partial aggregate.
+    /// The delivered/expected ratio of every sealed round feeds the
+    /// planner's participation EWMA so the next plan prices K·p uploads.
+    pub fn run_round_quorum(
+        &self,
+        expected: usize,
+        quorum: usize,
+        timeout: Duration,
+    ) -> Result<RoundRun, ServiceError> {
+        let expected = expected.max(1);
+        let quorum = quorum.clamp(1, expected);
         let round = self.current_round();
         let mut st = self.round_state(round).expect("current round open");
         // Parties may have joined since the round opened (§III-C): refresh
@@ -219,28 +328,53 @@ impl FlServer {
                 st = self.reopen_round(round, class);
             }
         }
-        let result = match st.class {
+        if st.class == WorkloadClass::Large {
+            return self.finish_large_quorum(&st, round, expected, quorum);
+        }
+
+        // Small + Streaming: the deadline timer IS the collection window.
+        let deadline = Instant::now() + timeout;
+        while st.collected() < expected && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Seal FIRST, classify after: a straggler folding between a
+        // pre-seal snapshot and the seal would otherwise yield an
+        // inconsistent run (outcome Quorum with folded == expected) and
+        // feed the participation EWMA a stale count.  `begin_aggregation`
+        // and `finish_streaming` both return the post-seal truth.
+        let (fused, report) = match st.class {
             WorkloadClass::Small => {
-                let deadline = Instant::now() + timeout;
-                while st.collected() < expected && Instant::now() < deadline {
-                    std::thread::sleep(Duration::from_millis(2));
-                }
                 let updates = st.begin_aggregation().map_err(ServiceError::Round)?;
-                if updates.is_empty() {
-                    return Err(ServiceError::NoUpdates);
+                let folded = updates.len();
+                self.service.observe_participation(folded, expected);
+                if folded < quorum {
+                    // below quorum: drop the partial set (its reservations
+                    // were already released by the seal) and abort
+                    drop(updates);
+                    st.abort().map_err(ServiceError::Round)?;
+                    self.open_round(round + 1);
+                    return Ok(RoundRun {
+                        outcome: RoundOutcome::Aborted,
+                        folded,
+                        result: None,
+                    });
                 }
-                self.service.aggregate_small(self.algo.as_ref(), &updates, round)
+                self.service.aggregate_small(self.algo.as_ref(), &updates, round)?
             }
-            WorkloadClass::Streaming => {
-                // Every received update is already folded into the O(C)
-                // accumulator; all that remains after the barrier is the
-                // finalize — ingest and compute overlapped.
-                let deadline = Instant::now() + timeout;
-                while st.collected() < expected && Instant::now() < deadline {
-                    std::thread::sleep(Duration::from_millis(2));
-                }
+            _ => {
+                // Streaming: every received update is already folded into
+                // the O(C) accumulators; sealing + the S-way merge is all
+                // that remains — ingest and compute overlapped.
                 if st.collected() == 0 {
-                    return Err(ServiceError::NoUpdates);
+                    // an empty fold cannot finish(); abort straight away
+                    st.abort().map_err(ServiceError::Round)?;
+                    self.open_round(round + 1);
+                    self.service.observe_participation(0, expected);
+                    return Ok(RoundRun {
+                        outcome: RoundOutcome::Aborted,
+                        folded: 0,
+                        result: None,
+                    });
                 }
                 let mut bd = crate::metrics::Breakdown::new();
                 let t0 = Instant::now();
@@ -248,7 +382,18 @@ impl FlServer {
                 // folded right before the transition is in both
                 let (fused, parties) = st.finish_streaming().map_err(ServiceError::Round)?;
                 bd.add("reduce", t0.elapsed().as_secs_f64());
-                Ok((
+                self.service.observe_participation(parties, expected);
+                if parties < quorum {
+                    drop(fused); // below quorum: the partial fuse is discarded
+                    st.abort().map_err(ServiceError::Round)?;
+                    self.open_round(round + 1);
+                    return Ok(RoundRun {
+                        outcome: RoundOutcome::Aborted,
+                        folded: parties,
+                        result: None,
+                    });
+                }
+                (
                     fused,
                     ServiceReport {
                         round,
@@ -261,18 +406,74 @@ impl FlServer {
                         monitor: None,
                         predicted: None,
                     },
-                ))
+                )
             }
-            WorkloadClass::Large => {
-                let _ = st.begin_aggregation(); // no in-memory updates
-                self.service
-                    .aggregate_large(self.algo.as_ref(), round, expected, self.update_bytes)
-            }
-        }?;
-        st.publish(result.0.clone()).map_err(ServiceError::Round)?;
+        };
+        let folded = report.parties;
+        let outcome = if folded >= expected {
+            RoundOutcome::Complete
+        } else {
+            RoundOutcome::Quorum
+        };
+        st.publish(fused.clone()).map_err(ServiceError::Round)?;
         self.open_round(round + 1);
-        Ok(result)
+        Ok(RoundRun { outcome, folded, result: Some((fused, report)) })
     }
+
+    /// The Large arm of the quorum round: the store monitor supplies the
+    /// threshold/timeout wait; a below-quorum outcome discards the job's
+    /// result unpublished (the store-side artifact is left for forensics)
+    /// and aborts the round state.
+    fn finish_large_quorum(
+        &self,
+        st: &RoundState,
+        round: u32,
+        expected: usize,
+        quorum: usize,
+    ) -> Result<RoundRun, ServiceError> {
+        let _ = st.begin_aggregation(); // no in-memory updates to take
+        match self
+            .service
+            .aggregate_large(self.algo.as_ref(), round, expected, self.update_bytes)
+        {
+            Ok((fused, report)) => {
+                let folded = report.parties;
+                self.service.observe_participation(folded, expected);
+                let outcome = if folded >= expected {
+                    RoundOutcome::Complete
+                } else if folded >= quorum {
+                    RoundOutcome::Quorum
+                } else {
+                    RoundOutcome::Aborted
+                };
+                if outcome == RoundOutcome::Aborted {
+                    st.abort().map_err(ServiceError::Round)?;
+                    self.open_round(round + 1);
+                    return Ok(RoundRun { outcome, folded, result: None });
+                }
+                st.publish(fused.clone()).map_err(ServiceError::Round)?;
+                self.open_round(round + 1);
+                Ok(RoundRun { outcome, folded, result: Some((fused, report)) })
+            }
+            Err(ServiceError::NoUpdates) => {
+                self.service.observe_participation(0, expected);
+                st.abort().map_err(ServiceError::Round)?;
+                self.open_round(round + 1);
+                Ok(RoundRun { outcome: RoundOutcome::Aborted, folded: 0, result: None })
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// What [`FlServer::run_round_quorum`] produced for one driven round.
+#[derive(Debug)]
+pub struct RoundRun {
+    pub outcome: RoundOutcome,
+    /// Updates folded (or monitored, for Large rounds) at seal time.
+    pub folded: usize,
+    /// The fused weights + report; `None` when the round aborted.
+    pub result: Option<(Vec<f32>, ServiceReport)>,
 }
 
 /// The TCP-facing newtype: routes raw frames into [`FlServer`]'s zero-copy
@@ -475,5 +676,159 @@ mod tests {
             server.run_round(3, Duration::from_millis(30)),
             Err(ServiceError::NoUpdates)
         ));
+    }
+
+    #[test]
+    fn full_set_completes_before_the_deadline() {
+        let (server, _td) = make_server(1 << 30, 400);
+        let st = server.round_state(0).unwrap();
+        for p in 0..4u64 {
+            st.ingest(ModelUpdate::new(p, 1.0, 0, vec![1.0; 100])).unwrap();
+        }
+        let t0 = Instant::now();
+        let run = server.run_round_quorum(4, 2, Duration::from_secs(30)).unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5), "must seal early, not at the deadline");
+        assert_eq!(run.outcome, RoundOutcome::Complete);
+        assert_eq!(run.folded, 4);
+        let (fused, report) = run.result.unwrap();
+        assert_eq!(fused.len(), 100);
+        assert_eq!(report.parties, 4);
+        assert_eq!(server.current_round(), 1);
+    }
+
+    #[test]
+    fn partial_fleet_aggregates_at_quorum() {
+        let (server, _td) = make_server(1 << 30, 400);
+        let st = server.round_state(0).unwrap();
+        for p in 0..3u64 {
+            st.ingest(ModelUpdate::new(p, 1.0, 0, vec![1.0; 100])).unwrap();
+        }
+        // 3 of 5 delivered; quorum 2 → aggregate the partial set
+        let run = server.run_round_quorum(5, 2, Duration::from_millis(50)).unwrap();
+        assert_eq!(run.outcome, RoundOutcome::Quorum);
+        assert_eq!(run.folded, 3);
+        assert_eq!(run.result.as_ref().unwrap().1.parties, 3);
+        assert!(server.round_state(0).unwrap().fused().is_some());
+        // the turnout fed the planner's participation factor (3/5)
+        assert!((server.service.participation() - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn below_quorum_round_aborts_and_frees_memory() {
+        let (server, _td) = make_server(1 << 30, 400);
+        let st = server.round_state(0).unwrap();
+        st.ingest(ModelUpdate::new(0, 1.0, 0, vec![1.0; 100])).unwrap();
+        assert!(server.node_budget.in_use() > 0);
+        let run = server.run_round_quorum(5, 3, Duration::from_millis(40)).unwrap();
+        assert_eq!(run.outcome, RoundOutcome::Aborted);
+        assert_eq!(run.folded, 1);
+        assert!(run.result.is_none());
+        assert_eq!(
+            server.node_budget.in_use(),
+            0,
+            "abort must release the parked update's reservation"
+        );
+        assert!(server.round_state(0).unwrap().fused().is_none(), "no model published");
+        assert_eq!(server.current_round(), 1, "the next round opened");
+    }
+
+    #[test]
+    fn streaming_quorum_and_abort_cover_the_sharded_path() {
+        // a fleet past the buffered ceiling: the round streams; quorum and
+        // abort must work against the sharded fold (seal-then-drop)
+        let update_len = 5_000usize;
+        let (server, _td) = make_server(1 << 20, (update_len * 4) as u64);
+        for p in 0..40u64 {
+            server.registry.join(p, 0, 10);
+        }
+        server.open_round(1);
+        let st = server.round_state(1).unwrap();
+        assert!(st.is_streaming());
+        for p in 0..30u64 {
+            st.ingest(ModelUpdate::new(p, 1.0, 1, vec![1.0; update_len])).unwrap();
+        }
+        let run = server.run_round_quorum(40, 20, Duration::from_millis(50)).unwrap();
+        assert_eq!(run.outcome, RoundOutcome::Quorum);
+        assert_eq!(run.folded, 30);
+        assert_eq!(run.result.as_ref().unwrap().1.engine, "streaming");
+
+        // next round: only 2 of 40 arrive → abort releases the lane scratch
+        let st = server.round_state(2).unwrap();
+        assert!(st.is_streaming());
+        for p in 0..2u64 {
+            st.ingest(ModelUpdate::new(p, 1.0, 2, vec![1.0; update_len])).unwrap();
+        }
+        let run = server.run_round_quorum(40, 20, Duration::from_millis(40)).unwrap();
+        assert_eq!(run.outcome, RoundOutcome::Aborted);
+        assert_eq!(run.folded, 2);
+        assert_eq!(
+            server.node_budget.in_use(),
+            0,
+            "streaming abort must return the fold scratch to the budget"
+        );
+        assert_eq!(server.current_round(), 3);
+    }
+
+    #[test]
+    fn duplicate_and_late_uploads_get_typed_replies() {
+        let (server, _td) = make_server(1 << 30, 400);
+        let u = ModelUpdate::new(5, 1.0, 0, vec![0.5; 100]);
+        let r = server.handle(Message::UploadNonce { nonce: 0x9, update: u.clone() });
+        assert!(matches!(r, Message::Ack { .. }), "{r:?}");
+        // the retransmit is absorbed with the ACCEPTED nonce echoed back
+        let r = server.handle(Message::UploadNonce { nonce: 0xA, update: u.clone() });
+        assert_eq!(r, Message::Duplicate { party: 5, nonce: 0x9 });
+        assert_eq!(server.round_state(0).unwrap().collected(), 1);
+        // seal the round under the uploader's feet: a straggler is Late
+        server.round_state(0).unwrap().abort().unwrap();
+        let r = server.handle(Message::Upload(ModelUpdate::new(6, 1.0, 0, vec![0.5; 100])));
+        assert_eq!(r, Message::Late { round: 0 });
+    }
+
+    #[test]
+    fn typed_replies_cross_the_wire() {
+        let (server, _td) = make_server(1 << 30, 400);
+        let handle = server.start("127.0.0.1:0").unwrap();
+        let mut c = NetClient::connect(handle.addr()).unwrap();
+        let u = ModelUpdate::new(7, 1.0, 0, vec![0.5; 100]);
+        // the nonce-tagged upload takes the zero-copy frame path
+        let r = c.call(&Message::UploadNonce { nonce: 0x77, update: u.clone() }).unwrap();
+        assert!(matches!(r, Message::Ack { .. }), "{r:?}");
+        let r = c.call(&Message::UploadNonce { nonce: 0x78, update: u }).unwrap();
+        assert_eq!(r, Message::Duplicate { party: 7, nonce: 0x77 });
+        server.round_state(0).unwrap().abort().unwrap();
+        let r = c
+            .call(&Message::UploadNonce {
+                nonce: 0x79,
+                update: ModelUpdate::new(8, 1.0, 0, vec![0.5; 100]),
+            })
+            .unwrap();
+        assert_eq!(r, Message::Late { round: 0 });
+    }
+
+    #[test]
+    fn run_round_configured_uses_the_quorum_knobs() {
+        let td = TempDir::new();
+        let nn = NameNode::create(td.path(), 2, 1, 1 << 20).unwrap();
+        let mut cfg = ServiceConfig::default();
+        cfg.node.memory_bytes = 1 << 30;
+        cfg.node.cores = 2;
+        cfg.quorum_fraction = 0.5;
+        cfg.round_deadline_s = 0.05;
+        let svc = AdaptiveService::new(
+            cfg,
+            DfsClient::new(nn),
+            None,
+            ExecutorConfig { executors: 1, cores_per_executor: 2, ..Default::default() },
+        );
+        let server = FlServer::new(svc, Arc::new(FedAvg), 400);
+        let st = server.round_state(0).unwrap();
+        for p in 0..3u64 {
+            st.ingest(ModelUpdate::new(p, 1.0, 0, vec![1.0; 100])).unwrap();
+        }
+        // quorum = ceil(0.5 × 6) = 3 → the 3 delivered reach it
+        let run = server.run_round_configured(6).unwrap();
+        assert_eq!(run.outcome, RoundOutcome::Quorum);
+        assert_eq!(run.folded, 3);
     }
 }

@@ -239,6 +239,10 @@ fn parity_sweep_shapes_fedavg() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "xla-tests"),
+    ignore = "needs the real XLA binding + AOT artifacts (--features xla-tests)"
+)]
 fn xla_krum_scores_match_rust() {
     // The krum_k16 artifact's pairwise scoring against the rust oracle.
     let Ok(rtm) = Runtime::load_default() else { return };
