@@ -1,0 +1,158 @@
+//! Hierarchical quickstart: a 2-tier aggregation tree on localhost —
+//! 2 edge relays × 4 simulated clients each, one root.
+//!
+//! Each relay runs its local quorum round over its cohort, pre-folds the
+//! updates into ONE weighted partial aggregate (raw accumulator state, so
+//! the result is exact), forwards it to the root, then fetches the fused
+//! model back and republishes it for its own clients.  The root's quorum
+//! counts cohort MEMBERS, not frames: 8 parties arrive as 2 partials.
+//!
+//! Run: `cargo run --release --offline --example hierarchical`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use elastiagg::client::SyntheticParty;
+use elastiagg::config::{NodeRole, ServiceConfig};
+use elastiagg::coordinator::{AdaptiveService, RoundOutcome};
+use elastiagg::dfs::{DfsClient, NameNode};
+use elastiagg::fusion::FedAvg;
+use elastiagg::mapreduce::ExecutorConfig;
+use elastiagg::net::{Message, NetClient};
+use elastiagg::server::{FlServer, RelayServer};
+
+const UPDATE_LEN: usize = 2_000; // 8 KB updates
+const EDGES: usize = 2;
+const COHORT: usize = 4;
+
+fn make_node(
+    role: NodeRole,
+    parent: Option<String>,
+    edge_id: u64,
+    dir: &std::path::Path,
+) -> Arc<FlServer> {
+    let nn = NameNode::create(dir, 2, 1, 1 << 20).expect("store");
+    let mut cfg = ServiceConfig::default();
+    cfg.node.memory_bytes = 1 << 20;
+    cfg.node.cores = 2;
+    cfg.role = role;
+    cfg.parent_addr = parent;
+    cfg.edge_id = edge_id;
+    let svc = AdaptiveService::new(
+        cfg,
+        DfsClient::new(nn),
+        None,
+        ExecutorConfig { executors: 1, cores_per_executor: 2, ..Default::default() },
+    );
+    FlServer::new(svc, Arc::new(FedAvg), (UPDATE_LEN * 4) as u64)
+}
+
+fn main() {
+    let scratch =
+        std::env::temp_dir().join(format!("elastiagg-hier-{}", std::process::id()));
+    std::fs::create_dir_all(&scratch).expect("scratch");
+
+    // --- the tree: one root, two relays (same binary, role from config) --
+    let root = make_node(NodeRole::Root, None, 0, &scratch.join("root"));
+    let root_handle = root.start("127.0.0.1:0").expect("bind root");
+    let root_addr = root_handle.addr().to_string();
+    println!("root  on {root_addr}");
+
+    let mut relays = Vec::new();
+    let mut relay_handles = Vec::new();
+    for e in 0..EDGES as u64 {
+        let server = make_node(
+            NodeRole::Relay,
+            Some(root_addr.clone()),
+            e,
+            &scratch.join(format!("edge{e}")),
+        );
+        let handle = server.start("127.0.0.1:0").expect("bind relay");
+        println!("edge{e} on {} -> {root_addr}", handle.addr());
+        let relay = RelayServer::from_config(server).expect("relay config");
+        relays.push((relay, handle.addr().to_string()));
+        relay_handles.push(handle);
+    }
+
+    // --- one round: cohorts upload to their edge, edges forward ---------
+    let total = EDGES * COHORT;
+    let (root_run, relay_runs) = std::thread::scope(|s| {
+        let drive =
+            s.spawn(|| root.run_round_quorum(total, total, Duration::from_secs(10)));
+        for (e, (_, addr)) in relays.iter().enumerate() {
+            for i in 0..COHORT as u64 {
+                let party = e as u64 * COHORT as u64 + i;
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut c = NetClient::connect(&addr).expect("connect relay");
+                    let mut p = SyntheticParty::new(party, 0xED6E);
+                    let u = p.make_update(0, UPDATE_LEN);
+                    let r = c.call(&Message::Upload(u)).expect("upload");
+                    assert!(matches!(r, Message::Ack { redirect_to_dfs: false }), "{r:?}");
+                });
+            }
+        }
+        let runs: Vec<_> = relays
+            .iter()
+            .map(|(relay, _)| {
+                s.spawn(move || {
+                    relay
+                        .run_relay_round(
+                            COHORT,
+                            COHORT,
+                            Duration::from_secs(5),
+                            Duration::from_secs(5),
+                        )
+                        .expect("relay round")
+                })
+            })
+            .collect();
+        let relay_runs: Vec<_> = runs.into_iter().map(|h| h.join().unwrap()).collect();
+        (drive.join().unwrap().expect("root round"), relay_runs)
+    });
+
+    for (e, run) in relay_runs.iter().enumerate() {
+        println!(
+            "edge{e}: folded {} members locally, forwarded 1 partial ({:?}), model republished: {}",
+            run.folded,
+            run.forwarded.as_ref().map(|m| match m {
+                Message::Ack { .. } => "Ack",
+                Message::Duplicate { .. } => "Duplicate",
+                Message::Late { .. } => "Late",
+                _ => "Error",
+            }),
+            run.model_published
+        );
+        assert_eq!(run.outcome, RoundOutcome::Complete);
+        assert!(run.model_published);
+    }
+    println!(
+        "root : outcome {:?}, {} members folded from {} partial frames, ingest {} bytes",
+        root_run.outcome,
+        root_run.folded,
+        EDGES,
+        root_handle.bytes_in.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    assert_eq!(root_run.outcome, RoundOutcome::Complete);
+    assert_eq!(root_run.folded, total, "quorum counts cohort members");
+
+    // --- clients fetch the fused model from their OWN edge --------------
+    let (_, edge0_addr) = &relays[0];
+    let mut c = NetClient::connect(edge0_addr).expect("connect relay");
+    match c.call(&Message::GetModel { round: 0 }).expect("get model") {
+        Message::Model { round, weights } => {
+            let (fused, _) = root_run.result.expect("published");
+            assert_eq!(round, 0);
+            assert_eq!(weights, fused, "the relay serves the root's exact model");
+            println!(
+                "model: {} params served from edge0, fused[0..3] = {:?}",
+                weights.len(),
+                &weights[..3]
+            );
+        }
+        other => panic!("{other:?}"),
+    }
+
+    let _ = std::fs::remove_dir_all(&scratch);
+    println!("hierarchical OK — {total} clients, {EDGES} partials, one exact fused model");
+}

@@ -77,6 +77,7 @@ fn main() {
             cores_per_executor: 3, // the paper's 3-core containers
             node_cores: 64,
             ingest_lanes: 64, // streaming priced at the sharded width
+            edges: 0,         // this figure compares FLAT plans only
             xla_available: true,
             feedback_beta: 0.3,
             expected_participation: 1.0, // this trace has no dropout
@@ -222,6 +223,9 @@ fn main() {
             })
             .collect()
     };
+    // machine-readable trajectory: BENCH_fig_adaptive_policy.json
+    let mut bench_json = elastiagg::bench::BenchJson::new("fig_adaptive_policy");
+    bench_json.meta("trace", elastiagg::util::json::Json::str("4/24-party alternating"));
     let mut small_single = 0usize;
     let mut spill_streaming = 0usize;
     for round in 0..8u32 {
@@ -229,6 +233,11 @@ fn main() {
         let updates = gen(parties, round);
         let (_, report) = service.aggregate_planned(&FedAvg, &updates, round).unwrap();
         let cal = *service.calibration_ledger().last().unwrap();
+        bench_json.round(elastiagg::bench::RoundRecord::from_calibration(
+            &cal,
+            report.engine,
+            0,
+        ));
         println!(
             "  round {round}: {parties:>2} parties -> {:?}({}, k={})  {}",
             report.class,
@@ -268,12 +277,21 @@ fn main() {
         if report.engine == "mapreduce" {
             large_mapreduce += 1;
         }
+        bench_json.round(elastiagg::bench::RoundRecord::from_calibration(
+            &cal,
+            report.engine,
+            0,
+        ));
     }
     assert_eq!(large_mapreduce, 2, "holistic spills must go to MapReduce");
     let scale_events = service.spark().counters.lock().unwrap().get("scale_events");
     println!(
         "\npool scale events across the alternating trace: {scale_events} (hysteresis holds)"
     );
+    match bench_json.write() {
+        Ok(p) => println!("machine-readable log: {}", p.display()),
+        Err(e) => println!("bench json not written: {e}"),
+    }
     let _ = std::fs::remove_dir_all(&root);
     println!("\nfigA OK — Balanced policy strictly dominates always-distributed(k={MAX_K})");
 }

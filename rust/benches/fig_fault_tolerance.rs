@@ -130,6 +130,7 @@ fn main() {
                 cores_per_executor: 3,
                 node_cores: 64,
                 ingest_lanes: 64,
+                edges: 0,
                 xla_available: false,
                 feedback_beta: 0.3,
                 expected_participation: 1.0,

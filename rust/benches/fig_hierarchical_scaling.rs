@@ -1,0 +1,318 @@
+//! Fig H (beyond the paper's numbered figures) — flat vs 2-tier
+//! hierarchical aggregation.
+//!
+//! The paper puts the aggregator in a resource-capped edge DC precisely
+//! because hauling every client update to one point is the cost and
+//! latency bottleneck; the standard edge-FL answer is a 2-tier tree where
+//! edge aggregators pre-fold their cohort and forward ONE weighted partial
+//! (EdgeFL, arXiv:2309.02936).  This bench pins the crossover:
+//!
+//! * **[model]** — at the paper's 1 GbE geometry the 2-tier topology must
+//!   beat the flat streaming round on BOTH root-ingest bytes and
+//!   end-to-end latency at ≥ 32 parties, and must NOT pay off below the
+//!   tier barrier; the planner's `Hierarchical` candidate is selected in
+//!   exactly those regimes and its EWMA family calibrates independently;
+//! * **[measured]** — a real 2-tier round (2 relay servers × N/2 simulated
+//!   clients each, forwarding partials to a root over localhost TCP)
+//!   ingests a fraction of the flat round's bytes at the root and fuses
+//!   the same model (within the documented merge tolerance).
+//!
+//! Machine-readable output: `BENCH_fig_hierarchical_scaling.json`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use elastiagg::bench::{BenchJson, RoundRecord};
+use elastiagg::client::SyntheticParty;
+use elastiagg::cluster::{CostModel, VirtualCluster};
+use elastiagg::config::{NodeRole, ServiceConfig};
+use elastiagg::coordinator::{AdaptiveService, RoundOutcome, WorkloadClassifier};
+use elastiagg::dfs::{DfsClient, NameNode};
+use elastiagg::fusion::FedAvg;
+use elastiagg::mapreduce::ExecutorConfig;
+use elastiagg::net::{Message, NetClient};
+use elastiagg::planner::{DispatchPlanner, DispatchPolicy, PlanKind, PlannerConfig, PricingModel};
+use elastiagg::server::{FlServer, RelayServer};
+use elastiagg::util::fmt;
+use elastiagg::util::json::Json;
+use elastiagg::util::prop::all_close;
+
+const UPDATE_46MB: u64 = (4.6 * 1024.0 * 1024.0) as u64;
+const EDGES: usize = 4;
+
+fn make_node(
+    role: NodeRole,
+    parent: Option<String>,
+    edge_id: u64,
+    dir: &std::path::Path,
+) -> Arc<FlServer> {
+    let nn = NameNode::create(dir, 2, 1, 1 << 20).expect("store");
+    let mut cfg = ServiceConfig::default();
+    cfg.node.memory_bytes = 1 << 20;
+    cfg.node.cores = 4;
+    cfg.role = role;
+    cfg.parent_addr = parent;
+    cfg.edge_id = edge_id;
+    let svc = AdaptiveService::new(
+        cfg,
+        DfsClient::new(nn),
+        None,
+        ExecutorConfig { executors: 1, cores_per_executor: 2, ..Default::default() },
+    );
+    FlServer::new(svc, Arc::new(FedAvg), (UPDATE_LEN * 4) as u64)
+}
+
+const UPDATE_LEN: usize = 2_000; // 8 KB updates for the measured part
+
+fn main() {
+    elastiagg::bench::banner(
+        "Fig H — flat vs 2-tier hierarchical aggregation",
+        "edge pre-folding forwards one weighted partial per edge (EdgeFL shape)",
+    );
+    let mut bench_json = BenchJson::new("fig_hierarchical_scaling");
+    bench_json.meta("edges", Json::num(EDGES as f64));
+    bench_json.meta("update_bytes_model", Json::num(UPDATE_46MB as f64));
+
+    // ---- part 1: paper-scale model (1 GbE, 64-core nodes) --------------
+    let v = VirtualCluster::paper(CostModel::nominal());
+    let mut t = fmt::Table::new(&[
+        "parties", "flat s", "2-tier s", "flat root bytes", "2-tier root bytes", "winner",
+    ]);
+    for &n in &[4usize, 8, 16, 32, 64, 128, 1024, 30_000] {
+        let flat_s = v.streaming_time(UPDATE_46MB, n, 64, 64);
+        let hier_s = v.hierarchical_time(UPDATE_46MB, n, 64, 64, EDGES);
+        let flat_b = v.flat_root_bytes(UPDATE_46MB, n);
+        let hier_b = v.hierarchical_root_bytes(UPDATE_46MB, n, EDGES);
+        t.row(&[
+            n.to_string(),
+            format!("{flat_s:.2}"),
+            format!("{hier_s:.2}"),
+            fmt::bytes(flat_b),
+            fmt::bytes(hier_b),
+            if hier_s < flat_s { "2-tier" } else { "flat" }.to_string(),
+        ]);
+        bench_json.round(RoundRecord {
+            round: n as u32,
+            label: "model:flat".into(),
+            latency_s: flat_s,
+            peak_bytes: flat_b,
+            ..Default::default()
+        });
+        bench_json.round(RoundRecord {
+            round: n as u32,
+            label: format!("model:hierarchical(e={EDGES})"),
+            latency_s: hier_s,
+            peak_bytes: hier_b,
+            ..Default::default()
+        });
+        if n >= 32 {
+            assert!(
+                hier_s < flat_s && hier_b < flat_b,
+                "n={n}: 2-tier must beat flat on BOTH axes: {hier_s} vs {flat_s}, {hier_b} vs {flat_b}"
+            );
+        }
+        if n <= 8 {
+            assert!(
+                hier_s > flat_s,
+                "n={n}: a tiny fleet must not pay the tier barrier: {hier_s} vs {flat_s}"
+            );
+        }
+    }
+    println!("\n[paper-scale, virtual] flat streaming vs 2-tier (e={EDGES}):");
+    t.print();
+
+    // The planner selects Hierarchical in EXACTLY the winning regimes.
+    // The aggregator is the paper's resource-capped edge DC: with 64 MB
+    // of aggregation memory every fleet ≥ ~7 parties is past the buffered
+    // ceiling, so the contest is flat-streaming vs 2-tier — the regime
+    // the crossover above describes.  (A 170 GB datacenter node would
+    // buffer these rounds and fold them off the ingest clock entirely;
+    // hierarchy is an EDGE answer.)
+    let edge_planner = || {
+        DispatchPlanner::new(
+            WorkloadClassifier::new(64 << 20, 1.1),
+            VirtualCluster::paper(CostModel::nominal()),
+            PricingModel::default(),
+            PlannerConfig {
+                policy: DispatchPolicy::MinLatency,
+                max_executors: 10,
+                cores_per_executor: 3,
+                node_cores: 64,
+                ingest_lanes: 64,
+                edges: EDGES,
+                xla_available: false,
+                feedback_beta: 0.3,
+                expected_participation: 1.0,
+            },
+        )
+    };
+    let planner = edge_planner();
+    for &n in &[32usize, 64, 128, 1024, 30_000] {
+        let plan = planner.plan(UPDATE_46MB, n, &FedAvg, 0);
+        assert_eq!(
+            plan.chosen.kind,
+            PlanKind::Hierarchical { edges: EDGES },
+            "n={n}: MinLatency must take the tier division"
+        );
+    }
+    for &n in &[4usize, 8] {
+        let plan = planner.plan(UPDATE_46MB, n, &FedAvg, 0);
+        assert_ne!(
+            plan.chosen.kind,
+            PlanKind::Hierarchical { edges: EDGES },
+            "n={n}: below the crossover the flat plan stays chosen"
+        );
+    }
+    println!("planner: Hierarchical(e={EDGES}) chosen at n ≥ 32, flat below — as modeled");
+
+    // ... and is priced within the EWMA band once observations flow back.
+    let mut cal_planner = edge_planner();
+    let base = cal_planner.plan(UPDATE_46MB, 1024, &FedAvg, 0).chosen.cost.latency_s;
+    let truth = base * 1.5; // the real tree runs 1.5× slower than nominal
+    let mut last_drift = f64::INFINITY;
+    for round in 0..8 {
+        let plan = cal_planner.plan(UPDATE_46MB, 1024, &FedAvg, 0);
+        last_drift = cal_planner.observe(round, &plan.chosen, truth).drift();
+    }
+    let corr = cal_planner.correction_for(PlanKind::Hierarchical { edges: EDGES });
+    assert!(
+        (corr - 1.5).abs() < 0.25,
+        "hierarchical EWMA family must absorb the 1.5x drift, got {corr}"
+    );
+    assert!((last_drift - 1.0).abs() < 0.15, "late rounds predict within the band: {last_drift}");
+    println!("EWMA: hierarchical family calibrated to x{corr:.2}, final drift x{last_drift:.2}");
+
+    // ---- part 2: measured 2-tier round over real TCP -------------------
+    const N: usize = 32;
+    let scratch = std::env::temp_dir().join(format!("elastiagg-figH-{}", std::process::id()));
+    std::fs::create_dir_all(&scratch).expect("scratch");
+    let updates: Vec<_> = (0..N as u64)
+        .map(|p| SyntheticParty::new(p, 0xF16).make_update(0, UPDATE_LEN))
+        .collect();
+
+    // flat: all 32 clients straight into one root
+    let flat_root = make_node(NodeRole::Root, None, 0, &scratch.join("flat"));
+    let flat_handle = flat_root.start("127.0.0.1:0").expect("bind");
+    let flat_addr = flat_handle.addr().to_string();
+    let t0 = Instant::now();
+    let flat_run = std::thread::scope(|s| {
+        let drive = s.spawn(|| flat_root.run_round_quorum(N, N, Duration::from_secs(20)));
+        for u in updates.clone() {
+            let addr = flat_addr.clone();
+            s.spawn(move || {
+                let mut c = NetClient::connect(&addr).unwrap();
+                let r = c.call(&Message::Upload(u)).unwrap();
+                assert!(matches!(r, Message::Ack { .. }), "{r:?}");
+            });
+        }
+        drive.join().unwrap().unwrap()
+    });
+    let flat_s = t0.elapsed().as_secs_f64();
+    let flat_bytes = flat_handle.bytes_in.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(flat_run.outcome, RoundOutcome::Complete);
+    let flat_fused = flat_run.result.unwrap().0;
+
+    // 2-tier: 2 relays × 16 clients each, one partial per relay to the root
+    let root = make_node(NodeRole::Root, None, 0, &scratch.join("root"));
+    let root_handle = root.start("127.0.0.1:0").expect("bind");
+    let root_addr = root_handle.addr().to_string();
+    let mut relay_handles = Vec::new();
+    let relays: Vec<(RelayServer, String)> = (0..2u64)
+        .map(|e| {
+            let server = make_node(
+                NodeRole::Relay,
+                Some(root_addr.clone()),
+                e,
+                &scratch.join(format!("edge{e}")),
+            );
+            let handle = server.start("127.0.0.1:0").expect("bind");
+            let addr = handle.addr().to_string();
+            relay_handles.push(handle);
+            (RelayServer::from_config(server).expect("relay cfg"), addr)
+        })
+        .collect();
+    let t0 = Instant::now();
+    let hier_run = std::thread::scope(|s| {
+        let drive = s.spawn(|| root.run_round_quorum(N, N, Duration::from_secs(20)));
+        for (e, (_, addr)) in relays.iter().enumerate() {
+            let cohort: Vec<_> = updates[e * 16..(e + 1) * 16].to_vec();
+            let addr = addr.clone();
+            s.spawn(move || {
+                std::thread::scope(|cs| {
+                    for u in cohort {
+                        let addr = addr.clone();
+                        cs.spawn(move || {
+                            let mut c = NetClient::connect(&addr).unwrap();
+                            let r = c.call(&Message::Upload(u)).unwrap();
+                            assert!(matches!(r, Message::Ack { .. }), "{r:?}");
+                        });
+                    }
+                });
+            });
+        }
+        // both relay rounds run CONCURRENTLY: each forwards its partial,
+        // then polls the root for the fused model (which the root only
+        // publishes once BOTH partials folded)
+        let relay_runs: Vec<_> = relays
+            .iter()
+            .map(|(relay, _)| {
+                s.spawn(move || {
+                    relay
+                        .run_relay_round(16, 16, Duration::from_secs(10), Duration::from_secs(10))
+                        .unwrap()
+                })
+            })
+            .collect();
+        for h in relay_runs {
+            let run = h.join().unwrap();
+            assert_eq!(run.folded, 16);
+            assert!(matches!(run.forwarded, Some(Message::Ack { .. })), "{run:?}");
+            assert!(run.model_published, "each relay republishes the fused model");
+        }
+        drive.join().unwrap().unwrap()
+    });
+    let hier_s = t0.elapsed().as_secs_f64();
+    let hier_bytes = root_handle.bytes_in.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(hier_run.outcome, RoundOutcome::Complete);
+    assert_eq!(hier_run.folded, N, "the root counted cohort members");
+    let hier_fused = hier_run.result.unwrap().0;
+    all_close(&flat_fused, &hier_fused, 1e-4, 1e-5).expect("flat/2-tier parity");
+
+    println!("\n[measured, localhost] {N} parties, {UPDATE_LEN}-param updates:");
+    println!(
+        "  flat   : {:>10} root-ingest bytes, {} round",
+        flat_bytes,
+        fmt::secs(flat_s)
+    );
+    println!(
+        "  2-tier : {:>10} root-ingest bytes, {} round (2 relays × 16)",
+        hier_bytes,
+        fmt::secs(hier_s)
+    );
+    assert!(
+        hier_bytes * 4 < flat_bytes,
+        "the root must ingest a FRACTION of the flat bytes: {hier_bytes} vs {flat_bytes}"
+    );
+    bench_json.meta("measured_flat_root_bytes", Json::num(flat_bytes as f64));
+    bench_json.meta("measured_hier_root_bytes", Json::num(hier_bytes as f64));
+    bench_json.round(RoundRecord {
+        round: 0,
+        label: "measured:flat".into(),
+        latency_s: flat_s,
+        peak_bytes: flat_bytes,
+        ..Default::default()
+    });
+    bench_json.round(RoundRecord {
+        round: 0,
+        label: "measured:hierarchical(e=2)".into(),
+        latency_s: hier_s,
+        peak_bytes: hier_bytes,
+        ..Default::default()
+    });
+    match bench_json.write() {
+        Ok(p) => println!("machine-readable log: {}", p.display()),
+        Err(e) => println!("bench json not written: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&scratch);
+    println!("\nfigH OK — one partial per edge lifts the root's ingest ceiling");
+}

@@ -1,0 +1,197 @@
+//! Machine-readable bench output: `BENCH_<fig>.json`.
+//!
+//! Every figure bench prints human tables; this emitter writes the same
+//! numbers as one JSON artifact per figure so the perf trajectory is
+//! tracked ACROSS PRs — CI (or a human) diffs `BENCH_fig_*.json` files
+//! instead of scraping stdout.  Schema:
+//!
+//! ```json
+//! {
+//!   "fig": "fig_adaptive_policy",
+//!   "meta": { "<free-form>": ... },
+//!   "rounds": [
+//!     { "round": 0, "label": "...", "latency_s": ..., "peak_bytes": ...,
+//!       "predicted_s": ..., "observed_s": ...,
+//!       "predicted_usd": ..., "observed_usd": ... }
+//!   ]
+//! }
+//! ```
+//!
+//! The output directory defaults to the working directory and is
+//! overridden by `BENCH_JSON_DIR`.
+
+use std::path::PathBuf;
+
+use crate::planner::RoundCalibration;
+use crate::util::json::Json;
+
+/// One round's record: latency, peak memory, predicted-vs-observed cost.
+/// Fields that don't apply to a bench stay 0 (and are still emitted, so
+/// the schema is stable across figures).
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: u32,
+    /// Free-form row label (e.g. "flat" / "hierarchical(e=2)").
+    pub label: String,
+    /// Measured wall-clock of the round.
+    pub latency_s: f64,
+    /// Peak resident bytes (memory-accountant high water), when tracked.
+    pub peak_bytes: u64,
+    pub predicted_s: f64,
+    pub observed_s: f64,
+    pub predicted_usd: f64,
+    pub observed_usd: f64,
+}
+
+impl RoundRecord {
+    /// Build a record from a planner calibration row (the
+    /// predicted-vs-observed pair every planned round produces).
+    pub fn from_calibration(cal: &RoundCalibration, label: &str, peak_bytes: u64) -> RoundRecord {
+        RoundRecord {
+            round: cal.round,
+            label: label.to_string(),
+            latency_s: cal.observed_s,
+            peak_bytes,
+            predicted_s: cal.predicted_s,
+            observed_s: cal.observed_s,
+            predicted_usd: cal.predicted_usd,
+            observed_usd: cal.observed_usd,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", Json::num(self.round as f64)),
+            ("label", Json::str(&self.label)),
+            ("latency_s", Json::num(self.latency_s)),
+            ("peak_bytes", Json::num(self.peak_bytes as f64)),
+            ("predicted_s", Json::num(self.predicted_s)),
+            ("observed_s", Json::num(self.observed_s)),
+            ("predicted_usd", Json::num(self.predicted_usd)),
+            ("observed_usd", Json::num(self.observed_usd)),
+        ])
+    }
+}
+
+/// Accumulates one figure's machine-readable output and writes
+/// `BENCH_<fig>.json` on [`BenchJson::write`].
+pub struct BenchJson {
+    fig: String,
+    meta: Vec<(String, Json)>,
+    rounds: Vec<RoundRecord>,
+}
+
+impl BenchJson {
+    pub fn new(fig: &str) -> BenchJson {
+        BenchJson { fig: fig.to_string(), meta: Vec::new(), rounds: Vec::new() }
+    }
+
+    /// Attach a free-form top-level fact (geometry, totals, assertions).
+    pub fn meta(&mut self, key: &str, value: Json) -> &mut Self {
+        self.meta.push((key.to_string(), value));
+        self
+    }
+
+    pub fn round(&mut self, r: RoundRecord) -> &mut Self {
+        self.rounds.push(r);
+        self
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("fig", Json::str(&self.fig)),
+            (
+                "meta",
+                Json::Obj(self.meta.iter().map(|(k, v)| (k.clone(), v.clone())).collect()),
+            ),
+            ("rounds", Json::Arr(self.rounds.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+
+    /// Write `BENCH_<fig>.json` into `dir`; returns the file path.
+    pub fn write_to(&self, dir: &std::path::Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.fig));
+        std::fs::write(&path, self.to_json().to_string())?;
+        Ok(path)
+    }
+
+    /// Write into `$BENCH_JSON_DIR` (default: the working directory).
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var_os("BENCH_JSON_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."));
+        self.write_to(&dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::PlanKind;
+
+    #[test]
+    fn emits_stable_schema_and_roundtrips() {
+        let mut b = BenchJson::new("fig_test");
+        b.meta("parties", Json::num(32.0));
+        b.round(RoundRecord {
+            round: 0,
+            label: "flat".into(),
+            latency_s: 1.5,
+            peak_bytes: 4096,
+            predicted_s: 1.2,
+            observed_s: 1.5,
+            predicted_usd: 0.001,
+            observed_usd: 0.00125,
+        });
+        assert_eq!(b.rounds(), 1);
+        let j = Json::parse(&b.to_json().to_string()).unwrap();
+        assert_eq!(j.get("fig").as_str(), Some("fig_test"));
+        assert_eq!(j.get("meta").get("parties").as_u64(), Some(32));
+        let r0 = j.get("rounds").at(0);
+        assert_eq!(r0.get("label").as_str(), Some("flat"));
+        assert_eq!(r0.get("peak_bytes").as_u64(), Some(4096));
+        assert_eq!(r0.get("latency_s").as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn writes_bench_file_into_dir() {
+        let dir = std::env::temp_dir().join(format!(
+            "elastiagg-benchjson-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut b = BenchJson::new("fig_x");
+        b.round(RoundRecord { round: 3, label: "r".into(), ..Default::default() });
+        let path = b.write_to(&dir).unwrap();
+        assert_eq!(path.file_name().unwrap(), "BENCH_fig_x.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("rounds").at(0).get("round").as_u64(), Some(3));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn calibration_rows_map_onto_records() {
+        let cal = RoundCalibration {
+            round: 7,
+            kind: PlanKind::Streaming,
+            predicted_s: 2.0,
+            observed_s: 2.5,
+            predicted_usd: 0.002,
+            observed_usd: 0.0025,
+        };
+        let r = RoundRecord::from_calibration(&cal, "streaming", 1024);
+        assert_eq!(r.round, 7);
+        assert_eq!(r.latency_s, 2.5);
+        assert_eq!(r.predicted_s, 2.0);
+        assert_eq!(r.peak_bytes, 1024);
+    }
+}

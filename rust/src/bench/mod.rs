@@ -9,8 +9,10 @@
 //!   paper's geometry (170 GB node, 4×64 cores, 3 datanodes, 1 GbE).
 
 pub mod driver;
+pub mod json;
 
 pub use driver::{federated_train, TrainConfig, TrainLog};
+pub use json::{BenchJson, RoundRecord};
 
 use std::sync::OnceLock;
 use std::time::Instant;

@@ -44,6 +44,13 @@ pub struct CostModel {
     pub executor_startup_s: f64,
     /// One-off dispatch latency of an AOT XLA execution (PJRT call setup).
     pub xla_launch_s: f64,
+    /// Per-tier synchronisation barrier of a hierarchical round: the root
+    /// cannot seal before the slowest edge aggregator seals its local
+    /// quorum, drains its lanes and forwards the partial (relay deadline
+    /// slack + seal/encode + one backhaul round-trip).  A prior, not
+    /// measured — the planner's hierarchical EWMA family calibrates it
+    /// against observed rounds like every other constant.
+    pub tier_sync_s: f64,
 }
 
 impl CostModel {
@@ -61,6 +68,7 @@ impl CostModel {
             task_overhead_s: 0.01,
             executor_startup_s: 2.5,
             xla_launch_s: 5e-4,
+            tier_sync_s: 0.3,
         }
     }
 

@@ -164,6 +164,76 @@ impl VirtualCluster {
         self.streaming_time(update_bytes, eff, cores, lanes)
     }
 
+    /// Virtual phase split of a 2-tier hierarchical round over `edges`
+    /// edge aggregators: `(edge_s, root_s)`.
+    ///
+    /// * **edge phase** — every edge runs a flat streaming round over its
+    ///   ~`n/edges` cohort *in parallel*, each through its own DC's client
+    ///   switch, so the phase lasts one cohort's [`streaming_time`]
+    ///   (this division of the ingest span is the latency win);
+    /// * **root phase** — the root folds `edges` C-sized partials (one per
+    ///   edge — the root-ingest-bytes win: `edges·C` instead of `n·C`
+    ///   through the root's switch), plus the [`tier_sync_s`] barrier: the
+    ///   root cannot seal before the slowest relay seals, drains and
+    ///   forwards.
+    ///
+    /// The barrier is what keeps small fleets on the flat plan: below a
+    /// few dozen parties the whole flat ingest span is cheaper than one
+    /// tier hop, which is exactly the crossover `fig_hierarchical_scaling`
+    /// pins.
+    ///
+    /// [`streaming_time`]: VirtualCluster::streaming_time
+    /// [`tier_sync_s`]: CostModel::tier_sync_s
+    pub fn hierarchical_breakdown(
+        &self,
+        update_bytes: u64,
+        n: usize,
+        cores: usize,
+        lanes: usize,
+        edges: usize,
+    ) -> (f64, f64) {
+        if n == 0 {
+            return (0.0, 0.0);
+        }
+        let edges = edges.clamp(1, n);
+        let cohort = n.div_ceil(edges);
+        let edge_s = self.streaming_time(update_bytes, cohort, cores, lanes);
+        let root_s =
+            self.streaming_time(update_bytes, edges, cores, lanes) + self.cost.tier_sync_s;
+        (edge_s, root_s)
+    }
+
+    /// End-to-end latency of the 2-tier round: the phases are sequential
+    /// (the root's ingest IS the relays' output).
+    pub fn hierarchical_time(
+        &self,
+        update_bytes: u64,
+        n: usize,
+        cores: usize,
+        lanes: usize,
+        edges: usize,
+    ) -> f64 {
+        let (e, r) = self.hierarchical_breakdown(update_bytes, n, cores, lanes, edges);
+        e + r
+    }
+
+    /// Wire bytes the ROOT ingests in a flat round: `n` update frames
+    /// (5-byte frame header + 28-byte update header + data + crc).
+    pub fn flat_root_bytes(&self, update_bytes: u64, n: usize) -> u64 {
+        n as u64 * (update_bytes + 37)
+    }
+
+    /// Wire bytes the ROOT ingests in a 2-tier round: one partial frame
+    /// per edge (5-byte frame header + 8-byte nonce + 40-byte partial
+    /// header + sums + crc) plus 8 bytes per cohort member for the
+    /// contributing-party set.  For `n ≫ edges` this is the ~`n/edges`×
+    /// reduction that lifts the "millions of clients behind one socket"
+    /// ceiling.
+    pub fn hierarchical_root_bytes(&self, update_bytes: u64, n: usize, edges: usize) -> u64 {
+        let edges = edges.clamp(1, n.max(1));
+        edges as u64 * (update_bytes + 57) + 8 * n as u64
+    }
+
     // ---------------------------------------------------------------
     // Distributed path (Figs 7–13)
     // ---------------------------------------------------------------
@@ -374,6 +444,42 @@ mod tests {
         // monotone in p, and floored at zero arrivals
         assert!(v.streaming_time_p(u, 30_000, 64, 64, 0.2) < half);
         assert_eq!(v.streaming_time_p(u, 0, 64, 64, 0.5), 0.0);
+    }
+
+    #[test]
+    fn hierarchy_beats_flat_past_the_crossover_on_the_paper_geometry() {
+        // 1 GbE, 4.6 MB updates, 4 edges: the flat streaming round is
+        // ingest-bound, so dividing the span 4 ways wins once the fleet
+        // outgrows the per-tier sync barrier — and never below it.
+        let v = vc();
+        let u = (4.6 * 1024.0 * 1024.0) as u64;
+        for n in [32usize, 64, 128, 1024, 30_000] {
+            let flat = v.streaming_time(u, n, 64, 64);
+            let hier = v.hierarchical_time(u, n, 64, 64, 4);
+            assert!(hier < flat, "n={n}: hier {hier} !< flat {flat}");
+        }
+        for n in [2usize, 4, 8] {
+            let flat = v.streaming_time(u, n, 64, 64);
+            let hier = v.hierarchical_time(u, n, 64, 64, 4);
+            assert!(hier > flat, "n={n}: the tier barrier must not pay off: {hier} vs {flat}");
+        }
+        // the phase split is consistent with the total
+        let (e, r) = v.hierarchical_breakdown(u, 64, 64, 64, 4);
+        assert!(e > 0.0 && r > v.cost.tier_sync_s);
+        assert_eq!(e + r, v.hierarchical_time(u, 64, 64, 64, 4));
+        assert_eq!(v.hierarchical_time(u, 0, 64, 64, 4), 0.0);
+    }
+
+    #[test]
+    fn root_ingest_bytes_shrink_by_the_edge_factor() {
+        let v = vc();
+        let u = (4.6 * 1024.0 * 1024.0) as u64;
+        let flat = v.flat_root_bytes(u, 10_000);
+        let hier = v.hierarchical_root_bytes(u, 10_000, 4);
+        assert!(hier < flat / 1000, "{hier} vs {flat}");
+        // degenerate shapes stay sane
+        assert!(v.hierarchical_root_bytes(u, 2, 16) <= v.flat_root_bytes(u, 2) + 2 * 57);
+        assert_eq!(v.flat_root_bytes(u, 0), 0);
     }
 
     #[test]

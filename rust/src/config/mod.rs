@@ -56,6 +56,53 @@ impl Default for ClusterSpec {
     }
 }
 
+/// Where this aggregator sits in the (optionally 2-tier) topology — the
+/// same binary serves every role, selected by config.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeRole {
+    /// Flat deployment: clients upload straight to this node (the paper's
+    /// single-aggregator shape).  The default.
+    Standalone,
+    /// Edge aggregator: runs its local quorum round over its cohort, then
+    /// acts as a client of `parent_addr`, uploading ONE weighted partial
+    /// aggregate per round.
+    Relay,
+    /// Root of a 2-tier tree: accepts partial aggregates from relays (and
+    /// direct uploads from stray clients) on a streaming round.
+    Root,
+}
+
+impl NodeRole {
+    pub fn parse(s: &str) -> Option<NodeRole> {
+        match s.to_ascii_lowercase().as_str() {
+            "standalone" | "flat" => Some(NodeRole::Standalone),
+            "relay" | "edge" => Some(NodeRole::Relay),
+            "root" => Some(NodeRole::Root),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            NodeRole::Standalone => "standalone",
+            NodeRole::Relay => "relay",
+            NodeRole::Root => "root",
+        }
+    }
+
+    /// Whether this node participates in a 2-tier topology (and therefore
+    /// must run the streaming ingest, the only state that folds partials).
+    pub fn is_hierarchical(&self) -> bool {
+        !matches!(self, NodeRole::Standalone)
+    }
+}
+
+impl std::fmt::Display for NodeRole {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Settings of the adaptive aggregation service (Algorithm 1).
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
@@ -91,6 +138,16 @@ pub struct ServiceConfig {
     /// an upload (edge fleets drop out and straggle); the planner prices
     /// K·p uploads and calibrates p from observed rounds.
     pub expected_participation: f64,
+    /// This node's place in the (optionally 2-tier) topology.
+    pub role: NodeRole,
+    /// Parent aggregator address a `relay` forwards its partial to.
+    pub parent_addr: Option<String>,
+    /// This edge aggregator's id (stamped on forwarded partials).
+    pub edge_id: u64,
+    /// Edge aggregators available for a 2-tier plan: with ≥ 2 the planner
+    /// enumerates + prices `PlanKind::Hierarchical` alongside the flat
+    /// candidates (0 or 1 = flat only).
+    pub edges: usize,
 }
 
 impl Default for ServiceConfig {
@@ -110,6 +167,10 @@ impl Default for ServiceConfig {
             quorum_fraction: 1.0,
             round_deadline_s: 600.0,
             expected_participation: 1.0,
+            role: NodeRole::Standalone,
+            parent_addr: None,
+            edge_id: 0,
+            edges: 0,
         }
     }
 }
@@ -186,6 +247,18 @@ impl ServiceConfig {
         if let Some(v) = j.get("expected_participation").as_f64() {
             c.expected_participation = v.clamp(0.0, 1.0);
         }
+        if let Some(r) = j.get("role").as_str().and_then(NodeRole::parse) {
+            c.role = r;
+        }
+        if let Some(v) = j.get("parent_addr").as_str() {
+            c.parent_addr = Some(v.to_string());
+        }
+        if let Some(v) = j.get("edge_id").as_u64() {
+            c.edge_id = v;
+        }
+        if let Some(v) = j.get("edges").as_usize() {
+            c.edges = v;
+        }
         c
     }
 
@@ -210,6 +283,16 @@ impl ServiceConfig {
             ("quorum_fraction", Json::num(self.quorum_fraction)),
             ("round_deadline_s", Json::num(self.round_deadline_s)),
             ("expected_participation", Json::num(self.expected_participation)),
+            ("role", Json::str(self.role.as_str())),
+            (
+                "parent_addr",
+                match &self.parent_addr {
+                    Some(a) => Json::str(a),
+                    None => Json::Null,
+                },
+            ),
+            ("edge_id", Json::num(self.edge_id as f64)),
+            ("edges", Json::num(self.edges as f64)),
         ])
     }
 }
@@ -292,6 +375,31 @@ mod tests {
         let j = Json::parse(r#"{"round_deadline_s": 1e20}"#).unwrap();
         let c6 = ServiceConfig::from_json(&j);
         assert_eq!(c6.round_deadline_s, 31_536_000.0);
+    }
+
+    #[test]
+    fn topology_knobs_roundtrip_and_default_flat() {
+        let c = ServiceConfig::default();
+        assert_eq!(c.role, NodeRole::Standalone);
+        assert!(!c.role.is_hierarchical());
+        assert_eq!(c.parent_addr, None);
+        assert_eq!(c.edges, 0);
+        let mut c2 = c.clone();
+        c2.role = NodeRole::Relay;
+        c2.parent_addr = Some("10.0.0.1:7000".to_string());
+        c2.edge_id = 3;
+        c2.edges = 4;
+        let c3 = ServiceConfig::from_json(&c2.to_json());
+        assert_eq!(c3.role, NodeRole::Relay);
+        assert!(c3.role.is_hierarchical());
+        assert_eq!(c3.parent_addr.as_deref(), Some("10.0.0.1:7000"));
+        assert_eq!(c3.edge_id, 3);
+        assert_eq!(c3.edges, 4);
+        // role aliases + an unknown role keeping the default
+        assert_eq!(NodeRole::parse("edge"), Some(NodeRole::Relay));
+        assert_eq!(NodeRole::parse("flat"), Some(NodeRole::Standalone));
+        let j = Json::parse(r#"{"role": "galactic"}"#).unwrap();
+        assert_eq!(ServiceConfig::from_json(&j).role, NodeRole::Standalone);
     }
 
     #[test]

@@ -101,6 +101,17 @@ impl WorkloadClassifier {
         algo.decomposable() && self.streaming_required_bytes(update_bytes) < self.memory_bytes
     }
 
+    /// The hierarchy gate: whether this node can participate in a 2-tier
+    /// topology for this algorithm — fold forwarded partial aggregates (as
+    /// a root) or pre-fold a cohort and forward one partial (as a relay).
+    /// Exactly the streaming-fold feasibility test: the algebra must
+    /// decompose (a partial IS a `combine` operand — coordinate-wise
+    /// median, Krum and Zeno have no meaningful partial, so those
+    /// deployments stay flat) and the O(C) accumulator must fit the node.
+    pub fn hierarchy_feasible(&self, update_bytes: u64, algo: &dyn FusionAlgorithm) -> bool {
+        self.streaming_feasible(update_bytes, algo)
+    }
+
     /// The three-way dispatch test the streaming path adds to Algorithm 1:
     /// rounds that fit buffered stay `Small`; rounds that would trip the
     /// Fig 1 ceiling stream on the node when the algorithm decomposes and
@@ -249,6 +260,17 @@ mod tests {
             c.classify_with_streaming(600 << 20, 4, &FedAvg),
             WorkloadClass::Large
         );
+    }
+
+    #[test]
+    fn hierarchy_gate_matches_decomposability_and_working_set() {
+        let c = WorkloadClassifier::new(1 << 30, 1.0);
+        // decomposable + O(C) fits: both relay and root roles are feasible
+        assert!(c.hierarchy_feasible(4 << 20, &FedAvg));
+        // holistic algorithms have no meaningful partial: stay flat
+        assert!(!c.hierarchy_feasible(4 << 20, &CoordMedian));
+        // an O(C) working set that exceeds the node cannot fold anywhere
+        assert!(!c.hierarchy_feasible(600 << 20, &FedAvg));
     }
 
     #[test]

@@ -43,9 +43,9 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::WorkloadClass;
 use crate::engine::{EngineError, FoldError, ShardedFold};
-use crate::fusion::{FusionAlgorithm, FusionError};
+use crate::fusion::{Accumulator, FusionAlgorithm, FusionError};
 use crate::memsim::{MemoryBudget, OutOfMemory, Reservation};
-use crate::tensorstore::{ModelUpdate, ModelUpdateView};
+use crate::tensorstore::{ModelUpdate, ModelUpdateView, PartialAggregateView};
 
 /// Lifecycle phase of a round.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -92,6 +92,12 @@ pub enum RoundError {
     /// than be told `Duplicate`.  The server surfaces this as a plain
     /// (retryable) error reply.
     InFlight { party: u64 },
+    /// A partial aggregate listed the same party twice: its pre-folded
+    /// sums count that member twice no matter what the ledger does, so
+    /// the frame is rejected outright.  Deliberately NOT `Duplicate` —
+    /// that reply means "an earlier upload for this party was accepted",
+    /// which would make the relay count the cohort as folded.
+    MalformedCohort { party: u64 },
     /// The node budget is exhausted (the Fig 1 ceiling, as an error).
     Memory(OutOfMemory),
     /// A streaming-only operation was called on a buffered round.
@@ -116,6 +122,9 @@ impl std::fmt::Display for RoundError {
             }
             RoundError::InFlight { party } => {
                 write!(f, "party {party} upload still folding; retry")
+            }
+            RoundError::MalformedCohort { party } => {
+                write!(f, "partial lists party {party} more than once")
             }
             RoundError::Memory(e) => write!(f, "memory: {e}"),
             RoundError::NotStreaming => write!(f, "round is buffered, not streaming"),
@@ -373,6 +382,55 @@ impl RoundState {
         }
     }
 
+    /// Claim a whole cohort's admission slots ATOMICALLY — the hierarchical
+    /// twin of [`RoundState::admit`].  A forwarded partial aggregate is one
+    /// frame carrying many parties' already-folded contributions; claiming
+    /// its slots one by one would open a window where a stray direct upload
+    /// from a cohort member lands between two claims and double-folds that
+    /// party.  Instead every involved ledger shard is locked (in ascending
+    /// shard order, so the multi-lock cannot deadlock against the
+    /// single-shard `admit`), all slots are checked vacant, and only then
+    /// are they all inserted.
+    ///
+    /// On ANY conflict the whole partial is rejected — the cohort's sums
+    /// are pre-folded, so the conflicting member's contribution cannot be
+    /// subtracted out.  The typed `Duplicate` names the first conflicting
+    /// party (and the nonce its accepted upload carried) so the edge
+    /// aggregator knows exactly which member poisoned the cohort and can
+    /// exclude it next round.  Nothing is claimed on rejection: the other
+    /// members remain free to upload directly.
+    fn admit_cohort(&self, parties: &[u64], nonce: u64) -> Result<(), RoundError> {
+        let mut sorted: Vec<u64> = parties.to_vec();
+        sorted.sort_unstable();
+        if let Some(w) = sorted.windows(2).find(|w| w[0] == w[1]) {
+            return Err(RoundError::MalformedCohort { party: w[0] });
+        }
+        let mut shard_ids: Vec<usize> =
+            sorted.iter().map(|p| (*p as usize) % LEDGER_SHARDS).collect();
+        shard_ids.sort_unstable();
+        shard_ids.dedup();
+        let mut guards: Vec<_> =
+            shard_ids.iter().map(|i| self.seen[*i].lock().unwrap()).collect();
+        let slot_of = |p: u64| {
+            shard_ids
+                .binary_search(&((p as usize) % LEDGER_SHARDS))
+                .expect("every party's shard was locked")
+        };
+        for &p in &sorted {
+            if let Some(slot) = guards[slot_of(p)].get(&p) {
+                return if slot.folded {
+                    Err(RoundError::Duplicate { party: p, nonce: slot.nonce })
+                } else {
+                    Err(RoundError::InFlight { party: p })
+                };
+            }
+        }
+        for &p in &sorted {
+            guards[slot_of(p)].insert(p, Slot { nonce, folded: false });
+        }
+        Ok(())
+    }
+
     /// The fold durably landed: retransmits from here on are `Duplicate`.
     fn mark_folded(&self, party: u64) {
         if let Some(slot) = self.ledger(party).lock().unwrap().get_mut(&party) {
@@ -451,6 +509,59 @@ impl RoundState {
             return self.fold_streaming(&fold, v.mem_bytes(), || fold.fold_view(algo.as_ref(), v));
         }
         self.ingest_buffered(v.to_update())
+    }
+
+    /// Ingest a weighted partial aggregate — an edge cohort pre-folded by a
+    /// relay — as a first-class object: the whole cohort's admission slots
+    /// are claimed atomically (see [`RoundState::admit_cohort`]), the
+    /// partial folds through the algebra's `combine` on a streaming lane,
+    /// and the fold counter advances by the cohort's MEMBER count, so
+    /// quorum logic counts contributing parties, not frames.
+    ///
+    /// Only streaming rounds can fold partials (a buffered round parks
+    /// owned `ModelUpdate`s; a partial is not one) — buffered rounds return
+    /// the typed [`RoundError::NotStreaming`], which the server maps to an
+    /// error reply telling the relay this aggregator is not running a
+    /// hierarchical ingest.
+    pub fn ingest_partial(&self, v: &PartialAggregateView<'_>) -> Result<usize, RoundError> {
+        self.ingest_partial_tagged(v, v.edge)
+    }
+
+    /// [`RoundState::ingest_partial`] with an explicit retransmission nonce
+    /// (recorded against every cohort member's slot).
+    pub fn ingest_partial_tagged(
+        &self,
+        v: &PartialAggregateView<'_>,
+        nonce: u64,
+    ) -> Result<usize, RoundError> {
+        self.require_phase(RoundPhase::Collecting)?;
+        if v.parties.is_empty() {
+            return Err(RoundError::Engine(EngineError::Fusion(FusionError::Empty)));
+        }
+        self.admit_cohort(&v.parties, nonce)?;
+        let r = self.ingest_partial_inner(v);
+        match &r {
+            Ok(_) => {
+                for p in v.parties.iter() {
+                    self.mark_folded(*p);
+                }
+            }
+            Err(_) => {
+                for p in v.parties.iter() {
+                    self.unadmit(*p);
+                }
+            }
+        }
+        r
+    }
+
+    fn ingest_partial_inner(&self, v: &PartialAggregateView<'_>) -> Result<usize, RoundError> {
+        match self.streaming_lane()? {
+            Some((fold, algo)) => self.fold_streaming(&fold, v.mem_bytes(), || {
+                fold.fold_partial(algo.as_ref(), &v.sum, v.wtot, v.parties.len() as u64)
+            }),
+            None => Err(RoundError::NotStreaming),
+        }
     }
 
     fn ingest_buffered(&self, u: ModelUpdate) -> Result<usize, RoundError> {
@@ -551,6 +662,68 @@ impl RoundState {
                 Err(RoundError::NotStreaming)
             }
         }
+    }
+
+    /// Streaming rounds, relay flavour: seal and drain like
+    /// [`RoundState::finish_streaming`] but stop BEFORE the finalize,
+    /// returning the raw merged [`Accumulator`], the folded member count
+    /// and the folded party set — exactly the pieces an edge aggregator
+    /// forwards upstream as a weighted partial aggregate.  (Finalizing at
+    /// the edge would divide by `wtot + EPS`; the root could never undo
+    /// that exactly.)
+    ///
+    /// The party set is read from the admission ledger after the seal.  An
+    /// upload whose fold completed in the final instruction window before
+    /// the seal but whose ledger slot was not yet marked can be counted in
+    /// the accumulator while missing from the set — the same residual
+    /// window `reopen_round` documents; the relay's settle beat before
+    /// sealing covers it, and the miss direction is conservative (the root
+    /// counts `parties.len()` members, never more than truly folded).
+    pub fn finish_streaming_partial(
+        &self,
+    ) -> Result<(Accumulator, usize, Vec<u64>), RoundError> {
+        let mut phase = self.phase.lock().unwrap();
+        if *phase != RoundPhase::Collecting {
+            return Err(RoundError::WrongPhase {
+                round: self.round,
+                expected: RoundPhase::Collecting,
+                actual: *phase,
+            });
+        }
+        let mut state = self.ingest.lock().unwrap();
+        let taken = std::mem::replace(&mut *state, IngestState::Drained);
+        match taken {
+            IngestState::Streaming { fold, algo } => {
+                *phase = RoundPhase::Aggregating;
+                let (acc, folded) = fold.finish_partial(algo.as_ref())?;
+                drop(state);
+                drop(phase);
+                let parties = self.folded_parties();
+                Ok((acc, folded as usize, parties))
+            }
+            other => {
+                *state = other; // put the buffered set back untouched
+                Err(RoundError::NotStreaming)
+            }
+        }
+    }
+
+    /// Parties whose uploads durably folded into this round (ascending).
+    /// Stable once the round sealed; mid-collection it is a live snapshot.
+    pub fn folded_parties(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        for shard in &self.seen {
+            out.extend(
+                shard
+                    .lock()
+                    .unwrap()
+                    .iter()
+                    .filter(|(_, s)| s.folded)
+                    .map(|(p, _)| *p),
+            );
+        }
+        out.sort_unstable();
+        out
     }
 
     /// Publish the fused model: Aggregating -> Published.
@@ -1193,6 +1366,143 @@ mod tests {
             uploader.join().unwrap();
             assert!(taken.join().unwrap() >= 1);
         });
+    }
+
+    /// An edge cohort pre-folded into a partial over all-ones weight-1.0
+    /// updates: sum = |cohort| per element, wtot = |cohort|.
+    fn partial(edge: u64, parties: Vec<u64>, len: usize) -> crate::tensorstore::PartialAggregate {
+        let k = parties.len();
+        crate::tensorstore::PartialAggregate::new(
+            edge,
+            0,
+            k as f64,
+            parties,
+            vec![k as f32; len],
+        )
+    }
+
+    fn streaming_round() -> RoundState {
+        RoundState::new_streaming(
+            0,
+            WorkloadClass::Streaming,
+            MemoryBudget::unbounded(),
+            Arc::new(FedAvg),
+            2,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn partial_ingest_folds_cohort_and_counts_members() {
+        let s = streaming_round();
+        s.ingest(upd(100, 64)).unwrap();
+        s.ingest(upd(101, 64)).unwrap();
+        let p = partial(7, vec![1, 2, 3, 4], 64);
+        let n = s.ingest_partial(&p.as_view()).unwrap();
+        assert_eq!(n, 6, "cohort MEMBERS advance the count, not frames");
+        assert_eq!(s.collected(), 6);
+        let (out, folded) = s.finish_streaming().unwrap();
+        assert_eq!(folded, 6);
+        // 2 direct all-ones + a 4-member all-ones partial: exact mean 1.0
+        assert!((out[0] - 1.0).abs() < 1e-5);
+        assert_eq!(s.folded_parties(), vec![1, 2, 3, 4, 100, 101]);
+    }
+
+    #[test]
+    fn partial_and_direct_upload_cannot_double_fold() {
+        // direct first: the cohort claiming that party is rejected WHOLE,
+        // and nothing else is claimed — the other members stay free
+        let s = streaming_round();
+        s.ingest_tagged(upd(3, 16), 0xD).unwrap();
+        let p = partial(9, vec![2, 3, 4], 16);
+        assert!(matches!(
+            s.ingest_partial_tagged(&p.as_view(), 0xE),
+            Err(RoundError::Duplicate { party: 3, nonce: 0xD })
+        ));
+        assert_eq!(s.collected(), 1, "the poisoned cohort must not fold");
+        s.ingest(upd(4, 16)).unwrap(); // member 4 was never claimed
+        assert_eq!(s.collected(), 2);
+
+        // partial first: a stray direct upload from a cohort member is the
+        // plain typed Duplicate carrying the partial's nonce
+        let s = streaming_round();
+        s.ingest_partial_tagged(&partial(9, vec![5, 6], 16).as_view(), 0xAB)
+            .unwrap();
+        assert!(matches!(
+            s.ingest_tagged(upd(6, 16), 0xCC),
+            Err(RoundError::Duplicate { party: 6, nonce: 0xAB })
+        ));
+        // ... and so is a retransmit of the partial itself
+        assert!(matches!(
+            s.ingest_partial_tagged(&partial(9, vec![5, 6], 16).as_view(), 0xAD),
+            Err(RoundError::Duplicate { party: 5, nonce: 0xAB })
+        ));
+        assert_eq!(s.collected(), 2);
+    }
+
+    #[test]
+    fn buffered_round_rejects_partials_without_claiming_slots() {
+        let r = RoundState::new(0, WorkloadClass::Small, MemoryBudget::unbounded());
+        let p = partial(1, vec![10, 11], 16);
+        assert!(matches!(
+            r.ingest_partial(&p.as_view()),
+            Err(RoundError::NotStreaming)
+        ));
+        // the failed ingest released the cohort's slots
+        r.ingest(upd(10, 16)).unwrap();
+        assert_eq!(r.collected(), 1);
+    }
+
+    #[test]
+    fn malformed_partials_are_typed_errors() {
+        let s = streaming_round();
+        // empty cohort
+        assert!(matches!(
+            s.ingest_partial(&partial(1, vec![], 16).as_view()),
+            Err(RoundError::Engine(EngineError::Fusion(FusionError::Empty)))
+        ));
+        // in-cohort duplicate party: a dedicated error, NOT Duplicate —
+        // Duplicate would tell the relay an earlier upload was accepted
+        assert!(matches!(
+            s.ingest_partial_tagged(&partial(1, vec![7, 8, 7], 16).as_view(), 0x1),
+            Err(RoundError::MalformedCohort { party: 7 })
+        ));
+        // neither claimed anything
+        s.ingest(upd(7, 16)).unwrap();
+        // wrong shape: rejected at ingest, slots released for a retry
+        s.ingest_partial(&partial(1, vec![20, 21], 17).as_view()).unwrap_err();
+        s.ingest_partial(&partial(1, vec![20, 21], 16).as_view()).unwrap();
+        assert_eq!(s.collected(), 3);
+    }
+
+    #[test]
+    fn finish_streaming_partial_returns_raw_state() {
+        let budget = MemoryBudget::new(1 << 20);
+        let s = RoundState::new_streaming(
+            5,
+            WorkloadClass::Streaming,
+            budget.clone(),
+            Arc::new(FedAvg),
+            2,
+        )
+        .unwrap();
+        for p in [4u64, 9, 2] {
+            s.ingest(upd(p, 32)).unwrap();
+        }
+        let (acc, folded, parties) = s.finish_streaming_partial().unwrap();
+        assert_eq!(folded, 3);
+        assert_eq!(parties, vec![2, 4, 9]);
+        assert_eq!(acc.n, 3);
+        assert_eq!(acc.wtot, 3.0);
+        // RAW weighted sums (3 × 1.0 × 1.0), not the finalized mean
+        assert!((acc.sum[0] - 3.0).abs() < 1e-5);
+        assert_eq!(budget.in_use(), 0, "the drain released the lane scratch");
+        // the relay can still publish the parent's fused model locally
+        assert_eq!(s.phase(), RoundPhase::Aggregating);
+        s.publish(vec![0.5; 32]).unwrap();
+        // a buffered round gets the typed error
+        let r = RoundState::new(0, WorkloadClass::Small, MemoryBudget::unbounded());
+        assert!(matches!(r.finish_streaming_partial(), Err(RoundError::NotStreaming)));
     }
 
     #[test]

@@ -130,6 +130,7 @@ impl AdaptiveService {
                 // the FL server shards its streaming ingest one lane per
                 // core — price the plan against that width
                 ingest_lanes: cfg.node.cores.max(1),
+                edges: cfg.edges,
                 xla_available: xla.is_some(),
                 feedback_beta: 0.3,
                 expected_participation: cfg.expected_participation,
@@ -174,6 +175,13 @@ impl AdaptiveService {
     /// fits; only the rest go distributed.
     pub fn classify_full(&self, update_bytes: u64, parties: usize, algo: &dyn FusionAlgorithm) -> WorkloadClass {
         self.classifier.classify_with_streaming(update_bytes, parties, algo)
+    }
+
+    /// The hierarchy gate (see [`WorkloadClassifier::hierarchy_feasible`]):
+    /// whether this node can fold forwarded partial aggregates (root) or
+    /// pre-fold a cohort into one (relay) for this algorithm.
+    pub fn hierarchy_feasible(&self, update_bytes: u64, algo: &dyn FusionAlgorithm) -> bool {
+        self.classifier.hierarchy_feasible(update_bytes, algo)
     }
 
     /// Predict whether parties should be redirected to the store for the
@@ -321,6 +329,14 @@ impl AdaptiveService {
                 (out, report, upload_s)
             }
             PlanKind::Streaming => {
+                let (out, report) = self.aggregate_streaming(algo, updates, round)?;
+                (out, report, 0.0)
+            }
+            // A hierarchical plan describes a multi-DC deployment (relays +
+            // root over TCP); over an in-memory batch the root's fold IS
+            // the streaming fold, so execute that — identical algebra — and
+            // let the observation calibrate the hierarchical family.
+            PlanKind::Hierarchical { .. } => {
                 let (out, report) = self.aggregate_streaming(algo, updates, round)?;
                 (out, report, 0.0)
             }

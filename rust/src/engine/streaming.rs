@@ -116,6 +116,54 @@ impl StreamingFold {
         self.fold_weighted(algo, algo.weight_parts(v.count, &v.data), &v.data)
     }
 
+    /// Shape-validate against the fold's pinned parameter count, lazily
+    /// reserving the O(C) scratch and seeding the accumulator on first use
+    /// — shared by the per-update fold and the partial-aggregate fold.
+    fn ensure_shape(&mut self, len: usize) -> Result<(), EngineError> {
+        if let Some(a) = &self.acc {
+            if a.sum.len() != len {
+                return Err(EngineError::Fusion(FusionError::ShapeMismatch {
+                    want: a.sum.len(),
+                    got: len,
+                }));
+            }
+        } else {
+            self.scratch = Some(self.budget.reserve(len as u64 * 4)?);
+            self.acc = Some(Accumulator::zeros(len));
+        }
+        Ok(())
+    }
+
+    /// Fold an already-folded cohort (a forwarded weighted partial
+    /// aggregate) into the running sums: the algebra's `combine` applied
+    /// through [`FusionAlgorithm::combine_parts`], so a 2-tier round runs
+    /// the exact reduce the in-memory engines run.  `n` is the cohort's
+    /// member count — it advances `folded()` by the whole cohort, which is
+    /// what lets quorum counting see members, not frames.
+    pub fn fold_partial(
+        &mut self,
+        algo: &dyn FusionAlgorithm,
+        sum: &[f32],
+        wtot: f64,
+        n: u64,
+    ) -> Result<(), EngineError> {
+        if n == 0 {
+            return Err(EngineError::Fusion(FusionError::Empty));
+        }
+        self.ensure_shape(sum.len())?;
+        let acc = self.acc.as_mut().expect("acc initialised above");
+        algo.combine_parts(acc, sum, wtot, n);
+        Ok(())
+    }
+
+    /// Tear the fold down into its raw accumulator (releasing the O(C)
+    /// budget charge) — what an edge aggregator forwards upstream as a
+    /// [`PartialAggregate`](crate::tensorstore::PartialAggregate).  `None`
+    /// if nothing was folded.
+    pub fn into_accumulator(self) -> Option<Accumulator> {
+        self.acc
+    }
+
     /// The shared fold core over (weight, data).  The serial path calls
     /// [`FusionAlgorithm::accumulate_weighted`] — the same trait method the
     /// batch `accumulate` delegates to — so owned and borrowed entries are
@@ -127,17 +175,7 @@ impl StreamingFold {
         w: f32,
         data: &[f32],
     ) -> Result<(), EngineError> {
-        if let Some(a) = &self.acc {
-            if a.sum.len() != data.len() {
-                return Err(EngineError::Fusion(FusionError::ShapeMismatch {
-                    want: a.sum.len(),
-                    got: data.len(),
-                }));
-            }
-        } else {
-            self.scratch = Some(self.budget.reserve(data.len() as u64 * 4)?);
-            self.acc = Some(Accumulator::zeros(data.len()));
-        }
+        self.ensure_shape(data.len())?;
         let acc = self.acc.as_mut().expect("acc initialised above");
         let len = acc.sum.len();
         if self.threads <= 1 || len < CHUNK_MIN_LEN {
@@ -356,26 +394,55 @@ impl ShardedFold {
         w: f32,
         data: &[f32],
     ) -> Result<u64, FoldError> {
+        self.fold_lanes(data.len(), 1, |lane| lane.fold_weighted(algo, w, data))
+    }
+
+    /// Fold an already-folded cohort (a forwarded weighted partial
+    /// aggregate) into one lane; returns the running *member* count.  The
+    /// cohort's `n` members advance the fold counter as a unit, so quorum
+    /// logic downstream counts contributing parties, not wire frames.
+    pub fn fold_partial(
+        &self,
+        algo: &dyn FusionAlgorithm,
+        sum: &[f32],
+        wtot: f64,
+        n: u64,
+    ) -> Result<u64, FoldError> {
+        if n == 0 {
+            return Err(FoldError::Engine(EngineError::Fusion(FusionError::Empty)));
+        }
+        self.fold_lanes(sum.len(), n, |lane| lane.fold_partial(algo, sum, wtot, n))
+    }
+
+    /// The shared lane walk: pin (or check) the fold-global shape, pick a
+    /// round-robin start lane, re-check the seal under each lane lock, and
+    /// fall back across lanes under budget pressure.  `members` is how far
+    /// one successful `try_fold` advances the fold counter (1 for a client
+    /// update, the cohort size for a partial aggregate).
+    fn fold_lanes<F>(&self, len: usize, members: u64, try_fold: F) -> Result<u64, FoldError>
+    where
+        F: Fn(&mut StreamingFold) -> Result<(), EngineError>,
+    {
         // Fix (or check) the fold-global shape first: the winning CAS pins
         // it for everyone, so two racing first updates of different shapes
         // cannot seed incompatible lanes.
         let pinned_by_us = match self.expect_len.compare_exchange(
             0,
-            data.len() + 1,
+            len + 1,
             Ordering::AcqRel,
             Ordering::Acquire,
         ) {
             Ok(_) => true,
-            Err(cur) if cur - 1 == data.len() => false,
+            Err(cur) if cur - 1 == len => false,
             Err(cur) => {
                 return Err(FoldError::Engine(EngineError::Fusion(
-                    FusionError::ShapeMismatch { want: cur - 1, got: data.len() },
+                    FusionError::ShapeMismatch { want: cur - 1, got: len },
                 )))
             }
         };
         let lanes = self.shards.len();
         let start = self.next.fetch_add(1, Ordering::Relaxed) % lanes;
-        let scratch = (data.len() * 4) as u64;
+        let scratch = (len * 4) as u64;
         let mut oom: Option<EngineError> = None;
         for i in 0..lanes {
             let shard = &self.shards[(start + i) % lanes];
@@ -394,10 +461,10 @@ impl ShardedFold {
             if i > 0 && guard.params().is_none() && !self.budget.would_fit(scratch) {
                 continue;
             }
-            match guard.fold_weighted(algo, w, data) {
+            match try_fold(&mut guard) {
                 Ok(()) => {
                     self.any_active.store(true, Ordering::Release);
-                    return Ok(self.folded.fetch_add(1, Ordering::AcqRel) + 1);
+                    return Ok(self.folded.fetch_add(members, Ordering::AcqRel) + members);
                 }
                 // An uninitialised lane OOMing on its scratch is the
                 // fallback trigger; keep scanning for an active lane.
@@ -413,7 +480,7 @@ impl ShardedFold {
         // mismatch at merge time, never silent corruption.
         if pinned_by_us && self.folded.load(Ordering::Acquire) == 0 {
             let _ = self.expect_len.compare_exchange(
-                data.len() + 1,
+                len + 1,
                 0,
                 Ordering::AcqRel,
                 Ordering::Relaxed,
@@ -431,6 +498,21 @@ impl ShardedFold {
     /// acquiring a lock after the seal bails out, so the drain observes a
     /// quiescent set.
     pub fn finish(&self, algo: &dyn FusionAlgorithm) -> Result<(Vec<f32>, u64), EngineError> {
+        let (acc, folded) = self.finish_partial(algo)?;
+        Ok((algo.finalize(acc), folded))
+    }
+
+    /// Seal and drain like [`ShardedFold::finish`], but stop BEFORE the
+    /// finalize: the raw merged [`Accumulator`] plus the member count is
+    /// exactly what an edge aggregator forwards upstream as a weighted
+    /// partial aggregate.  (Finalizing at the edge and re-weighting at the
+    /// root would divide by `wtot + EPS` twice — never exact.)  The lane
+    /// scratch reservations are released as the drain merges them; the
+    /// returned accumulator is unaccounted, owned by the caller.
+    pub fn finish_partial(
+        &self,
+        algo: &dyn FusionAlgorithm,
+    ) -> Result<(Accumulator, u64), EngineError> {
         self.seal();
         let mut merged = StreamingFold::new(algo, 1, self.budget.clone())?;
         for shard in &self.shards {
@@ -444,8 +526,10 @@ impl ShardedFold {
             merged.merge(algo, taken)?;
         }
         let folded = self.folded.load(Ordering::Acquire);
-        let out = merged.finish(algo)?;
-        Ok((out, folded))
+        let acc = merged
+            .into_accumulator()
+            .ok_or(EngineError::Fusion(FusionError::Empty))?;
+        Ok((acc, folded))
     }
 }
 
@@ -689,6 +773,97 @@ mod tests {
     #[test]
     fn sharded_rejects_holistic_algorithms() {
         assert!(ShardedFold::new(&CoordMedian, 4, MemoryBudget::unbounded()).is_err());
+    }
+
+    #[test]
+    fn fold_partial_is_the_exact_combine() {
+        // Folding a cohort's raw parts equals merging the cohort's fold —
+        // bit-identical, the invariant the 2-tier wire path rides on.
+        let us = batch(51, 10, 800);
+        let build_edge = || {
+            let mut f = StreamingFold::new(&FedAvg, 1, MemoryBudget::unbounded()).unwrap();
+            for u in &us[3..] {
+                f.fold(&FedAvg, u).unwrap();
+            }
+            f
+        };
+        let part = build_edge().into_accumulator().unwrap();
+
+        let build_root = || {
+            let mut f = StreamingFold::new(&FedAvg, 1, MemoryBudget::unbounded()).unwrap();
+            for u in &us[..3] {
+                f.fold(&FedAvg, u).unwrap();
+            }
+            f
+        };
+        let mut via_merge = build_root();
+        via_merge.merge(&FedAvg, build_edge()).unwrap();
+        let mut via_parts = build_root();
+        via_parts.fold_partial(&FedAvg, &part.sum, part.wtot, part.n).unwrap();
+        assert_eq!(via_parts.folded(), 10);
+        assert_eq!(via_parts.finish(&FedAvg).unwrap(), via_merge.finish(&FedAvg).unwrap());
+    }
+
+    #[test]
+    fn sharded_fold_partial_counts_cohort_members() {
+        // One partial of 6 members + two direct updates: folded() must
+        // report 8 MEMBERS (the quorum unit), not 3 frames.
+        let mut edge = StreamingFold::new(&FedAvg, 1, MemoryBudget::unbounded()).unwrap();
+        for p in 0..6u64 {
+            edge.fold(&FedAvg, &ModelUpdate::new(p, 2.0, 0, vec![1.0; 32])).unwrap();
+        }
+        let part = edge.into_accumulator().unwrap();
+        let fold = ShardedFold::new(&FedAvg, 2, MemoryBudget::unbounded()).unwrap();
+        fold.fold(&FedAvg, &ModelUpdate::new(100, 2.0, 0, vec![1.0; 32])).unwrap();
+        let running = fold.fold_partial(&FedAvg, &part.sum, part.wtot, part.n).unwrap();
+        assert_eq!(running, 7);
+        fold.fold(&FedAvg, &ModelUpdate::new(101, 2.0, 0, vec![1.0; 32])).unwrap();
+        assert_eq!(fold.folded(), 8);
+        let (out, folded) = fold.finish(&FedAvg).unwrap();
+        assert_eq!(folded, 8);
+        // all-ones inputs with uniform weights average to exactly 1
+        assert!(out.iter().all(|v| (v - 1.0).abs() < 1e-5));
+    }
+
+    #[test]
+    fn sharded_partial_shape_and_empty_guards() {
+        let fold = ShardedFold::new(&FedAvg, 2, MemoryBudget::unbounded()).unwrap();
+        fold.fold(&FedAvg, &ModelUpdate::new(0, 1.0, 0, vec![1.0; 16])).unwrap();
+        // wrong-shape partial is rejected at ingest by the global pin
+        assert!(matches!(
+            fold.fold_partial(&FedAvg, &[1.0; 17], 3.0, 2),
+            Err(FoldError::Engine(EngineError::Fusion(FusionError::ShapeMismatch {
+                want: 16,
+                got: 17
+            })))
+        ));
+        // an empty cohort is meaningless — typed Empty, not a silent no-op
+        assert!(matches!(
+            fold.fold_partial(&FedAvg, &[1.0; 16], 0.0, 0),
+            Err(FoldError::Engine(EngineError::Fusion(FusionError::Empty)))
+        ));
+        assert_eq!(fold.folded(), 1);
+    }
+
+    #[test]
+    fn finish_partial_returns_raw_accumulator_and_releases_budget() {
+        let budget = MemoryBudget::new(1 << 20);
+        let fold = ShardedFold::new(&FedAvg, 2, budget.clone()).unwrap();
+        for p in 0..4u64 {
+            fold.fold(&FedAvg, &ModelUpdate::new(p, 3.0, 0, vec![2.0; 64])).unwrap();
+        }
+        let (acc, folded) = fold.finish_partial(&FedAvg).unwrap();
+        assert_eq!(folded, 4);
+        assert_eq!(acc.n, 4);
+        assert_eq!(acc.wtot, 12.0);
+        // raw weighted sums, NOT finalized: 4 × (3.0 × 2.0) = 24
+        assert!(acc.sum.iter().all(|v| (v - 24.0).abs() < 1e-4));
+        assert_eq!(budget.in_use(), 0, "drain must release the lane scratch");
+        // the fold is sealed exactly like finish()
+        assert!(matches!(
+            fold.fold(&FedAvg, &ModelUpdate::new(9, 1.0, 0, vec![1.0; 64])),
+            Err(FoldError::Sealed)
+        ));
     }
 
     #[test]

@@ -55,12 +55,22 @@ impl Accumulator {
 
     /// Merge another accumulator (element-wise add).
     pub fn merge(&mut self, other: &Accumulator) {
-        debug_assert_eq!(other.sum.len(), self.sum.len());
-        for (s, x) in self.sum.iter_mut().zip(&other.sum) {
+        self.merge_parts(&other.sum, other.wtot, other.n);
+    }
+
+    /// Merge a partial's raw parts — the borrowed-wire twin of
+    /// [`Accumulator::merge`], used when the other side's sums still live
+    /// in a decoded [`PartialAggregateView`](crate::tensorstore::PartialAggregateView)
+    /// rather than an owned accumulator.  Same element-wise adds, same
+    /// `wtot`/`n` bookkeeping, so folding a forwarded partial is exactly
+    /// the algebra's `combine`.
+    pub fn merge_parts(&mut self, sum: &[f32], wtot: f64, n: u64) {
+        debug_assert_eq!(sum.len(), self.sum.len());
+        for (s, x) in self.sum.iter_mut().zip(sum) {
             *s += x;
         }
-        self.wtot += other.wtot;
-        self.n += other.n;
+        self.wtot += wtot;
+        self.n += n;
     }
 }
 
@@ -144,7 +154,18 @@ pub trait FusionAlgorithm: Send + Sync {
 
     /// Merge partial accumulators (reduce side).
     fn combine(&self, a: &mut Accumulator, b: &Accumulator) {
-        a.merge(b);
+        self.combine_parts(a, &b.sum, b.wtot, b.n);
+    }
+
+    /// Merge a partial given as raw parts (sums, total weight, member
+    /// count) — what a forwarded [`PartialAggregate`](crate::tensorstore::PartialAggregate)
+    /// decodes to.  `combine` delegates here, so an algorithm that
+    /// customises its reduce overrides THIS method and both the in-memory
+    /// and the hierarchical wire path follow.  Only meaningful when
+    /// `decomposable()` — the hierarchy gate rejects holistic algorithms
+    /// before a partial is ever built.
+    fn combine_parts(&self, a: &mut Accumulator, sum: &[f32], wtot: f64, n: u64) {
+        a.merge_parts(sum, wtot, n);
     }
 
     /// Finalize an accumulator into fused weights.
@@ -271,6 +292,28 @@ mod tests {
                 all_close(&merged, &whole, 1e-4, 1e-5)
             });
         }
+    }
+
+    /// The hierarchy invariant: combining a partial through its raw parts
+    /// (the wire shape) is bit-identical to combining the accumulator
+    /// itself — the 2-tier fold can not drift from the in-memory reduce.
+    #[test]
+    fn combine_parts_is_bit_identical_to_combine() {
+        let mut rng = Rng::new(17);
+        let us: Vec<ModelUpdate> = (0..9).map(|_| upd(&mut rng, 64, 3.0)).collect();
+        let mut part = Accumulator::zeros(64);
+        for u in &us[4..] {
+            FedAvg.accumulate(&mut part, u);
+        }
+        let mut a = Accumulator::zeros(64);
+        let mut b = Accumulator::zeros(64);
+        for u in &us[..4] {
+            FedAvg.accumulate(&mut a, u);
+            FedAvg.accumulate(&mut b, u);
+        }
+        FedAvg.combine(&mut a, &part);
+        FedAvg.combine_parts(&mut b, &part.sum, part.wtot, part.n);
+        assert_eq!(a, b);
     }
 
     #[test]

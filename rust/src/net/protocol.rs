@@ -2,7 +2,7 @@
 
 use std::sync::Arc;
 
-use crate::tensorstore::{bytes_to_f32s, f32s_as_bytes, ModelUpdate, WireError};
+use crate::tensorstore::{bytes_to_f32s, f32s_as_bytes, ModelUpdate, PartialAggregate, WireError};
 
 /// 2 GiB frame cap — a single full-size CNN956 update is ~1 GiB; anything
 /// larger than this is a corrupt header, rejected before allocation.
@@ -25,6 +25,12 @@ pub const TAG_UPLOAD_NONCE: u8 = 0x08;
 pub const TAG_DUPLICATE: u8 = 0x09;
 /// Reply: the upload arrived after the round sealed (quorum/deadline/abort).
 pub const TAG_LATE: u8 = 0x0A;
+/// Upload of a weighted *partial aggregate* (an already-folded edge
+/// cohort): 8-byte retransmission nonce, then the CRC-covered
+/// [`PartialAggregate`] bytes — the same nonce-ahead layout as
+/// [`TAG_UPLOAD_NONCE`], so the partial's f32 sums still decode zero-copy
+/// at the 4-aligned offset inside the pooled frame buffer.
+pub const TAG_UPLOAD_PARTIAL: u8 = 0x0B;
 pub const TAG_ERROR: u8 = 0x7F;
 
 /// Validate a payload length before it is cast into the wire's u32 length
@@ -51,6 +57,10 @@ pub enum Message {
     /// ahead of the update bytes so the CRC-covered payload is unchanged
     /// and still decodes zero-copy at an 8-byte offset).
     UploadNonce { nonce: u64, update: ModelUpdate },
+    /// An edge aggregator uploads its cohort's weighted partial aggregate.
+    /// Carries a retransmission nonce exactly like [`Message::UploadNonce`];
+    /// the coordinator claims the whole cohort's dedup slots atomically.
+    UploadPartial { nonce: u64, partial: PartialAggregate },
     /// Server ack; `redirect_to_dfs` tells the party to write its NEXT
     /// update to the shared store instead (seamless transition, §III-D3).
     Ack { redirect_to_dfs: bool },
@@ -121,6 +131,11 @@ impl Message {
                 out.extend_from_slice(&nonce.to_le_bytes());
                 update.encode_into(out);
                 TAG_UPLOAD_NONCE
+            }
+            Message::UploadPartial { nonce, partial } => {
+                out.extend_from_slice(&nonce.to_le_bytes());
+                partial.encode_into(out);
+                TAG_UPLOAD_PARTIAL
             }
             Message::Ack { redirect_to_dfs } => {
                 out.push(u8::from(*redirect_to_dfs));
@@ -205,6 +220,13 @@ impl Message {
                     update: ModelUpdate::decode(&payload[8..])?,
                 })
             }
+            TAG_UPLOAD_PARTIAL => {
+                need(8)?;
+                Ok(Message::UploadPartial {
+                    nonce: u64::from_le_bytes(payload[..8].try_into().unwrap()),
+                    partial: PartialAggregate::decode(&payload[8..])?,
+                })
+            }
             TAG_ACK => {
                 need(1)?;
                 Ok(Message::Ack { redirect_to_dfs: payload[0] != 0 })
@@ -275,6 +297,12 @@ mod tests {
             Message::UploadNonce {
                 nonce: 0,
                 update: ModelUpdate::new(0, 0.0, 0, vec![]),
+            }
+            .encode()
+            .0,
+            Message::UploadPartial {
+                nonce: 0,
+                partial: PartialAggregate::new(0, 0, 0.0, vec![], vec![]),
             }
             .encode()
             .0,
@@ -360,6 +388,21 @@ mod tests {
         assert!(Message::decode(tag, &corrupt).is_err());
         // a short frame cannot even carry the nonce
         assert!(Message::decode(TAG_UPLOAD_NONCE, &payload[..7]).is_err());
+    }
+
+    #[test]
+    fn partial_upload_roundtrips_and_keeps_crc_protection() {
+        let p = PartialAggregate::new(3, 2, 40.0, vec![11, 12, 13], vec![1.5; 20]);
+        let m = Message::UploadPartial { nonce: 0xFEED, partial: p };
+        let (tag, payload) = m.encode();
+        assert_eq!(tag, TAG_UPLOAD_PARTIAL);
+        assert_eq!(Message::decode(tag, &payload).unwrap(), m);
+        // the partial body (past the 8-byte nonce) is still CRC-guarded
+        let mut corrupt = payload.clone();
+        corrupt[8 + 45] ^= 0xFF;
+        assert!(Message::decode(tag, &corrupt).is_err());
+        // a frame too short for the nonce is rejected outright
+        assert!(Message::decode(TAG_UPLOAD_PARTIAL, &payload[..7]).is_err());
     }
 
     #[test]

@@ -3,11 +3,18 @@
 //! threads make the contention measurable rather than hiding it behind a
 //! queue).
 
-use std::net::{TcpListener, TcpStream};
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use super::{read_frame_into, write_frame, write_reply, FrameBuf, Message, ProtoError, Reply};
+
+/// Live per-connection state: a clone of the socket (so `stop` can shut a
+/// blocked read down) plus the handler thread's join handle.  A handler
+/// removes its own entry when its connection ends, so the map holds only
+/// connections that are actually alive.
+type ConnMap = Mutex<HashMap<u64, (TcpStream, Option<std::thread::JoinHandle<()>>)>>;
 
 /// Application hook: map a request message to a reply.
 pub trait Handler: Send + Sync + 'static {
@@ -37,6 +44,9 @@ pub struct ServerHandle {
     addr: String,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// Live connections: socket clone + handler join handle, drained by
+    /// [`ServerHandle::stop`] so no handler thread outlives the handle.
+    live: Arc<ConnMap>,
     pub connections: Arc<AtomicU64>,
     pub requests: Arc<AtomicU64>,
     /// Frame bytes read off all connections (headers + payloads) — the
@@ -51,12 +61,38 @@ impl ServerHandle {
         &self.addr
     }
 
+    /// Connections with a live handler thread right now.
+    pub fn active_connections(&self) -> usize {
+        self.live.lock().unwrap().len()
+    }
+
+    /// Shut the server down COMPLETELY: stop accepting, then shut every
+    /// live connection's stream down (unblocking handlers parked in
+    /// `read`) and join their threads.  Historically only the accept
+    /// thread was joined — per-connection handlers were detached and could
+    /// outlive the drop of this handle, folding into rounds whose owner
+    /// believed the server gone.  On return, no handler thread survives.
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::Release);
         // Poke the listener so accept() returns.
         let _ = TcpStream::connect(&self.addr);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
+        }
+        // Drain the live connections OUTSIDE the lock: a handler that ends
+        // normally takes the same lock to remove itself, so joining while
+        // holding it would deadlock.
+        let drained: Vec<(TcpStream, Option<std::thread::JoinHandle<()>>)> = {
+            let mut map = self.live.lock().unwrap();
+            map.drain().map(|(_, v)| v).collect()
+        };
+        for (stream, _) in &drained {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        for (_, handle) in drained {
+            if let Some(h) = handle {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -75,6 +111,7 @@ impl NetServer {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?.to_string();
         let stop = Arc::new(AtomicBool::new(false));
+        let live: Arc<ConnMap> = Arc::new(Mutex::new(HashMap::new()));
         let connections = Arc::new(AtomicU64::new(0));
         let requests = Arc::new(AtomicU64::new(0));
         let bytes_in = Arc::new(AtomicU64::new(0));
@@ -82,24 +119,49 @@ impl NetServer {
 
         let accept_thread = {
             let stop = stop.clone();
+            let live = live.clone();
             let connections = connections.clone();
             let requests = requests.clone();
             let bytes_in = bytes_in.clone();
             let bytes_out = bytes_out.clone();
             std::thread::spawn(move || {
+                let mut next_id = 0u64;
                 for stream in listener.incoming() {
                     if stop.load(Ordering::Acquire) {
                         break;
                     }
                     let Ok(stream) = stream else { continue };
                     connections.fetch_add(1, Ordering::Relaxed);
+                    let id = next_id;
+                    next_id += 1;
+                    // Register the socket clone BEFORE the handler runs so
+                    // `stop` can always unblock it; the handler removes the
+                    // entry itself when the connection ends normally.
+                    let tracked = match stream.try_clone() {
+                        Ok(peer) => {
+                            live.lock().unwrap().insert(id, (peer, None));
+                            true
+                        }
+                        Err(_) => false,
+                    };
                     let handler = handler.clone();
+                    let live2 = live.clone();
                     let requests = requests.clone();
                     let bytes_in = bytes_in.clone();
                     let bytes_out = bytes_out.clone();
-                    std::thread::spawn(move || {
+                    let join = std::thread::spawn(move || {
                         let _ = Self::handle_conn(stream, handler, requests, bytes_in, bytes_out);
+                        if tracked {
+                            live2.lock().unwrap().remove(&id);
+                        }
                     });
+                    // Attach the join handle unless the handler already
+                    // finished (and removed the entry) — then it detaches.
+                    if tracked {
+                        if let Some(entry) = live.lock().unwrap().get_mut(&id) {
+                            entry.1 = Some(join);
+                        }
+                    }
                 }
             })
         };
@@ -108,6 +170,7 @@ impl NetServer {
             addr: local,
             stop,
             accept_thread: Some(accept_thread),
+            live,
             connections,
             requests,
             bytes_in,
@@ -301,6 +364,49 @@ mod tests {
         }
         assert_eq!(handle.bytes_in.load(Ordering::Relaxed), 3 * in_frame);
         assert_eq!(handle.bytes_out.load(Ordering::Relaxed), 3 * out_frame);
+    }
+
+    #[test]
+    fn stop_drains_handler_threads_mid_round() {
+        use std::io::{Read, Write};
+        use std::time::{Duration, Instant};
+
+        let mut handle = NetServer::serve("127.0.0.1:0", Arc::new(|m: Message| m)).unwrap();
+        let addr = handle.addr().to_string();
+
+        // A client mid-round: the frame header promises 200 payload bytes
+        // but only 50 ever arrive — the handler thread parks inside
+        // read_exact, exactly the state that used to outlive stop().
+        let mut c = std::net::TcpStream::connect(&addr).unwrap();
+        c.write_all(&[0x03, 200, 0, 0, 0]).unwrap();
+        c.write_all(&[0u8; 50]).unwrap();
+
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while handle.active_connections() == 0 && Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(handle.active_connections(), 1, "the handler picked the connection up");
+
+        let t0 = Instant::now();
+        handle.stop();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "stop() must unblock the parked read, not wait it out"
+        );
+        assert_eq!(
+            handle.active_connections(),
+            0,
+            "no handler thread survives stop() while a client is mid-round"
+        );
+
+        // the server side of the socket is truly gone
+        c.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let mut buf = [0u8; 8];
+        assert!(matches!(c.read(&mut buf), Ok(0) | Err(_)), "connection must be dead");
+
+        // idempotent: the Drop-driven second stop is a no-op
+        handle.stop();
+        assert_eq!(handle.active_connections(), 0);
     }
 
     #[test]

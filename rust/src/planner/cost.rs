@@ -68,6 +68,16 @@ impl PricingModel {
     pub fn streaming(&self, latency_s: f64) -> f64 {
         self.single_node(latency_s)
     }
+
+    /// Dollar cost of the 2-tier hierarchical plan: the root node is held
+    /// for the whole round, and each of the `edges` edge aggregators is
+    /// held for the edge phase (`edge_s`).  Edge nodes are priced at the
+    /// node rate — so hierarchy buys its latency win with MORE occupied
+    /// node-seconds than the flat streaming plan, which is exactly the
+    /// trade-off the `Balanced(α)` policy arbitrates.
+    pub fn hierarchical(&self, total_s: f64, edge_s: f64, edges: usize) -> f64 {
+        self.single_node(total_s) + edges as f64 * self.node_usd_per_s * edge_s
+    }
 }
 
 #[cfg(test)]
@@ -95,6 +105,17 @@ mod tests {
         let p = PricingModel::default();
         assert_eq!(p.streaming(10.0), p.single_node(10.0));
         assert!(p.streaming(10.0) < p.distributed(10.0, 1));
+    }
+
+    #[test]
+    fn hierarchical_costs_more_dollars_than_flat_streaming() {
+        let p = PricingModel::default();
+        // even when hierarchy halves the latency, the edge fleet's
+        // occupancy makes it the pricier plan — the latency/$ trade-off
+        assert!(p.hierarchical(5.0, 2.0, 4) > p.streaming(10.0) * 0.5);
+        assert!(p.hierarchical(10.0, 3.0, 4) > p.streaming(10.0));
+        // zero edges degenerates to the flat node occupancy
+        assert_eq!(p.hierarchical(10.0, 3.0, 0), p.streaming(10.0));
     }
 
     #[test]

@@ -53,6 +53,13 @@ pub enum PlanKind {
     /// on arrival, so the plan is feasible past the buffered party
     /// ceiling and ingest overlaps compute.
     Streaming,
+    /// 2-tier tree: `edges` edge aggregators each pre-fold their cohort in
+    /// parallel and forward ONE weighted partial aggregate; the root folds
+    /// `edges` partials instead of ingesting every client.  Divides the
+    /// ingest span (latency) and the root's wire volume (bytes) by the
+    /// edge count, at the price of occupying the edge nodes and one
+    /// per-tier sync barrier — only decomposable algorithms qualify.
+    Hierarchical { edges: usize },
     /// MapReduce over the DFS with this many executor containers.
     Distributed { executors: usize },
 }
@@ -65,6 +72,7 @@ impl PlanKind {
             PlanKind::Parallel => "parallel",
             PlanKind::Xla => "xla",
             PlanKind::Streaming => "streaming",
+            PlanKind::Hierarchical { .. } => "hierarchical",
             PlanKind::Distributed { .. } => "mapreduce",
         }
     }
@@ -121,6 +129,7 @@ impl RoundCalibration {
     pub fn log_line(&self) -> String {
         let plan = match self.kind {
             PlanKind::Distributed { executors } => format!("mapreduce(k={executors})"),
+            PlanKind::Hierarchical { edges } => format!("hierarchical(e={edges})"),
             k => k.engine_label().to_string(),
         };
         format!(
@@ -146,6 +155,11 @@ pub struct PlannerConfig {
     /// [`VirtualCluster::streaming_time`]'s lanes term.  Typically equal
     /// to `node_cores` (the server shards one lane per core).
     pub ingest_lanes: usize,
+    /// Edge aggregators available to a 2-tier plan: with ≥ 2 a
+    /// `PlanKind::Hierarchical` candidate is enumerated (and priced via
+    /// [`VirtualCluster::hierarchical_breakdown`]) whenever the algorithm
+    /// passes the hierarchy gate.  0 or 1 = flat candidates only.
+    pub edges: usize,
     /// Whether the XLA engine is loaded (candidates are only enumerated
     /// for substrates that can actually run).
     pub xla_available: bool,
@@ -169,6 +183,7 @@ impl Default for PlannerConfig {
             cores_per_executor: 3,
             node_cores: 4,
             ingest_lanes: 4,
+            edges: 0,
             xla_available: false,
             feedback_beta: 0.3,
             expected_participation: 1.0,
@@ -187,6 +202,10 @@ pub struct DispatchPlanner {
     /// Observed/predicted latency correction for the streaming-fold plan
     /// (its own family: throughput is ingest-coupled, unlike batch).
     corr_stream: Ewma,
+    /// Observed/predicted latency correction for 2-tier hierarchical plans
+    /// (its own family: dominated by the tier barrier + relay fan-in, a
+    /// shape no flat plan shares).
+    corr_hier: Ewma,
     /// Observed/predicted latency correction for distributed plans.
     corr_dist: Ewma,
     /// Observed delivered/expected turnout (the participation factor p).
@@ -209,6 +228,7 @@ impl DispatchPlanner {
             cfg,
             corr_single: Ewma::new(beta),
             corr_stream: Ewma::new(beta),
+            corr_hier: Ewma::new(beta),
             corr_dist: Ewma::new(beta),
             part: Ewma::new(beta),
             ledger: Vec::new(),
@@ -263,6 +283,7 @@ impl DispatchPlanner {
         match kind {
             PlanKind::Distributed { .. } => self.corr_dist.value_or(1.0),
             PlanKind::Streaming => self.corr_stream.value_or(1.0),
+            PlanKind::Hierarchical { .. } => self.corr_hier.value_or(1.0),
             _ => self.corr_single.value_or(1.0),
         }
     }
@@ -369,6 +390,34 @@ impl DispatchPlanner {
                 kind: PlanKind::Streaming,
                 cost: PlanCost::new(stream, self.pricing.streaming(stream)),
             });
+
+            // The 2-tier tree rides the same hierarchy gate (a partial IS a
+            // `combine` operand, so streaming feasibility == hierarchy
+            // feasibility): `edges` edge aggregators divide the ingest span
+            // and the root's wire volume, paying the tier barrier and the
+            // edge fleet's occupancy.  The policy arbitrates: MinLatency
+            // takes the division once the fleet outgrows the barrier;
+            // MinCost keeps the single-node flat fold.
+            if self.cfg.edges >= 2 && eff >= 2 {
+                let e = self.cfg.edges.min(eff);
+                let lanes = self.cfg.ingest_lanes.max(1).min(lane_cap);
+                let corr = self.corr_hier.value_or(1.0);
+                let (edge_s, root_s) = self.cluster.hierarchical_breakdown(
+                    update_bytes,
+                    eff,
+                    self.cfg.node_cores.max(1),
+                    lanes,
+                    e,
+                );
+                let lat = corr * (edge_s + root_s);
+                candidates.push(CandidatePlan {
+                    kind: PlanKind::Hierarchical { edges: e },
+                    cost: PlanCost::new(
+                        lat,
+                        self.pricing.hierarchical(lat, corr * edge_s, e),
+                    ),
+                });
+            }
         }
 
         // The distributed path is always available (it is the only path
@@ -442,6 +491,7 @@ impl DispatchPlanner {
         let corr = match chosen.kind {
             PlanKind::Distributed { .. } => &mut self.corr_dist,
             PlanKind::Streaming => &mut self.corr_stream,
+            PlanKind::Hierarchical { .. } => &mut self.corr_hier,
             _ => &mut self.corr_single,
         };
         let target = (corr.value_or(1.0) * ratio).clamp(0.05, 20.0);
@@ -451,6 +501,12 @@ impl DispatchPlanner {
             PlanKind::Distributed { executors } => {
                 self.pricing.single_node(upload_s)
                     + self.pricing.distributed(observed_s - upload_s, executors)
+            }
+            // Conservative: the edge/root split of the observed wall-clock
+            // is unknown here, so every tier node is charged for the whole
+            // round — observed $ can only overstate a hierarchical plan.
+            PlanKind::Hierarchical { edges } => {
+                self.pricing.hierarchical(observed_s, observed_s, edges)
             }
             _ => self.pricing.single_node(observed_s),
         };
@@ -485,6 +541,26 @@ mod tests {
                 cores_per_executor: 3,
                 node_cores: 64,
                 ingest_lanes: 64,
+                edges: 0,
+                xla_available: false,
+                feedback_beta: 0.3,
+                expected_participation: 1.0,
+            },
+        )
+    }
+
+    fn planner_with_edges(policy: DispatchPolicy, edges: usize) -> DispatchPlanner {
+        DispatchPlanner::new(
+            WorkloadClassifier::new(170 << 30, 1.1),
+            VirtualCluster::paper(CostModel::nominal()),
+            PricingModel::default(),
+            PlannerConfig {
+                policy,
+                max_executors: 10,
+                cores_per_executor: 3,
+                node_cores: 64,
+                ingest_lanes: 64,
+                edges,
                 xla_available: false,
                 feedback_beta: 0.3,
                 expected_participation: 1.0,
@@ -586,6 +662,72 @@ mod tests {
     }
 
     #[test]
+    fn hierarchical_enumerated_only_with_edges_and_the_gate() {
+        // no edges configured: never enumerated
+        let p = planner(DispatchPolicy::MinLatency);
+        let plan = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        assert!(!plan.candidates.iter().any(|c| matches!(c.kind, PlanKind::Hierarchical { .. })));
+        // 4 edges + decomposable algorithm: enumerated and, at 1 GbE with
+        // a big fleet, the latency winner
+        let p = planner_with_edges(DispatchPolicy::MinLatency, 4);
+        let plan = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        assert_eq!(plan.chosen.kind, PlanKind::Hierarchical { edges: 4 }, "{plan:?}");
+        // holistic algorithms have no partial: the gate keeps them flat
+        use crate::fusion::CoordMedian;
+        let plan = p.plan(UPDATE_46MB, 30_000, &CoordMedian, 0);
+        assert!(!plan.candidates.iter().any(|c| matches!(c.kind, PlanKind::Hierarchical { .. })));
+        // below the tier-barrier crossover the flat plan stays chosen
+        let plan = p.plan(UPDATE_46MB, 8, &FedAvg, 0);
+        assert_ne!(
+            plan.chosen.kind,
+            PlanKind::Hierarchical { edges: 4 },
+            "a tiny fleet must not pay the tier barrier"
+        );
+    }
+
+    #[test]
+    fn min_cost_keeps_the_flat_fold_over_hierarchy() {
+        // hierarchy buys latency with edge-node occupancy: the MinCost
+        // policy must keep the single-node streaming plan
+        let p = planner_with_edges(DispatchPolicy::MinCost, 4);
+        let plan = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        assert_eq!(plan.chosen.kind, PlanKind::Streaming);
+        let hier = plan
+            .candidates
+            .iter()
+            .find(|c| matches!(c.kind, PlanKind::Hierarchical { .. }))
+            .expect("enumerated");
+        let flat = plan.candidates.iter().find(|c| c.kind == PlanKind::Streaming).unwrap();
+        assert!(hier.cost.usd > flat.cost.usd, "{hier:?} vs {flat:?}");
+        assert!(hier.cost.latency_s < flat.cost.latency_s);
+    }
+
+    #[test]
+    fn hierarchical_family_calibrates_independently() {
+        let mut p = planner_with_edges(DispatchPolicy::MinLatency, 4);
+        let before = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        assert!(matches!(before.chosen.kind, PlanKind::Hierarchical { .. }));
+        let truth = before.chosen.cost.latency_s * 1.7;
+        for round in 0..10 {
+            let plan = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+            p.observe(round, &plan.chosen, truth);
+        }
+        assert!(
+            (p.correction_for(PlanKind::Hierarchical { edges: 4 }) - 1.7).abs() < 0.25,
+            "{}",
+            p.correction_for(PlanKind::Hierarchical { edges: 4 })
+        );
+        // the drift was absorbed: late predictions sit within the EWMA band
+        let cal = p.ledger().last().unwrap();
+        assert!((cal.drift() - 1.0).abs() < 0.15, "drift {}", cal.drift());
+        // ... without contaminating the flat families
+        assert_eq!(p.correction_for(PlanKind::Streaming), 1.0);
+        assert_eq!(p.correction(false), 1.0);
+        assert_eq!(p.correction(true), 1.0);
+        assert!(cal.log_line().contains("hierarchical(e=4)"));
+    }
+
+    #[test]
     fn raising_alpha_never_picks_a_slower_plan() {
         // Policy monotonicity over REAL candidate sets (not synthetic):
         // a large round (distributed-only, k sweeps the latency/cost
@@ -673,6 +815,7 @@ mod tests {
             cores_per_executor: 3,
             node_cores: 64,
             ingest_lanes: 64,
+            edges: 0,
             xla_available: false,
             feedback_beta: 0.3,
             expected_participation: 1.0,

@@ -29,9 +29,13 @@ use crate::fusion::FusionAlgorithm;
 use crate::memsim::MemoryBudget;
 use crate::net::server::Handler;
 use crate::net::{protocol, Message, NetServer, ProtoError, Reply, ServerHandle};
-use crate::tensorstore::ModelUpdateView;
+use crate::tensorstore::{ModelUpdateView, PartialAggregateView};
 #[cfg(test)]
 use crate::tensorstore::ModelUpdate;
+
+pub mod relay;
+
+pub use relay::{RelayRound, RelayServer};
 
 pub struct FlServer {
     pub service: Arc<AdaptiveService>,
@@ -96,9 +100,27 @@ impl FlServer {
         RoundState::new(round, class, self.node_budget.clone())
     }
 
-    fn open_round(&self, round: u32) -> Arc<RoundState> {
+    /// The round class this server actually runs at `parties`: the
+    /// three-way classifier, overridden to `Streaming` on hierarchical
+    /// nodes (relay or root) whenever the hierarchy gate admits the
+    /// algorithm — the streaming ingest is the only state that folds
+    /// partial aggregates, and a relay must produce one.  A hierarchical
+    /// node whose algorithm fails the gate (holistic, or O(C) overflow)
+    /// degrades to the flat classes: median/Krum deployments stay flat.
+    fn classify_effective(&self, parties: usize) -> WorkloadClass {
+        if self.service.config().role.is_hierarchical()
+            && self
+                .service
+                .hierarchy_feasible(self.update_bytes, self.algo.as_ref())
+        {
+            return WorkloadClass::Streaming;
+        }
+        self.service.classify_full(self.update_bytes, parties, self.algo.as_ref())
+    }
+
+    pub(crate) fn open_round(&self, round: u32) -> Arc<RoundState> {
         let expected = self.registry.active_count().max(1);
-        let class = self.service.classify_full(self.update_bytes, expected, self.algo.as_ref());
+        let class = self.classify_effective(expected);
         let st = Arc::new(self.make_state(round, class));
         self.rounds.lock().unwrap().insert(round, st.clone());
         self.current_round.store(round, Ordering::Release);
@@ -158,11 +180,20 @@ impl FlServer {
         if declared != round {
             return Message::Late { round };
         }
-        let redirect = self.service.should_redirect(
-            self.update_bytes,
-            self.registry.active_count().max(1),
-            self.algo.as_ref(),
-        );
+        // Hierarchical nodes (when the gate admits the algorithm) never
+        // redirect to the store: the whole point of the 2-tier topology is
+        // that cohort traffic stays on the message-passing channel and
+        // only one partial crosses to the root.
+        let hierarchical = self.service.config().role.is_hierarchical()
+            && self
+                .service
+                .hierarchy_feasible(self.update_bytes, self.algo.as_ref());
+        let redirect = !hierarchical
+            && self.service.should_redirect(
+                self.update_bytes,
+                self.registry.active_count().max(1),
+                self.algo.as_ref(),
+            );
         match self.round_state(round) {
             // Small rounds park the update; streaming rounds fold it on
             // receipt (straight out of the wire buffer on the frame path)
@@ -180,6 +211,35 @@ impl FlServer {
                 // instruct the party to use the store.
                 Message::Ack { redirect_to_dfs: true }
             }
+            None => Message::Error(format!("round {round} not open")),
+        }
+    }
+
+    /// The partial-aggregate sibling of [`FlServer::upload_with`]: route
+    /// the cohort's fold to the current round, answer with the same typed
+    /// replies (a conflicting cohort member gets `Duplicate` naming that
+    /// party; a seal race gets `Late`) — and NEVER a store redirect, which
+    /// is meaningless for an already-folded cohort.
+    fn upload_partial_with<F>(&self, declared: u32, ingest: F) -> Message
+    where
+        F: FnOnce(&RoundState) -> Result<usize, RoundError>,
+    {
+        let round = self.current_round();
+        if declared != round {
+            return Message::Late { round };
+        }
+        match self.round_state(round) {
+            Some(st) => match ingest(&st) {
+                Ok(_) => Message::Ack { redirect_to_dfs: false },
+                Err(RoundError::Duplicate { party, nonce }) => {
+                    Message::Duplicate { party, nonce }
+                }
+                Err(RoundError::WrongPhase { .. }) => Message::Late { round },
+                Err(RoundError::NotStreaming) => Message::Error(format!(
+                    "round {round} is not a hierarchical ingest (partials fold only on streaming rounds)"
+                )),
+                Err(e) => Message::Error(format!("partial ingest: {e}")),
+            },
             None => Message::Error(format!("round {round} not open")),
         }
     }
@@ -207,6 +267,22 @@ impl FlServer {
                 let v = ModelUpdateView::decode(&payload[8..])?;
                 Ok(Reply::Msg(
                     self.upload_with(v.round, |st| st.ingest_view_tagged(&v, nonce)),
+                ))
+            }
+            protocol::TAG_UPLOAD_PARTIAL => {
+                if payload.len() < 8 {
+                    return Err(ProtoError::BadPayload(format!(
+                        "need 8 nonce bytes, got {}",
+                        payload.len()
+                    )));
+                }
+                let nonce = u64::from_le_bytes(payload[..8].try_into().unwrap());
+                // nonce-ahead layout: the partial's 40-byte header starts
+                // at offset 8 in the 4-aligned pool, so its f32 sums decode
+                // as a borrowed view
+                let v = PartialAggregateView::decode(&payload[8..])?;
+                Ok(Reply::Msg(
+                    self.upload_partial_with(v.round, |st| st.ingest_partial_tagged(&v, nonce)),
                 ))
             }
             protocol::TAG_GET_MODEL => {
@@ -240,6 +316,12 @@ impl FlServer {
             Message::UploadNonce { nonce, update } => {
                 let declared = update.round;
                 self.upload_with(declared, |st| st.ingest_tagged(update, nonce))
+            }
+            Message::UploadPartial { nonce, partial } => {
+                let declared = partial.round;
+                self.upload_partial_with(declared, |st| {
+                    st.ingest_partial_tagged(&partial.as_view(), nonce)
+                })
             }
             Message::GetModel { round } => match self.round_state(round).and_then(|s| s.fused()) {
                 Some(w) => Message::Model { round, weights: w.as_ref().clone() },
@@ -319,11 +401,8 @@ impl FlServer {
         // the classification from the live registry as long as nothing has
         // been ingested yet.
         if st.collected() == 0 {
-            let class = self.service.classify_full(
-                self.update_bytes,
-                self.registry.active_count().max(expected).max(1),
-                self.algo.as_ref(),
-            );
+            let class =
+                self.classify_effective(self.registry.active_count().max(expected).max(1));
             if class != st.class {
                 st = self.reopen_round(round, class);
             }
@@ -783,6 +862,66 @@ mod tests {
         server.round_state(0).unwrap().abort().unwrap();
         let r = server.handle(Message::Upload(ModelUpdate::new(6, 1.0, 0, vec![0.5; 100])));
         assert_eq!(r, Message::Late { round: 0 });
+    }
+
+    #[test]
+    fn root_accepts_partials_and_dedups_stray_directs() {
+        use crate::config::NodeRole;
+        use crate::tensorstore::PartialAggregate;
+        let td = TempDir::new();
+        let nn = NameNode::create(td.path(), 2, 1, 1 << 20).unwrap();
+        let mut cfg = ServiceConfig::default();
+        cfg.node.memory_bytes = 1 << 20;
+        cfg.node.cores = 2;
+        cfg.role = NodeRole::Root;
+        let svc = AdaptiveService::new(
+            cfg,
+            DfsClient::new(nn),
+            None,
+            ExecutorConfig { executors: 1, cores_per_executor: 2, ..Default::default() },
+        );
+        let server = FlServer::new(svc, Arc::new(FedAvg), 400);
+        assert!(server.round_state(0).unwrap().is_streaming(), "root forces streaming");
+
+        // an edge cohort of 3 (all-ones sums, weight 1 each)
+        let p = PartialAggregate::new(9, 0, 3.0, vec![1, 2, 3], vec![3.0; 100]);
+        let r = server.handle(Message::UploadPartial { nonce: 0x11, partial: p.clone() });
+        assert!(matches!(r, Message::Ack { redirect_to_dfs: false }), "{r:?}");
+        assert_eq!(server.round_state(0).unwrap().collected(), 3, "members, not frames");
+
+        // a stray direct upload from a cohort member is a typed Duplicate
+        let r = server.handle(Message::Upload(ModelUpdate::new(2, 1.0, 0, vec![1.0; 100])));
+        assert_eq!(r, Message::Duplicate { party: 2, nonce: 0x11 });
+        // and so is the relay's retransmit of the whole partial
+        let r = server.handle(Message::UploadPartial { nonce: 0x12, partial: p.clone() });
+        assert!(matches!(r, Message::Duplicate { party: 1, nonce: 0x11 }), "{r:?}");
+
+        // a partial declaring a stale round is Late, exactly like a client
+        let mut stale = p;
+        stale.round = 9;
+        let r = server.handle(Message::UploadPartial { nonce: 0x13, partial: stale });
+        assert_eq!(r, Message::Late { round: 0 });
+
+        // the quorum round seals over members and publishes
+        let run = server.run_round_quorum(3, 2, Duration::from_millis(200)).unwrap();
+        assert_eq!(run.outcome, RoundOutcome::Complete);
+        assert_eq!(run.folded, 3);
+        let (fused, _) = run.result.unwrap();
+        assert!((fused[0] - 1.0).abs() < 1e-5, "mean of all-ones cohort");
+    }
+
+    #[test]
+    fn flat_round_rejects_partials_with_typed_error() {
+        let (server, _td) = make_server(1 << 30, 400);
+        let p = crate::tensorstore::PartialAggregate::new(1, 0, 2.0, vec![5, 6], vec![2.0; 100]);
+        let r = server.handle(Message::UploadPartial { nonce: 0x1, partial: p });
+        match r {
+            Message::Error(e) => assert!(e.contains("not a hierarchical ingest"), "{e}"),
+            other => panic!("{other:?}"),
+        }
+        // the failed partial claimed nothing: its members upload normally
+        let r = server.handle(Message::Upload(ModelUpdate::new(5, 1.0, 0, vec![1.0; 100])));
+        assert!(matches!(r, Message::Ack { .. }), "{r:?}");
     }
 
     #[test]

@@ -1,0 +1,349 @@
+//! The edge-relay role: an [`FlServer`] that runs its local quorum round
+//! over its cohort, then acts as a *client* of its parent aggregator —
+//! uploading ONE weighted partial aggregate instead of hauling every
+//! cohort update upstream.
+//!
+//! Same binary, config-selected: a node whose [`ServiceConfig`] says
+//! `role = "relay"` (+ `parent_addr`, `edge_id`) wraps its server in a
+//! [`RelayServer`] and drives rounds with
+//! [`RelayServer::run_relay_round`] instead of `FlServer::run_round_quorum`.
+//! The relay's ingest side is the unmodified flat machinery — TCP frames,
+//! sharded streaming fold, per-party dedup, quorum deadline; only the
+//! *seal* differs: instead of finalizing, the round's raw accumulator and
+//! folded-party set are packaged as a [`PartialAggregate`] and forwarded.
+//!
+//! Round cadence: relay and parent progress their round numbers in
+//! lockstep (both open round R, the relay forwards a partial declaring R,
+//! the parent folds it into ITS round R).  A partial arriving after the
+//! parent sealed-and-reopened gets the parent's typed `Late` reply, exactly
+//! like a straggling client upload.
+//!
+//! [`ServiceConfig`]: crate::config::ServiceConfig
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{RoundError, RoundOutcome, ServiceError};
+use crate::net::{Message, NetClient};
+use crate::server::FlServer;
+use crate::tensorstore::PartialAggregate;
+
+/// An [`FlServer`] driven as an edge aggregator in a 2-tier tree.
+pub struct RelayServer {
+    pub server: Arc<FlServer>,
+    parent: String,
+    edge_id: u64,
+}
+
+/// What one relay-driven round produced.
+#[derive(Debug)]
+pub struct RelayRound {
+    /// Outcome of the LOCAL cohort round (Complete = every expected cohort
+    /// member arrived; Quorum = the deadline sealed a partial set; Aborted
+    /// = below quorum, nothing forwarded).
+    pub outcome: RoundOutcome,
+    /// Cohort members folded locally at seal time.
+    pub folded: usize,
+    /// The parent's reply to the forwarded partial (`None` when the local
+    /// round aborted before forwarding, or the parent was unreachable).
+    pub forwarded: Option<Message>,
+    /// Whether the parent's fused model was fetched and published into the
+    /// local round, so cohort clients can `GetModel` from their relay.
+    pub model_published: bool,
+}
+
+impl RelayServer {
+    /// Wrap `server` as a relay forwarding to `parent` as edge `edge_id`.
+    pub fn new(server: Arc<FlServer>, parent: &str, edge_id: u64) -> RelayServer {
+        RelayServer { server, parent: parent.to_string(), edge_id }
+    }
+
+    /// Build from the server's own [`ServiceConfig`] topology knobs
+    /// (`role = relay`, `parent_addr`, `edge_id`); `None` when the config
+    /// does not describe a relay.
+    ///
+    /// [`ServiceConfig`]: crate::config::ServiceConfig
+    pub fn from_config(server: Arc<FlServer>) -> Option<RelayServer> {
+        let cfg = server.service.config();
+        if cfg.role != crate::config::NodeRole::Relay {
+            return None;
+        }
+        let parent = cfg.parent_addr.clone()?;
+        let edge_id = cfg.edge_id;
+        Some(RelayServer { server, parent, edge_id })
+    }
+
+    pub fn edge_id(&self) -> u64 {
+        self.edge_id
+    }
+
+    /// Deterministic retransmission nonce for this edge's round-`r` partial
+    /// (a relay re-sending an unacknowledged partial must reuse it).
+    fn nonce(&self, round: u32) -> u64 {
+        (self.edge_id << 32) ^ (round as u64) ^ 0x9E37_79B9
+    }
+
+    /// Drive one relay round: collect the cohort until all `expected`
+    /// arrived or `deadline` passed, seal WITHOUT finalizing, forward the
+    /// raw partial to the parent, then poll the parent (up to
+    /// `parent_wait`) for the fused model and publish it locally.
+    ///
+    /// Below-quorum rounds abort exactly like the flat server's — the lane
+    /// scratch returns to the budget and nothing crosses the backhaul; a
+    /// whole-edge dropout therefore costs the root one missing partial,
+    /// never a corrupt one.
+    pub fn run_relay_round(
+        &self,
+        expected: usize,
+        quorum: usize,
+        deadline: Duration,
+        parent_wait: Duration,
+    ) -> Result<RelayRound, ServiceError> {
+        let expected = expected.max(1);
+        let quorum = quorum.clamp(1, expected);
+        let round = self.server.current_round();
+        let st = self.server.round_state(round).expect("current round open");
+        if !st.is_streaming() {
+            // the hierarchy gate rejected this algorithm (holistic, or the
+            // O(C) accumulator overflows the node): this deployment is flat
+            return Err(ServiceError::Round(RoundError::NotStreaming));
+        }
+
+        let deadline_t = Instant::now() + deadline;
+        while st.collected() < expected && Instant::now() < deadline_t {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Settle beat: let a fold that slipped in just before the seal
+        // mark its admission slot, so the forwarded party set matches the
+        // accumulator (see `finish_streaming_partial`'s race note).
+        std::thread::sleep(Duration::from_millis(5));
+
+        if st.collected() == 0 {
+            st.abort().map_err(ServiceError::Round)?;
+            self.server.service.observe_participation(0, expected);
+            self.server.open_round(round + 1);
+            return Ok(RelayRound {
+                outcome: RoundOutcome::Aborted,
+                folded: 0,
+                forwarded: None,
+                model_published: false,
+            });
+        }
+        let (acc, folded, parties) =
+            st.finish_streaming_partial().map_err(ServiceError::Round)?;
+        self.server.service.observe_participation(folded, expected);
+        if folded < quorum {
+            st.abort().map_err(ServiceError::Round)?;
+            self.server.open_round(round + 1);
+            return Ok(RelayRound {
+                outcome: RoundOutcome::Aborted,
+                folded,
+                forwarded: None,
+                model_published: false,
+            });
+        }
+        let outcome = if folded >= expected {
+            RoundOutcome::Complete
+        } else {
+            RoundOutcome::Quorum
+        };
+
+        // One partial crosses the backhaul — the whole cohort's fold.
+        let partial =
+            PartialAggregate::new(self.edge_id, round, acc.wtot, parties, acc.sum);
+        let forwarded = NetClient::connect(&self.parent).ok().and_then(|mut c| {
+            c.call(&Message::UploadPartial { nonce: self.nonce(round), partial }).ok()
+        });
+
+        // Acting as a client to the end: fetch the parent's fused model and
+        // publish it locally so the cohort fetches from its own edge.
+        let mut model_published = false;
+        if matches!(forwarded, Some(Message::Ack { .. })) {
+            let wait = Instant::now() + parent_wait;
+            if let Ok(mut c) = NetClient::connect(&self.parent) {
+                while Instant::now() < wait {
+                    match c.call(&Message::GetModel { round }) {
+                        Ok(Message::Model { weights, .. }) => {
+                            st.publish(weights).map_err(ServiceError::Round)?;
+                            model_published = true;
+                            break;
+                        }
+                        Ok(_) => std::thread::sleep(Duration::from_millis(10)),
+                        Err(_) => break,
+                    }
+                }
+            }
+        }
+        if !model_published {
+            // the parent rejected the partial (Duplicate/Late) or never
+            // published in time: the local round cannot serve a model
+            let _ = st.abort();
+        }
+        // Resync on the parent's typed Late: it names the parent's CURRENT
+        // round, so a relay that fell behind (parent sealed-and-reopened
+        // mid-round) jumps straight to it instead of trailing one round
+        // behind forever — every later partial would be Late again.
+        let next = match &forwarded {
+            Some(Message::Late { round: parent_round }) => (round + 1).max(*parent_round),
+            _ => round + 1,
+        };
+        self.server.open_round(next);
+        Ok(RelayRound { outcome, folded, forwarded, model_published })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NodeRole, ServiceConfig};
+    use crate::coordinator::AdaptiveService;
+    use crate::dfs::datanode::tempdir::TempDir;
+    use crate::dfs::{DfsClient, NameNode};
+    use crate::fusion::FedAvg;
+    use crate::mapreduce::ExecutorConfig;
+    use crate::net::NetClient;
+    use crate::tensorstore::ModelUpdate;
+
+    fn make_server(
+        role: NodeRole,
+        parent: Option<String>,
+        edge_id: u64,
+    ) -> (Arc<FlServer>, TempDir) {
+        let td = TempDir::new();
+        let nn = NameNode::create(td.path(), 2, 1, 1 << 20).unwrap();
+        let mut cfg = ServiceConfig::default();
+        cfg.node.memory_bytes = 1 << 20;
+        cfg.node.cores = 2;
+        cfg.monitor_timeout_s = 5.0;
+        cfg.role = role;
+        cfg.parent_addr = parent;
+        cfg.edge_id = edge_id;
+        let svc = AdaptiveService::new(
+            cfg,
+            DfsClient::new(nn),
+            None,
+            ExecutorConfig { executors: 1, cores_per_executor: 2, ..Default::default() },
+        );
+        (FlServer::new(svc, Arc::new(FedAvg), 400), td)
+    }
+
+    #[test]
+    fn hierarchical_roles_force_streaming_rounds() {
+        // a 2-party fleet with 400-byte updates would classify Small flat;
+        // a root must still open a streaming round — the only state that
+        // folds partials
+        let (root, _td) = make_server(NodeRole::Root, None, 0);
+        let st = root.round_state(0).unwrap();
+        assert!(st.is_streaming());
+        assert_eq!(st.class, crate::coordinator::WorkloadClass::Streaming);
+        let (flat, _td2) = make_server(NodeRole::Standalone, None, 0);
+        assert!(!flat.round_state(0).unwrap().is_streaming());
+    }
+
+    #[test]
+    fn relay_round_forwards_one_partial_and_publishes_parent_model() {
+        let (root, _td1) = make_server(NodeRole::Root, None, 0);
+        let root_handle = root.start("127.0.0.1:0").unwrap();
+        let parent_addr = root_handle.addr().to_string();
+
+        let (edge, _td2) = make_server(NodeRole::Relay, Some(parent_addr.clone()), 7);
+        let relay = RelayServer::from_config(edge.clone()).expect("relay config");
+        assert_eq!(relay.edge_id(), 7);
+
+        // 4 cohort clients upload to the RELAY over TCP
+        let edge_handle = edge.start("127.0.0.1:0").unwrap();
+        let edge_addr = edge_handle.addr().to_string();
+        std::thread::scope(|s| {
+            for p in 0..4u64 {
+                let addr = edge_addr.clone();
+                s.spawn(move || {
+                    let mut c = NetClient::connect(&addr).unwrap();
+                    let u = ModelUpdate::new(p, 1.0, 0, vec![1.0; 100]);
+                    let r = c.call(&Message::Upload(u)).unwrap();
+                    assert!(matches!(r, Message::Ack { redirect_to_dfs: false }), "{r:?}");
+                });
+            }
+        });
+
+        // drive relay + root concurrently: the relay forwards, the root
+        // seals its quorum round on the single partial (4 members)
+        let (relay_run, root_run) = std::thread::scope(|s| {
+            let rr = s.spawn(|| {
+                relay.run_relay_round(
+                    4,
+                    2,
+                    Duration::from_secs(3),
+                    Duration::from_secs(5),
+                )
+            });
+            let rt = s.spawn(|| root.run_round_quorum(4, 4, Duration::from_secs(5)));
+            (rr.join().unwrap().unwrap(), rt.join().unwrap().unwrap())
+        });
+        assert_eq!(relay_run.outcome, RoundOutcome::Complete);
+        assert_eq!(relay_run.folded, 4);
+        assert!(matches!(relay_run.forwarded, Some(Message::Ack { .. })), "{:?}", relay_run);
+        assert!(relay_run.model_published);
+        assert_eq!(root_run.outcome, RoundOutcome::Complete);
+        assert_eq!(root_run.folded, 4, "quorum counted cohort MEMBERS");
+
+        // the cohort fetches the fused model from its own relay
+        let mut c = NetClient::connect(&edge_addr).unwrap();
+        match c.call(&Message::GetModel { round: 0 }).unwrap() {
+            Message::Model { round, weights } => {
+                assert_eq!(round, 0);
+                assert_eq!(weights, root_run.result.unwrap().0);
+            }
+            other => panic!("{other:?}"),
+        }
+        // both sides advanced in lockstep
+        assert_eq!(edge.current_round(), 1);
+        assert_eq!(root.current_round(), 1);
+    }
+
+    #[test]
+    fn empty_relay_round_aborts_without_forwarding() {
+        let (edge, _td) = make_server(NodeRole::Relay, Some("127.0.0.1:1".to_string()), 3);
+        let relay = RelayServer::from_config(edge.clone()).unwrap();
+        let run = relay
+            .run_relay_round(4, 2, Duration::from_millis(40), Duration::from_millis(10))
+            .unwrap();
+        assert_eq!(run.outcome, RoundOutcome::Aborted);
+        assert_eq!(run.folded, 0);
+        assert!(run.forwarded.is_none(), "nothing crosses the backhaul on abort");
+        assert!(!run.model_published);
+        assert_eq!(edge.current_round(), 1, "the next round opened");
+    }
+
+    #[test]
+    fn relay_resyncs_to_the_parents_round_on_late() {
+        // The parent sealed-and-reopened past the relay: the Late reply
+        // names the parent's current round and the relay must jump to it,
+        // not trail one round behind forever.
+        let (root, _td1) = make_server(NodeRole::Root, None, 0);
+        root.round_state(0).unwrap().abort().unwrap();
+        root.open_round(3); // parent far ahead
+        let root_handle = root.start("127.0.0.1:0").unwrap();
+
+        let (edge, _td2) =
+            make_server(NodeRole::Relay, Some(root_handle.addr().to_string()), 5);
+        let relay = RelayServer::from_config(edge.clone()).unwrap();
+        edge.round_state(0)
+            .unwrap()
+            .ingest(ModelUpdate::new(1, 1.0, 0, vec![1.0; 64]))
+            .unwrap();
+        let run = relay
+            .run_relay_round(1, 1, Duration::from_millis(50), Duration::from_millis(50))
+            .unwrap();
+        assert!(matches!(run.forwarded, Some(Message::Late { round: 3 })), "{run:?}");
+        assert!(!run.model_published);
+        assert_eq!(edge.current_round(), 3, "the relay resynced to the parent's round");
+    }
+
+    #[test]
+    fn from_config_rejects_non_relay_roles() {
+        let (flat, _td) = make_server(NodeRole::Standalone, Some("x:1".into()), 0);
+        assert!(RelayServer::from_config(flat).is_none());
+        let (no_parent, _td2) = make_server(NodeRole::Relay, None, 0);
+        assert!(RelayServer::from_config(no_parent).is_none());
+    }
+}

@@ -1,0 +1,513 @@
+//! Multi-tier scenarios: seeded 2-tier fleets — per-edge cohort schedules,
+//! whole-edge dropout, partial-vs-direct races — replayed against REAL
+//! relay servers over real TCP sockets.
+//!
+//! Topology under test: `edges` × [`RelayServer`] (each an [`FlServer`] in
+//! the `relay` role with its own cohort of scheduled clients) forwarding
+//! weighted partial aggregates to one root `FlServer`.  Nothing is mocked:
+//! the partial wire frames, the cohort-atomic admission ledger, the
+//! member-counting quorum and the relays' model fan-out all execute.
+//!
+//! Determinism contract (what makes [`TierReport::digest`] bit-stable):
+//!
+//! * every client's behaviour is a pure function of the seed (forked
+//!   [`Rng`] streams, exactly like the flat harness);
+//! * *racing* clients send their stray direct upload to the root at ~t=0,
+//!   while relays forward only at their local deadline — the direct frame
+//!   always wins the race, so the conflicted partial's typed `Duplicate`
+//!   is a scheduled outcome, not a timing accident.  (This requires
+//!   `latency_ms.1` to sit well below `relay_deadline`; the default
+//!   config keeps a ~4× margin.)
+//!
+//! A partial carrying an already-claimed party is rejected WHOLE (the
+//! cohort's sums are pre-folded; the conflicting member cannot be
+//! subtracted) — the conservative no-double-fold answer the round layer
+//! pins.  The race scenario therefore asserts *at-most-once* per party,
+//! and the edge-dropout scenario (no races) asserts *exactly-once* for
+//! every survivor.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::client::SyntheticParty;
+use crate::config::{NodeRole, ServiceConfig};
+use crate::coordinator::{AdaptiveService, RoundOutcome};
+use crate::dfs::{DfsClient, NameNode};
+use crate::fusion::FedAvg;
+use crate::mapreduce::ExecutorConfig;
+use crate::net::{Message, NetClient};
+use crate::server::{FlServer, RelayServer};
+use crate::sim::{classify, mix, ReplyKind};
+use crate::util::rng::Rng;
+
+/// One 2-tier scenario: the tree shape plus its fault-injection knobs.
+#[derive(Clone, Debug)]
+pub struct TierConfig {
+    pub seed: u64,
+    /// Edge aggregators (each runs a real `RelayServer`).
+    pub edges: usize,
+    /// Cohort size per edge; total fleet = `edges × clients_per_edge`.
+    pub clients_per_edge: usize,
+    /// Parameters per update (bytes = 4×).
+    pub update_len: usize,
+    /// Probability a client drops out (never uploads anywhere).
+    pub dropout: f64,
+    /// Probability an ENTIRE edge drops: the relay acks its cohort but
+    /// crashes before forwarding — the root sees one missing partial.
+    pub edge_dropout: f64,
+    /// Probability a surviving client ALSO sends its raw update straight
+    /// to the root at ~t=0 (a stale-config straggler) — the
+    /// partial-vs-direct race.
+    pub direct_race: f64,
+    /// Uniform per-client upload latency, drawn from `[min, max)` ms.
+    /// Keep `max` well under `relay_deadline` (see module docs).
+    pub latency_ms: (u64, u64),
+    /// Root quorum as a fraction of the TOTAL fleet (member-counted).
+    pub quorum_frac: f64,
+    /// Each relay's local collection deadline (it forwards at this beat).
+    pub relay_deadline: Duration,
+    /// The root's quorum deadline (must exceed `relay_deadline` plus the
+    /// forward hop).
+    pub root_deadline: Duration,
+    /// How long a relay polls the root for the fused model.
+    pub parent_wait: Duration,
+    /// Node memory of every aggregator (root and relays).
+    pub node_memory: u64,
+    /// Node cores = streaming ingest lanes.
+    pub cores: usize,
+}
+
+impl Default for TierConfig {
+    fn default() -> TierConfig {
+        TierConfig {
+            seed: 42,
+            edges: 3,
+            clients_per_edge: 6,
+            update_len: 256, // 1 KB updates
+            dropout: 0.15,
+            edge_dropout: 0.0,
+            direct_race: 0.0,
+            latency_ms: (10, 140),
+            quorum_frac: 0.5,
+            relay_deadline: Duration::from_millis(600),
+            root_deadline: Duration::from_millis(1800),
+            parent_wait: Duration::from_secs(5),
+            node_memory: 64 << 10,
+            cores: 4,
+        }
+    }
+}
+
+/// What one scheduled client will do — a pure function of the seed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TierClientSchedule {
+    pub party: u64,
+    pub nonce: u64,
+    pub drops_out: bool,
+    pub delay_ms: u64,
+    /// Also uploads directly to the root at ~t=0 (same party id, same
+    /// nonce — the stray frame the cohort-atomic ledger must fence).
+    pub races_direct: bool,
+}
+
+/// One edge's schedule: its cohort plus whether the whole edge drops.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EdgeSchedule {
+    pub edge: u64,
+    /// The relay acks its cohort but never forwards (crash after ingest).
+    pub drops_out: bool,
+    pub clients: Vec<TierClientSchedule>,
+}
+
+/// Expand a tier scenario into per-edge, per-client schedules.  Each edge
+/// and each client draws from its own forked [`Rng`] stream.
+pub fn tier_schedules(cfg: &TierConfig) -> Vec<EdgeSchedule> {
+    let mut root = Rng::new(cfg.seed);
+    (0..cfg.edges as u64)
+        .map(|edge| {
+            let mut er = root.fork(edge.wrapping_add(0x5EED));
+            let drops_out = er.next_f64() < cfg.edge_dropout;
+            let clients = (0..cfg.clients_per_edge as u64)
+                .map(|i| {
+                    let party = edge * cfg.clients_per_edge as u64 + i;
+                    let mut r = er.fork(i.wrapping_add(1));
+                    let nonce = r.next_u64();
+                    let drops_out = r.next_f64() < cfg.dropout;
+                    let span = cfg.latency_ms.1.saturating_sub(cfg.latency_ms.0).max(1);
+                    let delay_ms = cfg.latency_ms.0 + r.gen_range(span);
+                    let races_direct = !drops_out && r.next_f64() < cfg.direct_race;
+                    TierClientSchedule { party, nonce, drops_out, delay_ms, races_direct }
+                })
+                .collect();
+            EdgeSchedule { edge, drops_out, clients }
+        })
+        .collect()
+}
+
+/// Digest of the injected faults alone (pre-run).
+pub fn tier_schedule_digest(scheds: &[EdgeSchedule]) -> u64 {
+    let mut h = 0x71E2_5C7Eu64; // "tier schedule"
+    for e in scheds {
+        h = mix(h, e.edge);
+        h = mix(h, u64::from(e.drops_out));
+        for c in &e.clients {
+            h = mix(h, c.party);
+            h = mix(h, c.nonce);
+            h = mix(h, u64::from(c.drops_out));
+            h = mix(h, c.delay_ms);
+            h = mix(h, u64::from(c.races_direct));
+        }
+    }
+    h
+}
+
+/// One client's observable behaviour.
+#[derive(Clone, Debug)]
+pub struct TierClientRecord {
+    pub party: u64,
+    pub dropped: bool,
+    /// Reply to the upload sent to this client's RELAY (`None` if dropped).
+    pub relay_reply: Option<ReplyKind>,
+    /// Reply to the stray direct upload to the ROOT (`None` unless racing).
+    pub direct_reply: Option<ReplyKind>,
+}
+
+/// One edge's observable behaviour.
+#[derive(Clone, Debug)]
+pub struct EdgeRecord {
+    pub edge: u64,
+    pub dropped: bool,
+    /// Members the relay folded locally at its seal.
+    pub relay_folded: usize,
+    /// The root's reply to the forwarded partial (`None` when the edge
+    /// dropped, aborted empty, or could not reach the root).
+    pub partial_reply: Option<ReplyKind>,
+    /// Whether the relay fetched + republished the root's fused model.
+    pub model_published: bool,
+    pub clients: Vec<TierClientRecord>,
+}
+
+/// Everything a tier scenario produced, reduced to its deterministic core.
+#[derive(Clone, Debug)]
+pub struct TierReport {
+    pub outcome: RoundOutcome,
+    /// Members folded at the ROOT's seal (cohort members + stray directs).
+    pub folded: usize,
+    pub quorum: usize,
+    /// Total fleet size (`edges × clients_per_edge`).
+    pub expected: usize,
+    pub edges: Vec<EdgeRecord>,
+    /// Parameter count of the root's published model (0 on abort).
+    pub fused_len: usize,
+    /// Wall seconds — informational, never part of the digest.
+    pub round_s: f64,
+}
+
+impl TierReport {
+    /// Bit-stable outcome digest: root outcome/counts plus every edge's
+    /// and every client's typed replies, in (edge, party) order.
+    pub fn digest(&self) -> u64 {
+        let mut h = 0x2_71E2u64; // "tier"
+        h = mix(
+            h,
+            match self.outcome {
+                RoundOutcome::Complete => 1,
+                RoundOutcome::Quorum => 2,
+                RoundOutcome::Aborted => 3,
+            },
+        );
+        h = mix(h, self.folded as u64);
+        h = mix(h, self.quorum as u64);
+        h = mix(h, self.expected as u64);
+        h = mix(h, self.fused_len as u64);
+        let code = |r: &Option<ReplyKind>| r.map(|k| k.code()).unwrap_or(0);
+        for e in &self.edges {
+            h = mix(h, e.edge);
+            h = mix(h, u64::from(e.dropped));
+            h = mix(h, e.relay_folded as u64);
+            h = mix(h, code(&e.partial_reply));
+            h = mix(h, u64::from(e.model_published));
+            for c in &e.clients {
+                h = mix(h, c.party);
+                h = mix(h, u64::from(c.dropped));
+                h = mix(h, code(&c.relay_reply));
+                h = mix(h, code(&c.direct_reply));
+            }
+        }
+        h
+    }
+
+}
+
+/// Unique scratch roots across runs in one process.
+static TIER_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn make_node(
+    role: NodeRole,
+    parent: Option<String>,
+    edge_id: u64,
+    cfg: &TierConfig,
+    dir: &std::path::Path,
+) -> Arc<FlServer> {
+    let nn = NameNode::create(dir, 2, 1, 1 << 20).expect("tier store");
+    let mut scfg = ServiceConfig::default();
+    scfg.node.memory_bytes = cfg.node_memory;
+    scfg.node.cores = cfg.cores.max(1);
+    scfg.monitor_timeout_s = cfg.root_deadline.as_secs_f64();
+    scfg.role = role;
+    scfg.parent_addr = parent;
+    scfg.edge_id = edge_id;
+    let svc = AdaptiveService::new(
+        scfg,
+        DfsClient::new(nn),
+        None,
+        ExecutorConfig { executors: 1, cores_per_executor: 2, ..Default::default() },
+    );
+    FlServer::new(svc, Arc::new(FedAvg), (cfg.update_len * 4) as u64)
+}
+
+fn drive_tier_client(
+    relay_addr: &str,
+    root_addr: &str,
+    s: &TierClientSchedule,
+    cfg: &TierConfig,
+) -> TierClientRecord {
+    if s.drops_out {
+        return TierClientRecord {
+            party: s.party,
+            dropped: true,
+            relay_reply: None,
+            direct_reply: None,
+        };
+    }
+    let mut party = SyntheticParty::new(s.party, cfg.seed);
+    let u = party.make_update(0, cfg.update_len);
+    // the stray direct frame goes out FIRST (t≈0): it deterministically
+    // beats the relay's deadline-gated forward to the root's ledger
+    let direct_reply = if s.races_direct {
+        Some(match NetClient::connect(root_addr) {
+            Ok(mut c) => c
+                .call(&Message::UploadNonce { nonce: s.nonce, update: u.clone() })
+                .map(|m| classify(&m))
+                .unwrap_or(ReplyKind::Rejected),
+            Err(_) => ReplyKind::Rejected,
+        })
+    } else {
+        None
+    };
+    std::thread::sleep(Duration::from_millis(s.delay_ms));
+    let relay_reply = Some(match NetClient::connect(relay_addr) {
+        Ok(mut c) => c
+            .call(&Message::UploadNonce { nonce: s.nonce, update: u })
+            .map(|m| classify(&m))
+            .unwrap_or(ReplyKind::Rejected),
+        Err(_) => ReplyKind::Rejected,
+    });
+    TierClientRecord { party: s.party, dropped: false, relay_reply, direct_reply }
+}
+
+/// Run one seeded 2-tier scenario end to end: real root, real relays, real
+/// TCP, one member-counted quorum round at the root.
+pub fn run_tier_scenario(cfg: &TierConfig) -> TierReport {
+    let scheds = tier_schedules(cfg);
+    let seq = TIER_SEQ.fetch_add(1, Ordering::Relaxed);
+    let scratch = std::env::temp_dir().join(format!(
+        "elastiagg-tier-{}-{}-{}",
+        std::process::id(),
+        cfg.seed,
+        seq
+    ));
+    std::fs::create_dir_all(&scratch).expect("tier scratch dir");
+
+    let root_server = make_node(NodeRole::Root, None, 0, cfg, &scratch.join("root"));
+    let root_handle = root_server.start("127.0.0.1:0").expect("root server");
+    let root_addr = root_handle.addr().to_string();
+
+    struct Edge {
+        sched: EdgeSchedule,
+        relay: RelayServer,
+        _handle: crate::net::ServerHandle,
+        addr: String,
+    }
+    let edges: Vec<Edge> = scheds
+        .into_iter()
+        .map(|sched| {
+            let server = make_node(
+                NodeRole::Relay,
+                Some(root_addr.clone()),
+                sched.edge,
+                cfg,
+                &scratch.join(format!("edge{}", sched.edge)),
+            );
+            let handle = server.start("127.0.0.1:0").expect("relay server");
+            let addr = handle.addr().to_string();
+            let relay = RelayServer::from_config(server).expect("relay config");
+            Edge { sched, relay, _handle: handle, addr }
+        })
+        .collect();
+
+    let expected = (cfg.edges * cfg.clients_per_edge).max(1);
+    let quorum = (((expected as f64) * cfg.quorum_frac).ceil() as usize).max(1);
+
+    let t0 = Instant::now();
+    let (root_run, edge_records) = std::thread::scope(|scope| {
+        let root = scope
+            .spawn(|| root_server.run_round_quorum(expected, quorum, cfg.root_deadline));
+        let edge_threads: Vec<_> = edges
+            .iter()
+            .map(|edge| {
+                let root_addr = root_addr.clone();
+                scope.spawn(move || {
+                    // cohort clients upload to THIS relay (racers also to
+                    // the root), each on its own thread
+                    let (relay_run, clients) = std::thread::scope(|es| {
+                        let client_threads: Vec<_> = edge
+                            .sched
+                            .clients
+                            .iter()
+                            .map(|c| {
+                                let relay_addr = edge.addr.clone();
+                                let root_addr = root_addr.clone();
+                                es.spawn(move || {
+                                    drive_tier_client(&relay_addr, &root_addr, c, cfg)
+                                })
+                            })
+                            .collect();
+                        let relay_run = if edge.sched.drops_out {
+                            None // the relay crashed after acking: no forward
+                        } else {
+                            Some(
+                                edge.relay
+                                    .run_relay_round(
+                                        cfg.clients_per_edge,
+                                        1,
+                                        cfg.relay_deadline,
+                                        cfg.parent_wait,
+                                    )
+                                    .expect("relay round"),
+                            )
+                        };
+                        let clients: Vec<TierClientRecord> = client_threads
+                            .into_iter()
+                            .map(|h| h.join().expect("client thread"))
+                            .collect();
+                        (relay_run, clients)
+                    });
+                    EdgeRecord {
+                        edge: edge.sched.edge,
+                        dropped: edge.sched.drops_out,
+                        relay_folded: relay_run.as_ref().map(|r| r.folded).unwrap_or(0),
+                        partial_reply: relay_run
+                            .as_ref()
+                            .and_then(|r| r.forwarded.as_ref())
+                            .map(classify),
+                        model_published: relay_run
+                            .as_ref()
+                            .map(|r| r.model_published)
+                            .unwrap_or(false),
+                        clients,
+                    }
+                })
+            })
+            .collect();
+        let edge_records: Vec<EdgeRecord> =
+            edge_threads.into_iter().map(|h| h.join().expect("edge thread")).collect();
+        (root.join().expect("root thread"), edge_records)
+    });
+    let round_s = t0.elapsed().as_secs_f64();
+    let run = root_run.expect("root quorum round");
+    let fused_len = run.result.as_ref().map(|(w, _)| w.len()).unwrap_or(0);
+    let report = TierReport {
+        outcome: run.outcome,
+        folded: run.folded,
+        quorum,
+        expected,
+        edges: edge_records,
+        fused_len,
+        round_s,
+    };
+    drop(root_handle);
+    let _ = std::fs::remove_dir_all(&scratch);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_schedules_are_pure_functions_of_the_seed() {
+        let cfg = TierConfig::default();
+        assert_eq!(tier_schedules(&cfg), tier_schedules(&cfg));
+        assert_eq!(
+            tier_schedule_digest(&tier_schedules(&cfg)),
+            tier_schedule_digest(&tier_schedules(&cfg))
+        );
+        let other = TierConfig { seed: 43, ..cfg.clone() };
+        assert_ne!(
+            tier_schedule_digest(&tier_schedules(&cfg)),
+            tier_schedule_digest(&tier_schedules(&other))
+        );
+        // party ids are globally unique across edges
+        let s = tier_schedules(&cfg);
+        let mut ids: Vec<u64> =
+            s.iter().flat_map(|e| e.clients.iter().map(|c| c.party)).collect();
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    }
+
+    #[test]
+    fn tier_knobs_saturate() {
+        let all = TierConfig { edge_dropout: 1.0, ..TierConfig::default() };
+        assert!(tier_schedules(&all).iter().all(|e| e.drops_out));
+        let none = TierConfig { edge_dropout: 0.0, ..TierConfig::default() };
+        assert!(tier_schedules(&none).iter().all(|e| !e.drops_out));
+        let race = TierConfig { direct_race: 1.0, dropout: 0.0, ..TierConfig::default() };
+        assert!(tier_schedules(&race)
+            .iter()
+            .all(|e| e.clients.iter().all(|c| c.races_direct)));
+        // racing requires surviving: dropouts never race
+        let mixed = TierConfig { direct_race: 1.0, dropout: 1.0, ..TierConfig::default() };
+        assert!(tier_schedules(&mixed)
+            .iter()
+            .all(|e| e.clients.iter().all(|c| !c.races_direct)));
+    }
+
+    #[test]
+    fn tier_digest_distinguishes_fields() {
+        let base = TierReport {
+            outcome: RoundOutcome::Quorum,
+            folded: 12,
+            quorum: 9,
+            expected: 18,
+            edges: vec![EdgeRecord {
+                edge: 0,
+                dropped: false,
+                relay_folded: 6,
+                partial_reply: Some(ReplyKind::Accepted),
+                model_published: true,
+                clients: vec![TierClientRecord {
+                    party: 0,
+                    dropped: false,
+                    relay_reply: Some(ReplyKind::Accepted),
+                    direct_reply: None,
+                }],
+            }],
+            fused_len: 256,
+            round_s: 1.0,
+        };
+        let d = base.digest();
+        let mut flip = base.clone();
+        flip.edges[0].partial_reply = Some(ReplyKind::Duplicate);
+        assert_ne!(flip.digest(), d);
+        let mut flip = base.clone();
+        flip.edges[0].clients[0].direct_reply = Some(ReplyKind::Accepted);
+        assert_ne!(flip.digest(), d);
+        let mut flip = base.clone();
+        flip.round_s = 99.0;
+        assert_eq!(flip.digest(), d, "wall time is informational only");
+    }
+}

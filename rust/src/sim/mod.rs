@@ -28,6 +28,10 @@
 //! each surviving client exactly once with duplicates rejected, and
 //! reproduces its digest bit-for-bit on a second run.
 
+pub mod hierarchy;
+
+pub use hierarchy::{run_tier_scenario, tier_schedules, TierConfig, TierReport};
+
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -124,7 +128,7 @@ pub fn schedules(cfg: &ScenarioConfig) -> Vec<ClientSchedule> {
 /// Order-sensitive 64-bit fold (one SplitMix64 scramble per word) — the
 /// digest primitive.  Not cryptographic; collision-resistant enough to
 /// flag any drift in a scenario's deterministic fields.
-fn mix(acc: u64, v: u64) -> u64 {
+pub(crate) fn mix(acc: u64, v: u64) -> u64 {
     let mut z = acc.rotate_left(7) ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
@@ -160,7 +164,7 @@ pub enum ReplyKind {
 }
 
 impl ReplyKind {
-    fn code(self) -> u64 {
+    pub(crate) fn code(self) -> u64 {
         match self {
             ReplyKind::Accepted => 1,
             ReplyKind::Duplicate => 2,
@@ -170,7 +174,7 @@ impl ReplyKind {
     }
 }
 
-fn classify(m: &Message) -> ReplyKind {
+pub(crate) fn classify(m: &Message) -> ReplyKind {
     match m {
         Message::Ack { .. } => ReplyKind::Accepted,
         Message::Duplicate { .. } => ReplyKind::Duplicate,

@@ -16,8 +16,10 @@
 //! crc32  u32  over everything above
 //! ```
 
+pub mod partial;
 pub mod wire;
 
+pub use partial::{PartialAggregate, PartialAggregateView};
 pub use wire::{ModelUpdate, ModelUpdateView, WireError};
 
 /// Slice a flat parameter vector into fixed-length chunks, zero-padding the

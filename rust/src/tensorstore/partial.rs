@@ -1,0 +1,342 @@
+//! The weighted partial aggregate — an already-folded cohort as a
+//! first-class wire object.
+//!
+//! A 2-tier topology pre-folds each edge cohort at its edge aggregator and
+//! forwards ONE object per edge to the root.  That object is the raw
+//! accumulator state of the shared decomposable algebra, *not* a finalized
+//! model:
+//!
+//! ```text
+//! magic    u32  = "EA02" (0x4541_3032)
+//! edge     u64  (the forwarding aggregator's id)
+//! round    u32
+//! wtot     f64  (summed example weight of the cohort)
+//! n_party  u64  (cohort size = contributing-party count)
+//! n_elems  u64  (parameter count of `sum`)
+//! sum      [f32; n_elems]   little-endian, offset 40 (4-aligned)
+//! parties  [u64; n_party]   the contributing-party set
+//! crc32    u32  over everything above
+//! ```
+//!
+//! Carrying the *un-finalized* weighted sums is what keeps hierarchy exact:
+//! the root folds a partial with the algebra's own `combine` (element-wise
+//! add + `wtot`/`n` accumulation), so a single-relay 2-tier round is
+//! bit-identical to the flat fold over the same updates (pinned in
+//! `rust/tests/engine_parity.rs`).  Forwarding finalized weights instead
+//! would divide by `wtot + EPS` at the edge and re-multiply at the root —
+//! never exact, and wrong by EPS even in infinite precision.
+//!
+//! The validation chain is the same CRC-first order as
+//! [`ModelUpdateView::decode`](super::ModelUpdateView::decode), and the
+//! 40-byte header keeps `sum` 4-aligned whenever the frame buffer is, so a
+//! partial read into the network layer's pooled buffer decodes with the
+//! weights *borrowed* in place.  The party list sits after the f32 block
+//! (its 8-byte alignment is not guaranteed there, so it is decoded owned —
+//! it is O(cohort) ids, not O(C) floats).
+
+use super::{bytes_as_f32s, bytes_to_f32s, crc32, f32s_as_bytes, WireError};
+use std::borrow::Cow;
+
+const PMAGIC: u32 = 0x4541_3032; // "EA02"
+
+/// Header bytes ahead of the `sum` block (a multiple of 4, so `sum` stays
+/// 4-aligned inside any 4-aligned frame buffer).
+const PHEAD: usize = 4 + 8 + 4 + 8 + 8 + 8;
+
+/// Hard cap on the declared parameter count (matches the update wire cap).
+const MAX_ELEMS: u64 = 16 << 30;
+/// Hard cap on the declared cohort size — a corrupt header must not drive
+/// a multi-GiB party-list allocation.
+const MAX_PARTIES: u64 = 1 << 30;
+
+/// An already-folded cohort: the raw accumulator state of a decomposable
+/// fusion plus the set of parties it absorbed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartialAggregate {
+    /// Forwarding edge aggregator's id.
+    pub edge: u64,
+    pub round: u32,
+    /// Summed example weight (the algebra's `wtot`).
+    pub wtot: f64,
+    /// Contributing-party set; its length is the cohort size the root's
+    /// quorum counts.
+    pub parties: Vec<u64>,
+    /// Per-parameter weighted sums (NOT finalized weights — see module docs).
+    pub sum: Vec<f32>,
+}
+
+impl PartialAggregate {
+    pub fn new(
+        edge: u64,
+        round: u32,
+        wtot: f64,
+        parties: Vec<u64>,
+        sum: Vec<f32>,
+    ) -> PartialAggregate {
+        PartialAggregate { edge, round, wtot, parties, sum }
+    }
+
+    /// Cohort size (the member count the root's quorum counts).
+    pub fn cohort(&self) -> usize {
+        self.parties.len()
+    }
+
+    /// Serialized size in bytes (header + sum + parties + crc).
+    pub fn wire_size(&self) -> usize {
+        PHEAD + self.sum.len() * 4 + self.parties.len() * 8 + 4
+    }
+
+    /// In-memory footprint the memory accountant charges for this partial.
+    pub fn mem_bytes(&self) -> u64 {
+        (self.sum.len() * 4 + self.parties.len() * 8) as u64
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_size());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append the wire encoding to `out` (reusing its capacity).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let start = out.len();
+        out.reserve(self.wire_size());
+        out.extend_from_slice(&PMAGIC.to_le_bytes());
+        out.extend_from_slice(&self.edge.to_le_bytes());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.wtot.to_le_bytes());
+        out.extend_from_slice(&(self.parties.len() as u64).to_le_bytes());
+        out.extend_from_slice(&(self.sum.len() as u64).to_le_bytes());
+        out.extend_from_slice(f32s_as_bytes(&self.sum));
+        for p in &self.parties {
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+        let crc = crc32(&out[start..]);
+        out.extend_from_slice(&crc.to_le_bytes());
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<PartialAggregate, WireError> {
+        Ok(PartialAggregateView::decode(buf)?.into_owned())
+    }
+
+    /// Borrow this partial as a view (no sum copy) — for driving the
+    /// zero-copy fold entry points with an already-owned partial.
+    pub fn as_view(&self) -> PartialAggregateView<'_> {
+        PartialAggregateView {
+            edge: self.edge,
+            round: self.round,
+            wtot: self.wtot,
+            parties: Cow::Borrowed(&self.parties),
+            sum: Cow::Borrowed(&self.sum),
+        }
+    }
+}
+
+/// A decoded partial whose weighted sums may still live in the caller's
+/// buffer (borrowed when the frame landed in a 4-aligned pool).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartialAggregateView<'a> {
+    pub edge: u64,
+    pub round: u32,
+    pub wtot: f64,
+    pub parties: Cow<'a, [u64]>,
+    pub sum: Cow<'a, [f32]>,
+}
+
+impl<'a> PartialAggregateView<'a> {
+    /// Decode a wire buffer, borrowing the sums when possible.  The
+    /// validation order is identical to the update path: CRC first, then
+    /// magic, then the declared lengths.
+    pub fn decode(buf: &'a [u8]) -> Result<PartialAggregateView<'a>, WireError> {
+        if buf.len() < PHEAD + 4 {
+            return Err(WireError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "short partial buffer",
+            )));
+        }
+        let body = &buf[..buf.len() - 4];
+        let want = u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
+        let got = crc32(body);
+        if want != got {
+            return Err(WireError::BadCrc { want, got });
+        }
+        let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+        if magic != PMAGIC {
+            return Err(WireError::BadMagic(magic));
+        }
+        let edge = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+        let round = u32::from_le_bytes(buf[12..16].try_into().unwrap());
+        let wtot = f64::from_le_bytes(buf[16..24].try_into().unwrap());
+        let n_party = u64::from_le_bytes(buf[24..32].try_into().unwrap());
+        let n_elems = u64::from_le_bytes(buf[32..40].try_into().unwrap());
+        if n_elems > MAX_ELEMS {
+            return Err(WireError::TooLarge(n_elems));
+        }
+        if n_party > MAX_PARTIES {
+            return Err(WireError::TooLarge(n_party));
+        }
+        let raw = &body[PHEAD..];
+        let need = n_elems as usize * 4 + n_party as usize * 8;
+        if raw.len() != need {
+            return Err(WireError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("declared {n_elems} elems + {n_party} parties, found {} bytes", raw.len()),
+            )));
+        }
+        let (sum_raw, party_raw) = raw.split_at(n_elems as usize * 4);
+        let sum = match bytes_as_f32s(sum_raw) {
+            Some(s) => Cow::Borrowed(s),
+            None => Cow::Owned(bytes_to_f32s(sum_raw)),
+        };
+        // The party block sits after an arbitrary f32 count, so its 8-byte
+        // alignment is accidental — decode owned (O(cohort), not O(C)).
+        let parties: Vec<u64> = party_raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(PartialAggregateView { edge, round, wtot, parties: Cow::Owned(parties), sum })
+    }
+
+    /// Cohort size (contributing-party count).
+    pub fn cohort(&self) -> usize {
+        self.parties.len()
+    }
+
+    /// In-memory footprint the memory accountant charges for this partial.
+    pub fn mem_bytes(&self) -> u64 {
+        (self.sum.len() * 4 + self.parties.len() * 8) as u64
+    }
+
+    /// Materialise an owned [`PartialAggregate`] (copies only if borrowed).
+    pub fn into_owned(self) -> PartialAggregate {
+        PartialAggregate {
+            edge: self.edge,
+            round: self.round,
+            wtot: self.wtot,
+            parties: self.parties.into_owned(),
+            sum: self.sum.into_owned(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(elems: usize, cohort: usize) -> PartialAggregate {
+        PartialAggregate::new(
+            9,
+            4,
+            123.5,
+            (0..cohort as u64).map(|p| p * 7 + 1).collect(),
+            (0..elems).map(|i| i as f32 * 0.25 - 1.0).collect(),
+        )
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = sample(300, 12);
+        let buf = p.encode();
+        assert_eq!(buf.len(), p.wire_size());
+        assert_eq!(PartialAggregate::decode(&buf).unwrap(), p);
+    }
+
+    #[test]
+    fn cohort_set_roundtrips_exactly() {
+        let p = sample(16, 5);
+        let back = PartialAggregate::decode(&p.encode()).unwrap();
+        assert_eq!(back.parties, vec![1, 8, 15, 22, 29]);
+        assert_eq!(back.cohort(), 5);
+        assert_eq!(back.wtot, 123.5);
+    }
+
+    #[test]
+    fn corrupt_payload_detected_crc_first() {
+        let p = sample(64, 3);
+        // a flip ANYWHERE in the body must be caught by the CRC
+        for pos in [0usize, 5, 13, 20, 41, 60, 200] {
+            let mut buf = p.encode();
+            buf[pos] ^= 0xFF;
+            assert!(
+                matches!(PartialAggregate::decode(&buf), Err(WireError::BadCrc { .. })),
+                "flip at {pos}"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_magic_detected_after_crc_fixup() {
+        let p = sample(8, 2);
+        let mut buf = p.encode();
+        buf[0] ^= 0x01;
+        let body_len = buf.len() - 4;
+        let crc = crc32(&buf[..body_len]);
+        buf[body_len..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(PartialAggregate::decode(&buf), Err(WireError::BadMagic(_))));
+    }
+
+    #[test]
+    fn absurd_lengths_rejected() {
+        let p = sample(4, 2);
+        // oversize the element count, re-seal the crc: the length check
+        // must still fire (it guards the allocation, not the integrity)
+        let mut buf = p.encode();
+        buf[32..40].copy_from_slice(&u64::MAX.to_le_bytes());
+        let body_len = buf.len() - 4;
+        let crc = crc32(&buf[..body_len]);
+        buf[body_len..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(PartialAggregate::decode(&buf), Err(WireError::TooLarge(_))));
+        // same for the cohort count
+        let mut buf = p.encode();
+        buf[24..32].copy_from_slice(&u64::MAX.to_le_bytes());
+        let body_len = buf.len() - 4;
+        let crc = crc32(&buf[..body_len]);
+        buf[body_len..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(PartialAggregate::decode(&buf), Err(WireError::TooLarge(_))));
+    }
+
+    #[test]
+    fn short_buffer_is_io_error() {
+        assert!(matches!(PartialAggregate::decode(&[0u8; 10]), Err(WireError::Io(_))));
+    }
+
+    #[test]
+    fn empty_partial_roundtrips() {
+        // wire-level: an empty partial encodes/decodes (the ROUND layer
+        // rejects empty cohorts; the codec stays total)
+        let p = PartialAggregate::new(0, 0, 0.0, vec![], vec![]);
+        assert_eq!(PartialAggregate::decode(&p.encode()).unwrap(), p);
+    }
+
+    #[test]
+    fn view_on_aligned_buffer_borrows_sums() {
+        let p = sample(100, 7);
+        let enc = p.encode();
+        let mut words = vec![0u32; enc.len().div_ceil(4)];
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u8, enc.len())
+        };
+        bytes.copy_from_slice(&enc);
+        let v = PartialAggregateView::decode(&bytes[..]).unwrap();
+        assert!(matches!(v.sum, Cow::Borrowed(_)), "aligned decode must borrow the sums");
+        assert_eq!(v.mem_bytes(), p.mem_bytes());
+        assert_eq!(v.into_owned(), p);
+    }
+
+    #[test]
+    fn as_view_borrows_owned_partial() {
+        let p = sample(12, 3);
+        let v = p.as_view();
+        assert!(matches!(v.sum, Cow::Borrowed(_)));
+        assert!(matches!(v.parties, Cow::Borrowed(_)));
+        assert_eq!(v.clone().into_owned(), p);
+        assert_eq!(v.cohort(), 3);
+    }
+
+    #[test]
+    fn header_keeps_sum_block_4_aligned() {
+        // the alignment contract the zero-copy pool relies on
+        assert_eq!(PHEAD % 4, 0);
+        assert_eq!(PHEAD, 40);
+    }
+}

@@ -220,6 +220,93 @@ fn sharded_single_lane_is_bit_identical_to_streaming_fold() {
     assert_eq!(got, want);
 }
 
+/// THE single-relay bit-parity bar: a 1-tier round and a 2-tier round over
+/// the same updates (decomposable FedAvg) produce IDENTICAL fused weights
+/// — exact `assert_eq`, not tolerance.  The partial carries the relay's
+/// raw accumulator (un-finalized weighted sums + wtot), and folding it
+/// into the root's empty accumulator is element-wise `0.0 + x`, so no
+/// float operation reassociates anywhere on the path.
+#[test]
+fn single_relay_two_tier_round_is_bit_identical_to_flat() {
+    let algo = by_name("fedavg").unwrap();
+    for (n, len, seed) in [(13usize, 3_000usize, 61u64), (2, 1, 62), (9, 40_000, 63)] {
+        let us = updates(seed, n, len);
+
+        // 1-tier: the flat sequential fold (bit-identical to SerialEngine,
+        // pinned above)
+        let mut flat = StreamingFold::new(algo.as_ref(), 1, MemoryBudget::unbounded()).unwrap();
+        for u in &us {
+            flat.fold(algo.as_ref(), u).unwrap();
+        }
+        let want = flat.finish(algo.as_ref()).unwrap();
+
+        // 2-tier, ONE relay: the edge folds the whole cohort, forwards its
+        // raw accumulator through the wire codec, the root folds the
+        // partial and finalizes.
+        let mut edge = StreamingFold::new(algo.as_ref(), 1, MemoryBudget::unbounded()).unwrap();
+        for u in &us {
+            edge.fold(algo.as_ref(), u).unwrap();
+        }
+        let acc = edge.into_accumulator().unwrap();
+        let partial = elastiagg::tensorstore::PartialAggregate::new(
+            0,
+            0,
+            acc.wtot,
+            (0..n as u64).collect(),
+            acc.sum,
+        );
+        // cross the REAL wire: encode, decode as a borrowed view
+        let wire = partial.encode();
+        let v = elastiagg::tensorstore::PartialAggregateView::decode(&wire).unwrap();
+        let mut root = StreamingFold::new(algo.as_ref(), 1, MemoryBudget::unbounded()).unwrap();
+        root.fold_partial(algo.as_ref(), &v.sum, v.wtot, v.parties.len() as u64).unwrap();
+        let got = root.finish(algo.as_ref()).unwrap();
+        assert_eq!(got, want, "n={n} len={len}: 2-tier must be EXACT, not close");
+
+        // ... and through the full RoundState machinery (sharded, 1 lane)
+        let st = elastiagg::coordinator::RoundState::new_streaming(
+            0,
+            elastiagg::coordinator::WorkloadClass::Streaming,
+            MemoryBudget::unbounded(),
+            std::sync::Arc::new(elastiagg::fusion::FedAvg),
+            1,
+        )
+        .unwrap();
+        st.ingest_partial(&v).unwrap();
+        let (out, folded) = st.finish_streaming().unwrap();
+        assert_eq!(folded, n, "quorum counts the cohort's members");
+        assert_eq!(out, want, "RoundState partial ingest must preserve exactness");
+    }
+}
+
+/// Multi-edge 2-tier rounds regroup the additions across cohorts, so the
+/// bar is the documented combine-associativity tolerance — same as the
+/// sharded flat fold.
+#[test]
+fn multi_edge_two_tier_round_matches_flat_within_tolerance() {
+    let algo = by_name("fedavg").unwrap();
+    let us = updates(71, 24, 2_000);
+    let mut bd = Breakdown::new();
+    let want = SerialEngine::unbounded().aggregate(algo.as_ref(), &us, &mut bd).unwrap();
+    for edges in [2usize, 3, 4] {
+        let root = ShardedFold::new(algo.as_ref(), 2, MemoryBudget::unbounded()).unwrap();
+        let cohort = us.len().div_ceil(edges);
+        for chunk in us.chunks(cohort) {
+            let mut edge_fold =
+                StreamingFold::new(algo.as_ref(), 1, MemoryBudget::unbounded()).unwrap();
+            for u in chunk {
+                edge_fold.fold(algo.as_ref(), u).unwrap();
+            }
+            let acc = edge_fold.into_accumulator().unwrap();
+            root.fold_partial(algo.as_ref(), &acc.sum, acc.wtot, acc.n).unwrap();
+        }
+        let (got, folded) = root.finish(algo.as_ref()).unwrap();
+        assert_eq!(folded, 24, "edges={edges}");
+        all_close(&got, &want, 1e-4, 1e-5)
+            .unwrap_or_else(|e| panic!("2-tier(edges={edges}): {e}"));
+    }
+}
+
 #[test]
 fn parity_sweep_shapes_fedavg() {
     // shape sweep crossing the 65536-chunk boundary (multi-chunk XLA path)

@@ -6,7 +6,8 @@ use std::time::Duration;
 
 use elastiagg::coordinator::RoundOutcome;
 use elastiagg::sim::{
-    run_scenario, schedule_digest, schedules, ReplyKind, ScenarioConfig,
+    run_scenario, run_tier_scenario, schedule_digest, schedules, tier_schedules, ReplyKind,
+    ScenarioConfig, TierConfig,
 };
 
 /// Pick a seed whose *schedule* (a pure function of the seed) has the
@@ -136,6 +137,185 @@ fn all_dropout_round_aborts() {
     assert!(report.clients.iter().all(|c| c.dropped));
     // deterministic digest even on the abort path
     assert_eq!(report.digest(), run_scenario(&cfg).digest());
+}
+
+/// Pick a seed whose TIER schedule has the shape a test needs.
+fn tier_seed_with<F: Fn(&TierConfig) -> bool>(base: TierConfig, want: F) -> TierConfig {
+    (0..256u64)
+        .map(|i| TierConfig { seed: base.seed + i, ..base.clone() })
+        .find(|c| want(c))
+        .expect("some seed in the sweep satisfies the tier scenario shape")
+}
+
+/// The hierarchical acceptance scenario: 3 edges × 6 clients, client
+/// dropout injected, and ONE ENTIRE EDGE dropping (its relay acks the
+/// cohort, then crashes before forwarding).  The root must still seal at
+/// quorum on the surviving edges' partials, fold every survivor exactly
+/// once, and reproduce its digest bit-for-bit.
+#[test]
+fn whole_edge_dropout_root_still_seals_at_quorum() {
+    let cfg = tier_seed_with(
+        TierConfig { edge_dropout: 0.34, ..TierConfig::default() },
+        |c| {
+            let s = tier_schedules(c);
+            let dead = s.iter().filter(|e| e.drops_out).count();
+            let live_survivors: usize = s
+                .iter()
+                .filter(|e| !e.drops_out)
+                .map(|e| e.clients.iter().filter(|c| !c.drops_out).count())
+                .sum();
+            let total = c.edges * c.clients_per_edge;
+            let quorum = ((total as f64) * c.quorum_frac).ceil() as usize;
+            // exactly one dead edge, survivors reach quorum but not the
+            // full fleet, and every live edge has at least one survivor
+            dead == 1
+                && live_survivors >= quorum
+                && live_survivors < total
+                && s.iter()
+                    .filter(|e| !e.drops_out)
+                    .all(|e| e.clients.iter().any(|c| !c.drops_out))
+        },
+    );
+    let scheds = tier_schedules(&cfg);
+    let live_survivors: usize = scheds
+        .iter()
+        .filter(|e| !e.drops_out)
+        .map(|e| e.clients.iter().filter(|c| !c.drops_out).count())
+        .sum();
+
+    let report = run_tier_scenario(&cfg);
+    assert_eq!(report.outcome, RoundOutcome::Quorum, "{report:?}");
+    assert_eq!(
+        report.folded, live_survivors,
+        "every survivor behind a live relay folds exactly once at the root"
+    );
+    assert_eq!(report.fused_len, cfg.update_len, "the root published");
+    for e in &report.edges {
+        if e.dropped {
+            assert_eq!(e.partial_reply, None, "a dead edge forwards nothing");
+            assert!(!e.model_published);
+        } else {
+            let survivors = e.clients.iter().filter(|c| !c.dropped).count();
+            assert_eq!(e.relay_folded, survivors, "edge {} folds its cohort", e.edge);
+            assert_eq!(
+                e.partial_reply,
+                Some(ReplyKind::Accepted),
+                "edge {}'s partial must fold at the root",
+                e.edge
+            );
+            assert!(e.model_published, "edge {} republishes the fused model", e.edge);
+        }
+        for c in &e.clients {
+            if c.dropped {
+                assert_eq!(c.relay_reply, None);
+            } else {
+                assert_eq!(c.relay_reply, Some(ReplyKind::Accepted), "party {}", c.party);
+            }
+            assert_eq!(c.direct_reply, None, "no races in this scenario");
+        }
+    }
+    // bit-identical digest on a full second run of the same seed
+    let again = run_tier_scenario(&cfg);
+    assert_eq!(report.digest(), again.digest(), "tier digest must be bit-stable per seed");
+}
+
+/// The partial-vs-direct race: some clients ALSO send their raw update
+/// straight to the root at ~t=0 (deterministically ahead of the relays'
+/// deadline-gated forwards).  The cohort-atomic ledger must fence the
+/// conflict: the racer's direct upload folds, the partial carrying that
+/// already-claimed party is rejected WHOLE with the typed Duplicate, and
+/// no party ever folds twice.
+#[test]
+fn partial_vs_direct_race_never_double_folds() {
+    let cfg = tier_seed_with(
+        TierConfig {
+            dropout: 0.0,
+            direct_race: 0.35,
+            quorum_frac: 0.25,
+            ..TierConfig::default()
+        },
+        |c| {
+            let s = tier_schedules(c);
+            let poisoned = s
+                .iter()
+                .filter(|e| e.clients.iter().any(|c| c.races_direct))
+                .count();
+            // at least one edge poisoned by a racer AND one clean edge
+            poisoned >= 1 && poisoned < c.edges
+        },
+    );
+    let scheds = tier_schedules(&cfg);
+    // expected root folds: every racer's direct upload + the full cohorts
+    // of the racer-free edges (poisoned partials are rejected whole)
+    let racers: usize =
+        scheds.iter().flat_map(|e| &e.clients).filter(|c| c.races_direct).count();
+    let clean_members: usize = scheds
+        .iter()
+        .filter(|e| e.clients.iter().all(|c| !c.races_direct))
+        .map(|e| e.clients.len())
+        .sum();
+
+    let report = run_tier_scenario(&cfg);
+    assert_eq!(
+        report.folded,
+        racers + clean_members,
+        "at-most-once: racers fold via their direct frame, poisoned cohorts not at all: {report:?}"
+    );
+    assert!(report.folded >= report.quorum, "the scenario must still publish");
+    for (e, sched) in report.edges.iter().zip(&scheds) {
+        let edge_racers: Vec<u64> = sched
+            .clients
+            .iter()
+            .filter(|c| c.races_direct)
+            .map(|c| c.party)
+            .collect();
+        if edge_racers.is_empty() {
+            assert_eq!(e.partial_reply, Some(ReplyKind::Accepted), "clean edge {}", e.edge);
+            assert!(e.model_published);
+        } else {
+            assert_eq!(
+                e.partial_reply,
+                Some(ReplyKind::Duplicate),
+                "edge {} carries already-claimed parties {edge_racers:?}",
+                e.edge
+            );
+            assert!(!e.model_published, "a rejected partial yields no local model");
+        }
+        for c in &e.clients {
+            // every racer's direct frame landed first and folded
+            if sched.clients.iter().find(|s| s.party == c.party).unwrap().races_direct {
+                assert_eq!(c.direct_reply, Some(ReplyKind::Accepted), "party {}", c.party);
+            }
+            // relays accept their whole cohort either way
+            assert_eq!(c.relay_reply, Some(ReplyKind::Accepted), "party {}", c.party);
+        }
+    }
+    let again = run_tier_scenario(&cfg);
+    assert_eq!(report.digest(), again.digest(), "race outcome digest must be bit-stable");
+}
+
+/// Fault-free 2-tier round: every cohort folds at its relay, every partial
+/// folds at the root, the root completes with the FULL fleet (counted in
+/// members), and every relay republishes the fused model.
+#[test]
+fn clean_two_tier_round_completes_with_member_counted_quorum() {
+    let cfg = TierConfig {
+        seed: 9,
+        dropout: 0.0,
+        edge_dropout: 0.0,
+        direct_race: 0.0,
+        ..TierConfig::default()
+    };
+    let report = run_tier_scenario(&cfg);
+    assert_eq!(report.outcome, RoundOutcome::Complete, "{report:?}");
+    assert_eq!(report.folded, cfg.edges * cfg.clients_per_edge);
+    assert_eq!(report.fused_len, cfg.update_len);
+    assert!(report.edges.iter().all(|e| e.partial_reply == Some(ReplyKind::Accepted)));
+    assert!(report.edges.iter().all(|e| e.model_published));
+    assert!(report
+        .edges
+        .iter()
+        .all(|e| e.relay_folded == cfg.clients_per_edge));
 }
 
 /// Zero-fault scenario completes with the full fleet — and completes

@@ -6,7 +6,9 @@ use elastiagg::mapreduce::BinaryFilesRdd;
 use elastiagg::memsim::MemoryBudget;
 use elastiagg::metrics::Breakdown;
 use elastiagg::net::{protocol, read_frame, read_frame_into, write_frame, FrameBuf, Message};
-use elastiagg::tensorstore::{ModelUpdate, ModelUpdateView};
+use elastiagg::tensorstore::{
+    ModelUpdate, ModelUpdateView, PartialAggregate, PartialAggregateView,
+};
 use elastiagg::util::prop::check;
 use elastiagg::util::rng::Rng;
 
@@ -164,6 +166,107 @@ fn prop_crc_enforced_on_zero_copy_path() {
         match ModelUpdateView::decode(buf.as_slice()) {
             Err(_) => Ok(()),
             Ok(_) => Err(format!("corruption at byte {pos} not detected")),
+        }
+    });
+}
+
+fn random_partial(rng: &mut Rng) -> PartialAggregate {
+    let len = rng.gen_range(4000) as usize;
+    let cohort = 1 + rng.gen_range(64) as usize;
+    let mut sum = vec![0f32; len];
+    rng.fill_gaussian_f32(&mut sum, 5.0);
+    // distinct party ids (the round layer rejects in-cohort duplicates)
+    let base = rng.next_u64() >> 8;
+    let parties = (0..cohort as u64).map(|i| base + i * 3).collect();
+    PartialAggregate::new(rng.next_u64(), rng.next_u64() as u32, rng.next_f64() * 1e6, parties, sum)
+}
+
+#[test]
+fn prop_partial_wire_roundtrip_with_cohort_set() {
+    // The partial-aggregate codec: sums, wtot AND the contributing-party
+    // set survive the wire bit-exactly, owned and framed.
+    check("partial-roundtrip", 60, |_, rng| {
+        let p = random_partial(rng);
+        let back = PartialAggregate::decode(&p.encode()).map_err(|e| e.to_string())?;
+        if back != p {
+            return Err("partial roundtrip mismatch".into());
+        }
+        let msg = Message::UploadPartial { nonce: rng.next_u64(), partial: p };
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &msg).map_err(|e| e.to_string())?;
+        if read_frame(&mut std::io::Cursor::new(wire)).map_err(|e| e.to_string())? != msg {
+            return Err("framed partial mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partial_single_bitflip_always_detected() {
+    // CRC-first: a flip anywhere in the CRC-covered body (or the CRC
+    // itself) must reject the partial before any field is trusted.
+    check("partial-bitflip", 60, |_, rng| {
+        let p = random_partial(rng);
+        let mut buf = p.encode();
+        let pos = rng.gen_range(buf.len() as u64) as usize;
+        buf[pos] ^= 1u8 << rng.gen_range(8);
+        match PartialAggregate::decode(&buf) {
+            Err(_) => Ok(()),
+            Ok(back) if back == p => Err("corruption produced identical value?".into()),
+            Ok(_) => Err(format!("corruption at byte {pos} not detected")),
+        }
+    });
+}
+
+#[test]
+fn prop_partial_zero_copy_borrow_through_the_pool() {
+    // A TAG_UPLOAD_PARTIAL frame read into the 4-aligned pooled buffer:
+    // the 8-byte nonce + 40-byte header keep the sums 4-aligned, so the
+    // view must BORROW them in place — and still roundtrip exactly.
+    check("partial-zero-copy", 40, |_, rng| {
+        let p = random_partial(rng);
+        let msg = Message::UploadPartial { nonce: rng.next_u64(), partial: p.clone() };
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &msg).map_err(|e| e.to_string())?;
+        let mut buf = FrameBuf::new();
+        let tag = read_frame_into(&mut std::io::Cursor::new(wire), &mut buf)
+            .map_err(|e| e.to_string())?;
+        if tag != protocol::TAG_UPLOAD_PARTIAL {
+            return Err(format!("wrong tag {tag:#x}"));
+        }
+        let v = PartialAggregateView::decode(&buf.as_slice()[8..]).map_err(|e| e.to_string())?;
+        if p.sum.is_empty() {
+            return Ok(()); // an empty borrow is Cow-representation-defined
+        }
+        if !matches!(v.sum, std::borrow::Cow::Borrowed(_)) {
+            return Err("partial sums in the aligned pool must decode borrowed".into());
+        }
+        if v.into_owned() != p {
+            return Err("borrowed partial decode mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_torn_partial_frames_rejected() {
+    // Truncate a valid partial frame at every boundary: header cut,
+    // nonce cut, payload cut — never a silently-partial cohort.
+    check("partial-torn", 40, |_, rng| {
+        let p = random_partial(rng);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Message::UploadPartial { nonce: 7, partial: p })
+            .map_err(|e| e.to_string())?;
+        let cut = 1 + rng.gen_range(wire.len() as u64 - 1) as usize;
+        let torn = wire[..cut].to_vec();
+        let mut buf = FrameBuf::new();
+        match read_frame_into(&mut std::io::Cursor::new(torn), &mut buf) {
+            Err(_) => Ok(()),
+            Ok(tag) => {
+                // the frame read may succeed only if the cut fell beyond
+                // the declared frame — impossible for a prefix cut
+                Err(format!("torn partial (cut {cut}/{}, tag {tag:#x}) accepted", wire.len()))
+            }
         }
     });
 }
