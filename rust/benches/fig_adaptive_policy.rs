@@ -81,6 +81,8 @@ fn main() {
             xla_available: true,
             feedback_beta: 0.3,
             expected_participation: 1.0, // this trace has no dropout
+            async_buffer: 0,             // sync candidates only
+            staleness_exponent: 0.5,
         },
     );
     let mut scaler = Autoscaler::new(

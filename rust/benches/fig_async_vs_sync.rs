@@ -1,0 +1,229 @@
+//! Fig A (beyond the paper's numbered figures) — FedBuff-style async
+//! rounds vs the sync quorum barrier.
+//!
+//! The quorum round's clock is its slowest needed client: under a
+//! heavy-tail latency distribution the tail IS the round time, no matter
+//! how fast the aggregator folds.  The async mode publishes a model every
+//! K arrivals instead, discounting stale updates by `s(δ) = (1+δ)^-a`
+//! rather than rejecting them.  This bench pins the three claims that
+//! make the mode safe to plan:
+//!
+//! * part 1 — BOTH planner regimes: `MinLatency` under straggler turnout
+//!   takes the async plan (its clock is one K-sized publish, not the
+//!   fleet); `MinCost` at full turnout keeps the sync streaming quorum
+//!   (staleness-discounted weight makes async node-seconds buy less, so
+//!   sync is the cheaper $/round);
+//! * part 2 — the exactness boundary: with zero staleness (buffer ≥ N,
+//!   every update fresh) the async drain is BIT-IDENTICAL to the sync
+//!   streaming fold — `assert_eq`, not tolerance;
+//! * part 3 — the seeded heavy-tail scenario against the real TCP server:
+//!   async publishes off the fast body while the sync quorum clock sits
+//!   in the tail band, and every buffered update folds exactly once.
+//!
+//! Emits `BENCH_fig_async_vs_sync.json` (see `$BENCH_JSON_DIR`).
+
+use std::borrow::Cow;
+
+use elastiagg::bench::{self, BenchJson, RoundRecord};
+use elastiagg::cluster::{CostModel, VirtualCluster};
+use elastiagg::coordinator::{AsyncRound, WorkloadClassifier};
+use elastiagg::engine::StreamingFold;
+use elastiagg::fusion::{DiscountedFusion, FedAvg, StalenessDiscount};
+use elastiagg::memsim::MemoryBudget;
+use elastiagg::planner::{
+    DispatchPlanner, DispatchPolicy, PlanKind, PlannerConfig, PricingModel,
+};
+use elastiagg::sim::{run_async_scenario, straggler_schedules, StragglerConfig};
+use elastiagg::tensorstore::ModelUpdateView;
+use elastiagg::util::fmt;
+use elastiagg::util::json::Json;
+
+fn planner(policy: DispatchPolicy, buffer: usize, participation: f64) -> DispatchPlanner {
+    DispatchPlanner::new(
+        WorkloadClassifier::new(170 << 30, 1.1),
+        VirtualCluster::paper(CostModel::nominal()),
+        PricingModel::default(),
+        PlannerConfig {
+            policy,
+            max_executors: 10,
+            cores_per_executor: 3,
+            node_cores: 64,
+            ingest_lanes: 64,
+            edges: 0,
+            xla_available: false,
+            feedback_beta: 0.3,
+            expected_participation: participation,
+            async_buffer: buffer,
+            staleness_exponent: 0.5,
+        },
+    )
+}
+
+fn main() {
+    bench::banner(
+        "Fig A — async (FedBuff-style) rounds vs the sync quorum barrier",
+        "publish every K arrivals; discount staleness instead of rejecting it",
+    );
+    let mut out = BenchJson::new("fig_async_vs_sync");
+
+    // ---- part 1: both planner regimes ------------------------------------
+    let update = (4.6 * 1024.0 * 1024.0) as u64;
+    let parties = 30_000usize;
+    out.meta("parties", Json::num(parties as f64));
+    out.meta("update_bytes", Json::num(update as f64));
+
+    let mut t = fmt::Table::new(&["policy", "turnout", "chosen", "latency s", "$"]);
+    for (policy, turnout, want_async) in [
+        (DispatchPolicy::MinLatency, 0.4, true),
+        (DispatchPolicy::MinCost, 1.0, false),
+    ] {
+        let p = planner(policy, 64, turnout);
+        let plan = p.plan(update, parties, &FedAvg, 0);
+        let stream = plan
+            .candidates
+            .iter()
+            .find(|c| c.kind == PlanKind::Streaming)
+            .expect("streaming candidate");
+        let asynch = plan
+            .candidates
+            .iter()
+            .find(|c| matches!(c.kind, PlanKind::Async { .. }))
+            .expect("async candidate");
+        if want_async {
+            assert!(
+                matches!(plan.chosen.kind, PlanKind::Async { buffer: 64 }),
+                "MinLatency under straggler turnout must take async: {:?}",
+                plan.chosen
+            );
+            assert!(
+                asynch.cost.latency_s < stream.cost.latency_s / 10.0,
+                "one K-publish beats the fleet-wide quorum span: {} vs {}",
+                asynch.cost.latency_s,
+                stream.cost.latency_s
+            );
+        } else {
+            assert_eq!(
+                plan.chosen.kind,
+                PlanKind::Streaming,
+                "MinCost at full turnout keeps the sync quorum: {:?}",
+                plan.chosen
+            );
+            assert!(
+                asynch.cost.usd > stream.cost.usd,
+                "discounted async node-seconds buy less effective weight: ${} vs ${}",
+                asynch.cost.usd,
+                stream.cost.usd
+            );
+        }
+        t.row(&[
+            format!("{policy:?}"),
+            format!("{:.0}%", turnout * 100.0),
+            format!("{:?}", plan.chosen.kind),
+            format!("{:.2}", plan.chosen.cost.latency_s),
+            format!("{:.4}", plan.chosen.cost.usd),
+        ]);
+        for c in [stream, asynch] {
+            out.round(RoundRecord {
+                round: (turnout * 1000.0) as u32,
+                label: format!("{policy:?}/{}(turnout={turnout})", c.kind.engine_label()),
+                predicted_s: c.cost.latency_s,
+                predicted_usd: c.cost.usd,
+                ..Default::default()
+            });
+        }
+    }
+    t.print();
+
+    // ---- part 2: zero-discount bit-parity --------------------------------
+    println!("\n[exactness] buffer ≥ N, every update fresh: async drain ≡ sync fold");
+    let n = 48;
+    let len = 100_000;
+    let us = bench::gen_updates(7, n, len);
+    let algo = FedAvg;
+    let (want, sync_s) = bench::time(|| {
+        let mut f = StreamingFold::new(&algo, 1, MemoryBudget::unbounded()).unwrap();
+        for u in &us {
+            f.fold(&algo, u).unwrap();
+        }
+        f.finish(&algo).unwrap()
+    });
+    let (got, async_s) = bench::time(|| {
+        let ar = AsyncRound::new(n, MemoryBudget::unbounded());
+        for u in &us {
+            ar.offer(u.party, u.party ^ 0xA5, u.round, u.count, &u.data).unwrap();
+        }
+        let curve = StalenessDiscount::fedbuff();
+        let mut f = StreamingFold::new(&algo, 1, MemoryBudget::unbounded()).unwrap();
+        for e in ar.drain() {
+            let d = DiscountedFusion::for_delta(&algo, curve, e.delta);
+            let v = ModelUpdateView {
+                party: e.party,
+                count: e.count,
+                round: e.trained_version,
+                data: Cow::Borrowed(&e.data[..]),
+            };
+            f.fold_view(&d, &v).unwrap();
+        }
+        f.finish(&algo).unwrap()
+    });
+    assert_eq!(got, want, "zero-discount async must be bit-identical to sync");
+    println!("  n={n} len={len}: sync {sync_s:.4}s, async {async_s:.4}s — identical bits");
+    out.meta("parity_n", Json::num(n as f64));
+    out.meta("parity_bit_identical", Json::Bool(true));
+    out.round(RoundRecord {
+        round: 0,
+        label: "parity/sync-fold".into(),
+        latency_s: sync_s,
+        ..Default::default()
+    });
+    out.round(RoundRecord {
+        round: 0,
+        label: "parity/async-drain".into(),
+        latency_s: async_s,
+        ..Default::default()
+    });
+
+    // ---- part 3: the seeded heavy-tail scenario over real TCP ------------
+    println!("\n[scenario] heavy-tail fleet: async publishes off the body, sync waits on the tail");
+    let cfg = (0..256u64)
+        .map(|i| StragglerConfig { seed: 42 + i, ..StragglerConfig::default() })
+        .find(|c| {
+            let s = straggler_schedules(c);
+            let body = s.iter().filter(|c| !c.drops_out && !c.straggler).count();
+            let tail = s.iter().filter(|c| !c.drops_out && c.straggler).count();
+            let quorum = ((c.clients as f64) * c.quorum_frac).ceil() as usize;
+            body >= c.buffer && tail >= 1 && body < quorum && body + tail >= quorum
+        })
+        .expect("a heavy-tail seed exists in the sweep");
+    let report = run_async_scenario(&cfg);
+    let first = report.first_publish_ms.expect("≥ K survivors");
+    let seal = report.sync_quorum_ms.expect("quorum survivors");
+    assert!(first < seal, "async publishes at {first}ms; sync would seal at {seal}ms");
+    assert_eq!(report.drained, report.admitted as u64, "exactly-once conservation");
+    let mut t = fmt::Table::new(&["clock", "virtual ms"]);
+    t.row(&["async first publish (K-th arrival)".into(), first.to_string()]);
+    t.row(&["sync quorum seal (quorum-th arrival)".into(), seal.to_string()]);
+    t.print();
+    println!(
+        "  publishes={} folded={} max_delta={} wall={:.3}s digest={:016x}",
+        report.publishes.len(),
+        report.drained,
+        report.publishes.iter().map(|p| p.max_delta).max().unwrap_or(0),
+        report.wall_s,
+        report.digest()
+    );
+    out.meta("scenario_seed", Json::num(cfg.seed as f64));
+    out.meta("first_publish_ms", Json::num(first as f64));
+    out.meta("sync_quorum_ms", Json::num(seal as f64));
+    out.meta("publishes", Json::num(report.publishes.len() as f64));
+    out.round(RoundRecord {
+        round: report.final_version,
+        label: format!("scenario(seed={},publishes={})", cfg.seed, report.publishes.len()),
+        latency_s: report.wall_s,
+        ..Default::default()
+    });
+
+    let path = out.write().expect("write BENCH_fig_async_vs_sync.json");
+    println!("\n[json] {}", path.display());
+    println!("\nfigA OK — async takes the latency regime, sync keeps the cost regime, δ=0 is exact");
+}

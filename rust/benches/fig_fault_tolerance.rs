@@ -25,6 +25,7 @@
 
 use std::time::Duration;
 
+use elastiagg::bench::{BenchJson, RoundRecord};
 use elastiagg::cluster::{CostModel, VirtualCluster};
 use elastiagg::coordinator::{RoundOutcome, WorkloadClassifier};
 use elastiagg::fusion::FedAvg;
@@ -33,6 +34,7 @@ use elastiagg::planner::{
 };
 use elastiagg::sim::{run_scenario, schedules, ScenarioConfig};
 use elastiagg::util::fmt;
+use elastiagg::util::json::Json;
 
 fn scenario(seed: u64, dropout: f64, quorum_frac: f64) -> ScenarioConfig {
     ScenarioConfig {
@@ -65,6 +67,10 @@ fn main() {
         "Fig F — quorum rounds vs full participation under dropout",
         "K-of-N + deadline keeps publishing models where all-or-nothing stalls",
     );
+
+    let mut out = BenchJson::new("fig_fault_tolerance");
+    out.meta("clients", Json::num(16.0));
+    out.meta("update_len", Json::num(256.0));
 
     // ---- part 1: round outcome + latency vs dropout rate ----------------
     let mut t = fmt::Table::new(&[
@@ -114,6 +120,18 @@ fn main() {
             format!("{:.2}", q.round_s),
             format!("{:?}", strict.outcome),
         ]);
+        out.round(RoundRecord {
+            round: (dropout * 1000.0) as u32,
+            label: format!("quorum(dropout={dropout},folded={},{:?})", q.folded, q.outcome),
+            latency_s: q.round_s,
+            ..Default::default()
+        });
+        out.round(RoundRecord {
+            round: (dropout * 1000.0) as u32,
+            label: format!("strict(dropout={dropout},{:?})", strict.outcome),
+            latency_s: strict.round_s,
+            ..Default::default()
+        });
     }
     t.print();
 
@@ -134,6 +152,8 @@ fn main() {
                 xla_available: false,
                 feedback_beta: 0.3,
                 expected_participation: 1.0,
+                async_buffer: 0,
+                staleness_exponent: 0.5,
             },
         )
     };
@@ -163,8 +183,17 @@ fn main() {
             format!("{:.1}", stream.cost.latency_s),
             format!("{:.4}", stream.cost.usd),
         ]);
+        out.round(RoundRecord {
+            round: (turnout * 1000.0) as u32,
+            label: format!("priced-streaming(turnout={turnout})"),
+            predicted_s: stream.cost.latency_s,
+            predicted_usd: stream.cost.usd,
+            ..Default::default()
+        });
     }
     t.print();
 
+    let path = out.write().expect("write BENCH_fig_fault_tolerance.json");
+    println!("\n[json] {}", path.display());
     println!("\nfigF OK — quorum rounds publish under dropout; plans price the K·p the fleet delivers");
 }

@@ -143,6 +143,8 @@ fn main() {
                 xla_available: false,
                 feedback_beta: 0.3,
                 expected_participation: 1.0,
+                async_buffer: 0, // flat-vs-tree only: no async candidate
+                staleness_exponent: 0.5,
             },
         )
     };

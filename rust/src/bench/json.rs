@@ -179,6 +179,45 @@ mod tests {
     }
 
     #[test]
+    fn full_record_roundtrips_through_parse_field_for_field() {
+        // The trajectory diff tooling reads these files back with the same
+        // `util::json` parser — every RoundRecord field and every meta
+        // type it emits must survive serialize → parse unchanged.
+        let rec = RoundRecord {
+            round: 42,
+            label: "async(K=64)".into(),
+            latency_s: 0.125,
+            peak_bytes: 1 << 33, // past u32: u64s must not truncate
+            predicted_s: 0.5,
+            observed_s: 0.625,
+            predicted_usd: 0.0001220703125, // exact in f64
+            observed_usd: 0.000244140625,
+        };
+        let mut b = BenchJson::new("fig_async_vs_sync");
+        b.meta("parity_bit_identical", Json::Bool(true));
+        b.meta("scenario", Json::str("heavy-tail"));
+        b.meta("first_publish_ms", Json::num(57.0));
+        b.round(rec.clone());
+
+        let j = Json::parse(&b.to_json().to_string()).unwrap();
+        assert_eq!(j.get("fig").as_str(), Some("fig_async_vs_sync"));
+        assert_eq!(j.get("meta").get("parity_bit_identical").as_bool(), Some(true));
+        assert_eq!(j.get("meta").get("scenario").as_str(), Some("heavy-tail"));
+        assert_eq!(j.get("meta").get("first_publish_ms").as_u64(), Some(57));
+        let r = j.get("rounds").at(0);
+        assert_eq!(r.get("round").as_u64(), Some(rec.round as u64));
+        assert_eq!(r.get("label").as_str(), Some(rec.label.as_str()));
+        assert_eq!(r.get("latency_s").as_f64(), Some(rec.latency_s));
+        assert_eq!(r.get("peak_bytes").as_u64(), Some(rec.peak_bytes));
+        assert_eq!(r.get("predicted_s").as_f64(), Some(rec.predicted_s));
+        assert_eq!(r.get("observed_s").as_f64(), Some(rec.observed_s));
+        assert_eq!(r.get("predicted_usd").as_f64(), Some(rec.predicted_usd));
+        assert_eq!(r.get("observed_usd").as_f64(), Some(rec.observed_usd));
+        // a second serialize of the parsed tree is byte-stable
+        assert_eq!(j.to_string(), Json::parse(&j.to_string()).unwrap().to_string());
+    }
+
+    #[test]
     fn calibration_rows_map_onto_records() {
         let cal = RoundCalibration {
             round: 7,

@@ -164,6 +164,42 @@ impl VirtualCluster {
         self.streaming_time(update_bytes, eff, cores, lanes)
     }
 
+    /// Virtual seconds from "first upload arrives" to "next model
+    /// publishes" under the FedBuff-style async mode: the server folds a
+    /// bounded buffer of the `k` freshest updates and publishes as soon as
+    /// the buffer fills, so the publish latency is one `k`-sized streaming
+    /// round instead of a quorum-sized one.  This is the async mode's
+    /// latency win: `k ≪ n·p` means the model refreshes long before a
+    /// sync quorum would seal, and stragglers never gate the clock.
+    pub fn async_publish_time(&self, update_bytes: u64, k: usize, cores: usize, lanes: usize) -> f64 {
+        self.streaming_time(update_bytes, k.max(1), cores, lanes)
+    }
+
+    /// Node-seconds of aggregator occupancy to fold one sync-round's worth
+    /// of arrivals (`eff` uploads) through `k`-sized async buffers: the
+    /// same ingest+fold work as a flat streaming round, plus one extra
+    /// drain (S-way merge + finalize + install) per additional publish.
+    /// The planner prices async $ from this occupancy — the latency win is
+    /// not free: publishing `ceil(eff/k)` times re-pays the drain.
+    pub fn async_occupancy(
+        &self,
+        update_bytes: u64,
+        eff: usize,
+        k: usize,
+        cores: usize,
+        lanes: usize,
+    ) -> f64 {
+        if eff == 0 {
+            return 0.0;
+        }
+        let k = k.clamp(1, eff);
+        let base = self.streaming_time(update_bytes, eff, cores, lanes);
+        let extra_publishes = eff.div_ceil(k).saturating_sub(1) as f64;
+        let lanes_f = lanes.clamp(1, cores.max(1)) as f64;
+        let drain = (lanes_f + 1.0) * update_bytes as f64 / self.cost.fuse_bps;
+        base + extra_publishes * drain
+    }
+
     /// Virtual phase split of a 2-tier hierarchical round over `edges`
     /// edge aggregators: `(edge_s, root_s)`.
     ///
@@ -444,6 +480,36 @@ mod tests {
         // monotone in p, and floored at zero arrivals
         assert!(v.streaming_time_p(u, 30_000, 64, 64, 0.2) < half);
         assert_eq!(v.streaming_time_p(u, 0, 64, 64, 0.5), 0.0);
+    }
+
+    #[test]
+    fn async_publish_beats_the_sync_quorum_span() {
+        // The async latency win: a K-sized buffer publishes after K
+        // arrivals, while the sync round waits for the whole quorum.
+        let v = vc();
+        let u = (4.6 * 1024.0 * 1024.0) as u64;
+        let publish = v.async_publish_time(u, 64, 64, 64);
+        let quorum = v.streaming_time(u, 10_000, 64, 64);
+        assert!(publish < quorum / 10.0, "{publish} vs {quorum}");
+        // a buffer as large as the quorum is exactly the sync round
+        assert_eq!(v.async_publish_time(u, 10_000, 64, 64), quorum);
+        // degenerate buffer floors at one update
+        assert_eq!(v.async_publish_time(u, 0, 64, 64), v.streaming_time(u, 1, 64, 64));
+    }
+
+    #[test]
+    fn async_occupancy_repays_the_drain_per_publish() {
+        let v = vc();
+        let u = (4.6 * 1024.0 * 1024.0) as u64;
+        let sync = v.streaming_time(u, 1024, 64, 64);
+        // one buffer covering everything = exactly the sync fold work
+        assert_eq!(v.async_occupancy(u, 1024, 1024, 64, 64), sync);
+        // smaller buffers publish more often and cost strictly more
+        let k64 = v.async_occupancy(u, 1024, 64, 64, 64);
+        let k16 = v.async_occupancy(u, 1024, 16, 64, 64);
+        assert!(k64 > sync, "{k64} !> {sync}");
+        assert!(k16 > k64, "{k16} !> {k64}");
+        assert_eq!(v.async_occupancy(u, 0, 64, 64, 64), 0.0);
     }
 
     #[test]

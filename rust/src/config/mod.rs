@@ -148,6 +148,19 @@ pub struct ServiceConfig {
     /// enumerates + prices `PlanKind::Hierarchical` alongside the flat
     /// candidates (0 or 1 = flat only).
     pub edges: usize,
+    /// Run the FedBuff-style asynchronous ingest instead of quorum rounds:
+    /// uploads are admitted into a bounded staleness buffer and the model
+    /// publishes on buffer-full or cadence, never on a quorum seal.
+    pub async_mode: bool,
+    /// Staleness-buffer capacity K (the "K freshest updates" bound).
+    pub async_buffer: usize,
+    /// Exponent `a` of the staleness discount `s(δ) = (1 + δ)^-a`
+    /// (FedBuff's default is 0.5; 0 disables discounting, which makes the
+    /// async fold bit-identical to the sync streaming fold).
+    pub staleness_exponent: f64,
+    /// Publish cadence in seconds: an async round publishes when the
+    /// buffer fills OR this much time elapsed, whichever first.
+    pub async_cadence_s: f64,
 }
 
 impl Default for ServiceConfig {
@@ -171,6 +184,10 @@ impl Default for ServiceConfig {
             parent_addr: None,
             edge_id: 0,
             edges: 0,
+            async_mode: false,
+            async_buffer: 64,
+            staleness_exponent: 0.5,
+            async_cadence_s: 5.0,
         }
     }
 }
@@ -259,6 +276,25 @@ impl ServiceConfig {
         if let Some(v) = j.get("edges").as_usize() {
             c.edges = v;
         }
+        if let Some(v) = j.get("async_mode").as_bool() {
+            c.async_mode = v;
+        }
+        if let Some(v) = j.get("async_buffer").as_usize() {
+            c.async_buffer = v.max(1);
+        }
+        if let Some(v) = j.get("staleness_exponent").as_f64() {
+            // the discount curve sanitises again, but reject junk at load
+            // so to_json round-trips what the service will actually use
+            if v.is_finite() && v >= 0.0 {
+                c.staleness_exponent = v;
+            }
+        }
+        if let Some(v) = j.get("async_cadence_s").as_f64() {
+            // same Duration::from_secs_f64 domain as round_deadline_s
+            if v.is_finite() && v >= 0.0 {
+                c.async_cadence_s = v.min(31_536_000.0);
+            }
+        }
         c
     }
 
@@ -293,6 +329,10 @@ impl ServiceConfig {
             ),
             ("edge_id", Json::num(self.edge_id as f64)),
             ("edges", Json::num(self.edges as f64)),
+            ("async_mode", Json::Bool(self.async_mode)),
+            ("async_buffer", Json::num(self.async_buffer as f64)),
+            ("staleness_exponent", Json::num(self.staleness_exponent)),
+            ("async_cadence_s", Json::num(self.async_cadence_s)),
         ])
     }
 }
@@ -400,6 +440,36 @@ mod tests {
         assert_eq!(NodeRole::parse("flat"), Some(NodeRole::Standalone));
         let j = Json::parse(r#"{"role": "galactic"}"#).unwrap();
         assert_eq!(ServiceConfig::from_json(&j).role, NodeRole::Standalone);
+    }
+
+    #[test]
+    fn async_knobs_roundtrip_and_default_to_sync() {
+        let c = ServiceConfig::default();
+        assert!(!c.async_mode);
+        assert_eq!(c.async_buffer, 64);
+        assert_eq!(c.staleness_exponent, 0.5);
+        assert_eq!(c.async_cadence_s, 5.0);
+        let mut c2 = c.clone();
+        c2.async_mode = true;
+        c2.async_buffer = 16;
+        c2.staleness_exponent = 1.5;
+        c2.async_cadence_s = 0.25;
+        let c3 = ServiceConfig::from_json(&c2.to_json());
+        assert!(c3.async_mode);
+        assert_eq!(c3.async_buffer, 16);
+        assert_eq!(c3.staleness_exponent, 1.5);
+        assert_eq!(c3.async_cadence_s, 0.25);
+        // a zero buffer is meaningless — floor at 1
+        let j = Json::parse(r#"{"async_buffer": 0}"#).unwrap();
+        assert_eq!(ServiceConfig::from_json(&j).async_buffer, 1);
+        // junk exponents/cadences keep the defaults (the cadence shares
+        // round_deadline_s's Duration::from_secs_f64 domain)
+        let j = Json::parse(r#"{"staleness_exponent": -2, "async_cadence_s": -1}"#).unwrap();
+        let c4 = ServiceConfig::from_json(&j);
+        assert_eq!(c4.staleness_exponent, 0.5);
+        assert_eq!(c4.async_cadence_s, 5.0);
+        let j = Json::parse(r#"{"async_cadence_s": 1e20}"#).unwrap();
+        assert_eq!(ServiceConfig::from_json(&j).async_cadence_s, 31_536_000.0);
     }
 
     #[test]

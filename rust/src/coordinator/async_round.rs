@@ -1,0 +1,449 @@
+//! FedBuff-style asynchronous round state: a bounded buffer of the K
+//! freshest updates, published on buffer-full or cadence instead of a
+//! quorum seal.
+//!
+//! The sync [`RoundState`](super::RoundState) is a lockstep barrier — an
+//! update either makes the round's deadline or is `Late`-rejected.  At
+//! fleet scale stragglers are the common case, not the fault case, so the
+//! async mode inverts the contract: *every* well-formed upload is
+//! admitted, tagged with the model-version delta observed at ingest
+//! (`δ = current_version − trained_version`), and buffered until the
+//! driver drains.  Staleness is handled by *weight*, not rejection — the
+//! drain folds each update through a
+//! [`DiscountedFusion`](crate::fusion::DiscountedFusion) scaled by
+//! `s(δ)`, so a straggler's work still counts, just less.
+//!
+//! Buffer contract (each clause pinned by a table test below):
+//!
+//! * **Bounded**: at most K updates are buffered; each holds a
+//!   [`MemoryBudget`] reservation for its payload, so the buffer's
+//!   footprint is K·C against the node budget, never fleet-sized.
+//! * **Eviction is oldest-version-first** over `buffer ∪ {incoming}`:
+//!   a full buffer admits a fresher update by evicting the oldest-version
+//!   entry (ties broken earliest-arrival); an incoming update that is
+//!   itself the oldest is rejected as [`AsyncError::Stale`] — the buffer
+//!   always holds the K freshest versions seen.
+//! * **Exactly once**: per-buffer dedup by party id (retransmits get
+//!   [`AsyncError::Duplicate`] with the accepted nonce, the sync round's
+//!   idempotent-retry contract); [`AsyncRound::drain`] swaps the buffer
+//!   out under the lock, so an upload racing a publish lands in the
+//!   *next* buffer — admitted exactly once, never dropped silently.
+//! * **Abort returns every reservation**: buffered entries carry RAII
+//!   [`Reservation`]s; [`AsyncRound::abort`] (or a drop mid-buffer)
+//!   releases them all — `in_use == 0` after, like the sync abort path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::memsim::{MemoryBudget, OutOfMemory, Reservation};
+
+/// Why an async offer was not buffered.
+#[derive(Debug)]
+pub enum AsyncError {
+    /// This party already has an update in the current buffer; `nonce` is
+    /// the accepted upload's nonce (the retransmit-idempotency contract).
+    Duplicate { party: u64, nonce: u64 },
+    /// The buffer is full and the incoming update's version is the oldest
+    /// of `buffer ∪ {incoming}` — buffering it would evict fresher work.
+    /// `version` is the current model version, so the client can pull the
+    /// new model and retrain instead of retrying.
+    Stale { version: u32 },
+    /// The update disagreed with the established parameter count.
+    ShapeMismatch { want: usize, got: usize },
+    /// The node budget cannot hold another buffered update.
+    Memory(OutOfMemory),
+}
+
+impl std::fmt::Display for AsyncError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AsyncError::Duplicate { party, nonce } => {
+                write!(f, "party {party} already buffered (nonce {nonce})")
+            }
+            AsyncError::Stale { version } => {
+                write!(f, "update too stale for the buffer; model is at version {version}")
+            }
+            AsyncError::ShapeMismatch { want, got } => {
+                write!(f, "update length {got} != buffer's {want}")
+            }
+            AsyncError::Memory(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for AsyncError {}
+
+impl From<OutOfMemory> for AsyncError {
+    fn from(e: OutOfMemory) -> AsyncError {
+        AsyncError::Memory(e)
+    }
+}
+
+/// A successfully buffered offer: what the server echoes back to the
+/// client as an `AsyncAck` frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Admitted {
+    /// Current model version at ingest.
+    pub version: u32,
+    /// Staleness delta observed for this update.
+    pub delta: u32,
+}
+
+/// One buffered update, owning its payload and its budget reservation.
+/// Dropping it (fold consumed, eviction, abort) releases the bytes.
+pub struct BufferedUpdate {
+    pub party: u64,
+    pub nonce: u64,
+    /// Model version the client trained against (the wire `round` field,
+    /// reinterpreted as a version tag in async mode).
+    pub trained_version: u32,
+    /// Staleness delta at ingest time.
+    pub delta: u32,
+    pub count: f32,
+    pub data: Vec<f32>,
+    _reservation: Reservation,
+}
+
+struct Buffer {
+    /// Arrival order — the drain folds in this order.
+    entries: Vec<BufferedUpdate>,
+    /// Party → accepted nonce, for the current buffer only.
+    accepted: HashMap<u64, u64>,
+}
+
+impl Buffer {
+    fn new() -> Buffer {
+        Buffer { entries: Vec::new(), accepted: HashMap::new() }
+    }
+}
+
+/// The async round: model version counter + bounded staleness buffer.
+pub struct AsyncRound {
+    capacity: usize,
+    budget: MemoryBudget,
+    version: AtomicU32,
+    /// Parameter count pinned by the first offer: 0 until set, `len + 1`
+    /// after (the [`ShardedFold`](crate::engine::ShardedFold) idiom).
+    expect_len: AtomicUsize,
+    buffer: Mutex<Buffer>,
+    /// Latest published model, served to `GetModel` in async mode.
+    model: Mutex<Option<Arc<Vec<f32>>>>,
+    /// Cumulative oldest-version-first evictions (reporting only).
+    evicted: AtomicU64,
+    /// Cumulative updates drained into folds (reporting only).
+    drained: AtomicU64,
+}
+
+impl AsyncRound {
+    pub fn new(capacity: usize, budget: MemoryBudget) -> AsyncRound {
+        AsyncRound {
+            capacity: capacity.max(1),
+            budget,
+            version: AtomicU32::new(0),
+            expect_len: AtomicUsize::new(0),
+            buffer: Mutex::new(Buffer::new()),
+            model: Mutex::new(None),
+            evicted: AtomicU64::new(0),
+            drained: AtomicU64::new(0),
+        }
+    }
+
+    /// Current model version (bumped by each [`AsyncRound::install`]).
+    pub fn version(&self) -> u32 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Updates in the current buffer.
+    pub fn collected(&self) -> usize {
+        self.buffer.lock().unwrap().entries.len()
+    }
+
+    /// Whether the buffer has reached its K — the driver's publish
+    /// trigger (the other trigger being the cadence timer).
+    pub fn is_full(&self) -> bool {
+        self.collected() >= self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Cumulative oldest-version-first evictions.
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative updates handed to drains.
+    pub fn drained(&self) -> u64 {
+        self.drained.load(Ordering::Relaxed)
+    }
+
+    /// Latest published model, if any round has published yet.
+    pub fn model(&self) -> Option<Arc<Vec<f32>>> {
+        self.model.lock().unwrap().clone()
+    }
+
+    /// Offer one update to the buffer.  `trained_version` is the wire
+    /// frame's round field reinterpreted as the model version the client
+    /// trained against; the staleness delta is computed here, at ingest,
+    /// against the current version.
+    pub fn offer(
+        &self,
+        party: u64,
+        nonce: u64,
+        trained_version: u32,
+        count: f32,
+        data: &[f32],
+    ) -> Result<Admitted, AsyncError> {
+        // Pin (or check) the parameter count outside the buffer lock; the
+        // CAS makes two racing first offers of different shapes resolve to
+        // one pinned shape and one typed rejection.
+        match self.expect_len.compare_exchange(
+            0,
+            data.len() + 1,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => {}
+            Err(cur) if cur - 1 == data.len() => {}
+            Err(cur) => {
+                return Err(AsyncError::ShapeMismatch { want: cur - 1, got: data.len() })
+            }
+        }
+        let version = self.version();
+        let delta = version.saturating_sub(trained_version);
+        let mut buf = self.buffer.lock().unwrap();
+        if let Some(&nonce) = buf.accepted.get(&party) {
+            return Err(AsyncError::Duplicate { party, nonce });
+        }
+        if buf.entries.len() >= self.capacity {
+            // Oldest-version-first over buffer ∪ {incoming}.  `min_by_key`
+            // returns the FIRST minimum, so ties evict the earliest
+            // arrival; an incoming update tying the minimum loses to the
+            // buffered entry (it "arrived last") and is rejected.
+            let (idx, oldest) = buf
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.trained_version)
+                .map(|(i, e)| (i, e.trained_version))
+                .expect("full buffer is non-empty");
+            if trained_version <= oldest {
+                return Err(AsyncError::Stale { version });
+            }
+            let gone = buf.entries.remove(idx);
+            buf.accepted.remove(&gone.party);
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+            // `gone` drops here, releasing its reservation before the
+            // incoming reserve — a full budget still admits the swap.
+        }
+        let reservation = self.budget.reserve(data.len() as u64 * 4)?;
+        buf.accepted.insert(party, nonce);
+        buf.entries.push(BufferedUpdate {
+            party,
+            nonce,
+            trained_version,
+            delta,
+            count,
+            data: data.to_vec(),
+            _reservation: reservation,
+        });
+        Ok(Admitted { version, delta })
+    }
+
+    /// Swap the buffer out for the drain-and-fold.  Runs under the same
+    /// lock `offer` takes, so an upload racing the publish lands cleanly
+    /// in the fresh buffer — the *next* publish folds it.  Entries come
+    /// out in arrival order; each still owns its reservation, released as
+    /// the fold consumes (drops) it.
+    pub fn drain(&self) -> Vec<BufferedUpdate> {
+        let mut buf = self.buffer.lock().unwrap();
+        let taken = std::mem::replace(&mut *buf, Buffer::new());
+        self.drained.fetch_add(taken.entries.len() as u64, Ordering::Relaxed);
+        taken.entries
+    }
+
+    /// Publish a fused model: store it and bump the version.  Offers from
+    /// here on observe the new version (their deltas grow by one).
+    pub fn install(&self, model: Vec<f32>) -> u32 {
+        let mut slot = self.model.lock().unwrap();
+        *slot = Some(Arc::new(model));
+        self.version.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    /// Drop every buffered update, returning all reservations to the
+    /// budget (`in_use` falls by the buffer's full footprint).
+    pub fn abort(&self) {
+        let mut buf = self.buffer.lock().unwrap();
+        *buf = Buffer::new();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round(cap: usize, budget: &MemoryBudget) -> AsyncRound {
+        AsyncRound::new(cap, budget.clone())
+    }
+
+    #[test]
+    fn offers_buffer_until_full_and_drain_preserves_arrival_order() {
+        let b = MemoryBudget::unbounded();
+        let r = round(3, &b);
+        for p in 0..3u64 {
+            let a = r.offer(p, 100 + p, 0, 1.0, &[p as f32; 8]).unwrap();
+            assert_eq!(a, Admitted { version: 0, delta: 0 });
+        }
+        assert!(r.is_full());
+        let drained = r.drain();
+        assert_eq!(drained.iter().map(|e| e.party).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(r.collected(), 0);
+        assert_eq!(r.drained(), 3);
+    }
+
+    #[test]
+    fn duplicate_party_in_one_buffer_returns_accepted_nonce() {
+        let b = MemoryBudget::unbounded();
+        let r = round(4, &b);
+        r.offer(7, 111, 0, 1.0, &[1.0; 4]).unwrap();
+        assert!(matches!(
+            r.offer(7, 999, 0, 1.0, &[1.0; 4]),
+            Err(AsyncError::Duplicate { party: 7, nonce: 111 })
+        ));
+        // after the drain the party may upload again — new buffer, new dedup
+        let _ = r.drain();
+        assert!(r.offer(7, 999, 0, 1.0, &[1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn eviction_is_oldest_version_first() {
+        let b = MemoryBudget::unbounded();
+        let r = round(2, &b);
+        r.install(vec![0.0; 4]); // version 1
+        r.install(vec![0.0; 4]); // version 2
+        r.offer(0, 1, 0, 1.0, &[1.0; 4]).unwrap(); // oldest
+        r.offer(1, 2, 2, 1.0, &[1.0; 4]).unwrap();
+        // buffer full; a fresher update evicts party 0 (version 0)
+        r.offer(2, 3, 1, 1.0, &[1.0; 4]).unwrap();
+        assert_eq!(r.evicted(), 1);
+        let parties: Vec<u64> = r.drain().iter().map(|e| e.party).collect();
+        assert_eq!(parties, vec![1, 2]);
+    }
+
+    #[test]
+    fn evicted_party_can_reupload_fresher() {
+        let b = MemoryBudget::unbounded();
+        let r = round(1, &b);
+        r.install(vec![0.0; 4]);
+        r.offer(5, 10, 0, 1.0, &[1.0; 4]).unwrap();
+        // a fresher update from ANOTHER party evicts 5's stale one...
+        r.offer(6, 11, 1, 1.0, &[1.0; 4]).unwrap();
+        // ...and 5 is no longer "accepted": its retrained upload is admitted
+        // once something fresher than version 1 displaces party 6
+        r.install(vec![0.0; 4]);
+        let a = r.offer(5, 12, 2, 1.0, &[1.0; 4]).unwrap();
+        assert_eq!(a.delta, 0);
+        assert_eq!(r.evicted(), 2);
+    }
+
+    #[test]
+    fn incoming_oldest_is_rejected_stale_with_current_version() {
+        let b = MemoryBudget::unbounded();
+        let r = round(1, &b);
+        r.install(vec![0.0; 4]);
+        r.install(vec![0.0; 4]);
+        r.offer(0, 1, 2, 1.0, &[1.0; 4]).unwrap();
+        // full buffer, incoming version 1 < buffered version 2 → stale
+        assert!(matches!(r.offer(1, 2, 1, 1.0, &[1.0; 4]), Err(AsyncError::Stale { version: 2 })));
+        // version TIE also rejects the incomer: earliest arrival wins
+        assert!(matches!(r.offer(2, 3, 2, 1.0, &[1.0; 4]), Err(AsyncError::Stale { version: 2 })));
+        assert_eq!(r.evicted(), 0);
+        assert_eq!(r.collected(), 1);
+    }
+
+    #[test]
+    fn abort_mid_buffer_returns_every_reservation() {
+        let b = MemoryBudget::new(1 << 16);
+        let r = round(8, &b);
+        for p in 0..5u64 {
+            r.offer(p, p, 0, 1.0, &[1.0; 64]).unwrap();
+        }
+        assert_eq!(b.in_use(), 5 * 64 * 4);
+        r.abort();
+        assert_eq!(b.in_use(), 0, "abort must return every reservation");
+        assert_eq!(r.collected(), 0);
+    }
+
+    #[test]
+    fn eviction_and_drain_release_budget_bytes() {
+        let b = MemoryBudget::new(2 * 64 * 4);
+        let r = round(2, &b);
+        r.offer(0, 1, 0, 1.0, &[1.0; 64]).unwrap();
+        r.offer(1, 2, 1, 1.0, &[1.0; 64]).unwrap();
+        assert_eq!(b.in_use(), 2 * 64 * 4);
+        // budget is exactly full: the eviction must release its bytes
+        // BEFORE the incoming reserve or this offer would OOM
+        r.offer(2, 3, 2, 1.0, &[1.0; 64]).unwrap();
+        assert_eq!(b.in_use(), 2 * 64 * 4);
+        let drained = r.drain();
+        assert_eq!(b.in_use(), 2 * 64 * 4, "drained entries still own their bytes");
+        drop(drained);
+        assert_eq!(b.in_use(), 0, "folding (dropping) a drained entry releases it");
+    }
+
+    #[test]
+    fn memory_exhaustion_is_typed_and_leak_free() {
+        let b = MemoryBudget::new(64 * 4);
+        let r = round(4, &b);
+        r.offer(0, 1, 0, 1.0, &[1.0; 64]).unwrap();
+        assert!(matches!(r.offer(1, 2, 0, 1.0, &[1.0; 64]), Err(AsyncError::Memory(_))));
+        assert_eq!(b.in_use(), 64 * 4, "failed offer must not leak or double-charge");
+        assert_eq!(r.collected(), 1);
+    }
+
+    #[test]
+    fn shape_is_pinned_by_first_offer() {
+        let b = MemoryBudget::unbounded();
+        let r = round(4, &b);
+        r.offer(0, 1, 0, 1.0, &[1.0; 16]).unwrap();
+        assert!(matches!(
+            r.offer(1, 2, 0, 1.0, &[1.0; 17]),
+            Err(AsyncError::ShapeMismatch { want: 16, got: 17 })
+        ));
+    }
+
+    #[test]
+    fn install_bumps_version_and_serves_model() {
+        let b = MemoryBudget::unbounded();
+        let r = round(2, &b);
+        assert_eq!(r.version(), 0);
+        assert!(r.model().is_none());
+        assert_eq!(r.install(vec![1.5; 4]), 1);
+        assert_eq!(r.version(), 1);
+        assert_eq!(*r.model().unwrap(), vec![1.5; 4]);
+        // deltas now reflect the new version
+        let a = r.offer(0, 1, 0, 1.0, &[1.0; 4]).unwrap();
+        assert_eq!(a, Admitted { version: 1, delta: 1 });
+        let fresh = r.offer(1, 2, 1, 1.0, &[1.0; 4]).unwrap();
+        assert_eq!(fresh.delta, 0);
+    }
+
+    #[test]
+    fn upload_racing_a_publish_lands_in_the_next_buffer() {
+        let b = MemoryBudget::unbounded();
+        let r = round(2, &b);
+        r.offer(0, 1, 0, 1.0, &[1.0; 4]).unwrap();
+        r.offer(1, 2, 0, 1.0, &[1.0; 4]).unwrap();
+        let first = r.drain();
+        // the "racing" upload arrives between drain and install
+        r.offer(2, 3, 0, 1.0, &[1.0; 4]).unwrap();
+        r.install(vec![0.0; 4]);
+        assert_eq!(first.len(), 2);
+        let second = r.drain();
+        assert_eq!(second.len(), 1, "racing upload folds into the NEXT buffer");
+        assert_eq!(second[0].party, 2);
+        assert_eq!(r.drained(), 3, "admitted exactly once, never dropped");
+    }
+}

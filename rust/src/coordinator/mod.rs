@@ -12,17 +12,23 @@
 //!   streaming (each update folds into an O(C) accumulator on arrival),
 //!   per-party dedup of retransmitted uploads, and an abort path that
 //!   returns every reservation to the node budget;
+//! * [`async_round`] — the FedBuff-style asynchronous alternative to the
+//!   quorum barrier: a bounded buffer of the K freshest updates with
+//!   oldest-version-first eviction, per-update staleness deltas computed
+//!   at ingest, and publish on buffer-full or cadence;
 //! * [`service`] — the adaptive aggregation service itself: owns the
 //!   engines, the Spark/DFS path, the planner and the autoscaler; plans
 //!   each round, transitions seamlessly (preemptively redirecting parties
 //!   to the store when the next round is predicted to spill), aggregates,
 //!   and feeds observed timings back into the cost model.
 
+pub mod async_round;
 pub mod classifier;
 pub mod registry;
 pub mod round;
 pub mod service;
 
+pub use async_round::{Admitted, AsyncError, AsyncRound, BufferedUpdate};
 pub use classifier::{WorkloadClass, WorkloadClassifier};
 pub use registry::PartyRegistry;
 pub use round::{RoundError, RoundOutcome, RoundPhase, RoundState};

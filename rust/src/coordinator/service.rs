@@ -134,6 +134,10 @@ impl AdaptiveService {
                 xla_available: xla.is_some(),
                 feedback_beta: 0.3,
                 expected_participation: cfg.expected_participation,
+                // async candidates are only enumerated when the service is
+                // actually running the FedBuff ingest mode
+                async_buffer: if cfg.async_mode { cfg.async_buffer.max(1) } else { 0 },
+                staleness_exponent: cfg.staleness_exponent,
             },
         );
         let autoscaler = Autoscaler::new(
@@ -337,6 +341,15 @@ impl AdaptiveService {
             // the streaming fold, so execute that — identical algebra — and
             // let the observation calibrate the hierarchical family.
             PlanKind::Hierarchical { .. } => {
+                let (out, report) = self.aggregate_streaming(algo, updates, round)?;
+                (out, report, 0.0)
+            }
+            // An async plan describes the live buffered-publish ingest mode
+            // (the server's AsyncRound); over an already-collected batch
+            // every update is fresh (δ = 0, discount exactly 1), so the
+            // fold IS the streaming fold — execute that and let the
+            // observation calibrate the async family.
+            PlanKind::Async { .. } => {
                 let (out, report) = self.aggregate_streaming(algo, updates, round)?;
                 (out, report, 0.0)
             }

@@ -18,9 +18,11 @@
 
 pub mod avg;
 pub mod robust;
+pub mod staleness;
 
 pub use avg::{ClippedAvg, FedAvg, GradAvg, IterAvg};
 pub use robust::{CoordMedian, Krum, Zeno};
+pub use staleness::{DiscountedFusion, StalenessDiscount};
 
 use crate::tensorstore::ModelUpdate;
 

@@ -1,0 +1,257 @@
+//! Staleness-discounted fusion — the async algebra in one wrapper.
+//!
+//! FedBuff-style asynchronous rounds fold whatever arrives, including
+//! updates computed against an old model version.  Folding a version-δ
+//! update at full weight would let stale gradients drag the model
+//! backwards; dropping it wastes the client's work.  The standard middle
+//! ground (Nguyen et al., FedBuff) is a *staleness discount*: scale the
+//! update's aggregation weight by `s(δ) = (1 + δ)^-a`, where `δ` is the
+//! model-version delta observed at ingest and `a` is a configurable
+//! exponent (FedBuff uses a = 1/2).
+//!
+//! The discount is NOT a new algorithm — it composes with every
+//! decomposable [`FusionAlgorithm`]: [`DiscountedFusion`] borrows the
+//! inner algorithm and scales only its `weight`/`weight_parts`, leaving
+//! transform/combine/finalize untouched.  The streaming folds take the
+//! algorithm per call ([`StreamingFold::fold`](crate::engine::StreamingFold::fold)),
+//! so the async driver wraps per *update* with that update's own δ — one
+//! fold, per-update discounts.
+//!
+//! **Exactness boundary**: `s(0) = 1.0` exactly for every exponent, and
+//! `a = 0` makes `s(δ) = 1.0` for every δ.  Scaling a weight by exactly
+//! `1.0` is the IEEE-754 identity, so a zero-discount async fold is
+//! *bit-identical* to the sync streaming fold over the same sequence —
+//! the parity boundary `rust/tests/engine_parity` pins.
+
+use super::{Accumulator, FusionAlgorithm, FusionError};
+use crate::tensorstore::ModelUpdate;
+
+/// The discount curve `s(δ) = (1 + δ)^-exponent`.
+///
+/// `s(0) = 1` exactly (a fresh update is never down-weighted), `s` is
+/// non-increasing in δ, and `exponent = 0` is the identity curve.  The
+/// constructor sanitises the exponent the way the config layer sanitises
+/// knobs: non-finite or negative collapses to 0 (no discount) rather
+/// than panicking mid-round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StalenessDiscount {
+    exponent: f64,
+}
+
+impl StalenessDiscount {
+    pub fn new(exponent: f64) -> StalenessDiscount {
+        let exponent = if exponent.is_finite() && exponent >= 0.0 { exponent } else { 0.0 };
+        StalenessDiscount { exponent }
+    }
+
+    /// The FedBuff default, `a = 1/2`.
+    pub fn fedbuff() -> StalenessDiscount {
+        StalenessDiscount::new(0.5)
+    }
+
+    pub fn exponent(&self) -> f64 {
+        self.exponent
+    }
+
+    /// `s(δ)`.  Exactly `1.0` when `δ = 0` or the exponent is 0 — the
+    /// bit-parity boundary depends on this being the literal constant,
+    /// not a `powf` result that merely rounds to 1.
+    pub fn discount(&self, delta: u32) -> f32 {
+        if delta == 0 || self.exponent == 0.0 {
+            return 1.0;
+        }
+        (1.0 + delta as f64).powf(-self.exponent) as f32
+    }
+}
+
+/// A borrowed algorithm with its per-update weight scaled by a staleness
+/// discount.  Everything else — transform, combine algebra, finalize —
+/// delegates to the inner algorithm, so the wrapper composes with any
+/// decomposable fusion without re-implementing its algebra.
+pub struct DiscountedFusion<'a> {
+    inner: &'a dyn FusionAlgorithm,
+    scale: f32,
+}
+
+impl<'a> DiscountedFusion<'a> {
+    pub fn new(inner: &'a dyn FusionAlgorithm, scale: f32) -> DiscountedFusion<'a> {
+        DiscountedFusion { inner, scale }
+    }
+
+    /// Wrap with the discount for one observed version delta.
+    pub fn for_delta(
+        inner: &'a dyn FusionAlgorithm,
+        curve: StalenessDiscount,
+        delta: u32,
+    ) -> DiscountedFusion<'a> {
+        DiscountedFusion::new(inner, curve.discount(delta))
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+}
+
+impl FusionAlgorithm for DiscountedFusion<'_> {
+    fn name(&self) -> &'static str {
+        // The wrapper is transparent in reports: a discounted FedAvg round
+        // is still a FedAvg round.
+        self.inner.name()
+    }
+
+    fn weight(&self, update: &ModelUpdate) -> f32 {
+        // `x * 1.0 == x` bit-for-bit in IEEE-754, so an undiscounted
+        // wrapper cannot perturb the sync algebra.
+        self.inner.weight(update) * self.scale
+    }
+
+    fn weight_parts(&self, count: f32, data: &[f32]) -> f32 {
+        self.inner.weight_parts(count, data) * self.scale
+    }
+
+    fn transform(&self, x: f32) -> f32 {
+        self.inner.transform(x)
+    }
+
+    fn identity_transform(&self) -> bool {
+        self.inner.identity_transform()
+    }
+
+    fn accumulate_weighted(&self, acc: &mut Accumulator, w: f32, data: &[f32]) {
+        // `w` is already scaled (it came from this wrapper's weight path);
+        // delegate so an inner accumulation override still applies.
+        self.inner.accumulate_weighted(acc, w, data);
+    }
+
+    fn combine_parts(&self, a: &mut Accumulator, sum: &[f32], wtot: f64, n: u64) {
+        self.inner.combine_parts(a, sum, wtot, n);
+    }
+
+    fn finalize(&self, acc: Accumulator) -> Vec<f32> {
+        self.inner.finalize(acc)
+    }
+
+    fn decomposable(&self) -> bool {
+        self.inner.decomposable()
+    }
+
+    fn coordinate_sliceable(&self) -> bool {
+        self.inner.coordinate_sliceable()
+    }
+
+    fn holistic(&self, updates: &[&ModelUpdate]) -> Result<Vec<f32>, FusionError> {
+        self.inner.holistic(updates)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::StreamingFold;
+    use crate::fusion::avg::weighted_mean;
+    use crate::fusion::{ClippedAvg, FedAvg, IterAvg};
+    use crate::memsim::MemoryBudget;
+    use crate::util::prop::all_close;
+    use crate::util::rng::Rng;
+
+    fn upd(rng: &mut Rng, party: u64, len: usize, count: f32) -> ModelUpdate {
+        let mut data = vec![0f32; len];
+        rng.fill_gaussian_f32(&mut data, 1.0);
+        ModelUpdate::new(party, count, 0, data)
+    }
+
+    #[test]
+    fn fresh_updates_are_never_discounted() {
+        for exp in [0.0, 0.5, 1.0, 3.0] {
+            assert_eq!(StalenessDiscount::new(exp).discount(0), 1.0, "a={exp}");
+        }
+    }
+
+    #[test]
+    fn zero_exponent_is_the_identity_curve() {
+        let s = StalenessDiscount::new(0.0);
+        for d in [0u32, 1, 7, 1000, u32::MAX] {
+            assert_eq!(s.discount(d), 1.0, "delta={d}");
+        }
+    }
+
+    #[test]
+    fn discount_is_monotone_non_increasing() {
+        let s = StalenessDiscount::fedbuff();
+        let mut prev = s.discount(0);
+        for d in 1..64u32 {
+            let cur = s.discount(d);
+            assert!(cur <= prev, "s({d})={cur} > s({})={prev}", d - 1);
+            assert!(cur > 0.0);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn fedbuff_curve_hits_known_points() {
+        let s = StalenessDiscount::fedbuff();
+        // (1+3)^-1/2 = 1/2
+        assert!((s.discount(3) - 0.5).abs() < 1e-6);
+        // (1+0)^-1/2 = 1 exactly
+        assert_eq!(s.discount(0), 1.0);
+    }
+
+    #[test]
+    fn bad_exponent_collapses_to_no_discount() {
+        for exp in [f64::NAN, f64::INFINITY, -1.0] {
+            assert_eq!(StalenessDiscount::new(exp).discount(9), 1.0);
+        }
+    }
+
+    #[test]
+    fn unit_scale_fold_is_bit_identical_to_the_inner_algorithm() {
+        // The exactness boundary: scale 1.0 must not perturb a single bit.
+        let mut rng = Rng::new(91);
+        let us: Vec<ModelUpdate> =
+            (0..16).map(|p| upd(&mut rng, p, 300, 1.0 + (p % 5) as f32)).collect();
+        let mut plain = StreamingFold::new(&FedAvg, 1, MemoryBudget::unbounded()).unwrap();
+        let mut wrapped = StreamingFold::new(&FedAvg, 1, MemoryBudget::unbounded()).unwrap();
+        let curve = StalenessDiscount::fedbuff();
+        for u in &us {
+            plain.fold(&FedAvg, u).unwrap();
+            // delta 0 → scale exactly 1.0, even with a non-zero exponent
+            wrapped.fold(&DiscountedFusion::for_delta(&FedAvg, curve, 0), u).unwrap();
+        }
+        assert_eq!(plain.finish(&FedAvg).unwrap(), wrapped.finish(&FedAvg).unwrap());
+    }
+
+    #[test]
+    fn discounted_fold_matches_the_scalar_reference() {
+        // Per-update deltas through the fold equal a hand-scaled weighted
+        // mean — the wrapper scales weights and nothing else.
+        let mut rng = Rng::new(92);
+        let us: Vec<ModelUpdate> =
+            (0..10).map(|p| upd(&mut rng, p, 128, 2.0 + p as f32)).collect();
+        let curve = StalenessDiscount::fedbuff();
+        let deltas: Vec<u32> = (0..10).map(|i| (i * 3) % 7).collect();
+
+        let mut fold = StreamingFold::new(&FedAvg, 1, MemoryBudget::unbounded()).unwrap();
+        for (u, d) in us.iter().zip(&deltas) {
+            fold.fold(&DiscountedFusion::for_delta(&FedAvg, curve, *d), u).unwrap();
+        }
+        let got = fold.finish(&FedAvg).unwrap();
+
+        let refs: Vec<&ModelUpdate> = us.iter().collect();
+        let weights: Vec<f32> =
+            us.iter().zip(&deltas).map(|(u, d)| u.count * curve.discount(*d)).collect();
+        let want = weighted_mean(&refs, &weights);
+        all_close(&got, &want, 1e-4, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn wrapper_scales_iteravg_and_preserves_clipping() {
+        let w = DiscountedFusion::new(&IterAvg, 0.25);
+        assert_eq!(w.weight_parts(999.0, &[]), 0.25);
+        let c = ClippedAvg { clip: 1.0 };
+        let wc = DiscountedFusion::new(&c, 0.5);
+        assert!(!wc.identity_transform());
+        assert_eq!(wc.transform(5.0), 1.0);
+        assert_eq!(wc.name(), "clipped");
+        assert!(wc.decomposable());
+    }
+}

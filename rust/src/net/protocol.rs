@@ -31,6 +31,11 @@ pub const TAG_LATE: u8 = 0x0A;
 /// [`TAG_UPLOAD_NONCE`], so the partial's f32 sums still decode zero-copy
 /// at the 4-aligned offset inside the pooled frame buffer.
 pub const TAG_UPLOAD_PARTIAL: u8 = 0x0B;
+/// Reply: an async-mode upload was admitted to the staleness buffer.
+/// Carries the current model version and the staleness delta the server
+/// computed for the update — the client learns how discounted its work
+/// was and which version to pull before its next local round.
+pub const TAG_ASYNC_ACK: u8 = 0x0C;
 pub const TAG_ERROR: u8 = 0x7F;
 
 /// Validate a payload length before it is cast into the wire's u32 length
@@ -74,6 +79,12 @@ pub enum Message {
     GetModel { round: u32 },
     Model { round: u32, weights: Vec<f32> },
     NoModel { round: u32 },
+    /// Async-mode upload admitted: `version` is the model version at
+    /// ingest, `delta` the staleness the fold will discount by.  In async
+    /// mode the upload frame's round id is reinterpreted as the version
+    /// the client trained against, so stale work is weighted, not
+    /// `Late`-rejected.
+    AsyncAck { version: u32, delta: u32 },
     Error(String),
 }
 
@@ -162,6 +173,11 @@ impl Message {
             Message::NoModel { round } => {
                 out.extend_from_slice(&round.to_le_bytes());
                 TAG_NO_MODEL
+            }
+            Message::AsyncAck { version, delta } => {
+                out.extend_from_slice(&version.to_le_bytes());
+                out.extend_from_slice(&delta.to_le_bytes());
+                TAG_ASYNC_ACK
             }
             Message::Error(m) => {
                 out.extend_from_slice(m.as_bytes());
@@ -260,6 +276,13 @@ impl Message {
                 need(4)?;
                 Ok(Message::NoModel { round: u32::from_le_bytes(payload[..4].try_into().unwrap()) })
             }
+            TAG_ASYNC_ACK => {
+                need(8)?;
+                Ok(Message::AsyncAck {
+                    version: u32::from_le_bytes(payload[..4].try_into().unwrap()),
+                    delta: u32::from_le_bytes(payload[4..8].try_into().unwrap()),
+                })
+            }
             TAG_ERROR => Ok(Message::Error(String::from_utf8_lossy(payload).into_owned())),
             t => Err(ProtoError::UnknownTag(t)),
         }
@@ -312,6 +335,7 @@ mod tests {
             Message::GetModel { round: 0 }.encode().0,
             Message::Model { round: 0, weights: vec![] }.encode().0,
             Message::NoModel { round: 0 }.encode().0,
+            Message::AsyncAck { version: 0, delta: 0 }.encode().0,
             Message::Error(String::new()).encode().0,
         ];
         let mut set = msgs.to_vec();
@@ -416,5 +440,14 @@ mod tests {
         }
         assert!(Message::decode(TAG_DUPLICATE, &[0u8; 15]).is_err());
         assert!(Message::decode(TAG_LATE, &[0u8; 3]).is_err());
+    }
+
+    #[test]
+    fn async_ack_roundtrip() {
+        let m = Message::AsyncAck { version: 0xAB_CDEF, delta: 3 };
+        let (tag, payload) = m.encode();
+        assert_eq!(tag, TAG_ASYNC_ACK);
+        assert_eq!(Message::decode(tag, &payload).unwrap(), m);
+        assert!(Message::decode(TAG_ASYNC_ACK, &[0u8; 7]).is_err());
     }
 }

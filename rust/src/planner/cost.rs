@@ -78,6 +78,17 @@ impl PricingModel {
     pub fn hierarchical(&self, total_s: f64, edge_s: f64, edges: usize) -> f64 {
         self.single_node(total_s) + edges as f64 * self.node_usd_per_s * edge_s
     }
+
+    /// Dollar cost of the FedBuff-style async plan: the aggregator node
+    /// alone is occupied for `occupancy_s` node-seconds — but staleness
+    /// discounting means each folded update contributes less than unit
+    /// weight, so producing one sync-round's worth of *effective*
+    /// aggregated weight takes `1/avg_discount` times the occupancy.
+    /// `avg_discount = 1` (fresh fleet, zero exponent) degenerates to
+    /// exactly the streaming price.
+    pub fn async_mode(&self, occupancy_s: f64, avg_discount: f64) -> f64 {
+        self.single_node(occupancy_s / avg_discount.clamp(1e-3, 1.0))
+    }
 }
 
 #[cfg(test)]
@@ -116,6 +127,19 @@ mod tests {
         assert!(p.hierarchical(10.0, 3.0, 4) > p.streaming(10.0));
         // zero edges degenerates to the flat node occupancy
         assert_eq!(p.hierarchical(10.0, 3.0, 0), p.streaming(10.0));
+    }
+
+    #[test]
+    fn async_price_inflates_with_staleness_discount() {
+        let p = PricingModel::default();
+        // a fresh fleet (discount 1) pays exactly the streaming rate
+        assert_eq!(p.async_mode(10.0, 1.0), p.streaming(10.0));
+        // discounted updates buy less effective weight per node-second
+        assert!(p.async_mode(10.0, 0.5) > p.streaming(10.0));
+        assert!(p.async_mode(10.0, 0.25) > p.async_mode(10.0, 0.5));
+        // pathological discounts are clamped, never a division blow-up
+        assert!(p.async_mode(10.0, 0.0).is_finite());
+        assert_eq!(p.async_mode(10.0, 7.0), p.streaming(10.0));
     }
 
     #[test]

@@ -60,6 +60,13 @@ pub enum PlanKind {
     /// edge count, at the price of occupying the edge nodes and one
     /// per-tier sync barrier — only decomposable algorithms qualify.
     Hierarchical { edges: usize },
+    /// FedBuff-style asynchronous rounds: the server folds a bounded
+    /// buffer of the `buffer` freshest updates with staleness-discounted
+    /// weights and publishes on buffer-full, so no quorum barrier and no
+    /// straggler ever gates the model clock.  Latency is one buffer-sized
+    /// publish; dollars pay the per-publish drain and the discount's
+    /// effective-weight loss — only decomposable algorithms qualify.
+    Async { buffer: usize },
     /// MapReduce over the DFS with this many executor containers.
     Distributed { executors: usize },
 }
@@ -73,6 +80,7 @@ impl PlanKind {
             PlanKind::Xla => "xla",
             PlanKind::Streaming => "streaming",
             PlanKind::Hierarchical { .. } => "hierarchical",
+            PlanKind::Async { .. } => "async",
             PlanKind::Distributed { .. } => "mapreduce",
         }
     }
@@ -130,6 +138,7 @@ impl RoundCalibration {
         let plan = match self.kind {
             PlanKind::Distributed { executors } => format!("mapreduce(k={executors})"),
             PlanKind::Hierarchical { edges } => format!("hierarchical(e={edges})"),
+            PlanKind::Async { buffer } => format!("async(K={buffer})"),
             k => k.engine_label().to_string(),
         };
         format!(
@@ -173,6 +182,17 @@ pub struct PlannerConfig {
     /// OOM a plan that was only priced optimistically.  Calibrated per
     /// round via [`DispatchPlanner::observe_participation`].
     pub expected_participation: f64,
+    /// Async-mode buffer capacity (K): with ≥ 1 a [`PlanKind::Async`]
+    /// candidate is enumerated whenever the algorithm passes the streaming
+    /// gate (buffered async folds are streaming folds over K updates).
+    /// 0 = async mode off, sync quorum candidates only.
+    pub async_buffer: usize,
+    /// Staleness-discount exponent `a` of the async candidate's weight
+    /// curve `s(δ) = (1+δ)^-a` (FedBuff: 0.5).  Pricing converts the
+    /// expected staleness under the observed turnout into an average
+    /// discount: lower turnout → staler buffers → less effective weight
+    /// per node-second → a pricier async plan.
+    pub staleness_exponent: f64,
 }
 
 impl Default for PlannerConfig {
@@ -187,6 +207,8 @@ impl Default for PlannerConfig {
             xla_available: false,
             feedback_beta: 0.3,
             expected_participation: 1.0,
+            async_buffer: 0,
+            staleness_exponent: 0.5,
         }
     }
 }
@@ -206,6 +228,9 @@ pub struct DispatchPlanner {
     /// (its own family: dominated by the tier barrier + relay fan-in, a
     /// shape no flat plan shares).
     corr_hier: Ewma,
+    /// Observed/predicted latency correction for async buffered-publish
+    /// plans (its own family: per-publish cadence, not quorum-span-bound).
+    corr_async: Ewma,
     /// Observed/predicted latency correction for distributed plans.
     corr_dist: Ewma,
     /// Observed delivered/expected turnout (the participation factor p).
@@ -229,6 +254,7 @@ impl DispatchPlanner {
             corr_single: Ewma::new(beta),
             corr_stream: Ewma::new(beta),
             corr_hier: Ewma::new(beta),
+            corr_async: Ewma::new(beta),
             corr_dist: Ewma::new(beta),
             part: Ewma::new(beta),
             ledger: Vec::new(),
@@ -284,6 +310,7 @@ impl DispatchPlanner {
             PlanKind::Distributed { .. } => self.corr_dist.value_or(1.0),
             PlanKind::Streaming => self.corr_stream.value_or(1.0),
             PlanKind::Hierarchical { .. } => self.corr_hier.value_or(1.0),
+            PlanKind::Async { .. } => self.corr_async.value_or(1.0),
             _ => self.corr_single.value_or(1.0),
         }
     }
@@ -418,6 +445,49 @@ impl DispatchPlanner {
                     ),
                 });
             }
+
+            // The FedBuff-style async plan rides the same streaming gate
+            // (a buffered async fold IS a streaming fold over K updates).
+            // Latency: one K-sized publish — the model refreshes as soon as
+            // the K freshest arrivals fill the buffer, so stragglers never
+            // gate the clock (the win MinLatency takes under heavy-tail
+            // turnout).  Dollars: the same node does the same total fold
+            // work plus one drain per extra publish, and every update's
+            // weight is staleness-discounted — at the observed turnout p a
+            // late party has missed ≈ (1-p)/p publishes, so low turnout
+            // means stale buffers, a smaller average discount, and MORE
+            // node-seconds per unit of effective aggregated weight (the
+            // reason MinCost keeps the sync quorum at high turnout).
+            if self.cfg.async_buffer >= 1 && eff >= 1 {
+                let k = self.cfg.async_buffer.min(eff);
+                let lanes = self.cfg.ingest_lanes.max(1).min(lane_cap);
+                let corr = self.corr_async.value_or(1.0);
+                let publish = corr
+                    * self.cluster.async_publish_time(
+                        update_bytes,
+                        k,
+                        self.cfg.node_cores.max(1),
+                        lanes,
+                    );
+                let occupancy = corr
+                    * self.cluster.async_occupancy(
+                        update_bytes,
+                        eff,
+                        k,
+                        self.cfg.node_cores.max(1),
+                        lanes,
+                    );
+                let expected_delta = (1.0 - p) / p.max(1e-3);
+                let a = self.cfg.staleness_exponent.max(0.0);
+                let avg_discount = (1.0 + expected_delta).powf(-a);
+                candidates.push(CandidatePlan {
+                    kind: PlanKind::Async { buffer: k },
+                    cost: PlanCost::new(
+                        publish,
+                        self.pricing.async_mode(occupancy, avg_discount),
+                    ),
+                });
+            }
         }
 
         // The distributed path is always available (it is the only path
@@ -492,6 +562,7 @@ impl DispatchPlanner {
             PlanKind::Distributed { .. } => &mut self.corr_dist,
             PlanKind::Streaming => &mut self.corr_stream,
             PlanKind::Hierarchical { .. } => &mut self.corr_hier,
+            PlanKind::Async { .. } => &mut self.corr_async,
             _ => &mut self.corr_single,
         };
         let target = (corr.value_or(1.0) * ratio).clamp(0.05, 20.0);
@@ -545,6 +616,8 @@ mod tests {
                 xla_available: false,
                 feedback_beta: 0.3,
                 expected_participation: 1.0,
+                async_buffer: 0,
+                staleness_exponent: 0.5,
             },
         )
     }
@@ -564,6 +637,29 @@ mod tests {
                 xla_available: false,
                 feedback_beta: 0.3,
                 expected_participation: 1.0,
+                async_buffer: 0,
+                staleness_exponent: 0.5,
+            },
+        )
+    }
+
+    fn planner_async(policy: DispatchPolicy, buffer: usize, p: f64) -> DispatchPlanner {
+        DispatchPlanner::new(
+            WorkloadClassifier::new(170 << 30, 1.1),
+            VirtualCluster::paper(CostModel::nominal()),
+            PricingModel::default(),
+            PlannerConfig {
+                policy,
+                max_executors: 10,
+                cores_per_executor: 3,
+                node_cores: 64,
+                ingest_lanes: 64,
+                edges: 0,
+                xla_available: false,
+                feedback_beta: 0.3,
+                expected_participation: p,
+                async_buffer: buffer,
+                staleness_exponent: 0.5,
             },
         )
     }
@@ -728,6 +824,89 @@ mod tests {
     }
 
     #[test]
+    fn async_enumerated_only_when_buffered_and_decomposable() {
+        // buffer 0 = async mode off: never enumerated
+        let p = planner(DispatchPolicy::MinLatency);
+        let plan = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        assert!(!plan.candidates.iter().any(|c| matches!(c.kind, PlanKind::Async { .. })));
+        // holistic algorithms have no streaming fold: the gate keeps async out
+        use crate::fusion::CoordMedian;
+        let p = planner_async(DispatchPolicy::MinLatency, 64, 1.0);
+        let plan = p.plan(UPDATE_46MB, 30_000, &CoordMedian, 0);
+        assert!(!plan.candidates.iter().any(|c| matches!(c.kind, PlanKind::Async { .. })));
+        // the buffer is clamped to the arrivals a tiny fleet delivers
+        let plan = p.plan(UPDATE_46MB, 8, &FedAvg, 0);
+        assert!(plan.candidates.iter().any(|c| c.kind == PlanKind::Async { buffer: 8 }));
+    }
+
+    #[test]
+    fn min_latency_takes_async_under_straggler_turnout() {
+        // Heavy-tail fleet: 40% turnout means the sync quorum span waits
+        // on stragglers, while the K=64 buffer publishes after the first
+        // 64 arrivals — the async latency win MinLatency must take.
+        let p = planner_async(DispatchPolicy::MinLatency, 64, 0.4);
+        let plan = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        assert_eq!(plan.chosen.kind, PlanKind::Async { buffer: 64 }, "{plan:?}");
+        let asy = plan.candidates.iter().find(|c| matches!(c.kind, PlanKind::Async { .. })).unwrap();
+        let stream = plan.candidates.iter().find(|c| c.kind == PlanKind::Streaming).unwrap();
+        assert!(
+            asy.cost.latency_s < stream.cost.latency_s / 10.0,
+            "{} vs {}",
+            asy.cost.latency_s,
+            stream.cost.latency_s
+        );
+    }
+
+    #[test]
+    fn min_cost_keeps_the_sync_quorum_at_high_turnout() {
+        // Full turnout: fresh buffers, but async still re-pays the drain
+        // per publish — MinCost must keep the flat streaming quorum.
+        let p = planner_async(DispatchPolicy::MinCost, 64, 1.0);
+        let plan = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        assert_eq!(plan.chosen.kind, PlanKind::Streaming, "{plan:?}");
+        let usd_ratio = |pl: &RoundPlan| {
+            let asy =
+                pl.candidates.iter().find(|c| matches!(c.kind, PlanKind::Async { .. })).unwrap();
+            let st = pl.candidates.iter().find(|c| c.kind == PlanKind::Streaming).unwrap();
+            assert!(asy.cost.usd > st.cost.usd, "{asy:?} vs {st:?}");
+            asy.cost.usd / st.cost.usd
+        };
+        let high = usd_ratio(&plan);
+        // lower turnout = staler buffers = a smaller average discount, so
+        // async's relative $ premium over sync must widen
+        let low = usd_ratio(&planner_async(DispatchPolicy::MinCost, 64, 0.4).plan(
+            UPDATE_46MB,
+            30_000,
+            &FedAvg,
+            0,
+        ));
+        assert!(low > high, "{low} !> {high}");
+    }
+
+    #[test]
+    fn async_family_calibrates_independently() {
+        let mut p = planner_async(DispatchPolicy::MinLatency, 64, 0.5);
+        let before = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        assert!(matches!(before.chosen.kind, PlanKind::Async { .. }));
+        let truth = before.chosen.cost.latency_s * 1.7;
+        for round in 0..10 {
+            let plan = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+            p.observe(round, &plan.chosen, truth);
+        }
+        assert!(
+            (p.correction_for(PlanKind::Async { buffer: 64 }) - 1.7).abs() < 0.25,
+            "{}",
+            p.correction_for(PlanKind::Async { buffer: 64 })
+        );
+        // ... without contaminating the sync families
+        assert_eq!(p.correction_for(PlanKind::Streaming), 1.0);
+        assert_eq!(p.correction(false), 1.0);
+        assert_eq!(p.correction(true), 1.0);
+        let cal = p.ledger().last().unwrap();
+        assert!(cal.log_line().contains("async(K=64)"), "{}", cal.log_line());
+    }
+
+    #[test]
     fn raising_alpha_never_picks_a_slower_plan() {
         // Policy monotonicity over REAL candidate sets (not synthetic):
         // a large round (distributed-only, k sweeps the latency/cost
@@ -819,6 +998,8 @@ mod tests {
             xla_available: false,
             feedback_beta: 0.3,
             expected_participation: 1.0,
+            async_buffer: 0,
+            staleness_exponent: 0.5,
         };
         let full = DispatchPlanner::new(
             WorkloadClassifier::new(170 << 30, 1.1),

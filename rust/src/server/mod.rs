@@ -22,10 +22,11 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{
-    AdaptiveService, PartyRegistry, RoundError, RoundOutcome, RoundState, ServiceError,
-    ServiceReport, WorkloadClass,
+    AdaptiveService, AsyncError, AsyncRound, PartyRegistry, RoundError, RoundOutcome, RoundState,
+    ServiceError, ServiceReport, WorkloadClass,
 };
-use crate::fusion::FusionAlgorithm;
+use crate::engine::StreamingFold;
+use crate::fusion::{DiscountedFusion, FusionAlgorithm, StalenessDiscount};
 use crate::memsim::MemoryBudget;
 use crate::net::server::Handler;
 use crate::net::{protocol, Message, NetServer, ProtoError, Reply, ServerHandle};
@@ -46,6 +47,10 @@ pub struct FlServer {
     node_budget: MemoryBudget,
     current_round: AtomicU32,
     rounds: Mutex<BTreeMap<u32, Arc<RoundState>>>,
+    /// The FedBuff-style buffered-publish state, present when the config
+    /// enables `async_mode`: uploads bypass the quorum round machinery
+    /// entirely and land in this bounded staleness buffer instead.
+    async_round: Option<Arc<AsyncRound>>,
 }
 
 impl FlServer {
@@ -55,6 +60,12 @@ impl FlServer {
         update_bytes: u64,
     ) -> Arc<FlServer> {
         let node_budget = MemoryBudget::new(service.config().node.memory_bytes);
+        let cfg = service.config();
+        let async_round = if cfg.async_mode {
+            Some(Arc::new(AsyncRound::new(cfg.async_buffer, node_budget.clone())))
+        } else {
+            None
+        };
         let s = Arc::new(FlServer {
             service: Arc::new(service),
             registry: Arc::new(PartyRegistry::new()),
@@ -63,6 +74,7 @@ impl FlServer {
             node_budget,
             current_round: AtomicU32::new(0),
             rounds: Mutex::new(BTreeMap::new()),
+            async_round,
         });
         s.open_round(0);
         s
@@ -244,6 +256,31 @@ impl FlServer {
         }
     }
 
+    /// The async-mode upload path: the wire frame's round field is
+    /// reinterpreted as the model version the client trained against, the
+    /// staleness delta is computed at ingest, and the reply is a typed
+    /// `AsyncAck {version, delta}` — never `Late`: a straggler's update is
+    /// admitted with a discounted weight instead of rejected.  Retransmits
+    /// keep the sync round's `Duplicate` idempotency contract; an update
+    /// too stale for a full buffer gets `Late {round: version}` carrying
+    /// the CURRENT version so the client retrains against a fresh model.
+    fn async_offer(
+        &self,
+        ar: &AsyncRound,
+        party: u64,
+        nonce: u64,
+        trained_version: u32,
+        count: f32,
+        data: &[f32],
+    ) -> Message {
+        match ar.offer(party, nonce, trained_version, count, data) {
+            Ok(a) => Message::AsyncAck { version: a.version, delta: a.delta },
+            Err(AsyncError::Duplicate { party, nonce }) => Message::Duplicate { party, nonce },
+            Err(AsyncError::Stale { version }) => Message::Late { round: version },
+            Err(e) => Message::Error(format!("async ingest: {e}")),
+        }
+    }
+
     /// The zero-copy request path ([`Handler::handle_frame`]): uploads are
     /// decoded as borrowed views and folded in place; model fetches are
     /// framed from the published `Arc` without cloning the weights.  Every
@@ -252,6 +289,11 @@ impl FlServer {
         match tag {
             protocol::TAG_UPLOAD => {
                 let v = ModelUpdateView::decode(payload)?;
+                if let Some(ar) = &self.async_round {
+                    return Ok(Reply::Msg(
+                        self.async_offer(ar, v.party, 0, v.round, v.count, &v.data),
+                    ));
+                }
                 Ok(Reply::Msg(self.upload_with(v.round, |st| st.ingest_view(&v))))
             }
             protocol::TAG_UPLOAD_NONCE => {
@@ -265,6 +307,11 @@ impl FlServer {
                 // the pooled buffer is 4-aligned and the nonce is 8 bytes,
                 // so the update body still decodes as a borrowed view
                 let v = ModelUpdateView::decode(&payload[8..])?;
+                if let Some(ar) = &self.async_round {
+                    return Ok(Reply::Msg(
+                        self.async_offer(ar, v.party, nonce, v.round, v.count, &v.data),
+                    ));
+                }
                 Ok(Reply::Msg(
                     self.upload_with(v.round, |st| st.ingest_view_tagged(&v, nonce)),
                 ))
@@ -293,6 +340,14 @@ impl FlServer {
                     )));
                 }
                 let round = u32::from_le_bytes(payload[..4].try_into().unwrap());
+                // Async mode has one rolling model, not per-round slots:
+                // serve the latest publish (its version as the round id).
+                if let Some(ar) = &self.async_round {
+                    return Ok(match ar.model() {
+                        Some(w) => Reply::Model { round: ar.version(), weights: w },
+                        None => Reply::Msg(Message::NoModel { round }),
+                    });
+                }
                 Ok(match self.round_state(round).and_then(|s| s.fused()) {
                     Some(w) => Reply::Model { round, weights: w },
                     None => Reply::Msg(Message::NoModel { round }),
@@ -310,10 +365,23 @@ impl FlServer {
                 Message::Registered { party, round }
             }
             Message::Upload(u) => {
+                if let Some(ar) = &self.async_round {
+                    return self.async_offer(ar, u.party, 0, u.round, u.count, &u.data);
+                }
                 let declared = u.round;
                 self.upload_with(declared, |st| st.ingest(u))
             }
             Message::UploadNonce { nonce, update } => {
+                if let Some(ar) = &self.async_round {
+                    return self.async_offer(
+                        ar,
+                        update.party,
+                        nonce,
+                        update.round,
+                        update.count,
+                        &update.data,
+                    );
+                }
                 let declared = update.round;
                 self.upload_with(declared, |st| st.ingest_tagged(update, nonce))
             }
@@ -323,10 +391,20 @@ impl FlServer {
                     st.ingest_partial_tagged(&partial.as_view(), nonce)
                 })
             }
-            Message::GetModel { round } => match self.round_state(round).and_then(|s| s.fused()) {
-                Some(w) => Message::Model { round, weights: w.as_ref().clone() },
-                None => Message::NoModel { round },
-            },
+            Message::GetModel { round } => {
+                if let Some(ar) = &self.async_round {
+                    return match ar.model() {
+                        Some(w) => {
+                            Message::Model { round: ar.version(), weights: w.as_ref().clone() }
+                        }
+                        None => Message::NoModel { round },
+                    };
+                }
+                match self.round_state(round).and_then(|s| s.fused()) {
+                    Some(w) => Message::Model { round, weights: w.as_ref().clone() },
+                    None => Message::NoModel { round },
+                }
+            }
             other => Message::Error(format!("unexpected message {other:?}")),
         }
     }
@@ -543,6 +621,83 @@ impl FlServer {
             Err(e) => Err(e),
         }
     }
+
+    /// The async buffered-publish state, when `async_mode` is on.
+    pub fn async_state(&self) -> Option<&Arc<AsyncRound>> {
+        self.async_round.as_ref()
+    }
+
+    /// Drive one async publish: wait until the buffer holds its K updates
+    /// or `cadence` elapses (the two FedBuff publish triggers), then drain
+    /// the buffer and fold it with staleness-discounted weights — each
+    /// update through a [`DiscountedFusion`] scaled by `s(δ)` for the δ
+    /// observed at that update's ingest — and install the fused model,
+    /// bumping the version every later offer computes its delta against.
+    ///
+    /// An empty cadence tick publishes nothing (version unchanged) — the
+    /// async analog of the sync abort, except nothing needs aborting: the
+    /// buffer simply keeps filling toward the next tick.  Uploads racing
+    /// the drain land in the next buffer (see [`AsyncRound::drain`]);
+    /// nothing is rejected `Late` and nothing is dropped.
+    pub fn run_async_round(&self, cadence: Duration) -> Result<AsyncRun, ServiceError> {
+        let ar = self
+            .async_round
+            .as_ref()
+            .expect("run_async_round requires async_mode")
+            .clone();
+        let deadline = Instant::now() + cadence;
+        while !ar.is_full() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let entries = ar.drain();
+        if entries.is_empty() {
+            return Ok(AsyncRun { version: ar.version(), folded: 0, max_delta: 0, model: None });
+        }
+        let curve = StalenessDiscount::new(self.service.config().staleness_exponent);
+        // The buffered payloads still hold their budget reservations, so
+        // the fold's own O(C) scratch must come from the same budget —
+        // peak accounting stays honest at K·C + C.
+        let mut fold = StreamingFold::new(self.algo.as_ref(), 1, self.node_budget.clone())
+            .map_err(ServiceError::Engine)?;
+        let folded = entries.len();
+        let mut max_delta = 0;
+        for e in &entries {
+            max_delta = max_delta.max(e.delta);
+            let discounted = DiscountedFusion::for_delta(self.algo.as_ref(), curve, e.delta);
+            let view = ModelUpdateView {
+                party: e.party,
+                count: e.count,
+                round: e.trained_version,
+                data: std::borrow::Cow::Borrowed(&e.data),
+            };
+            fold.fold_view(&discounted, &view).map_err(ServiceError::Engine)?;
+        }
+        let fused = fold.finish(self.algo.as_ref()).map_err(ServiceError::Engine)?;
+        drop(entries); // release the buffer reservations
+        let version = ar.install(fused.clone());
+        Ok(AsyncRun { version, folded, max_delta, model: Some(fused) })
+    }
+
+    /// [`FlServer::run_async_round`] at the configured publish cadence
+    /// (`async_cadence_s`, already sanitised by the config layer).
+    pub fn run_async_configured(&self) -> Result<AsyncRun, ServiceError> {
+        let cadence_s = self.service.config().async_cadence_s;
+        let cadence_s = if cadence_s.is_finite() { cadence_s.clamp(0.0, 31_536_000.0) } else { 0.0 };
+        self.run_async_round(Duration::from_secs_f64(cadence_s))
+    }
+}
+
+/// What [`FlServer::run_async_round`] produced for one publish attempt.
+#[derive(Debug)]
+pub struct AsyncRun {
+    /// Model version after this attempt (unchanged if nothing published).
+    pub version: u32,
+    /// Updates folded into this publish (0 = empty tick, no publish).
+    pub folded: usize,
+    /// Largest staleness delta among the folded updates.
+    pub max_delta: u32,
+    /// The published model; `None` on an empty tick.
+    pub model: Option<Vec<f32>>,
 }
 
 /// What [`FlServer::run_round_quorum`] produced for one driven round.
@@ -943,6 +1098,154 @@ mod tests {
             })
             .unwrap();
         assert_eq!(r, Message::Late { round: 0 });
+    }
+
+    fn make_async_server(
+        mem: u64,
+        buffer: usize,
+        exponent: f64,
+    ) -> (Arc<FlServer>, TempDir) {
+        let td = TempDir::new();
+        let nn = NameNode::create(td.path(), 2, 1, 1 << 20).unwrap();
+        let dfs = DfsClient::new(nn);
+        let mut cfg = ServiceConfig::default();
+        cfg.node.memory_bytes = mem;
+        cfg.node.cores = 2;
+        cfg.monitor_timeout_s = 5.0;
+        cfg.async_mode = true;
+        cfg.async_buffer = buffer;
+        cfg.staleness_exponent = exponent;
+        cfg.async_cadence_s = 0.05;
+        let svc = AdaptiveService::new(
+            cfg,
+            dfs,
+            None,
+            ExecutorConfig { executors: 1, cores_per_executor: 2, ..Default::default() },
+        );
+        (FlServer::new(svc, Arc::new(FedAvg), 400), td)
+    }
+
+    #[test]
+    fn async_round_end_to_end_over_tcp() {
+        let (server, _td) = make_async_server(1 << 30, 4, 0.5);
+        assert!(server.async_state().is_some());
+        let handle = server.start("127.0.0.1:0").unwrap();
+        let addr = handle.addr().to_string();
+
+        // 4 version-0 uploads fill the buffer; each gets a typed AsyncAck
+        // carrying the current version and this update's staleness delta
+        std::thread::scope(|s| {
+            for p in 0..4u64 {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut c = NetClient::connect(&addr).unwrap();
+                    let u = ModelUpdate::new(p, 1.0, 0, vec![p as f32; 50]);
+                    let r = c.call(&Message::UploadNonce { nonce: p, update: u }).unwrap();
+                    assert_eq!(r, Message::AsyncAck { version: 0, delta: 0 });
+                });
+            }
+        });
+        let run = server.run_async_round(Duration::from_secs(5)).unwrap();
+        assert_eq!(run.version, 1);
+        assert_eq!(run.folded, 4);
+        assert_eq!(run.max_delta, 0);
+        // all fresh: the publish is the plain FedAvg mean
+        let fused = run.model.unwrap();
+        assert!((fused[0] - 1.5).abs() < 1e-6, "{}", fused[0]);
+
+        // the model is served with its VERSION as the round id
+        let mut c = NetClient::connect(&addr).unwrap();
+        match c.call(&Message::GetModel { round: 0 }).unwrap() {
+            Message::Model { round, weights } => {
+                assert_eq!(round, 1);
+                assert_eq!(weights, fused);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // second buffer: a straggler still trained on version 0 is ADMITTED
+        // with delta 1 (not Late-rejected), a fresh party gets delta 0
+        let stale = ModelUpdate::new(0, 1.0, 0, vec![10.0; 50]);
+        let r = c.call(&Message::UploadNonce { nonce: 10, update: stale }).unwrap();
+        assert_eq!(r, Message::AsyncAck { version: 1, delta: 1 });
+        let fresh = ModelUpdate::new(1, 1.0, 1, vec![20.0; 50]);
+        let r = c.call(&Message::UploadNonce { nonce: 11, update: fresh }).unwrap();
+        assert_eq!(r, Message::AsyncAck { version: 1, delta: 0 });
+        // cadence tick publishes the partial buffer (2 < K = 4)
+        let run = server.run_async_round(Duration::from_millis(30)).unwrap();
+        assert_eq!(run.version, 2);
+        assert_eq!(run.folded, 2);
+        assert_eq!(run.max_delta, 1);
+        // the straggler folded at the FedBuff weight s(1) = 2^-1/2
+        let s1 = (2.0f64).powf(-0.5) as f32;
+        let want = (10.0 * s1 + 20.0) / (s1 + 1.0);
+        let fused = run.model.unwrap();
+        assert!((fused[0] - want).abs() < 1e-4, "{} vs {want}", fused[0]);
+        assert_eq!(server.async_state().unwrap().drained(), 6);
+    }
+
+    #[test]
+    fn async_typed_replies_duplicate_and_stale() {
+        let (server, _td) = make_async_server(1 << 30, 1, 0.5);
+        let r = server.handle(Message::UploadNonce {
+            nonce: 0x5,
+            update: ModelUpdate::new(3, 1.0, 0, vec![1.0; 20]),
+        });
+        assert_eq!(r, Message::AsyncAck { version: 0, delta: 0 });
+        // the retransmit is absorbed with the accepted nonce echoed back
+        let r = server.handle(Message::UploadNonce {
+            nonce: 0x6,
+            update: ModelUpdate::new(3, 1.0, 0, vec![1.0; 20]),
+        });
+        assert_eq!(r, Message::Duplicate { party: 3, nonce: 0x5 });
+        // a full buffer rejects a version-tie as stale: Late carries the
+        // CURRENT version so the client can fetch and retrain
+        let r = server.handle(Message::Upload(ModelUpdate::new(4, 1.0, 0, vec![1.0; 20])));
+        assert_eq!(r, Message::Late { round: 0 });
+        // a wrong-shape offer is a typed error, not a crash
+        let r = server.handle(Message::Upload(ModelUpdate::new(5, 1.0, 1, vec![1.0; 21])));
+        assert!(matches!(r, Message::Error(_)), "{r:?}");
+    }
+
+    #[test]
+    fn async_abort_mid_buffer_returns_every_reservation() {
+        let (server, _td) = make_async_server(1 << 30, 8, 0.5);
+        for p in 0..5u64 {
+            let r = server.handle(Message::Upload(ModelUpdate::new(p, 1.0, 0, vec![1.0; 64])));
+            assert!(matches!(r, Message::AsyncAck { .. }), "{r:?}");
+        }
+        assert_eq!(server.node_budget.in_use(), 5 * 64 * 4);
+        server.async_state().unwrap().abort();
+        assert_eq!(server.node_budget.in_use(), 0, "abort must return every reservation");
+    }
+
+    #[test]
+    fn async_empty_tick_publishes_nothing() {
+        let (server, _td) = make_async_server(1 << 30, 4, 0.5);
+        let run = server.run_async_round(Duration::from_millis(10)).unwrap();
+        assert_eq!(run.version, 0);
+        assert_eq!(run.folded, 0);
+        assert!(run.model.is_none());
+        assert!(server.async_state().unwrap().model().is_none());
+        let r = server.handle(Message::GetModel { round: 0 });
+        assert_eq!(r, Message::NoModel { round: 0 });
+    }
+
+    #[test]
+    fn async_late_upload_folds_into_the_next_publish_exactly_once() {
+        let (server, _td) = make_async_server(1 << 30, 2, 0.5);
+        server.handle(Message::Upload(ModelUpdate::new(0, 1.0, 0, vec![1.0; 8])));
+        server.handle(Message::Upload(ModelUpdate::new(1, 1.0, 0, vec![3.0; 8])));
+        let run = server.run_async_configured().unwrap();
+        assert_eq!((run.version, run.folded), (1, 2));
+        // a third upload after the publish: buffered, version-1 delta
+        let r = server.handle(Message::Upload(ModelUpdate::new(2, 1.0, 0, vec![5.0; 8])));
+        assert_eq!(r, Message::AsyncAck { version: 1, delta: 1 });
+        let run = server.run_async_configured().unwrap();
+        assert_eq!((run.version, run.folded), (2, 1));
+        // every admitted upload folded exactly once, none dropped
+        assert_eq!(server.async_state().unwrap().drained(), 3);
+        assert_eq!(server.node_budget.in_use(), 0, "publishes release all buffer bytes");
     }
 
     #[test]

@@ -29,8 +29,13 @@
 //! reproduces its digest bit-for-bit on a second run.
 
 pub mod hierarchy;
+pub mod straggler;
 
 pub use hierarchy::{run_tier_scenario, tier_schedules, TierConfig, TierReport};
+pub use straggler::{
+    run_async_scenario, straggler_schedule_digest, straggler_schedules, AsyncReplyKind,
+    AsyncReport, StragglerConfig, StragglerSchedule,
+};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;

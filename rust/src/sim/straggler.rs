@@ -1,0 +1,429 @@
+//! Seeded heavy-tail straggler scenarios for the async ingest mode.
+//!
+//! The sync harness ([`run_scenario`](super::run_scenario)) injects
+//! *uniform* latency — every client is a little late.  Real edge fleets
+//! are bimodal: a fast body and a heavy tail of stragglers 10–100× slower
+//! (low-power links, duty-cycled radios).  Under a quorum barrier the tail
+//! IS the round clock; the FedBuff-style async mode exists precisely so it
+//! isn't.  This module makes that regime a seeded, replayable scenario:
+//!
+//! * [`straggler_schedules`] expands one seed into per-client schedules
+//!   drawn from a body band or a tail band (plus churn and duplicate
+//!   knobs), each client on its own forked [`Rng`] stream;
+//! * [`run_async_scenario`] replays the schedule against a REAL async-mode
+//!   [`FlServer`] over real TCP — clients upload in virtual-arrival order
+//!   (sorted by scheduled delay, ties by party), the driver publishes on
+//!   buffer-full and once more at the end for the partial remainder.  The
+//!   sequential replay is what makes every field of the report — replies,
+//!   per-update deltas, publish sizes, versions — a pure function of the
+//!   seed, so [`AsyncReport::digest`] is bit-stable across replays;
+//! * the report also carries the *schedule-derived* round clocks: the
+//!   async mode's first publish fires at the K-th surviving arrival
+//!   ([`AsyncReport::first_publish_ms`]), while a sync quorum seals only
+//!   at the quorum-th ([`AsyncReport::sync_quorum_ms`]) — on a heavy-tail
+//!   schedule the latter sits in the tail band, which is exactly the
+//!   "async publishes while sync still waits" acceptance pin in
+//!   `rust/tests/sim_scenarios.rs`.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::{mix, SCENARIO_SEQ};
+use crate::client::SyntheticParty;
+use crate::config::ServiceConfig;
+use crate::coordinator::AdaptiveService;
+use crate::dfs::{DfsClient, NameNode};
+use crate::fusion::FedAvg;
+use crate::mapreduce::ExecutorConfig;
+use crate::net::{Message, NetClient};
+use crate::server::FlServer;
+use crate::util::rng::Rng;
+
+/// One heavy-tail scenario: fleet shape + the bimodal latency knobs + the
+/// async buffer knobs.  Everything that varies derives from `seed`.
+#[derive(Clone, Debug)]
+pub struct StragglerConfig {
+    pub seed: u64,
+    /// Registered fleet size.
+    pub clients: usize,
+    /// Parameters per update (bytes = 4×).
+    pub update_len: usize,
+    /// Probability a client is in the heavy tail.
+    pub tail_frac: f64,
+    /// Body latency band `[min, max)` ms — the fast majority.
+    pub body_ms: (u64, u64),
+    /// Tail latency band `[min, max)` ms — the stragglers.
+    pub tail_ms: (u64, u64),
+    /// Probability a client churns out (never uploads).
+    pub dropout: f64,
+    /// Probability a surviving client retransmits its frame once.
+    pub duplicate: f64,
+    /// Async buffer capacity K (publish-on-full trigger).
+    pub buffer: usize,
+    /// Staleness-discount exponent of the async fold.
+    pub staleness_exponent: f64,
+    /// Quorum fraction of the *sync comparison* clock (not enforced by the
+    /// async run — it has no quorum — but used to derive
+    /// [`AsyncReport::sync_quorum_ms`] from the same schedule).
+    pub quorum_frac: f64,
+    /// Aggregator node memory (must hold K·C plus the fold's O(C)).
+    pub node_memory: u64,
+    pub cores: usize,
+}
+
+impl Default for StragglerConfig {
+    fn default() -> StragglerConfig {
+        StragglerConfig {
+            seed: 42,
+            clients: 24,
+            update_len: 256, // 1 KB updates
+            tail_frac: 0.25,
+            body_ms: (10, 60),
+            tail_ms: (800, 1200),
+            dropout: 0.15,
+            duplicate: 0.2,
+            buffer: 8,
+            staleness_exponent: 0.5,
+            quorum_frac: 0.7,
+            node_memory: 64 << 10,
+            cores: 4,
+        }
+    }
+}
+
+/// What one client will do — a pure function of the scenario seed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StragglerSchedule {
+    pub party: u64,
+    /// Retransmission nonce carried on every copy of the frame.
+    pub nonce: u64,
+    /// Churned out: never uploads.
+    pub drops_out: bool,
+    /// In the heavy tail (drawn from `tail_ms` instead of `body_ms`).
+    pub straggler: bool,
+    /// Scheduled upload latency in virtual ms.
+    pub delay_ms: u64,
+    /// Extra copies sent after the original (same nonce).
+    pub retransmits: u32,
+}
+
+/// Expand a scenario into per-client schedules.  Each client draws from
+/// its own forked stream, so adding knobs later cannot shift the draws of
+/// existing clients within a seed.
+pub fn straggler_schedules(cfg: &StragglerConfig) -> Vec<StragglerSchedule> {
+    let mut root = Rng::new(cfg.seed);
+    (0..cfg.clients as u64)
+        .map(|party| {
+            let mut r = root.fork(party.wrapping_add(1));
+            let nonce = r.next_u64();
+            let drops_out = r.next_f64() < cfg.dropout;
+            let straggler = r.next_f64() < cfg.tail_frac;
+            let band = if straggler { cfg.tail_ms } else { cfg.body_ms };
+            let span = band.1.saturating_sub(band.0).max(1);
+            let delay_ms = band.0 + r.gen_range(span);
+            let retransmits = u32::from(r.next_f64() < cfg.duplicate);
+            StragglerSchedule { party, nonce, drops_out, straggler, delay_ms, retransmits }
+        })
+        .collect()
+}
+
+/// Digest of the injected schedule alone (pre-run).
+pub fn straggler_schedule_digest(scheds: &[StragglerSchedule]) -> u64 {
+    let mut h = 0x57A6_617Eu64; // "straggle"
+    for s in scheds {
+        h = mix(h, s.party);
+        h = mix(h, s.nonce);
+        h = mix(h, u64::from(s.drops_out));
+        h = mix(h, u64::from(s.straggler));
+        h = mix(h, s.delay_ms);
+        h = mix(h, u64::from(s.retransmits));
+    }
+    h
+}
+
+/// How the async server answered one upload frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AsyncReplyKind {
+    /// Buffered, with this staleness delta observed at ingest.
+    Admitted { delta: u32 },
+    /// Retransmit absorbed (same buffer, accepted nonce echoed).
+    Duplicate,
+    /// Rejected stale against a full buffer (`Late` carrying the version).
+    Stale,
+    /// Anything else (error reply, connection failure).
+    Rejected,
+}
+
+impl AsyncReplyKind {
+    fn code(self) -> u64 {
+        match self {
+            AsyncReplyKind::Admitted { delta } => 0x100 + delta as u64,
+            AsyncReplyKind::Duplicate => 2,
+            AsyncReplyKind::Stale => 3,
+            AsyncReplyKind::Rejected => 4,
+        }
+    }
+}
+
+/// One client's observable behaviour during the replay.
+#[derive(Clone, Debug)]
+pub struct AsyncClientRecord {
+    pub party: u64,
+    pub dropped: bool,
+    pub straggler: bool,
+    /// Reply per frame sent: original first, then each retransmit.
+    pub replies: Vec<AsyncReplyKind>,
+}
+
+/// One publish the driver performed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PublishRecord {
+    /// Model version after this publish.
+    pub version: u32,
+    /// Updates folded into it.
+    pub folded: usize,
+    /// Largest staleness delta among them.
+    pub max_delta: u32,
+}
+
+/// Everything an async scenario produced, reduced to its deterministic
+/// core (wall time is informational only).
+#[derive(Clone, Debug)]
+pub struct AsyncReport {
+    pub clients: Vec<AsyncClientRecord>,
+    pub publishes: Vec<PublishRecord>,
+    pub final_version: u32,
+    /// Frames the server admitted into a buffer.
+    pub admitted: usize,
+    /// Updates handed to drains (conservation: `== admitted` — every
+    /// buffered update folds exactly once, never dropped, never twice).
+    pub drained: u64,
+    /// Oldest-version-first evictions the buffer performed.
+    pub evicted: u64,
+    /// Parameter count of the last published model (0 if none).
+    pub fused_len: usize,
+    /// Virtual ms of the K-th surviving arrival — when the async buffer
+    /// first fills and publishes.  `None` if fewer than K survive.
+    pub first_publish_ms: Option<u64>,
+    /// Virtual ms of the quorum-th surviving arrival — when a sync quorum
+    /// round over the SAME schedule would seal.  `None` if the quorum
+    /// never arrives (the sync round would sit at its deadline and abort).
+    pub sync_quorum_ms: Option<u64>,
+    /// Wall seconds of the replay — NOT part of the digest.
+    pub wall_s: f64,
+}
+
+impl AsyncReport {
+    /// The bit-stable digest: every deterministic field, in a fixed order.
+    pub fn digest(&self) -> u64 {
+        let mut h = 0xA5D1_6E57u64; // "async digest"
+        for c in &self.clients {
+            h = mix(h, c.party);
+            h = mix(h, u64::from(c.dropped));
+            h = mix(h, u64::from(c.straggler));
+            h = mix(h, c.replies.len() as u64);
+            for r in &c.replies {
+                h = mix(h, r.code());
+            }
+        }
+        for p in &self.publishes {
+            h = mix(h, p.version as u64);
+            h = mix(h, p.folded as u64);
+            h = mix(h, p.max_delta as u64);
+        }
+        h = mix(h, self.final_version as u64);
+        h = mix(h, self.admitted as u64);
+        h = mix(h, self.drained);
+        h = mix(h, self.evicted);
+        h = mix(h, self.fused_len as u64);
+        h = mix(h, self.first_publish_ms.map(|v| v + 1).unwrap_or(0));
+        h = mix(h, self.sync_quorum_ms.map(|v| v + 1).unwrap_or(0));
+        h
+    }
+}
+
+/// The schedule-derived round clocks: sort surviving arrivals, read off
+/// the K-th (async first publish) and the quorum-th (sync seal).
+fn virtual_clocks(
+    cfg: &StragglerConfig,
+    scheds: &[StragglerSchedule],
+) -> (Option<u64>, Option<u64>) {
+    let mut arrivals: Vec<u64> =
+        scheds.iter().filter(|s| !s.drops_out).map(|s| s.delay_ms).collect();
+    arrivals.sort_unstable();
+    let k = cfg.buffer.max(1);
+    let quorum = (((cfg.clients as f64) * cfg.quorum_frac).ceil() as usize).max(1);
+    let first_publish = arrivals.get(k - 1).copied();
+    let sync_seal = arrivals.get(quorum - 1).copied();
+    (first_publish, sync_seal)
+}
+
+/// Replay one seeded heavy-tail scenario against a real async-mode TCP
+/// [`FlServer`].
+///
+/// Clients upload in virtual-arrival order (schedule delay, ties by
+/// party): the fast body lands first, the tail last — exactly the order a
+/// wall-clock race would produce, minus the nondeterminism.  Stragglers
+/// upload version-0 updates (they trained long ago); body clients upload
+/// the model version current at their turn, so tail updates accrue real
+/// staleness deltas as body-filled buffers publish ahead of them.  The
+/// driver publishes whenever the buffer fills and once at the end for the
+/// partial remainder.
+pub fn run_async_scenario(cfg: &StragglerConfig) -> AsyncReport {
+    let scheds = straggler_schedules(cfg);
+    let (first_publish_ms, sync_quorum_ms) = virtual_clocks(cfg, &scheds);
+    let seq = SCENARIO_SEQ.fetch_add(1, Ordering::Relaxed);
+    let root = std::env::temp_dir().join(format!(
+        "elastiagg-straggler-{}-{}-{}",
+        std::process::id(),
+        cfg.seed,
+        seq
+    ));
+    std::fs::create_dir_all(&root).expect("scenario scratch dir");
+    let nn = NameNode::create(&root, 2, 1, 1 << 20).expect("scenario store");
+    let mut scfg = ServiceConfig::default();
+    scfg.node.memory_bytes = cfg.node_memory;
+    scfg.node.cores = cfg.cores.max(1);
+    scfg.async_mode = true;
+    scfg.async_buffer = cfg.buffer;
+    scfg.staleness_exponent = cfg.staleness_exponent;
+    let svc = AdaptiveService::new(
+        scfg,
+        DfsClient::new(nn),
+        None,
+        ExecutorConfig { executors: 1, cores_per_executor: 2, ..Default::default() },
+    );
+    let update_bytes = (cfg.update_len * 4) as u64;
+    let server = FlServer::new(svc, Arc::new(FedAvg), update_bytes);
+    for s in &scheds {
+        server.registry.join(s.party, 0, 16);
+    }
+    let handle = server.start("127.0.0.1:0").expect("scenario server");
+    let addr = handle.addr().to_string();
+    let ar = server.async_state().expect("async mode on").clone();
+
+    // Virtual-arrival order: delay, ties by party (both schedule-derived).
+    let mut order: Vec<&StragglerSchedule> = scheds.iter().filter(|s| !s.drops_out).collect();
+    order.sort_by_key(|s| (s.delay_ms, s.party));
+
+    let t0 = Instant::now();
+    let mut records: Vec<AsyncClientRecord> = scheds
+        .iter()
+        .map(|s| AsyncClientRecord {
+            party: s.party,
+            dropped: s.drops_out,
+            straggler: s.straggler,
+            replies: Vec::new(),
+        })
+        .collect();
+    let mut publishes = Vec::new();
+    let mut admitted = 0usize;
+    let publish = |server: &FlServer, publishes: &mut Vec<PublishRecord>| {
+        let run = server.run_async_round(Duration::ZERO).expect("async publish");
+        if run.folded > 0 {
+            publishes.push(PublishRecord {
+                version: run.version,
+                folded: run.folded,
+                max_delta: run.max_delta,
+            });
+        }
+    };
+    for s in &order {
+        let mut c = NetClient::connect(&addr).expect("client connect");
+        // Stragglers trained against the genesis model long ago; body
+        // clients are fresh against the version current at their arrival.
+        let version = if s.straggler { 0 } else { ar.version() };
+        let u = SyntheticParty::new(s.party, cfg.seed).make_update(version, cfg.update_len);
+        for _ in 0..=s.retransmits {
+            let kind = match c.call(&Message::UploadNonce { nonce: s.nonce, update: u.clone() }) {
+                Ok(Message::AsyncAck { delta, .. }) => {
+                    admitted += 1;
+                    AsyncReplyKind::Admitted { delta }
+                }
+                Ok(Message::Duplicate { .. }) => AsyncReplyKind::Duplicate,
+                Ok(Message::Late { .. }) => AsyncReplyKind::Stale,
+                _ => AsyncReplyKind::Rejected,
+            };
+            records[s.party as usize].replies.push(kind);
+        }
+        if ar.is_full() {
+            publish(&server, &mut publishes);
+        }
+    }
+    // Final cadence tick: drain the partial remainder, if any.
+    publish(&server, &mut publishes);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let fused_len = ar.model().map(|m| m.len()).unwrap_or(0);
+    let report = AsyncReport {
+        clients: records,
+        publishes,
+        final_version: ar.version(),
+        admitted,
+        drained: ar.drained(),
+        evicted: ar.evicted(),
+        fused_len,
+        first_publish_ms,
+        sync_quorum_ms,
+        wall_s,
+    };
+    drop(handle);
+    let _ = std::fs::remove_dir_all(&root);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_are_a_pure_function_of_the_seed() {
+        let cfg = StragglerConfig::default();
+        assert_eq!(straggler_schedules(&cfg), straggler_schedules(&cfg));
+        let other = StragglerConfig { seed: 43, ..cfg.clone() };
+        assert_ne!(
+            straggler_schedule_digest(&straggler_schedules(&cfg)),
+            straggler_schedule_digest(&straggler_schedules(&other))
+        );
+    }
+
+    #[test]
+    fn latency_is_bimodal_by_construction() {
+        let cfg = StragglerConfig { clients: 2000, ..StragglerConfig::default() };
+        let s = straggler_schedules(&cfg);
+        for c in &s {
+            let band = if c.straggler { cfg.tail_ms } else { cfg.body_ms };
+            assert!((band.0..band.1).contains(&c.delay_ms), "{c:?}");
+        }
+        let tail = s.iter().filter(|c| c.straggler).count() as f64 / 2000.0;
+        assert!((0.20..0.30).contains(&tail), "{tail}");
+        // the bands must not overlap — the whole point of the family
+        assert!(cfg.body_ms.1 <= cfg.tail_ms.0);
+    }
+
+    #[test]
+    fn virtual_clocks_put_sync_in_the_tail() {
+        // With K well below the body count, the async publish clock reads
+        // from the body band; with the quorum past it, the sync clock
+        // reads from the tail band.
+        let cfg = StragglerConfig::default();
+        let s = straggler_schedules(&cfg);
+        let (first, quorum) = virtual_clocks(&cfg, &s);
+        let first = first.expect("≥ K survivors at these knobs");
+        let quorum = quorum.expect("quorum survivors at these knobs");
+        assert!(first < cfg.body_ms.1, "{first}");
+        assert!(quorum >= cfg.tail_ms.0, "{quorum}");
+    }
+
+    #[test]
+    fn digest_covers_the_deterministic_fields_only() {
+        let cfg = StragglerConfig { clients: 6, buffer: 3, ..StragglerConfig::default() };
+        let a = run_async_scenario(&cfg);
+        let mut b = a.clone();
+        b.wall_s = 99.0;
+        assert_eq!(a.digest(), b.digest(), "wall time must not enter the digest");
+        let mut b = a.clone();
+        b.final_version += 1;
+        assert_ne!(a.digest(), b.digest());
+    }
+}

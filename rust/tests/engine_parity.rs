@@ -307,6 +307,88 @@ fn multi_edge_two_tier_round_matches_flat_within_tolerance() {
     }
 }
 
+/// THE async/sync parity bar: an async buffer sized ≥ N admits every
+/// update fresh (δ = 0), and draining it through the staleness-discounted
+/// fold is BIT-IDENTICAL to the sync streaming fold of the same sequence —
+/// exact `assert_eq`, not tolerance.  `s(0) = 1.0` is the literal IEEE
+/// identity, so the discount wrapper cannot perturb a single bit; this is
+/// the exactness boundary DESIGN.md documents for the async mode.
+#[test]
+fn async_zero_discount_drain_is_bit_identical_to_sync_streaming() {
+    use elastiagg::coordinator::AsyncRound;
+    use elastiagg::fusion::{DiscountedFusion, StalenessDiscount};
+    use elastiagg::tensorstore::ModelUpdateView;
+
+    for name in ["fedavg", "iteravg", "clipped"] {
+        let algo = by_name(name).unwrap();
+        for (n, len, seed) in [(13usize, 3_000usize, 81u64), (2, 1, 82), (9, 40_000, 83)] {
+            let us = updates(seed, n, len);
+            let mut sync = StreamingFold::new(algo.as_ref(), 1, MemoryBudget::unbounded()).unwrap();
+            for u in &us {
+                sync.fold(algo.as_ref(), u).unwrap();
+            }
+            let want = sync.finish(algo.as_ref()).unwrap();
+
+            // buffer ≥ N: nothing evicts, every admit observes δ = 0, and
+            // the drain replays exactly the arrival order
+            let ar = AsyncRound::new(n, MemoryBudget::unbounded());
+            for u in &us {
+                let a = ar.offer(u.party, u.party ^ 0x5EED, u.round, u.count, &u.data).unwrap();
+                assert_eq!(a.delta, 0, "a fresh update observes zero staleness");
+            }
+            let entries = ar.drain();
+            assert_eq!(entries.len(), n, "buffer ≥ N drains the whole fleet");
+            // a non-zero exponent, deliberately: s(0) must still be 1.0
+            let curve = StalenessDiscount::fedbuff();
+            let mut afold =
+                StreamingFold::new(algo.as_ref(), 1, MemoryBudget::unbounded()).unwrap();
+            for e in &entries {
+                let d = DiscountedFusion::for_delta(algo.as_ref(), curve, e.delta);
+                let v = ModelUpdateView {
+                    party: e.party,
+                    count: e.count,
+                    round: e.trained_version,
+                    data: std::borrow::Cow::Borrowed(&e.data[..]),
+                };
+                afold.fold_view(&d, &v).unwrap();
+            }
+            let got = afold.finish(algo.as_ref()).unwrap();
+            assert_eq!(got, want, "{name} n={n} len={len}: zero-δ async must be EXACT");
+        }
+    }
+}
+
+/// Staleness-discounted async fold under OUT-OF-ORDER arrival equals the
+/// scalar weighted-mean reference with hand-discounted weights, within the
+/// documented merge tolerance — the wrapper scales weights and nothing
+/// else, regardless of the order updates land in.
+#[test]
+fn staleness_discounted_fold_matches_scalar_reference_out_of_order() {
+    use elastiagg::fusion::{DiscountedFusion, StalenessDiscount};
+
+    let algo = by_name("fedavg").unwrap();
+    let us = updates(91, 10, 2_000);
+    let curve = StalenessDiscount::fedbuff();
+    // party i trained δ_i versions ago; arrival order is scrambled — the
+    // discount attaches to the UPDATE (its δ at ingest), not the position
+    let deltas: [u32; 10] = [3, 0, 2, 1, 0, 4, 1, 0, 2, 5];
+    let order: [usize; 10] = [7, 2, 9, 0, 5, 4, 8, 1, 6, 3];
+
+    let mut f = StreamingFold::new(algo.as_ref(), 1, MemoryBudget::unbounded()).unwrap();
+    for &i in &order {
+        let d = DiscountedFusion::for_delta(algo.as_ref(), curve, deltas[i]);
+        f.fold(&d, &us[i]).unwrap();
+    }
+    let got = f.finish(algo.as_ref()).unwrap();
+
+    let refs: Vec<&ModelUpdate> = order.iter().map(|&i| &us[i]).collect();
+    let weights: Vec<f32> =
+        order.iter().map(|&i| us[i].count * curve.discount(deltas[i])).collect();
+    let want = elastiagg::fusion::avg::weighted_mean(&refs, &weights);
+    all_close(&got, &want, 1e-4, 1e-5)
+        .unwrap_or_else(|e| panic!("discounted out-of-order fold vs scalar reference: {e}"));
+}
+
 #[test]
 fn parity_sweep_shapes_fedavg() {
     // shape sweep crossing the 65536-chunk boundary (multi-chunk XLA path)

@@ -6,8 +6,9 @@ use std::time::Duration;
 
 use elastiagg::coordinator::RoundOutcome;
 use elastiagg::sim::{
-    run_scenario, run_tier_scenario, schedule_digest, schedules, tier_schedules, ReplyKind,
-    ScenarioConfig, TierConfig,
+    run_async_scenario, run_scenario, run_tier_scenario, schedule_digest, schedules,
+    straggler_schedule_digest, straggler_schedules, tier_schedules, AsyncReplyKind, ReplyKind,
+    ScenarioConfig, StragglerConfig, TierConfig,
 };
 
 /// Pick a seed whose *schedule* (a pure function of the seed) has the
@@ -316,6 +317,142 @@ fn clean_two_tier_round_completes_with_member_counted_quorum() {
         .edges
         .iter()
         .all(|e| e.relay_folded == cfg.clients_per_edge));
+}
+
+/// Pick a seed whose STRAGGLER schedule has the shape a test needs.
+fn straggler_seed_with<F: Fn(&StragglerConfig) -> bool>(
+    base: StragglerConfig,
+    want: F,
+) -> StragglerConfig {
+    (0..256u64)
+        .map(|i| StragglerConfig { seed: base.seed + i, ..base.clone() })
+        .find(|c| want(c))
+        .expect("some seed in the sweep satisfies the straggler scenario shape")
+}
+
+/// The async acceptance scenario: a heavy-tail fleet (fast body, slow
+/// stragglers, churn, duplicates) against the REAL async-mode TCP server.
+/// The async buffer must publish on the body's arrivals while a sync
+/// quorum over the SAME schedule would still be waiting on the tail;
+/// every buffered update folds exactly once; stragglers fold WITH a
+/// non-zero staleness delta instead of being rejected; and the whole
+/// outcome digest is bit-stable per seed.
+#[test]
+fn async_publishes_while_sync_still_waits_on_stragglers() {
+    let cfg = straggler_seed_with(StragglerConfig::default(), |c| {
+        let s = straggler_schedules(c);
+        let body: usize = s.iter().filter(|c| !c.drops_out && !c.straggler).count();
+        let tail: usize = s.iter().filter(|c| !c.drops_out && c.straggler).count();
+        let dups = s.iter().filter(|c| !c.drops_out && c.retransmits > 0).count();
+        let quorum = ((c.clients as f64) * c.quorum_frac).ceil() as usize;
+        // the body alone fills the first buffer, the quorum needs the tail,
+        // and both churn and duplicates are actually present
+        body >= c.buffer
+            && tail >= 1
+            && dups >= 1
+            && body < quorum
+            && body + tail >= quorum
+            && body + tail < c.clients
+    });
+    let scheds = straggler_schedules(&cfg);
+    let survivors = scheds.iter().filter(|s| !s.drops_out).count();
+
+    let report = run_async_scenario(&cfg);
+
+    // the round-clock separation: async first publishes off the fast body,
+    // sync would seal only when the quorum-th arrival lands in the tail
+    let first = report.first_publish_ms.expect("≥ K survivors");
+    let seal = report.sync_quorum_ms.expect("quorum survivors");
+    assert!(first < cfg.body_ms.1, "first publish reads from the body band: {first}");
+    assert!(seal >= cfg.tail_ms.0, "the sync quorum clock sits in the tail: {seal}");
+    assert!(first < seal, "async publishes while sync still waits");
+
+    // exactly-once conservation: every admitted frame drains into exactly
+    // one publish, nothing is evicted (the driver publishes on full),
+    // nothing is dropped silently
+    assert_eq!(report.admitted, survivors, "each survivor admitted exactly once");
+    assert_eq!(report.drained, report.admitted as u64, "every buffered update folds once");
+    let folded: usize = report.publishes.iter().map(|p| p.folded).sum();
+    assert_eq!(folded, report.admitted, "publish sizes account for every admit");
+    assert_eq!(report.evicted, 0, "publish-on-full never needs an eviction");
+    assert_eq!(report.final_version as usize, report.publishes.len());
+    assert!(report.publishes.len() >= 2, "the tail forces at least a second publish");
+    assert_eq!(report.fused_len, cfg.update_len, "the last publish carries the model");
+
+    // per-client reply typing: survivors admit, retransmits absorb as
+    // duplicates, churned clients never speak; stragglers fold WITH a
+    // positive staleness delta — never rejected as late
+    for (rec, sched) in report.clients.iter().zip(&scheds) {
+        if rec.dropped {
+            assert!(rec.replies.is_empty(), "party {} churned out", rec.party);
+            continue;
+        }
+        match rec.replies[0] {
+            AsyncReplyKind::Admitted { delta } => {
+                if sched.straggler {
+                    assert!(delta >= 1, "straggler {} folds stale, not rejected", rec.party);
+                } else {
+                    assert_eq!(delta, 0, "body client {} is fresh", rec.party);
+                }
+            }
+            other => panic!("party {} first frame must admit, got {other:?}", rec.party),
+        }
+        for dup in &rec.replies[1..] {
+            assert_eq!(*dup, AsyncReplyKind::Duplicate, "party {}", rec.party);
+        }
+    }
+
+    // bit-identical digest on a full second run of the same seed
+    let again = run_async_scenario(&cfg);
+    assert_eq!(report.digest(), again.digest(), "async digest must be bit-stable per seed");
+}
+
+/// Property: different straggler seeds produce different schedules
+/// (pairwise) AND different run digests — the async scenario axis must
+/// not collapse.
+#[test]
+fn different_straggler_seeds_produce_different_outcomes() {
+    let mut digests = Vec::new();
+    for seed in 0..32u64 {
+        let cfg = StragglerConfig { seed, ..StragglerConfig::default() };
+        digests.push(straggler_schedule_digest(&straggler_schedules(&cfg)));
+    }
+    let mut unique = digests.clone();
+    unique.sort_unstable();
+    unique.dedup();
+    assert_eq!(unique.len(), digests.len(), "straggler schedule digests must be distinct");
+
+    // full-run digests differ too (small fleets keep this cheap)
+    let small = StragglerConfig { clients: 8, buffer: 3, ..StragglerConfig::default() };
+    let a = run_async_scenario(&StragglerConfig { seed: 1, ..small.clone() });
+    let b = run_async_scenario(&StragglerConfig { seed: 2, ..small });
+    assert_ne!(a.digest(), b.digest(), "different seeds must produce different runs");
+}
+
+/// A buffer far smaller than the fleet cycles through many publishes and
+/// still conserves every update — the multi-publish exactly-once bar.
+#[test]
+fn tiny_buffer_conserves_every_update_across_many_publishes() {
+    let cfg = straggler_seed_with(
+        StragglerConfig { clients: 12, buffer: 2, ..StragglerConfig::default() },
+        |c| {
+            let s = straggler_schedules(c);
+            s.iter().filter(|c| !c.drops_out).count() >= 7
+        },
+    );
+    let survivors = straggler_schedules(&cfg).iter().filter(|s| !s.drops_out).count();
+    let report = run_async_scenario(&cfg);
+    assert_eq!(report.admitted, survivors);
+    assert_eq!(report.drained, survivors as u64);
+    let folded: usize = report.publishes.iter().map(|p| p.folded).sum();
+    assert_eq!(folded, survivors, "no update lost or double-folded across publishes");
+    assert!(
+        report.publishes.len() >= survivors / 2,
+        "a K=2 buffer must publish roughly every other admit: {} publishes for {survivors}",
+        report.publishes.len()
+    );
+    assert!(report.publishes.iter().all(|p| p.folded <= cfg.buffer));
+    assert_eq!(report.digest(), run_async_scenario(&cfg).digest());
 }
 
 /// Zero-fault scenario completes with the full fleet — and completes
