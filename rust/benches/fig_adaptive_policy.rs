@@ -83,6 +83,7 @@ fn main() {
             expected_participation: 1.0, // this trace has no dropout
             async_buffer: 0,             // sync candidates only
             staleness_exponent: 0.5,
+            ..PlannerConfig::default() // dense-f32 uplinks
         },
     );
     let mut scaler = Autoscaler::new(

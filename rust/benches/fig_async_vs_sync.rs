@@ -55,6 +55,7 @@ fn planner(policy: DispatchPolicy, buffer: usize, participation: f64) -> Dispatc
             expected_participation: participation,
             async_buffer: buffer,
             staleness_exponent: 0.5,
+            ..PlannerConfig::default() // dense-f32 uplinks
         },
     )
 }

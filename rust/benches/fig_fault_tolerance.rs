@@ -154,6 +154,7 @@ fn main() {
                 expected_participation: 1.0,
                 async_buffer: 0,
                 staleness_exponent: 0.5,
+                ..PlannerConfig::default() // dense-f32 uplinks
             },
         )
     };

@@ -145,6 +145,7 @@ fn main() {
                 expected_participation: 1.0,
                 async_buffer: 0, // flat-vs-tree only: no async candidate
                 staleness_exponent: 0.5,
+                ..PlannerConfig::default() // dense-f32 uplinks
             },
         )
     };
@@ -212,6 +213,7 @@ fn main() {
     let flat_s = t0.elapsed().as_secs_f64();
     let flat_bytes = flat_handle.bytes_in.load(std::sync::atomic::Ordering::Relaxed);
     assert_eq!(flat_run.outcome, RoundOutcome::Complete);
+    println!("  flat   {}", flat_run.log_line());
     let flat_fused = flat_run.result.unwrap().0;
 
     // 2-tier: 2 relays × 16 clients each, one partial per relay to the root
@@ -277,6 +279,7 @@ fn main() {
     let hier_bytes = root_handle.bytes_in.load(std::sync::atomic::Ordering::Relaxed);
     assert_eq!(hier_run.outcome, RoundOutcome::Complete);
     assert_eq!(hier_run.folded, N, "the root counted cohort members");
+    println!("  2-tier {}", hier_run.log_line());
     let hier_fused = hier_run.result.unwrap().0;
     all_close(&flat_fused, &hier_fused, 1e-4, 1e-5).expect("flat/2-tier parity");
 

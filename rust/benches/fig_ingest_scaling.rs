@@ -17,11 +17,15 @@
 //!   in-flight frame under a sequential driver;
 //! * part 3 runs a real TCP round through `FlServer` and prints the
 //!   per-round `bytes_in`/`bytes_out` counters the planner's arrival-span
-//!   calibration consumes.
+//!   calibration consumes, plus the borrowed-vs-copied decode tallies
+//!   (zero-copy health of the wire path).
+//!
+//! Machine-readable output: `BENCH_fig_ingest_scaling.json`.
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use elastiagg::bench::{BenchJson, RoundRecord};
 use elastiagg::client::SyntheticParty;
 use elastiagg::config::ServiceConfig;
 use elastiagg::coordinator::{AdaptiveService, RoundState, WorkloadClass};
@@ -33,8 +37,9 @@ use elastiagg::memsim::MemoryBudget;
 use elastiagg::metrics::Breakdown;
 use elastiagg::net::{Message, NetClient};
 use elastiagg::server::FlServer;
-use elastiagg::tensorstore::ModelUpdate;
+use elastiagg::tensorstore::{decode_stats, ModelUpdate};
 use elastiagg::util::fmt;
+use elastiagg::util::json::Json;
 use elastiagg::util::prop::all_close;
 use elastiagg::util::rng::Rng;
 
@@ -93,6 +98,10 @@ fn main() {
     let lanes = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     println!("\n[measured] {UPDATE_LEN}-param (256 KB) updates, FedAvg, S={lanes} lanes:");
 
+    let mut out = BenchJson::new("fig_ingest_scaling");
+    out.meta("lanes", Json::num(lanes as f64));
+    out.meta("update_len", Json::num(UPDATE_LEN as f64));
+
     // ---- part 1: throughput sweep over concurrent parties --------------
     let mut t = fmt::Table::new(&[
         "parties",
@@ -138,6 +147,20 @@ fn main() {
             fmt::bytes(lock_peak),
             fmt::bytes(shard_peak),
         ]);
+        out.round(RoundRecord {
+            round: parties as u32,
+            label: format!("lock(parties={parties})"),
+            latency_s: lock_s / reps as f64,
+            peak_bytes: lock_peak,
+            ..Default::default()
+        });
+        out.round(RoundRecord {
+            round: parties as u32,
+            label: format!("sharded(parties={parties},lanes={lanes})"),
+            latency_s: shard_s / reps as f64,
+            peak_bytes: shard_peak,
+            ..Default::default()
+        });
     }
     t.print();
 
@@ -203,6 +226,7 @@ fn main() {
         let mut c = NetClient::connect(&addr).unwrap();
         c.call(&Message::Register { party: p }).unwrap();
     }
+    let decode_mark = decode_stats();
     let (fused, report) = std::thread::scope(|s| {
         let aggregator = s.spawn(|| server.run_round(parties, std::time::Duration::from_secs(30)));
         // give the aggregator a beat to reopen the round as Streaming
@@ -243,7 +267,32 @@ fn main() {
     // model fetch dominates the reply bytes (≥ one 256 KB frame out)
     assert!(bytes_in >= parties as u64 * UPDATE_BYTES, "{bytes_in}");
     assert!(bytes_out >= UPDATE_BYTES, "{bytes_out}");
+    // zero-copy health: each upload decoded exactly once on ingest, and
+    // dense-f32 wire payloads should borrow rather than copy
+    let decode = decode_stats().since(decode_mark);
+    println!(
+        "[measured] wire decodes: borrowed={} copied={} (dense f32 uploads borrow)",
+        decode.borrowed, decode.copied
+    );
+    assert!(
+        decode.borrowed + decode.copied >= parties as u64,
+        "every upload decodes once: borrowed={} copied={}",
+        decode.borrowed,
+        decode.copied
+    );
+    out.meta("decode_borrowed", Json::num(decode.borrowed as f64));
+    out.meta("decode_copied", Json::num(decode.copied as f64));
+    out.round(RoundRecord {
+        round: 100,
+        label: format!("tcp(parties={parties},engine={})", report.engine),
+        peak_bytes: bytes_in,
+        ..Default::default()
+    });
     let _ = std::fs::remove_dir_all(&root);
 
+    match out.write() {
+        Ok(p) => println!("machine-readable log: {}", p.display()),
+        Err(e) => println!("bench json not written: {e}"),
+    }
     println!("\nfigI OK — sharded ingest scales past the global lock at identical output");
 }

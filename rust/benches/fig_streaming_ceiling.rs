@@ -8,10 +8,13 @@
 //! from the memory accountant's high-water mark, latency as ingest+fold
 //! through publish — and then demonstrates the ceiling lift: a party count
 //! that OOMs buffered ingest under a small budget completes streaming.
+//!
+//! Machine-readable output: `BENCH_fig_streaming_ceiling.json`.
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use elastiagg::bench::{BenchJson, RoundRecord};
 use elastiagg::coordinator::{RoundError, RoundState, WorkloadClass};
 use elastiagg::engine::{AggregationEngine, SerialEngine};
 use elastiagg::fusion::FedAvg;
@@ -19,6 +22,7 @@ use elastiagg::memsim::MemoryBudget;
 use elastiagg::metrics::Breakdown;
 use elastiagg::tensorstore::ModelUpdate;
 use elastiagg::util::fmt;
+use elastiagg::util::json::Json;
 use elastiagg::util::rng::Rng;
 
 const UPDATE_LEN: usize = 25_000; // 100 KB updates
@@ -76,6 +80,9 @@ fn main() {
 
     let mut rng = Rng::new(17);
     println!("\n[measured] {UPDATE_LEN}-param (100 KB) updates, FedAvg:");
+    let mut out = BenchJson::new("fig_streaming_ceiling");
+    out.meta("update_len", Json::num(UPDATE_LEN as f64));
+    out.meta("lanes", Json::num(4.0));
     let mut t = fmt::Table::new(&[
         "parties",
         "buffered peak",
@@ -110,6 +117,20 @@ fn main() {
             fmt::secs(buf_s),
             fmt::secs(str_s),
         ]);
+        out.round(RoundRecord {
+            round: parties as u32,
+            label: format!("buffered(parties={parties})"),
+            latency_s: buf_s,
+            peak_bytes: buf_peak,
+            ..Default::default()
+        });
+        out.round(RoundRecord {
+            round: parties as u32,
+            label: format!("streaming(parties={parties})"),
+            latency_s: str_s,
+            peak_bytes: str_peak,
+            ..Default::default()
+        });
     }
     t.print();
     assert!(
@@ -158,6 +179,17 @@ fn main() {
         fmt::bytes(budget_bytes)
     );
     assert!(budget.high_water() <= (4 + 1) * UPDATE_BYTES);
+    out.meta("buffered_ceiling", Json::num(ceiling as f64));
+    out.round(RoundRecord {
+        round: parties as u32,
+        label: format!("ceiling-lift(streamed={parties},buffered_ceiling={ceiling})"),
+        peak_bytes: budget.high_water(),
+        ..Default::default()
+    });
 
+    match out.write() {
+        Ok(p) => println!("machine-readable log: {}", p.display()),
+        Err(e) => println!("bench json not written: {e}"),
+    }
     println!("\nfigS OK — streaming holds the round at S*O(C) and lifts the party ceiling");
 }

@@ -16,7 +16,7 @@ pub use trainer::LocalTrainer;
 use crate::dfs::DfsClient;
 use crate::metrics::Breakdown;
 use crate::net::{Message, NetClient, ProtoError};
-use crate::tensorstore::ModelUpdate;
+use crate::tensorstore::{codec, Encoding, ModelUpdate};
 use crate::util::rng::Rng;
 
 /// How a party ships its update.
@@ -74,6 +74,30 @@ impl SyntheticParty {
                 dfs.put_update(u, bd).map_err(|e| ShipError::Net(e.to_string()))?;
                 Ok(false)
             }
+        }
+    }
+
+    /// Ship an update as a compression-encoded frame over TCP
+    /// (`Message::UploadEnc`): the client picks the encoding per upload —
+    /// `dense_f32` keeps the lossless zero-copy path, `f16`/`int8`/`topk`
+    /// trade bounded error for a smaller frame on a constrained edge link.
+    /// `nonce` carries the retransmission-dedup contract of the nonce
+    /// upload path; a `Duplicate` reply is an absorbed retransmit, not an
+    /// error.  Returns whether the server asked for a DFS redirect.
+    pub fn ship_encoded(
+        &self,
+        u: &ModelUpdate,
+        encoding: Encoding,
+        nonce: u64,
+        addr: &str,
+    ) -> Result<bool, ShipError> {
+        let frame = codec::encode_update(u, encoding);
+        let mut c = NetClient::connect(addr).map_err(|e| ShipError::Net(e.to_string()))?;
+        match c.call(&Message::UploadEnc { nonce, frame }).map_err(ShipError::Proto)? {
+            Message::Ack { redirect_to_dfs } => Ok(redirect_to_dfs),
+            Message::Duplicate { .. } => Ok(false),
+            Message::Error(e) => Err(ShipError::Server(e)),
+            other => Err(ShipError::Server(format!("unexpected reply {other:?}"))),
         }
     }
 }

@@ -38,6 +38,12 @@ pub struct CostModel {
     pub dfs_write_bps: f64,
     /// Wire-format decode throughput.
     pub decode_bps: f64,
+    /// Dequantize throughput for compressed update payloads (f16 unpack /
+    /// int8 scale-and-shift / top-k scatter), in *payload* bytes/s: what
+    /// the receiver pays to turn a compressed frame into the dense f32s
+    /// the fold consumes.  Dense-f32 frames skip this entirely (zero-copy
+    /// borrow).
+    pub dequant_bps: f64,
     /// Per-task scheduling overhead (Spark task launch ≈ 5–20 ms).
     pub task_overhead_s: f64,
     /// Executor container spin-up (paper: 10 containers < 30 s).
@@ -65,6 +71,7 @@ impl CostModel {
             dfs_read_bps: 400e6,
             dfs_write_bps: 250e6,
             decode_bps: 1.5e9,
+            dequant_bps: 2.5e9,
             task_overhead_s: 0.01,
             executor_startup_s: 2.5,
             xla_launch_s: 5e-4,
@@ -127,6 +134,20 @@ impl CostModel {
         }
         m.decode_bps = (4.0 * buf.len() as f64) / t0.elapsed().as_secs_f64().max(1e-6);
 
+        // Dequantize throughput: int8 payload -> dense f32, the per-byte
+        // cost the encoding-aware planner charges for compressed frames.
+        let frame = crate::tensorstore::codec::encode_update(
+            &u,
+            crate::tensorstore::Encoding::QuantI8,
+        );
+        let ev = crate::tensorstore::EncodedUpdateView::decode(&frame).expect("own frame");
+        let payload = crate::tensorstore::Encoding::QuantI8.payload_bytes(1 << 20) as f64;
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            let _ = ev.decode_data();
+        }
+        m.dequant_bps = (4.0 * payload) / t0.elapsed().as_secs_f64().max(1e-6);
+
         m
     }
 }
@@ -150,5 +171,6 @@ mod tests {
         assert!(m.dfs_read_bps > 1e6, "read {}", m.dfs_read_bps);
         assert!(m.dfs_write_bps > 1e6, "write {}", m.dfs_write_bps);
         assert!(m.decode_bps > 1e6, "decode {}", m.decode_bps);
+        assert!(m.dequant_bps > 1e6, "dequant {}", m.dequant_bps);
     }
 }

@@ -22,6 +22,7 @@ pub use calibrate::CostModel;
 
 use crate::config::ClusterSpec;
 use crate::metrics::Breakdown;
+use crate::tensorstore::Encoding;
 
 /// Which single-node engine a virtual run models (Figs 1–3, 5–6).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -146,6 +147,46 @@ impl VirtualCluster {
         ingest.max(fold) + drain
     }
 
+    /// Encoding-aware [`VirtualCluster::streaming_time`]: the same
+    /// overlap model with the *wire* legs priced at the encoding's
+    /// per-update byte count and a dequantize term added to the node-side
+    /// lane work.  `update_bytes` stays the DENSE size — the accumulator
+    /// always folds f32, so the fold-arithmetic and drain terms are
+    /// unchanged; compression shrinks the ingest span and the wire-decode
+    /// term, and pays `payload/dequant_bps` to rematerialise the floats.
+    /// `DenseF32` delegates exactly (bit-identical price) to
+    /// [`streaming_time`](VirtualCluster::streaming_time), so every
+    /// existing pin on the dense model is untouched.
+    pub fn streaming_time_enc(
+        &self,
+        update_bytes: u64,
+        n: usize,
+        cores: usize,
+        lanes: usize,
+        enc: Encoding,
+    ) -> f64 {
+        if enc.is_dense_f32() {
+            return self.streaming_time(update_bytes, n, cores, lanes);
+        }
+        if n == 0 {
+            return 0.0;
+        }
+        let elems = update_bytes / 4;
+        let wire_per = enc.payload_bytes(elems) as f64;
+        let ingest = wire_per * n as f64 / self.spec.client_link_bps;
+        let lanes = lanes.clamp(1, cores.max(1));
+        let dense_total = update_bytes as f64 * n as f64;
+        let wire_total = wire_per * n as f64;
+        let dequant_total = enc.dequant_bytes(elems) as f64 * n as f64;
+        let per_lane = dense_total / self.cost.fuse_bps
+            + self.cost.decode_bytes(wire_total)
+            + dequant_total / self.cost.dequant_bps;
+        let speedup = (lanes as f64).min(self.cost.parallel_bw_cap);
+        let fold = per_lane / speedup;
+        let drain = (lanes as f64 + 1.0) * update_bytes as f64 / self.cost.fuse_bps;
+        ingest.max(fold) + drain
+    }
+
     /// [`VirtualCluster::streaming_time`] at an expected-participation
     /// factor `p ∈ (0, 1]`: of `n` registered parties only ~`n·p` deliver
     /// an upload (dropouts, stragglers past the round deadline), so the
@@ -200,6 +241,44 @@ impl VirtualCluster {
         base + extra_publishes * drain
     }
 
+    /// Encoding-aware [`VirtualCluster::async_publish_time`]: a buffered
+    /// async publish IS a `k`-sized streaming fold, so it inherits the
+    /// encoding's wire/dequantize terms the same way.  `DenseF32`
+    /// delegates exactly to the dense entry.
+    pub fn async_publish_time_enc(
+        &self,
+        update_bytes: u64,
+        k: usize,
+        cores: usize,
+        lanes: usize,
+        enc: Encoding,
+    ) -> f64 {
+        self.streaming_time_enc(update_bytes, k.max(1), cores, lanes, enc)
+    }
+
+    /// Encoding-aware [`VirtualCluster::async_occupancy`]: the base fold
+    /// work prices at the encoding; the per-publish drain is a dense O(C)
+    /// merge either way (the accumulator always holds f32).
+    pub fn async_occupancy_enc(
+        &self,
+        update_bytes: u64,
+        eff: usize,
+        k: usize,
+        cores: usize,
+        lanes: usize,
+        enc: Encoding,
+    ) -> f64 {
+        if eff == 0 {
+            return 0.0;
+        }
+        let k = k.clamp(1, eff);
+        let base = self.streaming_time_enc(update_bytes, eff, cores, lanes, enc);
+        let extra_publishes = eff.div_ceil(k).saturating_sub(1) as f64;
+        let lanes_f = lanes.clamp(1, cores.max(1)) as f64;
+        let drain = (lanes_f + 1.0) * update_bytes as f64 / self.cost.fuse_bps;
+        base + extra_publishes * drain
+    }
+
     /// Virtual phase split of a 2-tier hierarchical round over `edges`
     /// edge aggregators: `(edge_s, root_s)`.
     ///
@@ -239,6 +318,49 @@ impl VirtualCluster {
         (edge_s, root_s)
     }
 
+    /// Encoding-aware 2-tier phase split.  The asymmetry is structural:
+    /// cohort clients may ship compressed frames to their edge (the edge
+    /// phase prices at the encoding's bytes + dequantize), but every
+    /// relay dequantizes at ingest and forwards a DENSE f32 partial — the
+    /// root phase is always the dense model.  Compression therefore
+    /// shrinks the *flat* plan's whole ingest span but only the
+    /// hierarchy's edge phase, so the flat-beats-hierarchy region grows:
+    /// the root-ingest crossover moves to LARGER fleets (the shift
+    /// `fig_encoding_throughput` pins).
+    pub fn hierarchical_breakdown_enc(
+        &self,
+        update_bytes: u64,
+        n: usize,
+        cores: usize,
+        lanes: usize,
+        edges: usize,
+        enc: Encoding,
+    ) -> (f64, f64) {
+        if n == 0 {
+            return (0.0, 0.0);
+        }
+        let edges = edges.clamp(1, n);
+        let cohort = n.div_ceil(edges);
+        let edge_s = self.streaming_time_enc(update_bytes, cohort, cores, lanes, enc);
+        let root_s =
+            self.streaming_time(update_bytes, edges, cores, lanes) + self.cost.tier_sync_s;
+        (edge_s, root_s)
+    }
+
+    /// End-to-end latency of the encoding-aware 2-tier round.
+    pub fn hierarchical_time_enc(
+        &self,
+        update_bytes: u64,
+        n: usize,
+        cores: usize,
+        lanes: usize,
+        edges: usize,
+        enc: Encoding,
+    ) -> f64 {
+        let (e, r) = self.hierarchical_breakdown_enc(update_bytes, n, cores, lanes, edges, enc);
+        e + r
+    }
+
     /// End-to-end latency of the 2-tier round: the phases are sequential
     /// (the root's ingest IS the relays' output).
     pub fn hierarchical_time(
@@ -257,6 +379,16 @@ impl VirtualCluster {
     /// (5-byte frame header + 28-byte update header + data + crc).
     pub fn flat_root_bytes(&self, update_bytes: u64, n: usize) -> u64 {
         n as u64 * (update_bytes + 37)
+    }
+
+    /// [`VirtualCluster::flat_root_bytes`] under a wire encoding: `n`
+    /// encoded frames (5-byte frame header + 8-byte nonce + the codec's
+    /// 40-byte header + payload + crc).  `DenseF32` carries ~20 bytes/frame
+    /// more header than the plain upload format; every compressed encoding
+    /// shrinks the total by its payload ratio.
+    pub fn flat_root_bytes_enc(&self, update_bytes: u64, n: usize, enc: Encoding) -> u64 {
+        let elems = update_bytes / 4;
+        n as u64 * (13 + enc.wire_bytes(elems))
     }
 
     /// Wire bytes the ROOT ingests in a 2-tier round: one partial frame
@@ -534,6 +666,103 @@ mod tests {
         assert!(e > 0.0 && r > v.cost.tier_sync_s);
         assert_eq!(e + r, v.hierarchical_time(u, 64, 64, 64, 4));
         assert_eq!(v.hierarchical_time(u, 0, 64, 64, 4), 0.0);
+    }
+
+    #[test]
+    fn dense_f32_encoding_prices_exactly_like_the_dense_model() {
+        // The encoding-aware entries must not perturb a single existing
+        // pin: DenseF32 is bit-identical to the unencoded expressions.
+        let v = vc();
+        let u = (4.6 * 1024.0 * 1024.0) as u64;
+        for n in [1usize, 8, 64, 1024, 30_000] {
+            assert_eq!(
+                v.streaming_time_enc(u, n, 64, 64, Encoding::DenseF32),
+                v.streaming_time(u, n, 64, 64)
+            );
+            assert_eq!(
+                v.hierarchical_time_enc(u, n, 64, 64, 4, Encoding::DenseF32),
+                v.hierarchical_time(u, n, 64, 64, 4)
+            );
+            assert_eq!(
+                v.async_publish_time_enc(u, n, 64, 64, Encoding::DenseF32),
+                v.async_publish_time(u, n, 64, 64)
+            );
+            assert_eq!(
+                v.async_occupancy_enc(u, n, 64.min(n), 64, 64, Encoding::DenseF32),
+                v.async_occupancy(u, n, 64.min(n), 64, 64)
+            );
+        }
+    }
+
+    #[test]
+    fn compressed_encodings_shrink_the_flat_span_and_pay_dequant() {
+        let v = vc();
+        let u = (4.6 * 1024.0 * 1024.0) as u64;
+        let n = 10_000;
+        let dense = v.streaming_time_enc(u, n, 64, 64, Encoding::DenseF32);
+        let f16 = v.streaming_time_enc(u, n, 64, 64, Encoding::DenseF16);
+        let i8t = v.streaming_time_enc(u, n, 64, 64, Encoding::QuantI8);
+        let topk = v.streaming_time_enc(u, n, 64, 64, Encoding::TopK { permille: 100 });
+        // ingest-bound geometry: halving the bytes ≈ halves the round
+        assert!(f16 < dense * 0.6, "{f16} vs {dense}");
+        assert!(i8t < f16, "{i8t} vs {f16}");
+        assert!(topk < i8t, "{topk} vs {i8t}");
+        // the dequant term is real: on an infinitely fast link a
+        // pathological dequantizer makes the compressed fold slower than
+        // dense, while the dense price does not move at all
+        let spec = crate::config::ClusterSpec { client_link_bps: 1e15, ..Default::default() };
+        let fast = VirtualCluster::new(spec.clone(), CostModel::nominal());
+        let mut slow_dq = CostModel::nominal();
+        slow_dq.dequant_bps = 1e6;
+        let fast_slow = VirtualCluster::new(spec, slow_dq);
+        assert!(
+            fast_slow.streaming_time_enc(u, n, 64, 1, Encoding::QuantI8)
+                > fast.streaming_time_enc(u, n, 64, 1, Encoding::QuantI8),
+            "a slower dequantizer must price compressed folds higher"
+        );
+        assert!(
+            fast_slow.streaming_time_enc(u, n, 64, 1, Encoding::QuantI8)
+                > fast_slow.streaming_time(u, n, 64, 1),
+            "with dequant dominant, compressed must cost more than dense"
+        );
+        assert_eq!(
+            fast_slow.streaming_time(u, n, 64, 1),
+            fast.streaming_time(u, n, 64, 1),
+            "the dense path never pays dequant"
+        );
+        // byte model: compressed flat root ingest shrinks accordingly
+        let dense_b = v.flat_root_bytes_enc(u, n, Encoding::DenseF32);
+        let f16_b = v.flat_root_bytes_enc(u, n, Encoding::DenseF16);
+        assert!(f16_b < dense_b * 6 / 10);
+        assert!(dense_b >= v.flat_root_bytes(u, n), "codec header overhead is visible");
+    }
+
+    #[test]
+    fn compression_moves_the_hierarchy_crossover_to_larger_fleets() {
+        // Compression shrinks every client→aggregator leg but the
+        // relay→root partials stay dense f32, so the fixed root phase +
+        // tier barrier take longer to amortise: the smallest fleet where
+        // the 2-tier plan wins must grow vs dense.
+        let v = vc();
+        let u = (4.6 * 1024.0 * 1024.0) as u64;
+        let crossover = |enc: Encoding| -> usize {
+            for n in 2..100_000usize {
+                let flat = v.streaming_time_enc(u, n, 64, 64, enc);
+                let hier = v.hierarchical_time_enc(u, n, 64, 64, 4, enc);
+                if hier < flat {
+                    return n;
+                }
+            }
+            usize::MAX
+        };
+        let dense_x = crossover(Encoding::DenseF32);
+        let f16_x = crossover(Encoding::DenseF16);
+        let topk_x = crossover(Encoding::TopK { permille: 100 });
+        // the dense crossover matches the fig_hierarchical_scaling pin
+        // (hier wins by 32 parties, loses at 8)
+        assert!(dense_x > 8 && dense_x <= 32, "{dense_x}");
+        assert!(f16_x > dense_x, "f16 {f16_x} !> dense {dense_x}");
+        assert!(topk_x > f16_x, "topk {topk_x} !> f16 {f16_x}");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 pub mod models;
 
 use crate::planner::DispatchPolicy;
+use crate::tensorstore::Encoding;
 use crate::util::json::Json;
 use std::path::Path;
 
@@ -161,6 +162,12 @@ pub struct ServiceConfig {
     /// Publish cadence in seconds: an async round publishes when the
     /// buffer fills OR this much time elapsed, whichever first.
     pub async_cadence_s: f64,
+    /// Wire encoding clients are asked to upload with and the planner
+    /// prices rounds at: `dense_f32` (lossless, zero-copy — the default),
+    /// `f16`, `int8`, or `topk[:permille]`.  Compressed encodings shrink
+    /// every client→aggregator frame; relay→root partials stay dense f32
+    /// regardless.
+    pub encoding: Encoding,
 }
 
 impl Default for ServiceConfig {
@@ -188,6 +195,7 @@ impl Default for ServiceConfig {
             async_buffer: 64,
             staleness_exponent: 0.5,
             async_cadence_s: 5.0,
+            encoding: Encoding::DenseF32,
         }
     }
 }
@@ -295,6 +303,9 @@ impl ServiceConfig {
                 c.async_cadence_s = v.min(31_536_000.0);
             }
         }
+        if let Some(e) = j.get("encoding").as_str().and_then(Encoding::parse) {
+            c.encoding = e;
+        }
         c
     }
 
@@ -333,6 +344,7 @@ impl ServiceConfig {
             ("async_buffer", Json::num(self.async_buffer as f64)),
             ("staleness_exponent", Json::num(self.staleness_exponent)),
             ("async_cadence_s", Json::num(self.async_cadence_s)),
+            ("encoding", Json::str(&self.encoding.token())),
         ])
     }
 }
@@ -470,6 +482,21 @@ mod tests {
         assert_eq!(c4.async_cadence_s, 5.0);
         let j = Json::parse(r#"{"async_cadence_s": 1e20}"#).unwrap();
         assert_eq!(ServiceConfig::from_json(&j).async_cadence_s, 31_536_000.0);
+    }
+
+    #[test]
+    fn encoding_knob_roundtrips_and_defaults_dense() {
+        let c = ServiceConfig::default();
+        assert_eq!(c.encoding, Encoding::DenseF32);
+        let mut c2 = c.clone();
+        c2.encoding = Encoding::TopK { permille: 250 };
+        let c3 = ServiceConfig::from_json(&c2.to_json());
+        assert_eq!(c3.encoding, Encoding::TopK { permille: 250 });
+        let j = Json::parse(r#"{"encoding": "int8"}"#).unwrap();
+        assert_eq!(ServiceConfig::from_json(&j).encoding, Encoding::QuantI8);
+        // unknown tokens keep the lossless default
+        let j = Json::parse(r#"{"encoding": "zip"}"#).unwrap();
+        assert_eq!(ServiceConfig::from_json(&j).encoding, Encoding::DenseF32);
     }
 
     #[test]

@@ -121,6 +121,7 @@ impl AdaptiveService {
             PricingModel {
                 node_usd_per_s: cfg.node_usd_per_s,
                 executor_usd_per_s: cfg.executor_usd_per_s,
+                ..PricingModel::default()
             },
             PlannerConfig {
                 policy: cfg.policy,
@@ -138,6 +139,9 @@ impl AdaptiveService {
                 // actually running the FedBuff ingest mode
                 async_buffer: if cfg.async_mode { cfg.async_buffer.max(1) } else { 0 },
                 staleness_exponent: cfg.staleness_exponent,
+                // the fleet's configured uplink encoding prices every
+                // ingest-coupled candidate
+                encoding: cfg.encoding,
             },
         );
         let autoscaler = Autoscaler::new(

@@ -202,9 +202,11 @@ impl StreamingFold {
                 s.spawn(move || {
                     let src = &data[r.clone()];
                     if identity {
-                        for (o, x) in slot.iter_mut().zip(src) {
-                            *o += w * x;
-                        }
+                        // the same dispatched kernel as the serial path's
+                        // `add_weighted`, applied to this disjoint slice —
+                        // SIMD lanes and chunking compose, and per element
+                        // it is still the scalar-identical `sum += w * x`
+                        crate::fusion::kernels::accumulate(slot, src, w);
                     } else {
                         for (o, x) in slot.iter_mut().zip(src) {
                             *o += w * algo.transform(*x);

@@ -1,0 +1,316 @@
+//! Runtime-dispatched fold kernels: the one hot loop behind every fold.
+//!
+//! Both entry points compute strictly element-wise IEEE f32 arithmetic —
+//! [`accumulate`] is `s[i] += w * x[i]`, [`add`] is `s[i] += x[i]` — so a
+//! vectorised lane that evaluates the same per-element expression (one
+//! multiply, one add; **never** a fused multiply-add, whose single
+//! rounding differs in bits from `a*b + c`) produces *bit-identical*
+//! results to the scalar loop: each element's dependency chain is
+//! independent and no reassociation happens.  That is the exactness
+//! contract every parity pin in the crate leans on: routing
+//! `Accumulator::add_weighted`/`merge_parts` (and through them the trait
+//! default `FusionAlgorithm::accumulate_weighted`, `StreamingFold`,
+//! `ShardedFold` and the hierarchical combine) through this module cannot
+//! move a single bit relative to the historical scalar code.
+//!
+//! Dispatch is decided once per process (cached in a `OnceLock`):
+//!
+//! | target            | detected feature | kernel  |
+//! |-------------------|------------------|---------|
+//! | `x86_64`          | `avx2`           | 8-lane AVX2 `mul+add` |
+//! | `aarch64`         | NEON (baseline)  | 4-lane NEON `mul+add` |
+//! | anything else     | —                | scalar  |
+//!
+//! Setting `ELASTIAGG_NO_SIMD=1` forces the scalar fallback regardless of
+//! CPU features — CI runs the whole test suite once in that mode so the
+//! fallback stays exercised on every commit.  [`kernel_name`] reports the
+//! active choice for logs and bench metadata.
+//!
+//! [`strict_scalar_accumulate`] is NOT the fallback: it is the bench
+//! baseline.  The plain fallback loop is autovectorised by LLVM in
+//! release builds, so "SIMD vs scalar" measured against it would compare
+//! SIMD against SIMD.  The strict variant pins a genuinely scalar
+//! instruction stream (per-element `black_box` + `#[inline(never)]`) —
+//! still the same arithmetic, bit-identical output, just never vector
+//! machine code.
+
+use std::sync::OnceLock;
+
+/// Which fold kernel this process dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kernel {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+/// `ELASTIAGG_NO_SIMD=1` (any value but `0`/empty) forces the scalar path.
+pub const NO_SIMD_ENV: &str = "ELASTIAGG_NO_SIMD";
+
+fn pick() -> Kernel {
+    let forced_off = std::env::var(NO_SIMD_ENV)
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if forced_off {
+        return Kernel::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Kernel::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is baseline on aarch64: always present.
+        return Kernel::Neon;
+    }
+    #[allow(unreachable_code)]
+    Kernel::Scalar
+}
+
+fn kernel() -> Kernel {
+    static KERNEL: OnceLock<Kernel> = OnceLock::new();
+    *KERNEL.get_or_init(pick)
+}
+
+/// Name of the dispatched kernel (`"avx2"`, `"neon"` or `"scalar"`) —
+/// surfaced in round logs and `BENCH_*.json` metadata so a silent
+/// dispatch regression (e.g. the env override left set) is visible.
+pub fn kernel_name() -> &'static str {
+    match kernel() {
+        Kernel::Scalar => "scalar",
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => "avx2",
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => "neon",
+    }
+}
+
+/// `sum[i] += w * data[i]` over `min(len)` elements, via the dispatched
+/// kernel.  Bit-identical to the scalar loop by construction (see module
+/// docs).
+#[inline]
+pub fn accumulate(sum: &mut [f32], data: &[f32], w: f32) {
+    debug_assert_eq!(sum.len(), data.len());
+    let n = sum.len().min(data.len());
+    let (sum, data) = (&mut sum[..n], &data[..n]);
+    match kernel() {
+        Kernel::Scalar => scalar_accumulate(sum, data, w),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: dispatched only after `is_x86_feature_detected!("avx2")`.
+        Kernel::Avx2 => unsafe { x86::accumulate_avx2(sum, data, w) },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: NEON is baseline on aarch64.
+        Kernel::Neon => unsafe { arm::accumulate_neon(sum, data, w) },
+    }
+}
+
+/// `sum[i] += data[i]` (the merge/combine side), via the dispatched kernel.
+#[inline]
+pub fn add(sum: &mut [f32], data: &[f32]) {
+    debug_assert_eq!(sum.len(), data.len());
+    let n = sum.len().min(data.len());
+    let (sum, data) = (&mut sum[..n], &data[..n]);
+    match kernel() {
+        Kernel::Scalar => scalar_add(sum, data),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: dispatched only after `is_x86_feature_detected!("avx2")`.
+        Kernel::Avx2 => unsafe { x86::add_avx2(sum, data) },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: NEON is baseline on aarch64.
+        Kernel::Neon => unsafe { arm::add_neon(sum, data) },
+    }
+}
+
+/// The always-compiled fallback (LLVM may still autovectorise it — that
+/// is fine for production, only the *bench baseline* must stay scalar).
+fn scalar_accumulate(sum: &mut [f32], data: &[f32], w: f32) {
+    for (s, x) in sum.iter_mut().zip(data) {
+        *s += w * x;
+    }
+}
+
+fn scalar_add(sum: &mut [f32], data: &[f32]) {
+    for (s, x) in sum.iter_mut().zip(data) {
+        *s += x;
+    }
+}
+
+/// Guaranteed-scalar reference: same arithmetic as [`accumulate`] (and
+/// bit-identical output), but the per-element `black_box` pins each load
+/// as opaque so LLVM cannot vectorise or unroll-and-jam the loop.  This
+/// is the honest denominator of the `fig_encoding_throughput` SIMD
+/// speedup pin — measuring against the plain fallback would compare
+/// autovectorised code against hand-vectorised code.
+#[inline(never)]
+pub fn strict_scalar_accumulate(sum: &mut [f32], data: &[f32], w: f32) {
+    for (s, x) in sum.iter_mut().zip(data) {
+        *s += w * std::hint::black_box(*x);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Safety: caller must have verified AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn accumulate_avx2(sum: &mut [f32], data: &[f32], w: f32) {
+        let n = sum.len();
+        let wv = _mm256_set1_ps(w);
+        let mut i = 0usize;
+        // 8 lanes per step: load, one multiply, one add, store — the same
+        // two roundings per element as the scalar loop (NO fmadd).
+        while i + 8 <= n {
+            let s = _mm256_loadu_ps(sum.as_ptr().add(i));
+            let x = _mm256_loadu_ps(data.as_ptr().add(i));
+            let r = _mm256_add_ps(s, _mm256_mul_ps(wv, x));
+            _mm256_storeu_ps(sum.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        for k in i..n {
+            sum[k] += w * data[k];
+        }
+    }
+
+    /// Safety: caller must have verified AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn add_avx2(sum: &mut [f32], data: &[f32]) {
+        let n = sum.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let s = _mm256_loadu_ps(sum.as_ptr().add(i));
+            let x = _mm256_loadu_ps(data.as_ptr().add(i));
+            _mm256_storeu_ps(sum.as_mut_ptr().add(i), _mm256_add_ps(s, x));
+            i += 8;
+        }
+        for k in i..n {
+            sum[k] += data[k];
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use std::arch::aarch64::*;
+
+    /// Safety: NEON is baseline on aarch64 — always available.
+    pub(super) unsafe fn accumulate_neon(sum: &mut [f32], data: &[f32], w: f32) {
+        let n = sum.len();
+        let wv = vdupq_n_f32(w);
+        let mut i = 0usize;
+        // vmulq + vaddq, NOT vfmaq: the fused op's single rounding would
+        // break bit-parity with the scalar `s + w*x`.
+        while i + 4 <= n {
+            let s = vld1q_f32(sum.as_ptr().add(i));
+            let x = vld1q_f32(data.as_ptr().add(i));
+            vst1q_f32(sum.as_mut_ptr().add(i), vaddq_f32(s, vmulq_f32(wv, x)));
+            i += 4;
+        }
+        for k in i..n {
+            sum[k] += w * data[k];
+        }
+    }
+
+    /// Safety: NEON is baseline on aarch64 — always available.
+    pub(super) unsafe fn add_neon(sum: &mut [f32], data: &[f32]) {
+        let n = sum.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let s = vld1q_f32(sum.as_ptr().add(i));
+            let x = vld1q_f32(data.as_ptr().add(i));
+            vst1q_f32(sum.as_mut_ptr().add(i), vaddq_f32(s, x));
+            i += 4;
+        }
+        for k in i..n {
+            sum[k] += data[k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gaussian(rng: &mut Rng, len: usize) -> Vec<f32> {
+        let mut v = vec![0f32; len];
+        rng.fill_gaussian_f32(&mut v, 1.0);
+        v
+    }
+
+    /// The exactness contract: whatever kernel dispatch picked, the output
+    /// is bit-identical to the strict scalar loop — across lengths that
+    /// exercise empty, sub-lane, full-lane and ragged-tail shapes.
+    #[test]
+    fn dispatched_accumulate_is_bit_identical_to_scalar() {
+        let mut rng = Rng::new(41);
+        for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 64, 1000, 4096 + 5] {
+            let data = gaussian(&mut rng, len);
+            let init = gaussian(&mut rng, len);
+            let w = 0.37_f32;
+            let mut fast = init.clone();
+            accumulate(&mut fast, &data, w);
+            let mut slow = init.clone();
+            strict_scalar_accumulate(&mut slow, &data, w);
+            assert_eq!(
+                fast.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                slow.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "len {len} kernel {}",
+                kernel_name()
+            );
+        }
+    }
+
+    #[test]
+    fn dispatched_add_is_bit_identical_to_scalar() {
+        let mut rng = Rng::new(43);
+        for len in [0usize, 1, 5, 8, 13, 100, 1 << 12] {
+            let data = gaussian(&mut rng, len);
+            let init = gaussian(&mut rng, len);
+            let mut fast = init.clone();
+            add(&mut fast, &data);
+            let mut slow = init;
+            scalar_add(&mut slow, &data);
+            assert_eq!(
+                fast.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                slow.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_name_is_a_known_value() {
+        assert!(
+            ["scalar", "avx2", "neon"].contains(&kernel_name()),
+            "{}",
+            kernel_name()
+        );
+        // The env override is read once per process; with it unset (the
+        // default test environment) an x86_64/aarch64 CI box dispatches a
+        // SIMD kernel, so the parity tests above exercise the real lanes.
+        if std::env::var(NO_SIMD_ENV).map(|v| !v.is_empty() && v != "0").unwrap_or(false) {
+            assert_eq!(kernel_name(), "scalar");
+        }
+    }
+
+    /// NaN/Inf payloads must flow through the lanes exactly like the
+    /// scalar loop would propagate them (same bits, including NaN bit
+    /// patterns surviving the multiply).
+    #[test]
+    fn non_finite_values_propagate_identically() {
+        let data = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.0, -0.0, 2.5e38, 1e-40, 0.0];
+        let init = [1.0f32; 8];
+        let mut fast = init;
+        accumulate(&mut fast, &data, 2.0);
+        let mut slow = init;
+        strict_scalar_accumulate(&mut slow, &data, 2.0);
+        for (a, b) in fast.iter().zip(slow.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -17,6 +17,7 @@
 //! them).
 
 pub mod avg;
+pub mod kernels;
 pub mod robust;
 pub mod staleness;
 
@@ -45,12 +46,13 @@ impl Accumulator {
         Accumulator { sum: vec![0.0; len], wtot: 0.0, n: 0 }
     }
 
-    /// Fold `w * data` into the sum.
+    /// Fold `w * data` into the sum, through the runtime-dispatched fold
+    /// kernel ([`kernels::accumulate`]) — bit-identical to the scalar loop
+    /// by the kernel module's exactness contract, so every parity pin that
+    /// predates the SIMD path holds unchanged.
     pub fn add_weighted(&mut self, data: &[f32], w: f32) {
         debug_assert_eq!(data.len(), self.sum.len());
-        for (s, x) in self.sum.iter_mut().zip(data) {
-            *s += w * x;
-        }
+        kernels::accumulate(&mut self.sum, data, w);
         self.wtot += w as f64;
         self.n += 1;
     }
@@ -68,9 +70,7 @@ impl Accumulator {
     /// the algebra's `combine`.
     pub fn merge_parts(&mut self, sum: &[f32], wtot: f64, n: u64) {
         debug_assert_eq!(sum.len(), self.sum.len());
-        for (s, x) in self.sum.iter_mut().zip(sum) {
-            *s += x;
-        }
+        kernels::add(&mut self.sum, sum);
         self.wtot += wtot;
         self.n += n;
     }
@@ -136,6 +136,12 @@ pub trait FusionAlgorithm: Send + Sync {
     /// batch `accumulate` and the streaming/zero-copy folds.  An algorithm
     /// that customises its accumulation overrides THIS method and every
     /// engine path follows.
+    ///
+    /// The identity-transform arm routes through the dispatched SIMD fold
+    /// kernel (via [`Accumulator::add_weighted`]); a non-identity
+    /// `transform` (ClippedAvg) runs the per-element scalar loop — the
+    /// transform is a virtual scalar call, and keeping it scalar keeps the
+    /// clipped parity pins trivially exact.
     fn accumulate_weighted(&self, acc: &mut Accumulator, w: f32, data: &[f32]) {
         debug_assert_eq!(data.len(), acc.sum.len());
         if self.identity_transform() {

@@ -36,6 +36,14 @@ pub const TAG_UPLOAD_PARTIAL: u8 = 0x0B;
 /// computed for the update — the client learns how discounted its work
 /// was and which version to pull before its next local round.
 pub const TAG_ASYNC_ACK: u8 = 0x0C;
+/// Upload of a *compression-encoded* update: 8-byte retransmission nonce,
+/// then a CRC-covered encoded frame (see [`codec`](crate::tensorstore::codec)
+/// — magic "EA02", an encoding tag byte negotiates dense f32 / f16 /
+/// int8-quantized / top-k sparse per upload).  The nonce-ahead layout
+/// matches [`TAG_UPLOAD_NONCE`]; the encoded header is 40 bytes, so a
+/// `DenseF32` payload sits 4-aligned inside the pooled frame buffer and
+/// still decodes zero-copy.
+pub const TAG_UPLOAD_ENC: u8 = 0x0D;
 pub const TAG_ERROR: u8 = 0x7F;
 
 /// Validate a payload length before it is cast into the wire's u32 length
@@ -85,6 +93,12 @@ pub enum Message {
     /// the client trained against, so stale work is weighted, not
     /// `Late`-rejected.
     AsyncAck { version: u32, delta: u32 },
+    /// Nonce-tagged upload whose body is a compression-encoded frame
+    /// (kept as raw bytes here; the server decodes it straight out of the
+    /// pooled buffer so a dense-f32 payload still borrows zero-copy).
+    /// [`Message::decode`] validates the frame (CRC/magic/tag/lengths)
+    /// before accepting it.
+    UploadEnc { nonce: u64, frame: Vec<u8> },
     Error(String),
 }
 
@@ -178,6 +192,11 @@ impl Message {
                 out.extend_from_slice(&version.to_le_bytes());
                 out.extend_from_slice(&delta.to_le_bytes());
                 TAG_ASYNC_ACK
+            }
+            Message::UploadEnc { nonce, frame } => {
+                out.extend_from_slice(&nonce.to_le_bytes());
+                out.extend_from_slice(frame);
+                TAG_UPLOAD_ENC
             }
             Message::Error(m) => {
                 out.extend_from_slice(m.as_bytes());
@@ -283,6 +302,17 @@ impl Message {
                     delta: u32::from_le_bytes(payload[4..8].try_into().unwrap()),
                 })
             }
+            TAG_UPLOAD_ENC => {
+                need(8)?;
+                let frame = &payload[8..];
+                // Validate the encoded frame (CRC first, then magic, tag,
+                // caps, declared lengths) before accepting the bytes.
+                crate::tensorstore::EncodedUpdateView::decode(frame)?;
+                Ok(Message::UploadEnc {
+                    nonce: u64::from_le_bytes(payload[..8].try_into().unwrap()),
+                    frame: frame.to_vec(),
+                })
+            }
             TAG_ERROR => Ok(Message::Error(String::from_utf8_lossy(payload).into_owned())),
             t => Err(ProtoError::UnknownTag(t)),
         }
@@ -336,6 +366,7 @@ mod tests {
             Message::Model { round: 0, weights: vec![] }.encode().0,
             Message::NoModel { round: 0 }.encode().0,
             Message::AsyncAck { version: 0, delta: 0 }.encode().0,
+            Message::UploadEnc { nonce: 0, frame: vec![] }.encode().0,
             Message::Error(String::new()).encode().0,
         ];
         let mut set = msgs.to_vec();
@@ -440,6 +471,31 @@ mod tests {
         }
         assert!(Message::decode(TAG_DUPLICATE, &[0u8; 15]).is_err());
         assert!(Message::decode(TAG_LATE, &[0u8; 3]).is_err());
+    }
+
+    #[test]
+    fn encoded_upload_roundtrips_and_keeps_crc_protection() {
+        use crate::tensorstore::{codec, Encoding};
+        let u = ModelUpdate::new(5, 1.0, 2, (0..100).map(|i| i as f32 * 0.25).collect());
+        for enc in [
+            Encoding::DenseF32,
+            Encoding::DenseF16,
+            Encoding::QuantI8,
+            Encoding::TopK { permille: 200 },
+        ] {
+            let frame = codec::encode_update(&u, enc);
+            let m = Message::UploadEnc { nonce: 0xBEEF, frame: frame.clone() };
+            let (tag, payload) = m.encode();
+            assert_eq!(tag, TAG_UPLOAD_ENC);
+            assert_eq!(Message::decode(tag, &payload).unwrap(), m);
+            // the encoded body (past the 8-byte nonce) is CRC-guarded
+            let mut corrupt = payload.clone();
+            corrupt[8 + 45] ^= 0xFF;
+            assert!(Message::decode(tag, &corrupt).is_err(), "{}", enc.token());
+        }
+        // too short for the nonce, or an empty/garbage frame: rejected
+        assert!(Message::decode(TAG_UPLOAD_ENC, &[0u8; 7]).is_err());
+        assert!(Message::decode(TAG_UPLOAD_ENC, &[0u8; 20]).is_err());
     }
 
     #[test]

@@ -40,11 +40,17 @@ pub struct PricingModel {
     pub node_usd_per_s: f64,
     /// $/s of one distributed executor container.
     pub executor_usd_per_s: f64,
+    /// $/byte of client→aggregator wire traffic.  0 by default (intra-DC
+    /// ingress is free on every major cloud), but edge fleets on metered
+    /// uplinks (cellular, satellite backhaul) pay per byte — set this and
+    /// the planner's per-encoding wire-byte counts turn compression into a
+    /// *dollar* win, not just a latency one.
+    pub wan_usd_per_byte: f64,
 }
 
 impl Default for PricingModel {
     fn default() -> Self {
-        PricingModel { node_usd_per_s: 8.5e-4, executor_usd_per_s: 5.6e-5 }
+        PricingModel { node_usd_per_s: 8.5e-4, executor_usd_per_s: 5.6e-5, wan_usd_per_byte: 0.0 }
     }
 }
 
@@ -88,6 +94,14 @@ impl PricingModel {
     /// exactly the streaming price.
     pub fn async_mode(&self, occupancy_s: f64, avg_discount: f64) -> f64 {
         self.single_node(occupancy_s / avg_discount.clamp(1e-3, 1.0))
+    }
+
+    /// Dollar cost of moving `bytes` over the client uplink.  Zero at the
+    /// default rate; the planner adds this term to every candidate from
+    /// the *encoded* wire-byte count, so on a metered fleet a quantized
+    /// or sparse encoding shows up directly in the $ axis.
+    pub fn wan(&self, bytes: f64) -> f64 {
+        bytes * self.wan_usd_per_byte
     }
 }
 
@@ -140,6 +154,15 @@ mod tests {
         // pathological discounts are clamped, never a division blow-up
         assert!(p.async_mode(10.0, 0.0).is_finite());
         assert_eq!(p.async_mode(10.0, 7.0), p.streaming(10.0));
+    }
+
+    #[test]
+    fn wan_rate_is_free_by_default_and_linear_when_set() {
+        let p = PricingModel::default();
+        assert_eq!(p.wan(1e12), 0.0, "default fleets pay nothing per byte");
+        let metered = PricingModel { wan_usd_per_byte: 2e-9, ..PricingModel::default() };
+        assert!((metered.wan(1e9) - 2.0).abs() < 1e-9);
+        assert_eq!(metered.wan(0.0), 0.0);
     }
 
     #[test]

@@ -39,6 +39,7 @@ use crate::cluster::{CostModel, EngineKind, VirtualCluster};
 use crate::coordinator::{WorkloadClass, WorkloadClassifier};
 use crate::fusion::FusionAlgorithm;
 use crate::metrics::Ewma;
+use crate::tensorstore::Encoding;
 
 /// Which execution substrate a candidate plan uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -193,6 +194,14 @@ pub struct PlannerConfig {
     /// discount: lower turnout → staler buffers → less effective weight
     /// per node-second → a pricier async plan.
     pub staleness_exponent: f64,
+    /// Wire encoding the fleet's clients upload with: every ingest-coupled
+    /// candidate (streaming, hierarchical edge phase, async) is priced at
+    /// this encoding's per-update byte count plus its dequantize cost, and
+    /// the per-byte WAN term (when [`PricingModel::wan_usd_per_byte`] is
+    /// set) charges the encoded volume.  Relay→root partials and the
+    /// distributed store path stay dense f32 regardless — that asymmetry
+    /// is what moves the flat/hierarchical crossover under compression.
+    pub encoding: Encoding,
 }
 
 impl Default for PlannerConfig {
@@ -209,6 +218,7 @@ impl Default for PlannerConfig {
             expected_participation: 1.0,
             async_buffer: 0,
             staleness_exponent: 0.5,
+            encoding: Encoding::DenseF32,
         }
     }
 }
@@ -344,6 +354,19 @@ impl DispatchPlanner {
             (((parties as f64) * p).ceil() as usize).clamp(1, parties)
         };
         let total_bytes = update_bytes as f64 * eff as f64;
+        let enc = self.cfg.encoding;
+        // Encoded wire volume the fleet uploads for `count` arrivals: the
+        // plain upload framing for dense f32, the codec framing otherwise.
+        let uplink_bytes = |count: usize| -> f64 {
+            if enc.is_dense_f32() {
+                self.cluster.flat_root_bytes(update_bytes, count) as f64
+            } else {
+                self.cluster.flat_root_bytes_enc(update_bytes, count, enc) as f64
+            }
+        };
+        // Every flat candidate ingests the same encoded uplink volume;
+        // zero dollars at the default (free-ingress) WAN rate.
+        let wan_up = self.pricing.wan(uplink_bytes(eff));
         let mut candidates = Vec::new();
 
         if class == WorkloadClass::Small {
@@ -359,7 +382,7 @@ impl DispatchPlanner {
                 );
             candidates.push(CandidatePlan {
                 kind: PlanKind::Serial,
-                cost: PlanCost::new(serial, self.pricing.single_node(serial)),
+                cost: PlanCost::new(serial, self.pricing.single_node(serial) + wan_up),
             });
             let parallel = corr
                 * self.cluster.single_node_time(
@@ -371,7 +394,7 @@ impl DispatchPlanner {
                 );
             candidates.push(CandidatePlan {
                 kind: PlanKind::Parallel,
-                cost: PlanCost::new(parallel, self.pricing.single_node(parallel)),
+                cost: PlanCost::new(parallel, self.pricing.single_node(parallel) + wan_up),
             });
             if self.cfg.xla_available && algo.decomposable() {
                 // The AOT path streams at the socket's bandwidth ceiling
@@ -380,7 +403,7 @@ impl DispatchPlanner {
                 let xla = corr * (total_bytes / cost.xla_bps() + cost.xla_launch_s);
                 candidates.push(CandidatePlan {
                     kind: PlanKind::Xla,
-                    cost: PlanCost::new(xla, self.pricing.single_node(xla)),
+                    cost: PlanCost::new(xla, self.pricing.single_node(xla) + wan_up),
                 });
             }
         }
@@ -407,15 +430,16 @@ impl DispatchPlanner {
             // (streaming_time_p is the standalone participation entry for
             // direct callers; pricing must not re-derive the count).
             let stream = self.corr_stream.value_or(1.0)
-                * self.cluster.streaming_time(
+                * self.cluster.streaming_time_enc(
                     update_bytes,
                     eff,
                     self.cfg.node_cores.max(1),
                     self.cfg.ingest_lanes.max(1).min(lane_cap),
+                    enc,
                 );
             candidates.push(CandidatePlan {
                 kind: PlanKind::Streaming,
-                cost: PlanCost::new(stream, self.pricing.streaming(stream)),
+                cost: PlanCost::new(stream, self.pricing.streaming(stream) + wan_up),
             });
 
             // The 2-tier tree rides the same hierarchy gate (a partial IS a
@@ -429,19 +453,25 @@ impl DispatchPlanner {
                 let e = self.cfg.edges.min(eff);
                 let lanes = self.cfg.ingest_lanes.max(1).min(lane_cap);
                 let corr = self.corr_hier.value_or(1.0);
-                let (edge_s, root_s) = self.cluster.hierarchical_breakdown(
+                let (edge_s, root_s) = self.cluster.hierarchical_breakdown_enc(
                     update_bytes,
                     eff,
                     self.cfg.node_cores.max(1),
                     lanes,
                     e,
+                    enc,
                 );
                 let lat = corr * (edge_s + root_s);
+                // clients→edges move encoded frames; relays→root always
+                // forward dense f32 partials (the structural asymmetry)
+                let wire = uplink_bytes(eff)
+                    + self.cluster.hierarchical_root_bytes(update_bytes, eff, e) as f64;
                 candidates.push(CandidatePlan {
                     kind: PlanKind::Hierarchical { edges: e },
                     cost: PlanCost::new(
                         lat,
-                        self.pricing.hierarchical(lat, corr * edge_s, e),
+                        self.pricing.hierarchical(lat, corr * edge_s, e)
+                            + self.pricing.wan(wire),
                     ),
                 });
             }
@@ -463,19 +493,21 @@ impl DispatchPlanner {
                 let lanes = self.cfg.ingest_lanes.max(1).min(lane_cap);
                 let corr = self.corr_async.value_or(1.0);
                 let publish = corr
-                    * self.cluster.async_publish_time(
+                    * self.cluster.async_publish_time_enc(
                         update_bytes,
                         k,
                         self.cfg.node_cores.max(1),
                         lanes,
+                        enc,
                     );
                 let occupancy = corr
-                    * self.cluster.async_occupancy(
+                    * self.cluster.async_occupancy_enc(
                         update_bytes,
                         eff,
                         k,
                         self.cfg.node_cores.max(1),
                         lanes,
+                        enc,
                     );
                 let expected_delta = (1.0 - p) / p.max(1e-3);
                 let a = self.cfg.staleness_exponent.max(0.0);
@@ -484,7 +516,7 @@ impl DispatchPlanner {
                     kind: PlanKind::Async { buffer: k },
                     cost: PlanCost::new(
                         publish,
-                        self.pricing.async_mode(occupancy, avg_discount),
+                        self.pricing.async_mode(occupancy, avg_discount) + wan_up,
                     ),
                 });
             }
@@ -506,6 +538,9 @@ impl DispatchPlanner {
         } else {
             self.cluster.client_write_time(update_bytes, eff)
         };
+        // The store path always moves dense f32 (the DFS holds the format
+        // the MapReduce readers decode), so compression never discounts it.
+        let wan_dense = self.pricing.wan(self.cluster.flat_root_bytes(update_bytes, eff) as f64);
         for k in 1..=self.cfg.max_executors.max(1) {
             let cores = k * self.cfg.cores_per_executor.max(1);
             let bd = self
@@ -515,7 +550,9 @@ impl DispatchPlanner {
                 .cluster
                 .executor_startup(k.saturating_sub(current_executors));
             let occupancy = startup + corr * bd.total();
-            let usd = self.pricing.single_node(write) + self.pricing.distributed(occupancy, k);
+            let usd = self.pricing.single_node(write)
+                + self.pricing.distributed(occupancy, k)
+                + wan_dense;
             candidates.push(CandidatePlan {
                 kind: PlanKind::Distributed { executors: k },
                 cost: PlanCost::new(write + occupancy, usd),
@@ -618,6 +655,7 @@ mod tests {
                 expected_participation: 1.0,
                 async_buffer: 0,
                 staleness_exponent: 0.5,
+                encoding: Encoding::DenseF32,
             },
         )
     }
@@ -639,6 +677,7 @@ mod tests {
                 expected_participation: 1.0,
                 async_buffer: 0,
                 staleness_exponent: 0.5,
+                encoding: Encoding::DenseF32,
             },
         )
     }
@@ -660,6 +699,7 @@ mod tests {
                 expected_participation: p,
                 async_buffer: buffer,
                 staleness_exponent: 0.5,
+                encoding: Encoding::DenseF32,
             },
         )
     }
@@ -1000,6 +1040,7 @@ mod tests {
             expected_participation: 1.0,
             async_buffer: 0,
             staleness_exponent: 0.5,
+            encoding: Encoding::DenseF32,
         };
         let full = DispatchPlanner::new(
             WorkloadClassifier::new(170 << 30, 1.1),
@@ -1062,6 +1103,128 @@ mod tests {
             p.observe_participation(0, 30_000);
         }
         assert!(p.participation() >= 0.05);
+    }
+
+    fn planner_enc(policy: DispatchPolicy, edges: usize, enc: Encoding) -> DispatchPlanner {
+        DispatchPlanner::new(
+            WorkloadClassifier::new(170 << 30, 1.1),
+            VirtualCluster::paper(CostModel::nominal()),
+            PricingModel::default(),
+            PlannerConfig {
+                policy,
+                max_executors: 10,
+                node_cores: 64,
+                ingest_lanes: 64,
+                edges,
+                encoding: enc,
+                ..PlannerConfig::default()
+            },
+        )
+    }
+
+    #[test]
+    fn compressed_encoding_shrinks_the_streaming_candidate() {
+        // Past-the-ceiling round is ingest-bound: quartering the wire
+        // bytes must quarter-ish the priced streaming latency, and the
+        // DenseF32 encoding must price bit-identically to the legacy
+        // dense-only planner (no existing pin moves).
+        let dense = planner(DispatchPolicy::MinLatency).plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        let dense_enc = planner_enc(DispatchPolicy::MinLatency, 0, Encoding::DenseF32)
+            .plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        let quant = planner_enc(DispatchPolicy::MinLatency, 0, Encoding::QuantI8)
+            .plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        let stream = |pl: &RoundPlan| {
+            pl.candidates.iter().find(|c| c.kind == PlanKind::Streaming).unwrap().cost
+        };
+        assert_eq!(stream(&dense_enc), stream(&dense));
+        let ratio = stream(&quant).latency_s / stream(&dense).latency_s;
+        assert!((0.2..0.5).contains(&ratio), "quantized/dense latency ratio {ratio}");
+        // distributed candidates are untouched: the store path moves dense
+        // f32 whatever the fleet's uplink encoding
+        for (q, d) in quant
+            .candidates
+            .iter()
+            .filter(|c| c.kind.is_distributed())
+            .zip(dense.candidates.iter().filter(|c| c.kind.is_distributed()))
+        {
+            assert_eq!(q, d);
+        }
+    }
+
+    #[test]
+    fn compression_moves_the_planner_crossover_to_larger_fleets() {
+        // The smallest fleet whose hierarchical candidate beats the flat
+        // streaming candidate, as the PLANNER prices them.  Compression
+        // shrinks every client→aggregator leg but never the relay→root
+        // partials, so the flat plan gains more and the crossover recedes.
+        let xover = |enc: Encoding| {
+            let p = planner_enc(DispatchPolicy::MinLatency, 4, enc);
+            for n in 2..10_000usize {
+                let plan = p.plan(UPDATE_46MB, n, &FedAvg, 0);
+                let hier = plan
+                    .candidates
+                    .iter()
+                    .find(|c| matches!(c.kind, PlanKind::Hierarchical { .. }));
+                let flat = plan.candidates.iter().find(|c| c.kind == PlanKind::Streaming);
+                if let (Some(h), Some(f)) = (hier, flat) {
+                    if h.cost.latency_s < f.cost.latency_s {
+                        return n;
+                    }
+                }
+            }
+            panic!("no crossover below 10k parties for {enc:?}");
+        };
+        let dense_x = xover(Encoding::DenseF32);
+        let f16_x = xover(Encoding::DenseF16);
+        let topk_x = xover(Encoding::TopK { permille: 100 });
+        assert!(dense_x > 2, "{dense_x}");
+        assert!(f16_x > dense_x, "f16 {f16_x} !> dense {dense_x}");
+        assert!(topk_x > f16_x, "topk {topk_x} !> f16 {f16_x}");
+    }
+
+    #[test]
+    fn metered_uplink_makes_compression_a_dollar_win() {
+        // With a per-byte WAN rate the encoded wire volume lands on the $
+        // axis: the quantized fleet's streaming plan must be cheaper than
+        // the dense fleet's by roughly the byte ratio's share of the WAN
+        // bill, while the store-backed distributed candidates (dense f32
+        // either way) price identically.
+        let metered = PricingModel { wan_usd_per_byte: 1e-9, ..PricingModel::default() };
+        let mk = |enc: Encoding| {
+            DispatchPlanner::new(
+                WorkloadClassifier::new(170 << 30, 1.1),
+                VirtualCluster::paper(CostModel::nominal()),
+                metered.clone(),
+                PlannerConfig {
+                    policy: DispatchPolicy::MinCost,
+                    max_executors: 10,
+                    node_cores: 64,
+                    ingest_lanes: 64,
+                    encoding: enc,
+                    ..PlannerConfig::default()
+                },
+            )
+            .plan(UPDATE_46MB, 30_000, &FedAvg, 0)
+        };
+        let dense = mk(Encoding::DenseF32);
+        let quant = mk(Encoding::QuantI8);
+        let stream = |pl: &RoundPlan| {
+            pl.candidates.iter().find(|c| c.kind == PlanKind::Streaming).unwrap().cost
+        };
+        assert!(
+            stream(&quant).usd < stream(&dense).usd * 0.5,
+            "{} !< half of {}",
+            stream(&quant).usd,
+            stream(&dense).usd
+        );
+        for (q, d) in quant
+            .candidates
+            .iter()
+            .filter(|c| c.kind.is_distributed())
+            .zip(dense.candidates.iter().filter(|c| c.kind.is_distributed()))
+        {
+            assert_eq!(q.cost.usd, d.cost.usd, "store path never discounts");
+        }
     }
 
     #[test]

@@ -30,7 +30,9 @@ use crate::fusion::{DiscountedFusion, FusionAlgorithm, StalenessDiscount};
 use crate::memsim::MemoryBudget;
 use crate::net::server::Handler;
 use crate::net::{protocol, Message, NetServer, ProtoError, Reply, ServerHandle};
-use crate::tensorstore::{ModelUpdateView, PartialAggregateView};
+use crate::tensorstore::{
+    decode_stats, DecodeStats, EncodedUpdateView, ModelUpdateView, PartialAggregateView,
+};
 #[cfg(test)]
 use crate::tensorstore::ModelUpdate;
 
@@ -316,6 +318,31 @@ impl FlServer {
                     self.upload_with(v.round, |st| st.ingest_view_tagged(&v, nonce)),
                 ))
             }
+            protocol::TAG_UPLOAD_ENC => {
+                if payload.len() < 8 {
+                    return Err(ProtoError::BadPayload(format!(
+                        "need 8 nonce bytes, got {}",
+                        payload.len()
+                    )));
+                }
+                let nonce = u64::from_le_bytes(payload[..8].try_into().unwrap());
+                // Encoded frame at offset 8 in the 4-aligned pool: the
+                // 40-byte encoded header keeps a dense-f32 payload
+                // 4-aligned, so full-precision frames still borrow; the
+                // compressed encodings dequantize here into an owned f32
+                // view ("dequantize-on-fold") and the round state never
+                // sees anything but dense f32 data.
+                let ev = EncodedUpdateView::decode(&payload[8..])?;
+                let v = ev.to_model_view()?;
+                if let Some(ar) = &self.async_round {
+                    return Ok(Reply::Msg(
+                        self.async_offer(ar, v.party, nonce, v.round, v.count, &v.data),
+                    ));
+                }
+                Ok(Reply::Msg(
+                    self.upload_with(v.round, |st| st.ingest_view_tagged(&v, nonce)),
+                ))
+            }
             protocol::TAG_UPLOAD_PARTIAL => {
                 if payload.len() < 8 {
                     return Err(ProtoError::BadPayload(format!(
@@ -390,6 +417,20 @@ impl FlServer {
                 self.upload_partial_with(declared, |st| {
                     st.ingest_partial_tagged(&partial.as_view(), nonce)
                 })
+            }
+            Message::UploadEnc { nonce, frame } => {
+                let ev = match EncodedUpdateView::decode(&frame) {
+                    Ok(ev) => ev,
+                    Err(e) => return Message::Error(format!("encoded frame: {e}")),
+                };
+                let v = match ev.to_model_view() {
+                    Ok(v) => v,
+                    Err(e) => return Message::Error(format!("encoded payload: {e}")),
+                };
+                if let Some(ar) = &self.async_round {
+                    return self.async_offer(ar, v.party, nonce, v.round, v.count, &v.data);
+                }
+                self.upload_with(v.round, |st| st.ingest_view_tagged(&v, nonce))
             }
             Message::GetModel { round } => {
                 if let Some(ar) = &self.async_round {
@@ -474,6 +515,10 @@ impl FlServer {
         let expected = expected.max(1);
         let quorum = quorum.clamp(1, expected);
         let round = self.current_round();
+        // Borrowed-vs-copied decode tallies over this driver's span: most
+        // ingest lands during the collection wait below, so the delta is
+        // the round's zero-copy health (surfaced via RoundRun::log_line).
+        let decode_mark = decode_stats();
         let mut st = self.round_state(round).expect("current round open");
         // Parties may have joined since the round opened (§III-C): refresh
         // the classification from the live registry as long as nothing has
@@ -486,7 +531,10 @@ impl FlServer {
             }
         }
         if st.class == WorkloadClass::Large {
-            return self.finish_large_quorum(&st, round, expected, quorum);
+            return self.finish_large_quorum(&st, round, expected, quorum).map(|mut run| {
+                run.decode = decode_stats().since(decode_mark);
+                run
+            });
         }
 
         // Small + Streaming: the deadline timer IS the collection window.
@@ -514,6 +562,7 @@ impl FlServer {
                         outcome: RoundOutcome::Aborted,
                         folded,
                         result: None,
+                        decode: decode_stats().since(decode_mark),
                     });
                 }
                 self.service.aggregate_small(self.algo.as_ref(), &updates, round)?
@@ -531,6 +580,7 @@ impl FlServer {
                         outcome: RoundOutcome::Aborted,
                         folded: 0,
                         result: None,
+                        decode: decode_stats().since(decode_mark),
                     });
                 }
                 let mut bd = crate::metrics::Breakdown::new();
@@ -548,6 +598,7 @@ impl FlServer {
                         outcome: RoundOutcome::Aborted,
                         folded: parties,
                         result: None,
+                        decode: decode_stats().since(decode_mark),
                     });
                 }
                 (
@@ -574,7 +625,12 @@ impl FlServer {
         };
         st.publish(fused.clone()).map_err(ServiceError::Round)?;
         self.open_round(round + 1);
-        Ok(RoundRun { outcome, folded, result: Some((fused, report)) })
+        Ok(RoundRun {
+            outcome,
+            folded,
+            result: Some((fused, report)),
+            decode: decode_stats().since(decode_mark),
+        })
     }
 
     /// The Large arm of the quorum round: the store monitor supplies the
@@ -606,17 +662,32 @@ impl FlServer {
                 if outcome == RoundOutcome::Aborted {
                     st.abort().map_err(ServiceError::Round)?;
                     self.open_round(round + 1);
-                    return Ok(RoundRun { outcome, folded, result: None });
+                    return Ok(RoundRun {
+                        outcome,
+                        folded,
+                        result: None,
+                        decode: DecodeStats::default(),
+                    });
                 }
                 st.publish(fused.clone()).map_err(ServiceError::Round)?;
                 self.open_round(round + 1);
-                Ok(RoundRun { outcome, folded, result: Some((fused, report)) })
+                Ok(RoundRun {
+                    outcome,
+                    folded,
+                    result: Some((fused, report)),
+                    decode: DecodeStats::default(),
+                })
             }
             Err(ServiceError::NoUpdates) => {
                 self.service.observe_participation(0, expected);
                 st.abort().map_err(ServiceError::Round)?;
                 self.open_round(round + 1);
-                Ok(RoundRun { outcome: RoundOutcome::Aborted, folded: 0, result: None })
+                Ok(RoundRun {
+                    outcome: RoundOutcome::Aborted,
+                    folded: 0,
+                    result: None,
+                    decode: DecodeStats::default(),
+                })
             }
             Err(e) => Err(e),
         }
@@ -708,6 +779,24 @@ pub struct RoundRun {
     pub folded: usize,
     /// The fused weights + report; `None` when the round aborted.
     pub result: Option<(Vec<f32>, ServiceReport)>,
+    /// Borrowed-vs-copied wire-decode tallies accrued during this driver's
+    /// span — the round's zero-copy health.  Borrowed = dense-f32 payloads
+    /// served straight from the receive buffer; copied = compressed (or
+    /// unaligned) payloads that had to materialise an owned `Vec<f32>`.
+    /// Process-wide counters, so concurrent rounds bleed into each other;
+    /// treat as a health signal, not an exact per-round ledger.
+    pub decode: DecodeStats,
+}
+
+impl RoundRun {
+    /// One-line round log, e.g.
+    /// `round Quorum: folded=12 decode borrowed=12 copied=0`.
+    pub fn log_line(&self) -> String {
+        format!(
+            "round {:?}: folded={} decode borrowed={} copied={}",
+            self.outcome, self.folded, self.decode.borrowed, self.decode.copied
+        )
+    }
 }
 
 /// The TCP-facing newtype: routes raw frames into [`FlServer`]'s zero-copy
@@ -1020,6 +1109,40 @@ mod tests {
     }
 
     #[test]
+    fn encoded_uploads_fold_and_dedup_like_dense() {
+        use crate::tensorstore::{codec, Encoding};
+        let (server, _td) = make_server(1 << 30, 400);
+        let data: Vec<f32> = (0..100).map(|i| (i as f32) * 0.01 - 0.5).collect();
+        // dense-f32 encoded upload via the owned path
+        let u = ModelUpdate::new(1, 1.0, 0, data.clone());
+        let frame = codec::encode_update(&u, Encoding::DenseF32);
+        let r = server.handle(Message::UploadEnc { nonce: 0x1, frame: frame.clone() });
+        assert!(matches!(r, Message::Ack { .. }), "{r:?}");
+        // retransmit absorbed with the ACCEPTED nonce echoed back
+        let r = server.handle(Message::UploadEnc { nonce: 0x2, frame });
+        assert_eq!(r, Message::Duplicate { party: 1, nonce: 0x1 });
+        // an f16 frame from another party folds too (dequantize-on-fold),
+        // here via the zero-copy frame path
+        let u2 = ModelUpdate::new(2, 1.0, 0, data.clone());
+        let mut payload = 0x3u64.to_le_bytes().to_vec();
+        payload.extend_from_slice(&codec::encode_update(&u2, Encoding::DenseF16));
+        let reply = server.handle_frame(protocol::TAG_UPLOAD_ENC, &payload).unwrap();
+        assert!(matches!(reply, Reply::Msg(Message::Ack { .. })));
+        assert_eq!(server.round_state(0).unwrap().collected(), 2);
+        // fused mean of the exact and f16 copies lands within f16 error
+        let run = server.run_round_quorum(2, 2, Duration::from_secs(10)).unwrap();
+        let (fused, _) = run.result.unwrap();
+        for (f, d) in fused.iter().zip(data.iter()) {
+            assert!((f - d).abs() < 1e-3, "{f} vs {d}");
+        }
+        // a corrupt encoded frame is a typed error, not a crash
+        let mut bad = codec::encode_update(&u, Encoding::QuantI8);
+        bad[50] ^= 0x10;
+        let r = server.handle(Message::UploadEnc { nonce: 0x9, frame: bad });
+        assert!(matches!(r, Message::Error(_)), "{r:?}");
+    }
+
+    #[test]
     fn root_accepts_partials_and_dedups_stray_directs() {
         use crate::config::NodeRole;
         use crate::tensorstore::PartialAggregate;
@@ -1098,6 +1221,30 @@ mod tests {
             })
             .unwrap();
         assert_eq!(r, Message::Late { round: 0 });
+    }
+
+    #[test]
+    fn encoded_uploads_cross_the_wire_and_count_as_borrowed() {
+        use crate::client::SyntheticParty;
+        use crate::tensorstore::{decode_stats, Encoding};
+        let (server, _td) = make_server(1 << 30, 400);
+        let handle = server.start("127.0.0.1:0").unwrap();
+        let addr = handle.addr().to_string();
+        let mut party = SyntheticParty::new(1, 99);
+        let u = party.make_update(0, 200);
+        let before = decode_stats();
+        // dense-f32 encoded frame: lands in the pooled buffer at a
+        // 4-aligned payload offset, so the decode must BORROW
+        party.ship_encoded(&u, Encoding::DenseF32, 0x51, &addr).unwrap();
+        let after = decode_stats();
+        assert!(after.borrowed >= before.borrowed + 1, "encoded dense decode must borrow");
+        // retransmit over the same path is absorbed (Ok, not an error)
+        party.ship_encoded(&u, Encoding::DenseF32, 0x52, &addr).unwrap();
+        // a quantized frame from another party folds via dequantize
+        let mut p2 = SyntheticParty::new(2, 99);
+        let u2 = p2.make_update(0, 200);
+        p2.ship_encoded(&u2, Encoding::QuantI8, 0x53, &addr).unwrap();
+        assert_eq!(server.round_state(0).unwrap().collected(), 2);
     }
 
     fn make_async_server(

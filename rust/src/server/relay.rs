@@ -18,6 +18,16 @@
 //! parent sealed-and-reopened gets the parent's typed `Late` reply, exactly
 //! like a straggling client upload.
 //!
+//! Compressed updates and the backhaul: cohort clients may ship
+//! *encoded* frames (`TAG_UPLOAD_ENC` — f16/int8/top-k, see
+//! [`codec`](crate::tensorstore::codec)) to their relay; the relay
+//! dequantizes at ingest, so the partial it forwards is always dense f32
+//! (the exact sum of whatever the cohort sent).  Compression therefore
+//! shrinks the client→edge leg only — the relay→root leg stays
+//! full-precision by construction, which is exactly the asymmetry the
+//! cluster model prices when it shifts the flat-vs-hierarchical
+//! crossover under compressed encodings.
+//!
 //! [`ServiceConfig`]: crate::config::ServiceConfig
 
 use std::sync::Arc;
@@ -250,17 +260,29 @@ mod tests {
         let relay = RelayServer::from_config(edge.clone()).expect("relay config");
         assert_eq!(relay.edge_id(), 7);
 
-        // 4 cohort clients upload to the RELAY over TCP
+        // 4 cohort clients upload to the RELAY over TCP — two plain, two
+        // as encoded frames (lossless dense-f32 codec, so the forwarded
+        // partial is bit-identical to the all-plain round)
         let edge_handle = edge.start("127.0.0.1:0").unwrap();
         let edge_addr = edge_handle.addr().to_string();
         std::thread::scope(|s| {
             for p in 0..4u64 {
                 let addr = edge_addr.clone();
                 s.spawn(move || {
-                    let mut c = NetClient::connect(&addr).unwrap();
                     let u = ModelUpdate::new(p, 1.0, 0, vec![1.0; 100]);
-                    let r = c.call(&Message::Upload(u)).unwrap();
-                    assert!(matches!(r, Message::Ack { redirect_to_dfs: false }), "{r:?}");
+                    if p % 2 == 0 {
+                        let mut c = NetClient::connect(&addr).unwrap();
+                        let r = c.call(&Message::Upload(u)).unwrap();
+                        assert!(matches!(r, Message::Ack { redirect_to_dfs: false }), "{r:?}");
+                    } else {
+                        let frame = crate::tensorstore::codec::encode_update(
+                            &u,
+                            crate::tensorstore::Encoding::DenseF32,
+                        );
+                        let mut c = NetClient::connect(&addr).unwrap();
+                        let r = c.call(&Message::UploadEnc { nonce: p, frame }).unwrap();
+                        assert!(matches!(r, Message::Ack { redirect_to_dfs: false }), "{r:?}");
+                    }
                 });
             }
         });

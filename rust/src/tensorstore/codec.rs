@@ -1,0 +1,677 @@
+//! Compressed update encodings: the wire codecs behind the encoded
+//! upload path.
+//!
+//! A client can ship its update in one of four encodings, negotiated
+//! per-upload by a tag byte inside the encoded frame:
+//!
+//! | tag | encoding   | payload                                        |
+//! |-----|------------|------------------------------------------------|
+//! | 0   | `DenseF32` | raw little-endian f32s (byte-identical data)   |
+//! | 1   | `DenseF16` | IEEE binary16, round-to-nearest-even           |
+//! | 2   | `QuantI8`  | per-chunk `min`/`scale` (f32 each) + u8 codes  |
+//! | 3   | `TopK`     | `(index u32, value f32)` pairs, ascending      |
+//!
+//! Frame layout (CRC-first validation, like the plain update format):
+//!
+//! ```text
+//! magic   u32  = 0x4541_3032 ("EA02")
+//! party   u64
+//! count   f32  (FedAvg weight)
+//! round   u32
+//! enc     u8   encoding tag
+//! pad     [u8; 3]  (zero; keeps the payload offset a multiple of 4)
+//! elems   u64  original (dense) f32 element count
+//! plen    u64  payload byte length
+//! payload [u8; plen]
+//! crc32   u32  over everything above
+//! ```
+//!
+//! The header is 40 bytes, so a `DenseF32` payload read into the network
+//! layer's 4-aligned pooled buffer (behind the 8-byte upload nonce: offset
+//! 48) stays 4-aligned and decodes as a *borrowed* `&[f32]` — the encoded
+//! upload path keeps the zero-copy fold for full-precision frames.
+//! Compressed payloads dequantize into an owned `Vec<f32>` at decode time,
+//! so the accumulator stays f32 everywhere ("dequantize-on-fold") and the
+//! fold kernels never see a non-f32 lane.
+//!
+//! **Exactness boundary**: `DenseF32` is bit-identical end to end.
+//! `DenseF16` carries ≤ 2⁻¹¹ relative error per element (plus overflow to
+//! ±inf past ~65504); `QuantI8` carries ≤ `scale/2` absolute error per
+//! element where `scale = (chunk_max − chunk_min)/255`; `TopK` zeroes
+//! every dropped coordinate.  Compressed encodings are for clients who
+//! opt into lossy uploads — every parity pin in the crate runs on
+//! `DenseF32`.  Quantization assumes finite inputs: NaN/Inf in a
+//! `QuantI8`/`TopK` frame quantize to garbage (the frame still
+//! roundtrips structurally; it is the client's job not to ship them).
+
+use std::borrow::Cow;
+use std::cmp::Ordering;
+
+use super::wire::MAX_ELEMS;
+use super::{bytes_as_f32s, bytes_to_f32s, crc32, f32s_as_bytes, ModelUpdate, ModelUpdateView, WireError};
+
+/// Magic for encoded-update frames ("EA02"); the plain format is "EA01".
+pub const ENC_MAGIC: u32 = 0x4541_3032;
+
+/// Encoded frame header bytes (through `plen`, excluding payload + crc).
+pub const ENC_HEADER: usize = 4 + 8 + 4 + 4 + 1 + 3 + 8 + 8;
+
+/// Elements per quantization chunk: each chunk carries its own
+/// `min`/`scale` pair so one outlier only widens its own chunk's step.
+pub const QUANT_CHUNK: usize = 4096;
+
+/// The wire encoding of one upload.  `TopK` carries its keep ratio in
+/// permille (e.g. 100 = keep the top 10% of coordinates by magnitude) —
+/// the ratio parameterises the *encoder* and the planner's byte model;
+/// the frame itself stores the actual pair count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Encoding {
+    DenseF32,
+    DenseF16,
+    QuantI8,
+    TopK { permille: u16 },
+}
+
+impl Default for Encoding {
+    fn default() -> Encoding {
+        Encoding::DenseF32
+    }
+}
+
+impl Encoding {
+    /// The frame tag byte.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Encoding::DenseF32 => 0,
+            Encoding::DenseF16 => 1,
+            Encoding::QuantI8 => 2,
+            Encoding::TopK { .. } => 3,
+        }
+    }
+
+    /// Whether this encoding is lossless (bit-identical data end to end).
+    pub fn is_dense_f32(&self) -> bool {
+        matches!(self, Encoding::DenseF32)
+    }
+
+    /// Parse a config token: `dense_f32` | `f16` | `int8` | `topk` |
+    /// `topk:<permille>`.  Unknown tokens are `None` (the config layer
+    /// falls back to dense).
+    pub fn parse(s: &str) -> Option<Encoding> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "dense_f32" | "f32" | "dense" => Some(Encoding::DenseF32),
+            "f16" | "dense_f16" => Some(Encoding::DenseF16),
+            "int8" | "quant_i8" | "i8" => Some(Encoding::QuantI8),
+            "topk" => Some(Encoding::TopK { permille: 100 }),
+            _ => {
+                let rest = s.strip_prefix("topk:")?;
+                let p: u16 = rest.parse().ok()?;
+                Some(Encoding::TopK { permille: p.clamp(1, 1000) })
+            }
+        }
+    }
+
+    /// The config/round-trip token [`Encoding::parse`] accepts.
+    pub fn token(&self) -> String {
+        match self {
+            Encoding::DenseF32 => "dense_f32".to_string(),
+            Encoding::DenseF16 => "f16".to_string(),
+            Encoding::QuantI8 => "int8".to_string(),
+            Encoding::TopK { permille } => format!("topk:{permille}"),
+        }
+    }
+
+    /// How many coordinates a `TopK` encoder keeps for `elems` elements
+    /// (at least 1 for a non-empty update).
+    pub fn keep_count(&self, elems: u64) -> u64 {
+        match self {
+            Encoding::TopK { permille } => {
+                if elems == 0 {
+                    0
+                } else {
+                    ((elems as u128 * *permille as u128) / 1000).max(1).min(elems as u128) as u64
+                }
+            }
+            _ => elems,
+        }
+    }
+
+    /// Payload bytes for an `elems`-element update under this encoding —
+    /// the byte model the planner's `update_bytes` terms use.
+    pub fn payload_bytes(&self, elems: u64) -> u64 {
+        match self {
+            Encoding::DenseF32 => 4 * elems,
+            Encoding::DenseF16 => 2 * elems,
+            Encoding::QuantI8 => 8 * elems.div_ceil(QUANT_CHUNK as u64) + elems,
+            Encoding::TopK { .. } => 8 * self.keep_count(elems),
+        }
+    }
+
+    /// Full encoded-frame bytes on the wire (header + payload + crc).
+    pub fn wire_bytes(&self, elems: u64) -> u64 {
+        ENC_HEADER as u64 + self.payload_bytes(elems) + 4
+    }
+
+    /// Bytes the receiver must run through the dequantizer before the
+    /// fold can consume f32s — zero for `DenseF32` (zero-copy borrow),
+    /// the payload size otherwise.  Priced at the cost model's
+    /// `dequant_bps`.
+    pub fn dequant_bytes(&self, elems: u64) -> u64 {
+        if self.is_dense_f32() {
+            0
+        } else {
+            self.payload_bytes(elems)
+        }
+    }
+}
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even (hand-rolled: the
+/// crate deliberately takes no `half` dependency).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 255 {
+        // Inf stays inf; NaN keeps a non-zero mantissa.
+        let payload = if man != 0 { 0x0200 | ((man >> 13) as u16 & 0x03FF) } else { 0 };
+        return sign | 0x7C00 | payload;
+    }
+    let e = exp - 127 + 15;
+    if e >= 31 {
+        return sign | 0x7C00; // overflow → ±inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow → ±0
+        }
+        // Subnormal half: shift the (implicit-bit) mantissa down, RNE.
+        let man = man | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = (man >> shift) as u16;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let round_up = rem > halfway || (rem == halfway && (half & 1) == 1);
+        return sign | (half + round_up as u16);
+    }
+    // Normal: 23 → 10 mantissa bits, RNE; a rounding carry correctly
+    // bumps the exponent (up to inf).
+    let half = (((e as u32) << 10) | (man >> 13)) as u16;
+    let rem = man & 0x1FFF;
+    let round_up = rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1);
+    sign | (half + round_up as u16)
+}
+
+/// IEEE binary16 bits → f32 (exact: every half value is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 31 {
+        sign | 0x7F80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal half: normalise into a f32 exponent.
+            let mut e: u32 = 113; // 127 - 15 + 1
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x03FF) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Quantize one chunk to u8 codes; returns `(min, scale)`.
+fn quant_chunk(chunk: &[f32], out: &mut Vec<u8>) -> (f32, f32) {
+    let mut min = f32::INFINITY;
+    let mut max = f32::NEG_INFINITY;
+    for &x in chunk {
+        min = min.min(x);
+        max = max.max(x);
+    }
+    if !min.is_finite() || !max.is_finite() || max <= min {
+        // Constant (or non-finite) chunk: scale 0, every code 0, decode
+        // reproduces `min` exactly for the constant case.
+        let min = if min.is_finite() { min } else { 0.0 };
+        out.extend(std::iter::repeat(0u8).take(chunk.len()));
+        return (min, 0.0);
+    }
+    let scale = (max - min) / 255.0;
+    for &x in chunk {
+        let q = ((x - min) / scale).round().clamp(0.0, 255.0) as u8;
+        out.push(q);
+    }
+    (min, scale)
+}
+
+/// Encode `u` under `enc`, appending the full frame to `out`.
+pub fn encode_update_into(u: &ModelUpdate, enc: Encoding, out: &mut Vec<u8>) {
+    let start = out.len();
+    let elems = u.data.len() as u64;
+    out.reserve(ENC_HEADER + enc.payload_bytes(elems) as usize + 4);
+    out.extend_from_slice(&ENC_MAGIC.to_le_bytes());
+    out.extend_from_slice(&u.party.to_le_bytes());
+    out.extend_from_slice(&u.count.to_le_bytes());
+    out.extend_from_slice(&u.round.to_le_bytes());
+    out.push(enc.tag());
+    out.extend_from_slice(&[0u8; 3]);
+    out.extend_from_slice(&elems.to_le_bytes());
+    let plen_pos = out.len();
+    out.extend_from_slice(&0u64.to_le_bytes()); // patched below
+    let payload_start = out.len();
+    match enc {
+        Encoding::DenseF32 => out.extend_from_slice(f32s_as_bytes(&u.data)),
+        Encoding::DenseF16 => {
+            for &x in &u.data {
+                out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+            }
+        }
+        Encoding::QuantI8 => {
+            // All chunk (min, scale) headers first, then all codes — the
+            // code region starts at a fixed offset so decode is one pass.
+            let nchunks = u.data.len().div_ceil(QUANT_CHUNK);
+            let mut codes = Vec::with_capacity(u.data.len());
+            let mut heads = Vec::with_capacity(nchunks * 8);
+            for chunk in u.data.chunks(QUANT_CHUNK) {
+                let (min, scale) = quant_chunk(chunk, &mut codes);
+                heads.extend_from_slice(&min.to_le_bytes());
+                heads.extend_from_slice(&scale.to_le_bytes());
+            }
+            out.extend_from_slice(&heads);
+            out.extend_from_slice(&codes);
+        }
+        Encoding::TopK { .. } => {
+            let n = u.data.len();
+            let k = enc.keep_count(elems) as usize;
+            if k > 0 {
+                let mut idx: Vec<u32> = (0..n as u32).collect();
+                let mag = |i: u32| u.data[i as usize].abs();
+                // Largest magnitude first; ties broken by index so the
+                // encoding is deterministic.
+                let desc = |a: &u32, b: &u32| {
+                    mag(*b).partial_cmp(&mag(*a)).unwrap_or(Ordering::Equal).then(a.cmp(b))
+                };
+                if k < n {
+                    idx.select_nth_unstable_by(k - 1, desc);
+                    idx.truncate(k);
+                }
+                idx.sort_unstable();
+                for i in idx {
+                    out.extend_from_slice(&i.to_le_bytes());
+                    out.extend_from_slice(&u.data[i as usize].to_le_bytes());
+                }
+            }
+        }
+    }
+    let plen = (out.len() - payload_start) as u64;
+    out[plen_pos..plen_pos + 8].copy_from_slice(&plen.to_le_bytes());
+    let crc = crc32(&out[start..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+}
+
+/// Encode `u` under `enc` into a fresh frame.
+pub fn encode_update(u: &ModelUpdate, enc: Encoding) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_update_into(u, enc, &mut out);
+    out
+}
+
+fn bad(msg: String) -> WireError {
+    WireError::Io(std::io::Error::new(std::io::ErrorKind::InvalidData, msg))
+}
+
+/// A decoded encoded-update frame whose payload still lives in the
+/// caller's buffer.  [`EncodedUpdateView::decode`] validates CRC-first
+/// (then magic, tag, caps, declared lengths) exactly like the plain
+/// format; [`EncodedUpdateView::to_model_view`] materialises the dense
+/// f32 view the fold consumes — borrowing in place for an aligned
+/// `DenseF32` payload, dequantizing into an owned vector otherwise.
+#[derive(Debug)]
+pub struct EncodedUpdateView<'a> {
+    pub party: u64,
+    pub count: f32,
+    pub round: u32,
+    /// The frame's encoding tag byte (0..=3).
+    pub tag: u8,
+    /// Dense element count the payload decodes to.
+    pub elems: u64,
+    payload: &'a [u8],
+}
+
+impl<'a> EncodedUpdateView<'a> {
+    pub fn decode(buf: &'a [u8]) -> Result<EncodedUpdateView<'a>, WireError> {
+        if buf.len() < ENC_HEADER + 4 {
+            return Err(WireError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "short encoded frame",
+            )));
+        }
+        let body = &buf[..buf.len() - 4];
+        let want = u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
+        let got = crc32(body);
+        if want != got {
+            return Err(WireError::BadCrc { want, got });
+        }
+        let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+        if magic != ENC_MAGIC {
+            return Err(WireError::BadMagic(magic));
+        }
+        let party = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+        let count = f32::from_le_bytes(buf[12..16].try_into().unwrap());
+        let round = u32::from_le_bytes(buf[16..20].try_into().unwrap());
+        let tag = buf[20];
+        if tag > 3 {
+            return Err(bad(format!("unknown encoding tag {tag}")));
+        }
+        let elems = u64::from_le_bytes(buf[24..32].try_into().unwrap());
+        if elems > MAX_ELEMS {
+            return Err(WireError::TooLarge(elems));
+        }
+        let plen = u64::from_le_bytes(buf[32..40].try_into().unwrap());
+        let payload = &body[ENC_HEADER..];
+        if payload.len() as u64 != plen {
+            return Err(bad(format!("declared {plen} payload bytes, found {}", payload.len())));
+        }
+        // Per-encoding structural checks, before any allocation.
+        let ok = match tag {
+            0 => plen == 4 * elems,
+            1 => plen == 2 * elems,
+            2 => plen == 8 * elems.div_ceil(QUANT_CHUNK as u64) + elems,
+            3 => plen % 8 == 0 && plen / 8 <= elems,
+            _ => unreachable!(),
+        };
+        if !ok {
+            return Err(bad(format!("tag {tag}: payload {plen} bytes inconsistent with {elems} elems")));
+        }
+        Ok(EncodedUpdateView { party, count, round, tag, elems, payload })
+    }
+
+    /// Decode the payload to dense f32 data: a zero-copy borrow for an
+    /// aligned `DenseF32` payload, an owned dequantized vector otherwise.
+    pub fn decode_data(&self) -> Result<Cow<'a, [f32]>, WireError> {
+        match self.tag {
+            0 => Ok(match bytes_as_f32s(self.payload) {
+                Some(s) => {
+                    super::note_decode_borrowed();
+                    Cow::Borrowed(s)
+                }
+                None => {
+                    super::note_decode_copied();
+                    Cow::Owned(bytes_to_f32s(self.payload))
+                }
+            }),
+            1 => {
+                super::note_decode_copied();
+                let mut out = Vec::with_capacity(self.elems as usize);
+                for h in self.payload.chunks_exact(2) {
+                    out.push(f16_bits_to_f32(u16::from_le_bytes(h.try_into().unwrap())));
+                }
+                Ok(Cow::Owned(out))
+            }
+            2 => {
+                super::note_decode_copied();
+                let n = self.elems as usize;
+                let nchunks = n.div_ceil(QUANT_CHUNK);
+                let heads = &self.payload[..nchunks * 8];
+                let codes = &self.payload[nchunks * 8..];
+                let mut out = Vec::with_capacity(n);
+                for (c, chunk) in codes.chunks(QUANT_CHUNK).enumerate() {
+                    let min = f32::from_le_bytes(heads[c * 8..c * 8 + 4].try_into().unwrap());
+                    let scale = f32::from_le_bytes(heads[c * 8 + 4..c * 8 + 8].try_into().unwrap());
+                    for &q in chunk {
+                        out.push(min + q as f32 * scale);
+                    }
+                }
+                Ok(Cow::Owned(out))
+            }
+            3 => {
+                super::note_decode_copied();
+                let mut out = vec![0f32; self.elems as usize];
+                let mut prev: Option<u32> = None;
+                for pair in self.payload.chunks_exact(8) {
+                    let i = u32::from_le_bytes(pair[..4].try_into().unwrap());
+                    let v = f32::from_le_bytes(pair[4..].try_into().unwrap());
+                    if i as u64 >= self.elems {
+                        return Err(bad(format!("sparse index {i} past {} elems", self.elems)));
+                    }
+                    if let Some(p) = prev {
+                        if i <= p {
+                            return Err(bad(format!("sparse indices not ascending at {i}")));
+                        }
+                    }
+                    prev = Some(i);
+                    out[i as usize] = v;
+                }
+                Ok(Cow::Owned(out))
+            }
+            _ => unreachable!("tag validated at decode"),
+        }
+    }
+
+    /// The dense [`ModelUpdateView`] the round ingest folds.
+    pub fn to_model_view(&self) -> Result<ModelUpdateView<'a>, WireError> {
+        Ok(ModelUpdateView {
+            party: self.party,
+            count: self.count,
+            round: self.round,
+            data: self.decode_data()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(n: usize, seed: u64) -> ModelUpdate {
+        let mut rng = Rng::new(seed);
+        let mut data = vec![0f32; n];
+        rng.fill_gaussian_f32(&mut data, 1.0);
+        ModelUpdate::new(7, 32.0, 5, data)
+    }
+
+    #[test]
+    fn dense_f32_roundtrips_bit_exact() {
+        for n in [0usize, 1, 3, 1000] {
+            let u = sample(n, 11);
+            let frame = encode_update(&u, Encoding::DenseF32);
+            assert_eq!(frame.len() as u64, Encoding::DenseF32.wire_bytes(n as u64));
+            let v = EncodedUpdateView::decode(&frame).unwrap();
+            assert_eq!((v.party, v.count, v.round, v.tag, v.elems), (7, 32.0, 5, 0, n as u64));
+            let mv = v.to_model_view().unwrap();
+            assert_eq!(&*mv.data, &u.data[..]);
+        }
+    }
+
+    #[test]
+    fn f16_conversion_matches_known_values() {
+        // Exactly representable values roundtrip exactly.
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 1.0 / 1024.0] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)).to_bits(), x.to_bits(), "{x}");
+        }
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF);
+        // Overflow saturates to inf; inf/nan are preserved as such.
+        assert_eq!(f32_to_f16_bits(1e6), 0x7C00);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xFC00);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Subnormal halves decode exactly.
+        assert_eq!(f16_bits_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f16_bits_to_f32(0x0200), 2.0f32.powi(-15));
+        // RNE: 1 + 2^-11 is exactly halfway between 1.0 and the next
+        // half; even mantissa (1.0) wins.
+        assert_eq!(f32_to_f16_bits(1.0 + 2.0f32.powi(-11)), 0x3C00);
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 2.0f32.powi(-11)), 0x3C02);
+    }
+
+    #[test]
+    fn f16_frame_error_is_bounded() {
+        let u = sample(3000, 13);
+        let frame = encode_update(&u, Encoding::DenseF16);
+        assert_eq!(frame.len() as u64, Encoding::DenseF16.wire_bytes(3000));
+        let mv = EncodedUpdateView::decode(&frame).unwrap().to_model_view().unwrap();
+        for (a, b) in u.data.iter().zip(mv.data.iter()) {
+            assert!((a - b).abs() <= a.abs() * 4.9e-4 + 6e-8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quant_i8_error_is_bounded_per_chunk() {
+        // Two chunks with very different ranges: each chunk's error is
+        // bounded by ITS OWN scale, not the global one.
+        let mut data = vec![0f32; QUANT_CHUNK + 500];
+        let mut rng = Rng::new(3);
+        rng.fill_gaussian_f32(&mut data[..QUANT_CHUNK], 1.0);
+        for v in data[QUANT_CHUNK..].iter_mut() {
+            *v = 1000.0 + rng.gen_range(100) as f32;
+        }
+        let u = ModelUpdate::new(1, 1.0, 0, data);
+        let frame = encode_update(&u, Encoding::QuantI8);
+        assert_eq!(frame.len() as u64, Encoding::QuantI8.wire_bytes(u.data.len() as u64));
+        let mv = EncodedUpdateView::decode(&frame).unwrap().to_model_view().unwrap();
+        for (c, (orig, deq)) in
+            u.data.chunks(QUANT_CHUNK).zip(mv.data.chunks(QUANT_CHUNK)).enumerate()
+        {
+            let min = orig.iter().cloned().fold(f32::INFINITY, f32::min);
+            let max = orig.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let scale = (max - min) / 255.0;
+            for (a, b) in orig.iter().zip(deq.iter()) {
+                assert!(
+                    (a - b).abs() <= scale * 0.5001 + 1e-6,
+                    "chunk {c}: {a} vs {b} (scale {scale})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quant_i8_constant_chunk_is_exact() {
+        let u = ModelUpdate::new(1, 1.0, 0, vec![3.25f32; 100]);
+        let mv = EncodedUpdateView::decode(&encode_update(&u, Encoding::QuantI8))
+            .unwrap()
+            .to_model_view()
+            .unwrap();
+        assert_eq!(&*mv.data, &u.data[..]);
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes_exactly() {
+        let data = vec![0.1f32, -5.0, 0.2, 4.0, -0.3, 3.0, 0.01, -2.0, 0.0, 1.0];
+        let u = ModelUpdate::new(1, 1.0, 0, data);
+        let enc = Encoding::TopK { permille: 400 }; // keep 4 of 10
+        assert_eq!(enc.keep_count(10), 4);
+        let frame = encode_update(&u, enc);
+        assert_eq!(frame.len() as u64, enc.wire_bytes(10));
+        let mv = EncodedUpdateView::decode(&frame).unwrap().to_model_view().unwrap();
+        assert_eq!(
+            &*mv.data,
+            &[0.0, -5.0, 0.0, 4.0, 0.0, 3.0, 0.0, -2.0, 0.0, 0.0][..]
+        );
+    }
+
+    #[test]
+    fn corrupt_encoded_frames_are_typed_errors() {
+        let u = sample(300, 7);
+        for enc in [
+            Encoding::DenseF32,
+            Encoding::DenseF16,
+            Encoding::QuantI8,
+            Encoding::TopK { permille: 100 },
+        ] {
+            // bit flip in the payload → CRC (validated FIRST)
+            let mut frame = encode_update(&u, enc);
+            frame[ENC_HEADER + 2] ^= 0x40;
+            assert!(matches!(EncodedUpdateView::decode(&frame), Err(WireError::BadCrc { .. })));
+            // truncation → short/Io
+            let frame = encode_update(&u, enc);
+            assert!(EncodedUpdateView::decode(&frame[..frame.len() - 5]).is_err());
+        }
+        // wrong magic with a fixed-up crc → BadMagic
+        let mut frame = encode_update(&u, Encoding::DenseF16);
+        frame[0] ^= 0x01;
+        let body = frame.len() - 4;
+        let crc = crc32(&frame[..body]);
+        frame[body..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(EncodedUpdateView::decode(&frame), Err(WireError::BadMagic(_))));
+        // unknown tag with a fixed-up crc → typed decode error
+        let mut frame = encode_update(&u, Encoding::DenseF16);
+        frame[20] = 9;
+        let crc = crc32(&frame[..body]);
+        frame[body..].copy_from_slice(&crc.to_le_bytes());
+        assert!(EncodedUpdateView::decode(&frame).is_err());
+    }
+
+    #[test]
+    fn sparse_index_abuse_is_rejected() {
+        let u = ModelUpdate::new(1, 1.0, 0, vec![1.0; 16]);
+        let enc = Encoding::TopK { permille: 500 };
+        let mut frame = encode_update(&u, enc);
+        // point the first pair's index past the dense length, fix the crc
+        let pos = ENC_HEADER;
+        frame[pos..pos + 4].copy_from_slice(&99u32.to_le_bytes());
+        let body = frame.len() - 4;
+        let crc = crc32(&frame[..body]);
+        frame[body..].copy_from_slice(&crc.to_le_bytes());
+        let v = EncodedUpdateView::decode(&frame).unwrap();
+        assert!(v.decode_data().is_err());
+    }
+
+    #[test]
+    fn byte_model_matches_real_frames() {
+        for n in [1u64, 100, 4096, 10_000] {
+            for enc in [
+                Encoding::DenseF32,
+                Encoding::DenseF16,
+                Encoding::QuantI8,
+                Encoding::TopK { permille: 100 },
+                Encoding::TopK { permille: 250 },
+            ] {
+                let u = sample(n as usize, n);
+                assert_eq!(
+                    encode_update(&u, enc).len() as u64,
+                    enc.wire_bytes(n),
+                    "{} n={n}",
+                    enc.token()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn encoding_tokens_roundtrip() {
+        for enc in [
+            Encoding::DenseF32,
+            Encoding::DenseF16,
+            Encoding::QuantI8,
+            Encoding::TopK { permille: 100 },
+            Encoding::TopK { permille: 37 },
+        ] {
+            assert_eq!(Encoding::parse(&enc.token()), Some(enc));
+        }
+        assert_eq!(Encoding::parse("topk"), Some(Encoding::TopK { permille: 100 }));
+        assert_eq!(Encoding::parse("TOPK:2000"), Some(Encoding::TopK { permille: 1000 }));
+        assert_eq!(Encoding::parse("banana"), None);
+    }
+
+    #[test]
+    fn compressed_frames_are_smaller_than_dense() {
+        let n = 100_000u64;
+        let dense = Encoding::DenseF32.wire_bytes(n);
+        assert!(Encoding::DenseF16.wire_bytes(n) < dense);
+        assert!(Encoding::QuantI8.wire_bytes(n) < dense);
+        assert!(Encoding::TopK { permille: 100 }.wire_bytes(n) < dense / 4);
+        assert_eq!(Encoding::DenseF32.dequant_bytes(n), 0);
+        assert!(Encoding::QuantI8.dequant_bytes(n) > 0);
+    }
+}

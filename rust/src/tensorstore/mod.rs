@@ -16,11 +16,58 @@
 //! crc32  u32  over everything above
 //! ```
 
+pub mod codec;
 pub mod partial;
 pub mod wire;
 
+pub use codec::{EncodedUpdateView, Encoding};
 pub use partial::{PartialAggregate, PartialAggregateView};
 pub use wire::{ModelUpdate, ModelUpdateView, WireError};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide borrowed-vs-copied decode tallies — how often the
+/// zero-copy fast path (`Cow::Borrowed` straight out of the wire buffer)
+/// actually fired vs the copying fallback.  A misaligned frame silently
+/// falling back to a copy is a perf regression the numbers would never
+/// show; these counters make it visible in round logs and bench output.
+static DECODE_BORROWED: AtomicU64 = AtomicU64::new(0);
+static DECODE_COPIED: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-wide decode-path tallies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecodeStats {
+    /// Decodes that borrowed f32 data in place (zero-copy).
+    pub borrowed: u64,
+    /// Decodes that fell back to copying the payload.
+    pub copied: u64,
+}
+
+impl DecodeStats {
+    /// Tallies accrued since `earlier` (both taken via [`decode_stats`]).
+    pub fn since(&self, earlier: DecodeStats) -> DecodeStats {
+        DecodeStats {
+            borrowed: self.borrowed.saturating_sub(earlier.borrowed),
+            copied: self.copied.saturating_sub(earlier.copied),
+        }
+    }
+}
+
+/// Read the current process-wide decode tallies.
+pub fn decode_stats() -> DecodeStats {
+    DecodeStats {
+        borrowed: DECODE_BORROWED.load(Ordering::Relaxed),
+        copied: DECODE_COPIED.load(Ordering::Relaxed),
+    }
+}
+
+pub(crate) fn note_decode_borrowed() {
+    DECODE_BORROWED.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn note_decode_copied() {
+    DECODE_COPIED.fetch_add(1, Ordering::Relaxed);
+}
 
 /// Slice a flat parameter vector into fixed-length chunks, zero-padding the
 /// tail — the geometry the AOT fusion artifacts expect (`chunk_c` f32 each).

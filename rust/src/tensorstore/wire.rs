@@ -46,7 +46,7 @@ impl From<std::io::Error> for WireError {
 
 /// Hard cap on declared element count (16 Gi elements = 64 GiB) so corrupt
 /// headers cannot trigger absurd allocations.
-const MAX_ELEMS: u64 = 16 << 30;
+pub(crate) const MAX_ELEMS: u64 = 16 << 30;
 
 impl ModelUpdate {
     pub fn new(party: u64, count: f32, round: u32, data: Vec<f32>) -> ModelUpdate {
@@ -173,8 +173,14 @@ impl<'a> ModelUpdateView<'a> {
             )));
         }
         let data = match bytes_as_f32s(raw) {
-            Some(s) => Cow::Borrowed(s),
-            None => Cow::Owned(bytes_to_f32s(raw)),
+            Some(s) => {
+                super::note_decode_borrowed();
+                Cow::Borrowed(s)
+            }
+            None => {
+                super::note_decode_copied();
+                Cow::Owned(bytes_to_f32s(raw))
+            }
         };
         Ok(ModelUpdateView { party, count, round, data })
     }
@@ -332,6 +338,34 @@ mod tests {
         let v = ModelUpdateView::decode(&bytes[..]).unwrap();
         assert!(matches!(v.data, Cow::Borrowed(_)), "aligned decode must borrow");
         assert_eq!(v.to_update(), u);
+    }
+
+    #[test]
+    fn decode_counters_track_borrow_vs_copy() {
+        use crate::tensorstore::decode_stats;
+        let u = sample(50);
+        let enc = u.encode();
+        let before = decode_stats();
+        // Force the copy path: place the frame at an address ≡ 1 (mod 4)
+        // so the payload (at frame offset 28) is misaligned for f32.
+        let mut raw = vec![0u8; enc.len() + 4];
+        let off = (5 - raw.as_ptr() as usize % 4) % 4;
+        raw[off..off + enc.len()].copy_from_slice(&enc);
+        let v = ModelUpdateView::decode(&raw[off..off + enc.len()]).unwrap();
+        assert!(matches!(v.data, Cow::Owned(_)));
+        let mid = decode_stats();
+        assert!(mid.copied >= before.copied + 1, "copy decode must tally");
+        // Aligned pool → borrow path tallies the other counter.
+        let mut words = vec![0u32; enc.len().div_ceil(4)];
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u8, enc.len())
+        };
+        bytes.copy_from_slice(&enc);
+        let v = ModelUpdateView::decode(&bytes[..]).unwrap();
+        assert!(matches!(v.data, Cow::Borrowed(_)));
+        let after = decode_stats();
+        assert!(after.borrowed >= mid.borrowed + 1, "borrow decode must tally");
+        assert!(after.since(mid).borrowed >= 1);
     }
 
     #[test]

@@ -389,6 +389,107 @@ fn staleness_discounted_fold_matches_scalar_reference_out_of_order() {
         .unwrap_or_else(|e| panic!("discounted out-of-order fold vs scalar reference: {e}"));
 }
 
+/// The SIMD exactness contract at the ENGINE level: the production fold
+/// (dispatched AVX2/NEON/scalar kernels, whatever this machine picked)
+/// must be BIT-IDENTICAL to a reference built on the guaranteed-scalar
+/// loop — per algorithm, across shapes that exercise empty-lane,
+/// sub-lane, full-lane and ragged-tail vector geometries.  This is the
+/// test that fails if a kernel ever switches to fused multiply-add (one
+/// rounding instead of two) or reorders the per-element algebra.
+#[test]
+fn simd_fold_parity_with_strict_scalar_across_algorithms_and_shapes() {
+    use elastiagg::fusion::{kernels, Accumulator};
+
+    for name in ["fedavg", "iteravg", "clipped"] {
+        let algo = by_name(name).unwrap();
+        for (n, len, seed) in [
+            (3usize, 1usize, 101u64),
+            (5, 7, 102),
+            (4, 8, 103),
+            (6, 9, 104),
+            (9, 1_000, 105),
+            (3, 65_537, 106),
+        ] {
+            let us = updates(seed, n, len);
+            let mut f = StreamingFold::new(algo.as_ref(), 1, MemoryBudget::unbounded()).unwrap();
+            for u in &us {
+                f.fold(algo.as_ref(), u).unwrap();
+            }
+            let got = f.finish(algo.as_ref()).unwrap();
+
+            // the same algebra, same update order, through the
+            // strict-scalar accumulate (the non-identity transform path is
+            // scalar in production too — included for coverage symmetry)
+            let mut sum = vec![0f32; len];
+            let mut wtot = 0f64;
+            for u in &us {
+                let w = algo.weight(u);
+                if algo.identity_transform() {
+                    kernels::strict_scalar_accumulate(&mut sum, &u.data, w);
+                } else {
+                    for (s, x) in sum.iter_mut().zip(&u.data) {
+                        *s += w * algo.transform(*x);
+                    }
+                }
+                wtot += w as f64;
+            }
+            let want = algo.finalize(Accumulator { sum, wtot, n: n as u64 });
+            assert_eq!(got.len(), want.len());
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{name} n={n} len={len}: dispatched kernel `{}` diverged from strict scalar",
+                kernels::kernel_name()
+            );
+        }
+    }
+}
+
+/// Same contract for the merge side (`kernels::add` behind
+/// `Accumulator::merge`/`merge_parts`): two partials built strict-scalar,
+/// combined with a plain element-wise add, must match the production
+/// merge bit for bit across ragged shapes.
+#[test]
+fn simd_merge_parity_with_strict_scalar_reference() {
+    use elastiagg::fusion::{kernels, Accumulator};
+
+    let algo = by_name("fedavg").unwrap();
+    for (len, seed) in [(9usize, 111u64), (1_000, 112), (65_537, 113)] {
+        let us = updates(seed, 8, len);
+        let build = |range: &[ModelUpdate]| {
+            let mut f = StreamingFold::new(algo.as_ref(), 1, MemoryBudget::unbounded()).unwrap();
+            for u in range {
+                f.fold(algo.as_ref(), u).unwrap();
+            }
+            f
+        };
+        let mut a = build(&us[..5]);
+        a.merge(algo.as_ref(), build(&us[5..])).unwrap();
+        let got = a.finish(algo.as_ref()).unwrap();
+
+        let half = |range: &[ModelUpdate]| -> (Vec<f32>, f64) {
+            let mut sum = vec![0f32; len];
+            let mut wtot = 0f64;
+            for u in range {
+                let w = algo.weight(u);
+                kernels::strict_scalar_accumulate(&mut sum, &u.data, w);
+                wtot += w as f64;
+            }
+            (sum, wtot)
+        };
+        let (mut sa, wa) = half(&us[..5]);
+        let (sb, wb) = half(&us[5..]);
+        for (s, x) in sa.iter_mut().zip(&sb) {
+            *s += x;
+        }
+        let want = algo.finalize(Accumulator { sum: sa, wtot: wa + wb, n: 8 });
+        assert!(
+            got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "len={len}: merge through kernel `{}` diverged from scalar combine",
+            kernels::kernel_name()
+        );
+    }
+}
+
 #[test]
 fn parity_sweep_shapes_fedavg() {
     // shape sweep crossing the 65536-chunk boundary (multi-chunk XLA path)

@@ -7,7 +7,8 @@ use elastiagg::memsim::MemoryBudget;
 use elastiagg::metrics::Breakdown;
 use elastiagg::net::{protocol, read_frame, read_frame_into, write_frame, FrameBuf, Message};
 use elastiagg::tensorstore::{
-    ModelUpdate, ModelUpdateView, PartialAggregate, PartialAggregateView,
+    codec, EncodedUpdateView, Encoding, ModelUpdate, ModelUpdateView, PartialAggregate,
+    PartialAggregateView,
 };
 use elastiagg::util::prop::check;
 use elastiagg::util::rng::Rng;
@@ -166,6 +167,127 @@ fn prop_crc_enforced_on_zero_copy_path() {
         match ModelUpdateView::decode(buf.as_slice()) {
             Err(_) => Ok(()),
             Ok(_) => Err(format!("corruption at byte {pos} not detected")),
+        }
+    });
+}
+
+fn random_encoding(rng: &mut Rng) -> Encoding {
+    match rng.gen_range(4) {
+        0 => Encoding::DenseF32,
+        1 => Encoding::DenseF16,
+        2 => Encoding::QuantI8,
+        _ => Encoding::TopK { permille: 1 + rng.gen_range(999) as u16 },
+    }
+}
+
+#[test]
+fn prop_encoded_header_and_bytes_any_encoding() {
+    // Every encoding: the frame length matches the planner's byte model,
+    // and the header fields (party/count/round/elems) survive exactly.
+    check("enc-header", 80, |_, rng| {
+        let u = random_update(rng);
+        let enc = random_encoding(rng);
+        let frame = codec::encode_update(&u, enc);
+        if frame.len() as u64 != enc.wire_bytes(u.data.len() as u64) {
+            return Err(format!("{}: frame {} != byte model", enc.token(), frame.len()));
+        }
+        let v = EncodedUpdateView::decode(&frame).map_err(|e| e.to_string())?;
+        if (v.party, v.round, v.elems) != (u.party, u.round, u.data.len() as u64)
+            || v.count.to_bits() != u.count.to_bits()
+            || v.tag != enc.tag()
+        {
+            return Err(format!("{}: header mismatch", enc.token()));
+        }
+        let data = v.decode_data().map_err(|e| e.to_string())?;
+        if data.len() != u.data.len() {
+            return Err(format!("{}: {} elems out of {}", enc.token(), data.len(), u.data.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantized_decode_error_within_published_bound() {
+    // QuantI8's contract: each element lands within scale/2 of the
+    // original, where scale is ITS OWN chunk's (max-min)/255 — the bound
+    // the codec docs publish and the planner's lossy-opt-in relies on.
+    check("quant-bound", 60, |_, rng| {
+        let u = random_update(rng);
+        let frame = codec::encode_update(&u, Encoding::QuantI8);
+        let v = EncodedUpdateView::decode(&frame).map_err(|e| e.to_string())?;
+        let data = v.decode_data().map_err(|e| e.to_string())?;
+        for (c, (orig, deq)) in u
+            .data
+            .chunks(codec::QUANT_CHUNK)
+            .zip(data.chunks(codec::QUANT_CHUNK))
+            .enumerate()
+        {
+            let min = orig.iter().cloned().fold(f32::INFINITY, f32::min);
+            let max = orig.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let scale = (max - min) / 255.0;
+            for (a, b) in orig.iter().zip(deq.iter()) {
+                if (a - b).abs() > scale * 0.5001 + 1e-5 * scale.abs().max(1.0) {
+                    return Err(format!("chunk {c}: {a} vs {b} (scale {scale})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topk_sparse_frames_keep_largest_exactly() {
+    // TopK's contract: exactly keep_count survivors, each BIT-EXACT at
+    // its original index, every dropped coordinate zero, and no dropped
+    // magnitude exceeds a kept one.
+    check("topk-structure", 60, |_, rng| {
+        let u = random_update(rng);
+        if u.data.is_empty() {
+            return Ok(());
+        }
+        let permille = 1 + rng.gen_range(999) as u16;
+        let enc = Encoding::TopK { permille };
+        let frame = codec::encode_update(&u, enc);
+        let v = EncodedUpdateView::decode(&frame).map_err(|e| e.to_string())?;
+        let data = v.decode_data().map_err(|e| e.to_string())?;
+        let kept: Vec<usize> = (0..data.len()).filter(|&i| data[i].to_bits() != 0).collect();
+        let k = enc.keep_count(u.data.len() as u64) as usize;
+        // survivors whose original value was exactly +0.0 decode
+        // indistinguishable from dropped, so kept ≤ k, not ==
+        if kept.len() > k {
+            return Err(format!("{} survivors, keep_count {k}", kept.len()));
+        }
+        let mut kept_min = f32::INFINITY;
+        for &i in &kept {
+            if data[i].to_bits() != u.data[i].to_bits() {
+                return Err(format!("survivor {i} not bit-exact"));
+            }
+            kept_min = kept_min.min(u.data[i].abs());
+        }
+        let dropped_max = (0..data.len())
+            .filter(|&i| data[i].to_bits() == 0 && u.data[i].to_bits() != 0)
+            .map(|i| u.data[i].abs())
+            .fold(0.0f32, f32::max);
+        if kept.len() == k && dropped_max > kept_min {
+            return Err(format!("dropped |{dropped_max}| beats kept |{kept_min}|"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_encoded_single_bitflip_always_detected() {
+    // CRC-first on the encoded path too: one flipped bit anywhere in any
+    // encoding's frame must reject at decode, never hand data onward.
+    check("enc-bitflip", 60, |_, rng| {
+        let u = random_update(rng);
+        let enc = random_encoding(rng);
+        let mut frame = codec::encode_update(&u, enc);
+        let pos = rng.gen_range(frame.len() as u64) as usize;
+        frame[pos] ^= 1u8 << rng.gen_range(8);
+        match EncodedUpdateView::decode(&frame) {
+            Err(_) => Ok(()),
+            Ok(_) => Err(format!("{}: flip at byte {pos} not detected", enc.token())),
         }
     });
 }
