@@ -1,0 +1,264 @@
+//! Fig R (beyond the paper's numbered figures) — Byzantine-robust trimmed
+//! aggregation through the hierarchy.
+//!
+//! The paper's aggregation service assumes every shipped update is honest;
+//! this bench pins what the robust layer buys when that assumption breaks,
+//! and what it costs when it holds:
+//!
+//! * **[sweep]** — coordinate-wise trimmed mean (trim 0.2 → k = 4 of
+//!   n = 20) against a `Scale(500)` poisoning attack, attacker count `a`
+//!   swept 0..=9.  Below the per-side breakdown point (`a ≤ k`) the error
+//!   vs the honest-only trimmed reference stays at the honest-data scale —
+//!   INDEPENDENT of the 500× attack magnitude; past it (`a = 9`, where one
+//!   side always carries ≥ 5 poisoned values) the leak is unbounded and
+//!   the error degrades by an order of magnitude.  Every sweep point runs
+//!   BOTH flat-exact and the 2-relay extremes-sketch path (cap 8 ≥ k: the
+//!   exact regime) and the two must agree to merge tolerance — robustness
+//!   survives the tier division.
+//! * **[planner]** — the trimmed mean's hierarchical candidate is
+//!   enumerated AND priced strictly above FedAvg's on latency and dollars
+//!   (every forwarded partial hauls `2·cap` sketch lanes), but below the
+//!   naive `(1 + partial_overhead)` ceiling: only the root leg and the
+//!   relay→root wire pay the premium.
+//! * **[measured]** — a real 2-tier round over localhost TCP (3 relays ×
+//!   6 clients, a 2-party colluding cohort behind one relay) fuses within
+//!   merge tolerance of the flat exact trimmed mean and beats the naive
+//!   unweighted mean by ≥ 2× on distance to the honest-only reference.
+//!
+//! Machine-readable output: `BENCH_fig_robust_hierarchy.json`.
+
+use elastiagg::bench::{BenchJson, RoundRecord};
+use elastiagg::cluster::{CostModel, VirtualCluster};
+use elastiagg::coordinator::{RoundOutcome, WorkloadClassifier};
+use elastiagg::engine::StreamingFold;
+use elastiagg::fusion::{exact_trimmed_mean, FedAvg, FusionAlgorithm, TrimmedMean};
+use elastiagg::memsim::MemoryBudget;
+use elastiagg::planner::{DispatchPlanner, DispatchPolicy, PlanKind, PlannerConfig, PricingModel};
+use elastiagg::sim::byzantine::{byz_update, fleet_updates};
+use elastiagg::sim::{run_byzantine_tier_scenario, Attack, ByzTierConfig};
+use elastiagg::tensorstore::{ModelUpdate, PartialAggregate, PartialAggregateView};
+use elastiagg::util::json::Json;
+use elastiagg::util::prop::all_close;
+
+const SEED: u64 = 0xB12A;
+const N: usize = 20;
+const LEN: usize = 1024;
+const TRIM: f32 = 0.2;
+const CAP: usize = 8;
+const ATTACK: Attack = Attack::Scale(500.0);
+const UPDATE_46MB: u64 = 46 << 20;
+const EDGES: usize = 4;
+
+/// The sweep fleet at attacker count `a`: parties `0..a` ship poison.
+fn sweep_fleet(a: usize) -> Vec<ModelUpdate> {
+    (0..N as u64)
+        .map(|p| byz_update(SEED, p, 0, LEN, (p < a as u64).then_some(ATTACK)))
+        .collect()
+}
+
+/// Fold `us` through 2 relays (extremes-sketch partials over the real wire
+/// encoding) into a root trimmed mean.
+fn tier_trimmed(algo: &TrimmedMean, us: &[ModelUpdate]) -> Vec<f32> {
+    let relay = |chunk: &[ModelUpdate], edge: u64| {
+        let mut f = StreamingFold::new(algo, 1, MemoryBudget::unbounded()).unwrap();
+        for u in chunk {
+            f.fold(algo, u).unwrap();
+        }
+        let acc = f.into_accumulator().unwrap();
+        let parties: Vec<u64> = chunk.iter().map(|u| u.party).collect();
+        PartialAggregate::new(edge, 0, acc.wtot, parties, acc.sum).with_sketch(acc.sketch)
+    };
+    let (pa, pb) = (relay(&us[..N / 2], 0), relay(&us[N / 2..], 1));
+    let mut root = StreamingFold::new(algo, 1, MemoryBudget::unbounded()).unwrap();
+    for p in [pa, pb] {
+        let wire = p.encode();
+        let v = PartialAggregateView::decode(&wire).unwrap();
+        root.fold_partial_sketch(algo, &v.sum, v.wtot, v.parties.len() as u64, v.sketch.as_deref())
+            .unwrap();
+    }
+    root.finish(algo).unwrap()
+}
+
+fn rms(a: &[f32], b: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        s += ((x - y) as f64).powi(2);
+    }
+    (s / a.len() as f64).sqrt()
+}
+
+fn main() {
+    elastiagg::bench::banner(
+        "Fig R — Byzantine-robust trimmed aggregation through the hierarchy",
+        "bounded below the breakdown point, priced by the planner, measured over TCP",
+    );
+    let mut bench_json = BenchJson::new("fig_robust_hierarchy");
+    bench_json.meta("clients", Json::num(N as f64));
+    bench_json.meta("trim_fraction", Json::num(TRIM as f64));
+    bench_json.meta("sketch_cap", Json::num(CAP as f64));
+
+    // ---- part 1: attack-fraction sweep, flat vs 2-tier sketch path -----
+    let algo = TrimmedMean::new(TRIM, CAP);
+    let k = algo.k_for(N as u64);
+    assert_eq!(k, 4, "n=20 at trim 0.2 trims 4 per side");
+    let honest: Vec<ModelUpdate> = sweep_fleet(0);
+    let honest_refs: Vec<&ModelUpdate> = honest.iter().collect();
+    let reference = exact_trimmed_mean(&honest_refs, TRIM);
+
+    let mut errs = Vec::new();
+    println!("\n[sweep] n={N}, len={LEN}, trim {TRIM} (k={k}), attack {ATTACK:?}:");
+    for a in 0..=9usize {
+        let fleet = sweep_fleet(a);
+        let refs: Vec<&ModelUpdate> = fleet.iter().collect();
+        let flat = exact_trimmed_mean(&refs, TRIM);
+        let tier = tier_trimmed(&algo, &fleet);
+        // cap 8 ≥ k = 4: the sketch path is exact — tiers change nothing
+        // beyond f32 re-association (the poison's ±500σ terms cancel in
+        // the sum-then-subtract path, so absolute noise is ~1e-4).
+        all_close(&tier, &flat, 1e-3, 1e-4)
+            .unwrap_or_else(|e| panic!("a={a}: flat/2-tier trimmed parity: {e}"));
+        let err = rms(&tier, &reference);
+        println!("  a={a}: rms error vs honest-only reference = {err:.5}");
+        bench_json.round(RoundRecord {
+            round: a as u32,
+            label: format!("sweep:attackers={a}"),
+            ..Default::default()
+        });
+        errs.push(err);
+    }
+    bench_json.meta("sweep_rms_err", Json::Arr(errs.iter().map(|&e| Json::num(e)).collect()));
+
+    let bounded_max = errs[..=k].iter().cloned().fold(0.0f64, f64::max);
+    assert!(
+        bounded_max < 0.1,
+        "a ≤ k: the error must stay at the honest-data scale (σ = 0.1), got {bounded_max}"
+    );
+    assert!(
+        errs[9] > 0.5 && errs[9] > 4.0 * bounded_max,
+        "a = 9 (one side always leaks ≥ 1 poisoned value past k = 4): the error \
+         must degrade, got {} vs bounded max {bounded_max}",
+        errs[9]
+    );
+    println!(
+        "  bounded regime (a ≤ {k}) max {bounded_max:.5}; past breakdown (a=9) {:.5}",
+        errs[9]
+    );
+
+    // ---- part 2: the planner prices the sketch premium -----------------
+    // Same datacenter-grade classifier as the planner's own tests: the
+    // trimmed partial's (1 + 2·cap)× working set must stay feasible so the
+    // contest is about PRICE, not admission.
+    let planner = DispatchPlanner::new(
+        WorkloadClassifier::new(170 << 30, 1.1),
+        VirtualCluster::paper(CostModel::nominal()),
+        PricingModel::default(),
+        PlannerConfig {
+            policy: DispatchPolicy::MinLatency,
+            max_executors: 10,
+            cores_per_executor: 3,
+            node_cores: 64,
+            ingest_lanes: 64,
+            edges: EDGES,
+            xla_available: false,
+            feedback_beta: 0.3,
+            ..PlannerConfig::default()
+        },
+    );
+    let tm = TrimmedMean::new(TRIM, CAP);
+    let hier = |plan: &elastiagg::planner::RoundPlan| {
+        plan.candidates
+            .iter()
+            .find(|c| c.kind == PlanKind::Hierarchical { edges: EDGES })
+            .copied()
+            .expect("hierarchical candidate enumerated")
+    };
+    let robust = hier(&planner.plan(UPDATE_46MB, 30_000, &tm, 0));
+    let plain = hier(&planner.plan(UPDATE_46MB, 30_000, &FedAvg, 0));
+    assert!(
+        robust.cost.latency_s > plain.cost.latency_s && robust.cost.usd > plain.cost.usd,
+        "the sketch premium must price the robust tree dearer on both axes: \
+         {:?} vs {:?}",
+        robust.cost,
+        plain.cost
+    );
+    assert!(
+        robust.cost.latency_s < plain.cost.latency_s * (1.0 + tm.partial_overhead()),
+        "only the root leg and relay→root wire pay the 2·cap factor — the \
+         whole round must not: {:?} vs {:?}",
+        robust.cost,
+        plain.cost
+    );
+    println!(
+        "\n[planner] Hierarchical(e={EDGES}) at 46 MB × 30k parties: \
+         FedAvg {:.2}s / ${:.4}, TrimmedMean(cap {CAP}) {:.2}s / ${:.4}",
+        plain.cost.latency_s,
+        plain.cost.usd,
+        robust.cost.latency_s,
+        robust.cost.usd
+    );
+    bench_json.round(RoundRecord {
+        round: 0,
+        label: "planner:hierarchical:fedavg".into(),
+        predicted_s: plain.cost.latency_s,
+        predicted_usd: plain.cost.usd,
+        ..Default::default()
+    });
+    bench_json.round(RoundRecord {
+        round: 0,
+        label: "planner:hierarchical:trimmed".into(),
+        predicted_s: robust.cost.latency_s,
+        predicted_usd: robust.cost.usd,
+        ..Default::default()
+    });
+
+    // ---- part 3: measured 2-tier robust round over real TCP ------------
+    let cfg = ByzTierConfig::default();
+    let fleet = fleet_updates(&cfg);
+    let report = run_byzantine_tier_scenario(&cfg);
+    assert_eq!(report.outcome, RoundOutcome::Complete);
+    assert_eq!(report.folded, cfg.edges * cfg.clients_per_edge);
+
+    let refs: Vec<&ModelUpdate> = fleet.iter().collect();
+    let flat_exact = exact_trimmed_mean(&refs, cfg.trim);
+    all_close(&report.fused, &flat_exact, 1e-3, 1e-4)
+        .expect("the TCP tier round matches the flat exact trimmed mean");
+
+    // distance to the honest-only reference: trimmed beats the naive mean
+    let honest_tier: Vec<ModelUpdate> = (0..(cfg.edges * cfg.clients_per_edge) as u64)
+        .map(|p| byz_update(cfg.seed, p, 0, cfg.update_len, None))
+        .collect();
+    let honest_tier_refs: Vec<&ModelUpdate> = honest_tier.iter().collect();
+    let tier_reference = exact_trimmed_mean(&honest_tier_refs, cfg.trim);
+    let naive: Vec<f32> = (0..cfg.update_len)
+        .map(|c| fleet.iter().map(|u| u.data[c]).sum::<f32>() / fleet.len() as f32)
+        .collect();
+    let (robust_err, naive_err) =
+        (rms(&report.fused, &tier_reference), rms(&naive, &tier_reference));
+    assert!(
+        robust_err < 0.5 * naive_err,
+        "the trimmed tier must at least halve the naive mean's poisoning error: \
+         {robust_err} vs {naive_err}"
+    );
+    println!(
+        "\n[measured] {} clients through {} relays ({} colluders): round {:.2}s, \
+         rms vs honest-only reference {robust_err:.5} (naive mean {naive_err:.5})",
+        report.folded,
+        cfg.edges,
+        report.colluders,
+        report.round_s
+    );
+    bench_json.meta("measured_robust_rms", Json::num(robust_err));
+    bench_json.meta("measured_naive_rms", Json::num(naive_err));
+    bench_json.round(RoundRecord {
+        round: 0,
+        label: "measured:tier-trimmed".into(),
+        latency_s: report.round_s,
+        ..Default::default()
+    });
+
+    match bench_json.write() {
+        Ok(p) => println!("machine-readable log: {}", p.display()),
+        Err(e) => println!("bench json not written: {e}"),
+    }
+    println!("\nfigR OK — the trimmed mean survives the tier division and the planner bills it");
+}

@@ -162,6 +162,21 @@ pub struct ServiceConfig {
     /// Publish cadence in seconds: an async round publishes when the
     /// buffer fills OR this much time elapsed, whichever first.
     pub async_cadence_s: f64,
+    /// Fraction of parties trimmed from EACH tail by the coordinate-wise
+    /// trimmed mean (`algo = trimmed`): 0.2 drops the 20% largest and 20%
+    /// smallest values per coordinate.  Domain [0, 0.5); values at or past
+    /// 0.5 would trim everything and are rejected at load.
+    pub trim_fraction: f64,
+    /// Robust admission gate: uploads whose L2 norm exceeds
+    /// `clip_factor × median_norm` have their fusion weight clipped down,
+    /// and norms past `clip_factor² × median_norm` are rejected outright
+    /// (typed `Rejected` reply + trust decay).  0 (the default) disables
+    /// the gate entirely — no per-upload norm work, bit-identical rounds.
+    pub clip_factor: f64,
+    /// Multiplier applied to a party's trust score on each outlier /
+    /// rejection event (domain [0, 1]; smaller = harsher).  Honest parties
+    /// recover trust additively each sealed round.
+    pub trust_decay: f64,
     /// Wire encoding clients are asked to upload with and the planner
     /// prices rounds at: `dense_f32` (lossless, zero-copy — the default),
     /// `f16`, `int8`, or `topk[:permille]`.  Compressed encodings shrink
@@ -195,6 +210,9 @@ impl Default for ServiceConfig {
             async_buffer: 64,
             staleness_exponent: 0.5,
             async_cadence_s: 5.0,
+            trim_fraction: 0.0,
+            clip_factor: 0.0,
+            trust_decay: 0.5,
             encoding: Encoding::DenseF32,
         }
     }
@@ -303,6 +321,26 @@ impl ServiceConfig {
                 c.async_cadence_s = v.min(31_536_000.0);
             }
         }
+        if let Some(v) = j.get("trim_fraction").as_f64() {
+            // ≥ 0.5 trims every contributor; NaN/negative would poison the
+            // per-coordinate k — junk keeps the (off) default rather than
+            // silently disabling a robustness knob the operator set
+            if v.is_finite() && (0.0..0.5).contains(&v) {
+                c.trim_fraction = v;
+            }
+        }
+        if let Some(v) = j.get("clip_factor").as_f64() {
+            // 0 = gate off; NaN/negative must not reach the norm compare
+            if v.is_finite() && v >= 0.0 {
+                c.clip_factor = v;
+            }
+        }
+        if let Some(v) = j.get("trust_decay").as_f64() {
+            // a decay outside [0, 1] would grow trust on misbehaviour
+            if v.is_finite() && (0.0..=1.0).contains(&v) {
+                c.trust_decay = v;
+            }
+        }
         if let Some(e) = j.get("encoding").as_str().and_then(Encoding::parse) {
             c.encoding = e;
         }
@@ -344,6 +382,9 @@ impl ServiceConfig {
             ("async_buffer", Json::num(self.async_buffer as f64)),
             ("staleness_exponent", Json::num(self.staleness_exponent)),
             ("async_cadence_s", Json::num(self.async_cadence_s)),
+            ("trim_fraction", Json::num(self.trim_fraction)),
+            ("clip_factor", Json::num(self.clip_factor)),
+            ("trust_decay", Json::num(self.trust_decay)),
             ("encoding", Json::str(&self.encoding.token())),
         ])
     }
@@ -497,6 +538,39 @@ mod tests {
         // unknown tokens keep the lossless default
         let j = Json::parse(r#"{"encoding": "zip"}"#).unwrap();
         assert_eq!(ServiceConfig::from_json(&j).encoding, Encoding::DenseF32);
+    }
+
+    #[test]
+    fn robust_knobs_roundtrip_and_reject_junk() {
+        let c = ServiceConfig::default();
+        assert_eq!(c.trim_fraction, 0.0);
+        assert_eq!(c.clip_factor, 0.0);
+        assert_eq!(c.trust_decay, 0.5);
+        let mut c2 = c.clone();
+        c2.trim_fraction = 0.2;
+        c2.clip_factor = 3.0;
+        c2.trust_decay = 0.25;
+        let c3 = ServiceConfig::from_json(&c2.to_json());
+        assert_eq!(c3.trim_fraction, 0.2);
+        assert_eq!(c3.clip_factor, 3.0);
+        assert_eq!(c3.trust_decay, 0.25);
+        // junk must neither panic nor silently disable robustness: NaN,
+        // negatives, and out-of-domain values all keep the defaults
+        let j = Json::parse(
+            r#"{"trim_fraction": -0.1, "clip_factor": -3, "trust_decay": 1.5}"#,
+        )
+        .unwrap();
+        let c4 = ServiceConfig::from_json(&j);
+        assert_eq!(c4.trim_fraction, 0.0);
+        assert_eq!(c4.clip_factor, 0.0);
+        assert_eq!(c4.trust_decay, 0.5);
+        // trim ≥ 0.5 would trim every contributor — rejected at load
+        let j = Json::parse(r#"{"trim_fraction": 0.5}"#).unwrap();
+        assert_eq!(ServiceConfig::from_json(&j).trim_fraction, 0.0);
+        // NaN doesn't parse as a JSON number, but an operator can still
+        // produce it via 1e999 → inf in some writers; reject non-finite
+        let j = Json::parse(r#"{"clip_factor": 1e999}"#).unwrap();
+        assert_eq!(ServiceConfig::from_json(&j).clip_factor, 0.0);
     }
 
     #[test]

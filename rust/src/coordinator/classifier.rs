@@ -94,20 +94,32 @@ impl WorkloadClassifier {
     }
 
     /// Whether the streaming fold can run this round at all: the algorithm
-    /// must decompose and the O(C) working set must fit the node.  The
-    /// single source of truth shared by `classify_with_streaming` and the
-    /// planner's candidate enumeration.
+    /// must be partial-foldable and the O(C) working set must fit the
+    /// node.  The single source of truth shared by
+    /// `classify_with_streaming` and the planner's candidate enumeration.
+    ///
+    /// Partial-foldable is wider than decomposable: a sketch-carrying
+    /// robust algorithm (trimmed mean) folds mergeable state that is not
+    /// weight-linear.  Its working set is the O(C) accumulator *plus* the
+    /// per-lane sketch — `2·cap` extreme values per coordinate — so the
+    /// feasibility test charges `partial_overhead()` on top of the plain
+    /// accumulator + in-flight pair.  For overhead-0 algorithms this is
+    /// arithmetically identical to the old `decomposable` gate.
     pub fn streaming_feasible(&self, update_bytes: u64, algo: &dyn FusionAlgorithm) -> bool {
-        algo.decomposable() && self.streaming_required_bytes(update_bytes) < self.memory_bytes
+        algo.partial_foldable()
+            && (update_bytes as f64 * (2.0 + algo.partial_overhead()) * self.headroom) as u64
+                < self.memory_bytes
     }
 
     /// The hierarchy gate: whether this node can participate in a 2-tier
     /// topology for this algorithm — fold forwarded partial aggregates (as
     /// a root) or pre-fold a cohort and forward one partial (as a relay).
-    /// Exactly the streaming-fold feasibility test: the algebra must
-    /// decompose (a partial IS a `combine` operand — coordinate-wise
-    /// median, Krum and Zeno have no meaningful partial, so those
-    /// deployments stay flat) and the O(C) accumulator must fit the node.
+    /// Exactly the streaming-fold feasibility test: the algebra must be
+    /// partial-foldable (a partial IS a `combine` operand — weight-linear
+    /// algorithms trivially, the trimmed mean via its mergeable extremes
+    /// sketch; coordinate-wise median, Krum and Zeno have no meaningful
+    /// partial, so those deployments stay flat) and the O(C) accumulator
+    /// plus any sketch overhead must fit the node.
     pub fn hierarchy_feasible(&self, update_bytes: u64, algo: &dyn FusionAlgorithm) -> bool {
         self.streaming_feasible(update_bytes, algo)
     }
@@ -271,6 +283,30 @@ mod tests {
         assert!(!c.hierarchy_feasible(4 << 20, &CoordMedian));
         // an O(C) working set that exceeds the node cannot fold anywhere
         assert!(!c.hierarchy_feasible(600 << 20, &FedAvg));
+    }
+
+    #[test]
+    fn sketch_algorithms_stream_when_their_overhead_fits() {
+        use crate::fusion::TrimmedMean;
+        let c = WorkloadClassifier::new(1 << 30, 1.0); // 1 GiB
+        // TrimmedMean(cap 8): working set = (2 + 2·8) × update bytes.
+        // 4 MiB updates → 72 MiB, fits easily: the robust round streams
+        // (and hence rides the hierarchy) despite NOT being decomposable.
+        let tm = TrimmedMean::new(0.2, 8);
+        assert!(!tm.decomposable());
+        assert!(c.streaming_feasible(4 << 20, &tm));
+        assert!(c.hierarchy_feasible(4 << 20, &tm));
+        assert_eq!(
+            c.classify_with_streaming(4 << 20, 200, &tm),
+            WorkloadClass::Streaming
+        );
+        // ... but a working set inflated past the node budget is rejected
+        // even though plain FedAvg at the same size would fit: the sketch
+        // overhead is priced, not ignored.
+        assert!(c.streaming_feasible(100 << 20, &FedAvg));
+        assert!(!c.streaming_feasible(100 << 20, &tm));
+        // holistic algorithms are still flat-only
+        assert!(!c.hierarchy_feasible(4 << 20, &CoordMedian));
     }
 
     #[test]

@@ -1,14 +1,30 @@
-//! Party registry: membership, liveness and per-round selection.
+//! Party registry: membership, liveness, per-round selection and the
+//! reputation ledger.
 //!
 //! FL parties join during training and drop out at any time (§III-C); the
 //! registry is the coordinator's source of truth for "how many updates
 //! should I expect next round" — the quantity the classifier turns into a
 //! path decision and the monitor into a threshold.
+//!
+//! It also persists each party's **trust score** across rounds: 1.0 for a
+//! party in good standing, multiplied by `trust_decay` every time its
+//! update lands far from the fleet (norm beyond twice the sealed median)
+//! or is rejected outright, and recovered additively (`+0.1` per honest
+//! round, capped at exactly 1.0 so uniform-trust rounds stay bit-identical
+//! to FedAvg).  [`TrustWeighted`](crate::fusion::TrustWeighted) reads the
+//! score as a fusion-layer weight multiplier.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::util::rng::Rng;
+
+/// Additive trust recovered by an honest round (capped at 1.0).
+const TRUST_RECOVER_STEP: f32 = 0.1;
+
+/// A norm counts as an outlier when it exceeds this multiple of the
+/// sealed median norm.
+const OUTLIER_FACTOR: f32 = 2.0;
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PartyInfo {
@@ -23,6 +39,16 @@ pub struct PartyInfo {
 #[derive(Default)]
 pub struct PartyRegistry {
     parties: Mutex<BTreeMap<u64, PartyInfo>>,
+    /// Per-party trust scores in `[0, 1]`; absent means 1.0 (fully
+    /// trusted).  Kept out of [`PartyInfo`] so the membership record
+    /// stays `Eq` and join/leave stays reputation-neutral.
+    trust: Mutex<BTreeMap<u64, f32>>,
+    /// L2 norms observed this round, sealed into a median at round end.
+    norms: Mutex<Vec<(u64, f32)>>,
+    /// Median update norm of the last sealed round — the clip/reject
+    /// reference for the next one.  `None` until a first honest round
+    /// establishes it.
+    norm_ref: Mutex<Option<f32>>,
 }
 
 impl PartyRegistry {
@@ -78,6 +104,80 @@ impl PartyRegistry {
         let mut idx = rng.sample_indices(ids.len(), k);
         idx.sort_unstable();
         idx.into_iter().map(|i| ids[i]).collect()
+    }
+
+    /// The party's trust score; 1.0 for parties never penalised.
+    pub fn trust(&self, id: u64) -> f32 {
+        *self.trust.lock().unwrap().get(&id).unwrap_or(&1.0)
+    }
+
+    /// Multiply the party's trust by `decay` (a rejection or a sealed
+    /// outlier verdict).  `decay` is sanitised to `[0, 1]` at use — a
+    /// NaN or out-of-range knob cannot *raise* trust.
+    pub fn penalize(&self, id: u64, decay: f32) -> f32 {
+        let decay = if decay.is_finite() { decay.clamp(0.0, 1.0) } else { 0.5 };
+        let mut m = self.trust.lock().unwrap();
+        let t = m.entry(id).or_insert(1.0);
+        *t *= decay;
+        *t
+    }
+
+    /// Record an accepted update's L2 norm for this round's median.
+    pub fn observe_norm(&self, id: u64, norm: f32) {
+        if norm.is_finite() && norm >= 0.0 {
+            self.norms.lock().unwrap().push((id, norm));
+        }
+    }
+
+    /// The clip/reject reference: median update norm of the last sealed
+    /// round.
+    pub fn norm_ref(&self) -> Option<f32> {
+        *self.norm_ref.lock().unwrap()
+    }
+
+    /// Force the norm reference (tests and warm restarts).
+    pub fn set_norm_ref(&self, r: Option<f32>) {
+        *self.norm_ref.lock().unwrap() = r;
+    }
+
+    /// Drop this round's norm observations without judging anyone — an
+    /// aborted round must not move trust or the reference.
+    pub fn reset_norms(&self) {
+        self.norms.lock().unwrap().clear();
+    }
+
+    /// Seal a round: fold the observed norms into a median, judge each
+    /// contributor against it (outlier distance beyond
+    /// [`OUTLIER_FACTOR`]× the median decays trust, honest standing
+    /// recovers it toward exactly 1.0), publish the median as the next
+    /// round's norm reference, and clear the observations.  Returns the
+    /// sealed median, or `None` when the round folded nothing.
+    pub fn seal_norms(&self, trust_decay: f32) -> Option<f32> {
+        let obs: Vec<(u64, f32)> = std::mem::take(&mut *self.norms.lock().unwrap());
+        if obs.is_empty() {
+            return None;
+        }
+        let mut vals: Vec<f32> = obs.iter().map(|&(_, n)| n).collect();
+        vals.sort_by(|a, b| a.total_cmp(b));
+        // Upper median: deterministic, no averaging — bit-stable digests.
+        let median = vals[vals.len() / 2];
+        {
+            let mut trust = self.trust.lock().unwrap();
+            for &(id, norm) in &obs {
+                if norm > OUTLIER_FACTOR * median {
+                    let decay =
+                        if trust_decay.is_finite() { trust_decay.clamp(0.0, 1.0) } else { 0.5 };
+                    let t = trust.entry(id).or_insert(1.0);
+                    *t *= decay;
+                } else if let Some(t) = trust.get_mut(&id) {
+                    // Honest recovery; parties at exactly 1.0 have no
+                    // entry to touch, so good standing stays bit-free.
+                    *t = (*t + TRUST_RECOVER_STEP).min(1.0);
+                }
+            }
+        }
+        *self.norm_ref.lock().unwrap() = Some(median);
+        Some(median)
     }
 }
 
@@ -135,6 +235,51 @@ mod tests {
         let mut rng = Rng::new(2);
         let sel = r.select(100, &mut rng);
         assert_eq!(sel.len(), 4);
+    }
+
+    #[test]
+    fn trust_defaults_to_one_and_decays_on_penalty() {
+        let r = PartyRegistry::new();
+        assert_eq!(r.trust(7), 1.0);
+        assert_eq!(r.penalize(7, 0.5), 0.5);
+        assert_eq!(r.penalize(7, 0.5), 0.25);
+        // sanitised decay: NaN falls back, never raises trust
+        let t = r.penalize(7, f32::NAN);
+        assert!(t <= 0.25);
+        assert!(r.penalize(8, 2.0) <= 1.0, "decay > 1 must clamp");
+    }
+
+    #[test]
+    fn seal_norms_judges_outliers_and_publishes_median() {
+        let r = PartyRegistry::new();
+        for (id, norm) in [(1, 1.0f32), (2, 1.1), (3, 0.9), (4, 1.05), (5, 50.0)] {
+            r.observe_norm(id, norm);
+        }
+        let med = r.seal_norms(0.5).unwrap();
+        assert_eq!(med, 1.05, "upper median of the sorted norms");
+        assert_eq!(r.norm_ref(), Some(1.05));
+        assert_eq!(r.trust(5), 0.5, "50.0 > 2x median decays");
+        for id in 1..=4 {
+            assert_eq!(r.trust(id), 1.0, "honest party {id} keeps exact 1.0");
+        }
+        // next seal with honest behaviour recovers the outlier
+        for id in 1..=5 {
+            r.observe_norm(id, 1.0);
+        }
+        r.seal_norms(0.5);
+        assert_eq!(r.trust(5), 0.6);
+    }
+
+    #[test]
+    fn seal_empty_round_is_none_and_reset_drops_observations() {
+        let r = PartyRegistry::new();
+        assert_eq!(r.seal_norms(0.5), None);
+        assert_eq!(r.norm_ref(), None);
+        r.observe_norm(1, 3.0);
+        r.observe_norm(2, f32::NAN); // ignored at observe
+        r.reset_norms();
+        assert_eq!(r.seal_norms(0.5), None, "aborted round judged nobody");
+        assert_eq!(r.trust(1), 1.0);
     }
 
     #[test]

@@ -98,6 +98,13 @@ pub enum RoundError {
     /// that reply means "an earlier upload for this party was accepted",
     /// which would make the relay count the cohort as folded.
     MalformedCohort { party: u64 },
+    /// The robust admission gate turned the upload away before any fold:
+    /// its L2 norm exceeded the round's rejection threshold (a multiple of
+    /// the last sealed median norm).  Typed — the server maps it to a
+    /// dedicated wire reply so an honest-but-misconfigured client can tell
+    /// "my update was judged hostile" apart from every transport error,
+    /// and the coordinator decays the sender's trust score.
+    Rejected { party: u64, norm: f32 },
     /// The node budget is exhausted (the Fig 1 ceiling, as an error).
     Memory(OutOfMemory),
     /// A streaming-only operation was called on a buffered round.
@@ -125,6 +132,9 @@ impl std::fmt::Display for RoundError {
             }
             RoundError::MalformedCohort { party } => {
                 write!(f, "partial lists party {party} more than once")
+            }
+            RoundError::Rejected { party, norm } => {
+                write!(f, "party {party} rejected: update norm {norm} beyond threshold")
             }
             RoundError::Memory(e) => write!(f, "memory: {e}"),
             RoundError::NotStreaming => write!(f, "round is buffered, not streaming"),
@@ -558,7 +568,13 @@ impl RoundState {
     fn ingest_partial_inner(&self, v: &PartialAggregateView<'_>) -> Result<usize, RoundError> {
         match self.streaming_lane()? {
             Some((fold, algo)) => self.fold_streaming(&fold, v.mem_bytes(), || {
-                fold.fold_partial(algo.as_ref(), &v.sum, v.wtot, v.parties.len() as u64)
+                fold.fold_partial_sketch(
+                    algo.as_ref(),
+                    &v.sum,
+                    v.wtot,
+                    v.parties.len() as u64,
+                    v.sketch.as_deref(),
+                )
             }),
             None => Err(RoundError::NotStreaming),
         }

@@ -23,8 +23,12 @@
 //! partials regroups the additions and is only close, not identical —
 //! the same property the fusion combine-associativity tests pin down.
 //!
-//! Only decomposable algorithms stream; holistic ones (median/Krum/Zeno)
-//! must gather the full set and are rejected at construction.
+//! Only partial-foldable algorithms stream: every decomposable algorithm,
+//! plus the sketch-carrying robust family ([`TrimmedMean`]
+//! (crate::fusion::TrimmedMean)), whose accumulators ride a bounded
+//! [`ExtremesSketch`] that `combine` merges alongside the sums.  Holistic
+//! ones (median/Krum/Zeno) must gather the full set and are rejected at
+//! construction.
 //!
 //! [`ShardedFold`] is the concurrent-ingest wrapper: S shard-local folds
 //! (one per ingest lane) that connection handlers fold into without a
@@ -35,7 +39,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use super::EngineError;
-use crate::fusion::{Accumulator, FusionAlgorithm, FusionError};
+use crate::fusion::{Accumulator, ExtremesSketch, FusionAlgorithm, FusionError};
 use crate::memsim::{MemoryBudget, Reservation};
 use crate::tensorstore::{ModelUpdate, ModelUpdateView};
 
@@ -67,13 +71,15 @@ pub struct StreamingFold {
 impl StreamingFold {
     /// Start a fold.  `threads` > 1 chunks the parameter axis across scoped
     /// worker threads exactly as [`ParallelEngine`](super::ParallelEngine)
-    /// does.  Fails for non-decomposable algorithms, which cannot stream.
+    /// does.  Fails for non-partial-foldable algorithms, which cannot
+    /// stream (decomposable algorithms always qualify; sketch carriers
+    /// qualify through their mergeable accumulator state).
     pub fn new(
         algo: &dyn FusionAlgorithm,
         threads: usize,
         budget: MemoryBudget,
     ) -> Result<StreamingFold, EngineError> {
-        if !algo.decomposable() {
+        if !algo.partial_foldable() {
             return Err(EngineError::Fusion(FusionError::BadParam(format!(
                 "{} is holistic and cannot stream",
                 algo.name()
@@ -113,7 +119,7 @@ impl StreamingFold {
         algo: &dyn FusionAlgorithm,
         v: &ModelUpdateView<'_>,
     ) -> Result<(), EngineError> {
-        self.fold_weighted(algo, algo.weight_parts(v.count, &v.data), &v.data)
+        self.fold_weighted(algo, algo.weight_tagged(v.party, v.count, &v.data), &v.data)
     }
 
     /// Shape-validate against the fold's pinned parameter count, lazily
@@ -147,12 +153,47 @@ impl StreamingFold {
         wtot: f64,
         n: u64,
     ) -> Result<(), EngineError> {
+        self.fold_partial_sketch(algo, sum, wtot, n, None)
+    }
+
+    /// [`StreamingFold::fold_partial`] plus the cohort's extremes sketch.
+    /// A sketch-carrying algorithm REQUIRES one — folding a sketch-less
+    /// partial would silently un-trim the round, so it is rejected as a
+    /// typed error instead.  Sketch-less algorithms ignore `sketch`.
+    pub fn fold_partial_sketch(
+        &mut self,
+        algo: &dyn FusionAlgorithm,
+        sum: &[f32],
+        wtot: f64,
+        n: u64,
+        sketch: Option<&ExtremesSketch>,
+    ) -> Result<(), EngineError> {
         if n == 0 {
             return Err(EngineError::Fusion(FusionError::Empty));
+        }
+        if algo.sketch_cap().is_some() && sketch.is_none() {
+            return Err(EngineError::Fusion(FusionError::BadParam(format!(
+                "{} requires partials to carry an extremes sketch",
+                algo.name()
+            ))));
+        }
+        if let Some(sk) = sketch {
+            if sk.elems() != sum.len() {
+                return Err(EngineError::Fusion(FusionError::ShapeMismatch {
+                    want: sum.len(),
+                    got: sk.elems(),
+                }));
+            }
         }
         self.ensure_shape(sum.len())?;
         let acc = self.acc.as_mut().expect("acc initialised above");
         algo.combine_parts(acc, sum, wtot, n);
+        if let Some(sk) = sketch {
+            match acc.sketch.as_mut() {
+                Some(mine) => mine.merge(sk),
+                None => acc.sketch = Some(sk.clone()),
+            }
+        }
         Ok(())
     }
 
@@ -178,7 +219,10 @@ impl StreamingFold {
         self.ensure_shape(data.len())?;
         let acc = self.acc.as_mut().expect("acc initialised above");
         let len = acc.sum.len();
-        if self.threads <= 1 || len < CHUNK_MIN_LEN {
+        // A sketch carrier must go through `accumulate_weighted` (where the
+        // sketch observes every coordinate) — the chunked fast path below
+        // only performs the sum algebra and would skip the observation.
+        if self.threads <= 1 || len < CHUNK_MIN_LEN || algo.sketch_cap().is_some() {
             algo.accumulate_weighted(acc, w, data);
             return Ok(());
         }
@@ -387,7 +431,7 @@ impl ShardedFold {
         algo: &dyn FusionAlgorithm,
         v: &ModelUpdateView<'_>,
     ) -> Result<u64, FoldError> {
-        self.fold_weighted(algo, algo.weight_parts(v.count, &v.data), &v.data)
+        self.fold_weighted(algo, algo.weight_tagged(v.party, v.count, &v.data), &v.data)
     }
 
     fn fold_weighted(
@@ -410,10 +454,27 @@ impl ShardedFold {
         wtot: f64,
         n: u64,
     ) -> Result<u64, FoldError> {
+        self.fold_partial_sketch(algo, sum, wtot, n, None)
+    }
+
+    /// [`ShardedFold::fold_partial`] plus the cohort's extremes sketch —
+    /// the sketch-aware lane entry the hierarchical ingest calls.  Same
+    /// guards as [`StreamingFold::fold_partial_sketch`]: a sketch carrier
+    /// rejects sketch-less partials instead of silently un-trimming.
+    pub fn fold_partial_sketch(
+        &self,
+        algo: &dyn FusionAlgorithm,
+        sum: &[f32],
+        wtot: f64,
+        n: u64,
+        sketch: Option<&ExtremesSketch>,
+    ) -> Result<u64, FoldError> {
         if n == 0 {
             return Err(FoldError::Engine(EngineError::Fusion(FusionError::Empty)));
         }
-        self.fold_lanes(sum.len(), n, |lane| lane.fold_partial(algo, sum, wtot, n))
+        self.fold_lanes(sum.len(), n, |lane| {
+            lane.fold_partial_sketch(algo, sum, wtot, n, sketch)
+        })
     }
 
     /// The shared lane walk: pin (or check) the fold-global shape, pick a
@@ -540,7 +601,7 @@ mod tests {
     use super::super::testutil::batch;
     use super::*;
     use crate::engine::{AggregationEngine, SerialEngine};
-    use crate::fusion::{ClippedAvg, CoordMedian, FedAvg, IterAvg};
+    use crate::fusion::{exact_trimmed_mean, ClippedAvg, CoordMedian, FedAvg, IterAvg, TrimmedMean};
     use crate::metrics::Breakdown;
     use crate::util::prop::all_close;
 
@@ -866,6 +927,98 @@ mod tests {
             fold.fold(&FedAvg, &ModelUpdate::new(9, 1.0, 0, vec![1.0; 64])),
             Err(FoldError::Sealed)
         ));
+    }
+
+    #[test]
+    fn trimmed_mean_streams_and_matches_holistic_bitwise() {
+        // The sketch carrier is admitted by the partial_foldable gate and
+        // a single-lane fold runs the exact holistic algebra — identical
+        // bits, the engine-level half of the engine_parity pin.
+        let us = batch(77, 15, 400);
+        let refs: Vec<&ModelUpdate> = us.iter().collect();
+        let algo = TrimmedMean::new(0.2, 8);
+        let want = algo.holistic(&refs).unwrap();
+        let mut f = StreamingFold::new(&algo, 1, MemoryBudget::unbounded()).unwrap();
+        for u in &us {
+            f.fold(&algo, u).unwrap();
+        }
+        assert_eq!(f.finish(&algo).unwrap(), want);
+    }
+
+    #[test]
+    fn sharded_trimmed_fold_merges_lane_sketches() {
+        // Lanes each keep their own extremes; the finishing drain must
+        // merge sketches alongside sums, landing on the exact trimmed
+        // mean (k ≤ cap ⇒ exact regime).
+        let us = batch(99, 12, 300);
+        let refs: Vec<&ModelUpdate> = us.iter().collect();
+        let algo = TrimmedMean::new(0.25, 8);
+        let fold = ShardedFold::new(&algo, 3, MemoryBudget::unbounded()).unwrap();
+        for u in &us {
+            fold.fold(&algo, u).unwrap();
+        }
+        let (out, folded) = fold.finish(&algo).unwrap();
+        assert_eq!(folded, 12);
+        let want = exact_trimmed_mean(&refs, 0.25);
+        all_close(&out, &want, 1e-4, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn sketchless_partial_rejected_for_sketch_carriers() {
+        // A forwarded partial without its extremes sketch would silently
+        // un-trim the round — typed rejection instead.
+        let algo = TrimmedMean::new(0.2, 4);
+        let mut f = StreamingFold::new(&algo, 1, MemoryBudget::unbounded()).unwrap();
+        assert!(matches!(
+            f.fold_partial(&algo, &[1.0; 8], 2.0, 2),
+            Err(EngineError::Fusion(FusionError::BadParam(_)))
+        ));
+        let mut sk = ExtremesSketch::new(4, 8);
+        sk.observe(&[0.5; 8]);
+        sk.observe(&[0.5; 8]);
+        f.fold_partial_sketch(&algo, &[1.0; 8], 2.0, 2, Some(&sk)).unwrap();
+        assert_eq!(f.folded(), 2);
+        // shape-mismatched sketch is a typed mismatch, not corruption
+        let bad = ExtremesSketch::new(4, 9);
+        assert!(matches!(
+            f.fold_partial_sketch(&algo, &[1.0; 8], 2.0, 2, Some(&bad)),
+            Err(EngineError::Fusion(FusionError::ShapeMismatch { want: 8, got: 9 }))
+        ));
+        // FedAvg (sketch-less algebra) keeps ignoring the sketch slot
+        let mut g = StreamingFold::new(&FedAvg, 1, MemoryBudget::unbounded()).unwrap();
+        g.fold_partial(&FedAvg, &[1.0; 8], 2.0, 2).unwrap();
+        assert_eq!(g.folded(), 2);
+    }
+
+    #[test]
+    fn sharded_sketch_partial_roundtrip() {
+        // Edge cohort → finish_partial (sketch rides the accumulator) →
+        // root fold_partial_sketch: the full 2-tier algebra in-process.
+        let us = batch(123, 10, 200);
+        let refs: Vec<&ModelUpdate> = us.iter().collect();
+        let algo = TrimmedMean::new(0.2, 8);
+        let edge = ShardedFold::new(&algo, 2, MemoryBudget::unbounded()).unwrap();
+        for u in &us[..6] {
+            edge.fold(&algo, u).unwrap();
+        }
+        let (eacc, _) = edge.finish_partial(&algo).unwrap();
+        let sketch = eacc.sketch.clone().expect("edge accumulator carries the sketch");
+
+        let root = ShardedFold::new(&algo, 2, MemoryBudget::unbounded()).unwrap();
+        for u in &us[6..] {
+            root.fold(&algo, u).unwrap();
+        }
+        // sketch-less forward must be refused...
+        assert!(matches!(
+            root.fold_partial(&algo, &eacc.sum, eacc.wtot, eacc.n),
+            Err(FoldError::Engine(EngineError::Fusion(FusionError::BadParam(_))))
+        ));
+        // ...and the sketch-carrying forward lands on the exact answer
+        root.fold_partial_sketch(&algo, &eacc.sum, eacc.wtot, eacc.n, Some(&sketch)).unwrap();
+        let (out, folded) = root.finish(&algo).unwrap();
+        assert_eq!(folded, 10);
+        let want = exact_trimmed_mean(&refs, 0.2);
+        all_close(&out, &want, 1e-4, 1e-5).unwrap();
     }
 
     #[test]

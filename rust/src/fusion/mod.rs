@@ -14,16 +14,24 @@
 //! Zeno — the paper's §V future-work set) are `decomposable() == false`:
 //! engines must gather the full update set and call `holistic` (which is
 //! exactly why the paper's single-node memory wall is so much harsher for
-//! them).
+//! them).  A third capability sits between the two: `partial_foldable()`
+//! algorithms ([`TrimmedMean`]) are not weight-linear either, but their
+//! accumulators carry a bounded [`ExtremesSketch`] that merges across fold
+//! lanes and hierarchy tiers — robust aggregation that still rides the
+//! streaming fold and the 2-tier relay topology.
 
 pub mod avg;
 pub mod kernels;
 pub mod robust;
 pub mod staleness;
+pub mod trimmed;
+pub mod trust;
 
 pub use avg::{ClippedAvg, FedAvg, GradAvg, IterAvg};
 pub use robust::{CoordMedian, Krum, Zeno};
 pub use staleness::{DiscountedFusion, StalenessDiscount};
+pub use trimmed::{exact_trimmed_mean, ExtremesSketch, TrimmedMean, MAX_SKETCH_CAP};
+pub use trust::{l2_norm, TrustWeighted};
 
 use crate::tensorstore::ModelUpdate;
 
@@ -39,11 +47,16 @@ pub struct Accumulator {
     pub wtot: f64,
     /// Number of updates folded in.
     pub n: u64,
+    /// Bounded per-coordinate extremes riding next to the sum — only
+    /// populated by sketch-carrying algorithms ([`TrimmedMean`]); `None`
+    /// for the weight-linear family, which keeps their accumulators (and
+    /// every pre-existing parity pin) byte-for-byte unchanged.
+    pub sketch: Option<ExtremesSketch>,
 }
 
 impl Accumulator {
     pub fn zeros(len: usize) -> Accumulator {
-        Accumulator { sum: vec![0.0; len], wtot: 0.0, n: 0 }
+        Accumulator { sum: vec![0.0; len], wtot: 0.0, n: 0, sketch: None }
     }
 
     /// Fold `w * data` into the sum, through the runtime-dispatched fold
@@ -57,9 +70,19 @@ impl Accumulator {
         self.n += 1;
     }
 
-    /// Merge another accumulator (element-wise add).
+    /// Merge another accumulator (element-wise add).  Sketch-aware: when
+    /// either side carries an extremes sketch the merged accumulator
+    /// carries their union, so the sketch algebra reduces exactly like the
+    /// sum algebra.  (`merge_parts` stays sketch-less — wire partials ship
+    /// their sketch out of band and the engine merges it explicitly.)
     pub fn merge(&mut self, other: &Accumulator) {
         self.merge_parts(&other.sum, other.wtot, other.n);
+        if let Some(sk) = &other.sketch {
+            match self.sketch.as_mut() {
+                Some(mine) => mine.merge(sk),
+                None => self.sketch = Some(sk.clone()),
+            }
+        }
     }
 
     /// Merge a partial's raw parts — the borrowed-wire twin of
@@ -131,6 +154,16 @@ pub trait FusionAlgorithm: Send + Sync {
         self.weight(&ModelUpdate::new(0, count, 0, data.to_vec()))
     }
 
+    /// [`FusionAlgorithm::weight_parts`] plus the sender's identity — the
+    /// entry the zero-copy folds actually call, so a reputation-aware
+    /// wrapper ([`TrustWeighted`]) can look up the party's trust score
+    /// without materialising an owned update.  Identity-blind algorithms
+    /// keep the default, which ignores `party` — same bits as before.
+    fn weight_tagged(&self, party: u64, count: f32, data: &[f32]) -> f32 {
+        let _ = party;
+        self.weight_parts(count, data)
+    }
+
     /// Fold one update's weights into the accumulator with a precomputed
     /// per-update weight — the slice-based algebra core shared by the
     /// batch `accumulate` and the streaming/zero-copy folds.  An algorithm
@@ -192,6 +225,37 @@ pub trait FusionAlgorithm: Send + Sync {
         true
     }
 
+    /// Whether the algorithm's partials are mergeable across fold lanes
+    /// and hierarchy tiers — the gate the streaming fold and the 2-tier
+    /// relay path actually check.  Every decomposable algorithm is
+    /// trivially partial-foldable; a sketch-carrying robust algorithm
+    /// ([`TrimmedMean`]) is partial-foldable WITHOUT being decomposable,
+    /// because its accumulator carries bounded extra state (the extremes
+    /// sketch) that `combine` knows how to merge.
+    fn partial_foldable(&self) -> bool {
+        self.decomposable()
+    }
+
+    /// Per-side capacity of the extremes sketch this algorithm rides in
+    /// its accumulator, or `None` for sketch-less algebra.  `Some` demands
+    /// that forwarded partials carry a sketch — the engines reject
+    /// sketch-less partials instead of silently un-trimming the fold.
+    fn sketch_cap(&self) -> Option<usize> {
+        None
+    }
+
+    /// Extra partial state as a multiple of the update payload itself:
+    /// the sketch keeps `2·cap` f32 per coordinate next to the 1·f32 sum,
+    /// so a sketch partial is `(1 + partial_overhead())×` the plain one.
+    /// The classifier widens its memory demand and the planner prices the
+    /// extra wire bytes + root fold work with exactly this factor.
+    fn partial_overhead(&self) -> f64 {
+        match self.sketch_cap() {
+            Some(cap) => 2.0 * cap as f64,
+            None => 0.0,
+        }
+    }
+
     /// Whether a holistic algorithm is *per-coordinate* (the parameter axis
     /// can be sliced across workers without changing the result).  True for
     /// coordinate-wise median; FALSE for Krum/Zeno, whose client scoring is
@@ -227,6 +291,7 @@ pub fn by_name(name: &str) -> Option<Box<dyn FusionAlgorithm>> {
         "median" | "coordmedian" => Some(Box::new(CoordMedian)),
         "krum" => Some(Box::new(Krum { byzantine_f: 1 })),
         "zeno" => Some(Box::new(Zeno { trim_b: 1 })),
+        "trimmed" | "trimmedmean" => Some(Box::new(TrimmedMean::new(0.2, 8))),
         _ => None,
     }
 }
@@ -257,7 +322,7 @@ mod tests {
 
     #[test]
     fn by_name_covers_all() {
-        for n in ["fedavg", "iteravg", "gradavg", "clipped", "median", "krum", "zeno"] {
+        for n in ["fedavg", "iteravg", "gradavg", "clipped", "median", "krum", "zeno", "trimmed"] {
             assert!(by_name(n).is_some(), "{n}");
         }
         assert!(by_name("nope").is_none());

@@ -109,6 +109,11 @@ impl FusionAlgorithm for DiscountedFusion<'_> {
         self.inner.weight_parts(count, data) * self.scale
     }
 
+    fn weight_tagged(&self, party: u64, count: f32, data: &[f32]) -> f32 {
+        // Forward the party so a trust-aware inner still sees identity.
+        self.inner.weight_tagged(party, count, data) * self.scale
+    }
+
     fn transform(&self, x: f32) -> f32 {
         self.inner.transform(x)
     }
@@ -123,6 +128,14 @@ impl FusionAlgorithm for DiscountedFusion<'_> {
         self.inner.accumulate_weighted(acc, w, data);
     }
 
+    fn combine(&self, a: &mut Accumulator, b: &Accumulator) {
+        // Delegate the full reduce, not just the parts form: a
+        // sketch-carrying inner merges its extremes in `combine`, and
+        // routing through the default (combine → combine_parts) here
+        // would silently drop the sketch.
+        self.inner.combine(a, b);
+    }
+
     fn combine_parts(&self, a: &mut Accumulator, sum: &[f32], wtot: f64, n: u64) {
         self.inner.combine_parts(a, sum, wtot, n);
     }
@@ -133,6 +146,14 @@ impl FusionAlgorithm for DiscountedFusion<'_> {
 
     fn decomposable(&self) -> bool {
         self.inner.decomposable()
+    }
+
+    fn partial_foldable(&self) -> bool {
+        self.inner.partial_foldable()
+    }
+
+    fn sketch_cap(&self) -> Option<usize> {
+        self.inner.sketch_cap()
     }
 
     fn coordinate_sliceable(&self) -> bool {

@@ -1,0 +1,544 @@
+//! Coordinate-wise trimmed mean over bounded extremes sketches — the
+//! partial-foldable robust algorithm.
+//!
+//! A coordinate-wise trimmed mean drops the k smallest and k largest
+//! values per coordinate before averaging (k = ⌊trim·n⌋).  Computed
+//! exactly it is holistic — it needs every value of every coordinate —
+//! which is why `CoordMedian`/`Krum` are locked out of the streaming fold
+//! and the 2-tier hierarchy.  The observation that unlocks it: the fused
+//! output only ever *subtracts* the per-coordinate extremes from the
+//! running sum, and the m smallest/largest values of a union are always
+//! contained in the union of each part's m smallest/largest.  So a lane
+//! (or an edge cohort) can carry a bounded [`ExtremesSketch`] — the m
+//! smallest and m largest values seen per coordinate — next to its O(C)
+//! weighted sum, merge it across `ShardedFold` lanes and across
+//! `PartialAggregate` tiers, and finalize by subtracting the k retained
+//! extremes from the sum:
+//!
+//! ```text
+//! fused[c] = (sum[c] − Σ lo[c][..k_eff] − Σ hi[c][..k_eff]) / (n − 2·k_eff)
+//! ```
+//!
+//! **Exactness / error bound** (pinned in `rust/tests/engine_parity.rs`):
+//! with `k_eff = min(k, filled)`,
+//!
+//! * `k ≤ cap` (and every merge preserved `filled ≥ k`): the retained
+//!   extremes ARE the global extremes, so the sketch trimmed mean equals
+//!   the exact flat trimmed mean up to float re-association — the same
+//!   combine-associativity tolerance every decomposable fold carries;
+//! * `k > filled` (under-provisioned cap): the fold trims only the
+//!   `k_eff` provably-global extremes per side.  The `s = k − k_eff`
+//!   per-side stragglers it cannot trim all lie inside the innermost
+//!   retained extremes `[lo[c][filled−1], hi[c][filled−1]]`, and so does
+//!   every exactly-kept middle value, which gives the published bound
+//!   returned by [`ExtremesSketch::error_bound`]:
+//!
+//!   ```text
+//!   |sketch − exact|[c] ≤ 2s · (hi_in − lo_in) / (n − 2·k_eff)
+//!   ```
+//!
+//! The sketch costs `2·cap` f32 per coordinate — `2·cap` times the update
+//! itself — which is exactly the overhead
+//! [`FusionAlgorithm::partial_overhead`] reports and the planner prices
+//! on the hierarchical path (extra bytes per forwarded partial, extra
+//! fold work at the root).
+
+use super::{Accumulator, FusionAlgorithm, EPS};
+use crate::tensorstore::ModelUpdate;
+
+/// Hard cap on a sketch's per-side capacity: a corrupt wire header (or an
+/// absurd config) must not drive an `elems × cap` allocation.
+pub const MAX_SKETCH_CAP: usize = 4096;
+
+/// Per-coordinate bounded extremes: the `cap` smallest and `cap` largest
+/// values observed, coordinate-major (`lo[c·cap + j]` is coordinate `c`'s
+/// j-th smallest so far, ascending; `hi[c·cap + j]` its j-th largest,
+/// descending).  `filled = min(observations, cap)` is uniform across
+/// coordinates because every observation contributes exactly one value to
+/// every coordinate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExtremesSketch {
+    cap: usize,
+    elems: usize,
+    filled: usize,
+    lo: Vec<f32>,
+    hi: Vec<f32>,
+}
+
+/// Keep the `block.len()` smallest values, ascending; `filled` of them are
+/// valid.  O(cap) shifts — cap is small by construction.
+fn insert_asc(block: &mut [f32], filled: usize, v: f32) {
+    let cap = block.len();
+    let mut i = if filled < cap {
+        filled
+    } else {
+        if v >= block[cap - 1] {
+            return;
+        }
+        cap - 1
+    };
+    while i > 0 && block[i - 1] > v {
+        block[i] = block[i - 1];
+        i -= 1;
+    }
+    block[i] = v;
+}
+
+/// Keep the `block.len()` largest values, descending; mirror of
+/// [`insert_asc`].
+fn insert_desc(block: &mut [f32], filled: usize, v: f32) {
+    let cap = block.len();
+    let mut i = if filled < cap {
+        filled
+    } else {
+        if v <= block[cap - 1] {
+            return;
+        }
+        cap - 1
+    };
+    while i > 0 && block[i - 1] < v {
+        block[i] = block[i - 1];
+        i -= 1;
+    }
+    block[i] = v;
+}
+
+impl ExtremesSketch {
+    /// An empty sketch for `elems` coordinates keeping `cap` values per
+    /// side.  `cap` is clamped to `[1, MAX_SKETCH_CAP]` — a zero or absurd
+    /// capacity degrades the bound, never panics or allocates unboundedly.
+    pub fn new(cap: usize, elems: usize) -> ExtremesSketch {
+        let cap = cap.clamp(1, MAX_SKETCH_CAP);
+        ExtremesSketch {
+            cap,
+            elems,
+            filled: 0,
+            lo: vec![0.0; elems * cap],
+            hi: vec![0.0; elems * cap],
+        }
+    }
+
+    /// Rebuild a sketch from its raw parts (the wire decode path).  `None`
+    /// when the parts are inconsistent — the caller surfaces a typed wire
+    /// error instead of trusting a corrupt header.
+    pub fn from_parts(
+        cap: usize,
+        elems: usize,
+        filled: usize,
+        lo: Vec<f32>,
+        hi: Vec<f32>,
+    ) -> Option<ExtremesSketch> {
+        if cap == 0 || cap > MAX_SKETCH_CAP || filled > cap {
+            return None;
+        }
+        if lo.len() != elems * cap || hi.len() != elems * cap {
+            return None;
+        }
+        Some(ExtremesSketch { cap, elems, filled, lo, hi })
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn elems(&self) -> usize {
+        self.elems
+    }
+
+    /// Valid entries per side per coordinate: `min(observations, cap)`.
+    pub fn filled(&self) -> usize {
+        self.filled
+    }
+
+    /// Raw low-side storage, coordinate-major (for the wire encoder).
+    pub fn lo_raw(&self) -> &[f32] {
+        &self.lo
+    }
+
+    /// Raw high-side storage, coordinate-major (for the wire encoder).
+    pub fn hi_raw(&self) -> &[f32] {
+        &self.hi
+    }
+
+    /// Coordinate `c`'s j-th smallest retained value.
+    pub fn low(&self, c: usize, j: usize) -> f32 {
+        self.lo[c * self.cap + j]
+    }
+
+    /// Coordinate `c`'s j-th largest retained value.
+    pub fn high(&self, c: usize, j: usize) -> f32 {
+        self.hi[c * self.cap + j]
+    }
+
+    /// Sketch payload in bytes (what a partial carrying it grows by).
+    pub fn mem_bytes(&self) -> u64 {
+        (self.lo.len() + self.hi.len()) as u64 * 4
+    }
+
+    /// Fold one observation (a full update's coordinates) into the sketch.
+    pub fn observe(&mut self, data: &[f32]) {
+        debug_assert_eq!(data.len(), self.elems);
+        let f = self.filled;
+        for (c, &v) in data.iter().enumerate() {
+            insert_asc(&mut self.lo[c * self.cap..(c + 1) * self.cap], f, v);
+            insert_desc(&mut self.hi[c * self.cap..(c + 1) * self.cap], f, v);
+        }
+        self.filled = (self.filled + 1).min(self.cap);
+    }
+
+    /// Merge another sketch (a lane's or a forwarded partial's) into this
+    /// one.  The retained set stays exact for any rank `≤ cap`: the j-th
+    /// global extreme (j ≤ cap) is among some part's j smallest/largest,
+    /// so it survives every merge order.  Tolerates a differing `cap` on
+    /// the other side (keeps `self.cap`).
+    pub fn merge(&mut self, other: &ExtremesSketch) {
+        debug_assert_eq!(self.elems, other.elems);
+        if other.filled == 0 || self.elems != other.elems {
+            return;
+        }
+        for c in 0..self.elems {
+            let lob = &mut self.lo[c * self.cap..(c + 1) * self.cap];
+            let hib = &mut self.hi[c * self.cap..(c + 1) * self.cap];
+            let mut f = self.filled;
+            for j in 0..other.filled {
+                insert_asc(lob, f, other.lo[c * other.cap + j]);
+                insert_desc(hib, f, other.hi[c * other.cap + j]);
+                f = (f + 1).min(self.cap);
+            }
+        }
+        self.filled = (self.filled + other.filled).min(self.cap);
+    }
+
+    /// Per-side extremes the sketch could NOT retain for a trim depth `k`.
+    pub fn shortfall(&self, k: usize) -> usize {
+        k.saturating_sub(self.filled)
+    }
+
+    /// The published per-coordinate error bound of the sketch trimmed mean
+    /// vs the exact flat trimmed mean at trim depth `k` over `n` values:
+    /// `2s·(hi_in − lo_in)/(n − 2·k_eff)` with `s = k − k_eff` (see module
+    /// docs for the derivation; `0` when the sketch retained all `k`
+    /// extremes, i.e. the exact regime).
+    pub fn error_bound(&self, c: usize, n: u64, k: usize) -> f32 {
+        let k_eff = k.min(self.filled);
+        let s = k - k_eff;
+        if s == 0 || self.filled == 0 {
+            return 0.0;
+        }
+        // n − 2k_eff ≥ 1: k (and hence k_eff) is clamped to (n−1)/2.
+        let denom = (n as usize).saturating_sub(2 * k_eff).max(1) as f32;
+        let lo_in = self.low(c, self.filled - 1);
+        let hi_in = self.high(c, self.filled - 1);
+        2.0 * s as f32 * (hi_in - lo_in).max(0.0) / denom
+    }
+}
+
+/// Coordinate-wise trimmed mean: drop the `⌊trim·n⌋` smallest and largest
+/// values per coordinate, average the rest.  Partial-foldable through the
+/// [`ExtremesSketch`] riding in the [`Accumulator`] — the first robust
+/// algorithm the hierarchy gate admits (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrimmedMean {
+    trim: f32,
+    cap: usize,
+}
+
+impl TrimmedMean {
+    /// `trim` is the per-side trimmed fraction (the breakdown point);
+    /// `cap` the sketch's per-side capacity.  Both are sanitised the way
+    /// the config layer sanitises knobs: a non-finite or negative `trim`
+    /// collapses to 0 (plain mean), anything ≥ 0.5 clamps just below it
+    /// (a trimmed mean must keep at least one value), and `cap` clamps to
+    /// `[1, MAX_SKETCH_CAP]` — never a panic, never a silent panic path
+    /// at fold time.
+    pub fn new(trim: f32, cap: usize) -> TrimmedMean {
+        let trim = if trim.is_finite() && trim > 0.0 { trim.min(0.4999) } else { 0.0 };
+        TrimmedMean { trim, cap: cap.clamp(1, MAX_SKETCH_CAP) }
+    }
+
+    pub fn trim(&self) -> f32 {
+        self.trim
+    }
+
+    /// Per-side trim depth for an `n`-update round, clamped so the middle
+    /// keeps at least one value.
+    pub fn k_for(&self, n: u64) -> usize {
+        let k = (self.trim as f64 * n as f64).floor() as usize;
+        k.min((n.saturating_sub(1) / 2) as usize)
+    }
+}
+
+impl FusionAlgorithm for TrimmedMean {
+    fn name(&self) -> &'static str {
+        "trimmed"
+    }
+
+    /// Unweighted: the trimmed mean ranks raw coordinate values, so every
+    /// update counts once (like `IterAvg`).
+    fn weight(&self, _update: &ModelUpdate) -> f32 {
+        1.0
+    }
+
+    fn weight_parts(&self, _count: f32, _data: &[f32]) -> f32 {
+        1.0
+    }
+
+    /// The sum side of the algebra is the plain fold; the sketch rides in
+    /// the accumulator next to it, created lazily on the first fold.
+    fn accumulate_weighted(&self, acc: &mut Accumulator, w: f32, data: &[f32]) {
+        acc.add_weighted(data, w);
+        match acc.sketch.as_mut() {
+            Some(sk) => sk.observe(data),
+            None => {
+                let mut sk = ExtremesSketch::new(self.cap, data.len());
+                sk.observe(data);
+                acc.sketch = Some(sk);
+            }
+        }
+    }
+
+    /// Sketch-aware reduce: [`Accumulator::merge`] adds the sums AND
+    /// merges the extremes sketches.
+    fn combine(&self, a: &mut Accumulator, b: &Accumulator) {
+        a.merge(b);
+    }
+
+    fn finalize(&self, acc: Accumulator) -> Vec<f32> {
+        let n = acc.n;
+        let k = self.k_for(n);
+        let k_eff = acc.sketch.as_ref().map(|sk| k.min(sk.filled())).unwrap_or(0);
+        if k_eff == 0 {
+            // k = 0 (tiny round or trim 0) is exactly the plain mean; a
+            // missing sketch cannot trim (the engine guards reject
+            // sketch-less partials before this can silently happen).
+            let denom = acc.wtot as f32 + EPS;
+            let mut out = acc.sum;
+            for v in out.iter_mut() {
+                *v /= denom;
+            }
+            return out;
+        }
+        let sk = acc.sketch.as_ref().expect("k_eff > 0 implies a sketch");
+        let denom = (n as usize - 2 * k_eff) as f32;
+        let mut out = acc.sum;
+        for (c, v) in out.iter_mut().enumerate() {
+            let mut cut = 0.0f32;
+            for j in 0..k_eff {
+                cut += sk.low(c, j) + sk.high(c, j);
+            }
+            *v = (*v - cut) / denom;
+        }
+        out
+    }
+
+    /// NOT decomposable: the batch/MapReduce `combine_parts` algebra alone
+    /// (sums without sketches) cannot trim.  The fold engines instead
+    /// admit it through [`FusionAlgorithm::partial_foldable`].
+    fn decomposable(&self) -> bool {
+        false
+    }
+
+    fn partial_foldable(&self) -> bool {
+        true
+    }
+
+    fn sketch_cap(&self) -> Option<usize> {
+        Some(self.cap)
+    }
+
+    fn coordinate_sliceable(&self) -> bool {
+        false
+    }
+
+    // `holistic` deliberately keeps the default algebra (accumulate each
+    // update — which observes the sketch — then finalize): a single-lane
+    // sketch fold over the same sequence is bit-identical to it, the
+    // parity pin `engine_parity` carries.  The sort-based reference lives
+    // in [`exact_trimmed_mean`].
+}
+
+/// The exact flat trimmed mean, computed the expensive way: sort every
+/// coordinate's full value column.  O(n·C·log n) time, O(n) scratch per
+/// coordinate — the reference the sketch fold's error bound is pinned
+/// against, not a production path.
+pub fn exact_trimmed_mean(updates: &[&ModelUpdate], trim: f32) -> Vec<f32> {
+    let algo = TrimmedMean::new(trim, 1);
+    let n = updates.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = algo.k_for(n as u64);
+    let len = updates[0].data.len();
+    let mut out = vec![0.0f32; len];
+    let mut col = vec![0.0f32; n];
+    for (c, o) in out.iter_mut().enumerate() {
+        for (i, u) in updates.iter().enumerate() {
+            col[i] = u.data[c];
+        }
+        col.sort_by(|a, b| a.total_cmp(b));
+        let mid = &col[k..n - k];
+        *o = mid.iter().sum::<f32>() / mid.len() as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::all_close;
+    use crate::util::rng::Rng;
+
+    fn upd(rng: &mut Rng, party: u64, len: usize) -> ModelUpdate {
+        let mut data = vec![0f32; len];
+        rng.fill_gaussian_f32(&mut data, 1.0);
+        ModelUpdate::new(party, 1.0, 0, data)
+    }
+
+    #[test]
+    fn sketch_retains_exact_extremes_under_any_split() {
+        let mut rng = Rng::new(11);
+        let mut vals: Vec<f32> = (0..40).map(|_| rng.next_f64() as f32 * 10.0 - 5.0).collect();
+        // one sketch over all values vs a 3-way split merged
+        let mut whole = ExtremesSketch::new(4, 1);
+        for v in &vals {
+            whole.observe(std::slice::from_ref(v));
+        }
+        let mut parts: Vec<ExtremesSketch> =
+            (0..3).map(|_| ExtremesSketch::new(4, 1)).collect();
+        for (i, v) in vals.iter().enumerate() {
+            parts[i % 3].observe(std::slice::from_ref(v));
+        }
+        let mut merged = parts.remove(0);
+        for p in &parts {
+            merged.merge(p);
+        }
+        vals.sort_by(|a, b| a.total_cmp(b));
+        for j in 0..4 {
+            assert_eq!(whole.low(0, j), vals[j], "lo rank {j}");
+            assert_eq!(merged.low(0, j), vals[j], "merged lo rank {j}");
+            assert_eq!(whole.high(0, j), vals[vals.len() - 1 - j], "hi rank {j}");
+            assert_eq!(merged.high(0, j), vals[vals.len() - 1 - j], "merged hi rank {j}");
+        }
+        assert_eq!(whole.filled(), 4);
+        assert_eq!(merged.filled(), 4);
+    }
+
+    #[test]
+    fn sketch_handles_fewer_observations_than_cap() {
+        let mut sk = ExtremesSketch::new(8, 2);
+        sk.observe(&[3.0, -1.0]);
+        sk.observe(&[1.0, 2.0]);
+        assert_eq!(sk.filled(), 2);
+        assert_eq!(sk.low(0, 0), 1.0);
+        assert_eq!(sk.low(0, 1), 3.0);
+        assert_eq!(sk.high(1, 0), 2.0);
+        assert_eq!(sk.high(1, 1), -1.0);
+        assert_eq!(sk.shortfall(2), 0);
+        assert_eq!(sk.shortfall(5), 3);
+    }
+
+    #[test]
+    fn cap_is_clamped_never_zero() {
+        assert_eq!(ExtremesSketch::new(0, 4).cap(), 1);
+        assert_eq!(ExtremesSketch::new(usize::MAX, 1).cap(), MAX_SKETCH_CAP);
+        assert!(ExtremesSketch::from_parts(0, 1, 0, vec![], vec![]).is_none());
+        assert!(ExtremesSketch::from_parts(2, 1, 3, vec![0.0; 2], vec![0.0; 2]).is_none());
+        assert!(ExtremesSketch::from_parts(2, 1, 1, vec![0.0; 3], vec![0.0; 2]).is_none());
+        assert!(ExtremesSketch::from_parts(2, 1, 1, vec![0.0; 2], vec![0.0; 2]).is_some());
+    }
+
+    #[test]
+    fn trimmed_mean_matches_sorted_reference_in_exact_regime() {
+        // cap ≥ k: the sketch fold must match the sort-based exact
+        // trimmed mean within float re-association tolerance.
+        let mut rng = Rng::new(21);
+        let us: Vec<ModelUpdate> = (0..20).map(|p| upd(&mut rng, p, 64)).collect();
+        let refs: Vec<&ModelUpdate> = us.iter().collect();
+        let algo = TrimmedMean::new(0.2, 8); // k = 4 ≤ cap
+        let got = algo.holistic(&refs).unwrap();
+        let want = exact_trimmed_mean(&refs, 0.2);
+        all_close(&got, &want, 1e-4, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn trimmed_mean_discards_injected_outliers() {
+        let mut rng = Rng::new(31);
+        let mut us: Vec<ModelUpdate> = (0..18).map(|p| upd(&mut rng, p, 32)).collect();
+        // two poisoned updates at ±1000: k = ⌊0.15·20⌋ = 3 per side trims
+        // them; the fused model must look like the honest-only mean.
+        us.push(ModelUpdate::new(100, 1.0, 0, vec![1000.0; 32]));
+        us.push(ModelUpdate::new(101, 1.0, 0, vec![-1000.0; 32]));
+        let refs: Vec<&ModelUpdate> = us.iter().collect();
+        let fused = TrimmedMean::new(0.15, 8).holistic(&refs).unwrap();
+        assert!(fused.iter().all(|v| v.abs() < 3.0), "outliers must not survive");
+    }
+
+    #[test]
+    fn under_provisioned_cap_stays_within_published_bound() {
+        let mut rng = Rng::new(41);
+        let us: Vec<ModelUpdate> = (0..30).map(|p| upd(&mut rng, p, 16)).collect();
+        let refs: Vec<&ModelUpdate> = us.iter().collect();
+        // trim 0.3 wants k = 9 per side; cap 4 retains only 4
+        let algo = TrimmedMean::new(0.3, 4);
+        let mut acc = Accumulator::zeros(16);
+        for u in &us {
+            algo.accumulate(&mut acc, u);
+        }
+        let sk = acc.sketch.clone().unwrap();
+        assert_eq!(sk.shortfall(algo.k_for(30)), 5);
+        let got = algo.finalize(acc);
+        let want = exact_trimmed_mean(&refs, 0.3);
+        for c in 0..16 {
+            let bound = sk.error_bound(c, 30, algo.k_for(30)) + 1e-4;
+            assert!(
+                (got[c] - want[c]).abs() <= bound,
+                "coord {c}: |{} - {}| > bound {bound}",
+                got[c],
+                want[c]
+            );
+        }
+    }
+
+    #[test]
+    fn exact_regime_error_bound_is_zero() {
+        let mut sk = ExtremesSketch::new(8, 1);
+        for v in [1.0f32, 2.0, 3.0, 4.0, 5.0] {
+            sk.observe(&[v]);
+        }
+        assert_eq!(sk.error_bound(0, 5, 2), 0.0);
+        assert!(sk.error_bound(0, 20, 8) > 0.0 || sk.filled() >= 8);
+    }
+
+    #[test]
+    fn knobs_are_sanitised_at_use() {
+        for bad in [f32::NAN, f32::INFINITY, -0.3] {
+            assert_eq!(TrimmedMean::new(bad, 4).trim(), 0.0);
+        }
+        // ≥ 0.5 clamps below it: the middle always keeps a value
+        let t = TrimmedMean::new(0.9, 4);
+        assert!(t.trim() < 0.5);
+        assert_eq!(t.k_for(10), 4); // (10-1)/2 = 4
+        assert_eq!(TrimmedMean::new(0.2, 0).sketch_cap(), Some(1));
+        assert_eq!(TrimmedMean::new(0.2, 1 << 20).sketch_cap(), Some(MAX_SKETCH_CAP));
+    }
+
+    #[test]
+    fn trim_zero_is_the_plain_mean() {
+        let mut rng = Rng::new(51);
+        let us: Vec<ModelUpdate> = (0..7).map(|p| upd(&mut rng, p, 24)).collect();
+        let refs: Vec<&ModelUpdate> = us.iter().collect();
+        let got = TrimmedMean::new(0.0, 4).holistic(&refs).unwrap();
+        let want = crate::fusion::IterAvg.holistic(&refs).unwrap();
+        all_close(&got, &want, 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn capability_flags_gate_the_right_paths() {
+        let t = TrimmedMean::new(0.2, 8);
+        assert!(!t.decomposable(), "combine_parts alone cannot trim");
+        assert!(t.partial_foldable(), "the sketch makes partials meaningful");
+        assert!(!t.coordinate_sliceable());
+        assert_eq!(t.sketch_cap(), Some(8));
+        assert_eq!(t.partial_overhead(), 16.0, "2·cap extra bytes per update byte");
+    }
+}

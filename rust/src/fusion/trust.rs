@@ -1,0 +1,225 @@
+//! Reputation-weighted, norm-clipped fusion — the trust wrapper.
+//!
+//! [`TrustWeighted`] wraps any fusion algorithm the way
+//! [`DiscountedFusion`](super::DiscountedFusion) wraps one for staleness:
+//! the inner algebra (accumulate/combine/finalize) is forwarded untouched
+//! and only the per-update **weight** is scaled, by two factors read at
+//! fold time:
+//!
+//! * the sender's trust score from the
+//!   [`PartyRegistry`](crate::coordinator::PartyRegistry) reputation
+//!   ledger (1.0 for parties in good standing);
+//! * a norm clip: when the registry has a sealed median-norm reference
+//!   and the update's L2 norm exceeds `clip_factor × median`, the weight
+//!   is scaled by `threshold / norm` — the update contributes at most the
+//!   mass an at-threshold update would.
+//!
+//! **Bit-identity contract** (pinned in `engine_parity`): both factors
+//! are applied only when they differ from 1.0 / only when the clip
+//! triggers, so a round of honest parties at uniform trust fuses
+//! bit-identically to the bare inner algorithm — robustness costs nothing
+//! until someone misbehaves.
+
+use std::sync::Arc;
+
+use super::{Accumulator, FusionAlgorithm, FusionError};
+use crate::coordinator::PartyRegistry;
+use crate::tensorstore::ModelUpdate;
+
+/// L2 norm with f64 accumulation — stable for the multi-million-element
+/// updates the streaming path exists for.
+pub fn l2_norm(data: &[f32]) -> f32 {
+    data.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt() as f32
+}
+
+/// Weight wrapper applying the party's persisted trust score and the
+/// median-relative norm clip.  See module docs.
+pub struct TrustWeighted {
+    inner: Arc<dyn FusionAlgorithm>,
+    registry: Arc<PartyRegistry>,
+    clip_factor: f32,
+}
+
+impl TrustWeighted {
+    /// `clip_factor` is the clip threshold as a multiple of the sealed
+    /// median norm; non-finite or non-positive values disable clipping
+    /// (trust weighting still applies) — sanitised here so a bad config
+    /// knob cannot panic at fold time.
+    pub fn new(
+        inner: Arc<dyn FusionAlgorithm>,
+        registry: Arc<PartyRegistry>,
+        clip_factor: f32,
+    ) -> TrustWeighted {
+        let clip_factor = if clip_factor.is_finite() && clip_factor > 0.0 { clip_factor } else { 0.0 };
+        TrustWeighted { inner, registry, clip_factor }
+    }
+
+    pub fn clip_factor(&self) -> f32 {
+        self.clip_factor
+    }
+
+    /// The combined trust × clip scale for one update; exactly 1.0 (and
+    /// bit-free) for an honest, in-norm sender.
+    fn scale_for(&self, party: u64, data: &[f32]) -> f32 {
+        let mut s = 1.0f32;
+        let t = self.registry.trust(party);
+        if t != 1.0 {
+            s *= t;
+        }
+        if self.clip_factor > 0.0 {
+            if let Some(nref) = self.registry.norm_ref() {
+                let limit = self.clip_factor * nref;
+                let norm = l2_norm(data);
+                if norm > limit && norm > 0.0 {
+                    s *= limit / norm;
+                }
+            }
+        }
+        s
+    }
+}
+
+impl FusionAlgorithm for TrustWeighted {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn weight(&self, update: &ModelUpdate) -> f32 {
+        let w = self.inner.weight(update);
+        let s = self.scale_for(update.party, &update.data);
+        if s == 1.0 {
+            w
+        } else {
+            w * s
+        }
+    }
+
+    fn transform(&self, x: f32) -> f32 {
+        self.inner.transform(x)
+    }
+
+    fn identity_transform(&self) -> bool {
+        self.inner.identity_transform()
+    }
+
+    /// Identity-less path: no party means no reputation to apply — the
+    /// zero-copy folds call [`FusionAlgorithm::weight_tagged`] instead.
+    fn weight_parts(&self, count: f32, data: &[f32]) -> f32 {
+        self.inner.weight_parts(count, data)
+    }
+
+    fn weight_tagged(&self, party: u64, count: f32, data: &[f32]) -> f32 {
+        let w = self.inner.weight_parts(count, data);
+        let s = self.scale_for(party, data);
+        if s == 1.0 {
+            w
+        } else {
+            w * s
+        }
+    }
+
+    fn accumulate_weighted(&self, acc: &mut Accumulator, w: f32, data: &[f32]) {
+        self.inner.accumulate_weighted(acc, w, data);
+    }
+
+    fn combine(&self, a: &mut Accumulator, b: &Accumulator) {
+        self.inner.combine(a, b);
+    }
+
+    fn combine_parts(&self, a: &mut Accumulator, sum: &[f32], wtot: f64, n: u64) {
+        self.inner.combine_parts(a, sum, wtot, n);
+    }
+
+    fn finalize(&self, acc: Accumulator) -> Vec<f32> {
+        self.inner.finalize(acc)
+    }
+
+    fn decomposable(&self) -> bool {
+        self.inner.decomposable()
+    }
+
+    fn partial_foldable(&self) -> bool {
+        self.inner.partial_foldable()
+    }
+
+    fn sketch_cap(&self) -> Option<usize> {
+        self.inner.sketch_cap()
+    }
+
+    fn coordinate_sliceable(&self) -> bool {
+        self.inner.coordinate_sliceable()
+    }
+
+    fn holistic(&self, updates: &[&ModelUpdate]) -> Result<Vec<f32>, FusionError> {
+        self.inner.holistic(updates)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::FedAvg;
+    use crate::util::rng::Rng;
+
+    fn upd(rng: &mut Rng, party: u64, len: usize) -> ModelUpdate {
+        let mut data = vec![0f32; len];
+        rng.fill_gaussian_f32(&mut data, 1.0);
+        ModelUpdate::new(party, 10.0, 0, data)
+    }
+
+    #[test]
+    fn uniform_trust_no_reference_is_bitwise_fedavg_weight() {
+        let reg = Arc::new(PartyRegistry::new());
+        let tw = TrustWeighted::new(Arc::new(FedAvg), reg, 3.0);
+        let mut rng = Rng::new(5);
+        for p in 0..8 {
+            let u = upd(&mut rng, p, 32);
+            assert_eq!(tw.weight(&u).to_bits(), FedAvg.weight(&u).to_bits());
+            assert_eq!(
+                tw.weight_tagged(p, u.count, &u.data).to_bits(),
+                FedAvg.weight_parts(u.count, &u.data).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn decayed_trust_scales_the_weight() {
+        let reg = Arc::new(PartyRegistry::new());
+        reg.penalize(3, 0.5);
+        let tw = TrustWeighted::new(Arc::new(FedAvg), reg, 0.0);
+        let mut rng = Rng::new(6);
+        let u = upd(&mut rng, 3, 16);
+        assert_eq!(tw.weight(&u), FedAvg.weight(&u) * 0.5);
+    }
+
+    #[test]
+    fn norm_clip_caps_oversized_updates() {
+        let reg = Arc::new(PartyRegistry::new());
+        reg.set_norm_ref(Some(1.0));
+        let tw = TrustWeighted::new(Arc::new(FedAvg), reg.clone(), 2.0);
+        // norm 4 against threshold 2 → weight scaled by 1/2
+        let big = ModelUpdate::new(1, 10.0, 0, vec![4.0, 0.0, 0.0, 0.0]);
+        assert_eq!(tw.weight(&big), FedAvg.weight(&big) * 0.5);
+        // in-norm update untouched, bit-for-bit
+        let ok = ModelUpdate::new(2, 10.0, 0, vec![1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(tw.weight(&ok).to_bits(), FedAvg.weight(&ok).to_bits());
+    }
+
+    #[test]
+    fn bad_clip_factor_disables_clipping_not_panics() {
+        let reg = Arc::new(PartyRegistry::new());
+        reg.set_norm_ref(Some(1.0));
+        for bad in [f32::NAN, f32::NEG_INFINITY, -2.0, 0.0] {
+            let tw = TrustWeighted::new(Arc::new(FedAvg), reg.clone(), bad);
+            assert_eq!(tw.clip_factor(), 0.0);
+            let big = ModelUpdate::new(1, 10.0, 0, vec![100.0; 4]);
+            assert_eq!(tw.weight(&big), FedAvg.weight(&big));
+        }
+    }
+
+    #[test]
+    fn l2_norm_matches_hand_value() {
+        assert_eq!(l2_norm(&[3.0, 4.0]), 5.0);
+        assert_eq!(l2_norm(&[]), 0.0);
+    }
+}

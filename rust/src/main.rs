@@ -25,6 +25,7 @@ use elastiagg::util::fmt;
 const VALUE_OPTS: &[&str] = &[
     "parties", "rounds", "local-steps", "lr", "skew", "seed", "mem", "cores",
     "algo", "model", "addr", "dfs-root", "scale", "n", "len", "policy",
+    "clip", "trust-decay", "trim", "sketch-cap",
 ];
 
 fn main() {
@@ -43,6 +44,7 @@ fn main() {
                  train      --parties N --rounds R --local-steps S --lr F --skew F --mem SIZE\n\
                  serve      --addr HOST:PORT --mem SIZE --cores N --algo NAME --model NAME\n\
                             --policy min_latency|min_cost|balanced:<alpha>\n\
+                            --clip F --trust-decay F --trim F --sketch-cap N\n\
                  aggregate  --n N --len L --algo NAME --cores N\n\
                  calibrate\n\
                  models"
@@ -79,10 +81,6 @@ fn cmd_train(args: &Args) {
 fn cmd_serve(args: &Args) {
     let addr = args.str_or("addr", "127.0.0.1:7878");
     let algo_name = args.str_or("algo", "fedavg");
-    let algo = fusion::by_name(&algo_name).unwrap_or_else(|| {
-        eprintln!("unknown fusion algorithm '{algo_name}'");
-        std::process::exit(2);
-    });
     let model = args.str_or("model", "CNN4.6");
     let spec = ModelZoo::get(&model).unwrap_or_else(|| {
         eprintln!("unknown model '{model}' (see `elastiagg models`)");
@@ -93,6 +91,34 @@ fn cmd_serve(args: &Args) {
     cfg.node.memory_bytes = args.size_or("mem", 2 << 30);
     cfg.node.cores = args.usize_or("cores", 4);
     cfg.size_scale = scale;
+    // Robust knobs arrive CLI-shaped; the JSON loader owns the domain
+    // rules (trim < 0.5, clip ≥ 0, decay in [0, 1], junk keeps the
+    // default), so round-trip the config through it instead of
+    // re-stating the rules here.
+    cfg.trim_fraction = args.f64_or("trim", cfg.trim_fraction);
+    cfg.clip_factor = args.f64_or("clip", cfg.clip_factor);
+    cfg.trust_decay = args.f64_or("trust-decay", cfg.trust_decay);
+    let mut cfg = ServiceConfig::from_json(&cfg.to_json());
+    let algo = if algo_name.starts_with("trimmed") && cfg.trim_fraction > 0.0 {
+        // an explicit --trim re-parameterizes the registry's default
+        Box::new(fusion::TrimmedMean::new(
+            cfg.trim_fraction as f32,
+            args.usize_or("sketch-cap", 8),
+        )) as Box<dyn fusion::FusionAlgorithm>
+    } else {
+        fusion::by_name(&algo_name).unwrap_or_else(|| {
+            eprintln!("unknown fusion algorithm '{algo_name}'");
+            std::process::exit(2);
+        })
+    };
+    if cfg.clip_factor > 0.0 || cfg.trim_fraction > 0.0 {
+        println!(
+            "robust gate: clip ×{}, trim {}, trust decay {}",
+            cfg.clip_factor,
+            cfg.trim_fraction,
+            cfg.trust_decay
+        );
+    }
     let policy_str = args.str_or("policy", &cfg.policy.to_string());
     cfg.policy = elastiagg::planner::DispatchPolicy::parse(&policy_str).unwrap_or_else(|| {
         eprintln!("unknown policy '{policy_str}' (min_latency | min_cost | balanced:<alpha>)");

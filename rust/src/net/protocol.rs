@@ -44,6 +44,12 @@ pub const TAG_ASYNC_ACK: u8 = 0x0C;
 /// `DenseF32` payload sits 4-aligned inside the pooled frame buffer and
 /// still decodes zero-copy.
 pub const TAG_UPLOAD_ENC: u8 = 0x0D;
+/// Reply: the robust admission gate judged the upload hostile (L2 norm
+/// beyond the rejection threshold) and refused to fold it.  Typed — NOT
+/// [`TAG_ERROR`] — so an honest-but-misconfigured client can tell "my
+/// update was rejected as an outlier" apart from a transport failure and
+/// stop burning its trust score on retransmits.
+pub const TAG_REJECTED: u8 = 0x0E;
 pub const TAG_ERROR: u8 = 0x7F;
 
 /// Validate a payload length before it is cast into the wire's u32 length
@@ -99,6 +105,10 @@ pub enum Message {
     /// [`Message::decode`] validates the frame (CRC/magic/tag/lengths)
     /// before accepting it.
     UploadEnc { nonce: u64, frame: Vec<u8> },
+    /// The robust admission gate rejected this party's upload: its L2
+    /// norm exceeded the round's rejection threshold.  The sender's trust
+    /// score has been decayed; the update was NOT folded.
+    Rejected { party: u64, norm: f32 },
     Error(String),
 }
 
@@ -197,6 +207,11 @@ impl Message {
                 out.extend_from_slice(&nonce.to_le_bytes());
                 out.extend_from_slice(frame);
                 TAG_UPLOAD_ENC
+            }
+            Message::Rejected { party, norm } => {
+                out.extend_from_slice(&party.to_le_bytes());
+                out.extend_from_slice(&norm.to_le_bytes());
+                TAG_REJECTED
             }
             Message::Error(m) => {
                 out.extend_from_slice(m.as_bytes());
@@ -313,6 +328,13 @@ impl Message {
                     frame: frame.to_vec(),
                 })
             }
+            TAG_REJECTED => {
+                need(12)?;
+                Ok(Message::Rejected {
+                    party: u64::from_le_bytes(payload[..8].try_into().unwrap()),
+                    norm: f32::from_le_bytes(payload[8..12].try_into().unwrap()),
+                })
+            }
             TAG_ERROR => Ok(Message::Error(String::from_utf8_lossy(payload).into_owned())),
             t => Err(ProtoError::UnknownTag(t)),
         }
@@ -367,6 +389,7 @@ mod tests {
             Message::NoModel { round: 0 }.encode().0,
             Message::AsyncAck { version: 0, delta: 0 }.encode().0,
             Message::UploadEnc { nonce: 0, frame: vec![] }.encode().0,
+            Message::Rejected { party: 0, norm: 0.0 }.encode().0,
             Message::Error(String::new()).encode().0,
         ];
         let mut set = msgs.to_vec();
@@ -496,6 +519,15 @@ mod tests {
         // too short for the nonce, or an empty/garbage frame: rejected
         assert!(Message::decode(TAG_UPLOAD_ENC, &[0u8; 7]).is_err());
         assert!(Message::decode(TAG_UPLOAD_ENC, &[0u8; 20]).is_err());
+    }
+
+    #[test]
+    fn rejected_roundtrip() {
+        let m = Message::Rejected { party: 99, norm: 123.5 };
+        let (tag, payload) = m.encode();
+        assert_eq!(tag, TAG_REJECTED);
+        assert_eq!(Message::decode(tag, &payload).unwrap(), m);
+        assert!(Message::decode(TAG_REJECTED, &[0u8; 11]).is_err());
     }
 
     #[test]

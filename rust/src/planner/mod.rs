@@ -461,11 +461,18 @@ impl DispatchPlanner {
                     e,
                     enc,
                 );
-                let lat = corr * (edge_s + root_s);
+                // Sketch-carrying robust algorithms (trimmed mean) ship
+                // per-lane extremes alongside each partial: the relay→root
+                // leg and the root's fold both grow by the sketch-to-sum
+                // ratio.  Zero for plain decomposable algorithms, so the
+                // FedAvg pricing is bit-identical to the pre-robust planner.
+                let sketch_mult = 1.0 + algo.partial_overhead();
+                let lat = corr * (edge_s + root_s * sketch_mult);
                 // clients→edges move encoded frames; relays→root always
                 // forward dense f32 partials (the structural asymmetry)
                 let wire = uplink_bytes(eff)
-                    + self.cluster.hierarchical_root_bytes(update_bytes, eff, e) as f64;
+                    + self.cluster.hierarchical_root_bytes(update_bytes, eff, e) as f64
+                        * sketch_mult;
                 candidates.push(CandidatePlan {
                     kind: PlanKind::Hierarchical { edges: e },
                     cost: PlanCost::new(
@@ -819,6 +826,34 @@ mod tests {
             PlanKind::Hierarchical { edges: 4 },
             "a tiny fleet must not pay the tier barrier"
         );
+    }
+
+    #[test]
+    fn sketch_overhead_prices_the_robust_hierarchy_dearer() {
+        use crate::fusion::TrimmedMean;
+        // The trimmed mean rides the hierarchy gate via its mergeable
+        // extremes sketch, but every forwarded partial hauls 2·cap extra
+        // lanes: its hierarchical candidate must be enumerated AND priced
+        // strictly above FedAvg's on both axes, while the flat streaming
+        // candidate (no partials cross a wire) prices identically-shaped.
+        let p = planner_with_edges(DispatchPolicy::MinLatency, 4);
+        let tm = TrimmedMean::new(0.2, 8);
+        let robust = p.plan(UPDATE_46MB, 30_000, &tm, 0);
+        let plain = p.plan(UPDATE_46MB, 30_000, &FedAvg, 0);
+        let hier = |pl: &RoundPlan| {
+            pl.candidates
+                .iter()
+                .find(|c| matches!(c.kind, PlanKind::Hierarchical { .. }))
+                .copied()
+                .expect("hierarchical candidate enumerated")
+        };
+        let (rh, ph) = (hier(&robust), hier(&plain));
+        assert!(rh.cost.latency_s > ph.cost.latency_s, "{rh:?} vs {ph:?}");
+        assert!(rh.cost.usd >= ph.cost.usd, "{rh:?} vs {ph:?}");
+        // the premium is bounded: only the root leg inflates, so the
+        // robust plan stays within sketch_mult× of the plain one
+        let mult = 1.0 + tm.partial_overhead();
+        assert!(rh.cost.latency_s < ph.cost.latency_s * mult, "{rh:?} vs {ph:?}");
     }
 
     #[test]

@@ -26,7 +26,7 @@ use crate::coordinator::{
     ServiceError, ServiceReport, WorkloadClass,
 };
 use crate::engine::StreamingFold;
-use crate::fusion::{DiscountedFusion, FusionAlgorithm, StalenessDiscount};
+use crate::fusion::{l2_norm, DiscountedFusion, FusionAlgorithm, StalenessDiscount, TrustWeighted};
 use crate::memsim::MemoryBudget;
 use crate::net::server::Handler;
 use crate::net::{protocol, Message, NetServer, ProtoError, Reply, ServerHandle};
@@ -68,9 +68,21 @@ impl FlServer {
         } else {
             None
         };
+        let registry = Arc::new(PartyRegistry::new());
+        // A positive clip factor switches robust mode on: every weight the
+        // folds read goes through the trust/clip wrapper.  With uniform
+        // trust and no sealed norm reference the wrapper is the bitwise
+        // identity, so turning the knob on costs nothing until someone
+        // misbehaves (pinned in `engine_parity`).
+        let clip = cfg.clip_factor;
+        let algo: Arc<dyn FusionAlgorithm> = if clip.is_finite() && clip > 0.0 {
+            Arc::new(TrustWeighted::new(algo, registry.clone(), clip as f32))
+        } else {
+            algo
+        };
         let s = Arc::new(FlServer {
             service: Arc::new(service),
-            registry: Arc::new(PartyRegistry::new()),
+            registry,
             algo,
             update_bytes,
             node_budget,
@@ -174,6 +186,72 @@ impl FlServer {
         NetServer::serve(addr, Arc::new(FlHandler(self.clone())))
     }
 
+    /// The sanitised robust knobs `(clip_factor, trust_decay)`; a clip
+    /// factor of 0 means robust mode is off and no per-upload norm work
+    /// happens at all.
+    fn robust_knobs(&self) -> (f32, f32) {
+        let cfg = self.service.config();
+        let clip = if cfg.clip_factor.is_finite() && cfg.clip_factor > 0.0 {
+            cfg.clip_factor as f32
+        } else {
+            0.0
+        };
+        let decay = if cfg.trust_decay.is_finite() {
+            (cfg.trust_decay as f32).clamp(0.0, 1.0)
+        } else {
+            0.5
+        };
+        (clip, decay)
+    }
+
+    /// The robust admission gate, run INSIDE the ingest closure so the
+    /// rejection rides the round's typed-error plumbing: when robust mode
+    /// is on and a norm reference is sealed, an update whose L2 norm
+    /// exceeds `clip_factor² × reference` is refused outright — soft
+    /// clipping (up to `clip_factor ×`) is the fusion wrapper's job; this
+    /// gate handles the frames too hostile to fold at any weight.  A
+    /// rejection decays the sender's trust immediately.  Returns the norm
+    /// to record after a successful fold (`None` when robust mode is off —
+    /// honest deployments pay zero norm work per upload).
+    fn robust_check(&self, party: u64, data: &[f32]) -> Result<Option<f32>, RoundError> {
+        let (clip, decay) = self.robust_knobs();
+        if clip == 0.0 {
+            return Ok(None);
+        }
+        let norm = l2_norm(data);
+        if let Some(nref) = self.registry.norm_ref() {
+            let reject_at = clip * clip * nref;
+            if norm > reject_at {
+                self.registry.penalize(party, decay);
+                return Err(RoundError::Rejected { party, norm });
+            }
+        }
+        Ok(Some(norm))
+    }
+
+    /// Record an accepted update's norm for this round's median seal.
+    fn note_norm(&self, party: u64, norm: Option<f32>) {
+        if let Some(n) = norm {
+            self.registry.observe_norm(party, n);
+        }
+    }
+
+    /// Round-seal reputation bookkeeping: a sealed (published) round folds
+    /// its observed norms into the next round's reference and judges every
+    /// contributor; an aborted round judges nobody.  No-op when robust
+    /// mode is off.
+    fn seal_robust_round(&self, sealed: bool) {
+        let (clip, decay) = self.robust_knobs();
+        if clip == 0.0 {
+            return;
+        }
+        if sealed {
+            self.registry.seal_norms(decay);
+        } else {
+            self.registry.reset_norms();
+        }
+    }
+
     /// Shared shape of the upload reply: route the ingest closure to the
     /// current round's state, turn protocol failures into typed REPLIES —
     /// never a coordinator crash: a retransmit gets `Duplicate` (with the
@@ -218,6 +296,7 @@ impl FlServer {
                     Message::Duplicate { party, nonce }
                 }
                 Err(RoundError::WrongPhase { .. }) => Message::Late { round },
+                Err(RoundError::Rejected { party, norm }) => Message::Rejected { party, norm },
                 Err(e) => Message::Error(format!("ingest: {e}")),
             },
             Some(_) => {
@@ -296,7 +375,12 @@ impl FlServer {
                         self.async_offer(ar, v.party, 0, v.round, v.count, &v.data),
                     ));
                 }
-                Ok(Reply::Msg(self.upload_with(v.round, |st| st.ingest_view(&v))))
+                Ok(Reply::Msg(self.upload_with(v.round, |st| {
+                    let norm = self.robust_check(v.party, &v.data)?;
+                    let n = st.ingest_view(&v)?;
+                    self.note_norm(v.party, norm);
+                    Ok(n)
+                })))
             }
             protocol::TAG_UPLOAD_NONCE => {
                 if payload.len() < 8 {
@@ -314,9 +398,12 @@ impl FlServer {
                         self.async_offer(ar, v.party, nonce, v.round, v.count, &v.data),
                     ));
                 }
-                Ok(Reply::Msg(
-                    self.upload_with(v.round, |st| st.ingest_view_tagged(&v, nonce)),
-                ))
+                Ok(Reply::Msg(self.upload_with(v.round, |st| {
+                    let norm = self.robust_check(v.party, &v.data)?;
+                    let n = st.ingest_view_tagged(&v, nonce)?;
+                    self.note_norm(v.party, norm);
+                    Ok(n)
+                })))
             }
             protocol::TAG_UPLOAD_ENC => {
                 if payload.len() < 8 {
@@ -339,9 +426,12 @@ impl FlServer {
                         self.async_offer(ar, v.party, nonce, v.round, v.count, &v.data),
                     ));
                 }
-                Ok(Reply::Msg(
-                    self.upload_with(v.round, |st| st.ingest_view_tagged(&v, nonce)),
-                ))
+                Ok(Reply::Msg(self.upload_with(v.round, |st| {
+                    let norm = self.robust_check(v.party, &v.data)?;
+                    let n = st.ingest_view_tagged(&v, nonce)?;
+                    self.note_norm(v.party, norm);
+                    Ok(n)
+                })))
             }
             protocol::TAG_UPLOAD_PARTIAL => {
                 if payload.len() < 8 {
@@ -396,7 +486,13 @@ impl FlServer {
                     return self.async_offer(ar, u.party, 0, u.round, u.count, &u.data);
                 }
                 let declared = u.round;
-                self.upload_with(declared, |st| st.ingest(u))
+                self.upload_with(declared, |st| {
+                    let norm = self.robust_check(u.party, &u.data)?;
+                    let party = u.party;
+                    let n = st.ingest(u)?;
+                    self.note_norm(party, norm);
+                    Ok(n)
+                })
             }
             Message::UploadNonce { nonce, update } => {
                 if let Some(ar) = &self.async_round {
@@ -410,7 +506,13 @@ impl FlServer {
                     );
                 }
                 let declared = update.round;
-                self.upload_with(declared, |st| st.ingest_tagged(update, nonce))
+                self.upload_with(declared, |st| {
+                    let norm = self.robust_check(update.party, &update.data)?;
+                    let party = update.party;
+                    let n = st.ingest_tagged(update, nonce)?;
+                    self.note_norm(party, norm);
+                    Ok(n)
+                })
             }
             Message::UploadPartial { nonce, partial } => {
                 let declared = partial.round;
@@ -430,7 +532,12 @@ impl FlServer {
                 if let Some(ar) = &self.async_round {
                     return self.async_offer(ar, v.party, nonce, v.round, v.count, &v.data);
                 }
-                self.upload_with(v.round, |st| st.ingest_view_tagged(&v, nonce))
+                self.upload_with(v.round, |st| {
+                    let norm = self.robust_check(v.party, &v.data)?;
+                    let n = st.ingest_view_tagged(&v, nonce)?;
+                    self.note_norm(v.party, norm);
+                    Ok(n)
+                })
             }
             Message::GetModel { round } => {
                 if let Some(ar) = &self.async_round {
@@ -557,6 +664,7 @@ impl FlServer {
                     // were already released by the seal) and abort
                     drop(updates);
                     st.abort().map_err(ServiceError::Round)?;
+                    self.seal_robust_round(false);
                     self.open_round(round + 1);
                     return Ok(RoundRun {
                         outcome: RoundOutcome::Aborted,
@@ -574,6 +682,7 @@ impl FlServer {
                 if st.collected() == 0 {
                     // an empty fold cannot finish(); abort straight away
                     st.abort().map_err(ServiceError::Round)?;
+                    self.seal_robust_round(false);
                     self.open_round(round + 1);
                     self.service.observe_participation(0, expected);
                     return Ok(RoundRun {
@@ -593,6 +702,7 @@ impl FlServer {
                 if parties < quorum {
                     drop(fused); // below quorum: the partial fuse is discarded
                     st.abort().map_err(ServiceError::Round)?;
+                    self.seal_robust_round(false);
                     self.open_round(round + 1);
                     return Ok(RoundRun {
                         outcome: RoundOutcome::Aborted,
@@ -624,6 +734,9 @@ impl FlServer {
             RoundOutcome::Quorum
         };
         st.publish(fused.clone()).map_err(ServiceError::Round)?;
+        // Judge the round's contributors and publish the sealed median as
+        // the next round's clip/reject reference.
+        self.seal_robust_round(true);
         self.open_round(round + 1);
         Ok(RoundRun {
             outcome,

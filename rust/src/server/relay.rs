@@ -130,6 +130,7 @@ impl RelayServer {
 
         if st.collected() == 0 {
             st.abort().map_err(ServiceError::Round)?;
+            self.server.seal_robust_round(false);
             self.server.service.observe_participation(0, expected);
             self.server.open_round(round + 1);
             return Ok(RelayRound {
@@ -144,6 +145,7 @@ impl RelayServer {
         self.server.service.observe_participation(folded, expected);
         if folded < quorum {
             st.abort().map_err(ServiceError::Round)?;
+            self.server.seal_robust_round(false);
             self.server.open_round(round + 1);
             return Ok(RelayRound {
                 outcome: RoundOutcome::Aborted,
@@ -158,9 +160,17 @@ impl RelayServer {
             RoundOutcome::Quorum
         };
 
-        // One partial crosses the backhaul — the whole cohort's fold.
+        // The relay judges ITS cohort: edge-local trust and the next
+        // round's clip/reject reference come from the cohort it folded,
+        // independent of the root's view of the relays.
+        self.server.seal_robust_round(true);
+
+        // One partial crosses the backhaul — the whole cohort's fold.  The
+        // per-lane extremes sketch rides along, so a sketch-carrying robust
+        // algorithm (trimmed mean) stays exact/bounded through the tier.
         let partial =
-            PartialAggregate::new(self.edge_id, round, acc.wtot, parties, acc.sum);
+            PartialAggregate::new(self.edge_id, round, acc.wtot, parties, acc.sum)
+                .with_sketch(acc.sketch);
         let forwarded = NetClient::connect(&self.parent).ok().and_then(|mut c| {
             c.call(&Message::UploadPartial { nonce: self.nonce(round), partial }).ok()
         });

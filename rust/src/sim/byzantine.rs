@@ -1,0 +1,734 @@
+//! Byzantine scenarios: seeded attacker cohorts replayed against REAL
+//! servers over real TCP sockets — the robustness counterpart of the
+//! straggler and tier harnesses.
+//!
+//! Two shapes, matching the two robust layers:
+//!
+//! * **Flat, trust-weighted** ([`run_byzantine_scenario`]): a fleet with a
+//!   seeded attacker subset drives TWO quorum rounds against one
+//!   [`FlServer`] whose config arms the robust admission gate
+//!   (`clip_factor > 0`, so the fusion layer is wrapped in
+//!   [`TrustWeighted`](crate::fusion::TrustWeighted)).  Round 0 is honest
+//!   everywhere — it exists to seal the median-norm reference.  In round 1
+//!   the attackers ship their poisoned updates: norm-inflating attacks hit
+//!   the hard gate and draw the typed `Rejected` wire reply plus a trust
+//!   decay, while the honest cohort folds untouched.
+//! * **2-tier, trimmed-mean** ([`run_byzantine_tier_scenario`]): a
+//!   colluding cohort sits behind ONE relay of a real 2-tier tree running
+//!   [`TrimmedMean`](crate::fusion::TrimmedMean) end to end.  The poisoned
+//!   extremes ride the relay's extremes sketch across the backhaul and are
+//!   trimmed at the ROOT — the property that makes the robust algorithm
+//!   "survive the hierarchy".
+//!
+//! Determinism contract: every client's data AND its attack are pure
+//! functions of the seed ([`byz_update`] rebuilds the exact bytes a client
+//! shipped), so the in-process references ([`honest_fedavg_reference`],
+//! [`exact_trimmed_mean`] over [`fleet_updates`]) compare against the
+//! fused model numerically, and the reply-kind digests are bit-stable
+//! across runs.  Fused *weights* stay out of the digests for the same
+//! reason as everywhere else in `sim`: lane/arrival order re-associates
+//! float adds within the documented merge tolerance.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::client::SyntheticParty;
+use crate::config::{NodeRole, ServiceConfig};
+use crate::coordinator::{AdaptiveService, RoundOutcome};
+use crate::dfs::{DfsClient, NameNode};
+use crate::fusion::{FusionAlgorithm, TrimmedMean};
+use crate::mapreduce::ExecutorConfig;
+use crate::net::{Message, NetClient};
+use crate::server::{FlServer, RelayServer};
+use crate::sim::{classify, mix, ReplyKind};
+use crate::tensorstore::ModelUpdate;
+use crate::util::rng::Rng;
+
+/// What a Byzantine party does to its honest update before shipping it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Attack {
+    /// Multiply every coordinate by this factor (norm-inflating — the
+    /// attack the clip/reject gate catches).
+    Scale(f32),
+    /// Flip every sign.  Norm-preserving, so it sails PAST the norm gate —
+    /// the attack only a rank-based fold (trimmed mean) absorbs.
+    Negate,
+    /// Replace the update with large Gaussian noise (σ = 25): both
+    /// norm-inflating and direction-destroying.
+    Random,
+}
+
+impl Attack {
+    /// Apply the attack in place.  `rng` feeds only [`Attack::Random`];
+    /// callers pass the party's forked stream so the poisoned bytes are a
+    /// pure function of (seed, party).
+    pub fn apply(&self, data: &mut [f32], rng: &mut Rng) {
+        match self {
+            Attack::Scale(s) => {
+                let s = if s.is_finite() { *s } else { 1.0 };
+                for v in data.iter_mut() {
+                    *v *= s;
+                }
+            }
+            Attack::Negate => {
+                for v in data.iter_mut() {
+                    *v = -*v;
+                }
+            }
+            Attack::Random => rng.fill_gaussian_f32(data, 25.0),
+        }
+    }
+
+    fn digest_code(&self) -> u64 {
+        match self {
+            Attack::Scale(s) => mix(1, s.to_bits() as u64),
+            Attack::Negate => 2,
+            Attack::Random => 3,
+        }
+    }
+}
+
+/// The update party `party` ships in `round` — honest Gaussian data with
+/// the attack applied when `attack` is `Some`.  Pure function of its
+/// arguments: the driving client and every in-process reference rebuild
+/// bit-identical bytes from it.
+pub fn byz_update(
+    seed: u64,
+    party: u64,
+    round: u32,
+    len: usize,
+    attack: Option<Attack>,
+) -> ModelUpdate {
+    let mut u = SyntheticParty::new(party, seed).make_update(round, len);
+    if let Some(a) = attack {
+        let mut r = Rng::new(seed ^ party.wrapping_mul(0x00A7_7AC4));
+        a.apply(&mut u.data, &mut r);
+    }
+    u
+}
+
+/// One flat Byzantine scenario: fleet shape, attacker rate, robust knobs.
+#[derive(Clone, Debug)]
+pub struct ByzConfig {
+    pub seed: u64,
+    /// Registered fleet size.
+    pub clients: usize,
+    /// Parameters per update (bytes = 4×).
+    pub update_len: usize,
+    /// Probability a party is Byzantine (drawn per party from the seed).
+    pub attack_fraction: f64,
+    pub attack: Attack,
+    /// The server's robust admission knob (`ServiceConfig::clip_factor`);
+    /// > 0 arms the gate and wraps fusion in `TrustWeighted`.
+    pub clip_factor: f64,
+    pub trust_decay: f64,
+    /// Quorum as a fraction of the fleet.
+    pub quorum_frac: f64,
+    /// Per-round deadline.  The attacked round always runs to it (rejected
+    /// frames never count as collected), so keep it tight.
+    pub deadline: Duration,
+    pub node_memory: u64,
+    pub cores: usize,
+}
+
+impl Default for ByzConfig {
+    fn default() -> ByzConfig {
+        ByzConfig {
+            seed: 42,
+            clients: 16,
+            update_len: 256, // 1 KB updates: past the 32 KB buffer ceiling
+            attack_fraction: 0.25,
+            attack: Attack::Scale(50.0),
+            clip_factor: 3.0,
+            trust_decay: 0.5,
+            quorum_frac: 0.5,
+            deadline: Duration::from_millis(1500),
+            node_memory: 32 << 10,
+            cores: 4,
+        }
+    }
+}
+
+/// What one scheduled party will do — a pure function of the seed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ByzClientSchedule {
+    pub party: u64,
+    pub nonce: u64,
+    pub attacker: bool,
+    pub delay_ms: u64,
+}
+
+/// Expand a flat Byzantine scenario into per-party schedules.
+pub fn byz_schedules(cfg: &ByzConfig) -> Vec<ByzClientSchedule> {
+    let mut root = Rng::new(cfg.seed);
+    (0..cfg.clients as u64)
+        .map(|party| {
+            let mut r = root.fork(party.wrapping_add(0xB12A));
+            let nonce = r.next_u64();
+            let attacker = r.next_f64() < cfg.attack_fraction;
+            let delay_ms = 5 + r.gen_range(40);
+            ByzClientSchedule { party, nonce, attacker, delay_ms }
+        })
+        .collect()
+}
+
+/// Digest of the injected attack plan alone (pre-run).
+pub fn byz_schedule_digest(cfg: &ByzConfig, scheds: &[ByzClientSchedule]) -> u64 {
+    let mut h = 0xB12A_717Eu64; // "byzantine"
+    h = mix(h, cfg.attack.digest_code());
+    for s in scheds {
+        h = mix(h, s.party);
+        h = mix(h, s.nonce);
+        h = mix(h, u64::from(s.attacker));
+        h = mix(h, s.delay_ms);
+    }
+    h
+}
+
+/// One party's observable behaviour across both rounds.
+#[derive(Clone, Debug)]
+pub struct ByzClientRecord {
+    pub party: u64,
+    pub attacker: bool,
+    /// Reply to the honest round-0 upload.
+    pub honest_reply: ReplyKind,
+    /// Reply to the round-1 upload (poisoned for attackers).
+    pub attacked_reply: ReplyKind,
+    /// Trust score after the attacked round sealed.
+    pub trust: f32,
+}
+
+/// Everything a flat Byzantine scenario produced.
+#[derive(Clone, Debug)]
+pub struct ByzReport {
+    pub honest_outcome: RoundOutcome,
+    pub attacked_outcome: RoundOutcome,
+    pub honest_folded: usize,
+    pub attacked_folded: usize,
+    pub quorum: usize,
+    pub expected: usize,
+    /// Per-party records, in party order.
+    pub clients: Vec<ByzClientRecord>,
+    /// Round-0 fused model (honest everywhere) — numeric checks only,
+    /// never digested.
+    pub honest_fused: Vec<f32>,
+    /// Round-1 fused model (attacked) — numeric checks only.
+    pub attacked_fused: Vec<f32>,
+    /// Wall seconds — informational, never part of the digest.
+    pub round_s: f64,
+}
+
+fn outcome_code(o: RoundOutcome) -> u64 {
+    match o {
+        RoundOutcome::Complete => 1,
+        RoundOutcome::Quorum => 2,
+        RoundOutcome::Aborted => 3,
+    }
+}
+
+impl ByzReport {
+    /// Bit-stable digest: both outcomes and counts, plus every party's
+    /// attacker flag, typed reply pair and post-round trust bits.  (Trust
+    /// is deterministic: a decay multiplication per rejection plus the
+    /// seal's outlier/recovery arithmetic, all in a fixed party order.)
+    pub fn digest(&self) -> u64 {
+        let mut h = 0xB12A_D16Eu64;
+        h = mix(h, outcome_code(self.honest_outcome));
+        h = mix(h, outcome_code(self.attacked_outcome));
+        h = mix(h, self.honest_folded as u64);
+        h = mix(h, self.attacked_folded as u64);
+        h = mix(h, self.quorum as u64);
+        h = mix(h, self.expected as u64);
+        for c in &self.clients {
+            h = mix(h, c.party);
+            h = mix(h, u64::from(c.attacker));
+            h = mix(h, c.honest_reply.code());
+            h = mix(h, c.attacked_reply.code());
+            h = mix(h, c.trust.to_bits() as u64);
+        }
+        h
+    }
+}
+
+/// The honest-only weighted FedAvg the attacked round should converge to
+/// once the gate rejects every norm-inflating attacker: Σwᵢdᵢ / Σwᵢ over
+/// the honest subset, rebuilt from the seed.
+pub fn honest_fedavg_reference(cfg: &ByzConfig, round: u32) -> Vec<f32> {
+    let scheds = byz_schedules(cfg);
+    let mut sum = vec![0.0f64; cfg.update_len];
+    let mut wtot = 0.0f64;
+    for s in scheds.iter().filter(|s| !s.attacker) {
+        let u = byz_update(cfg.seed, s.party, round, cfg.update_len, None);
+        for (a, &v) in sum.iter_mut().zip(&u.data) {
+            *a += u.count as f64 * v as f64;
+        }
+        wtot += u.count as f64;
+    }
+    sum.iter().map(|&v| (v / wtot.max(1e-12)) as f32).collect()
+}
+
+/// Unique scratch roots across runs in one process.
+static BYZ_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn scratch_dir(tag: &str, seed: u64) -> std::path::PathBuf {
+    let seq = BYZ_SEQ.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!(
+        "elastiagg-{tag}-{}-{seed}-{seq}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).expect("byzantine scratch dir");
+    dir
+}
+
+fn drive_byz_client(addr: &str, s: &ByzClientSchedule, cfg: &ByzConfig, round: u32) -> ReplyKind {
+    std::thread::sleep(Duration::from_millis(s.delay_ms));
+    let attack = (round > 0 && s.attacker).then_some(cfg.attack);
+    let u = byz_update(cfg.seed, s.party, round, cfg.update_len, attack);
+    // round-distinct nonce: a retransmission ledger keyed per round never
+    // confuses the two uploads
+    let nonce = s.nonce ^ u64::from(round);
+    match NetClient::connect(addr) {
+        Ok(mut c) => c
+            .call(&Message::UploadNonce { nonce, update: u })
+            .map(|m| classify(&m))
+            .unwrap_or(ReplyKind::Rejected),
+        Err(_) => ReplyKind::Rejected,
+    }
+}
+
+/// Run one flat Byzantine scenario end to end: an honest calibration round
+/// that seals the median-norm reference, then the attacked round against
+/// the armed gate — real server, real TCP, typed `Rejected` replies.
+pub fn run_byzantine_scenario(cfg: &ByzConfig) -> ByzReport {
+    let scheds = byz_schedules(cfg);
+    let root = scratch_dir("byz", cfg.seed);
+    let nn = NameNode::create(&root, 2, 1, 1 << 20).expect("byzantine store");
+    let mut scfg = ServiceConfig::default();
+    scfg.node.memory_bytes = cfg.node_memory;
+    scfg.node.cores = cfg.cores.max(1);
+    scfg.monitor_timeout_s = cfg.deadline.as_secs_f64();
+    scfg.clip_factor = cfg.clip_factor;
+    scfg.trust_decay = cfg.trust_decay;
+    let svc = AdaptiveService::new(
+        scfg,
+        DfsClient::new(nn),
+        None,
+        ExecutorConfig { executors: 1, cores_per_executor: 2, ..Default::default() },
+    );
+    let update_bytes = (cfg.update_len * 4) as u64;
+    let server = FlServer::new(svc, Arc::new(crate::fusion::FedAvg), update_bytes);
+    for s in &scheds {
+        server.registry.join(s.party, 0, 16);
+    }
+    let handle = server.start("127.0.0.1:0").expect("byzantine server");
+    let addr = handle.addr().to_string();
+    let expected = cfg.clients.max(1);
+    let quorum = (((cfg.clients as f64) * cfg.quorum_frac).ceil() as usize).max(1);
+
+    let t0 = Instant::now();
+    let drive_round = |round: u32| {
+        std::thread::scope(|scope| {
+            let agg =
+                scope.spawn(|| server.run_round_quorum(expected, quorum, cfg.deadline));
+            std::thread::sleep(Duration::from_millis(40));
+            let clients: Vec<_> = scheds
+                .iter()
+                .map(|s| {
+                    let addr = addr.clone();
+                    scope.spawn(move || drive_byz_client(&addr, s, cfg, round))
+                })
+                .collect();
+            let replies: Vec<ReplyKind> =
+                clients.into_iter().map(|h| h.join().expect("client thread")).collect();
+            (agg.join().expect("aggregator thread").expect("quorum round"), replies)
+        })
+    };
+    let (honest_run, honest_replies) = drive_round(0);
+    let (attacked_run, attacked_replies) = drive_round(1);
+    let round_s = t0.elapsed().as_secs_f64();
+
+    let clients = scheds
+        .iter()
+        .enumerate()
+        .map(|(i, s)| ByzClientRecord {
+            party: s.party,
+            attacker: s.attacker,
+            honest_reply: honest_replies[i],
+            attacked_reply: attacked_replies[i],
+            trust: server.registry.trust(s.party),
+        })
+        .collect();
+    let fused = |run: &crate::server::RoundRun| {
+        run.result.as_ref().map(|(w, _)| w.clone()).unwrap_or_default()
+    };
+    let report = ByzReport {
+        honest_outcome: honest_run.outcome,
+        attacked_outcome: attacked_run.outcome,
+        honest_folded: honest_run.folded,
+        attacked_folded: attacked_run.folded,
+        quorum,
+        expected,
+        clients,
+        honest_fused: fused(&honest_run),
+        attacked_fused: fused(&attacked_run),
+        round_s,
+    };
+    drop(handle);
+    let _ = std::fs::remove_dir_all(&root);
+    report
+}
+
+/// One 2-tier Byzantine scenario: a colluding cohort behind ONE relay of a
+/// trimmed-mean tree.
+#[derive(Clone, Debug)]
+pub struct ByzTierConfig {
+    pub seed: u64,
+    pub edges: usize,
+    pub clients_per_edge: usize,
+    pub update_len: usize,
+    /// Byzantine parties, ALL behind edge 0 (the colluding cohort).
+    pub colluders: usize,
+    pub attack: Attack,
+    /// Per-side trimmed fraction of the tree's `TrimmedMean`.
+    pub trim: f32,
+    /// Extremes-sketch per-side capacity (≥ k for the exact regime).
+    pub sketch_cap: usize,
+    pub quorum_frac: f64,
+    pub relay_deadline: Duration,
+    pub root_deadline: Duration,
+    pub parent_wait: Duration,
+    pub node_memory: u64,
+    pub cores: usize,
+}
+
+impl Default for ByzTierConfig {
+    fn default() -> ByzTierConfig {
+        ByzTierConfig {
+            seed: 42,
+            edges: 3,
+            clients_per_edge: 6,
+            update_len: 64,
+            colluders: 2,
+            attack: Attack::Scale(50.0),
+            trim: 0.2,
+            sketch_cap: 8,
+            quorum_frac: 0.5,
+            relay_deadline: Duration::from_millis(600),
+            root_deadline: Duration::from_millis(1800),
+            parent_wait: Duration::from_secs(5),
+            node_memory: 64 << 10,
+            cores: 4,
+        }
+    }
+}
+
+impl ByzTierConfig {
+    /// The attack every scheduled party ships (colluders sit at the FRONT
+    /// of edge 0's cohort — deterministic by construction).
+    pub fn attack_for(&self, party: u64) -> Option<Attack> {
+        (party < self.colluders.min(self.clients_per_edge) as u64).then_some(self.attack)
+    }
+}
+
+/// Rebuild the whole fleet's shipped updates (poison included) from the
+/// seed — the operand set for [`exact_trimmed_mean`] references.
+///
+/// [`exact_trimmed_mean`]: crate::fusion::exact_trimmed_mean
+pub fn fleet_updates(cfg: &ByzTierConfig) -> Vec<ModelUpdate> {
+    (0..(cfg.edges * cfg.clients_per_edge) as u64)
+        .map(|p| byz_update(cfg.seed, p, 0, cfg.update_len, cfg.attack_for(p)))
+        .collect()
+}
+
+/// One edge's observable behaviour in the tier scenario.
+#[derive(Clone, Debug)]
+pub struct ByzEdgeRecord {
+    pub edge: u64,
+    pub relay_folded: usize,
+    pub partial_reply: Option<ReplyKind>,
+    pub model_published: bool,
+    /// Per-cohort-client replies, in party order.
+    pub replies: Vec<ReplyKind>,
+}
+
+/// Everything a tier Byzantine scenario produced.
+#[derive(Clone, Debug)]
+pub struct ByzTierReport {
+    pub outcome: RoundOutcome,
+    pub folded: usize,
+    pub quorum: usize,
+    pub expected: usize,
+    pub colluders: usize,
+    pub edges: Vec<ByzEdgeRecord>,
+    /// The root's fused (trimmed-mean) model — numeric checks only.
+    pub fused: Vec<f32>,
+    pub round_s: f64,
+}
+
+impl ByzTierReport {
+    /// Bit-stable digest over the structural outcome (never the floats).
+    pub fn digest(&self) -> u64 {
+        let mut h = 0xB12A_71E2u64;
+        h = mix(h, outcome_code(self.outcome));
+        h = mix(h, self.folded as u64);
+        h = mix(h, self.quorum as u64);
+        h = mix(h, self.expected as u64);
+        h = mix(h, self.colluders as u64);
+        let code = |r: &Option<ReplyKind>| r.map(|k| k.code()).unwrap_or(0);
+        for e in &self.edges {
+            h = mix(h, e.edge);
+            h = mix(h, e.relay_folded as u64);
+            h = mix(h, code(&e.partial_reply));
+            h = mix(h, u64::from(e.model_published));
+            for r in &e.replies {
+                h = mix(h, r.code());
+            }
+        }
+        h
+    }
+}
+
+fn make_tier_node(
+    role: NodeRole,
+    parent: Option<String>,
+    edge_id: u64,
+    cfg: &ByzTierConfig,
+    algo: Arc<dyn FusionAlgorithm>,
+    dir: &std::path::Path,
+) -> Arc<FlServer> {
+    let nn = NameNode::create(dir, 2, 1, 1 << 20).expect("byz tier store");
+    let mut scfg = ServiceConfig::default();
+    scfg.node.memory_bytes = cfg.node_memory;
+    scfg.node.cores = cfg.cores.max(1);
+    scfg.monitor_timeout_s = cfg.root_deadline.as_secs_f64();
+    scfg.trim_fraction = cfg.trim as f64;
+    scfg.role = role;
+    scfg.parent_addr = parent;
+    scfg.edge_id = edge_id;
+    let svc = AdaptiveService::new(
+        scfg,
+        DfsClient::new(nn),
+        None,
+        ExecutorConfig { executors: 1, cores_per_executor: 2, ..Default::default() },
+    );
+    FlServer::new(svc, algo, (cfg.update_len * 4) as u64)
+}
+
+/// Run one seeded tier Byzantine scenario: colluders poison ONE cohort,
+/// their extremes cross the backhaul inside the relay's sketch, and the
+/// root's trimmed mean cuts them — real relays, real TCP, one
+/// member-counted quorum round.
+pub fn run_byzantine_tier_scenario(cfg: &ByzTierConfig) -> ByzTierReport {
+    let scratch = scratch_dir("byz-tier", cfg.seed);
+    let algo: Arc<dyn FusionAlgorithm> =
+        Arc::new(TrimmedMean::new(cfg.trim, cfg.sketch_cap));
+
+    let root_server = make_tier_node(
+        NodeRole::Root,
+        None,
+        0,
+        cfg,
+        algo.clone(),
+        &scratch.join("root"),
+    );
+    let root_handle = root_server.start("127.0.0.1:0").expect("byz root server");
+    let root_addr = root_handle.addr().to_string();
+
+    struct Edge {
+        edge: u64,
+        relay: RelayServer,
+        _handle: crate::net::ServerHandle,
+        addr: String,
+    }
+    let edges: Vec<Edge> = (0..cfg.edges as u64)
+        .map(|edge| {
+            let server = make_tier_node(
+                NodeRole::Relay,
+                Some(root_addr.clone()),
+                edge,
+                cfg,
+                algo.clone(),
+                &scratch.join(format!("edge{edge}")),
+            );
+            let handle = server.start("127.0.0.1:0").expect("byz relay server");
+            let addr = handle.addr().to_string();
+            let relay = RelayServer::from_config(server).expect("byz relay config");
+            Edge { edge, relay, _handle: handle, addr }
+        })
+        .collect();
+
+    let expected = (cfg.edges * cfg.clients_per_edge).max(1);
+    let quorum = (((expected as f64) * cfg.quorum_frac).ceil() as usize).max(1);
+
+    let t0 = Instant::now();
+    let (root_run, edge_records) = std::thread::scope(|scope| {
+        let root = scope
+            .spawn(|| root_server.run_round_quorum(expected, quorum, cfg.root_deadline));
+        let edge_threads: Vec<_> = edges
+            .iter()
+            .map(|edge| {
+                scope.spawn(move || {
+                    let (relay_run, replies) = std::thread::scope(|es| {
+                        let client_threads: Vec<_> = (0..cfg.clients_per_edge as u64)
+                            .map(|i| {
+                                let party = edge.edge * cfg.clients_per_edge as u64 + i;
+                                let addr = edge.addr.clone();
+                                es.spawn(move || {
+                                    // small deterministic stagger keeps the
+                                    // sockets from thundering one accept loop
+                                    std::thread::sleep(Duration::from_millis(
+                                        5 + (party % 7) * 10,
+                                    ));
+                                    let u = byz_update(
+                                        cfg.seed,
+                                        party,
+                                        0,
+                                        cfg.update_len,
+                                        cfg.attack_for(party),
+                                    );
+                                    match NetClient::connect(&addr) {
+                                        Ok(mut c) => c
+                                            .call(&Message::UploadNonce {
+                                                nonce: party.wrapping_mul(0x9E37_79B9),
+                                                update: u,
+                                            })
+                                            .map(|m| classify(&m))
+                                            .unwrap_or(ReplyKind::Rejected),
+                                        Err(_) => ReplyKind::Rejected,
+                                    }
+                                })
+                            })
+                            .collect();
+                        let relay_run = edge
+                            .relay
+                            .run_relay_round(
+                                cfg.clients_per_edge,
+                                1,
+                                cfg.relay_deadline,
+                                cfg.parent_wait,
+                            )
+                            .expect("byz relay round");
+                        let replies: Vec<ReplyKind> = client_threads
+                            .into_iter()
+                            .map(|h| h.join().expect("byz client thread"))
+                            .collect();
+                        (relay_run, replies)
+                    });
+                    ByzEdgeRecord {
+                        edge: edge.edge,
+                        relay_folded: relay_run.folded,
+                        partial_reply: relay_run.forwarded.as_ref().map(classify),
+                        model_published: relay_run.model_published,
+                        replies,
+                    }
+                })
+            })
+            .collect();
+        let edge_records: Vec<ByzEdgeRecord> =
+            edge_threads.into_iter().map(|h| h.join().expect("byz edge thread")).collect();
+        (root.join().expect("byz root thread"), edge_records)
+    });
+    let round_s = t0.elapsed().as_secs_f64();
+    let run = root_run.expect("byz root quorum round");
+    let fused = run.result.as_ref().map(|(w, _)| w.clone()).unwrap_or_default();
+    let report = ByzTierReport {
+        outcome: run.outcome,
+        folded: run.folded,
+        quorum,
+        expected,
+        colluders: cfg.colluders.min(cfg.clients_per_edge),
+        edges: edge_records,
+        fused,
+        round_s,
+    };
+    drop(root_handle);
+    let _ = std::fs::remove_dir_all(&scratch);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byz_schedules_are_pure_functions_of_the_seed() {
+        let cfg = ByzConfig::default();
+        assert_eq!(byz_schedules(&cfg), byz_schedules(&cfg));
+        assert_eq!(
+            byz_schedule_digest(&cfg, &byz_schedules(&cfg)),
+            byz_schedule_digest(&cfg, &byz_schedules(&cfg))
+        );
+        let other = ByzConfig { seed: 43, ..cfg.clone() };
+        assert_ne!(
+            byz_schedule_digest(&cfg, &byz_schedules(&cfg)),
+            byz_schedule_digest(&other, &byz_schedules(&other))
+        );
+        // swapping the attack flips the digest even with identical schedules
+        let negated = ByzConfig { attack: Attack::Negate, ..cfg.clone() };
+        assert_eq!(byz_schedules(&cfg), byz_schedules(&negated));
+        assert_ne!(
+            byz_schedule_digest(&cfg, &byz_schedules(&cfg)),
+            byz_schedule_digest(&negated, &byz_schedules(&negated))
+        );
+    }
+
+    #[test]
+    fn attack_knobs_saturate_and_apply() {
+        let all = ByzConfig { attack_fraction: 1.0, ..ByzConfig::default() };
+        assert!(byz_schedules(&all).iter().all(|s| s.attacker));
+        let none = ByzConfig { attack_fraction: 0.0, ..ByzConfig::default() };
+        assert!(byz_schedules(&none).iter().all(|s| !s.attacker));
+
+        let mut r = Rng::new(1);
+        let mut d = vec![1.0f32, -2.0, 3.0];
+        Attack::Scale(10.0).apply(&mut d, &mut r);
+        assert_eq!(d, vec![10.0, -20.0, 30.0]);
+        Attack::Negate.apply(&mut d, &mut r);
+        assert_eq!(d, vec![-10.0, 20.0, -30.0]);
+        // a NaN scale factor must not poison the update into unfoldability
+        let mut d = vec![1.0f32; 4];
+        Attack::Scale(f32::NAN).apply(&mut d, &mut r);
+        assert!(d.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn byz_update_is_deterministic_and_attack_inflates_the_norm() {
+        let a = byz_update(42, 3, 1, 32, Some(Attack::Scale(50.0)));
+        let b = byz_update(42, 3, 1, 32, Some(Attack::Scale(50.0)));
+        assert_eq!(a.data, b.data);
+        let honest = byz_update(42, 3, 1, 32, None);
+        let n = |d: &[f32]| d.iter().map(|v| (v * v) as f64).sum::<f64>().sqrt();
+        assert!((n(&a.data) / n(&honest.data) - 50.0).abs() < 1e-3);
+        // Negate preserves the norm exactly — the gate cannot see it
+        let neg = byz_update(42, 3, 1, 32, Some(Attack::Negate));
+        assert_eq!(n(&neg.data), n(&honest.data));
+    }
+
+    #[test]
+    fn honest_reference_ignores_attackers() {
+        let cfg = ByzConfig::default();
+        let r0 = honest_fedavg_reference(&cfg, 0);
+        assert_eq!(r0.len(), cfg.update_len);
+        // the reference is attack-independent by construction
+        let scaled = ByzConfig { attack: Attack::Random, ..cfg.clone() };
+        assert_eq!(honest_fedavg_reference(&scaled, 0), r0);
+    }
+
+    #[test]
+    fn tier_colluders_sit_behind_edge_zero() {
+        let cfg = ByzTierConfig::default();
+        let us = fleet_updates(&cfg);
+        assert_eq!(us.len(), 18);
+        // exactly `colluders` poisoned updates, all in edge 0's id range
+        let n = |d: &[f32]| d.iter().map(|v| (v * v) as f64).sum::<f64>().sqrt();
+        let honest_scale: f64 = n(&byz_update(cfg.seed, 5, 0, cfg.update_len, None).data);
+        let poisoned: Vec<u64> = us
+            .iter()
+            .filter(|u| n(&u.data) > 10.0 * honest_scale)
+            .map(|u| u.party)
+            .collect();
+        assert_eq!(poisoned, vec![0, 1]);
+        assert!(poisoned.iter().all(|&p| p < cfg.clients_per_edge as u64));
+    }
+}

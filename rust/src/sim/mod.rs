@@ -28,9 +28,14 @@
 //! each surviving client exactly once with duplicates rejected, and
 //! reproduces its digest bit-for-bit on a second run.
 
+pub mod byzantine;
 pub mod hierarchy;
 pub mod straggler;
 
+pub use byzantine::{
+    byz_schedules, run_byzantine_scenario, run_byzantine_tier_scenario, Attack, ByzConfig,
+    ByzReport, ByzTierConfig, ByzTierReport,
+};
 pub use hierarchy::{run_tier_scenario, tier_schedules, TierConfig, TierReport};
 pub use straggler::{
     run_async_scenario, straggler_schedule_digest, straggler_schedules, AsyncReplyKind,

@@ -33,15 +33,38 @@
 //! weights *borrowed* in place.  The party list sits after the f32 block
 //! (its 8-byte alignment is not guaranteed there, so it is decoded owned —
 //! it is O(cohort) ids, not O(C) floats).
+//!
+//! **EA03 — the sketch-carrying partial.**  A partial-foldable robust
+//! cohort (coordinate-wise trimmed mean) additionally carries its bounded
+//! [`ExtremesSketch`]; a sketch-less partial keeps the EA02 magic and its
+//! exact byte layout, so every pre-existing frame and test is untouched:
+//!
+//! ```text
+//! magic    u32  = "EA03" (0x4541_3033)
+//! ...      EA02 header fields, byte-identical through offset 40
+//! cap      u32  (sketch per-side capacity)
+//! filled   u32  (valid entries per side)
+//! sum      [f32; n_elems]            offset 48 (still 4-aligned)
+//! lo       [f32; n_elems·cap]        coordinate-major ascending minima
+//! hi       [f32; n_elems·cap]        coordinate-major descending maxima
+//! parties  [u64; n_party]
+//! crc32    u32
+//! ```
 
 use super::{bytes_as_f32s, bytes_to_f32s, crc32, f32s_as_bytes, WireError};
+use crate::fusion::{ExtremesSketch, MAX_SKETCH_CAP};
 use std::borrow::Cow;
 
 const PMAGIC: u32 = 0x4541_3032; // "EA02"
+const PMAGIC_SKETCH: u32 = 0x4541_3033; // "EA03"
 
 /// Header bytes ahead of the `sum` block (a multiple of 4, so `sum` stays
 /// 4-aligned inside any 4-aligned frame buffer).
 const PHEAD: usize = 4 + 8 + 4 + 8 + 8 + 8;
+
+/// EA03 header: EA02's fields plus `cap`/`filled` — also a multiple of 4,
+/// so the sum block keeps its zero-copy alignment.
+const PHEAD_SKETCH: usize = PHEAD + 4 + 4;
 
 /// Hard cap on the declared parameter count (matches the update wire cap).
 const MAX_ELEMS: u64 = 16 << 30;
@@ -63,6 +86,9 @@ pub struct PartialAggregate {
     pub parties: Vec<u64>,
     /// Per-parameter weighted sums (NOT finalized weights — see module docs).
     pub sum: Vec<f32>,
+    /// The cohort's extremes sketch, present only for partial-foldable
+    /// robust algebra (selects the EA03 wire layout).
+    pub sketch: Option<ExtremesSketch>,
 }
 
 impl PartialAggregate {
@@ -73,7 +99,13 @@ impl PartialAggregate {
         parties: Vec<u64>,
         sum: Vec<f32>,
     ) -> PartialAggregate {
-        PartialAggregate { edge, round, wtot, parties, sum }
+        PartialAggregate { edge, round, wtot, parties, sum, sketch: None }
+    }
+
+    /// Attach (or clear) the cohort's extremes sketch — the EA03 builder.
+    pub fn with_sketch(mut self, sketch: Option<ExtremesSketch>) -> PartialAggregate {
+        self.sketch = sketch;
+        self
     }
 
     /// Cohort size (the member count the root's quorum counts).
@@ -81,14 +113,19 @@ impl PartialAggregate {
         self.parties.len()
     }
 
-    /// Serialized size in bytes (header + sum + parties + crc).
+    /// Serialized size in bytes (header + sum [+ sketch] + parties + crc).
     pub fn wire_size(&self) -> usize {
-        PHEAD + self.sum.len() * 4 + self.parties.len() * 8 + 4
+        let base = PHEAD + self.sum.len() * 4 + self.parties.len() * 8 + 4;
+        match &self.sketch {
+            Some(sk) => base + (PHEAD_SKETCH - PHEAD) + sk.mem_bytes() as usize,
+            None => base,
+        }
     }
 
     /// In-memory footprint the memory accountant charges for this partial.
     pub fn mem_bytes(&self) -> u64 {
         (self.sum.len() * 4 + self.parties.len() * 8) as u64
+            + self.sketch.as_ref().map(|sk| sk.mem_bytes()).unwrap_or(0)
     }
 
     pub fn encode(&self) -> Vec<u8> {
@@ -97,17 +134,28 @@ impl PartialAggregate {
         out
     }
 
-    /// Append the wire encoding to `out` (reusing its capacity).
+    /// Append the wire encoding to `out` (reusing its capacity).  A
+    /// sketch-less partial emits the EA02 layout byte-for-byte; a sketch
+    /// carrier selects EA03.
     pub fn encode_into(&self, out: &mut Vec<u8>) {
         let start = out.len();
         out.reserve(self.wire_size());
-        out.extend_from_slice(&PMAGIC.to_le_bytes());
+        let magic = if self.sketch.is_some() { PMAGIC_SKETCH } else { PMAGIC };
+        out.extend_from_slice(&magic.to_le_bytes());
         out.extend_from_slice(&self.edge.to_le_bytes());
         out.extend_from_slice(&self.round.to_le_bytes());
         out.extend_from_slice(&self.wtot.to_le_bytes());
         out.extend_from_slice(&(self.parties.len() as u64).to_le_bytes());
         out.extend_from_slice(&(self.sum.len() as u64).to_le_bytes());
+        if let Some(sk) = &self.sketch {
+            out.extend_from_slice(&(sk.cap() as u32).to_le_bytes());
+            out.extend_from_slice(&(sk.filled() as u32).to_le_bytes());
+        }
         out.extend_from_slice(f32s_as_bytes(&self.sum));
+        if let Some(sk) = &self.sketch {
+            out.extend_from_slice(f32s_as_bytes(sk.lo_raw()));
+            out.extend_from_slice(f32s_as_bytes(sk.hi_raw()));
+        }
         for p in &self.parties {
             out.extend_from_slice(&p.to_le_bytes());
         }
@@ -128,6 +176,7 @@ impl PartialAggregate {
             wtot: self.wtot,
             parties: Cow::Borrowed(&self.parties),
             sum: Cow::Borrowed(&self.sum),
+            sketch: self.sketch.as_ref().map(Cow::Borrowed),
         }
     }
 }
@@ -141,6 +190,9 @@ pub struct PartialAggregateView<'a> {
     pub wtot: f64,
     pub parties: Cow<'a, [u64]>,
     pub sum: Cow<'a, [f32]>,
+    /// The cohort's extremes sketch (EA03 frames; borrowed from an owned
+    /// partial, owned when decoded off the wire).
+    pub sketch: Option<Cow<'a, ExtremesSketch>>,
 }
 
 impl<'a> PartialAggregateView<'a> {
@@ -161,8 +213,17 @@ impl<'a> PartialAggregateView<'a> {
             return Err(WireError::BadCrc { want, got });
         }
         let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
-        if magic != PMAGIC {
-            return Err(WireError::BadMagic(magic));
+        let has_sketch = match magic {
+            PMAGIC => false,
+            PMAGIC_SKETCH => true,
+            _ => return Err(WireError::BadMagic(magic)),
+        };
+        let head = if has_sketch { PHEAD_SKETCH } else { PHEAD };
+        if body.len() < head {
+            return Err(WireError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "short sketch-partial header",
+            )));
         }
         let edge = u64::from_le_bytes(buf[4..12].try_into().unwrap());
         let round = u32::from_le_bytes(buf[12..16].try_into().unwrap());
@@ -175,18 +236,50 @@ impl<'a> PartialAggregateView<'a> {
         if n_party > MAX_PARTIES {
             return Err(WireError::TooLarge(n_party));
         }
-        let raw = &body[PHEAD..];
-        let need = n_elems as usize * 4 + n_party as usize * 8;
+        let (cap, filled) = if has_sketch {
+            let cap = u32::from_le_bytes(buf[40..44].try_into().unwrap()) as u64;
+            let filled = u32::from_le_bytes(buf[44..48].try_into().unwrap()) as u64;
+            // Bound the declared capacity BEFORE it sizes an allocation.
+            if cap == 0 || cap > MAX_SKETCH_CAP as u64 || filled > cap {
+                return Err(WireError::TooLarge(cap.max(filled)));
+            }
+            (cap, filled)
+        } else {
+            (0, 0)
+        };
+        let raw = &body[head..];
+        let sketch_elems = (n_elems * cap) as usize;
+        let need = n_elems as usize * 4 + 2 * sketch_elems * 4 + n_party as usize * 8;
         if raw.len() != need {
             return Err(WireError::Io(std::io::Error::new(
                 std::io::ErrorKind::InvalidData,
                 format!("declared {n_elems} elems + {n_party} parties, found {} bytes", raw.len()),
             )));
         }
-        let (sum_raw, party_raw) = raw.split_at(n_elems as usize * 4);
+        let (sum_raw, rest) = raw.split_at(n_elems as usize * 4);
         let sum = match bytes_as_f32s(sum_raw) {
             Some(s) => Cow::Borrowed(s),
             None => Cow::Owned(bytes_to_f32s(sum_raw)),
+        };
+        let (sketch_raw, party_raw) = rest.split_at(2 * sketch_elems * 4);
+        let sketch = if has_sketch {
+            let (lo_raw, hi_raw) = sketch_raw.split_at(sketch_elems * 4);
+            let sk = ExtremesSketch::from_parts(
+                cap as usize,
+                n_elems as usize,
+                filled as usize,
+                bytes_to_f32s(lo_raw),
+                bytes_to_f32s(hi_raw),
+            )
+            .ok_or_else(|| {
+                WireError::Io(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "inconsistent sketch header",
+                ))
+            })?;
+            Some(Cow::Owned(sk))
+        } else {
+            None
         };
         // The party block sits after an arbitrary f32 count, so its 8-byte
         // alignment is accidental — decode owned (O(cohort), not O(C)).
@@ -194,7 +287,7 @@ impl<'a> PartialAggregateView<'a> {
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
             .collect();
-        Ok(PartialAggregateView { edge, round, wtot, parties: Cow::Owned(parties), sum })
+        Ok(PartialAggregateView { edge, round, wtot, parties: Cow::Owned(parties), sum, sketch })
     }
 
     /// Cohort size (contributing-party count).
@@ -205,6 +298,7 @@ impl<'a> PartialAggregateView<'a> {
     /// In-memory footprint the memory accountant charges for this partial.
     pub fn mem_bytes(&self) -> u64 {
         (self.sum.len() * 4 + self.parties.len() * 8) as u64
+            + self.sketch.as_ref().map(|sk| sk.mem_bytes()).unwrap_or(0)
     }
 
     /// Materialise an owned [`PartialAggregate`] (copies only if borrowed).
@@ -215,6 +309,7 @@ impl<'a> PartialAggregateView<'a> {
             wtot: self.wtot,
             parties: self.parties.into_owned(),
             sum: self.sum.into_owned(),
+            sketch: self.sketch.map(Cow::into_owned),
         }
     }
 }
@@ -338,5 +433,78 @@ mod tests {
         // the alignment contract the zero-copy pool relies on
         assert_eq!(PHEAD % 4, 0);
         assert_eq!(PHEAD, 40);
+        assert_eq!(PHEAD_SKETCH % 4, 0);
+        assert_eq!(PHEAD_SKETCH, 48);
+    }
+
+    fn sketched(elems: usize, cohort: usize, cap: usize) -> PartialAggregate {
+        let mut sk = ExtremesSketch::new(cap, elems);
+        for i in 0..(cap + 2) {
+            let v: Vec<f32> = (0..elems).map(|c| (i * elems + c) as f32 * 0.5 - 3.0).collect();
+            sk.observe(&v);
+        }
+        sample(elems, cohort).with_sketch(Some(sk))
+    }
+
+    #[test]
+    fn sketch_partial_roundtrips_as_ea03() {
+        let p = sketched(24, 6, 4);
+        let buf = p.encode();
+        assert_eq!(buf.len(), p.wire_size());
+        assert_eq!(&buf[..4], &PMAGIC_SKETCH.to_le_bytes());
+        let back = PartialAggregate::decode(&buf).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.sketch.as_ref().unwrap().filled(), 4);
+    }
+
+    #[test]
+    fn sketchless_partial_keeps_ea02_bytes() {
+        // attaching-then-clearing a sketch must leave the classic layout
+        let p = sample(32, 4);
+        let q = sample(32, 4).with_sketch(None);
+        assert_eq!(p.encode(), q.encode());
+        assert_eq!(&p.encode()[..4], &PMAGIC.to_le_bytes());
+    }
+
+    #[test]
+    fn ea03_sum_block_still_borrows_on_aligned_buffers() {
+        let p = sketched(50, 3, 2);
+        let enc = p.encode();
+        let mut words = vec![0u32; enc.len().div_ceil(4)];
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u8, enc.len())
+        };
+        bytes.copy_from_slice(&enc);
+        let v = PartialAggregateView::decode(&bytes[..]).unwrap();
+        assert!(matches!(v.sum, Cow::Borrowed(_)), "48-byte header keeps 4-alignment");
+        assert_eq!(v.mem_bytes(), p.mem_bytes());
+        assert_eq!(v.into_owned(), p);
+    }
+
+    #[test]
+    fn corrupt_sketch_header_rejected_before_allocation() {
+        let p = sketched(8, 2, 4);
+        // absurd cap, crc re-sealed: the bound check must fire
+        let mut buf = p.encode();
+        buf[40..44].copy_from_slice(&u32::MAX.to_le_bytes());
+        let body_len = buf.len() - 4;
+        let crc = crc32(&buf[..body_len]);
+        buf[body_len..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(PartialAggregate::decode(&buf), Err(WireError::TooLarge(_))));
+        // filled > cap is inconsistent, typed, never a panic
+        let mut buf = p.encode();
+        buf[44..48].copy_from_slice(&100u32.to_le_bytes());
+        let body_len = buf.len() - 4;
+        let crc = crc32(&buf[..body_len]);
+        buf[body_len..].copy_from_slice(&crc.to_le_bytes());
+        assert!(PartialAggregate::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn as_view_borrows_the_sketch() {
+        let p = sketched(12, 3, 2);
+        let v = p.as_view();
+        assert!(matches!(v.sketch, Some(Cow::Borrowed(_))));
+        assert_eq!(v.into_owned(), p);
     }
 }

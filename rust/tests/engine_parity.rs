@@ -307,6 +307,143 @@ fn multi_edge_two_tier_round_matches_flat_within_tolerance() {
     }
 }
 
+/// THE robust-hierarchy parity bar: a trimmed mean folded through TWO
+/// relay partials — each carrying its cohort's extremes sketch across the
+/// real wire codec — lands within the sketch's PUBLISHED per-coordinate
+/// error bound of the exact flat trimmed mean.  With a sketch deep enough
+/// to retain all `k` extremes the bound is identically zero and only the
+/// documented merge tolerance separates the two.
+#[test]
+fn two_relay_trimmed_sketch_merge_within_published_bound_of_exact() {
+    use elastiagg::fusion::{exact_trimmed_mean, TrimmedMean};
+    use elastiagg::tensorstore::{PartialAggregate, PartialAggregateView};
+
+    let us = updates(131, 16, 200);
+    let refs: Vec<&ModelUpdate> = us.iter().collect();
+    let trim = 0.25f32;
+    let want = exact_trimmed_mean(&refs, trim);
+
+    // cap 2 < k = 4: the bounded regime; cap 8 ≥ k: the exact regime
+    for cap in [2usize, 8] {
+        let algo = TrimmedMean::new(trim, cap);
+        let k = algo.k_for(16);
+
+        let relay = |chunk: &[ModelUpdate], edge: u64| {
+            let mut f = StreamingFold::new(&algo, 1, MemoryBudget::unbounded()).unwrap();
+            for u in chunk {
+                f.fold(&algo, u).unwrap();
+            }
+            let acc = f.into_accumulator().unwrap();
+            let parties: Vec<u64> = chunk.iter().map(|u| u.party).collect();
+            (
+                acc.sketch.clone().expect("a trimmed fold always carries a sketch"),
+                PartialAggregate::new(edge, 0, acc.wtot, parties, acc.sum)
+                    .with_sketch(acc.sketch),
+            )
+        };
+        let (ska, pa) = relay(&us[..8], 0);
+        let (skb, pb) = relay(&us[8..], 1);
+
+        // rebuild the root's merged sketch to evaluate the bound directly
+        let mut merged = ska;
+        merged.merge(&skb);
+
+        let mut root = StreamingFold::new(&algo, 1, MemoryBudget::unbounded()).unwrap();
+        for p in [pa, pb] {
+            let wire = p.encode();
+            let v = PartialAggregateView::decode(&wire).unwrap();
+            root.fold_partial_sketch(
+                &algo,
+                &v.sum,
+                v.wtot,
+                v.parties.len() as u64,
+                v.sketch.as_deref(),
+            )
+            .unwrap();
+        }
+        let got = root.finish(&algo).unwrap();
+
+        for (c, (g, w)) in got.iter().zip(&want).enumerate() {
+            let bound = merged.error_bound(c, 16, k);
+            let slack = 1e-4 + 1e-4 * w.abs();
+            assert!(
+                (g - w).abs() <= bound + slack,
+                "cap={cap} c={c}: |{g} − {w}| = {} exceeds bound {bound} + slack",
+                (g - w).abs()
+            );
+        }
+        if cap >= k {
+            assert!(
+                (0..us[0].data.len()).all(|c| merged.error_bound(c, 16, k) == 0.0),
+                "a cap ≥ k sketch must publish a zero bound"
+            );
+            all_close(&got, &want, 1e-4, 1e-5)
+                .unwrap_or_else(|e| panic!("cap={cap} exact regime: {e}"));
+        }
+    }
+}
+
+/// Uniform trust is the IEEE identity: with every party at trust 1.0 and
+/// no sealed norm reference, `TrustWeighted(FedAvg)` multiplies nothing
+/// and the fold is BIT-IDENTICAL to plain FedAvg — the honest-fleet
+/// no-regression bar for the robust wrapper.
+#[test]
+fn uniform_trust_weighted_fedavg_is_bit_identical_to_fedavg() {
+    use elastiagg::coordinator::PartyRegistry;
+    use elastiagg::fusion::{FedAvg, TrustWeighted};
+    use std::sync::Arc;
+
+    let us = updates(137, 12, 3_000);
+    let mut plain = StreamingFold::new(&FedAvg, 1, MemoryBudget::unbounded()).unwrap();
+    for u in &us {
+        plain.fold(&FedAvg, u).unwrap();
+    }
+    let want = plain.finish(&FedAvg).unwrap();
+
+    let reg = Arc::new(PartyRegistry::new());
+    for u in &us {
+        reg.join(u.party, 0, 16);
+    }
+    let tw = TrustWeighted::new(Arc::new(FedAvg), reg, 3.0);
+    let mut wrapped = StreamingFold::new(&tw, 1, MemoryBudget::unbounded()).unwrap();
+    for u in &us {
+        wrapped.fold(&tw, u).unwrap();
+    }
+    let got = wrapped.finish(&tw).unwrap();
+    assert_eq!(got.len(), want.len());
+    assert!(
+        got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "uniform-trust TrustWeighted(FedAvg) must not perturb a single bit"
+    );
+}
+
+/// The trimmed mean's single-lane pin: a sketch-carrying streaming fold
+/// over one lane performs the SAME accumulate/observe sequence as the
+/// batch `holistic` default, so the two are bit-identical — the robust
+/// analogue of `sharded_single_lane_is_bit_identical_to_streaming_fold`.
+#[test]
+fn single_lane_trimmed_sketch_fold_is_bit_identical_to_holistic() {
+    use elastiagg::fusion::TrimmedMean;
+
+    let algo = TrimmedMean::new(0.2, 8);
+    for (n, len, seed) in [(10usize, 500usize, 141u64), (3, 9, 142), (16, 4_096, 143)] {
+        let us = updates(seed, n, len);
+        let refs: Vec<&ModelUpdate> = us.iter().collect();
+        let want = algo.holistic(&refs).unwrap();
+
+        let mut f = StreamingFold::new(&algo, 1, MemoryBudget::unbounded()).unwrap();
+        for u in &us {
+            f.fold(&algo, u).unwrap();
+        }
+        let got = f.finish(&algo).unwrap();
+        assert_eq!(got.len(), want.len(), "n={n} len={len}");
+        assert!(
+            got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "n={n} len={len}: single-lane sketch fold diverged from holistic"
+        );
+    }
+}
+
 /// THE async/sync parity bar: an async buffer sized ≥ N admits every
 /// update fresh (δ = 0), and draining it through the staleness-discounted
 /// fold is BIT-IDENTICAL to the sync streaming fold of the same sequence —
@@ -433,7 +570,7 @@ fn simd_fold_parity_with_strict_scalar_across_algorithms_and_shapes() {
                 }
                 wtot += w as f64;
             }
-            let want = algo.finalize(Accumulator { sum, wtot, n: n as u64 });
+            let want = algo.finalize(Accumulator { sum, wtot, n: n as u64, sketch: None });
             assert_eq!(got.len(), want.len());
             assert!(
                 got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
@@ -481,7 +618,7 @@ fn simd_merge_parity_with_strict_scalar_reference() {
         for (s, x) in sa.iter_mut().zip(&sb) {
             *s += x;
         }
-        let want = algo.finalize(Accumulator { sum: sa, wtot: wa + wb, n: 8 });
+        let want = algo.finalize(Accumulator { sum: sa, wtot: wa + wb, n: 8, sketch: None });
         assert!(
             got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
             "len={len}: merge through kernel `{}` diverged from scalar combine",

@@ -5,11 +5,16 @@
 use std::time::Duration;
 
 use elastiagg::coordinator::RoundOutcome;
+use elastiagg::fusion::exact_trimmed_mean;
+use elastiagg::sim::byzantine::{fleet_updates, honest_fedavg_reference};
 use elastiagg::sim::{
-    run_async_scenario, run_scenario, run_tier_scenario, schedule_digest, schedules,
-    straggler_schedule_digest, straggler_schedules, tier_schedules, AsyncReplyKind, ReplyKind,
-    ScenarioConfig, StragglerConfig, TierConfig,
+    byz_schedules, run_async_scenario, run_byzantine_scenario, run_byzantine_tier_scenario,
+    run_scenario, run_tier_scenario, schedule_digest, schedules, straggler_schedule_digest,
+    straggler_schedules, tier_schedules, AsyncReplyKind, Attack, ByzConfig, ByzTierConfig,
+    ReplyKind, ScenarioConfig, StragglerConfig, TierConfig,
 };
+use elastiagg::tensorstore::ModelUpdate;
+use elastiagg::util::prop::all_close;
 
 /// Pick a seed whose *schedule* (a pure function of the seed) has the
 /// shape a test needs — deterministic, and robust to the binomial tails a
@@ -453,6 +458,164 @@ fn tiny_buffer_conserves_every_update_across_many_publishes() {
     );
     assert!(report.publishes.iter().all(|p| p.folded <= cfg.buffer));
     assert_eq!(report.digest(), run_async_scenario(&cfg).digest());
+}
+
+/// Pick a seed whose BYZANTINE schedule has the shape a test needs.
+fn byz_seed_with<F: Fn(&ByzConfig) -> bool>(base: ByzConfig, want: F) -> ByzConfig {
+    (0..256u64)
+        .map(|i| ByzConfig { seed: base.seed + i, ..base.clone() })
+        .find(|c| want(c))
+        .expect("some seed in the sweep satisfies the byzantine scenario shape")
+}
+
+/// The flat Byzantine acceptance scenario: an honest calibration round
+/// seals the median-norm reference, then norm-inflating attackers hit the
+/// armed gate.  Every poisoned frame draws the typed `Rejected` wire reply
+/// and exactly one trust decay; every honest client folds untouched; the
+/// attacked round's fused model is the honest-only FedAvg; and the whole
+/// outcome digest (trust bits included) is bit-stable across a full
+/// re-run.
+#[test]
+fn byzantine_attackers_draw_typed_rejections_and_decay_trust() {
+    let cfg = byz_seed_with(ByzConfig::default(), |c| {
+        let s = byz_schedules(c);
+        let attackers = s.iter().filter(|s| s.attacker).count();
+        let honest = s.len() - attackers;
+        let quorum = ((c.clients as f64) * c.quorum_frac).ceil() as usize;
+        attackers >= 2 && honest >= quorum && honest < c.clients
+    });
+    let scheds = byz_schedules(&cfg);
+    let honest = scheds.iter().filter(|s| !s.attacker).count();
+
+    let report = run_byzantine_scenario(&cfg);
+
+    // round 0 (honest everywhere) completes with the full fleet and seals
+    // the median-norm reference the gate needs
+    assert_eq!(report.honest_outcome, RoundOutcome::Complete, "{report:?}");
+    assert_eq!(report.honest_folded, cfg.clients);
+
+    // round 1: rejections never count as collected, so the round runs to
+    // the deadline and seals at quorum on the honest cohort alone
+    assert_eq!(report.attacked_outcome, RoundOutcome::Quorum, "{report:?}");
+    assert_eq!(report.attacked_folded, honest, "only the honest cohort folds");
+    for rec in &report.clients {
+        assert_eq!(rec.honest_reply, ReplyKind::Accepted, "party {}", rec.party);
+        if rec.attacker {
+            assert_eq!(rec.attacked_reply, ReplyKind::Rejected, "party {}", rec.party);
+            assert_eq!(
+                rec.trust,
+                cfg.trust_decay as f32,
+                "party {}: one rejection, one decay",
+                rec.party
+            );
+        } else {
+            assert_eq!(rec.attacked_reply, ReplyKind::Accepted, "party {}", rec.party);
+            assert_eq!(rec.trust, 1.0, "party {}: honest trust never decays", rec.party);
+        }
+    }
+
+    // the attacked round's model is the honest-only weighted FedAvg: the
+    // gate rejected the poison before it ever touched the fold
+    let want = honest_fedavg_reference(&cfg, 1);
+    all_close(&report.attacked_fused, &want, 1e-4, 1e-5)
+        .unwrap_or_else(|e| panic!("attacked round vs honest-only reference: {e}"));
+
+    let again = run_byzantine_scenario(&cfg);
+    assert_eq!(report.digest(), again.digest(), "byzantine digest must be bit-stable");
+}
+
+/// An all-honest fleet cannot tell the armed gate from a disarmed one:
+/// same outcomes, same replies, same trust, same digest — and the fused
+/// models agree with the plain FedAvg reference.  (The wrapper's exact
+/// bit-identity is pinned deterministically in `engine_parity`; a TCP
+/// round re-associates lane merges, so the numeric bar here is the
+/// documented merge tolerance.)
+#[test]
+fn byzantine_gate_is_invisible_to_an_honest_fleet() {
+    let armed = ByzConfig { seed: 60, attack_fraction: 0.0, ..ByzConfig::default() };
+    let disarmed = ByzConfig { clip_factor: 0.0, ..armed.clone() };
+    let a = run_byzantine_scenario(&armed);
+    let b = run_byzantine_scenario(&disarmed);
+    for r in [&a, &b] {
+        assert_eq!(r.honest_outcome, RoundOutcome::Complete, "{r:?}");
+        assert_eq!(r.attacked_outcome, RoundOutcome::Complete, "{r:?}");
+        assert_eq!(r.attacked_folded, armed.clients);
+        assert!(r.clients.iter().all(|c| !c.attacker && c.trust == 1.0));
+    }
+    assert_eq!(a.digest(), b.digest(), "arming the gate must change nothing honest");
+    all_close(&a.attacked_fused, &b.attacked_fused, 1e-4, 1e-5)
+        .unwrap_or_else(|e| panic!("armed vs disarmed honest fold: {e}"));
+    all_close(&a.attacked_fused, &honest_fedavg_reference(&armed, 1), 1e-4, 1e-5)
+        .unwrap_or_else(|e| panic!("honest fleet vs FedAvg reference: {e}"));
+}
+
+/// The norm gate's documented blind spot: `Negate` preserves the L2 norm
+/// exactly, so every poisoned frame sails past the clip/reject gate and
+/// folds — the residual threat the trimmed-mean hierarchy exists for.
+#[test]
+fn byzantine_norm_preserving_attack_sails_past_the_gate() {
+    let cfg = byz_seed_with(ByzConfig { attack: Attack::Negate, ..ByzConfig::default() }, |c| {
+        let s = byz_schedules(c);
+        let attackers = s.iter().filter(|s| s.attacker).count();
+        attackers >= 1 && attackers < c.clients
+    });
+    let report = run_byzantine_scenario(&cfg);
+    assert_eq!(report.attacked_outcome, RoundOutcome::Complete, "{report:?}");
+    assert_eq!(report.attacked_folded, cfg.clients, "every negated frame folds");
+    assert!(report.clients.iter().all(|c| c.attacked_reply == ReplyKind::Accepted));
+    assert!(report.clients.iter().all(|c| c.trust == 1.0), "no rejection, no decay");
+}
+
+/// The tier acceptance scenario: a colluding cohort behind ONE relay of a
+/// real 2-tier trimmed-mean tree.  Every upload is accepted (rank-based
+/// robustness needs no admission gate), the poisoned extremes cross the
+/// backhaul inside the relay's sketch, and the root's fused model is the
+/// exact flat trimmed mean — with the poison cut, far closer to the
+/// honest-only reference than the unprotected plain mean.
+#[test]
+fn byzantine_colluding_cohort_is_trimmed_through_the_real_hierarchy() {
+    let cfg = ByzTierConfig::default();
+    let report = run_byzantine_tier_scenario(&cfg);
+
+    assert_eq!(report.outcome, RoundOutcome::Complete, "{report:?}");
+    assert_eq!(report.folded, cfg.edges * cfg.clients_per_edge);
+    for e in &report.edges {
+        assert_eq!(e.relay_folded, cfg.clients_per_edge, "edge {}", e.edge);
+        assert_eq!(e.partial_reply, Some(ReplyKind::Accepted), "edge {}", e.edge);
+        assert!(e.model_published, "edge {}", e.edge);
+        assert!(e.replies.iter().all(|r| *r == ReplyKind::Accepted), "edge {}", e.edge);
+    }
+
+    // cap 8 ≥ k = ⌊0.2·18⌋ = 3: the sketch's exact regime — the 2-tier
+    // fold IS the flat trimmed mean of the poisoned fleet, up to the
+    // documented merge re-association
+    let us = fleet_updates(&cfg);
+    let refs: Vec<&ModelUpdate> = us.iter().collect();
+    let want = exact_trimmed_mean(&refs, cfg.trim);
+    all_close(&report.fused, &want, 1e-3, 1e-4)
+        .unwrap_or_else(|e| panic!("tier fused vs exact flat trimmed mean: {e}"));
+
+    // ... and the poison is gone: the fused model sits near the honest-only
+    // trimmed mean while the plain mean is dragged far off by the colluders
+    let honest: Vec<ModelUpdate> =
+        us.iter().filter(|u| cfg.attack_for(u.party).is_none()).cloned().collect();
+    let hrefs: Vec<&ModelUpdate> = honest.iter().collect();
+    let honest_trim = exact_trimmed_mean(&hrefs, cfg.trim);
+    let plain_mean: Vec<f32> = (0..cfg.update_len)
+        .map(|c| us.iter().map(|u| u.data[c]).sum::<f32>() / us.len() as f32)
+        .collect();
+    let dist = |a: &[f32], b: &[f32]| {
+        a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>().sqrt()
+    };
+    let robust_err = dist(&report.fused, &honest_trim);
+    let naive_err = dist(&plain_mean, &honest_trim);
+    assert!(
+        robust_err < 0.5 * naive_err,
+        "trimming must beat the plain mean: robust {robust_err} vs naive {naive_err}"
+    );
+
+    let again = run_byzantine_tier_scenario(&cfg);
+    assert_eq!(report.digest(), again.digest(), "tier byzantine digest must be bit-stable");
 }
 
 /// Zero-fault scenario completes with the full fleet — and completes

@@ -1,0 +1,186 @@
+#!/usr/bin/env python3
+"""Diff the current CI run's BENCH_<fig>.json artifacts against the previous
+run's, and fail on perf regressions past a threshold.
+
+Usage:
+    bench_trend.py <current_dir> <baseline_dir> [--threshold 0.2]
+
+Both directories hold BENCH_*.json files as emitted by the Rust benches
+(`elastiagg::bench::BenchJson`).  Files are paired by name; rounds are keyed
+by (label, round); numeric meta leaves are keyed by their JSON path.  A
+missing baseline (first run on a branch, expired artifact, new figure) is
+NOT a failure -- the script reports what it skipped and exits 0.  Exit 1
+means at least one tracked metric regressed more than the threshold beyond
+its noise floor.
+
+Only stdlib; no third-party imports.
+"""
+
+import argparse
+import json
+import math
+import os
+import sys
+
+# Key-name patterns that decide what a metric means.  Anything that matches
+# neither list (geometry like "parties", config echoes like "trim_fraction")
+# is informational and never gates.
+LOWER_IS_BETTER = (
+    "_s", "_ms", "_usd", "bytes", "_rms", "err", "latency", "drift",
+)
+HIGHER_IS_BETTER = (
+    "throughput", "ops_per", "gbps", "mbps", "speedup", "per_sec",
+)
+
+
+def direction(key):
+    """-1 = lower is better, +1 = higher is better, 0 = untracked."""
+    k = key.lower()
+    for pat in HIGHER_IS_BETTER:
+        if pat in k:
+            return 1
+    for pat in LOWER_IS_BETTER:
+        if k.endswith(pat) or pat in k:
+            return -1
+    return 0
+
+
+def noise_floor(key):
+    """Absolute change below which a metric is treated as run-to-run noise.
+
+    Wall-clock seconds on shared CI runners jitter tens of milliseconds;
+    byte counts jitter by a frame or two of protocol framing; everything
+    else gets a small generic floor so bit-stable metrics still gate.
+    """
+    k = key.lower()
+    if k.endswith("_s") or "latency" in k:
+        return 0.05
+    if k.endswith("_ms"):
+        return 50.0
+    if "bytes" in k:
+        return 4096.0
+    if k.endswith("_usd"):
+        return 1e-6
+    return 1e-3
+
+
+def numeric_leaves(node, path):
+    """Yield (path, value) for every numeric leaf under a parsed JSON node."""
+    if isinstance(node, bool):
+        return
+    if isinstance(node, (int, float)):
+        if not (isinstance(node, float) and math.isnan(node)):
+            yield path, float(node)
+    elif isinstance(node, dict):
+        for k in sorted(node):
+            yield from numeric_leaves(node[k], f"{path}.{k}" if path else k)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from numeric_leaves(v, f"{path}[{i}]")
+
+
+def flatten(doc):
+    """One flat {key: value} map per bench file.
+
+    Rounds are keyed by (label, round) so reordering or appending rows
+    never misaligns the diff; meta is keyed by JSON path.
+    """
+    out = {}
+    for key, val in numeric_leaves(doc.get("meta", {}), "meta"):
+        out[key] = val
+    for rec in doc.get("rounds", []):
+        tag = f"rounds[{rec.get('label', '?')}#{rec.get('round', '?')}]"
+        for field, val in sorted(rec.items()):
+            if field in ("label", "round"):
+                continue
+            for key, leaf in numeric_leaves(val, f"{tag}.{field}"):
+                out[key] = leaf
+    return out
+
+
+def metric_name(key):
+    """The field name that decides direction/floor: the last path segment."""
+    tail = key.rsplit(".", 1)[-1]
+    return tail.split("[", 1)[0]
+
+
+def compare(fig, cur, base, threshold):
+    """Return a list of regression strings for one bench file."""
+    regressions = []
+    for key in sorted(set(cur) & set(base)):
+        name = metric_name(key)
+        sign = direction(name)
+        if sign == 0:
+            continue
+        c, b = cur[key], base[key]
+        floor = noise_floor(name)
+        if sign < 0:
+            worse = c - b
+        else:
+            worse = b - c
+        allowed = abs(b) * threshold + floor
+        if worse > allowed:
+            arrow = "rose" if sign < 0 else "fell"
+            regressions.append(
+                f"{fig}: {key} {arrow} {b:.6g} -> {c:.6g} "
+                f"(worse by {worse:.6g}, allowed {allowed:.6g})"
+            )
+    return regressions
+
+
+def load(path):
+    with open(path, "r", encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="directory with this run's BENCH_*.json")
+    ap.add_argument("baseline", help="directory with the previous run's artifacts")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="relative regression allowed before failing (default 0.2)")
+    args = ap.parse_args()
+
+    if not os.path.isdir(args.current):
+        print(f"bench-trend: current dir {args.current!r} missing -- nothing to check")
+        return 0
+    current = sorted(f for f in os.listdir(args.current)
+                     if f.startswith("BENCH_") and f.endswith(".json"))
+    if not current:
+        print(f"bench-trend: no BENCH_*.json in {args.current!r} -- nothing to check")
+        return 0
+    if not os.path.isdir(args.baseline):
+        print(f"bench-trend: no baseline at {args.baseline!r} "
+              "(first run or expired artifact) -- skipping trend gate")
+        return 0
+
+    regressions, compared, skipped = [], 0, []
+    for fname in current:
+        base_path = os.path.join(args.baseline, fname)
+        if not os.path.exists(base_path):
+            skipped.append(fname)
+            continue
+        try:
+            cur_doc, base_doc = load(os.path.join(args.current, fname)), load(base_path)
+        except (OSError, json.JSONDecodeError) as err:
+            skipped.append(f"{fname} (unreadable: {err})")
+            continue
+        fig = cur_doc.get("fig", fname)
+        regressions += compare(fig, flatten(cur_doc), flatten(base_doc), args.threshold)
+        compared += 1
+
+    print(f"bench-trend: compared {compared} figure(s) "
+          f"at threshold {args.threshold:.0%}")
+    for s in skipped:
+        print(f"bench-trend: skipped {s} -- no baseline")
+    if regressions:
+        print(f"bench-trend: {len(regressions)} regression(s):")
+        for r in regressions:
+            print(f"  REGRESSION {r}")
+        return 1
+    print("bench-trend: no regressions past the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
