@@ -1,0 +1,177 @@
+//! Fig N (beyond the paper's numbered figures) — connection scaling after
+//! retiring thread-per-connection.
+//!
+//! The paper's edge aggregator is priced for IoT fleets, but the repo's
+//! original `NetServer` spent one OS thread per connected client: at the
+//! fleet sizes the cost model covers, the socket layer OOMs on stacks
+//! long before the fold runs out of budget.  The readiness reactor caps
+//! the server at `1 + workers` OS threads regardless of connection count.
+//! This bench pins that claim from three sides:
+//!
+//! * part 1 holds a sweep of REAL socket fleets (32 → 128 persistent
+//!   connections) against a 4-worker reactor and reads the process's OS
+//!   thread count from `/proc/self/status` at each point: the count must
+//!   not grow with connections (and at 128 it must be far below one
+//!   thread per client);
+//! * part 2 runs a 10 000-virtual-client quorum round through the fleet
+//!   harness (`elastiagg::sim::fleet`) — every survivor folded exactly
+//!   once, OS thread count unchanged by fleet size;
+//! * part 3 replays the SAME 64-client seeded scenario over the reactor
+//!   and over the legacy thread-per-connection backend and requires
+//!   bit-identical round digests: the backend swap changed how bytes
+//!   reach the fold, provably not what the fold computes.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use elastiagg::bench::{BenchJson, RoundRecord};
+use elastiagg::net::{Message, NetClient, NetServer, ReactorConfig};
+use elastiagg::sim::{run_fleet, run_scenario_on, FleetConfig, ScenarioConfig};
+use elastiagg::util::fmt;
+use elastiagg::util::json::Json;
+
+/// OS threads in this process, from `/proc/self/status` (`None` where
+/// procfs is absent — the sweep still runs, the thread pins are skipped).
+fn os_threads() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
+fn main() {
+    elastiagg::bench::banner(
+        "Fig N — connection scaling: readiness reactor vs thread-per-connection",
+        "server threads bounded by the worker pool, not the fleet size",
+    );
+
+    let mut out = BenchJson::new("fig_connection_scaling");
+    const WORKERS: usize = 4;
+    out.meta("workers", Json::num(WORKERS as f64));
+
+    // ---- part 1: OS threads vs live socket count -------------------------
+    let mut handle = NetServer::serve_with(
+        "127.0.0.1:0",
+        Arc::new(|m: Message| m),
+        ReactorConfig { workers: WORKERS },
+    )
+    .expect("reactor server");
+    let addr = handle.addr().to_string();
+
+    let mut t = fmt::Table::new(&["connections", "os threads", "sweep s"]);
+    let mut thread_counts = Vec::new();
+    for conns in [32usize, 128] {
+        let t0 = Instant::now();
+        let mut clients: Vec<NetClient> = (0..conns)
+            .map(|_| NetClient::connect(&addr).expect("bench client"))
+            .collect();
+        // every connection live and served at once, one call each
+        for (i, c) in clients.iter_mut().enumerate() {
+            let m = c.call(&Message::Register { party: i as u64 }).expect("echo");
+            assert!(matches!(m, Message::Register { .. }));
+        }
+        let threads = os_threads();
+        let sweep_s = t0.elapsed().as_secs_f64();
+        assert_eq!(handle.active_connections(), conns, "every socket tracked");
+        drop(clients);
+        // let the reactor reap the hangups before the next sweep point
+        let drain = Instant::now() + Duration::from_secs(5);
+        while handle.active_connections() > 0 && Instant::now() < drain {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(handle.active_connections(), 0, "clean hangups must drain");
+        if let Some(n) = threads {
+            thread_counts.push((conns, n));
+        }
+        t.row(&[
+            conns.to_string(),
+            threads.map_or_else(|| "n/a".into(), |n| n.to_string()),
+            format!("{sweep_s:.3}"),
+        ]);
+        out.meta(&format!("threads_at_{conns}_conns"), Json::num(threads.unwrap_or(0) as f64));
+        out.round(RoundRecord {
+            round: conns as u32,
+            label: format!("sockets(conns={conns})"),
+            latency_s: sweep_s,
+            ..Default::default()
+        });
+    }
+    handle.stop();
+    if let [(few, at_few), (many, at_many)] = thread_counts[..] {
+        assert!(
+            at_many <= at_few + 2,
+            "OS threads grew with connections ({few} conns -> {at_few}, {many} -> {at_many})"
+        );
+        assert!(
+            at_many < many as u64,
+            "thread-per-connection shape is back: {at_many} threads for {many} sockets"
+        );
+    }
+    t.print();
+
+    // ---- part 2: a 10k-virtual-client round on one aggregator ------------
+    let before = os_threads();
+    let fleet = FleetConfig { clients: 10_000, update_len: 32, ..FleetConfig::default() };
+    let report = run_fleet(&fleet);
+    let after = os_threads();
+    assert!(
+        report.folded >= report.quorum && report.fused_len == fleet.update_len,
+        "10k fleet round must publish: {report:?}"
+    );
+    assert_eq!(report.rejected, 0, "no virtual client drew an error reply");
+    if let (Some(b), Some(a)) = (before, after) {
+        assert!(
+            a <= b + 2,
+            "the virtual fleet must not cost threads: {b} before, {a} after"
+        );
+    }
+    println!(
+        "\n[fleet] 10k virtual clients: folded {}/{} (quorum {}) in {:.2}s",
+        report.folded, report.expected, report.quorum, report.round_s
+    );
+    out.meta("fleet_clients", Json::num(fleet.clients as f64));
+    out.meta("fleet_folded", Json::num(report.folded as f64));
+    out.round(RoundRecord {
+        round: fleet.clients as u32,
+        label: format!("fleet(folded={},{:?})", report.folded, report.outcome),
+        latency_s: report.round_s,
+        ..Default::default()
+    });
+
+    // ---- part 3: reactor vs threaded — bit-identical round digests -------
+    let cfg = ScenarioConfig {
+        seed: 42,
+        clients: 64,
+        update_len: 64,
+        deadline: Duration::from_secs(3),
+        ..ScenarioConfig::default()
+    };
+    let reactor = run_scenario_on(&cfg, false);
+    let threaded = run_scenario_on(&cfg, true);
+    assert_eq!(
+        reactor.digest(),
+        threaded.digest(),
+        "backend swap changed the round: reactor {reactor:?} vs threaded {threaded:?}"
+    );
+    println!(
+        "[parity] 64-client scenario digest {:#018x} identical across backends",
+        reactor.digest()
+    );
+    out.meta("parity_bit_identical", Json::Bool(true));
+    out.meta("parity_digest", Json::str(&format!("{:#018x}", reactor.digest())));
+    for (label, r) in [("reactor", &reactor), ("threaded", &threaded)] {
+        out.round(RoundRecord {
+            round: cfg.clients as u32,
+            label: format!("parity-{label}(folded={},{:?})", r.folded, r.outcome),
+            latency_s: r.round_s,
+            ..Default::default()
+        });
+    }
+
+    let path = out.write().expect("bench json");
+    println!("\nwrote {}", path.display());
+}

@@ -183,6 +183,16 @@ pub struct ServiceConfig {
     /// every client→aggregator frame; relay→root partials stay dense f32
     /// regardless.
     pub encoding: Encoding,
+    /// Fold worker threads behind the network reactor's poll loop: the
+    /// server runs `1 + workers` OS threads regardless of how many
+    /// connections are live.  0 (the default) = one worker per node core.
+    pub reactor_workers: usize,
+    /// Liveness TTL in seconds: a driven round evicts registered parties
+    /// whose last liveness signal (join / upload / heartbeat) is older
+    /// than this, and seals once the quorum covers the *live* population
+    /// instead of awaiting dead clients to the deadline.  0 (the default)
+    /// disables eviction.
+    pub liveness_ttl_s: f64,
 }
 
 impl Default for ServiceConfig {
@@ -214,6 +224,8 @@ impl Default for ServiceConfig {
             clip_factor: 0.0,
             trust_decay: 0.5,
             encoding: Encoding::DenseF32,
+            reactor_workers: 0,
+            liveness_ttl_s: 0.0,
         }
     }
 }
@@ -344,6 +356,15 @@ impl ServiceConfig {
         if let Some(e) = j.get("encoding").as_str().and_then(Encoding::parse) {
             c.encoding = e;
         }
+        if let Some(v) = j.get("reactor_workers").as_usize() {
+            c.reactor_workers = v;
+        }
+        if let Some(v) = j.get("liveness_ttl_s").as_f64() {
+            // same Duration::from_secs_f64 domain as round_deadline_s
+            if v.is_finite() && v >= 0.0 {
+                c.liveness_ttl_s = v.min(31_536_000.0);
+            }
+        }
         c
     }
 
@@ -386,6 +407,8 @@ impl ServiceConfig {
             ("clip_factor", Json::num(self.clip_factor)),
             ("trust_decay", Json::num(self.trust_decay)),
             ("encoding", Json::str(&self.encoding.token())),
+            ("reactor_workers", Json::num(self.reactor_workers as f64)),
+            ("liveness_ttl_s", Json::num(self.liveness_ttl_s)),
         ])
     }
 }
@@ -571,6 +594,25 @@ mod tests {
         // produce it via 1e999 → inf in some writers; reject non-finite
         let j = Json::parse(r#"{"clip_factor": 1e999}"#).unwrap();
         assert_eq!(ServiceConfig::from_json(&j).clip_factor, 0.0);
+    }
+
+    #[test]
+    fn reactor_and_liveness_knobs_roundtrip_and_reject_junk() {
+        let c = ServiceConfig::default();
+        assert_eq!(c.reactor_workers, 0, "0 = one fold worker per core");
+        assert_eq!(c.liveness_ttl_s, 0.0, "0 = eviction off");
+        let mut c2 = c.clone();
+        c2.reactor_workers = 6;
+        c2.liveness_ttl_s = 2.5;
+        let c3 = ServiceConfig::from_json(&c2.to_json());
+        assert_eq!(c3.reactor_workers, 6);
+        assert_eq!(c3.liveness_ttl_s, 2.5);
+        // the ttl shares round_deadline_s's Duration::from_secs_f64 domain:
+        // negatives keep the default, oversized caps at a year
+        let j = Json::parse(r#"{"liveness_ttl_s": -3}"#).unwrap();
+        assert_eq!(ServiceConfig::from_json(&j).liveness_ttl_s, 0.0);
+        let j = Json::parse(r#"{"liveness_ttl_s": 1e20}"#).unwrap();
+        assert_eq!(ServiceConfig::from_json(&j).liveness_ttl_s, 31_536_000.0);
     }
 
     #[test]

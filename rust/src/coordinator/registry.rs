@@ -16,6 +16,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use crate::util::rng::Rng;
 
@@ -49,6 +50,13 @@ pub struct PartyRegistry {
     /// reference for the next one.  `None` until a first honest round
     /// establishes it.
     norm_ref: Mutex<Option<f32>>,
+    /// Per-party `last_seen` heartbeat stamps (join / upload / explicit
+    /// heartbeat all refresh it).  Kept out of [`PartyInfo`] — like
+    /// `trust` — so the membership record stays `Eq`; this is the
+    /// edge-node liveness record (node id + last-heartbeat timestamp)
+    /// that lets [`PartyRegistry::evict_stale`] drop silent parties from
+    /// quorum accounting instead of awaiting them to the deadline.
+    seen: Mutex<BTreeMap<u64, Instant>>,
 }
 
 impl PartyRegistry {
@@ -58,14 +66,63 @@ impl PartyRegistry {
 
     /// Register (or re-activate) a party; returns its id.
     pub fn join(&self, id: u64, round: u32, samples: u64) -> u64 {
-        let mut m = self.parties.lock().unwrap();
-        m.entry(id)
-            .and_modify(|p| {
-                p.active = true;
-                p.samples = samples;
-            })
-            .or_insert(PartyInfo { id, joined_round: round, active: true, samples });
+        {
+            let mut m = self.parties.lock().unwrap();
+            m.entry(id)
+                .and_modify(|p| {
+                    p.active = true;
+                    p.samples = samples;
+                })
+                .or_insert(PartyInfo { id, joined_round: round, active: true, samples });
+        }
+        // Joining IS a liveness signal (lock released above; `seen` and
+        // `parties` are never held together from this path).
+        self.note_seen(id);
         id
+    }
+
+    /// Refresh a party's `last_seen` stamp — called on join, on every
+    /// upload, and on an explicit [`Heartbeat`](crate::net::Message)
+    /// frame.
+    pub fn note_seen(&self, id: u64) {
+        self.seen.lock().unwrap().insert(id, Instant::now());
+    }
+
+    /// When the party last gave a liveness signal.
+    pub fn last_seen(&self, id: u64) -> Option<Instant> {
+        self.seen.lock().unwrap().get(&id).copied()
+    }
+
+    /// Deactivate every active party whose last liveness signal is older
+    /// than `ttl` as of `now`; returns the evicted ids.  An evicted party
+    /// leaves quorum accounting (`active_count`) immediately — the round
+    /// loop uses that to seal on the live population instead of awaiting
+    /// dead clients to the deadline — and rejoins normally on its next
+    /// register/upload/heartbeat.
+    pub fn evict_stale(&self, ttl: Duration, now: Instant) -> Vec<u64> {
+        let stale: Vec<u64> = {
+            let seen = self.seen.lock().unwrap();
+            self.parties
+                .lock()
+                .unwrap()
+                .values()
+                .filter(|p| p.active)
+                .filter(|p| match seen.get(&p.id) {
+                    Some(&t) => now.saturating_duration_since(t) > ttl,
+                    None => true, // no signal ever: stale by definition
+                })
+                .map(|p| p.id)
+                .collect()
+        };
+        if !stale.is_empty() {
+            let mut m = self.parties.lock().unwrap();
+            for id in &stale {
+                if let Some(p) = m.get_mut(id) {
+                    p.active = false;
+                }
+            }
+        }
+        stale
     }
 
     /// Mark a party dropped out.
@@ -280,6 +337,58 @@ mod tests {
         r.reset_norms();
         assert_eq!(r.seal_norms(0.5), None, "aborted round judged nobody");
         assert_eq!(r.trust(1), 1.0);
+    }
+
+    #[test]
+    fn join_stamps_liveness_and_evict_drops_silent_parties() {
+        let r = PartyRegistry::new();
+        for id in 0..4 {
+            r.join(id, 0, 10);
+            assert!(r.last_seen(id).is_some(), "join is a liveness signal");
+        }
+        // evaluated right now: nobody is stale yet
+        assert!(r.evict_stale(Duration::from_millis(100), Instant::now()).is_empty());
+        assert_eq!(r.active_count(), 4);
+        // evaluated 250ms in the future with a 200ms ttl: every stamp has
+        // aged out (BTreeMap order makes the eviction list deterministic)
+        let later = Instant::now() + Duration::from_millis(250);
+        let evicted = r.evict_stale(Duration::from_millis(200), later);
+        assert_eq!(evicted, vec![0, 1, 2, 3], "everyone is silent 250ms out");
+        assert_eq!(r.active_count(), 0);
+        // an evicted party rejoins (and re-stamps) normally
+        r.join(2, 7, 10);
+        assert_eq!(r.active_count(), 1);
+        assert!(r.evict_stale(Duration::from_millis(200), Instant::now()).is_empty());
+    }
+
+    #[test]
+    fn evict_respects_fresh_heartbeats() {
+        let r = PartyRegistry::new();
+        for id in 0..4 {
+            r.join(id, 0, 10);
+        }
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(30));
+        r.note_seen(1);
+        r.note_seen(3);
+        // ttl covering the heartbeat gap but not the join stamps: the
+        // heartbeating parties survive, the silent ones are evicted
+        let now = t0 + Duration::from_millis(30);
+        let evicted = r.evict_stale(Duration::from_millis(20), now);
+        assert_eq!(evicted, vec![0, 2]);
+        assert_eq!(r.active_count(), 2);
+        assert!(r.get(1).unwrap().active);
+        assert!(!r.get(0).unwrap().active);
+    }
+
+    #[test]
+    fn party_with_no_liveness_record_is_stale() {
+        let r = PartyRegistry::new();
+        r.join(5, 0, 1);
+        // wipe the stamp to model a registry restored without stamps
+        r.seen.lock().unwrap().clear();
+        let evicted = r.evict_stale(Duration::from_secs(3600), Instant::now());
+        assert_eq!(evicted, vec![5]);
     }
 
     #[test]

@@ -131,6 +131,13 @@ impl AdaptiveService {
                 // the FL server shards its streaming ingest one lane per
                 // core — price the plan against that width
                 ingest_lanes: cfg.node.cores.max(1),
+                // the reactor's fold worker pool bounds how many of those
+                // lanes can actually fold; 0 = sized to the node's cores
+                reactor_workers: if cfg.reactor_workers == 0 {
+                    cfg.node.cores.max(1)
+                } else {
+                    cfg.reactor_workers
+                },
                 edges: cfg.edges,
                 xla_available: xla.is_some(),
                 feedback_beta: 0.3,

@@ -13,10 +13,12 @@
 //! spill to the distributed path (§III-D3 seamless transition).
 
 pub mod protocol;
+mod reactor;
 pub mod server;
+mod threaded;
 
 pub use protocol::{checked_frame_len, Message, ProtoError, Reply};
-pub use server::{NetServer, ServerHandle};
+pub use server::{Handler, NetServer, ReactorConfig, ServerHandle};
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -59,15 +61,25 @@ impl FrameBuf {
         unsafe { std::slice::from_raw_parts(self.words.as_ptr() as *const u8, self.len) }
     }
 
-    fn as_mut_slice(&mut self) -> &mut [u8] {
+    pub(crate) fn as_mut_slice(&mut self) -> &mut [u8] {
         // Safety: as above, plus exclusive access via &mut self.
         unsafe { std::slice::from_raw_parts_mut(self.words.as_mut_ptr() as *mut u8, self.len) }
     }
 
     /// Resize to `len` bytes, keeping the allocation when shrinking.
-    fn reset(&mut self, len: usize) {
+    pub(crate) fn reset(&mut self, len: usize) {
         self.words.resize(len.div_ceil(4), 0);
         self.len = len;
+    }
+
+    /// Load `bytes` as this buffer's payload.  The virtual-client fleet
+    /// injects pre-framed payloads through here so they enter the server
+    /// at the same 4-aligned base the reactor's pooled reads give real
+    /// sockets — the zero-copy upload decode path is exercised, not
+    /// bypassed.
+    pub fn fill(&mut self, bytes: &[u8]) {
+        self.reset(bytes.len());
+        self.as_mut_slice().copy_from_slice(bytes);
     }
 }
 
@@ -139,6 +151,48 @@ pub fn write_reply<W: Write>(
             Ok(head.len() + body.len())
         }
     }
+}
+
+/// Read one frame's tag and payload into the pooled `buf`, distinguishing
+/// a CLEAN hangup from a truncated frame:
+///
+/// * `Ok(None)` — EOF before the first header byte: the peer finished its
+///   conversation at a frame boundary and closed.  Not an error.
+/// * `Err(ProtoError::Io(UnexpectedEof))` — EOF *mid-frame* (header or
+///   payload partially read): the peer died with a frame in flight.  The
+///   serving backends count this into `aborted_frames`, the signal the
+///   registry's liveness eviction consumes.
+///
+/// [`read_frame_into`] keeps the old conflated behaviour (any EOF is an
+/// io error) for callers that always expect a frame, like the client's
+/// reply read.
+pub fn try_read_frame_into<R: Read>(
+    r: &mut R,
+    buf: &mut FrameBuf,
+) -> Result<Option<u8>, ProtoError> {
+    let mut head = [0u8; 5];
+    let mut got = 0;
+    while got < head.len() {
+        match r.read(&mut head[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(ProtoError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-frame header",
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ProtoError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(head[1..5].try_into().unwrap()) as usize;
+    if len > protocol::MAX_FRAME {
+        return Err(ProtoError::FrameTooLarge(len));
+    }
+    buf.reset(len);
+    r.read_exact(buf.as_mut_slice())?;
+    Ok(Some(head[0]))
 }
 
 /// Read one frame's tag and payload into the pooled `buf`.
@@ -251,6 +305,56 @@ mod tests {
         .unwrap();
         assert_eq!(gathered, owned);
         assert_eq!(n, gathered.len());
+    }
+
+    #[test]
+    fn try_read_distinguishes_clean_eof_from_truncation() {
+        let mut buf = FrameBuf::new();
+        // empty stream: a clean hangup at a frame boundary
+        assert!(matches!(
+            try_read_frame_into(&mut std::io::Cursor::new(Vec::<u8>::new()), &mut buf),
+            Ok(None)
+        ));
+        // EOF inside the 5-byte header: mid-frame truncation
+        assert!(matches!(
+            try_read_frame_into(&mut std::io::Cursor::new(vec![0x03u8, 10, 0]), &mut buf),
+            Err(ProtoError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof
+        ));
+        // EOF inside the payload: mid-frame truncation
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Message::Upload(ModelUpdate::new(0, 1.0, 0, vec![1.0; 64])))
+            .unwrap();
+        wire.truncate(wire.len() - 10);
+        assert!(matches!(
+            try_read_frame_into(&mut std::io::Cursor::new(wire), &mut buf),
+            Err(ProtoError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof
+        ));
+        // a whole frame still reads normally
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Message::Late { round: 3 }).unwrap();
+        let tag = try_read_frame_into(&mut std::io::Cursor::new(wire), &mut buf).unwrap();
+        assert_eq!(tag, Some(protocol::TAG_LATE));
+        assert_eq!(Message::decode(tag.unwrap(), buf.as_slice()).unwrap(), Message::Late {
+            round: 3
+        });
+    }
+
+    #[test]
+    fn fill_keeps_payload_4_aligned_for_zero_copy_decode() {
+        // The fleet's injection path: an encoded UploadNonce payload loaded
+        // via fill() must decode borrowing from the pool, like a real read.
+        let (tag, payload) =
+            Message::UploadNonce { nonce: 7, update: ModelUpdate::new(4, 2.0, 1, vec![1.5; 300]) }
+                .encode();
+        assert_eq!(tag, protocol::TAG_UPLOAD_NONCE);
+        let mut buf = FrameBuf::new();
+        buf.fill(&payload);
+        let v = crate::tensorstore::ModelUpdateView::decode(&buf.as_slice()[8..]).unwrap();
+        assert!(
+            matches!(v.data, std::borrow::Cow::Borrowed(_)),
+            "filled pool is 4-aligned: nonce-offset upload decode must borrow"
+        );
+        assert_eq!(v.party, 4);
     }
 
     #[test]

@@ -50,6 +50,11 @@ pub const TAG_UPLOAD_ENC: u8 = 0x0D;
 /// update was rejected as an outlier" apart from a transport failure and
 /// stop burning its trust score on retransmits.
 pub const TAG_REJECTED: u8 = 0x0E;
+/// Party liveness beacon: "still here, still training" — nothing but the
+/// party id.  The server notes the party's `last_seen` (the signal the
+/// registry's liveness eviction consumes) and replies [`TAG_REGISTERED`]
+/// with the current round, so a heartbeat doubles as a cheap round poll.
+pub const TAG_HEARTBEAT: u8 = 0x0F;
 pub const TAG_ERROR: u8 = 0x7F;
 
 /// Validate a payload length before it is cast into the wire's u32 length
@@ -109,6 +114,11 @@ pub enum Message {
     /// norm exceeded the round's rejection threshold.  The sender's trust
     /// score has been decayed; the update was NOT folded.
     Rejected { party: u64, norm: f32 },
+    /// Party liveness beacon: refreshes the registry's `last_seen` stamp
+    /// so a slow-but-alive trainer is not evicted from quorum accounting
+    /// mid-round.  Answered with [`Message::Registered`] carrying the
+    /// current round.
+    Heartbeat { party: u64 },
     Error(String),
 }
 
@@ -212,6 +222,10 @@ impl Message {
                 out.extend_from_slice(&party.to_le_bytes());
                 out.extend_from_slice(&norm.to_le_bytes());
                 TAG_REJECTED
+            }
+            Message::Heartbeat { party } => {
+                out.extend_from_slice(&party.to_le_bytes());
+                TAG_HEARTBEAT
             }
             Message::Error(m) => {
                 out.extend_from_slice(m.as_bytes());
@@ -335,6 +349,12 @@ impl Message {
                     norm: f32::from_le_bytes(payload[8..12].try_into().unwrap()),
                 })
             }
+            TAG_HEARTBEAT => {
+                need(8)?;
+                Ok(Message::Heartbeat {
+                    party: u64::from_le_bytes(payload[..8].try_into().unwrap()),
+                })
+            }
             TAG_ERROR => Ok(Message::Error(String::from_utf8_lossy(payload).into_owned())),
             t => Err(ProtoError::UnknownTag(t)),
         }
@@ -390,6 +410,7 @@ mod tests {
             Message::AsyncAck { version: 0, delta: 0 }.encode().0,
             Message::UploadEnc { nonce: 0, frame: vec![] }.encode().0,
             Message::Rejected { party: 0, norm: 0.0 }.encode().0,
+            Message::Heartbeat { party: 0 }.encode().0,
             Message::Error(String::new()).encode().0,
         ];
         let mut set = msgs.to_vec();
@@ -528,6 +549,15 @@ mod tests {
         assert_eq!(tag, TAG_REJECTED);
         assert_eq!(Message::decode(tag, &payload).unwrap(), m);
         assert!(Message::decode(TAG_REJECTED, &[0u8; 11]).is_err());
+    }
+
+    #[test]
+    fn heartbeat_roundtrip() {
+        let m = Message::Heartbeat { party: u64::MAX - 3 };
+        let (tag, payload) = m.encode();
+        assert_eq!(tag, TAG_HEARTBEAT);
+        assert_eq!(Message::decode(tag, &payload).unwrap(), m);
+        assert!(Message::decode(TAG_HEARTBEAT, &[0u8; 7]).is_err());
     }
 
     #[test]

@@ -1,0 +1,487 @@
+//! Readiness-polling reactor: ONE poll thread drives every connection's
+//! frame state machine over nonblocking sockets; decoded frames are handed
+//! to a bounded worker pool so fold work never blocks the event loop.
+//!
+//! This replaces the thread-per-connection server: OS threads are now
+//! `1 (reactor) + workers`, independent of how many sockets are connected —
+//! the property `fig_connection_scaling` pins.  The loop is plain
+//! `std`-only level polling (nonblocking reads/writes, `WouldBlock` means
+//! "not ready", a short park when a whole sweep makes no progress); an
+//! epoll/kqueue waiter would slot into `run` without touching the state
+//! machines, but the repo carries zero dependencies, so the portable
+//! polling sweep is the shipped waiter.
+//!
+//! Per-connection state machine (`ReadState`):
+//!
+//! ```text
+//!            header bytes                payload bytes
+//! Header{got} ───────────► Payload{tag,got} ───────────► Dispatched
+//!    ▲                                                        │ job → worker
+//!    │                reply fully flushed                     ▼
+//!    └──────────────────── (Outbox drained) ◄───────── worker Done{reply}
+//! ```
+//!
+//! Reads pause while a frame is `Dispatched` and resume only after its
+//! reply is flushed, preserving the old server's strict request→reply
+//! ordering per connection.  Payload bytes land in the connection's pooled
+//! 4-aligned [`FrameBuf`]; the buffer MOVES into the worker's job and moves
+//! back with the completion, so the zero-copy upload decode (and the pool)
+//! survive the handoff.  Model replies keep the gather-write shape: a
+//! 9-byte header plus the published `Arc<Vec<f32>>` viewed as bytes,
+//! never cloned.
+//!
+//! Lifecycle invariants (the three bugs this file exists to close out):
+//! a connection is TRACKED (in `conns`, counted in `active`) before any of
+//! its bytes are served, or it is refused outright — there is no untracked
+//! path; there are no per-connection threads, so there is no join handle
+//! to lose; and EOF mid-frame is counted into `aborted_frames` instead of
+//! being mistaken for a clean hangup.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use super::protocol::{self, MAX_FRAME};
+use super::server::{Counters, Handler};
+use super::{FrameBuf, Message, ProtoError, Reply};
+use crate::tensorstore::f32s_as_bytes;
+
+/// How long the poll loop parks when a full sweep (accept + completions +
+/// every connection) made no progress.  Sub-millisecond: idle cost is a
+/// few wakeups/ms on one thread; latency cost is bounded by this.
+const IDLE_PARK: Duration = Duration::from_micros(300);
+
+/// Test failpoint: refuse the next N admissions on a specific listener
+/// (the "cannot track this connection" path — the production analogues
+/// are `set_nonblocking` / `set_nodelay` failures).  Regression pin for
+/// the untracked-connection leak: a refused connection must be shut down,
+/// never served.
+#[cfg(test)]
+pub(crate) static REFUSE_ADMITS: super::server::Failpoint = super::server::Failpoint::new();
+
+/// A fully received frame on its way to the worker pool.  The pooled
+/// payload buffer travels WITH the job and returns in the [`Done`].
+struct Job {
+    conn: u64,
+    tag: u8,
+    buf: FrameBuf,
+}
+
+/// A worker's completion: the reply to queue and the connection's pooled
+/// buffer coming home.
+struct Done {
+    conn: u64,
+    buf: FrameBuf,
+    reply: Result<Reply, ProtoError>,
+}
+
+/// Where one connection is in its current frame.
+#[derive(Clone, Copy)]
+enum ReadState {
+    /// Collecting the 5-byte `tag | len` header.
+    Header { got: usize, head: [u8; 5] },
+    /// Collecting `len` payload bytes into the pooled buffer.
+    Payload { tag: u8, got: usize },
+    /// Frame handed to a worker; reads paused until the reply is flushed.
+    Dispatched,
+}
+
+/// A reply mid-write: encoded header/frame bytes, plus the shared model
+/// body for the gather-write path (`Reply::Model` — the weights go from
+/// the published `Arc` to the socket without a clone).
+struct Outbox {
+    head: Vec<u8>,
+    head_off: usize,
+    body: Option<Arc<Vec<f32>>>,
+    body_off: usize,
+}
+
+fn wants_retry(kind: ErrorKind) -> bool {
+    kind == ErrorKind::Interrupted
+}
+
+/// What one read sweep of a connection produced.
+enum ReadOutcome {
+    Idle,
+    Progress,
+    /// A whole frame arrived (tag); caller dispatches it.
+    Dispatch(u8),
+    /// Peer gone (clean or aborted — `aborted_frames` already counted).
+    Closed,
+}
+
+struct Conn {
+    stream: std::net::TcpStream,
+    read: ReadState,
+    /// Pooled 4-aligned payload buffer, reused across this connection's
+    /// frames; moves into the worker job at dispatch and back at
+    /// completion.
+    buf: FrameBuf,
+    out: Option<Outbox>,
+    /// Recycled encode scratch: the last flushed Outbox's head Vec comes
+    /// back here so steady-state replies allocate nothing.
+    scratch: Vec<u8>,
+    close_after_write: bool,
+}
+
+impl Conn {
+    fn new(stream: std::net::TcpStream) -> Conn {
+        Conn {
+            stream,
+            read: ReadState::Header { got: 0, head: [0; 5] },
+            buf: FrameBuf::new(),
+            out: None,
+            scratch: Vec::new(),
+            close_after_write: false,
+        }
+    }
+
+    /// Queue an encoded-message reply frame.
+    fn queue_msg(&mut self, m: &Message) {
+        let mut head = std::mem::take(&mut self.scratch);
+        match m.encode_into(&mut head) {
+            Ok(()) => {
+                self.out = Some(Outbox { head, head_off: 0, body: None, body_off: 0 });
+            }
+            Err(_) => {
+                // Reply too large to frame: nothing recoverable to send.
+                self.out = None;
+                self.close_after_write = true;
+            }
+        }
+    }
+
+    /// Queue a worker's completion for the wire.
+    fn queue_reply(&mut self, reply: Result<Reply, ProtoError>) {
+        match reply {
+            Ok(Reply::Msg(m)) => self.queue_msg(&m),
+            Ok(Reply::Model { round, weights }) => {
+                let body_bytes = weights.len() * 4;
+                match protocol::checked_frame_len(4 + body_bytes) {
+                    Ok(len) => {
+                        let mut head = std::mem::take(&mut self.scratch);
+                        head.clear();
+                        head.push(protocol::TAG_MODEL);
+                        head.extend_from_slice(&len.to_le_bytes());
+                        head.extend_from_slice(&round.to_le_bytes());
+                        self.out = Some(Outbox {
+                            head,
+                            head_off: 0,
+                            body: Some(weights),
+                            body_off: 0,
+                        });
+                    }
+                    Err(e) => {
+                        self.queue_msg(&Message::Error(e.to_string()));
+                        self.close_after_write = true;
+                    }
+                }
+            }
+            Err(e) => {
+                // Handler error: tell the client, then close (the old
+                // server's write-error-frame-then-drop behaviour).
+                self.queue_msg(&Message::Error(e.to_string()));
+                self.close_after_write = true;
+            }
+        }
+    }
+
+    /// Flush as much of the queued reply as the socket accepts.
+    /// `Ok(progressed)`; `Err(())` means close this connection.
+    fn pump_write(&mut self, counters: &Counters) -> Result<bool, ()> {
+        let Some(out) = self.out.as_mut() else {
+            return if self.close_after_write { Err(()) } else { Ok(false) };
+        };
+        let mut progressed = false;
+        while out.head_off < out.head.len() {
+            match self.stream.write(&out.head[out.head_off..]) {
+                Ok(0) => return Err(()),
+                Ok(n) => {
+                    out.head_off += n;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(progressed),
+                Err(e) if wants_retry(e.kind()) => continue,
+                Err(_) => return Err(()),
+            }
+        }
+        if let Some(body) = &out.body {
+            let bytes = f32s_as_bytes(body);
+            while out.body_off < bytes.len() {
+                match self.stream.write(&bytes[out.body_off..]) {
+                    Ok(0) => return Err(()),
+                    Ok(n) => {
+                        out.body_off += n;
+                        progressed = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(progressed),
+                    Err(e) if wants_retry(e.kind()) => continue,
+                    Err(_) => return Err(()),
+                }
+            }
+        }
+        // Fully flushed: count it, recycle the encode buffer, resume reads.
+        let total = out.head.len() + out.body.as_ref().map_or(0, |b| b.len() * 4);
+        counters.bytes_out.fetch_add(total as u64, Ordering::Relaxed);
+        let mut head = self.out.take().expect("outbox present").head;
+        head.clear();
+        self.scratch = head;
+        if self.close_after_write {
+            return Err(());
+        }
+        self.read = ReadState::Header { got: 0, head: [0; 5] };
+        Ok(true)
+    }
+
+    /// Advance the frame state machine with whatever bytes are ready.
+    fn pump_read(&mut self, counters: &Counters) -> ReadOutcome {
+        let mut progressed = false;
+        loop {
+            match self.read {
+                ReadState::Dispatched => {
+                    return if progressed { ReadOutcome::Progress } else { ReadOutcome::Idle }
+                }
+                ReadState::Header { got, head } => {
+                    let mut head = head;
+                    match self.stream.read(&mut head[got..]) {
+                        Ok(0) => {
+                            if got > 0 {
+                                // died inside a frame header
+                                counters.aborted_frames.fetch_add(1, Ordering::Relaxed);
+                            }
+                            return ReadOutcome::Closed;
+                        }
+                        Ok(n) => {
+                            progressed = true;
+                            let got = got + n;
+                            if got < head.len() {
+                                self.read = ReadState::Header { got, head };
+                                continue;
+                            }
+                            let tag = head[0];
+                            let len =
+                                u32::from_le_bytes(head[1..5].try_into().unwrap()) as usize;
+                            if len > MAX_FRAME {
+                                // Protocol violation: typed error, then
+                                // close — same as the old server.
+                                self.queue_msg(&Message::Error(
+                                    ProtoError::FrameTooLarge(len).to_string(),
+                                ));
+                                self.close_after_write = true;
+                                self.read = ReadState::Dispatched;
+                                return ReadOutcome::Progress;
+                            }
+                            self.buf.reset(len);
+                            if len == 0 {
+                                return ReadOutcome::Dispatch(tag);
+                            }
+                            self.read = ReadState::Payload { tag, got: 0 };
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            return if progressed {
+                                ReadOutcome::Progress
+                            } else {
+                                ReadOutcome::Idle
+                            }
+                        }
+                        Err(e) if wants_retry(e.kind()) => continue,
+                        Err(_) => {
+                            if got > 0 {
+                                counters.aborted_frames.fetch_add(1, Ordering::Relaxed);
+                            }
+                            return ReadOutcome::Closed;
+                        }
+                    }
+                }
+                ReadState::Payload { tag, got } => {
+                    let len = self.buf.len();
+                    match self.stream.read(&mut self.buf.as_mut_slice()[got..]) {
+                        Ok(0) => {
+                            // died mid-payload: a truncated frame, NOT a
+                            // clean hangup
+                            counters.aborted_frames.fetch_add(1, Ordering::Relaxed);
+                            return ReadOutcome::Closed;
+                        }
+                        Ok(n) => {
+                            progressed = true;
+                            let got = got + n;
+                            if got == len {
+                                return ReadOutcome::Dispatch(tag);
+                            }
+                            self.read = ReadState::Payload { tag, got };
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            return if progressed {
+                                ReadOutcome::Progress
+                            } else {
+                                ReadOutcome::Idle
+                            }
+                        }
+                        Err(e) if wants_retry(e.kind()) => continue,
+                        Err(_) => {
+                            counters.aborted_frames.fetch_add(1, Ordering::Relaxed);
+                            return ReadOutcome::Closed;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The running reactor's threads and gauges, held by `ServerHandle`.
+pub(crate) struct Parts {
+    pub reactor: std::thread::JoinHandle<()>,
+    pub workers: Vec<std::thread::JoinHandle<()>>,
+    /// Connections currently tracked by the poll loop.
+    pub active: Arc<AtomicUsize>,
+    /// Worker threads currently alive (0 after a completed `stop`).
+    pub live_workers: Arc<AtomicUsize>,
+}
+
+/// Spawn the poll loop plus `workers` fold threads over a bound listener.
+pub(crate) fn spawn<H: Handler>(
+    listener: TcpListener,
+    handler: Arc<H>,
+    workers: usize,
+    counters: Counters,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<Parts> {
+    listener.set_nonblocking(true)?;
+    #[cfg(test)]
+    let local = listener.local_addr().map(|a| a.to_string()).unwrap_or_default();
+    let active = Arc::new(AtomicUsize::new(0));
+    let live_workers = Arc::new(AtomicUsize::new(0));
+
+    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let (done_tx, done_rx) = mpsc::channel::<Done>();
+
+    let mut worker_handles = Vec::with_capacity(workers.max(1));
+    for _ in 0..workers.max(1) {
+        let rx = job_rx.clone();
+        let tx = done_tx.clone();
+        let handler = handler.clone();
+        let live = live_workers.clone();
+        live.fetch_add(1, Ordering::AcqRel);
+        worker_handles.push(std::thread::spawn(move || {
+            loop {
+                // Hold the receiver lock only for the blocking recv — the
+                // handler runs outside it, so workers fold in parallel.
+                let job = match rx.lock().unwrap().recv() {
+                    Ok(j) => j,
+                    Err(_) => break, // reactor gone and queue drained
+                };
+                let reply = handler.handle_frame(job.tag, job.buf.as_slice());
+                if tx.send(Done { conn: job.conn, buf: job.buf, reply }).is_err() {
+                    break; // reactor gone: reply has nowhere to go
+                }
+            }
+            live.fetch_sub(1, Ordering::AcqRel);
+        }));
+    }
+    drop(done_tx); // only worker clones remain
+
+    let reactor = {
+        let active = active.clone();
+        std::thread::spawn(move || {
+            let mut conns: HashMap<u64, Conn> = HashMap::new();
+            let mut next_id = 0u64;
+            let mut dead: Vec<u64> = Vec::new();
+            while !stop.load(Ordering::Acquire) {
+                let mut progress = false;
+
+                // 1) admit new connections (track-or-refuse: a connection
+                //    the loop cannot poll is shut down, never served)
+                loop {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            progress = true;
+                            #[cfg(test)]
+                            if REFUSE_ADMITS.take(&local) {
+                                let _ = stream.shutdown(Shutdown::Both);
+                                continue;
+                            }
+                            if stream.set_nonblocking(true).is_err()
+                                || stream.set_nodelay(true).is_err()
+                            {
+                                let _ = stream.shutdown(Shutdown::Both);
+                                continue;
+                            }
+                            counters.connections.fetch_add(1, Ordering::Relaxed);
+                            active.fetch_add(1, Ordering::AcqRel);
+                            conns.insert(next_id, Conn::new(stream));
+                            next_id += 1;
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if wants_retry(e.kind()) => continue,
+                        Err(_) => break,
+                    }
+                }
+
+                // 2) worker completions: reply queued, pooled buffer home
+                while let Ok(done) = done_rx.try_recv() {
+                    progress = true;
+                    if let Some(conn) = conns.get_mut(&done.conn) {
+                        conn.buf = done.buf;
+                        conn.queue_reply(done.reply);
+                    }
+                }
+
+                // 3) per-connection IO sweep
+                for (&id, conn) in conns.iter_mut() {
+                    match conn.pump_write(&counters) {
+                        Ok(p) => progress |= p,
+                        Err(()) => {
+                            dead.push(id);
+                            continue;
+                        }
+                    }
+                    if conn.out.is_some() || conn.close_after_write {
+                        continue; // reply still in flight: reads stay paused
+                    }
+                    match conn.pump_read(&counters) {
+                        ReadOutcome::Idle => {}
+                        ReadOutcome::Progress => progress = true,
+                        ReadOutcome::Dispatch(tag) => {
+                            progress = true;
+                            conn.read = ReadState::Dispatched;
+                            let buf = std::mem::take(&mut conn.buf);
+                            counters
+                                .bytes_in
+                                .fetch_add(5 + buf.len() as u64, Ordering::Relaxed);
+                            counters.requests.fetch_add(1, Ordering::Relaxed);
+                            if job_tx.send(Job { conn: id, tag, buf }).is_err() {
+                                dead.push(id);
+                            }
+                        }
+                        ReadOutcome::Closed => dead.push(id),
+                    }
+                }
+                for id in dead.drain(..) {
+                    if let Some(conn) = conns.remove(&id) {
+                        let _ = conn.stream.shutdown(Shutdown::Both);
+                        active.fetch_sub(1, Ordering::AcqRel);
+                    }
+                }
+
+                if !progress {
+                    std::thread::sleep(IDLE_PARK);
+                }
+            }
+            // Stop: shut every tracked socket down.  Dropping `job_tx`
+            // (with this closure) disconnects the job channel; workers
+            // drain whatever was queued, then exit — `stop()` joins them,
+            // so no fold thread outlives the handle.
+            for (_, conn) in conns.drain() {
+                let _ = conn.stream.shutdown(Shutdown::Both);
+                active.fetch_sub(1, Ordering::AcqRel);
+            }
+        })
+    };
+
+    Ok(Parts { reactor, workers: worker_handles, active, live_workers })
+}

@@ -1,20 +1,20 @@
-//! Threaded TCP server: one handler thread per connection (the aggregator
-//! is the paper's bottleneck under the thundering herd; per-connection
-//! threads make the contention measurable rather than hiding it behind a
-//! queue).
+//! TCP serving front end of the aggregation protocol.
+//!
+//! [`NetServer::serve`] runs the readiness-polling **reactor**
+//! ([`reactor`](super::reactor)): one poll thread drives every
+//! connection's frame state machine and a bounded worker pool folds the
+//! decoded frames — OS threads are `1 + workers` regardless of how many
+//! sockets are connected, which is what lets the aggregator face an edge
+//! fleet instead of a thread table.  [`NetServer::serve_threaded`] keeps
+//! the retired thread-per-connection backend (bugs fixed) as the
+//! reference implementation the reactor's wire behaviour is pinned
+//! against.  Both run behind the same [`ServerHandle`].
 
-use std::collections::HashMap;
-use std::net::{Shutdown, TcpListener, TcpStream};
+use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-use super::{read_frame_into, write_frame, write_reply, FrameBuf, Message, ProtoError, Reply};
-
-/// Live per-connection state: a clone of the socket (so `stop` can shut a
-/// blocked read down) plus the handler thread's join handle.  A handler
-/// removes its own entry when its connection ends, so the map holds only
-/// connections that are actually alive.
-type ConnMap = Mutex<HashMap<u64, (TcpStream, Option<std::thread::JoinHandle<()>>)>>;
+use super::{reactor, threaded, Message, ProtoError, Reply};
 
 /// Application hook: map a request message to a reply.
 pub trait Handler: Send + Sync + 'static {
@@ -39,14 +39,67 @@ where
     }
 }
 
+/// Wire/ingest gauges shared between a running backend and its
+/// [`ServerHandle`].
+#[derive(Clone)]
+pub(crate) struct Counters {
+    pub connections: Arc<AtomicU64>,
+    pub requests: Arc<AtomicU64>,
+    pub bytes_in: Arc<AtomicU64>,
+    pub bytes_out: Arc<AtomicU64>,
+    pub aborted_frames: Arc<AtomicU64>,
+}
+
+impl Counters {
+    fn new() -> Counters {
+        Counters {
+            connections: Arc::new(AtomicU64::new(0)),
+            requests: Arc::new(AtomicU64::new(0)),
+            bytes_in: Arc::new(AtomicU64::new(0)),
+            bytes_out: Arc::new(AtomicU64::new(0)),
+            aborted_frames: Arc::new(AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Reactor sizing knobs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReactorConfig {
+    /// Fold worker threads (the pool decoded frames are dispatched to).
+    /// `0` = one per available core.  Total server OS threads are
+    /// `1 + workers`, independent of the connection count.
+    pub workers: usize,
+}
+
+impl ReactorConfig {
+    fn resolved_workers(&self) -> usize {
+        if self.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            self.workers
+        }
+    }
+}
+
+/// Which serving machinery sits behind a [`ServerHandle`].
+enum Backend {
+    Reactor {
+        reactor: Option<std::thread::JoinHandle<()>>,
+        workers: Vec<std::thread::JoinHandle<()>>,
+        active: Arc<std::sync::atomic::AtomicUsize>,
+        live_workers: Arc<std::sync::atomic::AtomicUsize>,
+    },
+    Threaded {
+        accept: Option<std::thread::JoinHandle<()>>,
+        live: Arc<threaded::ConnMap>,
+    },
+}
+
 /// Running server; dropping the handle shuts the listener down.
 pub struct ServerHandle {
     addr: String,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
-    /// Live connections: socket clone + handler join handle, drained by
-    /// [`ServerHandle::stop`] so no handler thread outlives the handle.
-    live: Arc<ConnMap>,
+    backend: Backend,
     pub connections: Arc<AtomicU64>,
     pub requests: Arc<AtomicU64>,
     /// Frame bytes read off all connections (headers + payloads) — the
@@ -54,6 +107,12 @@ pub struct ServerHandle {
     pub bytes_in: Arc<AtomicU64>,
     /// Frame bytes written as replies.
     pub bytes_out: Arc<AtomicU64>,
+    /// Frames whose connection died MID-frame (header or payload partially
+    /// read) — truncations, distinguished from clean hangups at a frame
+    /// boundary.  The straggler/fault sims produce exactly this shape, and
+    /// the registry's liveness eviction treats it as silence, not
+    /// participation.
+    pub aborted_frames: Arc<AtomicU64>,
 }
 
 impl ServerHandle {
@@ -61,37 +120,65 @@ impl ServerHandle {
         &self.addr
     }
 
-    /// Connections with a live handler thread right now.
+    /// Connections currently tracked by the serving backend.
     pub fn active_connections(&self) -> usize {
-        self.live.lock().unwrap().len()
+        match &self.backend {
+            Backend::Reactor { active, .. } => active.load(Ordering::Acquire),
+            Backend::Threaded { live, .. } => live.lock().unwrap().len(),
+        }
     }
 
-    /// Shut the server down COMPLETELY: stop accepting, then shut every
-    /// live connection's stream down (unblocking handlers parked in
-    /// `read`) and join their threads.  Historically only the accept
-    /// thread was joined — per-connection handlers were detached and could
-    /// outlive the drop of this handle, folding into rounds whose owner
-    /// believed the server gone.  On return, no handler thread survives.
+    /// Serving threads currently alive beyond the accept/poll loop: fold
+    /// workers on the reactor, per-connection handlers on the threaded
+    /// backend.  0 after a completed [`ServerHandle::stop`] — the "no
+    /// leaked workers" invariant the churn soak pins.
+    pub fn live_workers(&self) -> usize {
+        match &self.backend {
+            Backend::Reactor { live_workers, .. } => live_workers.load(Ordering::Acquire),
+            Backend::Threaded { live, .. } => live.lock().unwrap().len(),
+        }
+    }
+
+    /// Shut the server down COMPLETELY.  On the reactor: stop the poll
+    /// loop (which shuts every tracked socket down and disconnects the
+    /// job queue), then join the workers — they drain already-accepted
+    /// frames first, so folds that were promised an Ack still land.  On
+    /// the threaded backend: stop accepting, shut every live connection's
+    /// stream down (unblocking handlers parked in `read`) and join their
+    /// threads.  On return, no serving thread survives.
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::Release);
-        // Poke the listener so accept() returns.
+        // Poke the listener so a parked accept() returns (the reactor's
+        // poll loop needs no poke, but the connect is harmless there).
         let _ = TcpStream::connect(&self.addr);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
-        // Drain the live connections OUTSIDE the lock: a handler that ends
-        // normally takes the same lock to remove itself, so joining while
-        // holding it would deadlock.
-        let drained: Vec<(TcpStream, Option<std::thread::JoinHandle<()>>)> = {
-            let mut map = self.live.lock().unwrap();
-            map.drain().map(|(_, v)| v).collect()
-        };
-        for (stream, _) in &drained {
-            let _ = stream.shutdown(Shutdown::Both);
-        }
-        for (_, handle) in drained {
-            if let Some(h) = handle {
-                let _ = h.join();
+        match &mut self.backend {
+            Backend::Reactor { reactor, workers, .. } => {
+                if let Some(t) = reactor.take() {
+                    let _ = t.join();
+                }
+                for t in workers.drain(..) {
+                    let _ = t.join();
+                }
+            }
+            Backend::Threaded { accept, live } => {
+                if let Some(t) = accept.take() {
+                    let _ = t.join();
+                }
+                // Drain the live connections OUTSIDE the lock: a handler
+                // that ends normally takes the same lock to remove itself,
+                // so joining while holding it would deadlock.
+                let drained: Vec<(TcpStream, Option<std::thread::JoinHandle<()>>)> = {
+                    let mut map = live.lock().unwrap();
+                    map.drain().map(|(_, v)| v).collect()
+                };
+                for (stream, _) in &drained {
+                    let _ = stream.shutdown(std::net::Shutdown::Both);
+                }
+                for (_, handle) in drained {
+                    if let Some(h) = handle {
+                        let _ = h.join();
+                    }
+                }
             }
         }
     }
@@ -103,116 +190,103 @@ impl Drop for ServerHandle {
     }
 }
 
+/// Addr-keyed test failpoint: unit tests run in parallel inside one
+/// process, so an injected failure must hit only the server it was armed
+/// for, never a neighbour test's listener.
+#[cfg(test)]
+pub(crate) struct Failpoint {
+    armed: std::sync::Mutex<Option<(String, usize)>>,
+}
+
+#[cfg(test)]
+impl Failpoint {
+    pub(crate) const fn new() -> Failpoint {
+        Failpoint { armed: std::sync::Mutex::new(None) }
+    }
+
+    /// Arm `n` triggers against the server listening on `addr`.
+    pub(crate) fn arm(&self, addr: &str, n: usize) {
+        *self.armed.lock().unwrap() = Some((addr.to_string(), n));
+    }
+
+    /// Consume one trigger if armed for `addr`.
+    pub(crate) fn take(&self, addr: &str) -> bool {
+        let mut g = self.armed.lock().unwrap();
+        match g.as_mut() {
+            Some((a, n)) if a == addr && *n > 0 => {
+                *n -= 1;
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
 pub struct NetServer;
 
 impl NetServer {
-    /// Bind `addr` (use port 0 for ephemeral) and serve `handler`.
+    /// Bind `addr` (use port 0 for ephemeral) and serve `handler` on the
+    /// reactor with default sizing.
     pub fn serve<H: Handler>(addr: &str, handler: Arc<H>) -> std::io::Result<ServerHandle> {
+        Self::serve_with(addr, handler, ReactorConfig::default())
+    }
+
+    /// Serve on the reactor with explicit sizing.
+    pub fn serve_with<H: Handler>(
+        addr: &str,
+        handler: Arc<H>,
+        cfg: ReactorConfig,
+    ) -> std::io::Result<ServerHandle> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?.to_string();
         let stop = Arc::new(AtomicBool::new(false));
-        let live: Arc<ConnMap> = Arc::new(Mutex::new(HashMap::new()));
-        let connections = Arc::new(AtomicU64::new(0));
-        let requests = Arc::new(AtomicU64::new(0));
-        let bytes_in = Arc::new(AtomicU64::new(0));
-        let bytes_out = Arc::new(AtomicU64::new(0));
-
-        let accept_thread = {
-            let stop = stop.clone();
-            let live = live.clone();
-            let connections = connections.clone();
-            let requests = requests.clone();
-            let bytes_in = bytes_in.clone();
-            let bytes_out = bytes_out.clone();
-            std::thread::spawn(move || {
-                let mut next_id = 0u64;
-                for stream in listener.incoming() {
-                    if stop.load(Ordering::Acquire) {
-                        break;
-                    }
-                    let Ok(stream) = stream else { continue };
-                    connections.fetch_add(1, Ordering::Relaxed);
-                    let id = next_id;
-                    next_id += 1;
-                    // Register the socket clone BEFORE the handler runs so
-                    // `stop` can always unblock it; the handler removes the
-                    // entry itself when the connection ends normally.
-                    let tracked = match stream.try_clone() {
-                        Ok(peer) => {
-                            live.lock().unwrap().insert(id, (peer, None));
-                            true
-                        }
-                        Err(_) => false,
-                    };
-                    let handler = handler.clone();
-                    let live2 = live.clone();
-                    let requests = requests.clone();
-                    let bytes_in = bytes_in.clone();
-                    let bytes_out = bytes_out.clone();
-                    let join = std::thread::spawn(move || {
-                        let _ = Self::handle_conn(stream, handler, requests, bytes_in, bytes_out);
-                        if tracked {
-                            live2.lock().unwrap().remove(&id);
-                        }
-                    });
-                    // Attach the join handle unless the handler already
-                    // finished (and removed the entry) — then it detaches.
-                    if tracked {
-                        if let Some(entry) = live.lock().unwrap().get_mut(&id) {
-                            entry.1 = Some(join);
-                        }
-                    }
-                }
-            })
-        };
-
+        let counters = Counters::new();
+        let parts = reactor::spawn(
+            listener,
+            handler,
+            cfg.resolved_workers(),
+            counters.clone(),
+            stop.clone(),
+        )?;
         Ok(ServerHandle {
             addr: local,
             stop,
-            accept_thread: Some(accept_thread),
-            live,
-            connections,
-            requests,
-            bytes_in,
-            bytes_out,
+            backend: Backend::Reactor {
+                reactor: Some(parts.reactor),
+                workers: parts.workers,
+                active: parts.active,
+                live_workers: parts.live_workers,
+            },
+            connections: counters.connections,
+            requests: counters.requests,
+            bytes_in: counters.bytes_in,
+            bytes_out: counters.bytes_out,
+            aborted_frames: counters.aborted_frames,
         })
     }
 
-    fn handle_conn<H: Handler>(
-        mut stream: TcpStream,
+    /// Serve on the retired thread-per-connection backend — kept (with its
+    /// lifecycle bugs fixed) as the reference implementation the reactor's
+    /// wire behaviour is pinned against in `fig_connection_scaling`.
+    pub fn serve_threaded<H: Handler>(
+        addr: &str,
         handler: Arc<H>,
-        requests: Arc<AtomicU64>,
-        bytes_in: Arc<AtomicU64>,
-        bytes_out: Arc<AtomicU64>,
-    ) -> Result<(), ProtoError> {
-        stream.set_nodelay(true)?;
-        // Per-connection pools, reused for every frame on this socket: the
-        // 4-aligned payload buffer (so upload decode borrows in place) and
-        // the reply encode scratch.  No per-frame allocation on the steady
-        // state of the upload hot path.
-        let mut payload = FrameBuf::new();
-        let mut scratch = Vec::new();
-        loop {
-            let tag = match read_frame_into(&mut stream, &mut payload) {
-                Ok(t) => t,
-                Err(ProtoError::Io(_)) => return Ok(()), // client hung up
-                Err(e) => {
-                    let _ = write_frame(&mut stream, &Message::Error(e.to_string()));
-                    return Err(e);
-                }
-            };
-            bytes_in.fetch_add(5 + payload.len() as u64, Ordering::Relaxed);
-            requests.fetch_add(1, Ordering::Relaxed);
-            let reply = match handler.handle_frame(tag, payload.as_slice()) {
-                Ok(r) => r,
-                Err(e) => {
-                    let _ = write_frame(&mut stream, &Message::Error(e.to_string()));
-                    return Err(e);
-                }
-            };
-            let n = write_reply(&mut stream, &reply, &mut scratch)?;
-            bytes_out.fetch_add(n as u64, Ordering::Relaxed);
-        }
+    ) -> std::io::Result<ServerHandle> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let counters = Counters::new();
+        let parts = threaded::spawn(listener, handler, counters.clone(), stop.clone());
+        Ok(ServerHandle {
+            addr: local,
+            stop,
+            backend: Backend::Threaded { accept: Some(parts.accept), live: parts.live },
+            connections: counters.connections,
+            requests: counters.requests,
+            bytes_in: counters.bytes_in,
+            bytes_out: counters.bytes_out,
+            aborted_frames: counters.aborted_frames,
+        })
     }
 }
 
@@ -222,20 +296,37 @@ mod tests {
     use crate::net::NetClient;
     use crate::tensorstore::ModelUpdate;
     use std::sync::Mutex;
+    use std::time::{Duration, Instant};
+
+    fn echo() -> Arc<impl Handler> {
+        Arc::new(|m: Message| m)
+    }
+
+    /// Run the same closure against both backends: the reactor must be
+    /// wire-compatible with the threaded reference, so every ported
+    /// behaviour test is a parity test.
+    fn on_both_backends<F: Fn(&mut ServerHandle)>(handler: Arc<impl Handler + Clone>, f: F) {
+        let mut reactor = NetServer::serve("127.0.0.1:0", Arc::new((*handler).clone())).unwrap();
+        f(&mut reactor);
+        reactor.stop();
+        let mut threaded = NetServer::serve_threaded("127.0.0.1:0", handler).unwrap();
+        f(&mut threaded);
+        threaded.stop();
+    }
 
     #[test]
     fn echo_roundtrip() {
-        let handle = NetServer::serve(
-            "127.0.0.1:0",
+        on_both_backends(
             Arc::new(|m: Message| match m {
                 Message::Register { party } => Message::Registered { party, round: 1 },
                 other => other,
             }),
-        )
-        .unwrap();
-        let mut c = NetClient::connect(handle.addr()).unwrap();
-        let reply = c.call(&Message::Register { party: 9 }).unwrap();
-        assert_eq!(reply, Message::Registered { party: 9, round: 1 });
+            |handle| {
+                let mut c = NetClient::connect(handle.addr()).unwrap();
+                let reply = c.call(&Message::Register { party: 9 }).unwrap();
+                assert_eq!(reply, Message::Registered { party: 9, round: 1 });
+            },
+        );
     }
 
     #[test]
@@ -327,56 +418,57 @@ mod tests {
 
     #[test]
     fn persistent_connection_multiple_calls() {
-        let handle = NetServer::serve(
-            "127.0.0.1:0",
+        on_both_backends(
             Arc::new(|_m: Message| Message::Ack { redirect_to_dfs: false }),
-        )
-        .unwrap();
-        let mut c = NetClient::connect(handle.addr()).unwrap();
-        for round in 0..5 {
-            let r = c.call(&Message::GetModel { round }).unwrap();
-            assert_eq!(r, Message::Ack { redirect_to_dfs: false });
-        }
-        assert_eq!(handle.requests.load(Ordering::Relaxed), 5);
+            |handle| {
+                let mut c = NetClient::connect(handle.addr()).unwrap();
+                for round in 0..5 {
+                    let r = c.call(&Message::GetModel { round }).unwrap();
+                    assert_eq!(r, Message::Ack { redirect_to_dfs: false });
+                }
+                assert_eq!(handle.requests.load(Ordering::Relaxed), 5);
+            },
+        );
     }
 
     #[test]
     fn byte_counters_track_wire_volume() {
-        let handle = NetServer::serve(
-            "127.0.0.1:0",
+        on_both_backends(
             Arc::new(|_m: Message| Message::Ack { redirect_to_dfs: false }),
-        )
-        .unwrap();
-        let mut c = NetClient::connect(handle.addr()).unwrap();
-        let u = ModelUpdate::new(1, 1.0, 0, vec![0.5; 100]);
-        let in_frame = 5 + Message::Upload(u.clone()).encode().1.len() as u64;
-        let out_frame = 5 + Message::Ack { redirect_to_dfs: false }.encode().1.len() as u64;
-        for _ in 0..3 {
-            c.call(&Message::Upload(u.clone())).unwrap();
-        }
-        // the reply write and its counter update race the client's recv by
-        // a few instructions; poll briefly instead of sleeping blind
-        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
-        while handle.bytes_out.load(Ordering::Relaxed) < 3 * out_frame
-            && std::time::Instant::now() < deadline
-        {
-            std::thread::yield_now();
-        }
-        assert_eq!(handle.bytes_in.load(Ordering::Relaxed), 3 * in_frame);
-        assert_eq!(handle.bytes_out.load(Ordering::Relaxed), 3 * out_frame);
+            |handle| {
+                let mut c = NetClient::connect(handle.addr()).unwrap();
+                let u = ModelUpdate::new(1, 1.0, 0, vec![0.5; 100]);
+                let in_frame = 5 + Message::Upload(u.clone()).encode().1.len() as u64;
+                let out_frame =
+                    5 + Message::Ack { redirect_to_dfs: false }.encode().1.len() as u64;
+                for _ in 0..3 {
+                    c.call(&Message::Upload(u.clone())).unwrap();
+                }
+                // the reply write and its counter update race the client's
+                // recv by a few instructions; poll briefly
+                let deadline = Instant::now() + Duration::from_secs(2);
+                while handle.bytes_out.load(Ordering::Relaxed) < 3 * out_frame
+                    && Instant::now() < deadline
+                {
+                    std::thread::yield_now();
+                }
+                assert_eq!(handle.bytes_in.load(Ordering::Relaxed), 3 * in_frame);
+                assert_eq!(handle.bytes_out.load(Ordering::Relaxed), 3 * out_frame);
+            },
+        );
     }
 
     #[test]
     fn stop_drains_handler_threads_mid_round() {
         use std::io::{Read, Write};
-        use std::time::{Duration, Instant};
 
-        let mut handle = NetServer::serve("127.0.0.1:0", Arc::new(|m: Message| m)).unwrap();
+        let mut handle = NetServer::serve("127.0.0.1:0", echo()).unwrap();
         let addr = handle.addr().to_string();
 
         // A client mid-round: the frame header promises 200 payload bytes
-        // but only 50 ever arrive — the handler thread parks inside
-        // read_exact, exactly the state that used to outlive stop().
+        // but only 50 ever arrive — the connection sits in the Payload
+        // state, exactly the shape that used to park a handler thread in
+        // read_exact past stop().
         let mut c = std::net::TcpStream::connect(&addr).unwrap();
         c.write_all(&[0x03, 200, 0, 0, 0]).unwrap();
         c.write_all(&[0u8; 50]).unwrap();
@@ -385,19 +477,20 @@ mod tests {
         while handle.active_connections() == 0 && Instant::now() < deadline {
             std::thread::yield_now();
         }
-        assert_eq!(handle.active_connections(), 1, "the handler picked the connection up");
+        assert_eq!(handle.active_connections(), 1, "the reactor tracked the connection");
 
         let t0 = Instant::now();
         handle.stop();
         assert!(
             t0.elapsed() < Duration::from_secs(5),
-            "stop() must unblock the parked read, not wait it out"
+            "stop() must not wait the half-read frame out"
         );
         assert_eq!(
             handle.active_connections(),
             0,
-            "no handler thread survives stop() while a client is mid-round"
+            "no tracked connection survives stop() while a client is mid-round"
         );
+        assert_eq!(handle.live_workers(), 0, "no fold worker survives stop()");
 
         // the server side of the socket is truly gone
         c.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
@@ -411,21 +504,181 @@ mod tests {
 
     #[test]
     fn stop_shuts_down() {
-        let mut handle = NetServer::serve(
-            "127.0.0.1:0",
-            Arc::new(|m: Message| m),
-        )
-        .unwrap();
+        let mut handle = NetServer::serve("127.0.0.1:0", echo()).unwrap();
         let addr = handle.addr().to_string();
         handle.stop();
         // subsequent connections should fail (eventually)
-        std::thread::sleep(std::time::Duration::from_millis(20));
+        std::thread::sleep(Duration::from_millis(20));
         let ok = NetClient::connect(&addr)
             .and_then(|mut c| {
                 c.call(&Message::GetModel { round: 0 })
-                    .map_err(|_| std::io::Error::new(std::io::ErrorKind::Other, "x"))
+                    .map_err(|_| std::io::Error::other("x"))
             })
             .is_ok();
         assert!(!ok);
+    }
+
+    // ------------------------------------------------------------------
+    // Lifecycle-bug regression pins.  Each of these FAILS against the
+    // pre-reactor server shape.
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn refused_admission_never_serves_untracked_connections() {
+        // Bug 1 (untracked-connection leak): when a connection cannot be
+        // tracked, it must be REFUSED — the old shape served it with
+        // `tracked=false`, so the call below SUCCEEDED on a connection
+        // stop() could neither observe nor join.
+        let mut handle = NetServer::serve("127.0.0.1:0", echo()).unwrap();
+        reactor::REFUSE_ADMITS.arm(handle.addr(), 1);
+
+        let mut c = NetClient::connect(handle.addr()).unwrap();
+        assert!(
+            c.call(&Message::GetModel { round: 0 }).is_err(),
+            "a refused connection must never be served"
+        );
+        assert_eq!(handle.active_connections(), 0, "refused connection was never tracked");
+
+        // the server keeps serving: the refusal cost one connection, not
+        // the listener
+        let mut c2 = NetClient::connect(handle.addr()).unwrap();
+        assert_eq!(
+            c2.call(&Message::GetModel { round: 3 }).unwrap(),
+            Message::GetModel { round: 3 }
+        );
+        handle.stop();
+        assert_eq!(handle.active_connections(), 0);
+    }
+
+    #[test]
+    fn threaded_clone_failure_refuses_instead_of_serving_untracked() {
+        // Bug 1 on the reference backend, driven by the injected
+        // `try_clone` failure the old shape turned into `tracked=false`.
+        let mut handle = NetServer::serve_threaded("127.0.0.1:0", echo()).unwrap();
+        threaded::FAIL_CLONES.arm(handle.addr(), 1);
+
+        let mut c = NetClient::connect(handle.addr()).unwrap();
+        assert!(
+            c.call(&Message::GetModel { round: 0 }).is_err(),
+            "clone failure must refuse the connection, not serve it untracked"
+        );
+        assert_eq!(handle.active_connections(), 0);
+
+        let mut c2 = NetClient::connect(handle.addr()).unwrap();
+        assert_eq!(
+            c2.call(&Message::GetModel { round: 3 }).unwrap(),
+            Message::GetModel { round: 3 }
+        );
+        handle.stop();
+        assert_eq!(handle.active_connections(), 0);
+    }
+
+    #[test]
+    fn handler_waits_for_its_join_handle_attach() {
+        // Bug 2 (join-handle attach race): with the historical race window
+        // widened to 60 ms, the handler must still not serve a byte until
+        // its JoinHandle is attached — the pre-gate shape replied
+        // immediately and, if it finished inside the window, silently
+        // detached its thread from stop().
+        let mut handle = NetServer::serve_threaded("127.0.0.1:0", echo()).unwrap();
+        threaded::ATTACH_DELAY_MS.store(60, Ordering::Release);
+        let t0 = Instant::now();
+        let mut c = NetClient::connect(handle.addr()).unwrap();
+        let r = c.call(&Message::GetModel { round: 1 });
+        threaded::ATTACH_DELAY_MS.store(0, Ordering::Release);
+        assert_eq!(r.unwrap(), Message::GetModel { round: 1 });
+        assert!(
+            t0.elapsed() >= Duration::from_millis(50),
+            "handler served before its join handle was attached"
+        );
+        handle.stop();
+        assert_eq!(handle.active_connections(), 0, "stop() joined every handler");
+    }
+
+    #[test]
+    fn truncated_frame_counts_as_aborted_clean_close_does_not() {
+        // Bug 3: the old shape mapped every ProtoError::Io to "client hung
+        // up", so a mid-frame death was indistinguishable from a clean
+        // close and counted nowhere.
+        use std::io::Write;
+
+        let mut handle = NetServer::serve("127.0.0.1:0", echo()).unwrap();
+
+        // clean: a full exchange, then close at the frame boundary
+        {
+            let mut c = NetClient::connect(handle.addr()).unwrap();
+            c.call(&Message::GetModel { round: 0 }).unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while handle.active_connections() > 0 && Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(
+            handle.aborted_frames.load(Ordering::Relaxed),
+            0,
+            "a clean close at a frame boundary is not an abort"
+        );
+
+        // aborted: header promises 200 bytes, 50 arrive, client dies
+        {
+            let mut c = std::net::TcpStream::connect(handle.addr()).unwrap();
+            c.write_all(&[0x03, 200, 0, 0, 0]).unwrap();
+            c.write_all(&[0u8; 50]).unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while handle.aborted_frames.load(Ordering::Relaxed) == 0 && Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(
+            handle.aborted_frames.load(Ordering::Relaxed),
+            1,
+            "a mid-frame death must be counted as an aborted frame"
+        );
+        handle.stop();
+    }
+
+    #[test]
+    fn worker_pool_is_bounded_and_drains_on_stop() {
+        // 64 short-lived connections through a ONE-worker reactor: every
+        // request is served (the pool is a queue, not a drop gate), and
+        // stop() leaves zero workers alive.
+        let mut handle =
+            NetServer::serve_with("127.0.0.1:0", echo(), ReactorConfig { workers: 1 }).unwrap();
+        assert_eq!(handle.live_workers(), 1);
+        for round in 0..64 {
+            let mut c = NetClient::connect(handle.addr()).unwrap();
+            assert_eq!(
+                c.call(&Message::GetModel { round }).unwrap(),
+                Message::GetModel { round }
+            );
+        }
+        handle.stop();
+        assert_eq!(handle.active_connections(), 0);
+        assert_eq!(handle.live_workers(), 0, "stop() must join the fold workers");
+    }
+
+    #[test]
+    fn model_reply_gather_write_survives_the_reactor() {
+        // The zero-copy Reply::Model path through the nonblocking Outbox
+        // must be wire-identical to the owned Message::Model encoding.
+        struct ModelHandler(Arc<Vec<f32>>);
+        impl Handler for ModelHandler {
+            fn handle(&self, _m: Message) -> Message {
+                unreachable!("handle_frame is overridden")
+            }
+            fn handle_frame(&self, _tag: u8, _payload: &[u8]) -> Result<Reply, ProtoError> {
+                Ok(Reply::Model { round: 7, weights: self.0.clone() })
+            }
+        }
+        let weights: Vec<f32> = (0..2048).map(|i| i as f32 * 0.25).collect();
+        let mut handle = NetServer::serve(
+            "127.0.0.1:0",
+            Arc::new(ModelHandler(Arc::new(weights.clone()))),
+        )
+        .unwrap();
+        let mut c = NetClient::connect(handle.addr()).unwrap();
+        let got = c.call(&Message::GetModel { round: 7 }).unwrap();
+        assert_eq!(got, Message::Model { round: 7, weights });
+        handle.stop();
     }
 }

@@ -1,0 +1,157 @@
+//! The retired thread-per-connection backend, kept as the REFERENCE
+//! implementation the reactor is pinned against (`fig_connection_scaling`
+//! drives the same seeded scenario through both and compares digests) —
+//! with its three lifecycle bugs fixed:
+//!
+//! * **Untracked-connection leak** — when the socket clone that `stop()`
+//!   needs cannot be made, the connection is now REFUSED (shut down before
+//!   a handler ever runs) instead of served untracked, where `stop()`
+//!   could neither unblock nor join it.  Track-or-refuse, no third state.
+//! * **Join-handle attach race** — the handler thread now blocks on a
+//!   start gate until the accept loop has attached its `JoinHandle` to
+//!   the live-map entry, so a handler can never finish (and remove its
+//!   entry) before the handle is attached — the window in which the old
+//!   code silently dropped the handle and detached the thread.
+//! * **Truncated frames** are distinguished from clean hangups via
+//!   [`try_read_frame_into`](super::try_read_frame_into) and counted into
+//!   `aborted_frames`.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use super::server::{Counters, Handler};
+use super::{try_read_frame_into, write_frame, write_reply, FrameBuf, Message, ProtoError};
+
+/// Test failpoint: make the next N `try_clone` calls fail on a specific
+/// listener, driving the refuse path deterministically.
+#[cfg(test)]
+pub(crate) static FAIL_CLONES: super::server::Failpoint = super::server::Failpoint::new();
+
+/// Test failpoint: delay (ms) between spawning a handler and attaching its
+/// join handle — widens the historical race window so the start gate is
+/// exercised, not just present.
+#[cfg(test)]
+pub(crate) static ATTACH_DELAY_MS: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(0);
+
+/// Live per-connection state: a clone of the socket (so `stop` can shut a
+/// blocked read down) plus the handler thread's join handle.  A handler
+/// removes its own entry when its connection ends — which the start gate
+/// guarantees happens only AFTER the handle was attached.
+pub(crate) type ConnMap = Mutex<HashMap<u64, (TcpStream, Option<std::thread::JoinHandle<()>>)>>;
+
+/// The running accept loop's thread and live map, held by `ServerHandle`.
+pub(crate) struct Parts {
+    pub accept: std::thread::JoinHandle<()>,
+    pub live: Arc<ConnMap>,
+}
+
+pub(crate) fn spawn<H: Handler>(
+    listener: TcpListener,
+    handler: Arc<H>,
+    counters: Counters,
+    stop: Arc<AtomicBool>,
+) -> Parts {
+    let live: Arc<ConnMap> = Arc::new(Mutex::new(HashMap::new()));
+    let accept = {
+        let live = live.clone();
+        std::thread::spawn(move || {
+            #[cfg(test)]
+            let local = listener.local_addr().map(|a| a.to_string()).unwrap_or_default();
+            let mut next_id = 0u64;
+            for stream in listener.incoming() {
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let clone = stream.try_clone();
+                #[cfg(test)]
+                let clone = if FAIL_CLONES.take(&local) {
+                    Err(std::io::Error::other("injected clone failure"))
+                } else {
+                    clone
+                };
+                // Track-or-refuse: without the clone, stop() could never
+                // unblock this connection's read — refuse it rather than
+                // serve it untracked.
+                let Ok(peer) = clone else {
+                    let _ = stream.shutdown(Shutdown::Both);
+                    continue;
+                };
+                counters.connections.fetch_add(1, Ordering::Relaxed);
+                let id = next_id;
+                next_id += 1;
+                live.lock().unwrap().insert(id, (peer, None));
+                let handler = handler.clone();
+                let live2 = live.clone();
+                let counters2 = counters.clone();
+                // Start gate: the handler may not serve (or finish and
+                // remove its entry) until its JoinHandle is attached below
+                // — registration and attach are atomic as far as the
+                // handler can observe.
+                let (ready_tx, ready_rx) = mpsc::channel::<()>();
+                let join = std::thread::spawn(move || {
+                    let _ = ready_rx.recv();
+                    let _ = handle_conn(stream, handler, counters2);
+                    live2.lock().unwrap().remove(&id);
+                });
+                #[cfg(test)]
+                {
+                    let ms = ATTACH_DELAY_MS.load(Ordering::Acquire);
+                    if ms > 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(ms));
+                    }
+                }
+                live.lock()
+                    .unwrap()
+                    .get_mut(&id)
+                    .expect("start gate: handler cannot finish before its handle is attached")
+                    .1 = Some(join);
+                let _ = ready_tx.send(());
+            }
+        })
+    };
+    Parts { accept, live }
+}
+
+fn handle_conn<H: Handler>(
+    mut stream: TcpStream,
+    handler: Arc<H>,
+    counters: Counters,
+) -> Result<(), ProtoError> {
+    stream.set_nodelay(true)?;
+    // Per-connection pools, reused for every frame on this socket: the
+    // 4-aligned payload buffer (so upload decode borrows in place) and
+    // the reply encode scratch.
+    let mut payload = FrameBuf::new();
+    let mut scratch = Vec::new();
+    loop {
+        let tag = match try_read_frame_into(&mut stream, &mut payload) {
+            Ok(Some(t)) => t,
+            Ok(None) => return Ok(()), // clean hangup at a frame boundary
+            Err(ProtoError::Io(_)) => {
+                // died mid-frame (or stop() shut the socket down under a
+                // half-read frame): a truncated frame, not a clean close
+                counters.aborted_frames.fetch_add(1, Ordering::Relaxed);
+                return Ok(());
+            }
+            Err(e) => {
+                let _ = write_frame(&mut stream, &Message::Error(e.to_string()));
+                return Err(e);
+            }
+        };
+        counters.bytes_in.fetch_add(5 + payload.len() as u64, Ordering::Relaxed);
+        counters.requests.fetch_add(1, Ordering::Relaxed);
+        let reply = match handler.handle_frame(tag, payload.as_slice()) {
+            Ok(r) => r,
+            Err(e) => {
+                let _ = write_frame(&mut stream, &Message::Error(e.to_string()));
+                return Err(e);
+            }
+        };
+        let n = write_reply(&mut stream, &reply, &mut scratch)?;
+        counters.bytes_out.fetch_add(n as u64, Ordering::Relaxed);
+    }
+}

@@ -165,6 +165,13 @@ pub struct PlannerConfig {
     /// [`VirtualCluster::streaming_time`]'s lanes term.  Typically equal
     /// to `node_cores` (the server shards one lane per core).
     pub ingest_lanes: usize,
+    /// Fold-worker pool size behind the network reactor (the bounded pool
+    /// decoded frames are dispatched to): the effective streaming ingest
+    /// width is `min(ingest_lanes, reactor_workers)` — lanes beyond the
+    /// pool can accept bytes but not fold them, so pricing wider would
+    /// flatter every ingest-coupled plan.  0 = unbounded (the service
+    /// wiring sizes the pool to the node's cores).
+    pub reactor_workers: usize,
     /// Edge aggregators available to a 2-tier plan: with ≥ 2 a
     /// `PlanKind::Hierarchical` candidate is enumerated (and priced via
     /// [`VirtualCluster::hierarchical_breakdown`]) whenever the algorithm
@@ -212,6 +219,7 @@ impl Default for PlannerConfig {
             cores_per_executor: 3,
             node_cores: 4,
             ingest_lanes: 4,
+            reactor_workers: 0,
             edges: 0,
             xla_available: false,
             feedback_beta: 0.3,
@@ -426,6 +434,14 @@ impl DispatchPlanner {
             } else {
                 ((self.classifier.memory_bytes / update_bytes).saturating_sub(1)).max(1) as usize
             };
+            // The reactor dispatches decoded frames to a bounded fold
+            // worker pool; ingest width beyond it reads bytes but cannot
+            // fold them, so every lanes term is capped by the pool.
+            let worker_cap = if self.cfg.reactor_workers == 0 {
+                usize::MAX
+            } else {
+                self.cfg.reactor_workers
+            };
             // `eff` is the one K·p derivation for every candidate family
             // (streaming_time_p is the standalone participation entry for
             // direct callers; pricing must not re-derive the count).
@@ -434,7 +450,7 @@ impl DispatchPlanner {
                     update_bytes,
                     eff,
                     self.cfg.node_cores.max(1),
-                    self.cfg.ingest_lanes.max(1).min(lane_cap),
+                    self.cfg.ingest_lanes.max(1).min(lane_cap).min(worker_cap),
                     enc,
                 );
             candidates.push(CandidatePlan {
@@ -451,7 +467,7 @@ impl DispatchPlanner {
             // MinCost keeps the single-node flat fold.
             if self.cfg.edges >= 2 && eff >= 2 {
                 let e = self.cfg.edges.min(eff);
-                let lanes = self.cfg.ingest_lanes.max(1).min(lane_cap);
+                let lanes = self.cfg.ingest_lanes.max(1).min(lane_cap).min(worker_cap);
                 let corr = self.corr_hier.value_or(1.0);
                 let (edge_s, root_s) = self.cluster.hierarchical_breakdown_enc(
                     update_bytes,
@@ -497,7 +513,7 @@ impl DispatchPlanner {
             // reason MinCost keeps the sync quorum at high turnout).
             if self.cfg.async_buffer >= 1 && eff >= 1 {
                 let k = self.cfg.async_buffer.min(eff);
-                let lanes = self.cfg.ingest_lanes.max(1).min(lane_cap);
+                let lanes = self.cfg.ingest_lanes.max(1).min(lane_cap).min(worker_cap);
                 let corr = self.corr_async.value_or(1.0);
                 let publish = corr
                     * self.cluster.async_publish_time_enc(
@@ -656,6 +672,7 @@ mod tests {
                 cores_per_executor: 3,
                 node_cores: 64,
                 ingest_lanes: 64,
+                reactor_workers: 0,
                 edges: 0,
                 xla_available: false,
                 feedback_beta: 0.3,
@@ -678,6 +695,7 @@ mod tests {
                 cores_per_executor: 3,
                 node_cores: 64,
                 ingest_lanes: 64,
+                reactor_workers: 0,
                 edges,
                 xla_available: false,
                 feedback_beta: 0.3,
@@ -700,6 +718,7 @@ mod tests {
                 cores_per_executor: 3,
                 node_cores: 64,
                 ingest_lanes: 64,
+                reactor_workers: 0,
                 edges: 0,
                 xla_available: false,
                 feedback_beta: 0.3,
@@ -1069,6 +1088,7 @@ mod tests {
             cores_per_executor: 3,
             node_cores: 64,
             ingest_lanes: 64,
+            reactor_workers: 0,
             edges: 0,
             xla_available: false,
             feedback_beta: 0.3,
@@ -1150,6 +1170,7 @@ mod tests {
                 max_executors: 10,
                 node_cores: 64,
                 ingest_lanes: 64,
+                reactor_workers: 0,
                 edges,
                 encoding: enc,
                 ..PlannerConfig::default()
@@ -1269,5 +1290,39 @@ mod tests {
         assert_eq!(plan.class, WorkloadClass::Small);
         assert!(!plan.chosen.kind.is_distributed());
         assert!(plan.chosen.cost.latency_s < 1e-6);
+    }
+
+    #[test]
+    fn reactor_worker_cap_throttles_streaming_lanes() {
+        // Ingest width beyond the fold worker pool reads bytes it cannot
+        // fold, so pricing caps every lanes term at the pool size: the
+        // same 64-lane config priced with a one-worker reactor must be
+        // strictly slower than with an unbounded pool.
+        let stream_latency = |workers: usize| {
+            DispatchPlanner::new(
+                WorkloadClassifier::new(170 << 30, 1.1),
+                VirtualCluster::paper(CostModel::nominal()),
+                PricingModel::default(),
+                PlannerConfig {
+                    policy: DispatchPolicy::MinLatency,
+                    node_cores: 64,
+                    ingest_lanes: 64,
+                    reactor_workers: workers,
+                    ..PlannerConfig::default()
+                },
+            )
+            .plan(UPDATE_46MB, 30_000, &FedAvg, 0)
+            .candidates
+            .iter()
+            .find(|c| c.kind == PlanKind::Streaming)
+            .expect("streaming candidate enumerated")
+            .cost
+            .latency_s
+        };
+        let unbounded = stream_latency(0);
+        let starved = stream_latency(1);
+        assert!(starved > unbounded, "{starved} !> {unbounded}");
+        // a pool at least as wide as the lanes changes nothing
+        assert!((stream_latency(64) - unbounded).abs() < 1e-12);
     }
 }

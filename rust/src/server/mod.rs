@@ -29,7 +29,7 @@ use crate::engine::StreamingFold;
 use crate::fusion::{l2_norm, DiscountedFusion, FusionAlgorithm, StalenessDiscount, TrustWeighted};
 use crate::memsim::MemoryBudget;
 use crate::net::server::Handler;
-use crate::net::{protocol, Message, NetServer, ProtoError, Reply, ServerHandle};
+use crate::net::{protocol, Message, NetServer, ProtoError, ReactorConfig, Reply, ServerHandle};
 use crate::tensorstore::{
     decode_stats, DecodeStats, EncodedUpdateView, ModelUpdateView, PartialAggregateView,
 };
@@ -181,9 +181,36 @@ impl FlServer {
         st
     }
 
-    /// Serve on `addr` (port 0 = ephemeral).
+    /// Serve on `addr` (port 0 = ephemeral) with the readiness reactor,
+    /// its fold worker pool sized from the config (`reactor_workers`,
+    /// 0 = one worker per node core).
     pub fn start(self: &Arc<Self>, addr: &str) -> std::io::Result<ServerHandle> {
-        NetServer::serve(addr, Arc::new(FlHandler(self.clone())))
+        let cfg = self.service.config();
+        let workers = if cfg.reactor_workers == 0 {
+            cfg.node.cores.max(1)
+        } else {
+            cfg.reactor_workers
+        };
+        NetServer::serve_with(addr, Arc::new(FlHandler(self.clone())), ReactorConfig { workers })
+    }
+
+    /// Serve with the legacy thread-per-connection backend.  Kept so the
+    /// reactor's round digests can be pinned bit-identical against it
+    /// (`benches/fig_connection_scaling`); new deployments use
+    /// [`FlServer::start`].
+    pub fn start_threaded(self: &Arc<Self>, addr: &str) -> std::io::Result<ServerHandle> {
+        NetServer::serve_threaded(addr, Arc::new(FlHandler(self.clone())))
+    }
+
+    /// Hand one decoded wire frame straight to the request path,
+    /// bypassing the socket layer.  The virtual-client fleet
+    /// ([`crate::sim::fleet`]) drives 100k-party rounds through exactly
+    /// the zero-copy frame path the reactor dispatches to, without 100k
+    /// sockets or threads.  `payload` should come from a 4-aligned
+    /// buffer ([`crate::net::FrameBuf`]) so borrowed-view decode is
+    /// exercised, not silently downgraded to the copy fallback.
+    pub fn inject_frame(&self, tag: u8, payload: &[u8]) -> Result<Reply, ProtoError> {
+        self.handle_frame(tag, payload)
     }
 
     /// The sanitised robust knobs `(clip_factor, trust_decay)`; a clip
@@ -370,6 +397,7 @@ impl FlServer {
         match tag {
             protocol::TAG_UPLOAD => {
                 let v = ModelUpdateView::decode(payload)?;
+                self.registry.note_seen(v.party);
                 if let Some(ar) = &self.async_round {
                     return Ok(Reply::Msg(
                         self.async_offer(ar, v.party, 0, v.round, v.count, &v.data),
@@ -393,6 +421,7 @@ impl FlServer {
                 // the pooled buffer is 4-aligned and the nonce is 8 bytes,
                 // so the update body still decodes as a borrowed view
                 let v = ModelUpdateView::decode(&payload[8..])?;
+                self.registry.note_seen(v.party);
                 if let Some(ar) = &self.async_round {
                     return Ok(Reply::Msg(
                         self.async_offer(ar, v.party, nonce, v.round, v.count, &v.data),
@@ -421,6 +450,7 @@ impl FlServer {
                 // sees anything but dense f32 data.
                 let ev = EncodedUpdateView::decode(&payload[8..])?;
                 let v = ev.to_model_view()?;
+                self.registry.note_seen(v.party);
                 if let Some(ar) = &self.async_round {
                     return Ok(Reply::Msg(
                         self.async_offer(ar, v.party, nonce, v.round, v.count, &v.data),
@@ -481,7 +511,15 @@ impl FlServer {
                 self.registry.join(party, round, 0);
                 Message::Registered { party, round }
             }
+            Message::Heartbeat { party } => {
+                // A liveness-only signal: refresh the stamp the TTL
+                // eviction reads, reply with the current round so idle
+                // parties still learn where the fleet is.
+                self.registry.note_seen(party);
+                Message::Registered { party, round: self.current_round() }
+            }
             Message::Upload(u) => {
+                self.registry.note_seen(u.party);
                 if let Some(ar) = &self.async_round {
                     return self.async_offer(ar, u.party, 0, u.round, u.count, &u.data);
                 }
@@ -495,6 +533,7 @@ impl FlServer {
                 })
             }
             Message::UploadNonce { nonce, update } => {
+                self.registry.note_seen(update.party);
                 if let Some(ar) = &self.async_round {
                     return self.async_offer(
                         ar,
@@ -529,6 +568,7 @@ impl FlServer {
                     Ok(v) => v,
                     Err(e) => return Message::Error(format!("encoded payload: {e}")),
                 };
+                self.registry.note_seen(v.party);
                 if let Some(ar) = &self.async_round {
                     return self.async_offer(ar, v.party, nonce, v.round, v.count, &v.data);
                 }
@@ -573,6 +613,16 @@ impl FlServer {
         match self.run_round_quorum(expected, 1, timeout)? {
             RoundRun { result: Some(r), .. } => Ok(r),
             RoundRun { .. } => Err(ServiceError::NoUpdates),
+        }
+    }
+
+    /// The sanitised liveness TTL from the config; `None` = eviction off.
+    fn liveness_ttl(&self) -> Option<Duration> {
+        let s = self.service.config().liveness_ttl_s;
+        if s.is_finite() && s > 0.0 {
+            Some(Duration::from_secs_f64(s.min(31_536_000.0)))
+        } else {
+            None
         }
     }
 
@@ -645,8 +695,26 @@ impl FlServer {
         }
 
         // Small + Streaming: the deadline timer IS the collection window.
+        // With a liveness TTL configured, parties that stop signalling
+        // (no register/upload/heartbeat) are evicted from the live set
+        // during the wait, and the round seals early once everyone still
+        // alive has delivered and quorum is met — a crashed fleet no
+        // longer pins every round to the full deadline.
         let deadline = Instant::now() + timeout;
+        let ttl = self.liveness_ttl();
+        let mut next_evict = Instant::now();
         while st.collected() < expected && Instant::now() < deadline {
+            if let Some(ttl) = ttl {
+                let now = Instant::now();
+                if now >= next_evict {
+                    self.registry.evict_stale(ttl, now);
+                    next_evict = now + Duration::from_millis(25);
+                }
+                let live = self.registry.active_count();
+                if st.collected() >= quorum && st.collected() >= live {
+                    break;
+                }
+            }
             std::thread::sleep(Duration::from_millis(2));
         }
         // Seal FIRST, classify after: a straggler folding between a
@@ -1166,6 +1234,48 @@ mod tests {
         );
         assert!(server.round_state(0).unwrap().fused().is_none(), "no model published");
         assert_eq!(server.current_round(), 1, "the next round opened");
+    }
+
+    #[test]
+    fn liveness_eviction_seals_the_round_without_waiting_for_the_dead() {
+        // 8 registered parties, 5 deliver, 3 crash silently.  With a
+        // 150 ms liveness TTL the quorum waiter evicts the silent
+        // parties mid-round and seals once everyone still live has
+        // delivered, instead of burning the full 30 s deadline.
+        let td = TempDir::new();
+        let nn = NameNode::create(td.path(), 2, 1, 1 << 20).unwrap();
+        let mut cfg = ServiceConfig::default();
+        cfg.node.memory_bytes = 1 << 30;
+        cfg.node.cores = 2;
+        cfg.liveness_ttl_s = 0.15;
+        let svc = AdaptiveService::new(
+            cfg,
+            DfsClient::new(nn),
+            None,
+            ExecutorConfig { executors: 1, cores_per_executor: 2, ..Default::default() },
+        );
+        let server = FlServer::new(svc, Arc::new(FedAvg), 400);
+        for p in 0..8u64 {
+            server.registry.join(p, 0, 0);
+        }
+        // a heartbeat is a liveness-only signal answered with the round
+        match server.handle(Message::Heartbeat { party: 3 }) {
+            Message::Registered { party: 3, round: 0 } => {}
+            other => panic!("{other:?}"),
+        }
+        let st = server.round_state(0).unwrap();
+        for p in 0..5u64 {
+            st.ingest(ModelUpdate::new(p, 1.0, 0, vec![1.0; 100])).unwrap();
+        }
+        let t0 = Instant::now();
+        let run = server.run_round_quorum(8, 4, Duration::from_secs(30)).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "eviction must seal the round early, not at the 30 s deadline"
+        );
+        assert_eq!(run.outcome, RoundOutcome::Quorum);
+        assert_eq!(run.folded, 5);
+        assert!(run.result.is_some());
     }
 
     #[test]

@@ -29,8 +29,11 @@
 //! reproduces its digest bit-for-bit on a second run.
 
 pub mod byzantine;
+pub mod fleet;
 pub mod hierarchy;
 pub mod straggler;
+
+pub use fleet::{run_fleet, FleetConfig, FleetReport};
 
 pub use byzantine::{
     byz_schedules, run_byzantine_scenario, run_byzantine_tier_scenario, Attack, ByzConfig,
@@ -284,6 +287,17 @@ fn drive_client(addr: &str, s: &ClientSchedule, cfg: &ScenarioConfig) -> ClientR
 /// client runs on its own thread, and the round is driven with
 /// [`FlServer::run_round_quorum`] at `ceil(quorum_frac × clients)`.
 pub fn run_scenario(cfg: &ScenarioConfig) -> ScenarioReport {
+    run_scenario_on(cfg, false)
+}
+
+/// [`run_scenario`] with an explicit network backend: `threaded = false`
+/// serves through the readiness reactor ([`FlServer::start`]), `true`
+/// through the legacy thread-per-connection server
+/// ([`FlServer::start_threaded`]).  Everything above the socket layer is
+/// identical, so the same seed must produce the same
+/// [`ScenarioReport::digest`] on both — the parity pin
+/// `benches/fig_connection_scaling` holds the reactor to.
+pub fn run_scenario_on(cfg: &ScenarioConfig, threaded: bool) -> ScenarioReport {
     let scheds = schedules(cfg);
     let seq = SCENARIO_SEQ.fetch_add(1, Ordering::Relaxed);
     let root = std::env::temp_dir().join(format!(
@@ -309,7 +323,11 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> ScenarioReport {
     for s in &scheds {
         server.registry.join(s.party, 0, 16);
     }
-    let handle = server.start("127.0.0.1:0").expect("scenario server");
+    let handle = if threaded {
+        server.start_threaded("127.0.0.1:0").expect("scenario server")
+    } else {
+        server.start("127.0.0.1:0").expect("scenario server")
+    };
     let addr = handle.addr().to_string();
     let expected = cfg.clients.max(1);
     let quorum = (((cfg.clients as f64) * cfg.quorum_frac).ceil() as usize).max(1);

@@ -1,0 +1,81 @@
+//! Connection-churn soak for the readiness reactor.
+//!
+//! The lifecycle bugs this PR retired were all of the form "a connection
+//! (or its thread) outlives the server's books": untracked handlers,
+//! dropped join handles, truncated frames read as clean hangups.  This
+//! soak drives the shape that surfaced them — clients connect, upload,
+//! and vanish mid-frame while `stop()` lands under load — and pins the
+//! invariant that makes the books trustworthy: afterwards the server
+//! reports zero active connections and zero live workers, and every
+//! mid-frame vanish was counted as an aborted frame, distinct from the
+//! clean closes around it.
+//!
+//! The worker pool is pinned to ONE thread so the drain path (buffered
+//! jobs finishing after `stop()`) is maximally contended.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use elastiagg::net::{Message, NetClient, NetServer, ReactorConfig};
+
+#[test]
+fn churn_soak_leaves_no_connections_or_workers_behind() {
+    let mut handle = NetServer::serve_with(
+        "127.0.0.1:0",
+        Arc::new(|m: Message| m),
+        ReactorConfig { workers: 1 },
+    )
+    .unwrap();
+    let addr = handle.addr().to_string();
+    let run = Arc::new(AtomicBool::new(true));
+
+    std::thread::scope(|s| {
+        for t in 0..8u64 {
+            let addr = addr.clone();
+            let run = run.clone();
+            s.spawn(move || {
+                // One mid-frame vanish: the header declares 200 payload
+                // bytes, 20 arrive, the socket dies.
+                if let Ok(mut raw) = TcpStream::connect(&addr) {
+                    let _ = raw.write_all(&[0x03, 200, 0, 0, 0]);
+                    let _ = raw.write_all(&[0u8; 20]);
+                    drop(raw);
+                }
+                // Then churn clean connections until told to quit —
+                // stop() lands while these are mid-flight.
+                while run.load(Ordering::Acquire) {
+                    if let Ok(mut c) = NetClient::connect(&addr) {
+                        let _ = c.call(&Message::Register { party: t });
+                    }
+                }
+            });
+        }
+
+        // Every truncated frame must surface in the aborted counter; the
+        // clean churn around them must not (a clean close at a frame
+        // boundary is not an abort).
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while handle.aborted_frames.load(Ordering::Relaxed) < 8 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(
+            handle.aborted_frames.load(Ordering::Relaxed) >= 8,
+            "mid-frame hangups were not distinguished from clean closes"
+        );
+
+        // Let the churn build, then stop the server UNDER load.
+        std::thread::sleep(Duration::from_millis(300));
+        handle.stop();
+        run.store(false, Ordering::Release);
+    });
+
+    assert_eq!(handle.active_connections(), 0, "a connection leaked through the churn");
+    assert_eq!(handle.live_workers(), 0, "a worker thread leaked");
+    assert!(
+        handle.connections.load(Ordering::Relaxed) > 8,
+        "soak should have churned more connections than the truncation probes"
+    );
+}
