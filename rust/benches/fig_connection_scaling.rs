@@ -19,13 +19,19 @@
 //! * part 3 replays the SAME 64-client seeded scenario over the reactor
 //!   and over the legacy thread-per-connection backend and requires
 //!   bit-identical round digests: the backend swap changed how bytes
-//!   reach the fold, provably not what the fold computes.
+//!   reach the fold, provably not what the fold computes;
+//! * part 4 (Linux) parks ≥1024 IDLE connections on the reactor and
+//!   measures the poll thread's CPU over a quiet window, once on the
+//!   epoll waiter and once on the portable sweep: epoll wakes on
+//!   O(ready) events so an idle fleet costs ~nothing, while the sweep
+//!   re-probes every socket each cycle and its cost grows with the
+//!   fleet — the number the tentpole exists to change, pinned.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use elastiagg::bench::{BenchJson, RoundRecord};
-use elastiagg::net::{Message, NetClient, NetServer, ReactorConfig};
+use elastiagg::net::{Message, NetClient, NetServer, ReactorConfig, WaiterKind};
 use elastiagg::sim::{run_fleet, run_scenario_on, FleetConfig, ScenarioConfig};
 use elastiagg::util::fmt;
 use elastiagg::util::json::Json;
@@ -57,7 +63,7 @@ fn main() {
     let mut handle = NetServer::serve_with(
         "127.0.0.1:0",
         Arc::new(|m: Message| m),
-        ReactorConfig { workers: WORKERS },
+        ReactorConfig { workers: WORKERS, ..Default::default() },
     )
     .expect("reactor server");
     let addr = handle.addr().to_string();
@@ -172,6 +178,144 @@ fn main() {
         });
     }
 
+    // ---- part 4: idle-fleet CPU — epoll O(ready) vs sweep O(connections) --
+    #[cfg(target_os = "linux")]
+    idle_fleet_cpu(&mut out);
+
     let path = out.write().expect("bench json");
     println!("\nwrote {}", path.display());
+}
+
+/// Raise `RLIMIT_NOFILE` toward `want` (best-effort: capped at the hard
+/// limit) so the idle-fleet sweep can hold >1024 sockets plus their
+/// server-side twins.  Hand-rolled FFI — the repo takes no libc crate.
+#[cfg(target_os = "linux")]
+fn raise_nofile(want: u64) -> u64 {
+    #[repr(C)]
+    struct Rlimit {
+        rlim_cur: u64,
+        rlim_max: u64,
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+    let mut lim = Rlimit { rlim_cur: 0, rlim_max: 0 };
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return 0;
+    }
+    if lim.rlim_cur < want {
+        let new = Rlimit { rlim_cur: want.min(lim.rlim_max), rlim_max: lim.rlim_max };
+        if unsafe { setrlimit(RLIMIT_NOFILE, &new) } == 0 {
+            lim.rlim_cur = new.rlim_cur;
+        }
+    }
+    lim.rlim_cur
+}
+
+/// Thread ids currently named after the reactor
+/// (`/proc/self/task/<tid>/comm`).
+#[cfg(target_os = "linux")]
+fn reactor_tids() -> Vec<String> {
+    let mut tids = Vec::new();
+    let Ok(dir) = std::fs::read_dir("/proc/self/task") else {
+        return tids;
+    };
+    for entry in dir.flatten() {
+        let tid = entry.file_name().to_string_lossy().into_owned();
+        if let Ok(comm) = std::fs::read_to_string(entry.path().join("comm")) {
+            if comm.trim_end() == elastiagg::net::REACTOR_THREAD_NAME {
+                tids.push(tid);
+            }
+        }
+    }
+    tids
+}
+
+/// utime+stime of one thread in seconds, from `/proc/self/task/<tid>/stat`
+/// (fields 14/15 counted from after the parenthesized comm; USER_HZ 100).
+#[cfg(target_os = "linux")]
+fn thread_cpu_seconds(tid: &str) -> Option<f64> {
+    let stat = std::fs::read_to_string(format!("/proc/self/task/{tid}/stat")).ok()?;
+    let close = stat.rfind(')')?;
+    let fields: Vec<&str> = stat.get(close + 2..)?.split(' ').collect();
+    let utime: u64 = fields.get(11)?.parse().ok()?;
+    let stime: u64 = fields.get(12)?.parse().ok()?;
+    Some((utime + stime) as f64 / 100.0)
+}
+
+/// Park `IDLE_CONNS` idle sockets on one backend and return the poll
+/// thread's CPU seconds over a `WINDOW` quiet window, plus the backend the
+/// waiter actually picked (`ELASTIAGG_NO_EPOLL=1` downgrades Epoll to the
+/// sweep — the caller skips the comparison instead of mis-pinning it).
+#[cfg(target_os = "linux")]
+fn idle_cpu_on(waiter: WaiterKind, conns: usize, window: Duration) -> (f64, &'static str) {
+    let before = reactor_tids();
+    let mut handle = NetServer::serve_with(
+        "127.0.0.1:0",
+        Arc::new(|m: Message| m),
+        ReactorConfig { workers: 1, waiter },
+    )
+    .expect("idle-fleet server");
+    let backend = handle.backend_name();
+    let ours: Vec<String> = reactor_tids().into_iter().filter(|t| !before.contains(t)).collect();
+    let addr = handle.addr().to_string();
+
+    let mut clients: Vec<NetClient> = Vec::with_capacity(conns);
+    for i in 0..conns {
+        let mut c = NetClient::connect(&addr).expect("idle client");
+        // one echo so the connection is registered, served and back to
+        // read-interest before the quiet window starts
+        let m = c.call(&Message::Register { party: i as u64 }).expect("echo");
+        assert!(matches!(m, Message::Register { .. }));
+        clients.push(c);
+    }
+    assert_eq!(handle.active_connections(), conns, "every idle socket tracked");
+
+    let cpu0: f64 = ours.iter().filter_map(|t| thread_cpu_seconds(t)).sum();
+    std::thread::sleep(window);
+    let cpu1: f64 = ours.iter().filter_map(|t| thread_cpu_seconds(t)).sum();
+
+    drop(clients);
+    handle.stop();
+    (cpu1 - cpu0, backend)
+}
+
+#[cfg(target_os = "linux")]
+fn idle_fleet_cpu(out: &mut BenchJson) {
+    const IDLE_CONNS: usize = 1024;
+    const WINDOW: Duration = Duration::from_secs(2);
+    // 1024 clients + 1024 accepted twins + store/scratch fds need headroom
+    let limit = raise_nofile(4 * IDLE_CONNS as u64);
+    if limit < (2 * IDLE_CONNS + 64) as u64 {
+        println!("\n[idle] skipped: RLIMIT_NOFILE {limit} too low for {IDLE_CONNS} sockets");
+        return;
+    }
+
+    let (epoll_cpu, epoll_backend) = idle_cpu_on(WaiterKind::Epoll, IDLE_CONNS, WINDOW);
+    let (sweep_cpu, sweep_backend) = idle_cpu_on(WaiterKind::Sweep, IDLE_CONNS, WINDOW);
+    assert_eq!(sweep_backend, "sweep");
+    println!(
+        "\n[idle] {IDLE_CONNS} idle conns over {:.0}s: {epoll_backend} {epoll_cpu:.3}s CPU \
+         vs sweep {sweep_cpu:.3}s CPU",
+        WINDOW.as_secs_f64()
+    );
+    out.meta("idle_conns", Json::num(IDLE_CONNS as f64));
+    out.meta("idle_window_s", Json::num(WINDOW.as_secs_f64()));
+    out.meta(
+        &format!("idle_reactor_cpu_s_{epoll_backend}"),
+        Json::num(epoll_cpu),
+    );
+    out.meta("idle_reactor_cpu_s_sweep", Json::num(sweep_cpu));
+    if epoll_backend == "epoll" {
+        // The tentpole's number: readiness from the OS queue makes an idle
+        // fleet ~free, while the sweep pays O(connections) every cycle.
+        assert!(
+            epoll_cpu < sweep_cpu && epoll_cpu <= 0.5 * sweep_cpu + 0.05,
+            "idle fleet must be cheaper on epoll: epoll {epoll_cpu:.3}s vs sweep {sweep_cpu:.3}s"
+        );
+    } else {
+        println!("[idle] epoll unavailable (forced sweep?) — comparison not pinned");
+    }
 }

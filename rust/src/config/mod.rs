@@ -4,6 +4,7 @@
 
 pub mod models;
 
+use crate::net::WaiterKind;
 use crate::planner::DispatchPolicy;
 use crate::tensorstore::Encoding;
 use crate::util::json::Json;
@@ -191,8 +192,19 @@ pub struct ServiceConfig {
     /// whose last liveness signal (join / upload / heartbeat) is older
     /// than this, and seals once the quorum covers the *live* population
     /// instead of awaiting dead clients to the deadline.  0 (the default)
-    /// disables eviction.
+    /// disables eviction.  A positive TTL below `evict_cadence_s` is
+    /// rejected at load: the wait loop only re-checks liveness once per
+    /// cadence, so a sub-cadence TTL would evict every party on every
+    /// tick regardless of heartbeats.
     pub liveness_ttl_s: f64,
+    /// How often (seconds) a driven round's wait loop re-checks liveness
+    /// and evicts stale parties.  Also the floor on `liveness_ttl_s`.
+    pub evict_cadence_s: f64,
+    /// Readiness backend the network reactor waits on: `auto` (epoll on
+    /// Linux, kqueue on macOS/BSD, sweep elsewhere — the default),
+    /// `sweep`, `epoll` or `kqueue`.  `ELASTIAGG_NO_EPOLL=1` forces
+    /// sweep regardless of this knob.
+    pub waiter: WaiterKind,
 }
 
 impl Default for ServiceConfig {
@@ -226,6 +238,8 @@ impl Default for ServiceConfig {
             encoding: Encoding::DenseF32,
             reactor_workers: 0,
             liveness_ttl_s: 0.0,
+            evict_cadence_s: 0.025,
+            waiter: WaiterKind::Auto,
         }
     }
 }
@@ -359,9 +373,23 @@ impl ServiceConfig {
         if let Some(v) = j.get("reactor_workers").as_usize() {
             c.reactor_workers = v;
         }
+        if let Some(w) = j.get("waiter").as_str().and_then(WaiterKind::parse) {
+            c.waiter = w;
+        }
+        // evict_cadence_s parses BEFORE liveness_ttl_s: the TTL floor
+        // below compares against whatever cadence this config carries.
+        if let Some(v) = j.get("evict_cadence_s").as_f64() {
+            // same Duration::from_secs_f64 domain as round_deadline_s,
+            // and a zero cadence would spin the wait loop
+            if v.is_finite() && v > 0.0 {
+                c.evict_cadence_s = v.min(31_536_000.0);
+            }
+        }
         if let Some(v) = j.get("liveness_ttl_s").as_f64() {
-            // same Duration::from_secs_f64 domain as round_deadline_s
-            if v.is_finite() && v >= 0.0 {
+            // same Duration::from_secs_f64 domain as round_deadline_s.
+            // A positive TTL below the evict cadence is junk (see the
+            // field docs): eviction stays off rather than misfiring.
+            if v.is_finite() && (v == 0.0 || (v >= c.evict_cadence_s && v >= 0.0)) {
                 c.liveness_ttl_s = v.min(31_536_000.0);
             }
         }
@@ -409,6 +437,8 @@ impl ServiceConfig {
             ("encoding", Json::str(&self.encoding.token())),
             ("reactor_workers", Json::num(self.reactor_workers as f64)),
             ("liveness_ttl_s", Json::num(self.liveness_ttl_s)),
+            ("evict_cadence_s", Json::num(self.evict_cadence_s)),
+            ("waiter", Json::str(self.waiter.token())),
         ])
     }
 }
@@ -613,6 +643,50 @@ mod tests {
         assert_eq!(ServiceConfig::from_json(&j).liveness_ttl_s, 0.0);
         let j = Json::parse(r#"{"liveness_ttl_s": 1e20}"#).unwrap();
         assert_eq!(ServiceConfig::from_json(&j).liveness_ttl_s, 31_536_000.0);
+    }
+
+    #[test]
+    fn waiter_and_evict_cadence_knobs_roundtrip_and_reject_junk() {
+        let c = ServiceConfig::default();
+        assert_eq!(c.waiter, WaiterKind::Auto);
+        assert_eq!(c.evict_cadence_s, 0.025, "matches the wait loop's old 25ms tick");
+        let mut c2 = c.clone();
+        c2.waiter = WaiterKind::Sweep;
+        c2.evict_cadence_s = 0.1;
+        let c3 = ServiceConfig::from_json(&c2.to_json());
+        assert_eq!(c3.waiter, WaiterKind::Sweep);
+        assert_eq!(c3.evict_cadence_s, 0.1);
+        // unknown waiter token keeps the default instead of guessing
+        let j = Json::parse(r#"{"waiter": "io_uring"}"#).unwrap();
+        assert_eq!(ServiceConfig::from_json(&j).waiter, WaiterKind::Auto);
+        // cadence shares the Duration domain; zero would spin the wait loop
+        let j = Json::parse(r#"{"evict_cadence_s": 0}"#).unwrap();
+        assert_eq!(ServiceConfig::from_json(&j).evict_cadence_s, 0.025);
+        let j = Json::parse(r#"{"evict_cadence_s": -1}"#).unwrap();
+        assert_eq!(ServiceConfig::from_json(&j).evict_cadence_s, 0.025);
+        let j = Json::parse(r#"{"evict_cadence_s": 1e20}"#).unwrap();
+        assert_eq!(ServiceConfig::from_json(&j).evict_cadence_s, 31_536_000.0);
+    }
+
+    #[test]
+    fn sub_cadence_liveness_ttl_is_rejected() {
+        // The wait loop re-checks liveness once per evict cadence: a TTL
+        // below the cadence would evict every party on every tick no
+        // matter how fast they heartbeat.  Such a TTL keeps eviction OFF.
+        let j = Json::parse(r#"{"liveness_ttl_s": 0.01}"#).unwrap();
+        let c = ServiceConfig::from_json(&j);
+        assert_eq!(c.liveness_ttl_s, 0.0, "TTL below the default 25ms cadence");
+        // at or above the cadence it loads normally
+        let j = Json::parse(r#"{"liveness_ttl_s": 0.025}"#).unwrap();
+        assert_eq!(ServiceConfig::from_json(&j).liveness_ttl_s, 0.025);
+        // a custom cadence moves the floor with it — order-independent
+        // because evict_cadence_s always parses first
+        let j = Json::parse(r#"{"liveness_ttl_s": 0.2, "evict_cadence_s": 0.5}"#).unwrap();
+        let c = ServiceConfig::from_json(&j);
+        assert_eq!(c.evict_cadence_s, 0.5);
+        assert_eq!(c.liveness_ttl_s, 0.0, "TTL below the configured cadence");
+        let j = Json::parse(r#"{"liveness_ttl_s": 0.6, "evict_cadence_s": 0.5}"#).unwrap();
+        assert_eq!(ServiceConfig::from_json(&j).liveness_ttl_s, 0.6);
     }
 
     #[test]

@@ -125,6 +125,27 @@ impl PartyRegistry {
         stale
     }
 
+    /// Heartbeat-derived live fraction: of all registered parties, how
+    /// many produced a liveness signal within `ttl` of `now`.  Returns
+    /// `(live, registered)`.  Read-only — nobody is evicted here (that is
+    /// [`PartyRegistry::evict_stale`]'s job); the round loop feeds this
+    /// pair into the planner's turnout EWMA so a fleet that stops
+    /// heartbeating lowers the priced participation even before quorum
+    /// accounting catches up.
+    pub fn live_fraction(&self, ttl: Duration, now: Instant) -> (usize, usize) {
+        let seen = self.seen.lock().unwrap();
+        let parties = self.parties.lock().unwrap();
+        let registered = parties.len();
+        let live = parties
+            .values()
+            .filter(|p| match seen.get(&p.id) {
+                Some(&t) => now.saturating_duration_since(t) <= ttl,
+                None => false,
+            })
+            .count();
+        (live, registered)
+    }
+
     /// Mark a party dropped out.
     pub fn leave(&self, id: u64) {
         if let Some(p) = self.parties.lock().unwrap().get_mut(&id) {
@@ -379,6 +400,29 @@ mod tests {
         assert_eq!(r.active_count(), 2);
         assert!(r.get(1).unwrap().active);
         assert!(!r.get(0).unwrap().active);
+    }
+
+    #[test]
+    fn live_fraction_counts_fresh_stamps_without_evicting() {
+        let r = PartyRegistry::new();
+        for id in 0..4 {
+            r.join(id, 0, 10);
+        }
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(30));
+        r.note_seen(1);
+        r.note_seen(3);
+        // ttl covering the heartbeat gap but not the join stamps
+        let now = t0 + Duration::from_millis(30);
+        assert_eq!(r.live_fraction(Duration::from_millis(20), now), (2, 4));
+        // read-only: nobody was deactivated by asking
+        assert_eq!(r.active_count(), 4);
+        // a generous ttl counts everyone; an empty registry is (0, 0)
+        assert_eq!(r.live_fraction(Duration::from_secs(60), now), (4, 4));
+        assert_eq!(
+            PartyRegistry::new().live_fraction(Duration::from_secs(1), Instant::now()),
+            (0, 0)
+        );
     }
 
     #[test]

@@ -274,6 +274,13 @@ impl AdaptiveService {
         self.planner.lock().unwrap().observe_participation(delivered, expected)
     }
 
+    /// Blend the registry's heartbeat-derived live fraction into the same
+    /// participation EWMA sealed rounds feed (see
+    /// [`DispatchPlanner::observe_liveness`]).  Returns the updated factor.
+    pub fn observe_liveness(&self, live: usize, registered: usize) -> f64 {
+        self.planner.lock().unwrap().observe_liveness(live, registered)
+    }
+
     /// The participation factor the planner currently prices against.
     pub fn participation(&self) -> f64 {
         self.planner.lock().unwrap().participation()

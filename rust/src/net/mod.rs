@@ -16,9 +16,21 @@ pub mod protocol;
 mod reactor;
 pub mod server;
 mod threaded;
+pub mod waiter;
+#[cfg(target_os = "linux")]
+mod waiter_epoll;
+#[cfg(any(
+    target_os = "macos",
+    target_os = "freebsd",
+    target_os = "openbsd",
+    target_os = "dragonfly"
+))]
+mod waiter_kqueue;
 
 pub use protocol::{checked_frame_len, Message, ProtoError, Reply};
+pub use reactor::REACTOR_THREAD_NAME;
 pub use server::{Handler, NetServer, ReactorConfig, ServerHandle};
+pub use waiter::{TimerDriver, WaiterKind, NO_EPOLL_ENV};
 
 use std::io::{Read, Write};
 use std::net::TcpStream;

@@ -4,12 +4,17 @@
 //!
 //! This replaces the thread-per-connection server: OS threads are now
 //! `1 (reactor) + workers`, independent of how many sockets are connected —
-//! the property `fig_connection_scaling` pins.  The loop is plain
-//! `std`-only level polling (nonblocking reads/writes, `WouldBlock` means
-//! "not ready", a short park when a whole sweep makes no progress); an
-//! epoll/kqueue waiter would slot into `run` without touching the state
-//! machines, but the repo carries zero dependencies, so the portable
-//! polling sweep is the shipped waiter.
+//! the property `fig_connection_scaling` pins.  *Which* sockets the loop
+//! looks at each iteration is owned by a [`Waiter`]: epoll on Linux and
+//! kqueue on macOS/BSD wake the loop on O(ready) events (an idle fleet
+//! costs the poll thread ~nothing — the second property
+//! `fig_connection_scaling` pins), while the portable sweep fallback
+//! reproduces the original "probe every socket, park 300µs when idle"
+//! behaviour on everything else (`ELASTIAGG_NO_EPOLL=1` forces it).
+//! Interest follows the state machine: read while collecting a frame,
+//! write only while a reply is queued, nothing while a frame is at a
+//! worker — so a `WouldBlock` on a model reply waits for the kernel's
+//! write-ready event instead of the next full sweep.
 //!
 //! Per-connection state machine (`ReadState`):
 //!
@@ -46,13 +51,19 @@ use std::time::Duration;
 
 use super::protocol::{self, MAX_FRAME};
 use super::server::{Counters, Handler};
+use super::waiter::{sock_fd, WaitEvent, Waiter, WaiterKind, TOKEN_LISTENER};
 use super::{FrameBuf, Message, ProtoError, Reply};
 use crate::tensorstore::f32s_as_bytes;
 
-/// How long the poll loop parks when a full sweep (accept + completions +
-/// every connection) made no progress.  Sub-millisecond: idle cost is a
-/// few wakeups/ms on one thread; latency cost is bounded by this.
-const IDLE_PARK: Duration = Duration::from_micros(300);
+/// Safety-net cap on a single kernel wait: `stop()` pokes the listener to
+/// wake the loop, so this bound only matters if that poke is ever lost —
+/// it turns "hung forever" into "stops within half a second".
+const WAIT_CAP: Duration = Duration::from_millis(500);
+
+/// The reactor thread's name — short enough to survive the kernel's
+/// 15-byte comm truncation, so tests and benches can find this exact
+/// thread in `/proc/self/task/*/stat` and meter its CPU time.
+pub const REACTOR_THREAD_NAME: &str = "ela-reactor";
 
 /// Test failpoint: refuse the next N admissions on a specific listener
 /// (the "cannot track this connection" path — the production analogues
@@ -125,6 +136,10 @@ struct Conn {
     /// back here so steady-state replies allocate nothing.
     scratch: Vec<u8>,
     close_after_write: bool,
+    /// The (read, write) interest currently registered with the waiter;
+    /// compared against [`desired_interest`] after every touch so the OS
+    /// set sees one syscall per actual transition, not per sweep.
+    interest: (bool, bool),
 }
 
 impl Conn {
@@ -136,6 +151,7 @@ impl Conn {
             out: None,
             scratch: Vec::new(),
             close_after_write: false,
+            interest: (true, false),
         }
     }
 
@@ -332,6 +348,21 @@ impl Conn {
     }
 }
 
+/// Where the state machine says the waiter should look next.  Write
+/// while a reply is queued (reads stay paused), read while collecting a
+/// frame, NOTHING while the frame is at a worker — the connection leaves
+/// the OS set entirely until its reply comes back (see `net/waiter.rs` on
+/// why level-triggered `HUP` makes "empty mask" insufficient).
+fn desired_interest(conn: &Conn) -> (bool, bool) {
+    if conn.out.is_some() {
+        (false, true)
+    } else if conn.close_after_write {
+        (false, false)
+    } else {
+        (!matches!(conn.read, ReadState::Dispatched), false)
+    }
+}
+
 /// The running reactor's threads and gauges, held by `ServerHandle`.
 pub(crate) struct Parts {
     pub reactor: std::thread::JoinHandle<()>,
@@ -340,6 +371,9 @@ pub(crate) struct Parts {
     pub active: Arc<AtomicUsize>,
     /// Worker threads currently alive (0 after a completed `stop`).
     pub live_workers: Arc<AtomicUsize>,
+    /// Which waiter backend the poll loop runs on ("epoll", "kqueue",
+    /// "sweep"), after `Auto`/env resolution.
+    pub backend: &'static str,
 }
 
 /// Spawn the poll loop plus `workers` fold threads over a bound listener.
@@ -347,10 +381,14 @@ pub(crate) fn spawn<H: Handler>(
     listener: TcpListener,
     handler: Arc<H>,
     workers: usize,
+    waiter_kind: WaiterKind,
     counters: Counters,
     stop: Arc<AtomicBool>,
 ) -> std::io::Result<Parts> {
     listener.set_nonblocking(true)?;
+    let mut waiter = Waiter::new(waiter_kind)?;
+    let backend = waiter.backend_name();
+    let notifier = waiter.notifier();
     #[cfg(test)]
     let local = listener.local_addr().map(|a| a.to_string()).unwrap_or_default();
     let active = Arc::new(AtomicUsize::new(0));
@@ -366,6 +404,7 @@ pub(crate) fn spawn<H: Handler>(
         let tx = done_tx.clone();
         let handler = handler.clone();
         let live = live_workers.clone();
+        let notifier = notifier.clone();
         live.fetch_add(1, Ordering::AcqRel);
         worker_handles.push(std::thread::spawn(move || {
             loop {
@@ -379,6 +418,8 @@ pub(crate) fn spawn<H: Handler>(
                 if tx.send(Done { conn: job.conn, buf: job.buf, reply }).is_err() {
                     break; // reactor gone: reply has nowhere to go
                 }
+                // Wake the poll loop: a completion is waiting on done_rx.
+                notifier.notify();
             }
             live.fetch_sub(1, Ordering::AcqRel);
         }));
@@ -387,101 +428,167 @@ pub(crate) fn spawn<H: Handler>(
 
     let reactor = {
         let active = active.clone();
-        std::thread::spawn(move || {
-            let mut conns: HashMap<u64, Conn> = HashMap::new();
-            let mut next_id = 0u64;
-            let mut dead: Vec<u64> = Vec::new();
-            while !stop.load(Ordering::Acquire) {
-                let mut progress = false;
+        std::thread::Builder::new()
+            .name(REACTOR_THREAD_NAME.into())
+            .spawn(move || {
+                let mut conns: HashMap<u64, Conn> = HashMap::new();
+                let mut next_id = 0u64;
+                let mut dead: Vec<u64> = Vec::new();
+                let mut events: Vec<WaitEvent> = Vec::new();
+                let mut touched: Vec<u64> = Vec::new();
+                if waiter.register(sock_fd(&listener), TOKEN_LISTENER, true, false).is_err() {
+                    // A listener the waiter cannot watch serves nothing:
+                    // bail out — dropping job_tx lets the workers drain
+                    // and exit, and stop() still joins everything.
+                    return;
+                }
+                let mut idle = false;
+                while !stop.load(Ordering::Acquire) {
+                    events.clear();
+                    if waiter.wait(&mut events, Some(WAIT_CAP), idle).is_err() {
+                        // Kernel queue gone bad (EBADF after fd exhaustion,
+                        // …): nothing useful left to wait on.
+                        break;
+                    }
+                    let mut progress = false;
 
-                // 1) admit new connections (track-or-refuse: a connection
-                //    the loop cannot poll is shut down, never served)
-                loop {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            progress = true;
-                            #[cfg(test)]
-                            if REFUSE_ADMITS.take(&local) {
-                                let _ = stream.shutdown(Shutdown::Both);
-                                continue;
+                    // 1) worker completions: reply queued, pooled buffer
+                    //    home, flush attempted immediately (the socket is
+                    //    almost always writable here — no extra wait).
+                    while let Ok(done) = done_rx.try_recv() {
+                        progress = true;
+                        if let Some(conn) = conns.get_mut(&done.conn) {
+                            conn.buf = done.buf;
+                            conn.queue_reply(done.reply);
+                            match conn.pump_write(&counters) {
+                                Ok(_) => touched.push(done.conn),
+                                Err(()) => dead.push(done.conn),
                             }
-                            if stream.set_nonblocking(true).is_err()
-                                || stream.set_nodelay(true).is_err()
-                            {
-                                let _ = stream.shutdown(Shutdown::Both);
-                                continue;
-                            }
-                            counters.connections.fetch_add(1, Ordering::Relaxed);
-                            active.fetch_add(1, Ordering::AcqRel);
-                            conns.insert(next_id, Conn::new(stream));
-                            next_id += 1;
                         }
-                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-                        Err(e) if wants_retry(e.kind()) => continue,
-                        Err(_) => break,
                     }
-                }
 
-                // 2) worker completions: reply queued, pooled buffer home
-                while let Ok(done) = done_rx.try_recv() {
-                    progress = true;
-                    if let Some(conn) = conns.get_mut(&done.conn) {
-                        conn.buf = done.buf;
-                        conn.queue_reply(done.reply);
-                    }
-                }
-
-                // 3) per-connection IO sweep
-                for (&id, conn) in conns.iter_mut() {
-                    match conn.pump_write(&counters) {
-                        Ok(p) => progress |= p,
-                        Err(()) => {
-                            dead.push(id);
+                    // 2) readiness events
+                    for ev in events.drain(..) {
+                        if ev.token == TOKEN_LISTENER {
+                            // admit new connections (track-or-refuse: a
+                            // connection the loop cannot poll is shut
+                            // down, never served)
+                            loop {
+                                match listener.accept() {
+                                    Ok((stream, _)) => {
+                                        progress = true;
+                                        #[cfg(test)]
+                                        if REFUSE_ADMITS.take(&local) {
+                                            let _ = stream.shutdown(Shutdown::Both);
+                                            continue;
+                                        }
+                                        if stream.set_nonblocking(true).is_err()
+                                            || stream.set_nodelay(true).is_err()
+                                        {
+                                            let _ = stream.shutdown(Shutdown::Both);
+                                            continue;
+                                        }
+                                        let fd = sock_fd(&stream);
+                                        if waiter
+                                            .register(fd, next_id, true, false)
+                                            .is_err()
+                                        {
+                                            let _ = stream.shutdown(Shutdown::Both);
+                                            continue;
+                                        }
+                                        counters.connections.fetch_add(1, Ordering::Relaxed);
+                                        active.fetch_add(1, Ordering::AcqRel);
+                                        conns.insert(next_id, Conn::new(stream));
+                                        next_id += 1;
+                                    }
+                                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                                    Err(e) if wants_retry(e.kind()) => continue,
+                                    Err(_) => break,
+                                }
+                            }
                             continue;
                         }
-                    }
-                    if conn.out.is_some() || conn.close_after_write {
-                        continue; // reply still in flight: reads stay paused
-                    }
-                    match conn.pump_read(&counters) {
-                        ReadOutcome::Idle => {}
-                        ReadOutcome::Progress => progress = true,
-                        ReadOutcome::Dispatch(tag) => {
-                            progress = true;
-                            conn.read = ReadState::Dispatched;
-                            let buf = std::mem::take(&mut conn.buf);
-                            counters
-                                .bytes_in
-                                .fetch_add(5 + buf.len() as u64, Ordering::Relaxed);
-                            counters.requests.fetch_add(1, Ordering::Relaxed);
-                            if job_tx.send(Job { conn: id, tag, buf }).is_err() {
-                                dead.push(id);
+                        let id = ev.token;
+                        let Some(conn) = conns.get_mut(&id) else {
+                            continue; // reaped earlier this iteration
+                        };
+                        if ev.writable {
+                            match conn.pump_write(&counters) {
+                                Ok(p) => progress |= p,
+                                Err(()) => {
+                                    dead.push(id);
+                                    continue;
+                                }
                             }
                         }
-                        ReadOutcome::Closed => dead.push(id),
+                        if ev.readable && conn.out.is_none() && !conn.close_after_write {
+                            match conn.pump_read(&counters) {
+                                ReadOutcome::Idle => {}
+                                ReadOutcome::Progress => progress = true,
+                                ReadOutcome::Dispatch(tag) => {
+                                    progress = true;
+                                    conn.read = ReadState::Dispatched;
+                                    let buf = std::mem::take(&mut conn.buf);
+                                    counters
+                                        .bytes_in
+                                        .fetch_add(5 + buf.len() as u64, Ordering::Relaxed);
+                                    counters.requests.fetch_add(1, Ordering::Relaxed);
+                                    if job_tx.send(Job { conn: id, tag, buf }).is_err() {
+                                        dead.push(id);
+                                        continue;
+                                    }
+                                }
+                                ReadOutcome::Closed => {
+                                    dead.push(id);
+                                    continue;
+                                }
+                            }
+                        }
+                        touched.push(id);
                     }
-                }
-                for id in dead.drain(..) {
-                    if let Some(conn) = conns.remove(&id) {
-                        let _ = conn.stream.shutdown(Shutdown::Both);
-                        active.fetch_sub(1, Ordering::AcqRel);
-                    }
-                }
 
-                if !progress {
-                    std::thread::sleep(IDLE_PARK);
+                    // 3) re-register interest where the state machine
+                    //    moved (one syscall per transition, none per
+                    //    steady-state event)
+                    for id in touched.drain(..) {
+                        if dead.contains(&id) {
+                            continue;
+                        }
+                        if let Some(conn) = conns.get_mut(&id) {
+                            let want = desired_interest(conn);
+                            if want != conn.interest {
+                                let fd = sock_fd(&conn.stream);
+                                if waiter.modify(fd, id, want.0, want.1).is_err() {
+                                    dead.push(id);
+                                } else {
+                                    conn.interest = want;
+                                }
+                            }
+                        }
+                    }
+
+                    // 4) reap
+                    for id in dead.drain(..) {
+                        if let Some(conn) = conns.remove(&id) {
+                            waiter.deregister(sock_fd(&conn.stream), id);
+                            let _ = conn.stream.shutdown(Shutdown::Both);
+                            active.fetch_sub(1, Ordering::AcqRel);
+                        }
+                    }
+
+                    idle = !progress;
                 }
-            }
-            // Stop: shut every tracked socket down.  Dropping `job_tx`
-            // (with this closure) disconnects the job channel; workers
-            // drain whatever was queued, then exit — `stop()` joins them,
-            // so no fold thread outlives the handle.
-            for (_, conn) in conns.drain() {
-                let _ = conn.stream.shutdown(Shutdown::Both);
-                active.fetch_sub(1, Ordering::AcqRel);
-            }
-        })
+                // Stop: shut every tracked socket down.  Dropping `job_tx`
+                // (with this closure) disconnects the job channel; workers
+                // drain whatever was queued, then exit — `stop()` joins
+                // them, so no fold thread outlives the handle.
+                for (_, conn) in conns.drain() {
+                    let _ = conn.stream.shutdown(Shutdown::Both);
+                    active.fetch_sub(1, Ordering::AcqRel);
+                }
+            })
+            .expect("spawn reactor thread")
     };
 
-    Ok(Parts { reactor, workers: worker_handles, active, live_workers })
+    Ok(Parts { reactor, workers: worker_handles, active, live_workers, backend })
 }

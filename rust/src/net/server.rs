@@ -69,6 +69,10 @@ pub struct ReactorConfig {
     /// `0` = one per available core.  Total server OS threads are
     /// `1 + workers`, independent of the connection count.
     pub workers: usize,
+    /// Readiness backend the poll loop waits on (default `Auto`: epoll on
+    /// Linux, kqueue on macOS/BSD, sweep elsewhere;
+    /// `ELASTIAGG_NO_EPOLL=1` forces sweep regardless).
+    pub waiter: super::waiter::WaiterKind,
 }
 
 impl ReactorConfig {
@@ -88,6 +92,8 @@ enum Backend {
         workers: Vec<std::thread::JoinHandle<()>>,
         active: Arc<std::sync::atomic::AtomicUsize>,
         live_workers: Arc<std::sync::atomic::AtomicUsize>,
+        /// Waiter backend name after `Auto`/env resolution.
+        waiter: &'static str,
     },
     Threaded {
         accept: Option<std::thread::JoinHandle<()>>,
@@ -118,6 +124,17 @@ pub struct ServerHandle {
 impl ServerHandle {
     pub fn addr(&self) -> &str {
         &self.addr
+    }
+
+    /// Which machinery serves this handle: `"epoll"`, `"kqueue"` or
+    /// `"sweep"` for the reactor's waiter backends (after `Auto` and
+    /// `ELASTIAGG_NO_EPOLL` resolution), `"threaded"` for the legacy
+    /// thread-per-connection backend.
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            Backend::Reactor { waiter, .. } => waiter,
+            Backend::Threaded { .. } => "threaded",
+        }
     }
 
     /// Connections currently tracked by the serving backend.
@@ -245,6 +262,7 @@ impl NetServer {
             listener,
             handler,
             cfg.resolved_workers(),
+            cfg.waiter,
             counters.clone(),
             stop.clone(),
         )?;
@@ -256,6 +274,7 @@ impl NetServer {
                 workers: parts.workers,
                 active: parts.active,
                 live_workers: parts.live_workers,
+                waiter: parts.backend,
             },
             connections: counters.connections,
             requests: counters.requests,
@@ -642,8 +661,12 @@ mod tests {
         // 64 short-lived connections through a ONE-worker reactor: every
         // request is served (the pool is a queue, not a drop gate), and
         // stop() leaves zero workers alive.
-        let mut handle =
-            NetServer::serve_with("127.0.0.1:0", echo(), ReactorConfig { workers: 1 }).unwrap();
+        let mut handle = NetServer::serve_with(
+            "127.0.0.1:0",
+            echo(),
+            ReactorConfig { workers: 1, ..ReactorConfig::default() },
+        )
+        .unwrap();
         assert_eq!(handle.live_workers(), 1);
         for round in 0..64 {
             let mut c = NetClient::connect(handle.addr()).unwrap();

@@ -1,0 +1,623 @@
+//! Readiness waiter for the reactor: who tells the poll loop a socket is
+//! ready, and how cheap is an idle fleet.
+//!
+//! The reactor (see `net/reactor.rs`) drives per-connection frame state
+//! machines; *this* module owns the question "which connections should it
+//! look at next".  Three backends, one interface:
+//!
+//! * **epoll** (Linux) — the kernel event queue.  The loop wakes on
+//!   O(ready) events instead of probing O(connections) sockets, so an
+//!   idle fleet costs the poll thread ~nothing.  Level-triggered, to
+//!   match the state machines' "pump until `WouldBlock`" contract.
+//! * **kqueue** (macOS/FreeBSD/OpenBSD/DragonFly) — same shape via
+//!   `kevent`.
+//! * **sweep** — the portable fallback: every registered token is
+//!   reported ready on every wait, reproducing the original polling
+//!   sweep (including its 300µs idle park) exactly.  This is what ships
+//!   on platforms without an OS event queue, and what
+//!   `ELASTIAGG_NO_EPOLL=1` forces everywhere.
+//!
+//! Registration tracks *interest*, not just membership: read-interest
+//! while a connection is collecting header/payload bytes, write-interest
+//! only while its reply outbox is non-empty, and **no** interest while a
+//! frame is at a worker (implemented as removal from the OS set — a
+//! level-triggered queue reports `HUP`/`ERR` regardless of the requested
+//! mask, so a dead client with a frame in flight would otherwise spin the
+//! loop).  Worker→loop completion notifications ride an eventfd (Linux) /
+//! self-pipe (BSD) registered like any other fd, or an atomic flag that
+//! skips the sweep's park.
+//!
+//! [`TimerDriver`] is the time half of the same story: round deadlines,
+//! the quorum wait's evict cadence and the async-round cadence all block
+//! on one condvar that ingest paths poke, replacing the 2ms sleep-polls
+//! that used to live in `server/`.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// `ELASTIAGG_NO_EPOLL=1` (any value but `0`/empty) forces the portable
+/// sweep backend regardless of platform or configuration.
+pub const NO_EPOLL_ENV: &str = "ELASTIAGG_NO_EPOLL";
+
+/// Token the reactor registers its listener under (connection ids count
+/// up from zero and can never collide with it).
+pub(crate) const TOKEN_LISTENER: u64 = u64::MAX;
+/// Token the OS backends register their internal notify fd under; drained
+/// inside [`Waiter::wait`], never surfaced to the reactor.
+pub(crate) const TOKEN_NOTIFY: u64 = u64::MAX - 1;
+
+/// How long the sweep backend parks when a wait finds the loop idle.
+/// Sub-millisecond: idle cost is a few wakeups/ms on one thread; latency
+/// cost is bounded by this.  The OS backends do not park — they block in
+/// the kernel until something is actually ready.
+pub(crate) const IDLE_PARK: Duration = Duration::from_micros(300);
+
+/// Which readiness backend the reactor waits on.  `Auto` picks the OS
+/// event queue where one exists and the sweep elsewhere.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WaiterKind {
+    /// epoll on Linux, kqueue on macOS/BSD, sweep elsewhere.
+    #[default]
+    Auto,
+    /// The portable polling sweep (the pre-waiter reactor behaviour).
+    Sweep,
+    /// Linux `epoll` (errors at serve time on other platforms).
+    Epoll,
+    /// macOS/BSD `kqueue` (errors at serve time on other platforms).
+    Kqueue,
+}
+
+impl WaiterKind {
+    /// Parse a config token; `None` for anything unrecognised (the config
+    /// layer keeps its default in that case).
+    pub fn parse(s: &str) -> Option<WaiterKind> {
+        match s {
+            "auto" => Some(WaiterKind::Auto),
+            "sweep" => Some(WaiterKind::Sweep),
+            "epoll" => Some(WaiterKind::Epoll),
+            "kqueue" => Some(WaiterKind::Kqueue),
+            _ => None,
+        }
+    }
+
+    /// The canonical config token for this kind.
+    pub fn token(&self) -> &'static str {
+        match self {
+            WaiterKind::Auto => "auto",
+            WaiterKind::Sweep => "sweep",
+            WaiterKind::Epoll => "epoll",
+            WaiterKind::Kqueue => "kqueue",
+        }
+    }
+
+    /// Every backend this build can instantiate on this platform.  Used
+    /// by the digest-parity tests to replay one scenario over all of
+    /// them.  (`ELASTIAGG_NO_EPOLL` downgrades the OS backends to sweep
+    /// at construction, so parity under that env var is trivial.)
+    pub fn compiled_in() -> &'static [WaiterKind] {
+        #[cfg(target_os = "linux")]
+        {
+            &[WaiterKind::Sweep, WaiterKind::Epoll]
+        }
+        #[cfg(any(
+            target_os = "macos",
+            target_os = "freebsd",
+            target_os = "openbsd",
+            target_os = "dragonfly"
+        ))]
+        {
+            &[WaiterKind::Sweep, WaiterKind::Kqueue]
+        }
+        #[cfg(not(any(
+            target_os = "linux",
+            target_os = "macos",
+            target_os = "freebsd",
+            target_os = "openbsd",
+            target_os = "dragonfly"
+        )))]
+        {
+            &[WaiterKind::Sweep]
+        }
+    }
+}
+
+/// `ELASTIAGG_NO_EPOLL` semantics shared with the kernels' `NO_SIMD`
+/// escape hatch: set and neither empty nor `"0"`.
+fn env_truthy(v: Option<&str>) -> bool {
+    v.map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+fn forced_sweep() -> bool {
+    env_truthy(std::env::var(NO_EPOLL_ENV).ok().as_deref())
+}
+
+/// One readiness report: `token` is whatever the caller registered the
+/// fd under.  Error/hangup conditions surface as readable *and* writable
+/// so whichever pump runs next observes the failure and reaps the
+/// connection.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct WaitEvent {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// The raw fd of a socket, for waiter registration.  On non-unix targets
+/// only the sweep backend exists and the fd is never consulted.
+#[cfg(unix)]
+pub(crate) fn sock_fd<T: std::os::fd::AsRawFd>(s: &T) -> i32 {
+    s.as_raw_fd()
+}
+#[cfg(not(unix))]
+pub(crate) fn sock_fd<T>(_s: &T) -> i32 {
+    -1
+}
+
+/// A cheap, cloneable handle workers use to wake the poll loop after
+/// sending a completion.
+#[derive(Clone)]
+pub(crate) enum Notifier {
+    /// Sweep: skip the next idle park.
+    Flag(Arc<AtomicBool>),
+    #[cfg(target_os = "linux")]
+    Eventfd(Arc<super::waiter_epoll::EventFd>),
+    #[cfg(any(
+        target_os = "macos",
+        target_os = "freebsd",
+        target_os = "openbsd",
+        target_os = "dragonfly"
+    ))]
+    Pipe(Arc<super::waiter_kqueue::PipePair>),
+}
+
+impl Notifier {
+    pub fn notify(&self) {
+        match self {
+            Notifier::Flag(flag) => flag.store(true, Ordering::Release),
+            #[cfg(target_os = "linux")]
+            Notifier::Eventfd(fd) => fd.signal(),
+            #[cfg(any(
+                target_os = "macos",
+                target_os = "freebsd",
+                target_os = "openbsd",
+                target_os = "dragonfly"
+            ))]
+            Notifier::Pipe(p) => p.signal(),
+        }
+    }
+}
+
+/// The portable fallback: every wait reports every registered token ready
+/// per its interest, so the reactor probes exactly what the pre-waiter
+/// sweep probed.  `wait` parks [`IDLE_PARK`] when the previous sweep made
+/// no progress and no worker poked the flag — the original idle
+/// behaviour, bit for bit.
+pub(crate) struct SweepWaiter {
+    /// token → (read, write) interest.  BTreeMap so the sweep order is
+    /// deterministic.
+    interest: BTreeMap<u64, (bool, bool)>,
+    poked: Arc<AtomicBool>,
+}
+
+impl SweepWaiter {
+    fn new() -> SweepWaiter {
+        SweepWaiter { interest: BTreeMap::new(), poked: Arc::new(AtomicBool::new(false)) }
+    }
+
+    fn wait(&mut self, events: &mut Vec<WaitEvent>, timeout: Option<Duration>, idle: bool) {
+        if idle && !self.poked.swap(false, Ordering::AcqRel) {
+            let nap = timeout.map_or(IDLE_PARK, |t| t.min(IDLE_PARK));
+            if !nap.is_zero() {
+                std::thread::sleep(nap);
+            }
+        }
+        for (&token, &(read, write)) in &self.interest {
+            if read || write {
+                events.push(WaitEvent { token, readable: read, writable: write });
+            }
+        }
+    }
+}
+
+/// The reactor's readiness source.  Construct with [`Waiter::new`]; the
+/// chosen backend is fixed for the server's lifetime and exposed through
+/// `ServerHandle::backend_name`.
+pub(crate) enum Waiter {
+    Sweep(SweepWaiter),
+    #[cfg(target_os = "linux")]
+    Epoll(super::waiter_epoll::EpollWaiter),
+    #[cfg(any(
+        target_os = "macos",
+        target_os = "freebsd",
+        target_os = "openbsd",
+        target_os = "dragonfly"
+    ))]
+    Kqueue(super::waiter_kqueue::KqueueWaiter),
+}
+
+impl Waiter {
+    /// Instantiate `kind`.  `Auto` resolves to the platform's OS event
+    /// queue, falling back to sweep if the kernel refuses (fd pressure)
+    /// or `ELASTIAGG_NO_EPOLL` is set; explicitly requesting a backend
+    /// the platform lacks is an error (a config typo should not silently
+    /// change the measured backend).
+    pub fn new(kind: WaiterKind) -> io::Result<Waiter> {
+        let kind = if forced_sweep() { WaiterKind::Sweep } else { kind };
+        match kind {
+            WaiterKind::Sweep => Ok(Waiter::Sweep(SweepWaiter::new())),
+            WaiterKind::Auto => {
+                #[cfg(target_os = "linux")]
+                {
+                    return Ok(match super::waiter_epoll::EpollWaiter::new() {
+                        Ok(w) => Waiter::Epoll(w),
+                        Err(_) => Waiter::Sweep(SweepWaiter::new()),
+                    });
+                }
+                #[cfg(any(
+                    target_os = "macos",
+                    target_os = "freebsd",
+                    target_os = "openbsd",
+                    target_os = "dragonfly"
+                ))]
+                {
+                    return Ok(match super::waiter_kqueue::KqueueWaiter::new() {
+                        Ok(w) => Waiter::Kqueue(w),
+                        Err(_) => Waiter::Sweep(SweepWaiter::new()),
+                    });
+                }
+                #[allow(unreachable_code)]
+                Ok(Waiter::Sweep(SweepWaiter::new()))
+            }
+            WaiterKind::Epoll => {
+                #[cfg(target_os = "linux")]
+                {
+                    return super::waiter_epoll::EpollWaiter::new().map(Waiter::Epoll);
+                }
+                #[allow(unreachable_code)]
+                Err(io::Error::new(
+                    io::ErrorKind::Unsupported,
+                    "epoll waiter requires Linux",
+                ))
+            }
+            WaiterKind::Kqueue => {
+                #[cfg(any(
+                    target_os = "macos",
+                    target_os = "freebsd",
+                    target_os = "openbsd",
+                    target_os = "dragonfly"
+                ))]
+                {
+                    return super::waiter_kqueue::KqueueWaiter::new().map(Waiter::Kqueue);
+                }
+                #[allow(unreachable_code)]
+                Err(io::Error::new(
+                    io::ErrorKind::Unsupported,
+                    "kqueue waiter requires macOS/BSD",
+                ))
+            }
+        }
+    }
+
+    /// Which backend actually runs (after `Auto`/env resolution).
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            Waiter::Sweep(_) => "sweep",
+            #[cfg(target_os = "linux")]
+            Waiter::Epoll(_) => "epoll",
+            #[cfg(any(
+                target_os = "macos",
+                target_os = "freebsd",
+                target_os = "openbsd",
+                target_os = "dragonfly"
+            ))]
+            Waiter::Kqueue(_) => "kqueue",
+        }
+    }
+
+    /// A handle for worker threads to wake the poll loop.
+    pub fn notifier(&self) -> Notifier {
+        match self {
+            Waiter::Sweep(s) => Notifier::Flag(s.poked.clone()),
+            #[cfg(target_os = "linux")]
+            Waiter::Epoll(e) => Notifier::Eventfd(e.notifier()),
+            #[cfg(any(
+                target_os = "macos",
+                target_os = "freebsd",
+                target_os = "openbsd",
+                target_os = "dragonfly"
+            ))]
+            Waiter::Kqueue(k) => Notifier::Pipe(k.notifier()),
+        }
+    }
+
+    /// Start watching `fd` under `token` with the given interest.
+    pub fn register(&mut self, fd: i32, token: u64, read: bool, write: bool) -> io::Result<()> {
+        self.set_interest(fd, token, read, write)
+    }
+
+    /// Change an already-registered fd's interest.  `(false, false)`
+    /// removes it from the OS set (see the module docs on `HUP`).
+    pub fn modify(&mut self, fd: i32, token: u64, read: bool, write: bool) -> io::Result<()> {
+        self.set_interest(fd, token, read, write)
+    }
+
+    fn set_interest(&mut self, fd: i32, token: u64, read: bool, write: bool) -> io::Result<()> {
+        match self {
+            Waiter::Sweep(s) => {
+                if read || write {
+                    s.interest.insert(token, (read, write));
+                } else {
+                    s.interest.remove(&token);
+                }
+                Ok(())
+            }
+            #[cfg(target_os = "linux")]
+            Waiter::Epoll(e) => e.set_interest(fd, token, read, write),
+            #[cfg(any(
+                target_os = "macos",
+                target_os = "freebsd",
+                target_os = "openbsd",
+                target_os = "dragonfly"
+            ))]
+            Waiter::Kqueue(k) => k.set_interest(fd, token, read, write),
+        }
+    }
+
+    /// Stop watching `fd` entirely (connection reaped).
+    pub fn deregister(&mut self, fd: i32, token: u64) {
+        match self {
+            Waiter::Sweep(s) => {
+                s.interest.remove(&token);
+            }
+            #[cfg(target_os = "linux")]
+            Waiter::Epoll(e) => e.deregister(fd, token),
+            #[cfg(any(
+                target_os = "macos",
+                target_os = "freebsd",
+                target_os = "openbsd",
+                target_os = "dragonfly"
+            ))]
+            Waiter::Kqueue(k) => k.deregister(fd, token),
+        }
+    }
+
+    /// Block until something is ready (or `timeout`), appending readiness
+    /// reports to `events`.  `idle` tells the sweep backend the previous
+    /// iteration made no progress (its cue to park); the OS backends
+    /// ignore it — they block in the kernel either way.  `EINTR` returns
+    /// an empty event set, not an error.
+    pub fn wait(
+        &mut self,
+        events: &mut Vec<WaitEvent>,
+        timeout: Option<Duration>,
+        idle: bool,
+    ) -> io::Result<()> {
+        match self {
+            Waiter::Sweep(s) => {
+                s.wait(events, timeout, idle);
+                Ok(())
+            }
+            #[cfg(target_os = "linux")]
+            Waiter::Epoll(e) => e.wait(events, timeout),
+            #[cfg(any(
+                target_os = "macos",
+                target_os = "freebsd",
+                target_os = "openbsd",
+                target_os = "dragonfly"
+            ))]
+            Waiter::Kqueue(k) => k.wait(events, timeout),
+        }
+    }
+}
+
+/// One condvar for every time-driven duty in the round drivers: round
+/// deadlines, the quorum wait's evict cadence, the async-round publish
+/// cadence.  Ingest paths [`notify`](TimerDriver::notify) it; waiters
+/// capture the [`generation`](TimerDriver::generation) *before* checking
+/// their predicate and then [`wait_until`](TimerDriver::wait_until) a
+/// deadline, so a notify that lands between the check and the wait is
+/// never lost.  This replaces the 2ms `sleep` polls the round drivers
+/// used to spin on.
+#[derive(Debug, Default)]
+pub struct TimerDriver {
+    generation: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl TimerDriver {
+    pub fn new() -> TimerDriver {
+        TimerDriver::default()
+    }
+
+    /// The current notify generation.  Capture it BEFORE checking the
+    /// condition you are about to wait on.
+    pub fn generation(&self) -> u64 {
+        *self.generation.lock().unwrap()
+    }
+
+    /// Wake every waiter (something observable changed: an update was
+    /// ingested, a buffer filled, a party was admitted).
+    pub fn notify(&self) {
+        let mut gen = self.generation.lock().unwrap();
+        *gen = gen.wrapping_add(1);
+        self.cv.notify_all();
+    }
+
+    /// Block until `deadline` passes or the generation moves past `seen`.
+    /// Returns `true` when woken by a notify, `false` on deadline.
+    pub fn wait_until(&self, deadline: Instant, seen: u64) -> bool {
+        let mut gen = self.generation.lock().unwrap();
+        while *gen == seen {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.cv.wait_timeout(gen, deadline - now).unwrap();
+            gen = guard;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_tokens_roundtrip() {
+        for kind in
+            [WaiterKind::Auto, WaiterKind::Sweep, WaiterKind::Epoll, WaiterKind::Kqueue]
+        {
+            assert_eq!(WaiterKind::parse(kind.token()), Some(kind));
+        }
+        assert_eq!(WaiterKind::parse("select"), None);
+        assert_eq!(WaiterKind::parse(""), None);
+    }
+
+    #[test]
+    fn compiled_in_always_includes_sweep() {
+        let kinds = WaiterKind::compiled_in();
+        assert!(kinds.contains(&WaiterKind::Sweep));
+        assert!(!kinds.contains(&WaiterKind::Auto), "Auto is a request, not a backend");
+        #[cfg(target_os = "linux")]
+        assert!(kinds.contains(&WaiterKind::Epoll));
+    }
+
+    #[test]
+    fn env_gate_parses_like_no_simd() {
+        assert!(!env_truthy(None));
+        assert!(!env_truthy(Some("")));
+        assert!(!env_truthy(Some("0")));
+        assert!(env_truthy(Some("1")));
+        assert!(env_truthy(Some("yes")));
+    }
+
+    #[test]
+    fn sweep_reports_interest_and_forgets_deregistered_tokens() {
+        let mut w = Waiter::new(WaiterKind::Sweep).unwrap();
+        assert_eq!(w.backend_name(), "sweep");
+        w.register(-1, 7, true, false).unwrap();
+        w.register(-1, 9, false, true).unwrap();
+        w.register(-1, 11, false, false).unwrap(); // no interest: invisible
+        let mut events = Vec::new();
+        w.wait(&mut events, Some(Duration::ZERO), false).unwrap();
+        let mut seen: Vec<(u64, bool, bool)> =
+            events.iter().map(|e| (e.token, e.readable, e.writable)).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![(7, true, false), (9, false, true)]);
+
+        w.modify(-1, 7, false, false).unwrap(); // interest withdrawn
+        w.deregister(-1, 9);
+        events.clear();
+        w.wait(&mut events, Some(Duration::ZERO), false).unwrap();
+        assert!(events.is_empty());
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_waiter_reports_listener_readiness() {
+        use std::io::Write;
+        use std::net::{TcpListener, TcpStream};
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut w = match Waiter::new(WaiterKind::Epoll) {
+            Ok(w) => w,
+            // ELASTIAGG_NO_EPOLL in the environment downgrades to sweep;
+            // the parity tests cover that configuration.
+            Err(_) => return,
+        };
+        if w.backend_name() != "epoll" {
+            return;
+        }
+        w.register(sock_fd(&listener), TOKEN_LISTENER, true, false).unwrap();
+
+        // Nothing pending: the wait times out with no events.
+        let mut events = Vec::new();
+        w.wait(&mut events, Some(Duration::from_millis(10)), false).unwrap();
+        assert!(events.is_empty(), "idle listener produced {events:?}");
+
+        // A pending connection: the listener token turns readable.
+        let mut client = TcpStream::connect(addr).unwrap();
+        client.write_all(&[0u8]).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut readable = false;
+        while Instant::now() < deadline && !readable {
+            events.clear();
+            w.wait(&mut events, Some(Duration::from_millis(50)), false).unwrap();
+            readable = events.iter().any(|e| e.token == TOKEN_LISTENER && e.readable);
+        }
+        assert!(readable, "pending accept never surfaced through epoll");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_notifier_wakes_a_blocked_wait() {
+        let mut w = match Waiter::new(WaiterKind::Epoll) {
+            Ok(w) => w,
+            Err(_) => return,
+        };
+        if w.backend_name() != "epoll" {
+            return;
+        }
+        let notifier = w.notifier();
+        let poker = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            notifier.notify();
+        });
+        let t0 = Instant::now();
+        let mut events = Vec::new();
+        // Block far past the poke: the eventfd must cut the wait short.
+        w.wait(&mut events, Some(Duration::from_secs(10)), false).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "notify did not wake the epoll wait"
+        );
+        assert!(events.is_empty(), "the notify token leaked to the caller: {events:?}");
+        poker.join().unwrap();
+    }
+
+    #[test]
+    fn timer_driver_notify_wakes_before_deadline() {
+        let timer = Arc::new(TimerDriver::new());
+        let gen = timer.generation();
+        let poker = {
+            let timer = timer.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                timer.notify();
+            })
+        };
+        let t0 = Instant::now();
+        let woken = timer.wait_until(Instant::now() + Duration::from_secs(10), gen);
+        assert!(woken, "notify must report as a wake, not a timeout");
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        poker.join().unwrap();
+    }
+
+    #[test]
+    fn timer_driver_times_out_without_notify() {
+        let timer = TimerDriver::new();
+        let gen = timer.generation();
+        let deadline = Instant::now() + Duration::from_millis(20);
+        assert!(!timer.wait_until(deadline, gen));
+        assert!(Instant::now() >= deadline);
+    }
+
+    #[test]
+    fn timer_driver_never_loses_a_notify_between_check_and_wait() {
+        // The protocol: capture generation, THEN check the predicate, THEN
+        // wait.  A notify that lands after the capture must wake the wait
+        // immediately even though it fired "before" wait_until ran.
+        let timer = TimerDriver::new();
+        let gen = timer.generation();
+        timer.notify(); // lands between capture and wait
+        let t0 = Instant::now();
+        assert!(timer.wait_until(Instant::now() + Duration::from_secs(10), gen));
+        assert!(t0.elapsed() < Duration::from_secs(1), "stale-generation wake was lost");
+    }
+}

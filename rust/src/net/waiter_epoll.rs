@@ -1,0 +1,214 @@
+//! Linux epoll backend for the reactor's [`Waiter`](super::waiter::Waiter).
+//!
+//! The repo carries zero dependencies, so this is a minimal hand-written
+//! FFI shim over the four syscall wrappers libc exports on every Linux
+//! target (`epoll_create1`/`epoll_ctl`/`epoll_wait`/`eventfd`) plus
+//! `read`/`write`/`close` — the ABI is stable and identical across
+//! glibc/musl.  Level-triggered on purpose: the reactor's pumps read and
+//! write until `WouldBlock`, so "still ready" must keep reporting until
+//! the socket actually drains — exactly level semantics, and the reason
+//! the sweep backend and this one can share one state machine.
+//!
+//! Interest bookkeeping: a token with no interest is REMOVED from the
+//! epoll set (`EPOLL_CTL_DEL`), not left in with an empty mask — epoll
+//! always reports `EPOLLHUP`/`EPOLLERR` regardless of the requested mask,
+//! so a client that dies while its frame is at a worker would otherwise
+//! wake the loop in a hot spin until the reply came back.
+
+use std::collections::HashSet;
+use std::io;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::waiter::{WaitEvent, TOKEN_NOTIFY};
+
+const EPOLLIN: u32 = 0x001;
+const EPOLLOUT: u32 = 0x004;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+
+/// `O_CLOEXEC`; `EPOLL_CLOEXEC` and `EFD_CLOEXEC` alias it.
+const CLOEXEC: i32 = 0o2000000;
+/// `O_NONBLOCK`; `EFD_NONBLOCK` aliases it.
+const NONBLOCK: i32 = 0o4000;
+
+/// Mirrors `struct epoll_event`.  On x86 the kernel ABI packs it (no
+/// padding between the 32-bit mask and the 64-bit data); other
+/// architectures use natural alignment.
+#[cfg_attr(any(target_arch = "x86", target_arch = "x86_64"), repr(C, packed))]
+#[cfg_attr(not(any(target_arch = "x86", target_arch = "x86_64")), repr(C))]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout_ms: i32) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    fn close(fd: i32) -> i32;
+}
+
+/// A nonblocking eventfd: workers `signal` it after sending a completion,
+/// the poll loop drains it inside `wait`.  The counter coalesces — any
+/// number of signals between waits is one wakeup.
+pub(crate) struct EventFd(i32);
+
+impl EventFd {
+    fn new() -> io::Result<EventFd> {
+        let fd = unsafe { eventfd(0, CLOEXEC | NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(EventFd(fd))
+    }
+
+    pub(crate) fn signal(&self) {
+        let one: u64 = 1;
+        // EAGAIN (counter saturated) means a wakeup is already pending —
+        // exactly what we wanted; nothing to handle.
+        let _ = unsafe { write(self.0, (&one as *const u64).cast(), 8) };
+    }
+
+    fn drain(&self) {
+        let mut buf = [0u8; 8];
+        while unsafe { read(self.0, buf.as_mut_ptr(), 8) } == 8 {}
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        let _ = unsafe { close(self.0) };
+    }
+}
+
+pub(crate) struct EpollWaiter {
+    epfd: i32,
+    notify: Arc<EventFd>,
+    /// Tokens currently in the kernel set — decides ADD vs MOD vs DEL.
+    registered: HashSet<u64>,
+}
+
+impl EpollWaiter {
+    pub(crate) fn new() -> io::Result<EpollWaiter> {
+        let epfd = unsafe { epoll_create1(CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let notify = match EventFd::new() {
+            Ok(fd) => Arc::new(fd),
+            Err(e) => {
+                let _ = unsafe { close(epfd) };
+                return Err(e);
+            }
+        };
+        let w = EpollWaiter { epfd, notify, registered: HashSet::new() };
+        // On error, Drop closes both fds.
+        w.ctl(EPOLL_CTL_ADD, w.notify.0, TOKEN_NOTIFY, EPOLLIN)?;
+        Ok(w)
+    }
+
+    pub(crate) fn notifier(&self) -> Arc<EventFd> {
+        self.notify.clone()
+    }
+
+    fn ctl(&self, op: i32, fd: i32, token: u64, mask: u32) -> io::Result<()> {
+        let mut ev = EpollEvent { events: mask, data: token };
+        if unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) } < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(())
+        }
+    }
+
+    pub(crate) fn set_interest(
+        &mut self,
+        fd: i32,
+        token: u64,
+        read: bool,
+        write: bool,
+    ) -> io::Result<()> {
+        let mask = if read { EPOLLIN } else { 0 } | if write { EPOLLOUT } else { 0 };
+        let in_set = self.registered.contains(&token);
+        match (in_set, mask != 0) {
+            (false, true) => {
+                self.ctl(EPOLL_CTL_ADD, fd, token, mask)?;
+                self.registered.insert(token);
+            }
+            (true, true) => self.ctl(EPOLL_CTL_MOD, fd, token, mask)?,
+            (true, false) => {
+                // No interest: out of the set entirely (see module docs).
+                self.ctl(EPOLL_CTL_DEL, fd, token, 0)?;
+                self.registered.remove(&token);
+            }
+            (false, false) => {}
+        }
+        Ok(())
+    }
+
+    pub(crate) fn deregister(&mut self, fd: i32, token: u64) {
+        if self.registered.remove(&token) {
+            // The fd may already be closed/implicitly removed; best-effort.
+            let _ = self.ctl(EPOLL_CTL_DEL, fd, token, 0);
+        }
+    }
+
+    pub(crate) fn wait(
+        &mut self,
+        events: &mut Vec<WaitEvent>,
+        timeout: Option<Duration>,
+    ) -> io::Result<()> {
+        let timeout_ms = match timeout {
+            None => -1,
+            Some(t) => {
+                let ms = t.as_millis().min(i32::MAX as u128) as i32;
+                // Round sub-millisecond timeouts UP so Some(non-zero)
+                // never degenerates into a busy 0ms poll.
+                if ms == 0 && !t.is_zero() {
+                    1
+                } else {
+                    ms
+                }
+            }
+        };
+        let mut buf = [EpollEvent { events: 0, data: 0 }; 64];
+        let n = unsafe { epoll_wait(self.epfd, buf.as_mut_ptr(), buf.len() as i32, timeout_ms) };
+        if n < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                return Ok(()); // empty event set; the loop just re-waits
+            }
+            return Err(err);
+        }
+        for ev in &buf[..n as usize] {
+            let token = ev.data;
+            let mask = ev.events;
+            if token == TOKEN_NOTIFY {
+                self.notify.drain();
+                continue; // internal; the reactor drains done_rx anyway
+            }
+            events.push(WaitEvent {
+                token,
+                // HUP/ERR surface as both-ready so whichever pump runs
+                // observes the failure and reaps the connection.
+                readable: mask & (EPOLLIN | EPOLLHUP | EPOLLERR) != 0,
+                writable: mask & (EPOLLOUT | EPOLLHUP | EPOLLERR) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+impl Drop for EpollWaiter {
+    fn drop(&mut self) {
+        let _ = unsafe { close(self.epfd) };
+    }
+}

@@ -1,0 +1,246 @@
+//! kqueue backend for the reactor's [`Waiter`](super::waiter::Waiter) —
+//! macOS, FreeBSD, OpenBSD, DragonFly.  (NetBSD's `struct kevent` layout
+//! differs; it takes the sweep fallback.)
+//!
+//! Same contract as the epoll backend: level-triggered readiness (kqueue
+//! is level-triggered unless `EV_CLEAR` is set, which we never set),
+//! interest expressed as per-filter ADD/DELETE deltas, worker→loop
+//! notifications over a nonblocking self-pipe registered like any other
+//! fd.  Tokens are kept in a userspace fd→token map instead of `udata`
+//! so the shim never depends on pointer-width casts.
+
+use std::collections::HashMap;
+use std::io;
+use std::ptr;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::waiter::WaitEvent;
+
+const EVFILT_READ: i16 = -1;
+const EVFILT_WRITE: i16 = -2;
+const EV_ADD: u16 = 0x0001;
+const EV_DELETE: u16 = 0x0002;
+const EV_EOF: u16 = 0x8000;
+const EV_ERROR: u16 = 0x4000;
+
+const F_SETFL: i32 = 4;
+const O_NONBLOCK: i32 = 0x0004;
+
+/// Mirrors `struct kevent` on the gated platforms (64-bit layouts).
+#[repr(C)]
+struct KEvent {
+    ident: usize,
+    filter: i16,
+    flags: u16,
+    fflags: u32,
+    data: isize,
+    udata: *mut std::ffi::c_void,
+}
+
+/// Mirrors `struct timespec` on 64-bit macOS/BSD.
+#[repr(C)]
+struct Timespec {
+    tv_sec: i64,
+    tv_nsec: i64,
+}
+
+extern "C" {
+    fn kqueue() -> i32;
+    fn kevent(
+        kq: i32,
+        changelist: *const KEvent,
+        nchanges: i32,
+        eventlist: *mut KEvent,
+        nevents: i32,
+        timeout: *const Timespec,
+    ) -> i32;
+    fn pipe(fds: *mut i32) -> i32;
+    fn fcntl(fd: i32, cmd: i32, arg: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    fn close(fd: i32) -> i32;
+}
+
+/// A nonblocking self-pipe: workers `signal` the write end, the poll loop
+/// drains the read end inside `wait`.  A full pipe (`EAGAIN`) means a
+/// wakeup is already pending — signals coalesce.
+pub(crate) struct PipePair {
+    read_fd: i32,
+    write_fd: i32,
+}
+
+impl PipePair {
+    fn new() -> io::Result<PipePair> {
+        let mut fds = [0i32; 2];
+        if unsafe { pipe(fds.as_mut_ptr()) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let pair = PipePair { read_fd: fds[0], write_fd: fds[1] };
+        for fd in fds {
+            if unsafe { fcntl(fd, F_SETFL, O_NONBLOCK) } < 0 {
+                return Err(io::Error::last_os_error()); // Drop closes both
+            }
+        }
+        Ok(pair)
+    }
+
+    pub(crate) fn signal(&self) {
+        let one = [1u8];
+        let _ = unsafe { write(self.write_fd, one.as_ptr(), 1) };
+    }
+
+    fn drain(&self) {
+        let mut buf = [0u8; 64];
+        while unsafe { read(self.read_fd, buf.as_mut_ptr(), buf.len()) } > 0 {}
+    }
+}
+
+impl Drop for PipePair {
+    fn drop(&mut self) {
+        let _ = unsafe { close(self.read_fd) };
+        let _ = unsafe { close(self.write_fd) };
+    }
+}
+
+pub(crate) struct KqueueWaiter {
+    kq: i32,
+    notify: Arc<PipePair>,
+    /// fd → (token, read-interest, write-interest); per-filter deltas are
+    /// derived from the previous interest on each change.
+    registered: HashMap<i32, (u64, bool, bool)>,
+}
+
+impl KqueueWaiter {
+    pub(crate) fn new() -> io::Result<KqueueWaiter> {
+        let kq = unsafe { kqueue() };
+        if kq < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let notify = match PipePair::new() {
+            Ok(p) => Arc::new(p),
+            Err(e) => {
+                let _ = unsafe { close(kq) };
+                return Err(e);
+            }
+        };
+        let mut w = KqueueWaiter { kq, notify, registered: HashMap::new() };
+        let read_fd = w.notify.read_fd;
+        w.apply(&[Self::change(read_fd, EVFILT_READ, EV_ADD)])?;
+        Ok(w)
+    }
+
+    pub(crate) fn notifier(&self) -> Arc<PipePair> {
+        self.notify.clone()
+    }
+
+    fn change(fd: i32, filter: i16, flags: u16) -> KEvent {
+        KEvent {
+            ident: fd as usize,
+            filter,
+            flags,
+            fflags: 0,
+            data: 0,
+            udata: ptr::null_mut(),
+        }
+    }
+
+    fn apply(&self, changes: &[KEvent]) -> io::Result<()> {
+        if changes.is_empty() {
+            return Ok(());
+        }
+        let rc = unsafe {
+            kevent(self.kq, changes.as_ptr(), changes.len() as i32, ptr::null_mut(), 0, ptr::null())
+        };
+        if rc < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(())
+        }
+    }
+
+    pub(crate) fn set_interest(
+        &mut self,
+        fd: i32,
+        token: u64,
+        read: bool,
+        write: bool,
+    ) -> io::Result<()> {
+        let (had_read, had_write) =
+            self.registered.get(&fd).map_or((false, false), |&(_, r, w)| (r, w));
+        let mut changes = Vec::with_capacity(2);
+        if read != had_read {
+            changes.push(Self::change(fd, EVFILT_READ, if read { EV_ADD } else { EV_DELETE }));
+        }
+        if write != had_write {
+            changes.push(Self::change(fd, EVFILT_WRITE, if write { EV_ADD } else { EV_DELETE }));
+        }
+        self.apply(&changes)?;
+        if read || write {
+            self.registered.insert(fd, (token, read, write));
+        } else {
+            self.registered.remove(&fd);
+        }
+        Ok(())
+    }
+
+    pub(crate) fn deregister(&mut self, fd: i32, _token: u64) {
+        if let Some((_, read, write)) = self.registered.remove(&fd) {
+            let mut changes = Vec::with_capacity(2);
+            if read {
+                changes.push(Self::change(fd, EVFILT_READ, EV_DELETE));
+            }
+            if write {
+                changes.push(Self::change(fd, EVFILT_WRITE, EV_DELETE));
+            }
+            // The fd may already be closed/implicitly removed; best-effort.
+            let _ = self.apply(&changes);
+        }
+    }
+
+    pub(crate) fn wait(
+        &mut self,
+        events: &mut Vec<WaitEvent>,
+        timeout: Option<Duration>,
+    ) -> io::Result<()> {
+        let ts = timeout.map(|t| Timespec {
+            tv_sec: t.as_secs().min(i64::MAX as u64) as i64,
+            tv_nsec: i64::from(t.subsec_nanos()),
+        });
+        let ts_ptr = ts.as_ref().map_or(ptr::null(), |t| t as *const Timespec);
+        let mut buf: [KEvent; 64] = std::array::from_fn(|_| Self::change(0, 0, 0));
+        let n = unsafe {
+            kevent(self.kq, ptr::null(), 0, buf.as_mut_ptr(), buf.len() as i32, ts_ptr)
+        };
+        if n < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(err);
+        }
+        for ev in &buf[..n as usize] {
+            let fd = ev.ident as i32;
+            if fd == self.notify.read_fd {
+                self.notify.drain();
+                continue;
+            }
+            let Some(&(token, _, _)) = self.registered.get(&fd) else {
+                continue; // raced with a deregister
+            };
+            let failed = ev.flags & (EV_EOF | EV_ERROR) != 0;
+            events.push(WaitEvent {
+                token,
+                readable: ev.filter == EVFILT_READ || failed,
+                writable: ev.filter == EVFILT_WRITE || failed,
+            });
+        }
+        Ok(())
+    }
+}
+
+impl Drop for KqueueWaiter {
+    fn drop(&mut self) {
+        let _ = unsafe { close(self.kq) };
+    }
+}

@@ -294,6 +294,18 @@ impl DispatchPlanner {
         self.participation()
     }
 
+    /// Blend the registry's heartbeat-derived live fraction (`live` of
+    /// `registered` parties seen within the liveness TTL) into the SAME
+    /// EWMA sealed-round turnout feeds: heartbeat silence moves the priced
+    /// participation before a single deadline is burned waiting on the
+    /// dead.  Returns the updated factor.
+    pub fn observe_liveness(&mut self, live: usize, registered: usize) -> f64 {
+        if registered > 0 {
+            self.part.observe((live as f64 / registered as f64).clamp(0.0, 1.0));
+        }
+        self.participation()
+    }
+
     pub fn policy(&self) -> DispatchPolicy {
         self.cfg.policy
     }
@@ -1158,6 +1170,25 @@ mod tests {
             p.observe_participation(0, 30_000);
         }
         assert!(p.participation() >= 0.05);
+    }
+
+    #[test]
+    fn heartbeat_liveness_feeds_the_same_turnout_ewma() {
+        // The registry's live fraction and sealed-round turnout share one
+        // EWMA: a fleet going half-silent moves the priced participation
+        // before any deadline is burned on the dead half.
+        let mut p = planner(DispatchPolicy::MinLatency);
+        assert_eq!(p.participation(), 1.0);
+        for _ in 0..8 {
+            p.observe_liveness(15_000, 30_000);
+        }
+        assert!((p.participation() - 0.5).abs() < 1e-9);
+        // both feeds blend: a full-turnout sealed round pulls it back up
+        let after = p.observe_participation(30_000, 30_000);
+        assert!(after > 0.5 && after < 1.0);
+        // degenerate registries must not poison the factor
+        p.observe_liveness(0, 0);
+        assert!((p.participation() - after).abs() < 1e-9);
     }
 
     fn planner_enc(policy: DispatchPolicy, edges: usize, enc: Encoding) -> DispatchPlanner {

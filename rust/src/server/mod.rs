@@ -29,7 +29,9 @@ use crate::engine::StreamingFold;
 use crate::fusion::{l2_norm, DiscountedFusion, FusionAlgorithm, StalenessDiscount, TrustWeighted};
 use crate::memsim::MemoryBudget;
 use crate::net::server::Handler;
-use crate::net::{protocol, Message, NetServer, ProtoError, ReactorConfig, Reply, ServerHandle};
+use crate::net::{
+    protocol, Message, NetServer, ProtoError, ReactorConfig, Reply, ServerHandle, TimerDriver,
+};
 use crate::tensorstore::{
     decode_stats, DecodeStats, EncodedUpdateView, ModelUpdateView, PartialAggregateView,
 };
@@ -53,6 +55,11 @@ pub struct FlServer {
     /// enables `async_mode`: uploads bypass the quorum round machinery
     /// entirely and land in this bounded staleness buffer instead.
     async_round: Option<Arc<AsyncRound>>,
+    /// Wakes the round loops (quorum wait, async fill, relay collect) the
+    /// moment an ingest lands, replacing their fixed-cadence sleep polls;
+    /// the loops only time out on real deadlines (round deadline, evict
+    /// cadence).
+    timer: TimerDriver,
 }
 
 impl FlServer {
@@ -89,6 +96,7 @@ impl FlServer {
             current_round: AtomicU32::new(0),
             rounds: Mutex::new(BTreeMap::new()),
             async_round,
+            timer: TimerDriver::new(),
         });
         s.open_round(0);
         s
@@ -191,7 +199,11 @@ impl FlServer {
         } else {
             cfg.reactor_workers
         };
-        NetServer::serve_with(addr, Arc::new(FlHandler(self.clone())), ReactorConfig { workers })
+        NetServer::serve_with(
+            addr,
+            Arc::new(FlHandler(self.clone())),
+            ReactorConfig { workers, waiter: cfg.waiter },
+        )
     }
 
     /// Serve with the legacy thread-per-connection backend.  Kept so the
@@ -318,7 +330,10 @@ impl FlServer {
             // receipt (straight out of the wire buffer on the frame path)
             // and free it.
             Some(st) if st.class != WorkloadClass::Large => match ingest(&st) {
-                Ok(_) => Message::Ack { redirect_to_dfs: redirect },
+                Ok(_) => {
+                    self.timer.notify();
+                    Message::Ack { redirect_to_dfs: redirect }
+                }
                 Err(RoundError::Duplicate { party, nonce }) => {
                     Message::Duplicate { party, nonce }
                 }
@@ -350,7 +365,10 @@ impl FlServer {
         }
         match self.round_state(round) {
             Some(st) => match ingest(&st) {
-                Ok(_) => Message::Ack { redirect_to_dfs: false },
+                Ok(_) => {
+                    self.timer.notify();
+                    Message::Ack { redirect_to_dfs: false }
+                }
                 Err(RoundError::Duplicate { party, nonce }) => {
                     Message::Duplicate { party, nonce }
                 }
@@ -382,7 +400,10 @@ impl FlServer {
         data: &[f32],
     ) -> Message {
         match ar.offer(party, nonce, trained_version, count, data) {
-            Ok(a) => Message::AsyncAck { version: a.version, delta: a.delta },
+            Ok(a) => {
+                self.timer.notify();
+                Message::AsyncAck { version: a.version, delta: a.delta }
+            }
             Err(AsyncError::Duplicate { party, nonce }) => Message::Duplicate { party, nonce },
             Err(AsyncError::Stale { version }) => Message::Late { round: version },
             Err(e) => Message::Error(format!("async ingest: {e}")),
@@ -617,12 +638,28 @@ impl FlServer {
     }
 
     /// The sanitised liveness TTL from the config; `None` = eviction off.
+    /// Defensively floored to the evict cadence: a TTL shorter than the
+    /// sweep interval would evict parties that heartbeat perfectly on time
+    /// (the config loader already rejects such values, but the field is
+    /// `pub` and tests set it directly).
     fn liveness_ttl(&self) -> Option<Duration> {
         let s = self.service.config().liveness_ttl_s;
         if s.is_finite() && s > 0.0 {
-            Some(Duration::from_secs_f64(s.min(31_536_000.0)))
+            Some(Duration::from_secs_f64(s.min(31_536_000.0)).max(self.evict_cadence()))
         } else {
             None
+        }
+    }
+
+    /// The sanitised stale-party sweep cadence (`evict_cadence_s`): how
+    /// often the quorum wait re-checks heartbeats.  Floored at 1ms so a
+    /// zeroed knob cannot turn the wait into a spin.
+    fn evict_cadence(&self) -> Duration {
+        let s = self.service.config().evict_cadence_s;
+        if s.is_finite() && s > 0.0 {
+            Duration::from_secs_f64(s.clamp(0.001, 31_536_000.0))
+        } else {
+            Duration::from_millis(25)
         }
     }
 
@@ -700,22 +737,46 @@ impl FlServer {
         // during the wait, and the round seals early once everyone still
         // alive has delivered and quorum is met — a crashed fleet no
         // longer pins every round to the full deadline.
+        //
+        // The wait itself is event-driven: every accepted ingest pokes
+        // `self.timer`, so the loop wakes the moment progress happens and
+        // otherwise sleeps clear to the next real deadline (round deadline,
+        // or the `evict_cadence_s` heartbeat sweep) — no fixed-cadence
+        // polling.  The generation is captured BEFORE the predicates so an
+        // upload landing between check and wait still wakes us.
         let deadline = Instant::now() + timeout;
         let ttl = self.liveness_ttl();
+        let cadence = self.evict_cadence();
         let mut next_evict = Instant::now();
-        while st.collected() < expected && Instant::now() < deadline {
+        loop {
+            let gen = self.timer.generation();
+            if st.collected() >= expected {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
             if let Some(ttl) = ttl {
-                let now = Instant::now();
                 if now >= next_evict {
                     self.registry.evict_stale(ttl, now);
-                    next_evict = now + Duration::from_millis(25);
+                    next_evict = now + cadence;
                 }
                 let live = self.registry.active_count();
                 if st.collected() >= quorum && st.collected() >= live {
                     break;
                 }
             }
-            std::thread::sleep(Duration::from_millis(2));
+            let until = if ttl.is_some() { deadline.min(next_evict) } else { deadline };
+            self.timer.wait_until(until, gen);
+        }
+        // Feed the heartbeat-derived live fraction into the planner's
+        // turnout EWMA alongside the sealed delivered/expected sample: a
+        // half-dead fleet lowers the priced participation from its silence
+        // alone, not only from the updates it failed to deliver.
+        if let Some(ttl) = ttl {
+            let (live, registered) = self.registry.live_fraction(ttl, Instant::now());
+            self.service.observe_liveness(live, registered);
         }
         // Seal FIRST, classify after: a straggler folding between a
         // pre-seal snapshot and the seal would otherwise yield an
@@ -897,9 +958,16 @@ impl FlServer {
             .as_ref()
             .expect("run_async_round requires async_mode")
             .clone();
+        // Event-driven fill wait: every accepted async offer pokes
+        // `self.timer`, so an early-full buffer publishes immediately and
+        // an idle one sleeps clear to the cadence tick (no 2ms polling).
         let deadline = Instant::now() + cadence;
-        while !ar.is_full() && Instant::now() < deadline {
-            std::thread::sleep(Duration::from_millis(2));
+        loop {
+            let gen = self.timer.generation();
+            if ar.is_full() || Instant::now() >= deadline {
+                break;
+            }
+            self.timer.wait_until(deadline, gen);
         }
         let entries = ar.drain();
         if entries.is_empty() {
@@ -1276,6 +1344,51 @@ mod tests {
         assert_eq!(run.outcome, RoundOutcome::Quorum);
         assert_eq!(run.folded, 5);
         assert!(run.result.is_some());
+    }
+
+    #[test]
+    fn silent_half_fleet_lowers_the_priced_participation() {
+        // Heartbeat cadence feeds the planner's turnout EWMA: when half a
+        // 10-party fleet goes silent past the liveness TTL, the sealed
+        // round's live fraction (and delivered count) must drag the
+        // participation factor the NEXT plan prices against well below
+        // the all-alive prior.
+        let td = TempDir::new();
+        let nn = NameNode::create(td.path(), 2, 1, 1 << 20).unwrap();
+        let mut cfg = ServiceConfig::default();
+        cfg.node.memory_bytes = 1 << 30;
+        cfg.node.cores = 2;
+        cfg.liveness_ttl_s = 0.1;
+        let svc = AdaptiveService::new(
+            cfg,
+            DfsClient::new(nn),
+            None,
+            ExecutorConfig { executors: 1, cores_per_executor: 2, ..Default::default() },
+        );
+        let server = FlServer::new(svc, Arc::new(FedAvg), 400);
+        for p in 0..10u64 {
+            server.registry.join(p, 0, 1);
+        }
+        assert_eq!(server.service.participation(), 1.0, "all-alive prior before any round");
+        // age every join stamp past the TTL, then only half the fleet
+        // resumes heartbeating
+        std::thread::sleep(Duration::from_millis(150));
+        for p in 0..5u64 {
+            server.handle(Message::Heartbeat { party: p });
+        }
+        let st = server.round_state(0).unwrap();
+        for p in 0..5u64 {
+            st.ingest(ModelUpdate::new(p, 1.0, 0, vec![1.0; 100])).unwrap();
+        }
+        let run = server.run_round_quorum(10, 3, Duration::from_secs(10)).unwrap();
+        assert_eq!(run.outcome, RoundOutcome::Quorum);
+        assert_eq!(run.folded, 5);
+        let part = server.service.participation();
+        assert!(
+            part <= 0.6,
+            "half the fleet is dead: the priced participation must follow, got {part}"
+        );
+        assert!(part >= 0.05, "the clamp floor still applies");
     }
 
     #[test]

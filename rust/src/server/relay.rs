@@ -119,9 +119,16 @@ impl RelayServer {
             return Err(ServiceError::Round(RoundError::NotStreaming));
         }
 
+        // Event-driven collect: every cohort ingest pokes the server's
+        // timer driver, so the relay wakes on arrival and sleeps clear to
+        // the deadline when the cohort is quiet (no 2ms polling).
         let deadline_t = Instant::now() + deadline;
-        while st.collected() < expected && Instant::now() < deadline_t {
-            std::thread::sleep(Duration::from_millis(2));
+        loop {
+            let gen = self.server.timer.generation();
+            if st.collected() >= expected || Instant::now() >= deadline_t {
+                break;
+            }
+            self.server.timer.wait_until(deadline_t, gen);
         }
         // Settle beat: let a fold that slipped in just before the seal
         // mark its admission slot, so the forwarded party set matches the

@@ -55,7 +55,7 @@ use crate::coordinator::{AdaptiveService, RoundOutcome};
 use crate::dfs::{DfsClient, NameNode};
 use crate::fusion::FedAvg;
 use crate::mapreduce::ExecutorConfig;
-use crate::net::{Message, NetClient};
+use crate::net::{Message, NetClient, WaiterKind};
 use crate::server::FlServer;
 use crate::util::rng::Rng;
 
@@ -298,6 +298,20 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> ScenarioReport {
 /// [`ScenarioReport::digest`] on both — the parity pin
 /// `benches/fig_connection_scaling` holds the reactor to.
 pub fn run_scenario_on(cfg: &ScenarioConfig, threaded: bool) -> ScenarioReport {
+    run_scenario_inner(cfg, threaded, WaiterKind::Auto)
+}
+
+/// [`run_scenario`] through the reactor pinned to a specific
+/// [`WaiterKind`]: the cross-backend digest-parity pin
+/// (`tests/sim_scenarios.rs`) replays one seed over every backend
+/// [`WaiterKind::compiled_in`] reports and asserts bit-identical digests —
+/// readiness delivery (epoll, kqueue or the portable sweep) must never
+/// leak into round outcomes.
+pub fn run_scenario_on_waiter(cfg: &ScenarioConfig, waiter: WaiterKind) -> ScenarioReport {
+    run_scenario_inner(cfg, false, waiter)
+}
+
+fn run_scenario_inner(cfg: &ScenarioConfig, threaded: bool, waiter: WaiterKind) -> ScenarioReport {
     let scheds = schedules(cfg);
     let seq = SCENARIO_SEQ.fetch_add(1, Ordering::Relaxed);
     let root = std::env::temp_dir().join(format!(
@@ -312,6 +326,7 @@ pub fn run_scenario_on(cfg: &ScenarioConfig, threaded: bool) -> ScenarioReport {
     scfg.node.memory_bytes = cfg.node_memory;
     scfg.node.cores = cfg.cores.max(1);
     scfg.monitor_timeout_s = cfg.deadline.as_secs_f64();
+    scfg.waiter = waiter;
     let svc = AdaptiveService::new(
         scfg,
         DfsClient::new(nn),

@@ -6,12 +6,14 @@ use std::time::Duration;
 
 use elastiagg::coordinator::RoundOutcome;
 use elastiagg::fusion::exact_trimmed_mean;
+use elastiagg::net::WaiterKind;
 use elastiagg::sim::byzantine::{fleet_updates, honest_fedavg_reference};
 use elastiagg::sim::{
     byz_schedules, run_async_scenario, run_byzantine_scenario, run_byzantine_tier_scenario,
-    run_fleet, run_scenario, run_tier_scenario, schedule_digest, schedules,
-    straggler_schedule_digest, straggler_schedules, tier_schedules, AsyncReplyKind, Attack,
-    ByzConfig, ByzTierConfig, FleetConfig, ReplyKind, ScenarioConfig, StragglerConfig, TierConfig,
+    run_fleet, run_scenario, run_scenario_on_waiter, run_tier_scenario, schedule_digest,
+    schedules, straggler_schedule_digest, straggler_schedules, tier_schedules, AsyncReplyKind,
+    Attack, ByzConfig, ByzTierConfig, FleetConfig, ReplyKind, ScenarioConfig, StragglerConfig,
+    TierConfig,
 };
 use elastiagg::tensorstore::ModelUpdate;
 use elastiagg::util::prop::all_close;
@@ -108,6 +110,47 @@ fn same_seed_same_digest_across_shapes() {
         let a = run_scenario(&cfg);
         let b = run_scenario(&cfg);
         assert_eq!(a.digest(), b.digest(), "seed {}: {a:?} vs {b:?}", cfg.seed);
+    }
+}
+
+/// The waiter-parity acceptance pin: one 64-client seeded scenario (with
+/// dropout and duplicates, so the deadline gates the seal far from any
+/// scheduled upload) replayed over EVERY compiled-in reactor waiter
+/// backend — epoll/kqueue where the platform has one, always the portable
+/// sweep — must produce bit-identical outcome digests.  Readiness
+/// delivery is an implementation detail of the socket layer; it must
+/// never leak into round outcomes.
+#[test]
+fn scenario_digest_is_bit_identical_across_waiter_backends() {
+    let cfg = seed_with(
+        ScenarioConfig {
+            seed: 17,
+            clients: 64,
+            dropout: 0.2,
+            duplicate: 0.25,
+            latency_ms: (10, 150),
+            deadline: Duration::from_millis(1200),
+            ..ScenarioConfig::default()
+        },
+        |c| {
+            let s = schedules(c);
+            let survivors = s.iter().filter(|c| !c.drops_out).count();
+            let quorum = ((c.clients as f64) * c.quorum_frac).ceil() as usize;
+            survivors >= quorum && survivors < c.clients
+        },
+    );
+    let backends = WaiterKind::compiled_in();
+    assert!(backends.contains(&WaiterKind::Sweep), "the sweep is always available");
+    let reference = run_scenario_on_waiter(&cfg, backends[0]);
+    for &kind in &backends[1..] {
+        let report = run_scenario_on_waiter(&cfg, kind);
+        assert_eq!(
+            reference.digest(),
+            report.digest(),
+            "{:?} vs {:?} diverged: {reference:?} vs {report:?}",
+            backends[0],
+            kind
+        );
     }
 }
 

@@ -26,7 +26,7 @@ import sys
 # neither list (geometry like "parties", config echoes like "trim_fraction")
 # is informational and never gates.
 LOWER_IS_BETTER = (
-    "_s", "_ms", "_usd", "bytes", "_rms", "err", "latency", "drift",
+    "_s", "_ms", "_usd", "bytes", "_rms", "err", "latency", "drift", "cpu",
 )
 HIGHER_IS_BETTER = (
     "throughput", "ops_per", "gbps", "mbps", "speedup", "per_sec",
@@ -53,7 +53,7 @@ def noise_floor(key):
     else gets a small generic floor so bit-stable metrics still gate.
     """
     k = key.lower()
-    if k.endswith("_s") or "latency" in k:
+    if k.endswith("_s") or "latency" in k or "cpu" in k:
         return 0.05
     if k.endswith("_ms"):
         return 50.0
